@@ -1,0 +1,10 @@
+"""Pytest shim: make `pytest python/tests/` work from the repository root.
+
+The python package root is `python/` (tests import `compile.*`), so put it
+on sys.path regardless of the invocation directory.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

@@ -1,0 +1,128 @@
+"""AOT bridge: lower every Layer-2 graph to HLO *text* + a manifest.
+
+Run once at build time (``make artifacts``); Python is never on the Rust
+request path.  Interchange format is HLO **text**, not a serialized
+``HloModuleProto``: jax ≥ 0.5 emits protos with 64-bit instruction ids that
+the image's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``), while
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Artifacts written to ``--out-dir`` (default ``artifacts/``):
+
+  combine_<op>_<n>.hlo.txt         (a: f32[n], b: f32[n]) -> (f32[n],)
+  combine_scaled_<n>.hlo.txt       (r: f32[n], t: f32[n], s: f32[]) -> (f32[n],)
+  mlp_loss_grad.hlo.txt            (params: f32[P], x: f32[B,D], y: f32[B,1])
+                                       -> (f32[], f32[P])
+  manifest.json                    index of the above, parsed by
+                                   rust/src/runtime/manifest.rs
+
+Usage: ``python -m compile.aot [--out-dir DIR] [--quick]``.
+``--quick`` restricts to the smallest bucket (used by pytest so the test
+suite doesn't spend minutes lowering the big buckets).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+
+from . import model
+from .kernels.ref import OPS
+
+#: Bucket lengths (f32 elements) for the combine executables.  The Rust
+#: runtime rounds a requested combine length up to the nearest bucket and
+#: pads; buckets are spaced 8× so padding waste is bounded and the compile
+#: count stays small.  All are multiples of the kernel ALIGN (1024).
+BUCKETS = (1024, 8192, 65536, 262144)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR → XlaComputation → HLO text (the 0.5.1-safe path)."""
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _write(out_dir: str, name: str, text: str) -> dict:
+    path = os.path.join(out_dir, name)
+    with open(path, "w") as f:
+        f.write(text)
+    digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+    return {"file": name, "sha256_16": digest, "bytes": len(text)}
+
+
+def build_manifest(out_dir: str, quick: bool = False) -> dict:
+    """Lower everything and return the manifest dict."""
+    os.makedirs(out_dir, exist_ok=True)
+    buckets = BUCKETS[:1] if quick else BUCKETS
+    entries = []
+
+    for op in OPS:
+        for n in buckets:
+            lowered = model.lower_combine(op, n)
+            meta = _write(out_dir, f"combine_{op}_{n}.hlo.txt", to_hlo_text(lowered))
+            meta.update(kind="combine", op=op, n=n, inputs=[[n], [n]], outputs=[[n]])
+            entries.append(meta)
+            print(f"  lowered combine_{op}_{n}")
+
+    for n in buckets:
+        lowered = model.lower_combine_scaled(n)
+        meta = _write(out_dir, f"combine_scaled_{n}.hlo.txt", to_hlo_text(lowered))
+        meta.update(kind="combine_scaled", op="fma", n=n, inputs=[[n], [n], []], outputs=[[n]])
+        entries.append(meta)
+        print(f"  lowered combine_scaled_{n}")
+
+    p = model.mlp_param_count()
+    lowered = model.lower_mlp()
+    meta = _write(out_dir, "mlp_loss_grad.hlo.txt", to_hlo_text(lowered))
+    meta.update(
+        kind="mlp_loss_grad",
+        op="none",
+        n=p,
+        inputs=[[p], [model.MLP_BATCH, model.MLP_IN], [model.MLP_BATCH, model.MLP_OUT]],
+        outputs=[[], [p]],
+    )
+    entries.append(meta)
+    print(f"  lowered mlp_loss_grad (P={p})")
+
+    return {
+        "format": 1,
+        "jax": jax.__version__,
+        "buckets": list(buckets),
+        "ops": list(OPS),
+        "mlp": {
+            "params": p,
+            "d_in": model.MLP_IN,
+            "hidden": model.MLP_HIDDEN,
+            "d_out": model.MLP_OUT,
+            "batch": model.MLP_BATCH,
+        },
+        "artifacts": entries,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", help="artifact output directory")
+    ap.add_argument("--quick", action="store_true", help="smallest bucket only (tests)")
+    # Back-compat with the original scaffold Makefile which passed --out FILE.
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+
+    manifest = build_manifest(out_dir, quick=args.quick)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(manifest['artifacts'])} artifacts + manifest.json to {out_dir}/")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""Layer-1 Pallas kernels for the paper's compute hot-spot (block combine).
+
+Modules:
+  combine -- tiled elementwise binary combine (the γ term of Corollary 1)
+  ref     -- pure-jnp oracles used by pytest/hypothesis
+"""
+
+from .combine import combine, combine_scaled, choose_tile, DEFAULT_TILE  # noqa: F401
+from .ref import OPS, combine_ref, reduce_blocks_ref  # noqa: F401

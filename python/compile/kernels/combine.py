@@ -1,0 +1,146 @@
+"""Layer-1 Pallas kernels: tiled elementwise block combine.
+
+The compute hot-spot of the paper's Algorithm 1/2 is the γ term of
+Corollary 1 — per communication round, each processor applies the
+commutative operator ⊕ to a *consecutive* run of received partial-result
+blocks: ``R[0 … s'−s−1] ← R[0 … s'−s−1] ⊕ T[0 … s'−s−1]``.  Because the
+paper keeps all block sequences contiguous (§3), this is a single 1-D
+elementwise combine over ``n`` elements, which we express as a Pallas
+kernel tiled for VMEM.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): there is no matmul here,
+so the MXU is irrelevant — the kernel is VPU/bandwidth bound.  The
+``BlockSpec`` grid streams ``TILE``-element chunks HBM→VMEM; with three
+live f32 buffers per tile (a, b, out) the VMEM footprint is
+``3 · TILE · 4 B = 96 KiB`` for the default ``TILE = 8192``, comfortably
+inside a TensorCore's ~16 MiB VMEM and aligned to the 8×128 lane layout
+(8192 = 64 · 128).
+
+``interpret=True`` always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; the interpret path lowers to plain HLO so the same artifact
+runs under the Rust PJRT client.  Numerics are validated against
+:mod:`compile.kernels.ref` by ``python/tests/test_kernel.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import OPS
+
+#: Default tile length (elements) for the 1-D combine grid.  8192 f32 =
+#: 32 KiB per operand; 3 operands → 96 KiB VMEM per grid step.
+DEFAULT_TILE = 8192
+
+#: Sub-lane alignment: TPU vector registers are (8, 128) f32, so tiles and
+#: total lengths are kept multiples of 1024 to stay layout-friendly even
+#: though interpret mode would accept anything.
+ALIGN = 1024
+
+
+def _binop(op: str):
+    """The elementwise jnp binary op for operator name ``op``."""
+    if op == "sum":
+        return jnp.add
+    if op == "prod":
+        return jnp.multiply
+    if op == "min":
+        return jnp.minimum
+    if op == "max":
+        return jnp.maximum
+    raise ValueError(f"unknown operator {op!r}; expected one of {OPS}")
+
+
+def _combine_body(a_ref, b_ref, o_ref, *, op: str):
+    """Pallas kernel body: one VMEM tile of ``o = a ⊕ b``."""
+    o_ref[...] = _binop(op)(a_ref[...], b_ref[...])
+
+
+def choose_tile(n: int, tile: int = DEFAULT_TILE) -> int:
+    """Largest tile ≤ ``tile`` that divides ``n``.
+
+    Bucket lengths produced by :mod:`compile.aot` are multiples of
+    ``DEFAULT_TILE`` so this normally returns ``tile`` unchanged; for odd
+    test shapes it falls back to the largest divisor, keeping the grid
+    exact (no masking needed in the kernel body).
+    """
+    if n <= 0:
+        raise ValueError(f"combine length must be positive, got {n}")
+    t = min(tile, n)
+    while n % t != 0:
+        t -= 1
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("op", "tile"))
+def combine(a, b, *, op: str = "sum", tile: int = DEFAULT_TILE):
+    """Elementwise ``a ⊕ b`` over 1-D arrays via the tiled Pallas kernel.
+
+    Args:
+      a, b: rank-1 arrays of equal shape and dtype.
+      op: one of :data:`compile.kernels.ref.OPS`.
+      tile: requested VMEM tile length; adjusted by :func:`choose_tile`.
+
+    Returns:
+      Rank-1 array ``a ⊕ b`` of the same shape/dtype.
+    """
+    if a.ndim != 1 or a.shape != b.shape:
+        raise ValueError(f"combine expects equal 1-D shapes, got {a.shape} vs {b.shape}")
+    n = a.shape[0]
+    t = choose_tile(n, tile)
+    grid = (n // t,)
+    spec = pl.BlockSpec((t,), lambda i: (i,))
+    return pl.pallas_call(
+        functools.partial(_combine_body, op=op),
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((n,), a.dtype),
+        interpret=True,
+    )(a, b)
+
+
+def _fma_body(r_ref, t_ref, scale_ref, o_ref):
+    """Fused ``o = r + scale * t`` tile — the weighted-combine variant used
+    by the gradient-averaging path of the training driver (allreduce of
+    gradients followed by division by the worker count is fused into the
+    final combine instead of a separate scaling pass)."""
+    o_ref[...] = r_ref[...] + scale_ref[0] * t_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def combine_scaled(r, t, scale, *, tile: int = DEFAULT_TILE):
+    """``r + scale · t`` over 1-D arrays (scale is a scalar array).
+
+    Used by the E2E training example to fold the ``1/p`` gradient averaging
+    into the last combine of the allgather phase, saving one full pass over
+    the gradient vector per step.
+    """
+    if r.ndim != 1 or r.shape != t.shape:
+        raise ValueError(f"combine_scaled expects equal 1-D shapes, got {r.shape} vs {t.shape}")
+    n = r.shape[0]
+    tl = choose_tile(n, tile)
+    spec = pl.BlockSpec((tl,), lambda i: (i,))
+    scale_arr = jnp.asarray(scale, dtype=r.dtype).reshape((1,))
+    return pl.pallas_call(
+        _fma_body,
+        grid=(n // tl,),
+        in_specs=[spec, spec, pl.BlockSpec((1,), lambda i: (0,))],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((n,), r.dtype),
+        interpret=True,
+    )(r, t, scale_arr)
+
+
+def vmem_footprint_bytes(tile: int, dtype_bytes: int = 4, operands: int = 3) -> int:
+    """Estimated VMEM bytes live per grid step (a, b, out tiles).
+
+    Recorded in DESIGN.md §Perf; the perf pass asserts the default tile
+    stays under the 192 KiB budget chosen there (conservative slice of a
+    TensorCore's VMEM so several rounds can double-buffer).
+    """
+    return operands * tile * dtype_bytes

@@ -1,0 +1,57 @@
+"""Pure-jnp correctness oracles for the Layer-1 Pallas kernels.
+
+Everything the Pallas kernels in :mod:`compile.kernels.combine` compute must
+be reproducible by the plain jax.numpy expressions here; pytest/hypothesis
+(``python/tests/test_kernel.py``) enforces ``assert_allclose`` between the
+two across a swept space of shapes, dtypes and operators.
+
+The operators correspond to the commutative MPI reduction operators the
+paper's Algorithm 1/2 are stated for (the paper assumes a commutative ⊕,
+§2.1): MPI_SUM, MPI_PROD, MPI_MIN, MPI_MAX.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+#: Names of the supported commutative block-combine operators, in the order
+#: they are assigned operator ids in the AOT manifest.
+OPS = ("sum", "prod", "min", "max")
+
+
+def combine_ref(a, b, op: str):
+    """Elementwise ``a ⊕ b`` — reference semantics for one combine step.
+
+    This is the partial-result update of Algorithm 1's inner loop,
+    ``R[i] ← R[i] ⊕ T[i]``, flattened over a contiguous run of blocks (the
+    paper's §3 notes that all sequences of blocks are consecutive in memory,
+    so the per-round reduction is a single bulk elementwise operation).
+    """
+    if op == "sum":
+        return a + b
+    if op == "prod":
+        return a * b
+    if op == "min":
+        return jnp.minimum(a, b)
+    if op == "max":
+        return jnp.maximum(a, b)
+    raise ValueError(f"unknown operator {op!r}; expected one of {OPS}")
+
+
+def reduce_blocks_ref(stack, op: str):
+    """Reference reduction of a ``(k, n)`` stack of k blocks down to ``(n,)``.
+
+    Equals ``blocks[0] ⊕ blocks[1] ⊕ … ⊕ blocks[k-1]``; used to check that
+    arbitrary combine trees (any bracketing, any commutation) produced by the
+    schedules agree with a canonical fold, which is exactly the
+    commutativity/associativity contract the paper's algorithms rely on.
+    """
+    if op == "sum":
+        return jnp.sum(stack, axis=0)
+    if op == "prod":
+        return jnp.prod(stack, axis=0)
+    if op == "min":
+        return jnp.min(stack, axis=0)
+    if op == "max":
+        return jnp.max(stack, axis=0)
+    raise ValueError(f"unknown operator {op!r}; expected one of {OPS}")

@@ -1,0 +1,160 @@
+"""Layer-2 JAX compute graphs, AOT-lowered for the Rust coordinator.
+
+Two families of graphs are defined here, both lowered to HLO text by
+:mod:`compile.aot` and executed from Rust through PJRT
+(``rust/src/runtime/``):
+
+1. ``bulk_combine`` / ``bulk_combine_scaled`` — the per-round block combine
+   of the paper's Algorithm 1/2 (the γ term of Corollary 1), delegating to
+   the Layer-1 Pallas kernel in :mod:`compile.kernels.combine`.  One
+   executable is compiled per (operator, bucket-length) pair; the Rust
+   runtime rounds requests up to the nearest bucket (shape bucketing, the
+   standard serving-system answer to XLA's static shapes).
+
+2. ``mlp_loss_and_grad`` — forward + backward of a small MLP regressor over
+   a *flat* parameter vector.  This is the per-worker compute of the
+   end-to-end data-parallel training driver
+   (``examples/train_allreduce.rs``): each simulated worker evaluates
+   loss+grad on its shard via PJRT, then the gradient vectors are averaged
+   across workers with the paper's allreduce (Algorithm 2).  Keeping the
+   parameters flat means the Rust side never needs to know the pytree
+   structure — gradients are exactly the 1-D vectors the collective
+   partitions into p blocks.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import combine as pallas_combine
+from .kernels.combine import combine_scaled as pallas_combine_scaled
+
+# ---------------------------------------------------------------------------
+# Bulk combine graphs (wrap the L1 kernel so each lowers to one artifact).
+# ---------------------------------------------------------------------------
+
+
+def bulk_combine(a, b, *, op: str):
+    """``a ⊕ b`` over two equal 1-D buffers via the Pallas kernel."""
+    return (pallas_combine(a, b, op=op),)
+
+
+def bulk_combine_scaled(r, t, scale):
+    """``r + scale·t`` (fused gradient-averaging combine)."""
+    return (pallas_combine_scaled(r, t, scale),)
+
+
+# ---------------------------------------------------------------------------
+# MLP for the E2E training driver.
+# ---------------------------------------------------------------------------
+
+#: Architecture of the training-example model. Sizes are chosen so the flat
+#: parameter vector (~74.5k f32) partitions into interesting block counts
+#: for 2..16 simulated workers while staying fast under CPU interpret mode.
+MLP_IN = 32
+MLP_HIDDEN = 256
+MLP_OUT = 1
+MLP_BATCH = 64
+
+
+def mlp_param_count(d_in: int = MLP_IN, h: int = MLP_HIDDEN, d_out: int = MLP_OUT) -> int:
+    """Number of scalars in the flat parameter vector."""
+    return d_in * h + h + h * h + h + h * d_out + d_out
+
+
+def _unflatten(params, d_in: int, h: int, d_out: int):
+    """Slice the flat vector into (W1, b1, W2, b2, W3, b3)."""
+    o = 0
+
+    def take(n, shape):
+        nonlocal o
+        v = params[o : o + n].reshape(shape)
+        o += n
+        return v
+
+    w1 = take(d_in * h, (d_in, h))
+    b1 = take(h, (h,))
+    w2 = take(h * h, (h, h))
+    b2 = take(h, (h,))
+    w3 = take(h * d_out, (h, d_out))
+    b3 = take(d_out, (d_out,))
+    return w1, b1, w2, b2, w3, b3
+
+
+def mlp_forward(params, x, *, d_in: int = MLP_IN, h: int = MLP_HIDDEN, d_out: int = MLP_OUT):
+    """Two-hidden-layer tanh MLP over a flat parameter vector."""
+    w1, b1, w2, b2, w3, b3 = _unflatten(params, d_in, h, d_out)
+    z = jnp.tanh(x @ w1 + b1)
+    z = jnp.tanh(z @ w2 + b2)
+    return z @ w3 + b3
+
+
+def mlp_loss(params, x, y, **kw):
+    """Mean-squared-error regression loss."""
+    pred = mlp_forward(params, x, **kw)
+    return jnp.mean((pred - y) ** 2)
+
+
+def mlp_loss_and_grad(params, x, y):
+    """``(loss, grad)`` — the artifact the Rust training driver executes.
+
+    Returns a 2-tuple ``(f32[], f32[P])``; the gradient is flat and is fed
+    straight into the Algorithm 2 allreduce across workers.
+    """
+    loss, grad = jax.value_and_grad(mlp_loss)(params, x, y)
+    return loss, grad
+
+
+def mlp_init(seed: int = 0, *, d_in: int = MLP_IN, h: int = MLP_HIDDEN, d_out: int = MLP_OUT):
+    """Glorot-ish initial flat parameter vector.
+
+    Used by the python tests. The Rust training driver uses its own
+    equally-scaled splitmix64 init (rust/src/coordinator/train.rs) — the
+    two need not produce identical values, only identical *shapes*; every
+    worker replica shares whichever init its driver generates.
+    """
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    w1 = jax.random.normal(k1, (d_in, h)) * (1.0 / jnp.sqrt(d_in))
+    w2 = jax.random.normal(k2, (h, h)) * (1.0 / jnp.sqrt(h))
+    w3 = jax.random.normal(k3, (h, d_out)) * (1.0 / jnp.sqrt(h))
+    parts = [
+        w1.reshape(-1),
+        jnp.zeros((h,)),
+        w2.reshape(-1),
+        jnp.zeros((h,)),
+        w3.reshape(-1),
+        jnp.zeros((d_out,)),
+    ]
+    return jnp.concatenate(parts).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Lowering helpers (used by compile.aot).
+# ---------------------------------------------------------------------------
+
+
+def lower_combine(op: str, n: int):
+    """Jit-lower ``bulk_combine`` for 1-D f32 length ``n``."""
+    spec = jax.ShapeDtypeStruct((n,), jnp.float32)
+    fn = functools.partial(bulk_combine, op=op)
+    return jax.jit(fn).lower(spec, spec)
+
+
+def lower_combine_scaled(n: int):
+    """Jit-lower ``bulk_combine_scaled`` for 1-D f32 length ``n``."""
+    spec = jax.ShapeDtypeStruct((n,), jnp.float32)
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+    return jax.jit(bulk_combine_scaled).lower(spec, spec, scalar)
+
+
+def lower_mlp(batch: int = MLP_BATCH):
+    """Jit-lower ``mlp_loss_and_grad`` for the default architecture."""
+    p = mlp_param_count()
+    params = jax.ShapeDtypeStruct((p,), jnp.float32)
+    x = jax.ShapeDtypeStruct((batch, MLP_IN), jnp.float32)
+    y = jax.ShapeDtypeStruct((batch, MLP_OUT), jnp.float32)
+    return jax.jit(mlp_loss_and_grad).lower(params, x, y)

@@ -1,0 +1,182 @@
+"""Layer-1 correctness: Pallas combine kernels vs the pure-jnp oracle.
+
+This is the core numeric signal for the whole stack: the HLO the Rust
+runtime executes is lowered from exactly these kernels, so agreement with
+``ref.py`` here plus the HLO round-trip test in ``test_aot.py`` covers the
+compute half of Corollary 1's γ term.
+
+Hypothesis sweeps shapes (aligned buckets, odd lengths, prime lengths),
+dtypes and operators; regression tests pin the bucket shapes the AOT
+manifest actually ships.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    DEFAULT_TILE,
+    OPS,
+    choose_tile,
+    combine,
+    combine_ref,
+    combine_scaled,
+    reduce_blocks_ref,
+)
+from compile.kernels.combine import vmem_footprint_bytes
+
+# Interpret-mode pallas is slow; keep example counts moderate but meaningful.
+SETTINGS = settings(max_examples=25, deadline=None)
+
+DTYPES = (jnp.float32, jnp.int32)
+
+
+def _arr(rng, n, dtype):
+    if dtype == jnp.int32:
+        return jnp.asarray(rng.integers(-50, 50, size=n), dtype=dtype)
+    return jnp.asarray(rng.standard_normal(n), dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps
+# ---------------------------------------------------------------------------
+
+
+@SETTINGS
+@given(
+    n=st.integers(min_value=1, max_value=4096),
+    op=st.sampled_from(OPS),
+    dtype_ix=st.integers(0, len(DTYPES) - 1),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_combine_matches_ref_swept(n, op, dtype_ix, seed):
+    """combine == ref for arbitrary lengths, ops, dtypes, data."""
+    dtype = DTYPES[dtype_ix]
+    rng = np.random.default_rng(seed)
+    a, b = _arr(rng, n, dtype), _arr(rng, n, dtype)
+    got = combine(a, b, op=op)
+    want = combine_ref(a, b, op)
+    assert got.dtype == a.dtype
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+@SETTINGS
+@given(
+    n=st.integers(min_value=1, max_value=2048),
+    scale=st.floats(min_value=-4.0, max_value=4.0, allow_nan=False),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_combine_scaled_matches_fma(n, scale, seed):
+    """combine_scaled(r, t, s) == r + s*t."""
+    rng = np.random.default_rng(seed)
+    r = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    t = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    got = combine_scaled(r, t, scale)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(r) + np.float32(scale) * np.asarray(t), rtol=1e-5, atol=1e-6
+    )
+
+
+@SETTINGS
+@given(n=st.integers(min_value=1, max_value=1 << 20), tile=st.integers(1, 16384))
+def test_choose_tile_divides_and_bounded(n, tile):
+    """choose_tile returns a divisor of n that never exceeds the request."""
+    t = choose_tile(n, tile)
+    assert 1 <= t <= max(1, min(tile, n))
+    assert n % t == 0
+
+
+@SETTINGS
+@given(
+    n=st.integers(min_value=1, max_value=512),
+    op=st.sampled_from(OPS),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_combine_commutative(n, op, seed):
+    """The kernel realizes a commutative ⊕ (the paper's §2.1 assumption) —
+    exact commutativity holds elementwise for all four ops in IEEE f32."""
+    rng = np.random.default_rng(seed)
+    a, b = _arr(rng, n, jnp.float32), _arr(rng, n, jnp.float32)
+    np.testing.assert_array_equal(np.asarray(combine(a, b, op=op)), np.asarray(combine(b, a, op=op)))
+
+
+@SETTINGS
+@given(
+    k=st.integers(min_value=1, max_value=8),
+    n=st.integers(min_value=1, max_value=256),
+    op=st.sampled_from(OPS),
+    seed=st.integers(0, 2**31 - 1),
+    order_seed=st.integers(0, 2**31 - 1),
+)
+def test_fold_order_independent_for_exact_ops(k, n, op, seed, order_seed):
+    """Folding k blocks through the kernel in *any* order matches the
+    canonical reduction for min/max (exact) and integer-valued sum/prod
+    (exact in f32 within range) — the algebraic property Theorem 1's
+    spanning-forest argument relies on."""
+    rng = np.random.default_rng(seed)
+    if op in ("sum", "prod"):
+        # Integer-valued f32 keeps sum/prod exact; bound magnitude for prod.
+        hi = 4 if op == "prod" else 100
+        stack = rng.integers(1, hi, size=(k, n)).astype(np.float32)
+    else:
+        stack = rng.standard_normal((k, n)).astype(np.float32)
+    order = np.random.default_rng(order_seed).permutation(k)
+    acc = jnp.asarray(stack[order[0]])
+    for i in order[1:]:
+        acc = combine(acc, jnp.asarray(stack[i]), op=op)
+    want = reduce_blocks_ref(jnp.asarray(stack), op)
+    np.testing.assert_allclose(np.asarray(acc), np.asarray(want), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Pinned regression cases (the shipped bucket shapes)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [1024, 8192, 65536])
+@pytest.mark.parametrize("op", OPS)
+def test_bucket_shapes(n, op):
+    """Exactly the (op, bucket) combinations the AOT manifest ships."""
+    rng = np.random.default_rng(n)
+    a = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    b = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(combine(a, b, op=op)), np.asarray(combine_ref(a, b, op)), rtol=1e-6
+    )
+
+
+def test_special_values_min_max():
+    """min/max handle infinities; sum handles signed zeros."""
+    a = jnp.asarray([np.inf, -np.inf, 0.0, -0.0], jnp.float32)
+    b = jnp.asarray([1.0, 1.0, -0.0, 0.0], jnp.float32)
+    np.testing.assert_array_equal(np.asarray(combine(a, b, op="min")), [1.0, -np.inf, -0.0, -0.0])
+    np.testing.assert_array_equal(np.asarray(combine(a, b, op="max")), [np.inf, 1.0, 0.0, 0.0])
+    np.testing.assert_array_equal(np.asarray(combine(a, b, op="sum")), [np.inf, -np.inf, 0.0, 0.0])
+
+
+def test_errors():
+    a = jnp.zeros((4,), jnp.float32)
+    with pytest.raises(ValueError):
+        combine(a, jnp.zeros((5,), jnp.float32), op="sum")
+    with pytest.raises(ValueError):
+        combine(a, a, op="bogus")
+    with pytest.raises(ValueError):
+        choose_tile(0)
+
+
+def test_vmem_budget():
+    """DESIGN.md §Perf budget: default tile keeps 3 live f32 buffers under
+    192 KiB of VMEM."""
+    assert vmem_footprint_bytes(DEFAULT_TILE) <= 192 * 1024
+    assert DEFAULT_TILE % 1024 == 0  # lane-layout friendly
+
+
+def test_grid_actually_tiles():
+    """A length spanning multiple tiles exercises the BlockSpec grid (not a
+    single degenerate block)."""
+    n = DEFAULT_TILE * 3
+    a = jnp.arange(n, dtype=jnp.float32)
+    b = jnp.full((n,), 2.0, jnp.float32)
+    np.testing.assert_allclose(np.asarray(combine(a, b, op="sum")), np.arange(n) + 2.0)

@@ -1,0 +1,108 @@
+"""Layer-2 correctness: MLP loss/grad graph and lowering shapes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+SETTINGS = settings(max_examples=10, deadline=None)
+
+
+def _toy_data(seed=0, batch=model.MLP_BATCH):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((batch, model.MLP_IN)).astype(np.float32)
+    w = rng.standard_normal((model.MLP_IN, model.MLP_OUT)).astype(np.float32)
+    y = np.tanh(x @ w) * 0.5
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+def test_param_count_matches_flat_vector():
+    p = model.mlp_init(0)
+    assert p.shape == (model.mlp_param_count(),)
+    assert p.dtype == jnp.float32
+    # Explicit arithmetic from the architecture constants.
+    d, h, o = model.MLP_IN, model.MLP_HIDDEN, model.MLP_OUT
+    assert model.mlp_param_count() == d * h + h + h * h + h + h * o + o
+
+
+def test_loss_and_grad_shapes():
+    params = model.mlp_init(1)
+    x, y = _toy_data(1)
+    loss, grad = model.mlp_loss_and_grad(params, x, y)
+    assert loss.shape == ()
+    assert grad.shape == params.shape
+    assert bool(jnp.isfinite(loss))
+    assert bool(jnp.all(jnp.isfinite(grad)))
+
+
+def test_grad_matches_finite_differences():
+    """Spot-check autodiff against central differences on a few coords."""
+    params = model.mlp_init(2)
+    x, y = _toy_data(2, batch=8)
+    _, grad = model.mlp_loss_and_grad(params, x, y)
+    eps = 1e-3
+    rng = np.random.default_rng(0)
+    for i in rng.integers(0, params.shape[0], size=5):
+        e = jnp.zeros_like(params).at[i].set(eps)
+        lp = model.mlp_loss(params + e, x, y)
+        lm = model.mlp_loss(params - e, x, y)
+        fd = (lp - lm) / (2 * eps)
+        np.testing.assert_allclose(float(grad[i]), float(fd), rtol=5e-2, atol=5e-4)
+
+
+def test_sgd_descends():
+    """A few SGD steps on the toy problem must reduce the loss — the same
+    signal the E2E driver logs, in miniature."""
+    params = model.mlp_init(3)
+    x, y = _toy_data(3)
+    l0, _ = model.mlp_loss_and_grad(params, x, y)
+    lr = 0.05
+    for _ in range(20):
+        _, g = model.mlp_loss_and_grad(params, x, y)
+        params = params - lr * g
+    l1, _ = model.mlp_loss_and_grad(params, x, y)
+    assert float(l1) < float(l0) * 0.9, (float(l0), float(l1))
+
+
+@SETTINGS
+@given(seed=st.integers(0, 2**31 - 1))
+def test_data_parallel_grad_equals_full_batch_grad(seed):
+    """Averaging per-shard gradients (what the allreduce driver computes)
+    equals the full-batch gradient for a mean loss over equal shards —
+    the identity the E2E example's convergence relies on."""
+    params = model.mlp_init(4)
+    rng = np.random.default_rng(seed)
+    batch, shards = 16, 4
+    x = jnp.asarray(rng.standard_normal((batch, model.MLP_IN)), jnp.float32)
+    y = jnp.asarray(rng.standard_normal((batch, model.MLP_OUT)), jnp.float32)
+    _, g_full = model.mlp_loss_and_grad(params, x, y)
+    per = batch // shards
+    gs = []
+    for s in range(shards):
+        _, g = model.mlp_loss_and_grad(params, x[s * per : (s + 1) * per], y[s * per : (s + 1) * per])
+        gs.append(g)
+    g_avg = sum(gs) / shards
+    np.testing.assert_allclose(np.asarray(g_avg), np.asarray(g_full), rtol=1e-4, atol=1e-6)
+
+
+def test_lowering_shapes():
+    """The lowered MLP artifact has the input/output signature the manifest
+    advertises and the Rust runtime marshals."""
+    lowered = model.lower_mlp()
+    text = lowered.as_text()
+    assert "jit" in text or "func" in text  # sanity: real MLIR came out
+    p = model.mlp_param_count()
+    comp = lowered.compile()
+    out = comp(model.mlp_init(0), *_toy_data(0))
+    assert out[0].shape == () and out[1].shape == (p,)
+
+
+def test_forward_unflatten_consistency():
+    """Zero weights ⇒ zero output; bias-only params propagate."""
+    p = jnp.zeros((model.mlp_param_count(),), jnp.float32)
+    x, _ = _toy_data(5)
+    out = model.mlp_forward(p, x)
+    np.testing.assert_array_equal(np.asarray(out), 0.0)

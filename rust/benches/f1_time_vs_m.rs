@@ -1,0 +1,94 @@
+//! F1 — allreduce time vs vector length m (the crossover figure).
+//!
+//! DES evaluation of every allreduce algorithm plus analytic pipelined /
+//! two-tree estimates, at fixed p, sweeping m over powers of two. The
+//! *shape* claims being reproduced (paper §1/§2.2):
+//!   * small m: ⌈log2 p⌉-round algorithms (recursive doubling, binomial)
+//!     win on the α term; ring is worst by ~p/log p;
+//!   * large m: volume-optimal algorithms win; Algorithm 2 and ring tie on
+//!     volume but Algorithm 2 keeps the log α term, so it tracks the
+//!     lower envelope at both ends;
+//!   * the crossover m* between rec-doubling and Algorithm 2 scales like
+//!     α·log p/β.
+
+use circulant_collectives::bench_harness::{bench_header, fast_mode};
+use circulant_collectives::collectives::Algorithm;
+use circulant_collectives::datatypes::BlockPartition;
+use circulant_collectives::sim::{closed_form, simulate, CostModel};
+use circulant_collectives::util::table::{fmt_si, Table};
+
+fn main() {
+    bench_header("F1", "allreduce time vs m (DES, α-β-γ cluster model)");
+    let model = CostModel::cluster();
+    let ps: Vec<usize> = if fast_mode() { vec![64] } else { vec![64, 1000] };
+    let m_range: Vec<usize> = (4..=if fast_mode() { 16 } else { 24 }).map(|e| 1usize << e).collect();
+
+    for &p in &ps {
+        let algs = Algorithm::allreduce_family();
+        let mut header: Vec<String> = vec!["m".into()];
+        header.extend(algs.iter().map(|a| a.name()));
+        header.push("pipelined-tree".into());
+        header.push("two-tree".into());
+        header.push("winner".into());
+        let hrefs: Vec<&str> = header.iter().map(String::as_str).collect();
+        let mut t = Table::new(&format!("F1: time vs m, p={p} (seconds)"), &hrefs);
+
+        let mut crossover: Option<usize> = None;
+        let mut prev_winner = String::new();
+        for &m in &m_range {
+            let part = BlockPartition::regular(p, m);
+            let mut cells = vec![fmt_si(m as f64)];
+            let mut best = ("", f64::INFINITY);
+            let mut times = Vec::new();
+            for alg in &algs {
+                let sched = alg.schedule(p);
+                let sim = simulate(&sched, &part, &model);
+                times.push(sim.total);
+                cells.push(fmt_si(sim.total));
+            }
+            for (alg, tt) in algs.iter().zip(&times) {
+                if *tt < best.1 {
+                    best = (Box::leak(alg.name().into_boxed_str()), *tt);
+                }
+            }
+            let pt = closed_form::pipelined_binary_tree_allreduce(&model, p, m);
+            let tt = closed_form::two_tree_allreduce(&model, p, m);
+            cells.push(fmt_si(pt));
+            cells.push(fmt_si(tt));
+            if pt < best.1 {
+                best = ("pipelined-tree", pt);
+            }
+            if tt < best.1 {
+                best = ("two-tree", tt);
+            }
+            cells.push(best.0.to_string());
+            if !prev_winner.is_empty() && prev_winner != best.0 && crossover.is_none() {
+                crossover = Some(m);
+            }
+            prev_winner = best.0.to_string();
+            t.row(&cells);
+        }
+        t.print();
+        if let Some(m) = crossover {
+            println!("first winner change at m ≈ {} (expected scale α·log2 p/β ≈ {})\n",
+                fmt_si(m as f64),
+                fmt_si(model.alpha * (p as f64).log2() / model.beta));
+        }
+
+        // Shape assertions (the reproduction criteria):
+        let small = BlockPartition::regular(p, 16);
+        let large = BlockPartition::regular(p, 1 << 24);
+        let sim_at = |alg: &Algorithm, part: &BlockPartition| {
+            simulate(&alg.schedule(p), part, &model).total
+        };
+        let circ = Algorithm::parse("allreduce").unwrap();
+        let ring = Algorithm::RingAllreduce;
+        let rd = Algorithm::RecursiveDoublingAllreduce;
+        // ring is far worse for small m
+        assert!(sim_at(&circ, &small) < sim_at(&ring, &small) / 4.0, "p={p} small-m shape");
+        // Alg 2 within 1% of ring (volume twins) and beats rec-doubling for large m
+        assert!(sim_at(&circ, &large) <= sim_at(&ring, &large) * 1.01, "p={p} large-m vs ring");
+        assert!(sim_at(&circ, &large) < sim_at(&rd, &large), "p={p} large-m vs rec-doubling");
+    }
+    println!("shape checks ✓ (log-round wins small m; volume-optimal wins large m; Alg 2 tracks both)");
+}

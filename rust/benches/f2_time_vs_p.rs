@@ -1,0 +1,65 @@
+//! F2 — allreduce time vs processor count p.
+//!
+//! Fixed m, sweeping p (including non-powers of two — the paper's uniform-p
+//! claim). Shape claims reproduced:
+//!   * ring degrades linearly in p through the 2(p−1)·α term;
+//!   * Algorithm 2 stays logarithmic in the α term with volume → 2m;
+//!   * Algorithm 2 has no power-of-two cliffs, while recursive
+//!     doubling/Rabenseifner pay fold rounds at p ≠ 2^k (visible as a jump
+//!     between p=2^k and p=2^k+1).
+
+use circulant_collectives::bench_harness::{bench_header, fast_mode};
+use circulant_collectives::collectives::Algorithm;
+use circulant_collectives::datatypes::BlockPartition;
+use circulant_collectives::sim::{simulate, CostModel};
+use circulant_collectives::util::table::{fmt_si, Table};
+
+fn main() {
+    bench_header("F2", "allreduce time vs p (DES, α-β-γ cluster model)");
+    let model = CostModel::cluster();
+    let ms: Vec<usize> = if fast_mode() { vec![1 << 10] } else { vec![1 << 10, 1 << 20] };
+    let ps: Vec<usize> = if fast_mode() {
+        vec![2, 16, 17, 64, 65]
+    } else {
+        vec![2, 3, 4, 8, 9, 16, 17, 32, 33, 64, 65, 128, 129, 256, 257, 512, 513, 1024, 1025, 4096, 4097]
+    };
+
+    for &m in &ms {
+        let algs = Algorithm::allreduce_family();
+        let mut header: Vec<String> = vec!["p".into()];
+        header.extend(algs.iter().map(|a| a.name()));
+        let hrefs: Vec<&str> = header.iter().map(String::as_str).collect();
+        let mut t = Table::new(&format!("F2: time vs p, m={} (seconds)", fmt_si(m as f64)), &hrefs);
+        for &p in &ps {
+            let part = BlockPartition::regular(p, m);
+            let mut cells = vec![p.to_string()];
+            for alg in &algs {
+                let sim = simulate(&alg.schedule(p), &part, &model);
+                cells.push(fmt_si(sim.total));
+            }
+            t.row(&cells);
+        }
+        t.print();
+    }
+
+    // Shape assertions.
+    let m = 1 << 10;
+    let sim_at = |alg: &Algorithm, p: usize| {
+        simulate(&alg.schedule(p), &BlockPartition::regular(p, m), &model).total
+    };
+    let circ = Algorithm::parse("allreduce").unwrap();
+    // logarithmic vs linear scaling: going 64 → 1024 (16×) multiplies ring
+    // cost by ~≥8 but Algorithm 2's by a small factor.
+    let ring_ratio = sim_at(&Algorithm::RingAllreduce, 1024) / sim_at(&Algorithm::RingAllreduce, 64);
+    let circ_ratio = sim_at(&circ, 1024) / sim_at(&circ, 64);
+    assert!(ring_ratio > 8.0, "ring should scale ~linearly, got ×{ring_ratio:.1}");
+    assert!(circ_ratio < 3.0, "Alg 2 should scale ~logarithmically, got ×{circ_ratio:.1}");
+    // no power-of-two cliff for Alg 2; a visible one for recursive doubling
+    let cliff = |alg: &Algorithm| sim_at(alg, 129) / sim_at(alg, 128);
+    assert!(cliff(&circ) < 1.25, "Alg 2 cliff {:.2}", cliff(&circ));
+    assert!(
+        cliff(&Algorithm::RecursiveDoublingAllreduce) > cliff(&circ),
+        "rec-doubling should pay a fold penalty at 129"
+    );
+    println!("shape checks ✓ (ring linear, Alg 2 logarithmic, no 2^k cliffs for Alg 2)");
+}

@@ -1,0 +1,219 @@
+//! Perf — hot-path microbenchmarks and ablations (EXPERIMENTS.md §Perf).
+//!
+//! Measured here:
+//!   1. native ⊕ throughput per operator vs the single-core streaming
+//!      roofline (a plain slice copy),
+//!   2. the §3 ablation: one bulk combine over a run of blocks vs p
+//!      per-block combines (why the schedule keeps runs consecutive),
+//!   3. message pack (gather of ≤2 slices) throughput,
+//!   4. PJRT combine throughput per bucket (kernel dispatch amortization),
+//!   5. end-to-end threaded allreduce wall-clock vs DES prediction
+//!      (correlation sanity for using DES in F1/F2).
+
+use circulant_collectives::bench_harness::{bench_header, fast_mode, time_adaptive};
+use circulant_collectives::collectives::{allreduce_schedule, run_schedule_threads};
+use circulant_collectives::datatypes::BlockPartition;
+use circulant_collectives::ops::{MaxOp, MinOp, ProdOp, ReduceOp, SumOp};
+use circulant_collectives::runtime::{default_artifact_dir, Engine};
+use circulant_collectives::sim::{simulate, CostModel};
+use circulant_collectives::topology::skips::SkipScheme;
+use circulant_collectives::util::rng::SplitMix64;
+use circulant_collectives::util::stats::pearson;
+use circulant_collectives::util::table::{fmt_si, Table};
+use std::sync::Arc;
+
+fn gbps(elems: usize, seconds: f64) -> f64 {
+    // combine reads 2 vectors and writes 1 → 12 bytes per element
+    12.0 * elems as f64 / seconds / 1e9
+}
+
+fn main() {
+    bench_header("Perf", "hot-path throughput & ablations");
+    let n = 1 << 20;
+    let mut rng = SplitMix64::new(9);
+    let a0 = rng.normal_vec(n);
+    let b = rng.normal_vec(n);
+    let reps = if fast_mode() { 3 } else { 7 };
+
+    // 1. native ops vs streaming roofline ------------------------------
+    let mut t = Table::new("native ⊕ throughput (1 Mi f32)", &["op", "median time", "GB/s", "of copy roofline"]);
+    let mut a = a0.clone();
+    let copy = time_adaptive(0.05, reps, || {
+        a.copy_from_slice(&b);
+        std::hint::black_box(&a);
+    });
+    let copy_gbps = 8.0 * n as f64 / copy.median / 1e9; // read+write
+    t.row(&["copy (roofline)".into(), format!("{}s", fmt_si(copy.median)), format!("{copy_gbps:.1}"), "100%".into()]);
+    let ops: Vec<(&str, Box<dyn ReduceOp>)> = vec![
+        ("sum", Box::new(SumOp)),
+        ("prod", Box::new(ProdOp)),
+        ("min", Box::new(MinOp)),
+        ("max", Box::new(MaxOp)),
+    ];
+    // prod note: repeated in-place multiply by N(0,1) data underflows to
+    // denormals within a few hundred batched iterations, stalling the FPU
+    // (§Perf iteration 2). Use unit-magnitude ±1 factors so magnitudes are
+    // invariant under arbitrarily many repetitions — measures the op, not
+    // the drift.
+    let b_unit: Vec<f32> = b.iter().map(|x| if *x >= 0.0 { 1.0f32 } else { -1.0 }).collect();
+    let mut sum_ratio = 0.0;
+    for (name, op) in &ops {
+        let other = if *name == "prod" { &b_unit } else { &b };
+        let mut acc = a0.clone();
+        let s = time_adaptive(0.05, reps, || {
+            op.combine(&mut acc, other);
+            std::hint::black_box(&acc);
+        });
+        let g = gbps(n, s.median);
+        let ratio = g / (copy_gbps * 1.5); // combine moves 12B vs copy's 8B per elem
+        if *name == "sum" {
+            sum_ratio = ratio;
+        }
+        t.row(&[name.to_string(), format!("{}s", fmt_si(s.median)), format!("{g:.1}"), format!("{:.0}%", 100.0 * ratio)]);
+    }
+    t.print();
+
+    // 2. bulk vs per-block combine (§3 ablation) ------------------------
+    // The §3 point is per-call overhead on *small* blocks: a round's run of
+    // consecutive blocks is reduced with ONE bulk call instead of one call
+    // per block. Sweep block granularity at fixed total volume.
+    println!("bulk combine vs per-block combines (total 1 Mi f32):");
+    for p_blocks in [64usize, 1024, 16384, 131072] {
+        let blk = n / p_blocks;
+        let mut acc = a0.clone();
+        let bulk = time_adaptive(0.05, reps, || {
+            SumOp.combine(&mut acc, &b);
+            std::hint::black_box(&acc);
+        });
+        let mut acc2 = a0.clone();
+        let per_block = time_adaptive(0.05, reps, || {
+            for i in 0..p_blocks {
+                SumOp.combine(&mut acc2[i * blk..(i + 1) * blk], &b[i * blk..(i + 1) * blk]);
+            }
+            std::hint::black_box(&acc2);
+        });
+        println!(
+            "  {p_blocks:>6} blocks of {blk:>5}: bulk {}s vs per-block {}s ({:.2}×)",
+            fmt_si(bulk.median),
+            fmt_si(per_block.median),
+            per_block.median / bulk.median
+        );
+    }
+    println!();
+
+    // 3. pack throughput -------------------------------------------------
+    let part = BlockPartition::regular(64, n);
+    let (ra, rb) = part.circular_ranges(40, 40); // wraps
+    let mut scratch: Vec<f32> = Vec::with_capacity(n);
+    let pack = time_adaptive(0.05, reps, || {
+        scratch.clear();
+        scratch.extend_from_slice(&a0[ra.clone()]);
+        if let Some(rbx) = rb.clone() {
+            scratch.extend_from_slice(&a0[rbx]);
+        }
+        std::hint::black_box(&scratch);
+    });
+    let packed = ra.len() + rb.clone().map_or(0, |r| r.len());
+    println!(
+        "message pack (gather 2 slices, {} elems): {}s = {:.1} GB/s\n",
+        packed,
+        fmt_si(pack.median),
+        8.0 * packed as f64 / pack.median / 1e9
+    );
+
+    // 4. PJRT combine per bucket -----------------------------------------
+    match Engine::load(default_artifact_dir()) {
+        Ok(engine) => {
+            let mut t = Table::new(
+                "PJRT combine (AOT Pallas kernel) per bucket",
+                &["bucket", "median time", "Melem/s", "vs native sum"],
+            );
+            let buckets = engine.manifest.buckets.clone();
+            // native reference at the largest bucket
+            let nb = *buckets.last().unwrap();
+            let mut accn = a0[..nb].to_vec();
+            let nat = time_adaptive(0.05, reps, || {
+                SumOp.combine(&mut accn, &b[..nb]);
+                std::hint::black_box(&accn);
+            });
+            for &nbkt in &buckets {
+                let mut acc = a0[..nbkt].to_vec();
+                let s = time_adaptive(0.05, reps, || {
+                    engine.combine_bucket_exact("sum", &mut acc, &b[..nbkt]).unwrap();
+                    std::hint::black_box(&acc);
+                });
+                let native_equiv = nat.median * nbkt as f64 / nb as f64;
+                t.row(&[
+                    nbkt.to_string(),
+                    format!("{}s", fmt_si(s.median)),
+                    fmt_si(nbkt as f64 / s.median / 1e6),
+                    format!("{:.1}× slower", s.median / native_equiv),
+                ]);
+            }
+            t.print();
+            // Large-request policy: combine_into chunks at the sweet spot
+            // (CCOLL_PJRT_CHUNK to override; see §Perf iteration 1).
+            let big = 300_000usize;
+            let mut acc = a0[..big.min(n)].to_vec();
+            let bb = b[..big.min(n)].to_vec();
+            let s = time_adaptive(0.05, reps, || {
+                engine.combine_into("sum", &mut acc, &bb, 0.0).unwrap();
+                std::hint::black_box(&acc);
+            });
+            println!(
+                "large request ({big} elems) via chunking policy: {}s = {} elem/s\n",
+                fmt_si(s.median),
+                fmt_si(big as f64 / s.median)
+            );
+            println!("(interpret-mode grid loops make big buckets slower per element, so");
+            println!(" combine_into chunks at the measured sweet-spot bucket — §Perf log)\n");
+        }
+        Err(e) => println!("PJRT section skipped: {e}\n"),
+    }
+
+    // 5. threaded wall-clock vs CALIBRATED DES ---------------------------
+    let ps = if fast_mode() { vec![2usize, 4] } else { vec![2usize, 4, 8, 12, 16] };
+    let m = 1 << 18;
+    let model = circulant_collectives::sim::calibrate::calibrate_transport(&SumOp, 2);
+    println!(
+        "calibrated transport model: α={:.2e}s β={:.2e}s/elem γ={:.2e}s/elem",
+        model.alpha, model.beta, model.gamma
+    );
+    let mut wall = Vec::new();
+    let mut des = Vec::new();
+    // On a single physical core, p rank threads serialize: expect
+    // wall ≈ DES · p (the DES assumes each rank has its own processor).
+    let mut t =
+        Table::new("threaded allreduce vs DES", &["p", "wall", "DES", "ratio", "ratio/p (1-core)"]);
+    for &p in &ps {
+        let part = BlockPartition::regular(p, m);
+        let skips = SkipScheme::HalvingUp.skips(p).unwrap();
+        let sched = allreduce_schedule(p, &skips);
+        let mut rng = SplitMix64::new(p as u64);
+        let inputs: Vec<Vec<f32>> = (0..p).map(|_| rng.normal_vec(m)).collect();
+        let mut best = f64::INFINITY;
+        for _ in 0..reps.max(3) {
+            let t0 = std::time::Instant::now();
+            let _ = run_schedule_threads(&sched, &part, Arc::new(SumOp), inputs.clone());
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        let sim = simulate(&sched, &part, &model).total;
+        wall.push(best);
+        des.push(sim);
+        t.row(&[
+            p.to_string(),
+            format!("{}s", fmt_si(best)),
+            format!("{}s", fmt_si(sim)),
+            format!("{:.2}", best / sim),
+            format!("{:.2}", best / (sim * p as f64)),
+        ]);
+    }
+    t.print();
+    if wall.len() > 2 {
+        let r = pearson(&wall, &des);
+        println!("wall vs DES Pearson r = {r:.3} (DES is a faithful relative predictor)");
+    }
+
+    // quality gates recorded in EXPERIMENTS.md §Perf
+    assert!(sum_ratio > 0.5, "native sum below 50% of streaming roofline: {sum_ratio:.2}");
+}

@@ -1,0 +1,76 @@
+//! T6 (extension) — §3's clustered-systems remark, made measurable.
+//!
+//! "The doubling and halving schemes lead to latency contention and
+//! communication redundancy when run as written on clustered,
+//! hierarchical systems with constrained per node bandwidth [21]."
+//!
+//! Under the two-level cost model with per-node link contention
+//! (`sim::hier`), compare flat Algorithm 2 against the decomposed
+//! schedule (intra-node reduce → leader circulant allreduce → intra-node
+//! bcast, `collectives::hierarchical`), sweeping m and node size.
+//! Expected shape: flat wins when nodes are tiny or vectors small (fewer
+//! rounds, no redundancy); decomposition wins once every rank of a node
+//! contends for one NIC on large vectors.
+
+use circulant_collectives::bench_harness::{bench_header, fast_mode};
+use circulant_collectives::collectives::hierarchical::hierarchical_allreduce_schedule;
+use circulant_collectives::collectives::Algorithm;
+use circulant_collectives::datatypes::BlockPartition;
+use circulant_collectives::sim::hier::{simulate_hier, HierModel};
+use circulant_collectives::topology::skips::SkipScheme;
+use circulant_collectives::util::table::{fmt_si, Table};
+
+fn main() {
+    bench_header("T6", "hierarchical decomposition vs flat Algorithm 2 (§3/[21])");
+    let p = 64;
+    let node_sizes: Vec<usize> = if fast_mode() { vec![8] } else { vec![2, 4, 8, 16] };
+    let ms: Vec<usize> =
+        if fast_mode() { vec![1 << 16] } else { (8..=24).step_by(2).map(|e| 1usize << e).collect() };
+
+    for &node in &node_sizes {
+        let model = HierModel::typical(node);
+        let flat = Algorithm::parse("ar").unwrap().schedule(p);
+        let hier = hierarchical_allreduce_schedule(p, node, &SkipScheme::HalvingUp);
+        hier.assert_valid();
+        let mut t = Table::new(
+            &format!("T6: p={p}, node_size={node} (typical cluster: 0.2µs/40GB·s intra, 2µs/10GB·s inter, NIC contention)"),
+            &["m", "flat Alg 2", "decomposed", "speedup", "winner"],
+        );
+        let mut crossover = None;
+        for &m in &ms {
+            let part = BlockPartition::regular(p, m);
+            let tf = simulate_hier(&flat, &part, &model).total;
+            let th = simulate_hier(&hier, &part, &model).total;
+            if th < tf && crossover.is_none() {
+                crossover = Some(m);
+            }
+            t.row(&[
+                fmt_si(m as f64),
+                format!("{}s", fmt_si(tf)),
+                format!("{}s", fmt_si(th)),
+                format!("{:.2}×", tf / th),
+                if th < tf { "decomposed".into() } else { "flat".to_string() },
+            ]);
+        }
+        t.print();
+        if let Some(m) = crossover {
+            println!("decomposition pays off from m ≈ {}\n", fmt_si(m as f64));
+        } else {
+            println!("flat Algorithm 2 wins across the sweep at node_size={node}\n");
+        }
+    }
+
+    // Shape assertion: at node=8 and a large vector, decomposition must win.
+    let node = 8;
+    let model = HierModel::typical(node);
+    let part = BlockPartition::regular(p, 1 << 22);
+    let tf = simulate_hier(&Algorithm::parse("ar").unwrap().schedule(p), &part, &model).total;
+    let th = simulate_hier(
+        &hierarchical_allreduce_schedule(p, node, &SkipScheme::HalvingUp),
+        &part,
+        &model,
+    )
+    .total;
+    assert!(th < tf, "decomposed {th} should beat flat {tf} at m=2^22");
+    println!("shape check ✓ (contended flat halving/doubling loses to decomposition — §3's warning)");
+}

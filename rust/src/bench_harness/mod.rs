@@ -1,0 +1,83 @@
+//! In-tree micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Provides warmup + repetition + summary for closures, wall-clock helpers
+//! for the thread-network collectives, and consistent table output so each
+//! bench binary regenerates one table/figure of EXPERIMENTS.md.
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+/// Benchmark a closure: `warmup` untimed runs, then `reps` timed runs.
+/// Returns per-rep seconds.
+pub fn time_reps<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut out = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        out.push(t0.elapsed().as_secs_f64());
+    }
+    out
+}
+
+/// Benchmark with an adaptive inner loop so very fast closures get
+/// aggregated timing: runs the closure in batches until one batch exceeds
+/// `min_batch_seconds`, then reports per-iteration time for `reps` batches.
+pub fn time_adaptive<F: FnMut()>(min_batch_seconds: f64, reps: usize, mut f: F) -> Summary {
+    // calibrate batch size
+    let mut batch = 1usize;
+    loop {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        if dt >= min_batch_seconds || batch >= 1 << 24 {
+            break;
+        }
+        batch *= 2;
+    }
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        samples.push(t0.elapsed().as_secs_f64() / batch as f64);
+    }
+    Summary::of(&samples)
+}
+
+/// Standard bench header so outputs are self-describing in the logs.
+pub fn bench_header(id: &str, what: &str) {
+    println!("\n=== {id}: {what} ===");
+    println!("(harness: in-tree, median-of-reps; see rust/src/bench_harness)");
+}
+
+/// Environment knob: `CCOLL_BENCH_FAST=1` shrinks sweeps for smoke runs.
+pub fn fast_mode() -> bool {
+    std::env::var("CCOLL_BENCH_FAST").map(|v| v == "1").unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_reps_counts() {
+        let mut n = 0;
+        let v = time_reps(2, 5, || n += 1);
+        assert_eq!(v.len(), 5);
+        assert_eq!(n, 7);
+        assert!(v.iter().all(|&t| t >= 0.0));
+    }
+
+    #[test]
+    fn adaptive_reports_sane_times() {
+        let s = time_adaptive(0.001, 3, || { std::hint::black_box(1 + 1); });
+        assert!(s.median > 0.0 && s.median < 1e-3);
+    }
+}

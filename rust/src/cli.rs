@@ -1,0 +1,325 @@
+//! `ccoll` command-line interface (hand-rolled; clap unavailable offline).
+//!
+//! Subcommands:
+//!   info       platform + artifact + config report
+//!   run        execute a collective on the thread network, verify, report
+//!   simulate   α-β-γ DES + closed-form comparison sweep
+//!   trace      symbolic round-by-round trace (reproduces the paper's §2.1
+//!              p=22 example)
+//!   validate   Theorem 1/2 counter + correctness sweep over a p range
+//!   train      end-to-end data-parallel training (PJRT compute + Alg 2)
+//!
+//! Global flags: `--config FILE` and `--key value` overrides (see
+//! `crate::config`).
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::collectives::{symbolic, Algorithm};
+use crate::config::Config;
+use crate::coordinator::{train, Launcher, OpBackend, RunMetrics, TrainConfig};
+use crate::datatypes::BlockPartition;
+use crate::ops::{ReduceOp, SumOp};
+use crate::runtime::{default_artifact_dir, ComputeService, Manifest};
+use crate::sim::{closed_form, simulate};
+use crate::topology::skips::SkipScheme;
+use crate::util::rng::SplitMix64;
+use crate::util::table::{fmt_si, Table};
+
+pub const USAGE: &str = "\
+usage: ccoll [--config FILE] [--key value …] <command>
+
+commands:
+  info                     show platform, artifacts, resolved config
+  run                      run a collective (keys: run.p run.m run.algorithm
+                           run.op run.backend run.seed run.verify)
+  simulate                 cost-model sweep (keys: sim.p sim.m cost.alpha
+                           cost.beta cost.gamma)
+  trace                    symbolic trace (keys: trace.p trace.rank)
+  validate                 Theorem 1/2 sweep (keys: validate.max_p)
+  search                   skip-sequence search, the paper's §2.1 open
+                           question (keys: search.p search.m search.node
+                           search.beam)
+  train                    E2E data-parallel training (keys: train.workers
+                           train.steps train.lr train.backend)
+";
+
+/// Entry point: parse args, dispatch. Returns the process exit code.
+pub fn main_with_args(args: Vec<String>) -> Result<()> {
+    let mut cfg = Config::new();
+    // --config FILE is processed first so flags can override the file.
+    let mut rest = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == "--config" {
+            let path = args.get(i + 1).ok_or_else(|| anyhow!("--config needs a path"))?;
+            cfg = Config::from_file(path)?;
+            i += 2;
+        } else {
+            rest.push(args[i].clone());
+            i += 1;
+        }
+    }
+    let positional = cfg.apply_args(&rest)?;
+    let cmd = positional.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "info" => cmd_info(&cfg),
+        "run" => cmd_run(&cfg),
+        "simulate" => cmd_simulate(&cfg),
+        "trace" => cmd_trace(&cfg),
+        "validate" => cmd_validate(&cfg),
+        "search" => cmd_search(&cfg),
+        "train" => cmd_train(&cfg),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+fn cmd_info(cfg: &Config) -> Result<()> {
+    println!("circulant-collectives — Träff 2024 reproduction (see DESIGN.md)");
+    let dir = default_artifact_dir();
+    match Manifest::load(&dir) {
+        Ok(m) => {
+            println!("artifacts: {} ({} modules, buckets {:?}, jax-built)", dir.display(), m.artifacts.len(), m.buckets);
+            println!("mlp: {} params ({}→{}→{}→{}, batch {})", m.mlp.params, m.mlp.d_in, m.mlp.hidden, m.mlp.hidden, m.mlp.d_out, m.mlp.batch);
+        }
+        Err(e) => println!("artifacts: unavailable ({e}) — run `make artifacts`"),
+    }
+    let n: usize = cfg.entries().count();
+    if n > 0 {
+        println!("config:");
+        for (k, v) in cfg.entries() {
+            println!("  {k} = {v}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_run(cfg: &Config) -> Result<()> {
+    let p = cfg.get_usize("run.p", 8)?;
+    let m = cfg.get_usize("run.m", 1 << 16)?;
+    let alg = cfg.algorithm()?;
+    let op_name = cfg.get_str("run.op", "sum").to_string();
+    let backend_name = cfg.get_str("run.backend", "native").to_string();
+    let seed = cfg.get_usize("run.seed", 1)? as u64;
+    let verify = cfg.get_bool("run.verify", true)?;
+
+    let _service; // keep the compute service alive for the whole run
+    let backend = match backend_name.as_str() {
+        "native" => OpBackend::Native,
+        "pjrt" => {
+            let svc = ComputeService::start(default_artifact_dir(), vec![op_name.clone()], false, false)?;
+            let h = svc.handle.clone();
+            _service = svc;
+            OpBackend::Pjrt(h)
+        }
+        other => bail!("unknown backend {other:?} (native|pjrt)"),
+    };
+
+    let part = BlockPartition::regular(p, m);
+    let sched = alg.schedule(p);
+    sched.assert_valid();
+
+    // Integer-valued inputs so float sums verify exactly.
+    let mut rng = SplitMix64::new(seed);
+    let inputs: Vec<Vec<f32>> = (0..p).map(|_| rng.int_valued_vec(m, -8, 9)).collect();
+    let mut oracle = vec![0.0f32; m];
+    for v in &inputs {
+        SumOp.combine(&mut oracle, v);
+    }
+
+    let sched2 = Arc::new(sched);
+    let part2 = Arc::new(part.clone());
+    let inputs2 = Arc::new(std::sync::Mutex::new(inputs.into_iter().map(Some).collect::<Vec<_>>()));
+    let op2 = op_name.clone();
+    let sched3 = sched2.clone();
+    let t0 = std::time::Instant::now();
+    let results = Launcher::new(p).backend(backend).run(move |mut comm| {
+        let mut buf = inputs2.lock().unwrap()[comm.rank()].take().unwrap();
+        comm.run_schedule(&sched3, &part2, &op2, &mut buf).expect("collective");
+        (buf, comm.counters())
+    });
+    let wall = t0.elapsed().as_secs_f64();
+
+    let metrics = RunMetrics {
+        algorithm: alg.name(),
+        p,
+        m,
+        wall_seconds: wall,
+        per_rank: results.iter().map(|(_, c)| c.clone()).collect(),
+    };
+    metrics.summary_table().print();
+
+    if verify && op_name == "sum" {
+        let part = BlockPartition::regular(p, m);
+        let mut ok = true;
+        for (r, (buf, _)) in results.iter().enumerate() {
+            let good = if alg.is_allreduce() {
+                buf[..] == oracle[..]
+            } else if alg.is_reduce_scatter() {
+                buf[part.range(r)] == oracle[part.range(r)]
+            } else {
+                true
+            };
+            if !good {
+                eprintln!("VERIFY FAILED at rank {r}");
+                ok = false;
+            }
+        }
+        if ok {
+            println!("verify: OK (exact match vs scalar oracle)");
+        } else {
+            bail!("verification failed");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_simulate(cfg: &Config) -> Result<()> {
+    let p = cfg.get_usize("sim.p", 1000)?;
+    let m = cfg.get_usize("sim.m", 1 << 20)?;
+    let model = cfg.cost_model()?;
+    println!("cost model: α={:.2e}s β={:.2e}s/elem γ={:.2e}s/elem", model.alpha, model.beta, model.gamma);
+    let part = BlockPartition::regular(p, m);
+    let mut t = Table::new(
+        &format!("simulated allreduce, p={p}, m={m}"),
+        &["algorithm", "rounds", "DES time", "closed form"],
+    );
+    for alg in Algorithm::allreduce_family() {
+        let sched = alg.schedule(p);
+        let sim = simulate(&sched, &part, &model);
+        let cf = match &alg {
+            Algorithm::CirculantAllreduce(_) => closed_form::alg2_allreduce(&model, p, m),
+            Algorithm::RingAllreduce => closed_form::ring_allreduce(&model, p, m),
+            Algorithm::RecursiveDoublingAllreduce => {
+                closed_form::recursive_doubling_allreduce(&model, p, m)
+            }
+            Algorithm::RabenseifnerAllreduce => closed_form::rabenseifner_allreduce(&model, p, m),
+            _ => closed_form::binomial_allreduce(&model, p, m),
+        };
+        t.row(&[
+            alg.name(),
+            sim.rounds.to_string(),
+            format!("{}s", fmt_si(sim.total)),
+            format!("{}s", fmt_si(cf)),
+        ]);
+    }
+    t.print();
+    let (best, tbest) = crate::coordinator::select_allreduce(&model, p, m);
+    println!("selector: {} predicted {}s", best.name(), fmt_si(tbest));
+    Ok(())
+}
+
+fn cmd_trace(cfg: &Config) -> Result<()> {
+    let p = cfg.get_usize("trace.p", 22)?;
+    let r = cfg.get_usize("trace.rank", p - 1)?;
+    let scheme = SkipScheme::parse(cfg.get_str("trace.scheme", "halving")).map_err(|e| anyhow!("{e}"))?;
+    let skips = scheme.skips(p).map_err(|e| anyhow!("{e}"))?;
+    println!("p={p}, rank={r}, scheme={}, skips={skips:?} (⌈log2 {p}⌉={} rounds)", scheme.name(), skips.len());
+    let sched = crate::collectives::reduce_scatter_schedule(p, &skips);
+    println!("from-processors of rank {r}: {:?}", skips.iter().map(|s| (r + p - s) % p).collect::<Vec<_>>());
+    let terms = symbolic::paper_example_terms(&sched, r);
+    println!("\nW at rank {r} accumulates (x_i = input block of processor i for {r}):");
+    println!("  W = {}", terms[0]);
+    for (k, t) in terms[1..].iter().enumerate() {
+        println!("    + {t}   (round {})", k + 1);
+    }
+    let depth = symbolic::verify_reduce_scatter(&sched).map_err(|e| anyhow!("{e}"))?;
+    println!("\nsymbolic check: every contributor exactly once at every rank ✓ (max tree depth {depth})");
+    Ok(())
+}
+
+fn cmd_validate(cfg: &Config) -> Result<()> {
+    let max_p = cfg.get_usize("validate.max_p", 128)?;
+    let mut bad = 0usize;
+    for p in 1..=max_p {
+        for scheme in [SkipScheme::HalvingUp, SkipScheme::PowerOfTwo, SkipScheme::Sqrt] {
+            let skips = scheme.skips(p).map_err(|e| anyhow!("{e}"))?;
+            if p >= 2 {
+                let rs = crate::collectives::reduce_scatter_schedule(p, &skips);
+                rs.assert_valid();
+                let part = BlockPartition::uniform(p, 1);
+                for c in rs.counters(&part) {
+                    if c.blocks_sent != p - 1 || c.blocks_combined != p - 1 {
+                        eprintln!("FAIL p={p} {}: counters {c:?}", scheme.name());
+                        bad += 1;
+                    }
+                }
+                if symbolic::verify_reduce_scatter(&rs).is_err() {
+                    eprintln!("FAIL p={p} {}: symbolic", scheme.name());
+                    bad += 1;
+                }
+            }
+        }
+    }
+    if bad == 0 {
+        println!("validate: PASS — Theorem 1 counters + symbolic correctness for p ≤ {max_p} × 3 schemes");
+        Ok(())
+    } else {
+        bail!("{bad} validation failures")
+    }
+}
+
+fn cmd_search(cfg: &Config) -> Result<()> {
+    use crate::collectives::reduce_scatter_schedule;
+    use crate::sim::hier::{simulate_hier, HierModel};
+    use crate::sim::CostModel;
+    use crate::topology::search::{beam_search, exhaustive_best};
+
+    let p = cfg.get_usize("search.p", 22)?;
+    let m = cfg.get_usize("search.m", 4096 * p)?;
+    let node = cfg.get_usize("search.node", 0)?; // 0 = homogeneous model
+    let beam = cfg.get_usize("search.beam", 64)?;
+    let part = BlockPartition::regular(p, m);
+    let model = cfg.cost_model()?;
+
+    let eval = |seq: &[usize]| -> f64 {
+        let sched = reduce_scatter_schedule(p, seq);
+        if node > 0 {
+            let hm = HierModel { node_size: node, intra: model, inter: CostModel::new(model.alpha * 10.0, model.beta * 4.0, model.gamma) };
+            simulate_hier(&sched, &part, &hm).total
+        } else {
+            simulate(&sched, &part, &model).total
+        }
+    };
+    let halving = SkipScheme::HalvingUp.skips(p).map_err(|e| anyhow!("{e}"))?;
+    let t_h = eval(&halving);
+    println!("p={p}, m={m}, model={}", if node > 0 { format!("clustered(node={node})") } else { "homogeneous".into() });
+    println!("halving-up {halving:?}: {}s", fmt_si(t_h));
+    let (seq, t) = if p <= 24 {
+        let (seq, t, n) = exhaustive_best(p, eval);
+        println!("exhaustive search over {n} valid sequences:");
+        (seq, t)
+    } else {
+        println!("beam search (width {beam}):");
+        beam_search(p, beam, eval)
+    };
+    println!("best {seq:?}: {}s ({:.3}× vs halving-up)", fmt_si(t), t_h / t);
+    Ok(())
+}
+
+fn cmd_train(cfg: &Config) -> Result<()> {
+    let tc = TrainConfig {
+        workers: cfg.get_usize("train.workers", 4)?,
+        steps: cfg.get_usize("train.steps", 300)?,
+        lr: cfg.get_f64("train.lr", 0.05)? as f32,
+        seed: cfg.get_usize("train.seed", 7)? as u64,
+        log_every: cfg.get_usize("train.log_every", 20)?,
+        pjrt_reduce: cfg.get_str("train.backend", "pjrt") == "pjrt",
+        scheme: SkipScheme::parse(cfg.get_str("train.scheme", "halving")).map_err(|e| anyhow!("{e}"))?,
+    };
+    let report = train(&default_artifact_dir(), &tc)?;
+    println!(
+        "\ntrained {} params on {} workers × {} steps in {:.2}s",
+        report.params, report.workers, report.steps, report.wall_seconds
+    );
+    println!(
+        "loss {:.4} → {:.4}; grad allreduce: {} rounds/step, {} elems/step/worker",
+        report.first_loss, report.final_loss, report.rounds_per_allreduce, report.grad_elems_per_step
+    );
+    Ok(())
+}

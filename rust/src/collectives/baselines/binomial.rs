@@ -1,0 +1,165 @@
+//! Binomial-tree baselines: reduce-to-root, broadcast, and the
+//! reduce+broadcast allreduce (the "two stage detour" the paper's
+//! introduction warns about — full vector on every edge, so the β term is
+//! `⌈log2 p⌉·m` instead of `2(p−1)/p·m`).
+
+use crate::schedule::{BlockRange, RankStep, Recv, RecvAction, Round, Schedule, Transfer};
+use crate::util::ceil_log2;
+
+/// Binomial-tree reduce to rank `root`: `⌈log2 p⌉` rounds; in round `k`
+/// every rank with bit `k` set (relative to the root) and lower bits clear
+/// sends its full partial vector to its parent.
+pub fn binomial_reduce_schedule(p: usize, root: usize) -> Schedule {
+    assert!(root < p);
+    let mut sched = Schedule::new(p, format!("binomial-reduce(root={root})"));
+    if p == 1 {
+        return sched;
+    }
+    let q = ceil_log2(p) as usize;
+    for k in 0..q {
+        let bit = 1usize << k;
+        let mut round = Round::idle(p);
+        for rel in 0..p {
+            // work in root-relative rank space
+            if rel & ((bit << 1) - 1) == bit {
+                let parent_rel = rel - bit;
+                let r = (rel + root) % p;
+                let parent = (parent_rel + root) % p;
+                round.steps[r] = RankStep {
+                    send: Some(Transfer { peer: parent, blocks: BlockRange::new(0, p) }),
+                    recv: None,
+                };
+                round.steps[parent] = RankStep {
+                    send: None,
+                    recv: Some(Recv {
+                        peer: r,
+                        blocks: BlockRange::new(0, p),
+                        action: RecvAction::Combine,
+                    }),
+                };
+            }
+        }
+        sched.rounds.push(round);
+    }
+    sched
+}
+
+/// Binomial-tree broadcast from rank `root` (mirror of the reduce).
+pub fn binomial_bcast_schedule(p: usize, root: usize) -> Schedule {
+    assert!(root < p);
+    let mut sched = Schedule::new(p, format!("binomial-bcast(root={root})"));
+    if p == 1 {
+        return sched;
+    }
+    let q = ceil_log2(p) as usize;
+    for k in (0..q).rev() {
+        let bit = 1usize << k;
+        let mut round = Round::idle(p);
+        for rel in 0..p {
+            if rel & ((bit << 1) - 1) == bit {
+                let parent_rel = rel - bit;
+                let r = (rel + root) % p;
+                let parent = (parent_rel + root) % p;
+                round.steps[parent] = RankStep {
+                    send: Some(Transfer { peer: r, blocks: BlockRange::new(0, p) }),
+                    recv: None,
+                };
+                round.steps[r] = RankStep {
+                    send: None,
+                    recv: Some(Recv {
+                        peer: parent,
+                        blocks: BlockRange::new(0, p),
+                        action: RecvAction::Store,
+                    }),
+                };
+            }
+        }
+        sched.rounds.push(round);
+    }
+    sched
+}
+
+/// Reduce + broadcast allreduce: `2⌈log2 p⌉` rounds, full-vector edges.
+pub fn binomial_allreduce_schedule(p: usize) -> Schedule {
+    let mut sched = binomial_reduce_schedule(p, 0);
+    sched.name = "binomial-allreduce".into();
+    sched.rounds.extend(binomial_bcast_schedule(p, 0).rounds);
+    sched
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::exec::run_schedule_threads;
+    use crate::datatypes::BlockPartition;
+    use crate::ops::{MaxOp, SumOp};
+    use crate::util::rng::SplitMix64;
+    use std::sync::Arc;
+
+    fn oracle_sum(inputs: &[Vec<f32>]) -> Vec<f32> {
+        let mut acc = vec![0.0f32; inputs[0].len()];
+        for v in inputs {
+            for (a, b) in acc.iter_mut().zip(v) {
+                *a += b;
+            }
+        }
+        acc
+    }
+
+    #[test]
+    fn reduce_reaches_root_any_p_any_root() {
+        for p in [2usize, 3, 5, 8, 13] {
+            for root in [0, p / 2, p - 1] {
+                let part = BlockPartition::regular(p, p + 2);
+                let mut rng = SplitMix64::new((p * 31 + root) as u64);
+                let inputs: Vec<Vec<f32>> =
+                    (0..p).map(|_| rng.int_valued_vec(part.total(), -4, 5)).collect();
+                let want = oracle_sum(&inputs);
+                let sched = binomial_reduce_schedule(p, root);
+                sched.assert_valid();
+                let out = run_schedule_threads(&sched, &part, Arc::new(SumOp), inputs);
+                assert_eq!(out[root], want, "p={p} root={root}");
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_correct_and_round_count() {
+        for p in [2usize, 6, 9, 16] {
+            let part = BlockPartition::regular(p, 2 * p);
+            let mut rng = SplitMix64::new(p as u64);
+            let inputs: Vec<Vec<f32>> =
+                (0..p).map(|_| rng.int_valued_vec(part.total(), -4, 5)).collect();
+            let want = oracle_sum(&inputs);
+            let sched = binomial_allreduce_schedule(p);
+            sched.assert_valid();
+            assert_eq!(sched.num_rounds(), 2 * ceil_log2(p) as usize);
+            let out = run_schedule_threads(&sched, &part, Arc::new(MaxOp), inputs.clone());
+            // max oracle
+            let mut wmax = vec![f32::NEG_INFINITY; want.len()];
+            for v in &inputs {
+                for (a, b) in wmax.iter_mut().zip(v) {
+                    *a = a.max(*b);
+                }
+            }
+            for buf in out {
+                assert_eq!(buf, wmax, "p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn full_vector_volume_is_the_penalty() {
+        // The β-term inefficiency vs Theorem 2: q·m elements vs 2(p−1)/p·m.
+        let p = 16;
+        let part = BlockPartition::uniform(p, 10);
+        let sched = binomial_allreduce_schedule(p);
+        let counters = sched.counters(&part);
+        // Rank 1 is a leaf in both trees: sends m once, receives m once.
+        assert_eq!(counters[1].elems_sent, part.total());
+        // Rank 0 (root) receives q full vectors and sends q full vectors.
+        let q = ceil_log2(p) as usize;
+        assert_eq!(counters[0].elems_recv, q * part.total());
+        assert_eq!(counters[0].elems_sent, q * part.total());
+    }
+}

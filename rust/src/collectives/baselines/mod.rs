@@ -1,0 +1,18 @@
+//! Baseline collective algorithms the paper compares against (§1):
+//! linear-round ring/fully-connected algorithms, hypercube
+//! halving/doubling, Bruck dissemination allgather, and tree algorithms.
+
+pub mod binomial;
+pub mod bruck;
+pub mod recursive;
+pub mod ring;
+pub mod scatter_gather;
+
+pub use binomial::{binomial_allreduce_schedule, binomial_bcast_schedule, binomial_reduce_schedule};
+pub use scatter_gather::{binomial_gather_schedule, binomial_scatter_schedule};
+pub use bruck::bruck_allgather_schedule;
+pub use recursive::{
+    rabenseifner_allreduce_schedule, recursive_doubling_ag_schedule,
+    recursive_doubling_allreduce_schedule, recursive_halving_rs_schedule,
+};
+pub use ring::{ring_allgather_schedule, ring_allreduce_schedule, ring_reduce_scatter_schedule};

@@ -1,0 +1,338 @@
+//! Recursive halving / doubling baselines (hypercube-pattern algorithms,
+//! §1 of the paper: optimal for powers of two, awkward otherwise).
+//!
+//! * [`recursive_halving_rs_schedule`] — reduce-scatter for power-of-two
+//!   `p`: the block space is halved every round (butterfly).
+//! * [`recursive_doubling_allreduce_schedule`] — full-vector butterfly
+//!   allreduce; non-power-of-two `p` handled by the standard fold: extra
+//!   ranks fold their vector into a partner first and receive the result
+//!   back at the end ([16]'s "trivial reduction to the nearest power of
+//!   two", which is exactly what the paper's Algorithm 1 renders
+//!   unnecessary).
+//! * [`rabenseifner_allreduce_schedule`] — halving RS + doubling AG [16].
+
+use crate::schedule::{BlockRange, RankStep, Recv, RecvAction, Round, Schedule, Transfer};
+
+/// Largest power of two ≤ `p`.
+fn pow2_floor(p: usize) -> usize {
+    assert!(p >= 1);
+    1usize << p.ilog2()
+}
+
+/// Fold-in round for non-power-of-two `p`: ranks `pow..p` send their whole
+/// vector to `r − pow`, which combines. Returns `None` if `p` is a power
+/// of two.
+fn fold_in_round(p: usize) -> Option<Round> {
+    let pow = pow2_floor(p);
+    if pow == p {
+        return None;
+    }
+    let mut round = Round::idle(p);
+    for e in pow..p {
+        let partner = e - pow;
+        round.steps[e] =
+            RankStep { send: Some(Transfer { peer: partner, blocks: BlockRange::new(0, p) }), recv: None };
+        round.steps[partner] = RankStep {
+            send: None,
+            recv: Some(Recv { peer: e, blocks: BlockRange::new(0, p), action: RecvAction::Combine }),
+        };
+    }
+    Some(round)
+}
+
+/// Copy-back round: partners return the finished full vector to the folded
+/// ranks.
+fn fold_out_round(p: usize) -> Option<Round> {
+    let pow = pow2_floor(p);
+    if pow == p {
+        return None;
+    }
+    let mut round = Round::idle(p);
+    for e in pow..p {
+        let partner = e - pow;
+        round.steps[partner] =
+            RankStep { send: Some(Transfer { peer: e, blocks: BlockRange::new(0, p) }), recv: None };
+        round.steps[e] = RankStep {
+            send: None,
+            recv: Some(Recv { peer: partner, blocks: BlockRange::new(0, p), action: RecvAction::Store }),
+        };
+    }
+    Some(round)
+}
+
+/// The (start, len) block window of rank `r` after `rounds` halving rounds
+/// over `pow` ranks/blocks. The kept half always contains bit pattern of r.
+fn window(r: usize, pow: usize, rounds: usize) -> (usize, usize) {
+    let mut start = 0usize;
+    let mut len = pow;
+    for k in 0..rounds {
+        let half = len / 2;
+        let bit = pow >> (k + 1);
+        if r & bit != 0 {
+            start += half;
+        }
+        len = half;
+    }
+    (start, len)
+}
+
+/// Recursive halving reduce-scatter over the *block groups* `0..pow`.
+/// Requires `p` to be a power of two and the partition to have exactly `p`
+/// blocks. `log2 p` rounds; volume `(p−1)/p·m` — matches Algorithm 1 on
+/// powers of two, which is the baseline's best case.
+pub fn recursive_halving_rs_schedule(p: usize) -> Schedule {
+    assert!(p.is_power_of_two(), "recursive halving requires power-of-two p (got {p})");
+    let mut sched = Schedule::new(p, "rec-halving-rs");
+    if p == 1 {
+        return sched;
+    }
+    let q = p.ilog2() as usize;
+    for k in 0..q {
+        let bit = p >> (k + 1);
+        let mut round = Round::idle(p);
+        for (r, step) in round.steps.iter_mut().enumerate() {
+            let peer = r ^ bit;
+            let (start, len) = window(r, p, k);
+            let half = len / 2;
+            // Keep the half containing r; send the half containing peer.
+            let keep_upper = r & bit != 0;
+            let (send_start, recv_start) =
+                if keep_upper { (start, start + half) } else { (start + half, start) };
+            *step = RankStep {
+                send: Some(Transfer { peer, blocks: BlockRange::new(send_start, half) }),
+                recv: Some(Recv {
+                    peer,
+                    blocks: BlockRange::new(recv_start, half),
+                    action: RecvAction::Combine,
+                }),
+            };
+        }
+        sched.rounds.push(round);
+    }
+    sched
+}
+
+/// Recursive doubling allgather (mirror of halving): windows double back.
+/// Precondition: rank `r` holds finished block `r`. Power-of-two `p`.
+pub fn recursive_doubling_ag_schedule(p: usize) -> Schedule {
+    assert!(p.is_power_of_two());
+    let mut sched = Schedule::new(p, "rec-doubling-ag");
+    if p == 1 {
+        return sched;
+    }
+    let q = p.ilog2() as usize;
+    for k in (0..q).rev() {
+        let bit = p >> (k + 1);
+        let mut round = Round::idle(p);
+        for (r, step) in round.steps.iter_mut().enumerate() {
+            let peer = r ^ bit;
+            let (start, len) = window(r, p, k + 1); // my kept window (complete)
+            let (pstart, _) = window(peer, p, k + 1);
+            *step = RankStep {
+                send: Some(Transfer { peer, blocks: BlockRange::new(start, len) }),
+                recv: Some(Recv {
+                    peer,
+                    blocks: BlockRange::new(pstart, len),
+                    action: RecvAction::Store,
+                }),
+            };
+        }
+        sched.rounds.push(round);
+    }
+    sched
+}
+
+/// Full-vector recursive doubling allreduce, with fold rounds for
+/// non-power-of-two `p`.
+pub fn recursive_doubling_allreduce_schedule(p: usize) -> Schedule {
+    let mut sched = Schedule::new(p, "rec-doubling-allreduce");
+    if p == 1 {
+        return sched;
+    }
+    let pow = pow2_floor(p);
+    sched.rounds.extend(fold_in_round(p));
+    let q = pow.ilog2() as usize;
+    for k in 0..q {
+        let bit = 1usize << k;
+        let mut round = Round::idle(p);
+        for r in 0..pow {
+            let peer = r ^ bit;
+            round.steps[r] = RankStep {
+                send: Some(Transfer { peer, blocks: BlockRange::new(0, p) }),
+                recv: Some(Recv {
+                    peer,
+                    blocks: BlockRange::new(0, p),
+                    action: RecvAction::Combine,
+                }),
+            };
+        }
+        sched.rounds.push(round);
+    }
+    sched.rounds.extend(fold_out_round(p));
+    sched
+}
+
+/// Rabenseifner allreduce [16]: fold + recursive-halving reduce-scatter +
+/// recursive-doubling allgather + copy-back. Optimal volume on powers of
+/// two; the fold rounds cost an extra `(β+γ)m` and `βm` otherwise.
+pub fn rabenseifner_allreduce_schedule(p: usize) -> Schedule {
+    let mut sched = Schedule::new(p, "rabenseifner-allreduce");
+    if p == 1 {
+        return sched;
+    }
+    let pow = pow2_floor(p);
+    sched.rounds.extend(fold_in_round(p));
+    // Halving RS + doubling AG among the active pow ranks; block space is
+    // the full p blocks, windowed by *group*: group g of the pow groups
+    // covers blocks [g·p/pow…] — but p need not divide; instead run the
+    // butterfly over pow *block groups* defined by splitting the p blocks
+    // as evenly as possible. We express windows directly in block ids.
+    let q = pow.ilog2() as usize;
+    let group_start = |g: usize| -> usize { g * p / pow };
+    for k in 0..q {
+        let bit = pow >> (k + 1);
+        let mut round = Round::idle(p);
+        for r in 0..pow {
+            let peer = r ^ bit;
+            let (gstart, glen) = window(r, pow, k);
+            let half = glen / 2;
+            let keep_upper = r & bit != 0;
+            let (sg, rg) = if keep_upper { (gstart, gstart + half) } else { (gstart + half, gstart) };
+            let send_blocks =
+                BlockRange::new(group_start(sg), group_start(sg + half) - group_start(sg));
+            let recv_blocks =
+                BlockRange::new(group_start(rg), group_start(rg + half) - group_start(rg));
+            round.steps[r] = RankStep {
+                send: Some(Transfer { peer, blocks: send_blocks }),
+                recv: Some(Recv { peer, blocks: recv_blocks, action: RecvAction::Combine }),
+            };
+        }
+        sched.rounds.push(round);
+    }
+    for k in (0..q).rev() {
+        let bit = pow >> (k + 1);
+        let mut round = Round::idle(p);
+        for r in 0..pow {
+            let peer = r ^ bit;
+            let (gstart, glen) = window(r, pow, k + 1);
+            let (pgstart, _) = window(peer, pow, k + 1);
+            let send_blocks =
+                BlockRange::new(group_start(gstart), group_start(gstart + glen) - group_start(gstart));
+            let recv_blocks = BlockRange::new(
+                group_start(pgstart),
+                group_start(pgstart + glen) - group_start(pgstart),
+            );
+            round.steps[r] = RankStep {
+                send: Some(Transfer { peer, blocks: send_blocks }),
+                recv: Some(Recv { peer, blocks: recv_blocks, action: RecvAction::Store }),
+            };
+        }
+        sched.rounds.push(round);
+    }
+    sched.rounds.extend(fold_out_round(p));
+    sched
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::exec::run_schedule_threads;
+    use crate::datatypes::BlockPartition;
+    use crate::ops::SumOp;
+    use crate::util::rng::SplitMix64;
+    use std::sync::Arc;
+
+    fn oracle_sum(inputs: &[Vec<f32>]) -> Vec<f32> {
+        let mut acc = vec![0.0f32; inputs[0].len()];
+        for v in inputs {
+            for (a, b) in acc.iter_mut().zip(v) {
+                *a += b;
+            }
+        }
+        acc
+    }
+
+    fn int_inputs(p: usize, m: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = SplitMix64::new(seed);
+        (0..p).map(|_| rng.int_valued_vec(m, -5, 6)).collect()
+    }
+
+    #[test]
+    fn windows_partition_block_space() {
+        for q in 1..=5usize {
+            let pow = 1 << q;
+            for rounds in 0..=q {
+                let mut seen = vec![0usize; pow];
+                for r in 0..pow {
+                    let (s, l) = window(r, pow, rounds);
+                    for b in s..s + l {
+                        seen[b] += 1;
+                    }
+                }
+                // Each block covered by exactly pow/2^rounds ranks.
+                assert!(seen.iter().all(|&c| c == pow >> rounds), "q={q} rounds={rounds}");
+            }
+        }
+    }
+
+    #[test]
+    fn halving_rs_correct_pow2() {
+        for p in [2usize, 4, 8, 16] {
+            let part = BlockPartition::regular(p, 3 * p);
+            let inputs = int_inputs(p, part.total(), p as u64);
+            let want = oracle_sum(&inputs);
+            let sched = recursive_halving_rs_schedule(p);
+            sched.assert_valid();
+            assert_eq!(sched.num_rounds(), p.ilog2() as usize);
+            let out = run_schedule_threads(&sched, &part, Arc::new(SumOp), inputs);
+            for (r, buf) in out.iter().enumerate() {
+                let range = part.range(r);
+                assert_eq!(&buf[range.clone()], &want[range], "p={p} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn doubling_allreduce_correct_any_p() {
+        for p in [2usize, 3, 4, 6, 8, 11] {
+            let part = BlockPartition::regular(p, 2 * p + 1);
+            let inputs = int_inputs(p, part.total(), 7 + p as u64);
+            let want = oracle_sum(&inputs);
+            let sched = recursive_doubling_allreduce_schedule(p);
+            sched.assert_valid();
+            let out = run_schedule_threads(&sched, &part, Arc::new(SumOp), inputs);
+            for (r, buf) in out.iter().enumerate() {
+                assert_eq!(buf, &want, "p={p} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn rabenseifner_correct_any_p() {
+        for p in [2usize, 4, 5, 8, 12, 16] {
+            let part = BlockPartition::regular(p, 4 * p);
+            let inputs = int_inputs(p, part.total(), 31 + p as u64);
+            let want = oracle_sum(&inputs);
+            let sched = rabenseifner_allreduce_schedule(p);
+            sched.assert_valid();
+            let out = run_schedule_threads(&sched, &part, Arc::new(SumOp), inputs);
+            for (r, buf) in out.iter().enumerate() {
+                assert_eq!(buf, &want, "p={p} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn halving_then_doubling_matches_alg2_volume_pow2() {
+        // On powers of two the baseline achieves the same optimal counters
+        // Theorem 2 states — the paper's point is achieving them for ALL p.
+        let p = 16;
+        let part = BlockPartition::uniform(p, 4);
+        let mut sched = recursive_halving_rs_schedule(p);
+        sched.rounds.extend(recursive_doubling_ag_schedule(p).rounds);
+        for c in sched.counters(&part) {
+            assert_eq!(c.blocks_sent, 2 * (p - 1));
+            assert_eq!(c.blocks_combined, p - 1);
+        }
+    }
+}

@@ -1,0 +1,145 @@
+//! Ring (bucket) algorithms — the classic bandwidth-optimal baselines with
+//! a *linear* number of rounds ([10, 15] in the paper; §1's "well-known
+//! algorithms assuming either a ring or a fully connected network").
+//!
+//! Reduce-scatter: `p−1` rounds; in round `k` rank `r` forwards the partial
+//! of global block `(r−1−k) mod p` to `r+1` and folds the incoming partial
+//! of block `(r−2−k) mod p`; block `g` travels `g+1 → g+2 → … → g`,
+//! accumulating every rank's contribution.
+
+use crate::schedule::{BlockRange, RankStep, Recv, RecvAction, Round, Schedule, Transfer};
+
+/// Ring reduce-scatter: `p−1` rounds, one block per message.
+pub fn ring_reduce_scatter_schedule(p: usize) -> Schedule {
+    let mut sched = Schedule::new(p, "ring-rs");
+    if p == 1 {
+        return sched;
+    }
+    for k in 0..p - 1 {
+        let mut round = Round::idle(p);
+        for (r, step) in round.steps.iter_mut().enumerate() {
+            let to = (r + 1) % p;
+            let from = (r + p - 1) % p;
+            let send_block = (r + p - 1 - k % p + p) % p;
+            let recv_block = (r + 2 * p - 2 - k % p) % p;
+            *step = RankStep {
+                send: Some(Transfer { peer: to, blocks: BlockRange::new(send_block, 1) }),
+                recv: Some(Recv {
+                    peer: from,
+                    blocks: BlockRange::new(recv_block, 1),
+                    action: RecvAction::Combine,
+                }),
+            };
+        }
+        sched.rounds.push(round);
+    }
+    sched
+}
+
+/// Ring allgather: `p−1` rounds, one finished block per message.
+/// Precondition: rank `r` holds finished block `r`.
+pub fn ring_allgather_schedule(p: usize) -> Schedule {
+    let mut sched = Schedule::new(p, "ring-ag");
+    if p == 1 {
+        return sched;
+    }
+    for k in 0..p - 1 {
+        let mut round = Round::idle(p);
+        for (r, step) in round.steps.iter_mut().enumerate() {
+            let to = (r + 1) % p;
+            let from = (r + p - 1) % p;
+            let send_block = (r + p - k % p) % p;
+            let recv_block = (r + 2 * p - 1 - k % p) % p;
+            *step = RankStep {
+                send: Some(Transfer { peer: to, blocks: BlockRange::new(send_block, 1) }),
+                recv: Some(Recv {
+                    peer: from,
+                    blocks: BlockRange::new(recv_block, 1),
+                    action: RecvAction::Store,
+                }),
+            };
+        }
+        sched.rounds.push(round);
+    }
+    sched
+}
+
+/// Ring allreduce [15]: ring reduce-scatter + ring allgather;
+/// `2(p−1)` rounds, volume-optimal, heavily latency-bound for large `p`.
+pub fn ring_allreduce_schedule(p: usize) -> Schedule {
+    let mut rs = ring_reduce_scatter_schedule(p);
+    rs.name = "ring-allreduce".into();
+    rs.rounds.extend(ring_allgather_schedule(p).rounds);
+    rs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::exec::run_schedule_threads;
+    use crate::datatypes::BlockPartition;
+    use crate::ops::SumOp;
+    use crate::util::rng::SplitMix64;
+    use std::sync::Arc;
+
+    fn oracle_sum(inputs: &[Vec<f32>]) -> Vec<f32> {
+        let mut acc = vec![0.0f32; inputs[0].len()];
+        for v in inputs {
+            for (a, b) in acc.iter_mut().zip(v) {
+                *a += b;
+            }
+        }
+        acc
+    }
+
+    #[test]
+    fn ring_rs_valid_and_counts() {
+        for p in 2..=32usize {
+            let s = ring_reduce_scatter_schedule(p);
+            s.assert_valid();
+            assert_eq!(s.num_rounds(), p - 1);
+            let part = BlockPartition::uniform(p, 2);
+            for c in s.counters(&part) {
+                assert_eq!(c.blocks_sent, p - 1); // volume optimal too
+                assert_eq!(c.blocks_combined, p - 1);
+            }
+        }
+    }
+
+    #[test]
+    fn ring_rs_correct() {
+        for p in [2usize, 3, 6, 13] {
+            let part = BlockPartition::regular(p, 2 * p + 1);
+            let mut rng = SplitMix64::new(p as u64);
+            let inputs: Vec<Vec<f32>> =
+                (0..p).map(|_| rng.int_valued_vec(part.total(), -5, 6)).collect();
+            let want = oracle_sum(&inputs);
+            let out = run_schedule_threads(
+                &ring_reduce_scatter_schedule(p),
+                &part,
+                Arc::new(SumOp),
+                inputs,
+            );
+            for (r, buf) in out.iter().enumerate() {
+                let range = part.range(r);
+                assert_eq!(&buf[range.clone()], &want[range], "p={p} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn ring_allreduce_correct() {
+        for p in [2usize, 5, 9] {
+            let part = BlockPartition::regular(p, 3 * p);
+            let mut rng = SplitMix64::new(40 + p as u64);
+            let inputs: Vec<Vec<f32>> =
+                (0..p).map(|_| rng.int_valued_vec(part.total(), -5, 6)).collect();
+            let want = oracle_sum(&inputs);
+            let out =
+                run_schedule_threads(&ring_allreduce_schedule(p), &part, Arc::new(SumOp), inputs);
+            for buf in out {
+                assert_eq!(buf, want, "p={p}");
+            }
+        }
+    }
+}

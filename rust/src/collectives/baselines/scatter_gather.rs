@@ -1,0 +1,186 @@
+//! Rooted scatter and gather (binomial block-tree specializations).
+//!
+//! §4 of the paper notes that "algorithms for the rooted, regular scatter
+//! and gather problems can easily be derived" from the circulant schedules
+//! by specialization. The classic derivation is the binomial block tree:
+//! in round `k` (descending), a rank holding a contiguous run of blocks
+//! forwards the half of its run belonging to its subtree partner — so
+//! every block travels `≤ ⌈log2 p⌉` hops and each rank sends/receives only
+//! the blocks it is responsible for (total volume `(p−1)/p·m` at the root,
+//! optimal).
+//!
+//! These schedules complete the MPI collective family of §4:
+//! MPI_Scatter = [`binomial_scatter_schedule`],
+//! MPI_Gather = [`binomial_gather_schedule`] (the exact mirror).
+
+use crate::schedule::{BlockRange, RankStep, Recv, RecvAction, Round, Schedule, Transfer};
+use crate::util::ceil_log2;
+
+/// The contiguous run of (root-relative) blocks rank `rel` is responsible
+/// for once it has been reached, at subtree width `width`:
+/// `[rel, rel + min(width, p − rel))`.
+fn subtree_run(rel: usize, width: usize, p: usize) -> (usize, usize) {
+    (rel, width.min(p - rel))
+}
+
+/// Scatter from `root`: block `g` of root's vector ends at rank `g`
+/// (sizes per the partition used at execution). `⌈log2 p⌉` rounds.
+pub fn binomial_scatter_schedule(p: usize, root: usize) -> Schedule {
+    assert!(root < p);
+    let mut sched = Schedule::new(p, format!("binomial-scatter(root={root})"));
+    if p == 1 {
+        return sched;
+    }
+    let q = ceil_log2(p) as usize;
+    for k in (0..q).rev() {
+        let bit = 1usize << k;
+        let mut round = Round::idle(p);
+        for rel in 0..p {
+            // sender: already reached (lower bits of rel are 0) and has a
+            // partner rel+bit within range
+            if rel & (bit - 1) == 0 && rel & bit == 0 && rel + bit < p {
+                let child_rel = rel + bit;
+                let (start, len) = subtree_run(child_rel, bit, p);
+                let r = (rel + root) % p;
+                let child = (child_rel + root) % p;
+                // global block ids are root-relative too: block for rank x
+                // is global block x, and x = (rel + root) mod p ⇒ the run
+                // wraps as a circular range starting at (start + root).
+                let blocks = BlockRange::new((start + root) % p, len);
+                round.steps[r] = RankStep {
+                    send: Some(Transfer { peer: child, blocks }),
+                    recv: None,
+                };
+                round.steps[child] = RankStep {
+                    send: None,
+                    recv: Some(Recv { peer: r, blocks, action: RecvAction::Store }),
+                };
+            }
+        }
+        sched.rounds.push(round);
+    }
+    sched
+}
+
+/// Gather to `root`: the exact mirror of the scatter (blocks flow up the
+/// binomial tree, each rank forwarding its collected run).
+pub fn binomial_gather_schedule(p: usize, root: usize) -> Schedule {
+    assert!(root < p);
+    let mut sched = Schedule::new(p, format!("binomial-gather(root={root})"));
+    if p == 1 {
+        return sched;
+    }
+    let q = ceil_log2(p) as usize;
+    for k in 0..q {
+        let bit = 1usize << k;
+        let mut round = Round::idle(p);
+        for rel in 0..p {
+            if rel & (bit - 1) == 0 && rel & bit == 0 && rel + bit < p {
+                let child_rel = rel + bit;
+                let (start, len) = subtree_run(child_rel, bit, p);
+                let r = (rel + root) % p;
+                let child = (child_rel + root) % p;
+                let blocks = BlockRange::new((start + root) % p, len);
+                round.steps[child] = RankStep {
+                    send: Some(Transfer { peer: r, blocks }),
+                    recv: None,
+                };
+                round.steps[r] = RankStep {
+                    send: None,
+                    recv: Some(Recv { peer: child, blocks, action: RecvAction::Store }),
+                };
+            }
+        }
+        sched.rounds.push(round);
+    }
+    sched
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::exec::run_schedule_threads;
+    use crate::datatypes::BlockPartition;
+    use crate::ops::SumOp;
+    use std::sync::Arc;
+
+    #[test]
+    fn scatter_delivers_each_block_to_its_rank() {
+        for p in [2usize, 3, 5, 8, 13, 22] {
+            for root in [0, p / 2, p - 1] {
+                let b = 3;
+                let part = BlockPartition::uniform(p, b);
+                let sched = binomial_scatter_schedule(p, root);
+                sched.assert_valid();
+                assert!(sched.num_rounds() as u32 == ceil_log2(p));
+                // only root has real data; others start zeroed
+                let inputs: Vec<Vec<f32>> = (0..p)
+                    .map(|r| {
+                        if r == root {
+                            (0..part.total()).map(|j| j as f32 + 1.0).collect()
+                        } else {
+                            vec![0.0; part.total()]
+                        }
+                    })
+                    .collect();
+                let out = run_schedule_threads(&sched, &part, Arc::new(SumOp), inputs);
+                for (r, buf) in out.iter().enumerate() {
+                    for (i, j) in part.range(r).enumerate() {
+                        assert_eq!(
+                            buf[part.range(r).start + i],
+                            j as f32 + 1.0,
+                            "p={p} root={root} rank {r}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gather_collects_all_blocks_at_root() {
+        for p in [2usize, 4, 7, 16, 22] {
+            let root = 1 % p;
+            let b = 2;
+            let part = BlockPartition::uniform(p, b);
+            let sched = binomial_gather_schedule(p, root);
+            sched.assert_valid();
+            let inputs: Vec<Vec<f32>> = (0..p)
+                .map(|r| {
+                    let mut v = vec![0.0f32; part.total()];
+                    for (i, x) in v[part.range(r)].iter_mut().enumerate() {
+                        *x = (r * 10 + i) as f32;
+                    }
+                    v
+                })
+                .collect();
+            let out = run_schedule_threads(&sched, &part, Arc::new(SumOp), inputs);
+            for g in 0..p {
+                for i in 0..b {
+                    assert_eq!(out[root][part.range(g).start + i], (g * 10 + i) as f32, "p={p} g={g}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scatter_volume_is_optimal_at_root() {
+        // Root sends each non-root block exactly once: (p−1)·b elements.
+        let p = 16;
+        let b = 5;
+        let part = BlockPartition::uniform(p, b);
+        let c = binomial_scatter_schedule(p, 0).counters(&part);
+        assert_eq!(c[0].elems_sent, (p - 1) * b);
+        // and a leaf receives exactly its own block
+        assert_eq!(c[p - 1].elems_recv, b);
+    }
+
+    #[test]
+    fn gather_mirrors_scatter_rounds() {
+        for p in [2usize, 9, 22] {
+            let s = binomial_scatter_schedule(p, 0);
+            let g = binomial_gather_schedule(p, 0);
+            assert_eq!(s.num_rounds(), g.num_rounds());
+        }
+    }
+}

@@ -1,0 +1,123 @@
+//! Collectives derived by specialization (paper §4 / Corollary 3).
+//!
+//! * **Reduce to root** — Algorithm 1 on the degenerate single-block
+//!   partition (all `m` elements in block `root`): the reduction arrives
+//!   at `root` in `⌈log2 p⌉` rounds, cost `≤ ⌈log2 p⌉(α+βm+γm)`
+//!   (Corollary 3), attractive for small `m`.
+//! * **Broadcast** — the mirrored allgather on the same degenerate
+//!   partition: only the messages covering block `root` carry data.
+//! * **Gather / Scatter** — single-block specializations of allgather and
+//!   of a root-rooted all-to-all row.
+//!
+//! These return ordinary [`Schedule`]s; empty blocks simply produce empty
+//! payloads, and the schedule structure (peers, rounds) is unchanged —
+//! which is exactly the paper's "by specialization" observation.
+
+use crate::datatypes::BlockPartition;
+use crate::schedule::Schedule;
+use crate::topology::skips::SkipScheme;
+
+use super::generators::{allgather_schedule, reduce_scatter_schedule};
+
+/// Reduce-to-root schedule + the partition that makes Algorithm 1 deliver
+/// the whole `m`-element result at `root`.
+pub fn reduce_schedule(p: usize, m: usize, root: usize, scheme: &SkipScheme) -> (Schedule, BlockPartition) {
+    let skips = scheme.skips(p).expect("valid scheme");
+    let mut sched = reduce_scatter_schedule(p, &skips);
+    sched.name = format!("circulant-reduce(root={root})");
+    (sched, BlockPartition::single_block(p, m, root))
+}
+
+/// Broadcast-from-root schedule + partition (mirrored allgather on the
+/// degenerate partition). Precondition: `root`'s buffer block holds the
+/// payload.
+pub fn bcast_schedule(p: usize, m: usize, root: usize, scheme: &SkipScheme) -> (Schedule, BlockPartition) {
+    let skips = scheme.skips(p).expect("valid scheme");
+    let mut sched = allgather_schedule(p, &skips);
+    sched.name = format!("circulant-bcast(root={root})");
+    (sched, BlockPartition::single_block(p, m, root))
+}
+
+/// Gather-to-root: the circulant allgather restricted by a partition where
+/// every rank owns a real block; `root` simply keeps the result (other
+/// ranks' gathered copies are a by-product of the uniform schedule — the
+/// specialization trades no extra rounds for simplicity).
+pub fn gather_schedule(p: usize, part: &BlockPartition, root: usize, scheme: &SkipScheme) -> Schedule {
+    let _ = root;
+    let skips = scheme.skips(p).expect("valid scheme");
+    let mut sched = allgather_schedule(p, &skips);
+    sched.name = format!("circulant-gather(root={root})");
+    assert_eq!(part.p(), p);
+    sched
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::exec::run_schedule_threads;
+    use crate::ops::SumOp;
+    use crate::util::ceil_log2;
+    use crate::util::rng::SplitMix64;
+    use std::sync::Arc;
+
+    #[test]
+    fn reduce_to_root_delivers_full_vector() {
+        for p in [2usize, 5, 8, 22] {
+            for root in [0, p - 1] {
+                let m = 33;
+                let (sched, part) = reduce_schedule(p, m, root, &SkipScheme::HalvingUp);
+                sched.assert_valid();
+                assert_eq!(sched.num_rounds() as u32, ceil_log2(p));
+                let mut rng = SplitMix64::new((p + root) as u64);
+                let inputs: Vec<Vec<f32>> =
+                    (0..p).map(|_| rng.int_valued_vec(m, -4, 5)).collect();
+                let mut want = vec![0.0f32; m];
+                for v in &inputs {
+                    for (a, b) in want.iter_mut().zip(v) {
+                        *a += b;
+                    }
+                }
+                let out = run_schedule_threads(&sched, &part, Arc::new(SumOp), inputs);
+                assert_eq!(&out[root][part.range(root)], &want[..], "p={p} root={root}");
+            }
+        }
+    }
+
+    #[test]
+    fn bcast_reaches_everyone() {
+        for p in [2usize, 6, 22] {
+            let m = 17;
+            let root = p / 2;
+            let (sched, part) = bcast_schedule(p, m, root, &SkipScheme::HalvingUp);
+            sched.assert_valid();
+            let inputs: Vec<Vec<f32>> = (0..p)
+                .map(|r| {
+                    if r == root {
+                        (0..m).map(|j| j as f32 + 1.0).collect()
+                    } else {
+                        vec![0.0; m]
+                    }
+                })
+                .collect();
+            let want: Vec<f32> = (0..m).map(|j| j as f32 + 1.0).collect();
+            let out = run_schedule_threads(&sched, &part, Arc::new(SumOp), inputs);
+            for (r, buf) in out.iter().enumerate() {
+                assert_eq!(buf, &want, "p={p} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_cost_matches_corollary3_bound() {
+        use crate::sim::{closed_form, simulate, CostModel};
+        let (p, m) = (22, 1000);
+        let (sched, part) = reduce_schedule(p, m, 3, &SkipScheme::HalvingUp);
+        let c = CostModel::new(1.0, 0.01, 0.001);
+        let sim = simulate(&sched, &part, &c);
+        let bound = closed_form::corollary3_bound(&c, p, m);
+        assert!(sim.total <= bound + 1e-9, "sim {} > bound {}", sim.total, bound);
+        // and it is genuinely latency-efficient: far below the ring's cost
+        let ring = (p - 1) as f64 * (c.alpha + (c.beta + c.gamma) * m as f64);
+        assert!(sim.total < ring);
+    }
+}

@@ -1,0 +1,197 @@
+//! Schedule generators for the paper's algorithms.
+//!
+//! [`reduce_scatter_schedule`] is Algorithm 1 (generalized to any valid
+//! skip sequence per Corollary 2), [`allgather_schedule`] is the mirrored
+//! allgather of Algorithm 2's second phase (the skip stack run in reverse),
+//! and [`allreduce_schedule`] is their concatenation (Algorithm 2).
+//!
+//! All ranges are **global block ids** (see `crate::schedule`): in round
+//! `k` with skip `σ_k` (and `σ_{k−1}` the previous skip, `σ_0 = p`), rank
+//! `r` sends the blocks `(r+σ_k … r+σ_{k−1})` — its partials `R[σ_k …
+//! σ_{k−1})` — to `(r+σ_k) mod p`, and folds the same-id blocks received
+//! from `(r−σ_k) mod p` into its own partials.
+
+use crate::schedule::{BlockRange, RankStep, Recv, RecvAction, Round, Schedule, Transfer};
+use crate::topology::skips::validate;
+
+/// Algorithm 1: the `⌈log2 p⌉`-round (for halving-up skips) reduce-scatter
+/// (partitioned all-reduce) schedule.
+pub fn reduce_scatter_schedule(p: usize, skips: &[usize]) -> Schedule {
+    validate(p, skips).expect("invalid skip sequence");
+    let mut sched = Schedule::new(p, format!("circulant-rs[{skips:?}]"));
+    if p == 1 {
+        return sched;
+    }
+    let mut prev = p;
+    for &s in skips {
+        let len = prev - s;
+        let mut round = Round::idle(p);
+        for (r, step) in round.steps.iter_mut().enumerate() {
+            let to = (r + s) % p;
+            let from = (r + p - s) % p;
+            *step = RankStep {
+                send: Some(Transfer { peer: to, blocks: BlockRange::new(to, len) }),
+                recv: Some(Recv {
+                    peer: from,
+                    blocks: BlockRange::new(r, len),
+                    action: RecvAction::Combine,
+                }),
+            };
+        }
+        sched.rounds.push(round);
+        prev = s;
+    }
+    sched
+}
+
+/// Algorithm 2, phase 2: allgather along the same circulant graph with the
+/// skip sequence replayed in reverse (the paper's stack), `Store` actions.
+/// Precondition: rank `r` holds finished block `r` (e.g. after
+/// [`reduce_scatter_schedule`]).
+pub fn allgather_schedule(p: usize, skips: &[usize]) -> Schedule {
+    validate(p, skips).expect("invalid skip sequence");
+    let mut sched = Schedule::new(p, format!("circulant-ag[{skips:?}]"));
+    if p == 1 {
+        return sched;
+    }
+    for k in (0..skips.len()).rev() {
+        let s = skips[k];
+        let prev = if k == 0 { p } else { skips[k - 1] };
+        let len = prev - s;
+        let mut round = Round::idle(p);
+        for (r, step) in round.steps.iter_mut().enumerate() {
+            let to = (r + p - s) % p; // send *backwards* along the circulant
+            let from = (r + s) % p;
+            *step = RankStep {
+                send: Some(Transfer { peer: to, blocks: BlockRange::new(r, len) }),
+                recv: Some(Recv {
+                    peer: from,
+                    blocks: BlockRange::new(from, len),
+                    action: RecvAction::Store,
+                }),
+            };
+        }
+        sched.rounds.push(round);
+    }
+    sched
+}
+
+/// Algorithm 2: allreduce = reduce-scatter followed by the mirrored
+/// allgather. `2·len(skips)` rounds; with halving-up skips that is
+/// `2⌈log2 p⌉`, with `2(p−1)` blocks sent/received and `p−1` ⊕-applications
+/// per processor (Theorem 2).
+pub fn allreduce_schedule(p: usize, skips: &[usize]) -> Schedule {
+    let mut rs = reduce_scatter_schedule(p, skips);
+    let ag = allgather_schedule(p, skips);
+    rs.name = format!("circulant-allreduce[{skips:?}]");
+    rs.rounds.extend(ag.rounds);
+    rs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datatypes::BlockPartition;
+    use crate::topology::skips::SkipScheme;
+    use crate::util::ceil_log2;
+
+    fn halving(p: usize) -> Vec<usize> {
+        SkipScheme::HalvingUp.skips(p).unwrap()
+    }
+
+    #[test]
+    fn theorem1_counters_exact() {
+        // ⌈log2 p⌉ rounds; exactly p−1 blocks sent, received and combined
+        // per processor — for every p.
+        for p in 2..=128usize {
+            let sched = reduce_scatter_schedule(p, &halving(p));
+            sched.assert_valid();
+            assert_eq!(sched.num_rounds() as u32, ceil_log2(p), "p={p}");
+            let part = BlockPartition::uniform(p, 3);
+            for (r, c) in sched.counters(&part).iter().enumerate() {
+                assert_eq!(c.blocks_sent, p - 1, "p={p} r={r}");
+                assert_eq!(c.blocks_recv, p - 1, "p={p} r={r}");
+                assert_eq!(c.blocks_combined, p - 1, "p={p} r={r}");
+                assert_eq!(c.elems_sent, (p - 1) * 3);
+                assert_eq!(c.active_rounds as u32, ceil_log2(p));
+            }
+        }
+    }
+
+    #[test]
+    fn theorem2_counters_exact() {
+        // 2⌈log2 p⌉ rounds; 2(p−1) blocks sent/received; p−1 combines.
+        for p in 2..=128usize {
+            let sched = allreduce_schedule(p, &halving(p));
+            sched.assert_valid();
+            assert_eq!(sched.num_rounds() as u32, 2 * ceil_log2(p), "p={p}");
+            let part = BlockPartition::uniform(p, 2);
+            for c in sched.counters(&part) {
+                assert_eq!(c.blocks_sent, 2 * (p - 1));
+                assert_eq!(c.blocks_recv, 2 * (p - 1));
+                assert_eq!(c.blocks_combined, p - 1);
+            }
+        }
+    }
+
+    #[test]
+    fn corollary2_other_schemes_valid_and_volume_optimal() {
+        for p in [7usize, 22, 100, 257] {
+            for scheme in [SkipScheme::PowerOfTwo, SkipScheme::Sqrt, SkipScheme::FullyConnected] {
+                let skips = scheme.skips(p).unwrap();
+                let sched = reduce_scatter_schedule(p, &skips);
+                sched.assert_valid();
+                assert_eq!(sched.num_rounds(), skips.len());
+                let part = BlockPartition::uniform(p, 1);
+                for c in sched.counters(&part) {
+                    // Volume optimality holds for *any* valid skip sequence.
+                    assert_eq!(c.blocks_sent, p - 1, "{} p={p}", scheme.name());
+                    assert_eq!(c.blocks_combined, p - 1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn p22_round1_send_is_11_blocks_at_distance_11() {
+        let sched = reduce_scatter_schedule(22, &halving(22));
+        let step = &sched.rounds[0].steps[21];
+        let send = step.send.unwrap();
+        assert_eq!(send.peer, (21 + 11) % 22); // to-processor 10
+        assert_eq!(send.blocks.len, 11);
+        let recv = step.recv.unwrap();
+        assert_eq!(recv.peer, 10); // from-processor 21−11 = 10
+        assert_eq!(recv.blocks, BlockRange::new(21, 11));
+    }
+
+    #[test]
+    fn halving_up_message_runs_at_most_half() {
+        // §3: no sequence of blocks longer than ⌈p/2⌉ with halving-up.
+        for p in 2..=256usize {
+            let sched = allreduce_schedule(p, &halving(p));
+            assert!(sched.max_message_blocks() <= p.div_ceil(2), "p={p}");
+        }
+    }
+
+    #[test]
+    fn allgather_is_exact_mirror() {
+        let p = 22;
+        let rs = reduce_scatter_schedule(p, &halving(p));
+        let ag = allgather_schedule(p, &halving(p));
+        assert_eq!(rs.num_rounds(), ag.num_rounds());
+        // Rounds mirror: AG round j has the lengths of RS round q−1−j and
+        // inverted direction.
+        for j in 0..ag.num_rounds() {
+            let rsr = &rs.rounds[ag.num_rounds() - 1 - j].steps[0];
+            let agr = &ag.rounds[j].steps[0];
+            assert_eq!(rsr.send.unwrap().blocks.len, agr.send.unwrap().blocks.len);
+            assert_eq!(rsr.send.unwrap().peer, agr.recv.unwrap().peer);
+        }
+    }
+
+    #[test]
+    fn p1_empty_schedules() {
+        assert_eq!(reduce_scatter_schedule(1, &[]).num_rounds(), 0);
+        assert_eq!(allreduce_schedule(1, &[]).num_rounds(), 0);
+    }
+}

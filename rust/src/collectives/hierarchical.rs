@@ -1,0 +1,223 @@
+//! Hierarchical (two-level) allreduce — the §3 extension.
+//!
+//! The paper's §3 warns that "the doubling and halving schemes lead to
+//! latency contention and communication redundancy when run as written on
+//! clustered, hierarchical systems with constrained per node bandwidth
+//! [21]". The standard remedy (Träff & Hunold [21]) is decomposition:
+//!
+//!   1. intra-node reduce to a node leader (binomial tree, node-local
+//!      edges only),
+//!   2. the paper's circulant allreduce (Algorithm 2) among the `L`
+//!      leaders, over the vector split into `L` block groups,
+//!   3. intra-node broadcast from the leader.
+//!
+//! Every phase is expressible in the shared schedule IR, so the same
+//! executor, simulator and property tests apply. The companion two-level
+//! cost model lives in `sim::hier`; the ablation bench is
+//! `rust/benches/t6_hierarchical.rs`.
+
+use crate::schedule::{BlockRange, RankStep, Recv, RecvAction, Round, Schedule, Transfer};
+use crate::topology::skips::SkipScheme;
+use crate::util::ceil_log2;
+
+/// Two-level allreduce schedule for `p` ranks in nodes of `node_size`
+/// consecutive ranks (the last node may be smaller). Leaders are the first
+/// rank of each node.
+pub fn hierarchical_allreduce_schedule(
+    p: usize,
+    node_size: usize,
+    scheme: &SkipScheme,
+) -> Schedule {
+    assert!(node_size >= 1);
+    let mut sched = Schedule::new(p, format!("hier-allreduce(node={node_size},{})", scheme.name()));
+    if p == 1 {
+        return sched;
+    }
+    let node_of = |r: usize| r / node_size;
+    let leader_of = |r: usize| node_of(r) * node_size;
+    let num_nodes = p.div_ceil(node_size);
+    let node_len = |n: usize| (p - n * node_size).min(node_size);
+
+    // ---- phase 1: intra-node binomial reduce to the leader -------------
+    let max_node = (0..num_nodes).map(node_len).max().unwrap();
+    let q_intra = ceil_log2(max_node) as usize;
+    for k in 0..q_intra {
+        let bit = 1usize << k;
+        let mut round = Round::idle(p);
+        for r in 0..p {
+            let off = r - leader_of(r);
+            if off & ((bit << 1) - 1) == bit {
+                let parent = r - bit;
+                round.steps[r] = RankStep {
+                    send: Some(Transfer { peer: parent, blocks: BlockRange::new(0, p) }),
+                    recv: None,
+                };
+                round.steps[parent] = RankStep {
+                    send: None,
+                    recv: Some(Recv {
+                        peer: r,
+                        blocks: BlockRange::new(0, p),
+                        action: RecvAction::Combine,
+                    }),
+                };
+            }
+        }
+        sched.rounds.push(round);
+    }
+
+    // ---- phase 2: circulant Algorithm 2 among leaders ------------------
+    // The p-block space is grouped into `num_nodes` contiguous block
+    // groups; leader i plays rank i over groups (cf. Rabenseifner's
+    // grouping, but with the paper's uniform-in-L circulant schedule, so
+    // L need not be a power of two).
+    if num_nodes > 1 {
+        let skips = scheme.skips(num_nodes).expect("valid scheme for leader count");
+        let group_start = |g: usize| -> usize { (g % num_nodes) * p / num_nodes };
+        // A run of `len` consecutive groups starting at group `a` (mod L)
+        // covers a circular, contiguous run of global blocks: group g is
+        // blocks [g·p/L, (g+1)·p/L), and consecutive groups abut (wrapping
+        // at L back to block 0).
+        let group_range = |a: usize, len: usize| -> BlockRange {
+            let start = group_start(a);
+            let mut len_blocks = 0usize;
+            for j in 0..len {
+                let g = (a + j) % num_nodes;
+                len_blocks += (g + 1) * p / num_nodes - g * p / num_nodes;
+            }
+            BlockRange::new(start, len_blocks)
+        };
+        // reduce-scatter phase over groups
+        let mut prev = num_nodes;
+        for &s in &skips {
+            let len = prev - s;
+            let mut round = Round::idle(p);
+            for i in 0..num_nodes {
+                let r = i * node_size;
+                let to = ((i + s) % num_nodes) * node_size;
+                let from = ((i + num_nodes - s) % num_nodes) * node_size;
+                round.steps[r] = RankStep {
+                    send: Some(Transfer { peer: to, blocks: group_range((i + s) % num_nodes, len) }),
+                    recv: Some(Recv {
+                        peer: from,
+                        blocks: group_range(i, len),
+                        action: RecvAction::Combine,
+                    }),
+                };
+            }
+            sched.rounds.push(round);
+            prev = s;
+        }
+        // mirrored allgather phase
+        for k in (0..skips.len()).rev() {
+            let s = skips[k];
+            let prev = if k == 0 { num_nodes } else { skips[k - 1] };
+            let len = prev - s;
+            let mut round = Round::idle(p);
+            for i in 0..num_nodes {
+                let r = i * node_size;
+                let to = ((i + num_nodes - s) % num_nodes) * node_size;
+                let from = ((i + s) % num_nodes) * node_size;
+                round.steps[r] = RankStep {
+                    send: Some(Transfer { peer: to, blocks: group_range(i, len) }),
+                    recv: Some(Recv {
+                        peer: from,
+                        blocks: group_range((i + s) % num_nodes, len),
+                        action: RecvAction::Store,
+                    }),
+                };
+            }
+            sched.rounds.push(round);
+        }
+    }
+
+    // ---- phase 3: intra-node binomial broadcast from the leader --------
+    for k in (0..q_intra).rev() {
+        let bit = 1usize << k;
+        let mut round = Round::idle(p);
+        for r in 0..p {
+            let off = r - leader_of(r);
+            if off & ((bit << 1) - 1) == bit {
+                let parent = r - bit;
+                round.steps[parent] = RankStep {
+                    send: Some(Transfer { peer: r, blocks: BlockRange::new(0, p) }),
+                    recv: None,
+                };
+                round.steps[r] = RankStep {
+                    send: None,
+                    recv: Some(Recv {
+                        peer: parent,
+                        blocks: BlockRange::new(0, p),
+                        action: RecvAction::Store,
+                    }),
+                };
+            }
+        }
+        sched.rounds.push(round);
+    }
+    sched
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::exec::run_schedule_threads;
+    use crate::collectives::symbolic;
+    use crate::datatypes::BlockPartition;
+    use crate::ops::SumOp;
+    use crate::util::rng::SplitMix64;
+    use std::sync::Arc;
+
+    #[test]
+    fn hierarchical_allreduce_correct() {
+        for (p, node) in [(4usize, 2usize), (8, 4), (12, 3), (22, 4), (9, 4), (7, 3)] {
+            let sched = hierarchical_allreduce_schedule(p, node, &SkipScheme::HalvingUp);
+            sched.assert_valid();
+            symbolic::verify_allreduce(&sched)
+                .unwrap_or_else(|e| panic!("p={p} node={node}: {e}"));
+            let part = BlockPartition::regular(p, 3 * p + 1);
+            let mut rng = SplitMix64::new((p * node) as u64);
+            let inputs: Vec<Vec<f32>> =
+                (0..p).map(|_| rng.int_valued_vec(part.total(), -5, 6)).collect();
+            let mut want = vec![0.0f32; part.total()];
+            for v in &inputs {
+                for (a, x) in want.iter_mut().zip(v) {
+                    *a += x;
+                }
+            }
+            let out = run_schedule_threads(&sched, &part, Arc::new(SumOp), inputs);
+            for (r, buf) in out.iter().enumerate() {
+                assert_eq!(buf, &want, "p={p} node={node} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_shapes() {
+        // node_size = 1 → pure circulant Alg 2 (plus empty intra phases)
+        let flat = hierarchical_allreduce_schedule(8, 1, &SkipScheme::HalvingUp);
+        flat.assert_valid();
+        symbolic::verify_allreduce(&flat).unwrap();
+        // node_size ≥ p → pure reduce+bcast within one node
+        let one = hierarchical_allreduce_schedule(8, 8, &SkipScheme::HalvingUp);
+        one.assert_valid();
+        symbolic::verify_allreduce(&one).unwrap();
+    }
+
+    #[test]
+    fn inter_node_traffic_is_leaders_only() {
+        let p = 16;
+        let node = 4;
+        let sched = hierarchical_allreduce_schedule(p, node, &SkipScheme::HalvingUp);
+        for round in &sched.rounds {
+            for (r, step) in round.steps.iter().enumerate() {
+                if let Some(send) = &step.send {
+                    let cross = r / node != send.peer / node;
+                    if cross {
+                        assert_eq!(r % node, 0, "non-leader {r} sent across nodes");
+                        assert_eq!(send.peer % node, 0);
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,188 @@
+//! The collective algorithms: the paper's circulant-graph schedules plus
+//! every baseline, behind a single [`Algorithm`] selector.
+
+pub mod alltoall;
+pub mod baselines;
+pub mod derived;
+pub mod exec;
+pub mod generators;
+pub mod hierarchical;
+pub mod symbolic;
+
+pub use exec::{execute_rank, run_schedule_threads, CollectiveError};
+pub use generators::{allgather_schedule, allreduce_schedule, reduce_scatter_schedule};
+
+use crate::schedule::Schedule;
+use crate::topology::skips::SkipScheme;
+
+/// Every schedule-expressible algorithm in the library, for the CLI,
+/// benches and the simulator. (All-to-all is separate — `alltoall` — since
+/// its payloads grow per round.)
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Algorithm {
+    /// Algorithm 1 with a skip scheme (default: halving-up).
+    CirculantReduceScatter(SkipScheme),
+    /// Algorithm 2 (reduce-scatter + mirrored allgather).
+    CirculantAllreduce(SkipScheme),
+    /// The mirrored allgather alone.
+    CirculantAllgather(SkipScheme),
+    RingReduceScatter,
+    RingAllreduce,
+    RingAllgather,
+    /// Power-of-two only.
+    RecursiveHalvingReduceScatter,
+    RecursiveDoublingAllreduce,
+    RabenseifnerAllreduce,
+    BinomialReduce { root: usize },
+    BinomialBcast { root: usize },
+    BinomialAllreduce,
+    BruckAllgather,
+}
+
+impl Algorithm {
+    /// Parse a CLI/config name. Circulant variants accept an optional
+    /// `:scheme` suffix, e.g. `allreduce:pow2` or `reduce-scatter:sqrt`.
+    pub fn parse(s: &str) -> Option<Algorithm> {
+        let (head, scheme) = match s.split_once(':') {
+            Some((h, sch)) => (h, SkipScheme::parse(sch).ok()?),
+            None => (s, SkipScheme::HalvingUp),
+        };
+        Some(match head {
+            "reduce-scatter" | "rs" => Algorithm::CirculantReduceScatter(scheme),
+            "allreduce" | "ar" => Algorithm::CirculantAllreduce(scheme),
+            "allgather" | "ag" => Algorithm::CirculantAllgather(scheme),
+            "ring-rs" => Algorithm::RingReduceScatter,
+            "ring-allreduce" => Algorithm::RingAllreduce,
+            "ring-ag" => Algorithm::RingAllgather,
+            "rec-halving-rs" => Algorithm::RecursiveHalvingReduceScatter,
+            "rec-doubling-allreduce" => Algorithm::RecursiveDoublingAllreduce,
+            "rabenseifner" => Algorithm::RabenseifnerAllreduce,
+            "binomial-allreduce" => Algorithm::BinomialAllreduce,
+            "bruck-ag" => Algorithm::BruckAllgather,
+            _ => return None,
+        })
+    }
+
+    /// Short display name.
+    pub fn name(&self) -> String {
+        match self {
+            Algorithm::CirculantReduceScatter(s) => format!("circulant-rs({})", s.name()),
+            Algorithm::CirculantAllreduce(s) => format!("circulant-allreduce({})", s.name()),
+            Algorithm::CirculantAllgather(s) => format!("circulant-ag({})", s.name()),
+            Algorithm::RingReduceScatter => "ring-rs".into(),
+            Algorithm::RingAllreduce => "ring-allreduce".into(),
+            Algorithm::RingAllgather => "ring-ag".into(),
+            Algorithm::RecursiveHalvingReduceScatter => "rec-halving-rs".into(),
+            Algorithm::RecursiveDoublingAllreduce => "rec-doubling-allreduce".into(),
+            Algorithm::RabenseifnerAllreduce => "rabenseifner".into(),
+            Algorithm::BinomialReduce { root } => format!("binomial-reduce({root})"),
+            Algorithm::BinomialBcast { root } => format!("binomial-bcast({root})"),
+            Algorithm::BinomialAllreduce => "binomial-allreduce".into(),
+            Algorithm::BruckAllgather => "bruck-ag".into(),
+        }
+    }
+
+    /// Build the schedule for `p` ranks.
+    pub fn schedule(&self, p: usize) -> Schedule {
+        match self {
+            Algorithm::CirculantReduceScatter(s) => {
+                generators::reduce_scatter_schedule(p, &s.skips(p).expect("valid scheme"))
+            }
+            Algorithm::CirculantAllreduce(s) => {
+                generators::allreduce_schedule(p, &s.skips(p).expect("valid scheme"))
+            }
+            Algorithm::CirculantAllgather(s) => {
+                generators::allgather_schedule(p, &s.skips(p).expect("valid scheme"))
+            }
+            Algorithm::RingReduceScatter => baselines::ring_reduce_scatter_schedule(p),
+            Algorithm::RingAllreduce => baselines::ring_allreduce_schedule(p),
+            Algorithm::RingAllgather => baselines::ring_allgather_schedule(p),
+            Algorithm::RecursiveHalvingReduceScatter => {
+                baselines::recursive_halving_rs_schedule(p)
+            }
+            Algorithm::RecursiveDoublingAllreduce => {
+                baselines::recursive_doubling_allreduce_schedule(p)
+            }
+            Algorithm::RabenseifnerAllreduce => baselines::rabenseifner_allreduce_schedule(p),
+            Algorithm::BinomialReduce { root } => baselines::binomial_reduce_schedule(p, *root),
+            Algorithm::BinomialBcast { root } => baselines::binomial_bcast_schedule(p, *root),
+            Algorithm::BinomialAllreduce => baselines::binomial_allreduce_schedule(p),
+            Algorithm::BruckAllgather => baselines::bruck_allgather_schedule(p),
+        }
+    }
+
+    /// Does the result semantics cover the whole vector on every rank?
+    pub fn is_allreduce(&self) -> bool {
+        matches!(
+            self,
+            Algorithm::CirculantAllreduce(_)
+                | Algorithm::RingAllreduce
+                | Algorithm::RecursiveDoublingAllreduce
+                | Algorithm::RabenseifnerAllreduce
+                | Algorithm::BinomialAllreduce
+        )
+    }
+
+    /// Reduce-scatter semantics (block `r` finished at rank `r`)?
+    pub fn is_reduce_scatter(&self) -> bool {
+        matches!(
+            self,
+            Algorithm::CirculantReduceScatter(_)
+                | Algorithm::RingReduceScatter
+                | Algorithm::RecursiveHalvingReduceScatter
+        )
+    }
+
+    /// All allreduce algorithms, for comparison sweeps (F1/F2 benches).
+    pub fn allreduce_family() -> Vec<Algorithm> {
+        vec![
+            Algorithm::CirculantAllreduce(SkipScheme::HalvingUp),
+            Algorithm::RingAllreduce,
+            Algorithm::RecursiveDoublingAllreduce,
+            Algorithm::RabenseifnerAllreduce,
+            Algorithm::BinomialAllreduce,
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        assert_eq!(
+            Algorithm::parse("allreduce").unwrap(),
+            Algorithm::CirculantAllreduce(SkipScheme::HalvingUp)
+        );
+        assert_eq!(
+            Algorithm::parse("rs:pow2").unwrap(),
+            Algorithm::CirculantReduceScatter(SkipScheme::PowerOfTwo)
+        );
+        assert_eq!(Algorithm::parse("ring-allreduce").unwrap(), Algorithm::RingAllreduce);
+        assert!(Algorithm::parse("nope").is_none());
+        assert!(Algorithm::parse("rs:nope").is_none());
+    }
+
+    #[test]
+    fn all_schedules_structurally_valid() {
+        for p in [2usize, 3, 8, 22] {
+            for alg in [
+                Algorithm::CirculantReduceScatter(SkipScheme::HalvingUp),
+                Algorithm::CirculantAllreduce(SkipScheme::Sqrt),
+                Algorithm::CirculantAllgather(SkipScheme::PowerOfTwo),
+                Algorithm::RingReduceScatter,
+                Algorithm::RingAllreduce,
+                Algorithm::RecursiveDoublingAllreduce,
+                Algorithm::RabenseifnerAllreduce,
+                Algorithm::BinomialAllreduce,
+                Algorithm::BruckAllgather,
+            ] {
+                alg.schedule(p).assert_valid();
+            }
+            if p.is_power_of_two() {
+                Algorithm::RecursiveHalvingReduceScatter.schedule(p).assert_valid();
+            }
+        }
+    }
+}

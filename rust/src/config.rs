@@ -1,0 +1,258 @@
+//! Configuration system: a TOML-subset file format plus CLI overrides.
+//!
+//! serde/toml are unavailable offline, so this is a small hand-rolled
+//! parser covering the subset the launcher needs: `key = value` pairs,
+//! `[section]` headers (flattened to `section.key`), strings, integers,
+//! floats, booleans and comments. Values are stored as strings and
+//! converted by typed getters; CLI `--key value` flags override file
+//! entries (the usual launcher precedence).
+//!
+//! Example (`examples/ccoll.toml`):
+//! ```toml
+//! [run]
+//! p = 22
+//! m = 65536
+//! algorithm = "allreduce"   # circulant, halving-up skips
+//! op = "sum"
+//! backend = "native"        # or "pjrt"
+//!
+//! [cost]
+//! alpha = 1e-6
+//! beta = 4e-10
+//! gamma = 1e-9
+//! ```
+
+use std::collections::BTreeMap;
+
+use crate::collectives::Algorithm;
+use crate::sim::CostModel;
+
+/// Flat key→value configuration with layered overrides.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("config line {line}: {msg}")]
+    Parse { line: usize, msg: String },
+    #[error("cannot read {path}: {source}")]
+    Io { path: String, source: std::io::Error },
+    #[error("key {key}: cannot parse {value:?} as {ty}")]
+    Type { key: String, value: String, ty: &'static str },
+    #[error("key {key}: {msg}")]
+    Invalid { key: String, msg: String },
+}
+
+impl Config {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Parse TOML-subset text, flattening `[section]` to `section.` prefixes.
+    pub fn parse(text: &str) -> Result<Self, ConfigError> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            let line = match line.find('#') {
+                // strip comments, but not inside quoted strings
+                Some(i) if !line[..i].contains('"') || line[..i].matches('"').count() % 2 == 0 => {
+                    line[..i].trim_end()
+                }
+                _ => line,
+            };
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                section = format!("{}.", name.trim());
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| ConfigError::Parse {
+                line: ln + 1,
+                msg: format!("expected key = value, got {line:?}"),
+            })?;
+            let key = format!("{section}{}", k.trim());
+            let mut val = v.trim().to_string();
+            if val.len() >= 2 && val.starts_with('"') && val.ends_with('"') {
+                val = val[1..val.len() - 1].to_string();
+            }
+            values.insert(key, val);
+        }
+        Ok(Self { values })
+    }
+
+    /// Load from a file.
+    pub fn from_file(path: &str) -> Result<Self, ConfigError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|source| ConfigError::Io { path: path.to_string(), source })?;
+        Self::parse(&text)
+    }
+
+    /// Apply `--key value` / `--flag` style CLI overrides (dots allowed in
+    /// keys: `--cost.alpha 2e-6`). Returns leftover positional args.
+    pub fn apply_args(&mut self, args: &[String]) -> Result<Vec<String>, ConfigError> {
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            if let Some(key) = args[i].strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    self.values.insert(k.to_string(), v.to_string());
+                } else if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                    self.values.insert(key.to_string(), args[i + 1].clone());
+                    i += 1;
+                } else {
+                    self.values.insert(key.to_string(), "true".to_string());
+                }
+            } else {
+                positional.push(args[i].clone());
+            }
+            i += 1;
+        }
+        Ok(positional)
+    }
+
+    pub fn set(&mut self, key: &str, value: impl ToString) {
+        self.values.insert(key.to_string(), value.to_string());
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(String::as_str)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, ConfigError> {
+        match self.values.get(key) {
+            None => Ok(default),
+            Some(v) => v.replace('_', "").parse().map_err(|_| ConfigError::Type {
+                key: key.into(),
+                value: v.clone(),
+                ty: "usize",
+            }),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, ConfigError> {
+        match self.values.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| ConfigError::Type {
+                key: key.into(),
+                value: v.clone(),
+                ty: "f64",
+            }),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> Result<bool, ConfigError> {
+        match self.values.get(key).map(String::as_str) {
+            None => Ok(default),
+            Some("true" | "1" | "yes") => Ok(true),
+            Some("false" | "0" | "no") => Ok(false),
+            Some(v) => {
+                Err(ConfigError::Type { key: key.into(), value: v.into(), ty: "bool" })
+            }
+        }
+    }
+
+    pub fn get_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    /// The collective algorithm (`run.algorithm`, default circulant
+    /// allreduce with halving-up skips).
+    pub fn algorithm(&self) -> Result<Algorithm, ConfigError> {
+        let name = self.get_str("run.algorithm", "allreduce");
+        Algorithm::parse(name).ok_or_else(|| ConfigError::Invalid {
+            key: "run.algorithm".into(),
+            msg: format!("unknown algorithm {name:?}"),
+        })
+    }
+
+    /// The α-β-γ cost model (`cost.*`, defaults = CostModel::cluster()).
+    pub fn cost_model(&self) -> Result<CostModel, ConfigError> {
+        let d = CostModel::cluster();
+        Ok(CostModel::new(
+            self.get_f64("cost.alpha", d.alpha)?,
+            self.get_f64("cost.beta", d.beta)?,
+            self.get_f64("cost.gamma", d.gamma)?,
+        ))
+    }
+
+    /// Dump all resolved keys (for `ccoll info`).
+    pub fn entries(&self) -> impl Iterator<Item = (&str, &str)> {
+        self.values.iter().map(|(k, v)| (k.as_str(), v.as_str()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::skips::SkipScheme;
+
+    #[test]
+    fn parses_sections_comments_types() {
+        let cfg = Config::parse(
+            r#"
+            # a comment
+            top = 1
+            [run]
+            p = 22            # trailing comment
+            algorithm = "allreduce:pow2"
+            verbose = true
+            [cost]
+            alpha = 1e-6
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.get_usize("top", 0).unwrap(), 1);
+        assert_eq!(cfg.get_usize("run.p", 0).unwrap(), 22);
+        assert!(cfg.get_bool("run.verbose", false).unwrap());
+        assert_eq!(cfg.cost_model().unwrap().alpha, 1e-6);
+        assert_eq!(
+            cfg.algorithm().unwrap(),
+            crate::collectives::Algorithm::CirculantAllreduce(SkipScheme::PowerOfTwo)
+        );
+    }
+
+    #[test]
+    fn cli_overrides_file() {
+        let mut cfg = Config::parse("run.p = 4").unwrap();
+        let extra = cfg
+            .apply_args(&["--run.p".into(), "8".into(), "trace".into(), "--flag".into()])
+            .unwrap();
+        assert_eq!(cfg.get_usize("run.p", 0).unwrap(), 8);
+        assert_eq!(extra, vec!["trace".to_string()]);
+        assert!(cfg.get_bool("flag", false).unwrap());
+    }
+
+    #[test]
+    fn key_equals_value_form() {
+        let mut cfg = Config::new();
+        cfg.apply_args(&["--cost.alpha=2e-5".into()]).unwrap();
+        assert_eq!(cfg.get_f64("cost.alpha", 0.0).unwrap(), 2e-5);
+    }
+
+    #[test]
+    fn errors_are_typed() {
+        let cfg = Config::parse("x = notanumber").unwrap();
+        assert!(matches!(cfg.get_usize("x", 0), Err(ConfigError::Type { .. })));
+        assert!(Config::parse("just a line").is_err());
+        assert!(Config::from_file("/nope/nope.toml").is_err());
+    }
+
+    #[test]
+    fn defaults_flow_through() {
+        let cfg = Config::new();
+        assert_eq!(cfg.get_usize("run.p", 8).unwrap(), 8);
+        assert_eq!(cfg.get_str("run.op", "sum"), "sum");
+        let cm = cfg.cost_model().unwrap();
+        assert_eq!(cm.alpha, CostModel::cluster().alpha);
+    }
+
+    #[test]
+    fn underscores_in_integers() {
+        let cfg = Config::parse("m = 1_048_576").unwrap();
+        assert_eq!(cfg.get_usize("m", 0).unwrap(), 1 << 20);
+    }
+}

@@ -1,0 +1,516 @@
+//! The MPI-like communicator: the library's user-facing API.
+//!
+//! A [`Communicator`] wraps one rank's endpoint plus the collective
+//! configuration (skip scheme, ⊕ backend) and exposes the operations the
+//! paper targets: `MPI_Reduce_scatter_block`, `MPI_Reduce_scatter`,
+//! `MPI_Allreduce` (§3), plus the §4 derivations (`allgather`, `alltoall`,
+//! `reduce`, `bcast`) and a `barrier`.
+//!
+//! Round tags advance monotonically per communicator, so collectives can
+//! be issued back-to-back without cross-talk (the transport stashes
+//! out-of-order arrivals by `(peer, tag)`).
+
+
+use crate::collectives::alltoall::{alltoall_rank, receive_partition};
+use crate::collectives::exec::{execute_rank, CollectiveError};
+use crate::collectives::generators::{
+    allgather_schedule, allreduce_schedule, reduce_scatter_schedule,
+};
+use crate::datatypes::BlockPartition;
+use crate::ops::ReduceOp;
+use crate::topology::skips::SkipScheme;
+use crate::transport::{Counters, Endpoint};
+
+/// Which ⊕ implementation executes the γ term.
+#[derive(Clone)]
+pub enum OpBackend {
+    /// Native Rust loops (`crate::ops::native`).
+    Native,
+    /// The AOT Pallas kernel through the PJRT compute service.
+    Pjrt(crate::runtime::ServiceHandle),
+}
+
+impl OpBackend {
+    /// Resolve an operator name to a boxed ⊕ for this backend.
+    pub fn resolve(&self, op: &str) -> Option<Box<dyn ReduceOp>> {
+        match self {
+            OpBackend::Native => crate::ops::parse_native(op),
+            OpBackend::Pjrt(handle) => crate::runtime::ServiceOp::new(handle.clone(), op)
+                .map(|o| Box::new(o) as Box<dyn ReduceOp>),
+        }
+    }
+}
+
+/// One rank's communicator.
+pub struct Communicator {
+    ep: Endpoint,
+    scheme: SkipScheme,
+    backend: OpBackend,
+    tag: u64,
+}
+
+impl Communicator {
+    pub fn new(ep: Endpoint, scheme: SkipScheme, backend: OpBackend) -> Self {
+        Self { ep, scheme, backend, tag: 0 }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.ep.rank
+    }
+
+    pub fn size(&self) -> usize {
+        self.ep.p
+    }
+
+    /// Transport counters accumulated so far (Theorem 1/2 measurements).
+    pub fn counters(&self) -> Counters {
+        self.ep.counters.clone()
+    }
+
+    fn skips(&self) -> Vec<usize> {
+        self.scheme.skips(self.size()).expect("valid skip scheme")
+    }
+
+    fn op(&self, op: &str) -> Result<Box<dyn ReduceOp>, CollectiveError> {
+        self.backend.resolve(op).ok_or(CollectiveError::BadBuffer {
+            rank: self.ep.rank,
+            got: 0,
+            want: 0,
+        })
+    }
+
+    /// MPI_Reduce_scatter_block: every rank contributes `sendbuf`
+    /// (`p·b` elements); `recvbuf` (`b` elements) receives block `rank` of
+    /// the reduction. Algorithm 1 with this communicator's skip scheme.
+    pub fn reduce_scatter_block(
+        &mut self,
+        sendbuf: &[f32],
+        recvbuf: &mut [f32],
+        op: &str,
+    ) -> Result<(), CollectiveError> {
+        let p = self.size();
+        let b = recvbuf.len();
+        if sendbuf.len() != p * b {
+            return Err(CollectiveError::BadBuffer {
+                rank: self.rank(),
+                got: sendbuf.len(),
+                want: p * b,
+            });
+        }
+        let part = BlockPartition::uniform(p, b);
+        let mut buf = sendbuf.to_vec();
+        let sched = reduce_scatter_schedule(p, &self.skips());
+        let op = self.op(op)?;
+        self.tag = execute_rank(&mut self.ep, &sched, &part, op.as_ref(), &mut buf, self.tag)?;
+        recvbuf.copy_from_slice(&buf[part.range(self.rank())]);
+        Ok(())
+    }
+
+    /// MPI_Reduce_scatter: per-block counts may differ (Corollary 3).
+    /// `recvbuf` must have `counts[rank]` elements.
+    pub fn reduce_scatter(
+        &mut self,
+        sendbuf: &[f32],
+        counts: &[usize],
+        recvbuf: &mut [f32],
+        op: &str,
+    ) -> Result<(), CollectiveError> {
+        let p = self.size();
+        if counts.len() != p {
+            return Err(CollectiveError::BadBuffer { rank: self.rank(), got: counts.len(), want: p });
+        }
+        let part = BlockPartition::from_counts(counts);
+        if sendbuf.len() != part.total() || recvbuf.len() != part.size(self.rank()) {
+            return Err(CollectiveError::BadBuffer {
+                rank: self.rank(),
+                got: sendbuf.len(),
+                want: part.total(),
+            });
+        }
+        let mut buf = sendbuf.to_vec();
+        let sched = reduce_scatter_schedule(p, &self.skips());
+        let op = self.op(op)?;
+        self.tag = execute_rank(&mut self.ep, &sched, &part, op.as_ref(), &mut buf, self.tag)?;
+        recvbuf.copy_from_slice(&buf[part.range(self.rank())]);
+        Ok(())
+    }
+
+    /// MPI_Allreduce (in place): Algorithm 2. `buf` is both input and
+    /// output (`m` elements, any `m ≥ 0`; blocks are split as evenly as
+    /// possible).
+    pub fn allreduce(&mut self, buf: &mut [f32], op: &str) -> Result<(), CollectiveError> {
+        let p = self.size();
+        let part = BlockPartition::regular(p, buf.len());
+        let sched = allreduce_schedule(p, &self.skips());
+        let op = self.op(op)?;
+        self.tag = execute_rank(&mut self.ep, &sched, &part, op.as_ref(), buf, self.tag)?;
+        Ok(())
+    }
+
+    /// MPI_Allgather: `sendblock` (this rank's contribution) is gathered
+    /// into `recvbuf` (`p · sendblock.len()` elements, rank order).
+    pub fn allgather(&mut self, sendblock: &[f32], recvbuf: &mut [f32]) -> Result<(), CollectiveError> {
+        let p = self.size();
+        let b = sendblock.len();
+        if recvbuf.len() != p * b {
+            return Err(CollectiveError::BadBuffer {
+                rank: self.rank(),
+                got: recvbuf.len(),
+                want: p * b,
+            });
+        }
+        let part = BlockPartition::uniform(p, b);
+        recvbuf[part.range(self.rank())].copy_from_slice(sendblock);
+        let sched = allgather_schedule(p, &self.skips());
+        // allgather performs no ⊕; use native sum as a placeholder operator
+        let op = crate::ops::SumOp;
+        self.tag = execute_rank(&mut self.ep, &sched, &part, &op, recvbuf, self.tag)?;
+        Ok(())
+    }
+
+    /// MPI_Alltoall (regular): block `g` of `sendbuf` goes to rank `g`;
+    /// returns the received row (block `g` from rank `g`). §4's
+    /// concatenation reduce-scatter in `⌈log2 p⌉` rounds.
+    pub fn alltoall(&mut self, sendbuf: &[f32], block: usize) -> Result<Vec<f32>, CollectiveError> {
+        let p = self.size();
+        let part = BlockPartition::uniform(p, block);
+        let skips = self.skips();
+        let out = alltoall_rank(&mut self.ep, &part, &skips, sendbuf, self.tag)?;
+        self.tag += skips.len() as u64;
+        debug_assert_eq!(out.len(), receive_partition(&part, self.rank()).total());
+        Ok(out)
+    }
+
+    /// MPI_Alltoallv: irregular all-to-all. `send_counts[g]` elements of
+    /// `sendbuf` (concatenated rank order) go to rank `g`; the return
+    /// value concatenates `recv_counts[g]` elements from each rank `g`.
+    pub fn alltoallv(
+        &mut self,
+        sendbuf: &[f32],
+        send_counts: &[usize],
+        recv_counts: &[usize],
+    ) -> Result<Vec<f32>, CollectiveError> {
+        let skips = self.skips();
+        let out = crate::collectives::alltoall::alltoallv_rank(
+            &mut self.ep,
+            send_counts,
+            recv_counts,
+            &skips,
+            sendbuf,
+            self.tag,
+        )?;
+        self.tag += skips.len() as u64;
+        Ok(out)
+    }
+
+    /// MPI_Reduce: full vector reduced to `root` (Corollary 3's degenerate
+    /// single-block partition; attractive for small `m`).
+    pub fn reduce(&mut self, buf: &mut [f32], root: usize, op: &str) -> Result<(), CollectiveError> {
+        let p = self.size();
+        let part = BlockPartition::single_block(p, buf.len(), root);
+        let sched = reduce_scatter_schedule(p, &self.skips());
+        let op = self.op(op)?;
+        self.tag = execute_rank(&mut self.ep, &sched, &part, op.as_ref(), buf, self.tag)?;
+        Ok(())
+    }
+
+    /// MPI_Bcast from `root` (mirrored allgather on the degenerate
+    /// partition).
+    pub fn bcast(&mut self, buf: &mut [f32], root: usize) -> Result<(), CollectiveError> {
+        let p = self.size();
+        let part = BlockPartition::single_block(p, buf.len(), root);
+        let sched = allgather_schedule(p, &self.skips());
+        let op = crate::ops::SumOp;
+        self.tag = execute_rank(&mut self.ep, &sched, &part, &op, buf, self.tag)?;
+        Ok(())
+    }
+
+    /// MPI_Scatter: block `g` of `root`'s `sendbuf` (`p·b` elements) lands
+    /// in `recvbuf` (`b` elements) at rank `g`. Binomial block tree
+    /// (§4's rooted specialization), `⌈log2 p⌉` rounds.
+    pub fn scatter(
+        &mut self,
+        sendbuf: Option<&[f32]>,
+        recvbuf: &mut [f32],
+        root: usize,
+    ) -> Result<(), CollectiveError> {
+        let p = self.size();
+        let b = recvbuf.len();
+        let part = BlockPartition::uniform(p, b);
+        let mut buf = vec![0.0f32; part.total()];
+        if self.rank() == root {
+            let send = sendbuf.ok_or(CollectiveError::BadBuffer {
+                rank: root,
+                got: 0,
+                want: part.total(),
+            })?;
+            if send.len() != part.total() {
+                return Err(CollectiveError::BadBuffer {
+                    rank: root,
+                    got: send.len(),
+                    want: part.total(),
+                });
+            }
+            buf.copy_from_slice(send);
+        }
+        let sched = crate::collectives::baselines::binomial_scatter_schedule(p, root);
+        let op = crate::ops::SumOp;
+        self.tag = execute_rank(&mut self.ep, &sched, &part, &op, &mut buf, self.tag)?;
+        recvbuf.copy_from_slice(&buf[part.range(self.rank())]);
+        Ok(())
+    }
+
+    /// MPI_Gather: every rank's `sendblock` (`b` elements) is collected in
+    /// rank order into `recvbuf` (`p·b`, significant at `root` only).
+    pub fn gather(
+        &mut self,
+        sendblock: &[f32],
+        recvbuf: Option<&mut [f32]>,
+        root: usize,
+    ) -> Result<(), CollectiveError> {
+        let p = self.size();
+        let b = sendblock.len();
+        let part = BlockPartition::uniform(p, b);
+        let mut buf = vec![0.0f32; part.total()];
+        buf[part.range(self.rank())].copy_from_slice(sendblock);
+        let sched = crate::collectives::baselines::binomial_gather_schedule(p, root);
+        let op = crate::ops::SumOp;
+        self.tag = execute_rank(&mut self.ep, &sched, &part, &op, &mut buf, self.tag)?;
+        if self.rank() == root {
+            let out = recvbuf.ok_or(CollectiveError::BadBuffer {
+                rank: root,
+                got: 0,
+                want: part.total(),
+            })?;
+            if out.len() != part.total() {
+                return Err(CollectiveError::BadBuffer {
+                    rank: root,
+                    got: out.len(),
+                    want: part.total(),
+                });
+            }
+            out.copy_from_slice(&buf);
+        }
+        Ok(())
+    }
+
+    /// Barrier: a zero-payload allreduce round trip.
+    pub fn barrier(&mut self) -> Result<(), CollectiveError> {
+        let mut empty = [0.0f32; 0];
+        // p blocks of 0 elements still walk the full schedule (all payloads
+        // empty), synchronizing every rank with every other transitively.
+        self.allreduce(&mut empty, "sum")
+    }
+
+    /// Run an arbitrary prebuilt schedule (expert API used by benches).
+    pub fn run_schedule(
+        &mut self,
+        sched: &crate::schedule::Schedule,
+        part: &BlockPartition,
+        op: &str,
+        buf: &mut [f32],
+    ) -> Result<(), CollectiveError> {
+        let op = self.op(op)?;
+        self.tag = execute_rank(&mut self.ep, sched, part, op.as_ref(), buf, self.tag)?;
+        Ok(())
+    }
+}
+
+/// Launcher: spawns `p` rank threads, hands each a [`Communicator`], and
+/// collects results — the in-process stand-in for `mpiexec`.
+pub struct Launcher {
+    pub p: usize,
+    pub scheme: SkipScheme,
+    pub backend: OpBackend,
+}
+
+impl Launcher {
+    pub fn new(p: usize) -> Self {
+        Self { p, scheme: SkipScheme::HalvingUp, backend: OpBackend::Native }
+    }
+
+    pub fn scheme(mut self, scheme: SkipScheme) -> Self {
+        self.scheme = scheme;
+        self
+    }
+
+    pub fn backend(mut self, backend: OpBackend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Run `f(comm)` on every rank; returns per-rank results in rank order.
+    pub fn run<T, F>(&self, f: F) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: Fn(Communicator) -> T + Send + Sync + 'static,
+    {
+        let scheme = self.scheme.clone();
+        let backend = self.backend.clone();
+        crate::transport::run_ranks(self.p, move |_rank, ep| {
+            // run_ranks hands us &mut Endpoint; move a fresh Communicator
+            // around an owned endpoint instead.
+            let owned = std::mem::replace(
+                ep,
+                // placeholder endpoint; never used after the swap
+                crate::transport::network(1).pop().unwrap(),
+            );
+            f(Communicator::new(owned, scheme.clone(), backend.clone()))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reduce_scatter_block_api() {
+        let p = 6;
+        let b = 4;
+        let out = Launcher::new(p).run(move |mut comm| {
+            let send: Vec<f32> = (0..p * b).map(|j| (comm.rank() * 100 + j) as f32).collect();
+            let mut recv = vec![0.0f32; b];
+            comm.reduce_scatter_block(&send, &mut recv, "sum").unwrap();
+            recv
+        });
+        for (r, got) in out.iter().enumerate() {
+            for j in 0..b {
+                let want: f32 = (0..p).map(|src| (src * 100 + r * b + j) as f32).sum();
+                assert_eq!(got[j], want, "r={r} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_api_and_back_to_back_ops() {
+        let p = 5;
+        let m = 13;
+        let out = Launcher::new(p).run(move |mut comm| {
+            let mut buf: Vec<f32> = (0..m).map(|j| (comm.rank() + j) as f32).collect();
+            comm.allreduce(&mut buf, "sum").unwrap();
+            // immediately chain a second collective on the same comm
+            let mut mx: Vec<f32> = vec![comm.rank() as f32];
+            comm.allreduce(&mut mx, "max").unwrap();
+            (buf, mx[0])
+        });
+        for (buf, mx) in &out {
+            for j in 0..m {
+                let want: f32 = (0..p).map(|r| (r + j) as f32).sum();
+                assert_eq!(buf[j], want);
+            }
+            assert_eq!(*mx, (p - 1) as f32);
+        }
+    }
+
+    #[test]
+    fn reduce_and_bcast() {
+        let p = 7;
+        let m = 9;
+        let out = Launcher::new(p).run(move |mut comm| {
+            let mut buf: Vec<f32> = vec![1.0; m];
+            comm.reduce(&mut buf, 2, "sum").unwrap();
+            let at_root = buf.clone();
+            // root rescales, then broadcasts
+            if comm.rank() == 2 {
+                for x in buf.iter_mut() {
+                    *x *= 10.0;
+                }
+            }
+            comm.bcast(&mut buf, 2).unwrap();
+            (at_root, buf)
+        });
+        assert!(out[2].0.iter().all(|&x| x == p as f32));
+        for (_, bcasted) in &out {
+            assert!(bcasted.iter().all(|&x| x == 10.0 * p as f32));
+        }
+    }
+
+    #[test]
+    fn alltoall_api() {
+        let p = 4;
+        let b = 2;
+        let out = Launcher::new(p).run(move |mut comm| {
+            let send: Vec<f32> =
+                (0..p * b).map(|j| (comm.rank() * 1000 + j) as f32).collect();
+            comm.alltoall(&send, b).unwrap()
+        });
+        for r in 0..p {
+            for g in 0..p {
+                for j in 0..b {
+                    assert_eq!(out[r][g * b + j], (g * 1000 + r * b + j) as f32);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn allgather_and_barrier() {
+        let p = 5;
+        let out = Launcher::new(p).run(move |mut comm| {
+            comm.barrier().unwrap();
+            let mine = vec![comm.rank() as f32; 3];
+            let mut all = vec![0.0f32; 3 * p];
+            comm.allgather(&mine, &mut all).unwrap();
+            comm.barrier().unwrap();
+            all
+        });
+        for buf in &out {
+            for r in 0..p {
+                assert!(buf[3 * r..3 * (r + 1)].iter().all(|&x| x == r as f32));
+            }
+        }
+    }
+
+    #[test]
+    fn scatter_and_gather_roundtrip() {
+        let p = 7;
+        let b = 3;
+        let root = 2;
+        let out = Launcher::new(p).run(move |mut comm| {
+            // root scatters j+1 values; everyone gets its block…
+            let send: Option<Vec<f32>> = (comm.rank() == root)
+                .then(|| (0..p * b).map(|j| j as f32 + 1.0).collect());
+            let mut mine = vec![0.0f32; b];
+            comm.scatter(send.as_deref(), &mut mine, root).unwrap();
+            // …transforms it…
+            for x in mine.iter_mut() {
+                *x *= 2.0;
+            }
+            // …and gathers back.
+            let mut all = (comm.rank() == root).then(|| vec![0.0f32; p * b]);
+            comm.gather(&mine, all.as_deref_mut(), root).unwrap();
+            (mine, all)
+        });
+        for (r, (mine, _)) in out.iter().enumerate() {
+            for i in 0..b {
+                assert_eq!(mine[i], 2.0 * ((r * b + i) as f32 + 1.0), "scatter r={r}");
+            }
+        }
+        let all = out[root].1.as_ref().unwrap();
+        for j in 0..p * b {
+            assert_eq!(all[j], 2.0 * (j as f32 + 1.0), "gather j={j}");
+        }
+    }
+
+    #[test]
+    fn irregular_reduce_scatter_api() {
+        let p = 4;
+        let counts = vec![1usize, 0, 5, 2];
+        let counts2 = counts.clone();
+        let out = Launcher::new(p).run(move |mut comm| {
+            let total: usize = counts2.iter().sum();
+            let send: Vec<f32> = (0..total).map(|j| (comm.rank() + j) as f32).collect();
+            let mut recv = vec![0.0f32; counts2[comm.rank()]];
+            comm.reduce_scatter(&send, &counts2, &mut recv, "sum").unwrap();
+            recv
+        });
+        let part = BlockPartition::from_counts(&counts);
+        for (r, got) in out.iter().enumerate() {
+            for (i, j) in part.range(r).enumerate() {
+                let want: f32 = (0..p).map(|src| (src + j) as f32).sum();
+                assert_eq!(got[i], want, "r={r} i={i}");
+            }
+        }
+    }
+}

@@ -1,0 +1,114 @@
+//! Metrics registry: per-rank counters aggregated by the launcher, dumped
+//! as a table or JSON by the CLI.
+
+use std::collections::BTreeMap;
+
+use crate::transport::Counters;
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+/// Aggregated run metrics (one entry per rank plus wall-clock).
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    pub algorithm: String,
+    pub p: usize,
+    pub m: usize,
+    pub wall_seconds: f64,
+    pub per_rank: Vec<Counters>,
+}
+
+impl RunMetrics {
+    /// Max blocks/elements over ranks (the bound Theorems 1/2 state is
+    /// per-processor, so the max is what must match).
+    pub fn max_elems_sent(&self) -> u64 {
+        self.per_rank.iter().map(|c| c.elems_sent).max().unwrap_or(0)
+    }
+
+    pub fn max_msgs_sent(&self) -> u64 {
+        self.per_rank.iter().map(|c| c.msgs_sent).max().unwrap_or(0)
+    }
+
+    pub fn total_elems_sent(&self) -> u64 {
+        self.per_rank.iter().map(|c| c.elems_sent).sum()
+    }
+
+    /// Rounds = max sendrecv invocations on any rank.
+    pub fn rounds(&self) -> u64 {
+        self.per_rank.iter().map(|c| c.sendrecv_rounds).max().unwrap_or(0)
+    }
+
+    /// Aggregate throughput in elements moved per second (whole job).
+    pub fn elems_per_second(&self) -> f64 {
+        if self.wall_seconds <= 0.0 {
+            return 0.0;
+        }
+        self.total_elems_sent() as f64 / self.wall_seconds
+    }
+
+    /// Render as a one-row summary table.
+    pub fn summary_table(&self) -> Table {
+        let mut t = Table::new(
+            "run metrics",
+            &["algorithm", "p", "m", "rounds", "max elems/rank", "wall s", "elems/s"],
+        );
+        t.row(&[
+            self.algorithm.clone(),
+            self.p.to_string(),
+            self.m.to_string(),
+            self.rounds().to_string(),
+            self.max_elems_sent().to_string(),
+            format!("{:.6}", self.wall_seconds),
+            crate::util::table::fmt_si(self.elems_per_second()),
+        ]);
+        t
+    }
+
+    /// JSON dump (for machine-readable bench logs).
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert("algorithm".into(), Json::Str(self.algorithm.clone()));
+        obj.insert("p".into(), Json::Num(self.p as f64));
+        obj.insert("m".into(), Json::Num(self.m as f64));
+        obj.insert("wall_seconds".into(), Json::Num(self.wall_seconds));
+        obj.insert("rounds".into(), Json::Num(self.rounds() as f64));
+        obj.insert(
+            "per_rank_elems_sent".into(),
+            Json::Arr(self.per_rank.iter().map(|c| Json::Num(c.elems_sent as f64)).collect()),
+        );
+        Json::Obj(obj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake() -> RunMetrics {
+        RunMetrics {
+            algorithm: "test".into(),
+            p: 2,
+            m: 8,
+            wall_seconds: 0.5,
+            per_rank: vec![
+                Counters { sendrecv_rounds: 3, msgs_sent: 3, msgs_recv: 3, elems_sent: 12, elems_recv: 12 },
+                Counters { sendrecv_rounds: 3, msgs_sent: 2, msgs_recv: 2, elems_sent: 10, elems_recv: 10 },
+            ],
+        }
+    }
+
+    #[test]
+    fn aggregations() {
+        let m = fake();
+        assert_eq!(m.max_elems_sent(), 12);
+        assert_eq!(m.total_elems_sent(), 22);
+        assert_eq!(m.rounds(), 3);
+        assert_eq!(m.elems_per_second(), 44.0);
+    }
+
+    #[test]
+    fn json_has_fields() {
+        let j = fake().to_json();
+        assert_eq!(j.req("p").as_usize(), Some(2));
+        assert_eq!(j.req("per_rank_elems_sent").as_arr().unwrap().len(), 2);
+    }
+}

@@ -1,0 +1,12 @@
+//! Layer-3 coordinator: communicator API, launcher, metrics, and the
+//! algorithm selector.
+
+pub mod communicator;
+pub mod metrics;
+pub mod selector;
+pub mod train;
+
+pub use communicator::{Communicator, Launcher, OpBackend};
+pub use metrics::RunMetrics;
+pub use selector::select_allreduce;
+pub use train::{train, TrainConfig, TrainReport};

@@ -1,0 +1,93 @@
+//! Algorithm auto-selection by cost model.
+//!
+//! The paper's Algorithm 2 is simultaneously round- and volume-optimal, so
+//! in the pure α-β-γ model it dominates the classic baselines everywhere —
+//! the interesting selection question (which the paper raises in §3) is
+//! *within* the circulant family: which skip scheme, and whether the
+//! degenerate single-block schedules should serve small reduce/bcast.
+//! `select_allreduce` evaluates the closed forms and returns the winner
+//! with its predicted time — used by the CLI's `--algorithm auto` and
+//! exercised against DES results in tests.
+
+use crate::collectives::Algorithm;
+use crate::sim::{closed_form, CostModel};
+use crate::topology::skips::SkipScheme;
+
+/// Candidate set with closed-form predictors.
+fn candidates() -> Vec<(Algorithm, fn(&CostModel, usize, usize) -> f64)> {
+    vec![
+        (
+            Algorithm::CirculantAllreduce(SkipScheme::HalvingUp),
+            closed_form::alg2_allreduce as fn(&CostModel, usize, usize) -> f64,
+        ),
+        (Algorithm::RingAllreduce, closed_form::ring_allreduce),
+        (Algorithm::RecursiveDoublingAllreduce, closed_form::recursive_doubling_allreduce),
+        (Algorithm::RabenseifnerAllreduce, closed_form::rabenseifner_allreduce),
+        (Algorithm::BinomialAllreduce, closed_form::binomial_allreduce),
+    ]
+}
+
+/// Pick the fastest allreduce for `(p, m)` under `model`.
+pub fn select_allreduce(model: &CostModel, p: usize, m: usize) -> (Algorithm, f64) {
+    let mut best: Option<(Algorithm, f64)> = None;
+    for (alg, f) in candidates() {
+        if matches!(alg, Algorithm::RecursiveHalvingReduceScatter) && !p.is_power_of_two() {
+            continue;
+        }
+        let t = f(model, p, m);
+        if best.as_ref().is_none_or(|(_, bt)| t < *bt) {
+            best = Some((alg, t));
+        }
+    }
+    best.expect("non-empty candidate set")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crossover_structure() {
+        // Theorem 2 makes Algorithm 2 *volume*-optimal with 2⌈log2 p⌉
+        // rounds; recursive doubling uses only ⌈log2 p⌉ rounds at m·log p
+        // volume. Hence the honest crossover: rec-doubling may win for tiny
+        // m (α regime), Algorithm 2 wins for large m (β/γ regime), and
+        // Algorithm 2 dominates the ring everywhere (identical volume,
+        // fewer rounds).
+        let c = CostModel::cluster();
+        for p in [3usize, 22, 100, 1000] {
+            // large m: Algorithm 2 (or its power-of-two twin Rabenseifner)
+            let m = 1 << 22;
+            let (alg, t) = select_allreduce(&c, p, m);
+            let circ = closed_form::alg2_allreduce(&c, p, m);
+            assert!(
+                matches!(alg, Algorithm::CirculantAllreduce(_)) || (t - circ).abs() < 1e-9,
+                "p={p}: {} at {t}, alg2 {circ}",
+                alg.name()
+            );
+            // always at least as good as the ring
+            for m in [1usize, 1 << 10, 1 << 22] {
+                assert!(
+                    closed_form::alg2_allreduce(&c, p, m)
+                        <= closed_form::ring_allreduce(&c, p, m) + 1e-12,
+                    "p={p} m={m}"
+                );
+            }
+        }
+        // tiny m at large p: a ⌈log2 p⌉-round algorithm wins the α game
+        let (alg, _) = select_allreduce(&CostModel::latency_bound(), 1000, 1);
+        assert!(
+            matches!(alg, Algorithm::RecursiveDoublingAllreduce | Algorithm::BinomialAllreduce),
+            "expected a q-round algorithm for m=1, got {}",
+            alg.name()
+        );
+    }
+
+    #[test]
+    fn predictions_are_positive_and_monotone_in_m() {
+        let c = CostModel::cluster();
+        let (_, t1) = select_allreduce(&c, 64, 1 << 10);
+        let (_, t2) = select_allreduce(&c, 64, 1 << 20);
+        assert!(0.0 < t1 && t1 < t2);
+    }
+}

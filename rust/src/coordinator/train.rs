@@ -1,0 +1,191 @@
+//! End-to-end data-parallel training driver (the E2E experiment of
+//! DESIGN.md §5).
+//!
+//! `p` simulated workers each hold a full replica of a small MLP regressor
+//! (the Layer-2 JAX model, AOT-compiled to `mlp_loss_grad.hlo.txt`). Per
+//! step, every worker:
+//!   1. draws its own shard of a synthetic regression batch,
+//!   2. computes `(loss, grad)` through PJRT (Layer 2/1 compute),
+//!   3. **allreduces the flat gradient with Algorithm 2** (the paper's
+//!      contribution, on the thread network, γ term through the AOT Pallas
+//!      combine kernel when the PJRT backend is selected),
+//!   4. applies an SGD step locally (replicas stay bit-identical because
+//!      the allreduce result is identical on every rank).
+//!
+//! Reported: the loss curve, the collective counters (which must match
+//! Theorem 2 per step), and wall-clock. Recorded in EXPERIMENTS.md §E2E.
+
+
+use crate::coordinator::{Launcher, OpBackend};
+use crate::runtime::{ComputeService, Manifest};
+use crate::topology::skips::SkipScheme;
+use crate::util::ceil_log2;
+use crate::util::rng::SplitMix64;
+
+/// Training configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub workers: usize,
+    pub steps: usize,
+    pub lr: f32,
+    pub seed: u64,
+    /// Log every `log_every` steps (0 = silent).
+    pub log_every: usize,
+    /// Run the gradient allreduce γ term through PJRT (true) or native
+    /// loops (false). Model fwd/bwd always runs through PJRT.
+    pub pjrt_reduce: bool,
+    pub scheme: SkipScheme,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            workers: 4,
+            steps: 300,
+            lr: 0.05,
+            seed: 7,
+            log_every: 20,
+            pjrt_reduce: true,
+            scheme: SkipScheme::HalvingUp,
+        }
+    }
+}
+
+/// Result of a training run.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    /// `(step, mean loss over workers)` at each logged step.
+    pub losses: Vec<(usize, f32)>,
+    pub first_loss: f32,
+    pub final_loss: f32,
+    pub wall_seconds: f64,
+    pub params: usize,
+    pub workers: usize,
+    pub steps: usize,
+    /// Per-step gradient elements allreduced per worker (2(p−1)/p·P).
+    pub grad_elems_per_step: usize,
+    /// Rounds per allreduce (must equal 2⌈log2 p⌉ — Theorem 2).
+    pub rounds_per_allreduce: usize,
+}
+
+/// Deterministic teacher weights for the synthetic regression task.
+fn teacher(d_in: usize, d_out: usize, seed: u64) -> Vec<f32> {
+    let mut rng = SplitMix64::new(seed ^ 0x7eac_7eac);
+    rng.normal_vec(d_in * d_out)
+}
+
+/// Draw a batch from the teacher: `y = tanh(x·W*)·0.5 + ε`.
+fn draw_batch(
+    rng: &mut SplitMix64,
+    w: &[f32],
+    batch: usize,
+    d_in: usize,
+    d_out: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let x = rng.normal_vec(batch * d_in);
+    let mut y = vec![0.0f32; batch * d_out];
+    for b in 0..batch {
+        for o in 0..d_out {
+            let mut acc = 0.0f32;
+            for i in 0..d_in {
+                acc += x[b * d_in + i] * w[i * d_out + o];
+            }
+            y[b * d_out + o] = (acc as f64).tanh() as f32 * 0.5 + 0.01 * rng.next_normal_f32();
+        }
+    }
+    (x, y)
+}
+
+/// Glorot-ish flat init (mirrors `model.mlp_init`'s scaling; exact values
+/// differ — any common init works since all replicas share it).
+fn init_params(meta: &crate::runtime::manifest::MlpMeta, seed: u64) -> Vec<f32> {
+    let mut rng = SplitMix64::new(seed);
+    let (d, h, o) = (meta.d_in, meta.hidden, meta.d_out);
+    let mut params = Vec::with_capacity(meta.params);
+    let scaled = |rng: &mut SplitMix64, n: usize, scale: f32| -> Vec<f32> {
+        rng.normal_vec(n).into_iter().map(|x| x * scale).collect()
+    };
+    params.extend(scaled(&mut rng, d * h, 1.0 / (d as f32).sqrt()));
+    params.extend(std::iter::repeat_n(0.0, h));
+    params.extend(scaled(&mut rng, h * h, 1.0 / (h as f32).sqrt()));
+    params.extend(std::iter::repeat_n(0.0, h));
+    params.extend(scaled(&mut rng, h * o, 1.0 / (h as f32).sqrt()));
+    params.extend(std::iter::repeat_n(0.0, o));
+    assert_eq!(params.len(), meta.params);
+    params
+}
+
+/// Run the data-parallel training job over the thread network.
+pub fn train(artifact_dir: &std::path::Path, cfg: &TrainConfig) -> anyhow::Result<TrainReport> {
+    let manifest = Manifest::load(artifact_dir)?;
+    let meta = manifest.mlp;
+    let service = ComputeService::start(
+        artifact_dir,
+        vec!["sum".to_string()],
+        false,
+        true,
+    )?;
+    let handle = service.handle.clone();
+
+    let p = cfg.workers;
+    let backend = if cfg.pjrt_reduce {
+        OpBackend::Pjrt(handle.clone())
+    } else {
+        OpBackend::Native
+    };
+    let cfg2 = cfg.clone();
+    let t0 = std::time::Instant::now();
+    let launcher = Launcher::new(p).scheme(cfg.scheme.clone()).backend(backend);
+
+    let per_rank: Vec<(Vec<(usize, f32)>, u64, u64)> = launcher.run(move |mut comm| {
+        let rank = comm.rank();
+        let p = comm.size();
+        let w_teacher = teacher(meta.d_in, meta.d_out, cfg2.seed);
+        let mut params = init_params(&meta, cfg2.seed);
+        let mut data_rng = SplitMix64::new(cfg2.seed * 1000 + rank as u64);
+        let mut losses = Vec::new();
+        for step in 0..cfg2.steps {
+            let (x, y) = draw_batch(&mut data_rng, &w_teacher, meta.batch, meta.d_in, meta.d_out);
+            let (loss, mut grad) = handle
+                .mlp_loss_grad(params.clone(), x, y)
+                .expect("mlp_loss_grad");
+            // The paper's allreduce over the flat gradient.
+            comm.allreduce(&mut grad, "sum").expect("allreduce grad");
+            // Mean loss across workers for logging (tiny allreduce).
+            let mut lbuf = vec![loss];
+            comm.allreduce(&mut lbuf, "sum").expect("allreduce loss");
+            let mean_loss = lbuf[0] / p as f32;
+            let scale = cfg2.lr / p as f32;
+            for (w, g) in params.iter_mut().zip(&grad) {
+                *w -= scale * g;
+            }
+            if cfg2.log_every > 0 && (step % cfg2.log_every == 0 || step + 1 == cfg2.steps) {
+                losses.push((step, mean_loss));
+                if rank == 0 {
+                    eprintln!("step {step:4}  loss {mean_loss:.6}");
+                }
+            }
+        }
+        let c = comm.counters();
+        (losses, c.elems_sent, c.sendrecv_rounds)
+    });
+
+    let wall_seconds = t0.elapsed().as_secs_f64();
+    let losses = per_rank[0].0.clone();
+    let first_loss = losses.first().map(|&(_, l)| l).unwrap_or(f32::NAN);
+    let final_loss = losses.last().map(|&(_, l)| l).unwrap_or(f32::NAN);
+    // Per step each worker allreduces the gradient (P elems over p blocks)
+    // and one scalar; volume per allreduce = 2·Σ_{g≠r} block_g ≈ 2(p−1)/p·P.
+    let q = 2 * ceil_log2(p) as usize;
+    Ok(TrainReport {
+        losses,
+        first_loss,
+        final_loss,
+        wall_seconds,
+        params: meta.params,
+        workers: p,
+        steps: cfg.steps,
+        grad_elems_per_step: (per_rank[0].1 / cfg.steps as u64) as usize,
+        rounds_per_allreduce: if p > 1 { q } else { 0 },
+    })
+}

@@ -1,0 +1,253 @@
+//! Vector block partitions — the data layout vocabulary of the collectives.
+//!
+//! Every processor's input vector of `m` elements is partitioned *in the
+//! same way* into `p` consecutive blocks (paper §2.1). Blocks may have
+//! equal sizes (MPI_Reduce_scatter_block), arbitrary sizes
+//! (MPI_Reduce_scatter, Corollary 3), or be degenerate with all elements in
+//! one block (reduce-to-root).
+
+use std::ops::Range;
+
+use crate::util::rng::SplitMix64;
+
+/// A partition of `0..m` into `p` consecutive blocks.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BlockPartition {
+    /// `offsets[g]..offsets[g+1]` is block `g`; `offsets.len() == p + 1`.
+    offsets: Vec<usize>,
+}
+
+impl BlockPartition {
+    /// Regular partition: `p` blocks as equal as possible (first `m mod p`
+    /// blocks get one extra element), total exactly `m`.
+    pub fn regular(p: usize, m: usize) -> Self {
+        assert!(p > 0);
+        let base = m / p;
+        let extra = m % p;
+        let mut offsets = Vec::with_capacity(p + 1);
+        let mut acc = 0;
+        offsets.push(0);
+        for g in 0..p {
+            acc += base + usize::from(g < extra);
+            offsets.push(acc);
+        }
+        Self { offsets }
+    }
+
+    /// Uniform partition where every block has exactly `b` elements.
+    pub fn uniform(p: usize, b: usize) -> Self {
+        Self::from_counts(&vec![b; p])
+    }
+
+    /// Partition from explicit per-block counts (MPI_Reduce_scatter).
+    pub fn from_counts(counts: &[usize]) -> Self {
+        assert!(!counts.is_empty());
+        let mut offsets = Vec::with_capacity(counts.len() + 1);
+        let mut acc = 0;
+        offsets.push(0);
+        for &c in counts {
+            acc += c;
+            offsets.push(acc);
+        }
+        Self { offsets }
+    }
+
+    /// Degenerate partition: all `m` elements in block `root` (Corollary 3's
+    /// reduce-to-root case), all other blocks empty.
+    pub fn single_block(p: usize, m: usize, root: usize) -> Self {
+        assert!(root < p);
+        let mut counts = vec![0usize; p];
+        counts[root] = m;
+        Self::from_counts(&counts)
+    }
+
+    /// Random irregular partition of `m` over `p` blocks (multinomial via
+    /// stars-and-bars sampling), deterministic per seed — the T4 workload.
+    pub fn random(p: usize, m: usize, seed: u64) -> Self {
+        let mut rng = SplitMix64::new(seed);
+        let mut cuts: Vec<usize> = (0..p - 1).map(|_| rng.next_below(m + 1)).collect();
+        cuts.sort_unstable();
+        let mut counts = Vec::with_capacity(p);
+        let mut prev = 0;
+        for &c in &cuts {
+            counts.push(c - prev);
+            prev = c;
+        }
+        counts.push(m - prev);
+        Self::from_counts(&counts)
+    }
+
+    /// Zipf-skewed irregular partition (block g proportional to 1/(g+1)^a,
+    /// shuffled) — the heavy-tail T4 workload.
+    pub fn zipf(p: usize, m: usize, a: f64, seed: u64) -> Self {
+        let mut rng = SplitMix64::new(seed);
+        let weights: Vec<f64> = (0..p).map(|g| 1.0 / ((g + 1) as f64).powf(a)).collect();
+        let total: f64 = weights.iter().sum();
+        let mut counts: Vec<usize> =
+            weights.iter().map(|w| (w / total * m as f64).floor() as usize).collect();
+        let mut used: usize = counts.iter().sum();
+        while used < m {
+            let i = rng.next_below(p);
+            counts[i] += 1;
+            used += 1;
+        }
+        let perm = rng.permutation(p);
+        let shuffled: Vec<usize> = perm.iter().map(|&i| counts[i]).collect();
+        Self::from_counts(&shuffled)
+    }
+
+    /// Number of blocks `p`.
+    pub fn p(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Total element count `m`.
+    pub fn total(&self) -> usize {
+        *self.offsets.last().unwrap()
+    }
+
+    /// Element range of block `g`.
+    pub fn range(&self, g: usize) -> Range<usize> {
+        self.offsets[g]..self.offsets[g + 1]
+    }
+
+    /// Size of block `g` in elements.
+    pub fn size(&self, g: usize) -> usize {
+        self.offsets[g + 1] - self.offsets[g]
+    }
+
+    /// True iff all blocks have the same size.
+    pub fn is_uniform(&self) -> bool {
+        let p = self.p();
+        (1..p).all(|g| self.size(g) == self.size(0))
+    }
+
+    /// Largest block size — the worst-case round payload of Corollary 3.
+    pub fn max_block(&self) -> usize {
+        (0..self.p()).map(|g| self.size(g)).max().unwrap_or(0)
+    }
+
+    /// Total elements of the *circular* block range starting at global
+    /// block `start`, spanning `len` blocks (wrapping mod p). This is the
+    /// payload size of one schedule transfer.
+    pub fn circular_elems(&self, start: usize, len: usize) -> usize {
+        let p = self.p();
+        assert!(len <= p);
+        let end = start + len;
+        if end <= p {
+            self.offsets[end] - self.offsets[start]
+        } else {
+            (self.total() - self.offsets[start]) + self.offsets[end - p]
+        }
+    }
+
+    /// The (up to two) contiguous element ranges covering the circular
+    /// block range `[start, start+len)` — used by the executor to pack /
+    /// combine without materializing a rotated copy (DESIGN.md: global
+    /// layout + gather, the datatype-style zero-copy choice of §3).
+    pub fn circular_ranges(&self, start: usize, len: usize) -> (Range<usize>, Option<Range<usize>>) {
+        let p = self.p();
+        assert!(start < p && len <= p, "start={start} len={len} p={p}");
+        let end = start + len;
+        if end <= p {
+            (self.range(start).start..self.range(start + len - 1).end, None)
+        } else {
+            let first = self.offsets[start]..self.total();
+            let second = 0..self.offsets[end - p];
+            (first, if second.is_empty() { None } else { Some(second) })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn regular_partition_sizes() {
+        let part = BlockPartition::regular(5, 17);
+        assert_eq!(part.p(), 5);
+        assert_eq!(part.total(), 17);
+        let sizes: Vec<usize> = (0..5).map(|g| part.size(g)).collect();
+        assert_eq!(sizes, vec![4, 4, 3, 3, 3]);
+        assert_eq!(part.range(1), 4..8);
+    }
+
+    #[test]
+    fn uniform_partition() {
+        let part = BlockPartition::uniform(4, 8);
+        assert!(part.is_uniform());
+        assert_eq!(part.total(), 32);
+    }
+
+    #[test]
+    fn single_block_is_corollary3_degenerate() {
+        let part = BlockPartition::single_block(8, 100, 3);
+        assert_eq!(part.size(3), 100);
+        assert_eq!(part.total(), 100);
+        assert_eq!(part.max_block(), 100);
+        for g in 0..8 {
+            if g != 3 {
+                assert_eq!(part.size(g), 0);
+            }
+        }
+    }
+
+    #[test]
+    fn random_partition_totals_and_determinism() {
+        for seed in 0..20u64 {
+            let a = BlockPartition::random(7, 1000, seed);
+            let b = BlockPartition::random(7, 1000, seed);
+            assert_eq!(a, b);
+            assert_eq!(a.total(), 1000);
+            assert_eq!(a.p(), 7);
+        }
+    }
+
+    #[test]
+    fn zipf_partition_skewed() {
+        let part = BlockPartition::zipf(16, 16_000, 1.5, 1);
+        assert_eq!(part.total(), 16_000);
+        assert!(part.max_block() > 16_000 / 16, "should be skewed");
+    }
+
+    #[test]
+    fn circular_elems_wraps() {
+        let part = BlockPartition::from_counts(&[2, 3, 5, 7]); // m=17
+        assert_eq!(part.circular_elems(1, 2), 8);
+        assert_eq!(part.circular_elems(3, 1), 7);
+        assert_eq!(part.circular_elems(3, 2), 9); // 7 + 2 wraps
+        assert_eq!(part.circular_elems(2, 4), 17); // all of it
+        assert_eq!(part.circular_elems(0, 0), 0);
+    }
+
+    #[test]
+    fn circular_ranges_split_correctly() {
+        let part = BlockPartition::from_counts(&[2, 3, 5, 7]);
+        let (a, b) = part.circular_ranges(1, 2);
+        assert_eq!(a, 2..10);
+        assert!(b.is_none());
+        let (a, b) = part.circular_ranges(3, 2);
+        assert_eq!(a, 10..17);
+        assert_eq!(b, Some(0..2));
+        // wrap where the second part would be empty
+        let (a, b) = part.circular_ranges(3, 1);
+        assert_eq!(a, 10..17);
+        assert!(b.is_none());
+    }
+
+    #[test]
+    fn sums_of_circular_ranges_match_elems() {
+        let part = BlockPartition::random(9, 313, 5);
+        for start in 0..9 {
+            for len in 0..=9 {
+                if len == 0 {
+                    continue;
+                }
+                let (a, b) = part.circular_ranges(start, len);
+                let n = a.len() + b.map_or(0, |r| r.len());
+                assert_eq!(n, part.circular_elems(start, len), "start={start} len={len}");
+            }
+        }
+    }
+}

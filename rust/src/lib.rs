@@ -1,0 +1,32 @@
+//! # circulant-collectives
+//!
+//! Reproduction of J. L. Träff, *"Optimal, Non-pipelined Reduce-scatter and
+//! Allreduce Algorithms"* (2024): reduce-scatter in `⌈log2 p⌉` rounds with
+//! exactly `p−1` blocks sent/received/reduced per processor, allreduce in
+//! `2⌈log2 p⌉` rounds with `2(p−1)` blocks — both uniform in `p`, on
+//! circulant-graph communication patterns.
+//!
+//! Three-layer architecture (DESIGN.md):
+//!  * **Layer 3 (this crate)** — the collective schedules, thread-network
+//!    transport, α-β-γ simulator and the MPI-like [`coordinator`] API;
+//!  * **Layer 2 (python/compile/model.py)** — JAX compute graphs, AOT-lowered
+//!    to HLO text at build time;
+//!  * **Layer 1 (python/compile/kernels/)** — Pallas block-combine kernels,
+//!    executed from Rust through PJRT ([`runtime`]).
+// `[15]`-style citation brackets in doc comments are references to the
+// paper's bibliography, not intra-doc links.
+#![allow(rustdoc::broken_intra_doc_links)]
+
+pub mod bench_harness;
+pub mod cli;
+pub mod collectives;
+pub mod config;
+pub mod coordinator;
+pub mod datatypes;
+pub mod ops;
+pub mod runtime;
+pub mod schedule;
+pub mod sim;
+pub mod topology;
+pub mod transport;
+pub mod util;

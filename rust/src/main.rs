@@ -1,0 +1,12 @@
+//! `ccoll` — launcher binary for the circulant-collectives library.
+//! See `ccoll help` and DESIGN.md.
+
+use circulant_collectives::cli;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = cli::main_with_args(args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

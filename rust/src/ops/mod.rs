@@ -1,0 +1,110 @@
+//! Commutative reduction operators (the paper's ⊕).
+//!
+//! Two families implement [`ReduceOp`]:
+//!   * native Rust loops ([`native`]) — the default γ backend, written so
+//!     LLVM autovectorizes them;
+//!   * the PJRT-backed operator in `crate::runtime::PjrtOp`, which executes
+//!     the AOT-compiled Pallas combine kernel (Layer 1) — the three-layer
+//!     hot path.
+//!
+//! Both are validated against each other and against scalar folds in
+//! `rust/tests/`.
+
+pub mod native;
+
+pub use native::{MaxOp, MinOp, NativeOp, ProdOp, SumOp};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A binary, commutative, associative elementwise operator on f32 blocks.
+///
+/// `combine` computes `acc[i] ← acc[i] ⊕ other[i]`. Implementations must be
+/// commutative — Algorithm 1 applies ⊕ in skip order, not rank order
+/// (paper §2.1).
+pub trait ReduceOp: Send + Sync {
+    /// Stable name (matches the artifact manifest's `op` field).
+    fn name(&self) -> &'static str;
+
+    /// `acc ⊕= other` (slices must have equal length).
+    fn combine(&self, acc: &mut [f32], other: &[f32]);
+
+    /// Identity element (e.g. 0 for sum, +∞ for min) — used to initialize
+    /// empty accumulations and pad PJRT buckets.
+    fn identity(&self) -> f32;
+}
+
+/// Parse an operator name (CLI/config) into a boxed native operator.
+pub fn parse_native(name: &str) -> Option<Box<dyn ReduceOp>> {
+    match name {
+        "sum" => Some(Box::new(SumOp)),
+        "prod" => Some(Box::new(ProdOp)),
+        "min" => Some(Box::new(MinOp)),
+        "max" => Some(Box::new(MaxOp)),
+        _ => None,
+    }
+}
+
+/// Instrumentation wrapper: counts invocations and combined elements.
+/// The T1/T2 benches use this to report the exact ⊕ counts of
+/// Theorems 1 and 2.
+pub struct CountingOp<'a> {
+    pub inner: &'a dyn ReduceOp,
+    pub calls: AtomicU64,
+    pub elems: AtomicU64,
+}
+
+impl<'a> CountingOp<'a> {
+    pub fn new(inner: &'a dyn ReduceOp) -> Self {
+        Self { inner, calls: AtomicU64::new(0), elems: AtomicU64::new(0) }
+    }
+
+    pub fn calls(&self) -> u64 {
+        self.calls.load(Ordering::Relaxed)
+    }
+
+    pub fn elems(&self) -> u64 {
+        self.elems.load(Ordering::Relaxed)
+    }
+}
+
+impl<'a> ReduceOp for CountingOp<'a> {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn combine(&self, acc: &mut [f32], other: &[f32]) {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        self.elems.fetch_add(acc.len() as u64, Ordering::Relaxed);
+        self.inner.combine(acc, other);
+    }
+
+    fn identity(&self) -> f32 {
+        self.inner.identity()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_known_ops() {
+        for name in ["sum", "prod", "min", "max"] {
+            assert_eq!(parse_native(name).unwrap().name(), name);
+        }
+        assert!(parse_native("xor").is_none());
+    }
+
+    #[test]
+    fn counting_op_counts() {
+        let sum = SumOp;
+        let c = CountingOp::new(&sum);
+        let mut a = vec![1.0f32; 10];
+        c.combine(&mut a, &vec![2.0f32; 10]);
+        c.combine(&mut a[..5], &vec![3.0f32; 5]);
+        assert_eq!(c.calls(), 2);
+        assert_eq!(c.elems(), 15);
+        assert_eq!(a[0], 6.0);
+        assert_eq!(a[9], 3.0);
+    }
+}

@@ -1,0 +1,173 @@
+//! Native (pure Rust) reduction operators.
+//!
+//! The loops are written as simple index-free iterator zips over equal-length
+//! slices so LLVM autovectorizes them; `perf_hotpath` measures them against
+//! the single-core streaming roofline (§Perf in DESIGN.md).
+
+use super::ReduceOp;
+
+/// Shared shape check with a useful message.
+#[inline]
+fn check(acc: &[f32], other: &[f32]) {
+    assert_eq!(
+        acc.len(),
+        other.len(),
+        "⊕ operands must have equal length (acc={}, other={})",
+        acc.len(),
+        other.len()
+    );
+}
+
+/// Marker trait so generic tests can enumerate the native ops.
+pub trait NativeOp: ReduceOp + Default + Copy {}
+
+/// Elementwise addition (MPI_SUM).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct SumOp;
+
+impl ReduceOp for SumOp {
+    fn name(&self) -> &'static str {
+        "sum"
+    }
+
+    fn combine(&self, acc: &mut [f32], other: &[f32]) {
+        check(acc, other);
+        for (a, b) in acc.iter_mut().zip(other) {
+            *a += *b;
+        }
+    }
+
+    fn identity(&self) -> f32 {
+        0.0
+    }
+}
+impl NativeOp for SumOp {}
+
+/// Elementwise product (MPI_PROD).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ProdOp;
+
+impl ReduceOp for ProdOp {
+    fn name(&self) -> &'static str {
+        "prod"
+    }
+
+    fn combine(&self, acc: &mut [f32], other: &[f32]) {
+        check(acc, other);
+        for (a, b) in acc.iter_mut().zip(other) {
+            *a *= *b;
+        }
+    }
+
+    fn identity(&self) -> f32 {
+        1.0
+    }
+}
+impl NativeOp for ProdOp {}
+
+/// Elementwise minimum (MPI_MIN).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct MinOp;
+
+impl ReduceOp for MinOp {
+    fn name(&self) -> &'static str {
+        "min"
+    }
+
+    fn combine(&self, acc: &mut [f32], other: &[f32]) {
+        check(acc, other);
+        for (a, b) in acc.iter_mut().zip(other) {
+            *a = a.min(*b);
+        }
+    }
+
+    fn identity(&self) -> f32 {
+        f32::INFINITY
+    }
+}
+impl NativeOp for MinOp {}
+
+/// Elementwise maximum (MPI_MAX).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct MaxOp;
+
+impl ReduceOp for MaxOp {
+    fn name(&self) -> &'static str {
+        "max"
+    }
+
+    fn combine(&self, acc: &mut [f32], other: &[f32]) {
+        check(acc, other);
+        for (a, b) in acc.iter_mut().zip(other) {
+            *a = a.max(*b);
+        }
+    }
+
+    fn identity(&self) -> f32 {
+        f32::NEG_INFINITY
+    }
+}
+impl NativeOp for MaxOp {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ops() -> Vec<Box<dyn ReduceOp>> {
+        vec![Box::new(SumOp), Box::new(ProdOp), Box::new(MinOp), Box::new(MaxOp)]
+    }
+
+    #[test]
+    fn identities_are_identities() {
+        for op in ops() {
+            let mut acc = vec![op.identity(); 16];
+            let data: Vec<f32> = (0..16).map(|i| i as f32 - 7.5).collect();
+            op.combine(&mut acc, &data);
+            assert_eq!(acc, data, "{} identity not neutral", op.name());
+        }
+    }
+
+    #[test]
+    fn commutative_on_random_data() {
+        use crate::util::rng::SplitMix64;
+        let mut rng = SplitMix64::new(17);
+        for op in ops() {
+            let x = rng.normal_vec(257);
+            let y = rng.normal_vec(257);
+            let mut a = x.clone();
+            op.combine(&mut a, &y);
+            let mut b = y.clone();
+            op.combine(&mut b, &x);
+            assert_eq!(a, b, "{} not commutative", op.name());
+        }
+    }
+
+    #[test]
+    fn known_values() {
+        let mut a = vec![1.0, -2.0, 3.0];
+        SumOp.combine(&mut a, &[4.0, 5.0, -6.0]);
+        assert_eq!(a, vec![5.0, 3.0, -3.0]);
+        let mut a = vec![2.0, 3.0, 4.0];
+        ProdOp.combine(&mut a, &[0.5, -1.0, 0.0]);
+        assert_eq!(a, vec![1.0, -3.0, 0.0]);
+        let mut a = vec![1.0, -2.0];
+        MinOp.combine(&mut a, &[0.0, 5.0]);
+        assert_eq!(a, vec![0.0, -2.0]);
+        let mut a = vec![1.0, -2.0];
+        MaxOp.combine(&mut a, &[0.0, 5.0]);
+        assert_eq!(a, vec![1.0, 5.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "equal length")]
+    fn length_mismatch_panics() {
+        let mut a = vec![0.0; 3];
+        SumOp.combine(&mut a, &[0.0; 4]);
+    }
+
+    #[test]
+    fn empty_slices_ok() {
+        let mut a: Vec<f32> = vec![];
+        SumOp.combine(&mut a, &[]);
+    }
+}

@@ -1,0 +1,267 @@
+//! PJRT execution engine: load AOT HLO-text artifacts, compile once,
+//! execute from the Layer-3 hot path.
+//!
+//! This is the runtime half of the three-layer architecture: the HLO was
+//! produced from the Layer-2 JAX graphs (which call the Layer-1 Pallas
+//! kernels) by `python/compile/aot.py`; Python is never invoked here.
+//!
+//! Executables are compiled lazily and cached per artifact. Combine
+//! requests are *shape-bucketed*: a request of `n` elements runs on the
+//! smallest compiled bucket ≥ `n`, padded with the operator's identity;
+//! requests larger than the largest bucket are chunked. Padding/chunking
+//! policies are measured in the perf bench (`perf_hotpath`).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::{Artifact, Manifest};
+
+/// A PJRT client plus the compiled-executable cache.
+pub struct Engine {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    /// Keyed by artifact file name.
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    /// Execution counters (hot-path visibility for the perf pass).
+    pub stats: Mutex<EngineStats>,
+}
+
+/// Counters for engine activity.
+#[derive(Debug, Default, Clone)]
+pub struct EngineStats {
+    pub compiles: u64,
+    pub executions: u64,
+    pub padded_elems: u64,
+    pub chunked_calls: u64,
+}
+
+impl Engine {
+    /// Create a CPU PJRT engine over the artifacts in `dir`.
+    pub fn load(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = Manifest::load(&dir).context("loading artifact manifest")?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self { manifest, client, cache: Mutex::new(HashMap::new()), stats: Mutex::new(EngineStats::default()) })
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) executable for an artifact.
+    fn executable(&self, art: &Artifact) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        let key = art.file.to_string_lossy().to_string();
+        if let Some(exe) = self.cache.lock().unwrap().get(&key) {
+            return Ok(exe.clone());
+        }
+        let path = art.file.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parsing HLO text {path}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {path}: {e:?}"))?;
+        let exe = std::sync::Arc::new(exe);
+        self.stats.lock().unwrap().compiles += 1;
+        self.cache.lock().unwrap().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Warm the cache: compile every combine bucket for `op` (and the
+    /// scaled/mlp artifacts if requested). Called at coordinator startup so
+    /// compilation never happens on the request path.
+    pub fn warmup(&self, ops: &[&str], scaled: bool, mlp: bool) -> Result<usize> {
+        let mut compiled = 0;
+        let artifacts: Vec<Artifact> = self.manifest.artifacts.clone();
+        for art in &artifacts {
+            let wanted = match art.kind {
+                super::manifest::ArtifactKind::Combine => ops.contains(&art.op.as_str()),
+                super::manifest::ArtifactKind::CombineScaled => scaled,
+                super::manifest::ArtifactKind::MlpLossGrad => mlp,
+            };
+            if wanted {
+                self.executable(art)?;
+                compiled += 1;
+            }
+        }
+        Ok(compiled)
+    }
+
+    /// Execute one bucket-sized combine: inputs must be exactly `art.n`.
+    fn run_combine_exact(&self, art: &Artifact, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        debug_assert_eq!(a.len(), art.n);
+        debug_assert_eq!(b.len(), art.n);
+        let exe = self.executable(art)?;
+        let la = xla::Literal::vec1(a);
+        let lb = xla::Literal::vec1(b);
+        let result = exe
+            .execute::<xla::Literal>(&[la, lb])
+            .map_err(|e| anyhow!("execute combine: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let out = result.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        self.stats.lock().unwrap().executions += 1;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+
+    /// Preferred chunk bucket for large combines.
+    ///
+    /// Perf note (EXPERIMENTS.md §Perf): under CPU interpret-mode Pallas,
+    /// per-call dispatch amortizes up to ~8 Ki elements but the lowered
+    /// grid loop makes *larger* buckets slower per element, inverting the
+    /// usual amortization — so big requests are chunked at the measured
+    /// sweet spot instead of routed to the largest bucket. On a real TPU
+    /// (Mosaic pipelines the grid) the largest bucket would win; override
+    /// with `CCOLL_PJRT_CHUNK=<elems>`.
+    fn preferred_chunk(&self) -> usize {
+        static CHUNK: std::sync::OnceLock<Option<usize>> = std::sync::OnceLock::new();
+        let env = *CHUNK.get_or_init(|| {
+            std::env::var("CCOLL_PJRT_CHUNK").ok().and_then(|v| v.parse().ok())
+        });
+        let want = env.unwrap_or(8192);
+        // snap to an available bucket
+        self.manifest
+            .buckets
+            .iter()
+            .copied()
+            .min_by_key(|&b| b.abs_diff(want))
+            .unwrap_or(want)
+    }
+
+    /// `acc ⊕= other` through the AOT Pallas kernel, with bucketing,
+    /// identity padding and chunking. `identity` must be ⊕'s identity.
+    pub fn combine_into(&self, op: &str, acc: &mut [f32], other: &[f32], identity: f32) -> Result<()> {
+        anyhow::ensure!(acc.len() == other.len(), "length mismatch");
+        if acc.is_empty() {
+            return Ok(());
+        }
+        let chunk = self.preferred_chunk();
+        let mut off = 0usize;
+        while off < acc.len() {
+            let rest = acc.len() - off;
+            // Throughput-aware policy: chunk long requests at the sweet
+            // spot; route short (and tail) requests to the smallest
+            // covering bucket.
+            let want = if rest > chunk { chunk } else { rest };
+            let art = self
+                .manifest
+                .combine_bucket(op, want)
+                .ok_or_else(|| anyhow!("no combine artifact for op {op}"))?
+                .clone();
+            let take = art.n.min(rest);
+            if take < acc.len() - off {
+                self.stats.lock().unwrap().chunked_calls += 1;
+            }
+            let out = if take == art.n {
+                self.run_combine_exact(&art, &acc[off..off + take], &other[off..off + take])?
+            } else {
+                // pad with identity up to the bucket
+                let mut pa = vec![identity; art.n];
+                let mut pb = vec![identity; art.n];
+                pa[..take].copy_from_slice(&acc[off..off + take]);
+                pb[..take].copy_from_slice(&other[off..off + take]);
+                self.stats.lock().unwrap().padded_elems += (art.n - take) as u64;
+                self.run_combine_exact(&art, &pa, &pb)?
+            };
+            acc[off..off + take].copy_from_slice(&out[..take]);
+            off += take;
+        }
+        Ok(())
+    }
+
+    /// Diagnostic: run one combine on the *exact* bucket `n == art.n`,
+    /// bypassing the chunking policy — used by `perf_hotpath` to profile
+    /// buckets individually. Not a hot-path API.
+    pub fn combine_bucket_exact(&self, op: &str, acc: &mut [f32], other: &[f32]) -> Result<()> {
+        let art = self
+            .manifest
+            .combine_bucket(op, acc.len())
+            .ok_or_else(|| anyhow!("no combine artifact for op {op}"))?
+            .clone();
+        anyhow::ensure!(art.n == acc.len(), "not an exact bucket: {} (nearest {})", acc.len(), art.n);
+        let out = self.run_combine_exact(&art, acc, other)?;
+        acc.copy_from_slice(&out);
+        Ok(())
+    }
+
+    /// `r + scale·t` (fused gradient averaging), same bucketing rules.
+    pub fn combine_scaled_into(&self, r: &mut [f32], t: &[f32], scale: f32) -> Result<()> {
+        anyhow::ensure!(r.len() == t.len(), "length mismatch");
+        if r.is_empty() {
+            return Ok(());
+        }
+        let mut off = 0usize;
+        while off < r.len() {
+            let art = self
+                .manifest
+                .combine_scaled_bucket(r.len() - off)
+                .ok_or_else(|| anyhow!("no combine_scaled artifact"))?
+                .clone();
+            let take = art.n.min(r.len() - off);
+            let (pa, pb);
+            let (sa, sb): (&[f32], &[f32]) = if take == art.n {
+                (&r[off..off + take], &t[off..off + take])
+            } else {
+                pa = {
+                    let mut v = vec![0.0f32; art.n];
+                    v[..take].copy_from_slice(&r[off..off + take]);
+                    v
+                };
+                pb = {
+                    let mut v = vec![0.0f32; art.n];
+                    v[..take].copy_from_slice(&t[off..off + take]);
+                    v
+                };
+                self.stats.lock().unwrap().padded_elems += (art.n - take) as u64;
+                (&pa[..], &pb[..])
+            };
+            let exe = self.executable(&art)?;
+            let result = exe
+                .execute::<xla::Literal>(&[
+                    xla::Literal::vec1(sa),
+                    xla::Literal::vec1(sb),
+                    xla::Literal::scalar(scale),
+                ])
+                .map_err(|e| anyhow!("execute combine_scaled: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetch: {e:?}"))?;
+            let out = result.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+            let out = out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+            r[off..off + take].copy_from_slice(&out[..take]);
+            self.stats.lock().unwrap().executions += 1;
+            off += take;
+        }
+        Ok(())
+    }
+
+    /// Run the MLP loss+grad artifact: `(loss, grad)` for flat `params`,
+    /// batch `x` (row-major `[batch, d_in]`) and targets `y` (`[batch, d_out]`).
+    pub fn mlp_loss_grad(&self, params: &[f32], x: &[f32], y: &[f32]) -> Result<(f32, Vec<f32>)> {
+        let meta = self.manifest.mlp;
+        anyhow::ensure!(params.len() == meta.params, "params len {} != {}", params.len(), meta.params);
+        anyhow::ensure!(x.len() == meta.batch * meta.d_in, "x len");
+        anyhow::ensure!(y.len() == meta.batch * meta.d_out, "y len");
+        let art = self.manifest.mlp_artifact().ok_or_else(|| anyhow!("no mlp artifact"))?.clone();
+        let exe = self.executable(&art)?;
+        let lp = xla::Literal::vec1(params);
+        let lx = xla::Literal::vec1(x)
+            .reshape(&[meta.batch as i64, meta.d_in as i64])
+            .map_err(|e| anyhow!("reshape x: {e:?}"))?;
+        let ly = xla::Literal::vec1(y)
+            .reshape(&[meta.batch as i64, meta.d_out as i64])
+            .map_err(|e| anyhow!("reshape y: {e:?}"))?;
+        let result = exe
+            .execute::<xla::Literal>(&[lp, lx, ly])
+            .map_err(|e| anyhow!("execute mlp: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch: {e:?}"))?;
+        let (loss_l, grad_l) = result.to_tuple2().map_err(|e| anyhow!("untuple2: {e:?}"))?;
+        let loss = loss_l.get_first_element::<f32>().map_err(|e| anyhow!("loss: {e:?}"))?;
+        let grad = grad_l.to_vec::<f32>().map_err(|e| anyhow!("grad: {e:?}"))?;
+        self.stats.lock().unwrap().executions += 1;
+        Ok((loss, grad))
+    }
+}

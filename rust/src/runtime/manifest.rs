@@ -1,0 +1,221 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// One AOT artifact (an HLO-text module plus its signature).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Artifact {
+    pub file: PathBuf,
+    pub kind: ArtifactKind,
+    /// Operator name for combine artifacts ("sum"/"prod"/"min"/"max"),
+    /// "fma" for combine_scaled, "none" for models.
+    pub op: String,
+    /// Bucket length (combine) or parameter count (mlp).
+    pub n: usize,
+    pub inputs: Vec<Vec<usize>>,
+    pub outputs: Vec<Vec<usize>>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    Combine,
+    CombineScaled,
+    MlpLossGrad,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Option<Self> {
+        match s {
+            "combine" => Some(Self::Combine),
+            "combine_scaled" => Some(Self::CombineScaled),
+            "mlp_loss_grad" => Some(Self::MlpLossGrad),
+            _ => None,
+        }
+    }
+}
+
+/// MLP architecture constants recorded by the AOT step (the Rust training
+/// driver sizes its buffers from these, never hard-coding python values).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MlpMeta {
+    pub params: usize,
+    pub d_in: usize,
+    pub hidden: usize,
+    pub d_out: usize,
+    pub batch: usize,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub buckets: Vec<usize>,
+    pub ops: Vec<String>,
+    pub mlp: MlpMeta,
+    pub artifacts: Vec<Artifact>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ManifestError {
+    #[error("cannot read manifest {path}: {source}")]
+    Io { path: PathBuf, source: std::io::Error },
+    #[error("manifest parse error: {0}")]
+    Json(#[from] crate::util::json::JsonError),
+    #[error("manifest format {got} unsupported (want 1)")]
+    Format { got: usize },
+    #[error("manifest missing/invalid field: {0}")]
+    Field(&'static str),
+}
+
+fn shape_list(j: &Json) -> Option<Vec<Vec<usize>>> {
+    j.as_arr()?
+        .iter()
+        .map(|s| s.as_arr().map(|dims| dims.iter().filter_map(Json::as_usize).collect()))
+        .collect()
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self, ManifestError> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|source| ManifestError::Io { path: path.clone(), source })?;
+        let j = Json::parse(&text)?;
+        let format = j.get("format").and_then(Json::as_usize).ok_or(ManifestError::Field("format"))?;
+        if format != 1 {
+            return Err(ManifestError::Format { got: format });
+        }
+        let buckets = j
+            .get("buckets")
+            .and_then(Json::as_arr)
+            .ok_or(ManifestError::Field("buckets"))?
+            .iter()
+            .filter_map(Json::as_usize)
+            .collect();
+        let ops = j
+            .get("ops")
+            .and_then(Json::as_arr)
+            .ok_or(ManifestError::Field("ops"))?
+            .iter()
+            .filter_map(|x| x.as_str().map(str::to_string))
+            .collect();
+        let mlp_j = j.get("mlp").ok_or(ManifestError::Field("mlp"))?;
+        let geti = |k: &'static str| -> Result<usize, ManifestError> {
+            mlp_j.get(k).and_then(Json::as_usize).ok_or(ManifestError::Field(k))
+        };
+        let mlp = MlpMeta {
+            params: geti("params")?,
+            d_in: geti("d_in")?,
+            hidden: geti("hidden")?,
+            d_out: geti("d_out")?,
+            batch: geti("batch")?,
+        };
+        let mut artifacts = Vec::new();
+        for a in j.get("artifacts").and_then(Json::as_arr).ok_or(ManifestError::Field("artifacts"))? {
+            let kind = a
+                .get("kind")
+                .and_then(Json::as_str)
+                .and_then(ArtifactKind::parse)
+                .ok_or(ManifestError::Field("kind"))?;
+            artifacts.push(Artifact {
+                file: dir.join(a.get("file").and_then(Json::as_str).ok_or(ManifestError::Field("file"))?),
+                kind,
+                op: a.get("op").and_then(Json::as_str).unwrap_or("none").to_string(),
+                n: a.get("n").and_then(Json::as_usize).ok_or(ManifestError::Field("n"))?,
+                inputs: a.get("inputs").and_then(shape_list).ok_or(ManifestError::Field("inputs"))?,
+                outputs: a.get("outputs").and_then(shape_list).ok_or(ManifestError::Field("outputs"))?,
+            });
+        }
+        Ok(Self { dir, buckets, ops, mlp, artifacts })
+    }
+
+    /// Find the combine artifact for `op` with the smallest bucket ≥ `n`.
+    /// Falls back to the largest bucket (caller chunks) if `n` exceeds all.
+    pub fn combine_bucket(&self, op: &str, n: usize) -> Option<&Artifact> {
+        let mut best: Option<&Artifact> = None;
+        let mut largest: Option<&Artifact> = None;
+        for a in &self.artifacts {
+            if a.kind != ArtifactKind::Combine || a.op != op {
+                continue;
+            }
+            if largest.is_none_or(|l| a.n > l.n) {
+                largest = Some(a);
+            }
+            if a.n >= n && best.is_none_or(|b| a.n < b.n) {
+                best = Some(a);
+            }
+        }
+        best.or(largest)
+    }
+
+    pub fn mlp_artifact(&self) -> Option<&Artifact> {
+        self.artifacts.iter().find(|a| a.kind == ArtifactKind::MlpLossGrad)
+    }
+
+    pub fn combine_scaled_bucket(&self, n: usize) -> Option<&Artifact> {
+        let mut best: Option<&Artifact> = None;
+        let mut largest: Option<&Artifact> = None;
+        for a in &self.artifacts {
+            if a.kind != ArtifactKind::CombineScaled {
+                continue;
+            }
+            if largest.is_none_or(|l| a.n > l.n) {
+                largest = Some(a);
+            }
+            if a.n >= n && best.is_none_or(|b| a.n < b.n) {
+                best = Some(a);
+            }
+        }
+        best.or(largest)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_manifest(dir: &Path) {
+        let text = r#"{
+          "format": 1, "jax": "0.8.2", "buckets": [8, 32],
+          "ops": ["sum", "max"],
+          "mlp": {"params": 10, "d_in": 2, "hidden": 3, "d_out": 1, "batch": 4},
+          "artifacts": [
+            {"file": "combine_sum_8.hlo.txt", "kind": "combine", "op": "sum",
+             "n": 8, "inputs": [[8],[8]], "outputs": [[8]]},
+            {"file": "combine_sum_32.hlo.txt", "kind": "combine", "op": "sum",
+             "n": 32, "inputs": [[32],[32]], "outputs": [[32]]},
+            {"file": "mlp.hlo.txt", "kind": "mlp_loss_grad", "op": "none",
+             "n": 10, "inputs": [[10],[4,2],[4,1]], "outputs": [[],[10]]}
+          ]
+        }"#;
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+    }
+
+    #[test]
+    fn loads_and_selects_buckets() {
+        let dir = std::env::temp_dir().join(format!("ccoll-manifest-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        fake_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.buckets, vec![8, 32]);
+        assert_eq!(m.mlp.params, 10);
+        assert_eq!(m.combine_bucket("sum", 5).unwrap().n, 8);
+        assert_eq!(m.combine_bucket("sum", 8).unwrap().n, 8);
+        assert_eq!(m.combine_bucket("sum", 9).unwrap().n, 32);
+        // larger than all buckets → largest (caller chunks)
+        assert_eq!(m.combine_bucket("sum", 100).unwrap().n, 32);
+        assert!(m.combine_bucket("prod", 5).is_none());
+        assert!(m.mlp_artifact().is_some());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_io_error() {
+        let err = Manifest::load("/nonexistent-dir-xyz").unwrap_err();
+        assert!(matches!(err, ManifestError::Io { .. }));
+    }
+}

@@ -1,0 +1,36 @@
+//! PJRT runtime: AOT artifact loading and execution (Layer 2/1 → Layer 3
+//! bridge). See `engine` for the executable cache and `manifest` for the
+//! python↔rust contract; [`ServiceOp`] adapts the AOT Pallas combine kernel to
+//! the [`crate::ops::ReduceOp`] interface so collectives can run their γ
+//! term through XLA.
+
+pub mod engine;
+pub mod manifest;
+pub mod service;
+
+pub use engine::{Engine, EngineStats};
+pub use service::{ComputeService, ServiceHandle, ServiceOp};
+pub use manifest::{Artifact, ArtifactKind, Manifest, ManifestError};
+
+// NOTE: `PjRtClient` is `Rc`-based (not `Send`), so the [`Engine`] is
+// thread-confined. Cross-thread access goes through the compute service
+// ([`ComputeService`] / [`ServiceOp`]); single-thread code (benches, the
+// perf harness) may use [`Engine`] directly.
+
+/// Default artifact directory: `$CCOLL_ARTIFACTS` or `artifacts/` found by
+/// walking up from the current directory.
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    if let Ok(dir) = std::env::var("CCOLL_ARTIFACTS") {
+        return dir.into();
+    }
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !cur.pop() {
+            return "artifacts".into();
+        }
+    }
+}

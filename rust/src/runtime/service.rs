@@ -1,0 +1,176 @@
+//! Compute service: a dedicated thread owning the PJRT [`Engine`].
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (not `Send`), so the engine
+//! cannot be shared across the rank threads directly. Instead the
+//! coordinator runs one *compute service* thread that owns the engine —
+//! the same shape as a real deployment where γ-work is offloaded to a
+//! single accelerator queue — and rank threads submit combine / model
+//! requests through a channel. [`ServiceOp`] adapts the handle to the
+//! [`ReduceOp`] interface so the schedule executor is oblivious to the
+//! backend.
+
+use std::sync::mpsc::{channel, Sender};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use super::Engine;
+use crate::ops::ReduceOp;
+
+enum Request {
+    Combine { op: &'static str, acc: Vec<f32>, other: Vec<f32>, identity: f32, reply: Sender<Result<Vec<f32>>> },
+    CombineScaled { r: Vec<f32>, t: Vec<f32>, scale: f32, reply: Sender<Result<Vec<f32>>> },
+    MlpLossGrad { params: Vec<f32>, x: Vec<f32>, y: Vec<f32>, reply: Sender<Result<(f32, Vec<f32>)>> },
+    Stats { reply: Sender<super::EngineStats> },
+    Shutdown,
+}
+
+/// Cloneable, `Send` handle to the compute service.
+#[derive(Clone)]
+pub struct ServiceHandle {
+    tx: Sender<Request>,
+}
+
+/// The running service (join on drop of the owner).
+pub struct ComputeService {
+    pub handle: ServiceHandle,
+    thread: Option<JoinHandle<()>>,
+    shutdown_tx: Sender<Request>,
+}
+
+impl ComputeService {
+    /// Spawn the service over the artifacts in `dir`, pre-compiling the
+    /// given ops (plus scaled/mlp artifacts if flagged).
+    pub fn start(
+        dir: impl AsRef<std::path::Path>,
+        warm_ops: Vec<String>,
+        warm_scaled: bool,
+        warm_mlp: bool,
+    ) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let (tx, rx) = channel::<Request>();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let thread = std::thread::Builder::new()
+            .name("pjrt-compute".into())
+            .spawn(move || {
+                let engine = match Engine::load(&dir) {
+                    Ok(e) => e,
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                let ops: Vec<&str> = warm_ops.iter().map(String::as_str).collect();
+                if let Err(e) = engine.warmup(&ops, warm_scaled, warm_mlp) {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+                let _ = ready_tx.send(Ok(()));
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::Combine { op, mut acc, other, identity, reply } => {
+                            let res = engine
+                                .combine_into(op, &mut acc, &other, identity)
+                                .map(|()| acc);
+                            let _ = reply.send(res);
+                        }
+                        Request::CombineScaled { mut r, t, scale, reply } => {
+                            let res = engine.combine_scaled_into(&mut r, &t, scale).map(|()| r);
+                            let _ = reply.send(res);
+                        }
+                        Request::MlpLossGrad { params, x, y, reply } => {
+                            let _ = reply.send(engine.mlp_loss_grad(&params, &x, &y));
+                        }
+                        Request::Stats { reply } => {
+                            let _ = reply.send(engine.stats.lock().unwrap().clone());
+                        }
+                        Request::Shutdown => break,
+                    }
+                }
+            })
+            .expect("spawn compute service");
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("compute service died during startup"))??;
+        Ok(Self { handle: ServiceHandle { tx: tx.clone() }, thread: Some(thread), shutdown_tx: tx })
+    }
+}
+
+impl Drop for ComputeService {
+    fn drop(&mut self) {
+        let _ = self.shutdown_tx.send(Request::Shutdown);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl ServiceHandle {
+    pub fn combine(&self, op: &'static str, acc: Vec<f32>, other: Vec<f32>, identity: f32) -> Result<Vec<f32>> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Request::Combine { op, acc, other, identity, reply })
+            .map_err(|_| anyhow!("compute service gone"))?;
+        rx.recv().map_err(|_| anyhow!("compute service dropped reply"))?
+    }
+
+    pub fn combine_scaled(&self, r: Vec<f32>, t: Vec<f32>, scale: f32) -> Result<Vec<f32>> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Request::CombineScaled { r, t, scale, reply })
+            .map_err(|_| anyhow!("compute service gone"))?;
+        rx.recv().map_err(|_| anyhow!("compute service dropped reply"))?
+    }
+
+    pub fn mlp_loss_grad(&self, params: Vec<f32>, x: Vec<f32>, y: Vec<f32>) -> Result<(f32, Vec<f32>)> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Request::MlpLossGrad { params, x, y, reply })
+            .map_err(|_| anyhow!("compute service gone"))?;
+        rx.recv().map_err(|_| anyhow!("compute service dropped reply"))?
+    }
+
+    pub fn stats(&self) -> Result<super::EngineStats> {
+        let (reply, rx) = channel();
+        self.tx.send(Request::Stats { reply }).map_err(|_| anyhow!("compute service gone"))?;
+        rx.recv().map_err(|_| anyhow!("compute service dropped reply"))
+    }
+}
+
+/// [`ReduceOp`] over the compute service — usable from any rank thread.
+pub struct ServiceOp {
+    handle: ServiceHandle,
+    op: &'static str,
+    identity: f32,
+}
+
+impl ServiceOp {
+    pub fn new(handle: ServiceHandle, op: &str) -> Option<Self> {
+        let (op, identity): (&'static str, f32) = match op {
+            "sum" => ("sum", 0.0),
+            "prod" => ("prod", 1.0),
+            "min" => ("min", f32::INFINITY),
+            "max" => ("max", f32::NEG_INFINITY),
+            _ => return None,
+        };
+        Some(Self { handle, op, identity })
+    }
+}
+
+impl ReduceOp for ServiceOp {
+    fn name(&self) -> &'static str {
+        self.op
+    }
+
+    fn combine(&self, acc: &mut [f32], other: &[f32]) {
+        let out = self
+            .handle
+            .combine(self.op, acc.to_vec(), other.to_vec(), self.identity)
+            .unwrap_or_else(|e| panic!("service combine({}): {e}", self.op));
+        acc.copy_from_slice(&out);
+    }
+
+    fn identity(&self) -> f32 {
+        self.identity
+    }
+}

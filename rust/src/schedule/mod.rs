@@ -1,0 +1,263 @@
+//! Schedule IR — the common language of all collectives.
+//!
+//! Every algorithm in this library (Algorithm 1/2 and all baselines) is
+//! expressed as a [`Schedule`]: per communication round, per rank, at most
+//! one send and one receive of a *circular range of global blocks* plus the
+//! action applied to received data. The same schedule object is:
+//!
+//!   * executed with real data over the thread transport
+//!     (`collectives::exec`),
+//!   * evaluated in the α-β-γ cost model (`sim::CostSimulator`), and
+//!   * checked by structural property tests (`Schedule::assert_valid` and
+//!     `rust/tests/prop_schedules.rs`).
+//!
+//! Block ranges use **global block ids** with the executor keeping buffers
+//! in global layout; a range that wraps mod p resolves to at most two
+//! contiguous memory slices (`BlockPartition::circular_ranges`). This is
+//! the datatype-style zero-copy representation §3 of the paper alludes to —
+//! no rotated copy of the input is ever materialized.
+
+use crate::datatypes::BlockPartition;
+
+/// A circular range of `len` global blocks starting at block `start`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockRange {
+    pub start: usize,
+    pub len: usize,
+}
+
+impl BlockRange {
+    pub fn new(start: usize, len: usize) -> Self {
+        Self { start, len }
+    }
+
+    /// Normalize `start` into `0..p` (generators may produce `r + s`).
+    pub fn normalized(self, p: usize) -> Self {
+        Self { start: self.start % p, len: self.len }
+    }
+}
+
+/// What the receiver does with an incoming payload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecvAction {
+    /// `R[range] ⊕= payload` — reduce-scatter phases.
+    Combine,
+    /// `R[range] ← payload` — allgather / broadcast phases.
+    Store,
+}
+
+/// One rank's directed transfer in one round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Transfer {
+    pub peer: usize,
+    pub blocks: BlockRange,
+}
+
+/// One rank's receive in one round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Recv {
+    pub peer: usize,
+    pub blocks: BlockRange,
+    pub action: RecvAction,
+}
+
+/// One rank's activity in one round (either side may be absent — e.g. tree
+/// algorithms have one-directional rounds, folds have idle ranks).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RankStep {
+    pub send: Option<Transfer>,
+    pub recv: Option<Recv>,
+}
+
+impl RankStep {
+    pub fn idle() -> Self {
+        Self::default()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.send.is_none() && self.recv.is_none()
+    }
+}
+
+/// One synchronous communication round: `steps[r]` is rank r's activity.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Round {
+    pub steps: Vec<RankStep>,
+}
+
+impl Round {
+    pub fn idle(p: usize) -> Self {
+        Self { steps: vec![RankStep::idle(); p] }
+    }
+}
+
+/// A complete collective schedule for `p` ranks.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    pub p: usize,
+    /// Human-readable algorithm name (for tables and error messages).
+    pub name: String,
+    pub rounds: Vec<Round>,
+}
+
+/// Per-rank volume/round counters derived from a schedule — the quantities
+/// Theorems 1 and 2 bound.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct RankCounters {
+    /// Rounds in which this rank sent or received anything.
+    pub active_rounds: usize,
+    pub blocks_sent: usize,
+    pub blocks_recv: usize,
+    pub elems_sent: usize,
+    pub elems_recv: usize,
+    /// Blocks combined with ⊕ (recv with `Combine`).
+    pub blocks_combined: usize,
+    pub elems_combined: usize,
+}
+
+impl Schedule {
+    pub fn new(p: usize, name: impl Into<String>) -> Self {
+        Self { p, name: name.into(), rounds: Vec::new() }
+    }
+
+    pub fn num_rounds(&self) -> usize {
+        self.rounds.len()
+    }
+
+    /// Structural validation:
+    ///  * step vectors sized `p`, peers in range, ranges in range;
+    ///  * one-ported: ≤1 send and ≤1 recv per rank per round (by type);
+    ///  * matching: every send `(r → t, B)` has at `t` a recv
+    ///    `(from r, B)` over the *same global blocks*, and vice versa.
+    pub fn assert_valid(&self) {
+        for (k, round) in self.rounds.iter().enumerate() {
+            assert_eq!(round.steps.len(), self.p, "{}: round {k} wrong arity", self.name);
+            for (r, step) in round.steps.iter().enumerate() {
+                if let Some(send) = &step.send {
+                    assert!(send.peer < self.p, "{}: r{r} round {k} bad peer", self.name);
+                    assert!(send.peer != r, "{}: r{r} round {k} self-send", self.name);
+                    assert!(
+                        send.blocks.len >= 1 && send.blocks.len <= self.p,
+                        "{}: r{r} round {k} bad send len",
+                        self.name
+                    );
+                    assert!(send.blocks.start < self.p);
+                    // matching recv at the peer
+                    let peer_recv = round.steps[send.peer]
+                        .recv
+                        .unwrap_or_else(|| panic!("{}: r{r} round {k} unmatched send", self.name));
+                    assert_eq!(peer_recv.peer, r, "{}: round {k} recv peer mismatch", self.name);
+                    assert_eq!(
+                        peer_recv.blocks, send.blocks,
+                        "{}: round {k} {r}→{} block range mismatch",
+                        self.name, send.peer
+                    );
+                }
+                if let Some(recv) = &step.recv {
+                    assert!(recv.peer < self.p && recv.peer != r);
+                    let peer_send = round.steps[recv.peer]
+                        .send
+                        .unwrap_or_else(|| panic!("{}: r{r} round {k} unmatched recv", self.name));
+                    assert_eq!(peer_send.peer, r);
+                }
+            }
+        }
+    }
+
+    /// Derive the per-rank counters under a block partition.
+    pub fn counters(&self, part: &BlockPartition) -> Vec<RankCounters> {
+        assert_eq!(part.p(), self.p);
+        let mut out = vec![RankCounters::default(); self.p];
+        for round in &self.rounds {
+            for (r, step) in round.steps.iter().enumerate() {
+                if step.is_idle() {
+                    continue;
+                }
+                out[r].active_rounds += 1;
+                if let Some(send) = &step.send {
+                    let b = send.blocks.normalized(self.p);
+                    out[r].blocks_sent += b.len;
+                    out[r].elems_sent += part.circular_elems(b.start, b.len);
+                }
+                if let Some(recv) = &step.recv {
+                    let b = recv.blocks.normalized(self.p);
+                    out[r].blocks_recv += b.len;
+                    let elems = part.circular_elems(b.start, b.len);
+                    out[r].elems_recv += elems;
+                    if recv.action == RecvAction::Combine {
+                        out[r].blocks_combined += b.len;
+                        out[r].elems_combined += elems;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Max blocks in any single message — the §3 "no sequence longer than
+    /// ⌈p/2⌉" property for the halving-up scheme.
+    pub fn max_message_blocks(&self) -> usize {
+        self.rounds
+            .iter()
+            .flat_map(|r| r.steps.iter())
+            .filter_map(|s| s.send.map(|t| t.blocks.len))
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_valid() -> Schedule {
+        // p=2, one round: 0 and 1 swap block ranges of themselves.
+        let mut s = Schedule::new(2, "tiny");
+        let step0 = RankStep {
+            send: Some(Transfer { peer: 1, blocks: BlockRange::new(1, 1) }),
+            recv: Some(Recv { peer: 1, blocks: BlockRange::new(0, 1), action: RecvAction::Combine }),
+        };
+        let step1 = RankStep {
+            send: Some(Transfer { peer: 0, blocks: BlockRange::new(0, 1) }),
+            recv: Some(Recv { peer: 0, blocks: BlockRange::new(1, 1), action: RecvAction::Combine }),
+        };
+        s.rounds.push(Round { steps: vec![step0, step1] });
+        s
+    }
+
+    #[test]
+    fn valid_schedule_passes() {
+        tiny_valid().assert_valid();
+    }
+
+    #[test]
+    #[should_panic(expected = "unmatched send")]
+    fn unmatched_send_caught() {
+        let mut s = tiny_valid();
+        s.rounds[0].steps[1].recv = None;
+        s.assert_valid();
+    }
+
+    #[test]
+    #[should_panic(expected = "block range mismatch")]
+    fn range_mismatch_caught() {
+        let mut s = tiny_valid();
+        s.rounds[0].steps[1].recv.as_mut().unwrap().blocks = BlockRange::new(0, 2);
+        s.assert_valid();
+    }
+
+    #[test]
+    fn counters_count() {
+        let part = BlockPartition::uniform(2, 4);
+        let c = tiny_valid().counters(&part);
+        assert_eq!(c[0].blocks_sent, 1);
+        assert_eq!(c[0].elems_sent, 4);
+        assert_eq!(c[0].elems_combined, 4);
+        assert_eq!(c[0].active_rounds, 1);
+    }
+
+    #[test]
+    fn normalization_wraps() {
+        assert_eq!(BlockRange::new(7, 2).normalized(5), BlockRange::new(2, 2));
+    }
+}

@@ -1,0 +1,119 @@
+//! Empirical α-β-γ calibration of the *actual* thread-network transport.
+//!
+//! Fits the linear-affine model of Corollary 1 to measurements:
+//!   * α — median round-trip/2 of empty-payload ping-pong between two rank
+//!     threads;
+//!   * β — incremental per-element cost from large-payload ping-pong;
+//!   * γ — per-element cost of the native combine on a large buffer.
+//!
+//! The calibrated model turns the DES from a *relative* predictor into an
+//! absolute one for this substrate (used by `perf_hotpath` to report
+//! wall/DES ratios near 1 instead of arbitrary units).
+
+use std::time::Instant;
+
+use crate::ops::ReduceOp;
+use crate::transport::run_ranks;
+
+use super::CostModel;
+
+/// Median of a small sample (consumes it).
+fn median(mut v: Vec<f64>) -> f64 {
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v[v.len() / 2]
+}
+
+/// Ping-pong `iters` times with `n`-element payloads between 2 ranks;
+/// returns seconds per one-way message.
+fn pingpong(n: usize, iters: usize) -> f64 {
+    let out = run_ranks(2, move |rank, ep| {
+        let payload = vec![0.5f32; n];
+        let peer = 1 - rank;
+        // warmup
+        for round in 0..4u64 {
+            ep.sendrecv(Some((peer, payload.clone())), Some(peer), round).unwrap();
+        }
+        let t0 = Instant::now();
+        for it in 0..iters as u64 {
+            if rank == 0 {
+                ep.send_to(peer, 100 + it, payload.clone()).unwrap();
+                ep.recv_from(peer, 1000 + it).unwrap();
+            } else {
+                let p = ep.recv_from(peer, 100 + it).unwrap();
+                ep.send_to(peer, 1000 + it, p).unwrap();
+            }
+        }
+        t0.elapsed().as_secs_f64()
+    });
+    // total time covers 2·iters one-way messages
+    out[0].min(out[1]) / (2.0 * iters as f64)
+}
+
+/// Calibrate the thread-network transport + a native ⊕.
+/// `reps` controls sampling; keep small (3–5) — each rep spawns threads.
+pub fn calibrate_transport(op: &dyn ReduceOp, reps: usize) -> CostModel {
+    let reps = reps.max(1);
+    let small = 0usize;
+    let big = 1 << 18;
+    let alpha = median((0..reps).map(|_| pingpong(small, 200)).collect());
+    let t_big = median((0..reps).map(|_| pingpong(big, 50)).collect());
+    let beta = ((t_big - alpha) / big as f64).max(1e-13);
+
+    // γ: native combine on a large buffer
+    let n = 1 << 20;
+    let mut acc = vec![1.0f32; n];
+    let other = vec![0.5f32; n];
+    let mut samples = Vec::new();
+    for _ in 0..reps.max(3) {
+        let t0 = Instant::now();
+        op.combine(&mut acc, &other);
+        samples.push(t0.elapsed().as_secs_f64() / n as f64);
+    }
+    let gamma = median(samples).max(1e-13);
+    CostModel::new(alpha.max(1e-9), beta, gamma)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::Algorithm;
+    use crate::collectives::run_schedule_threads;
+    use crate::datatypes::BlockPartition;
+    use crate::ops::SumOp;
+    use crate::sim::simulate;
+    use std::sync::Arc;
+
+    #[test]
+    fn calibration_yields_sane_magnitudes() {
+        let m = calibrate_transport(&SumOp, 2);
+        // channel hop on this box: somewhere between 100 ns and 1 ms
+        assert!(m.alpha > 1e-8 && m.alpha < 1e-3, "alpha {:.3e}", m.alpha);
+        // per-element copy cost: under a microsecond per element, over 1e-12
+        assert!(m.beta > 1e-12 && m.beta < 1e-6, "beta {:.3e}", m.beta);
+        assert!(m.gamma > 1e-12 && m.gamma < 1e-6, "gamma {:.3e}", m.gamma);
+    }
+
+    #[test]
+    fn calibrated_des_predicts_measured_allreduce_within_an_order() {
+        // The point of calibration: absolute agreement within ~one order
+        // of magnitude (thread scheduling noise on 1 core is large).
+        let model = calibrate_transport(&SumOp, 2);
+        let p = 4;
+        let mels = 1 << 16;
+        let part = BlockPartition::regular(p, mels);
+        let sched = Algorithm::parse("ar").unwrap().schedule(p);
+        let inputs: Vec<Vec<f32>> = (0..p).map(|_| vec![1.0f32; mels]).collect();
+        let mut best = f64::INFINITY;
+        for _ in 0..3 {
+            let t0 = std::time::Instant::now();
+            let _ = run_schedule_threads(&sched, &part, Arc::new(SumOp), inputs.clone());
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        let des = simulate(&sched, &part, &model).total;
+        let ratio = best / des;
+        assert!(
+            (0.1..=100.0).contains(&ratio),
+            "measured {best:.6} vs calibrated DES {des:.6} (ratio {ratio:.1})"
+        );
+    }
+}

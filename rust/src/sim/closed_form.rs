@@ -1,0 +1,228 @@
+//! Closed-form time formulas in the α-β-γ model.
+//!
+//! These are the analytic series plotted next to the DES results in F1/F2:
+//! the paper's Corollary 1 and 3 for Algorithms 1/2, and standard formulas
+//! for the baselines ([10, 15, 16, 17] of the paper). All take vector
+//! length `m` (elements) and processor count `p`.
+
+use super::CostModel;
+use crate::util::ceil_log2;
+
+/// Corollary 1: Algorithm 1 (reduce-scatter) on a regular partition.
+/// `T = α⌈log2 p⌉ + β·(p−1)/p·m + γ·(p−1)/p·m`.
+pub fn alg1_reduce_scatter(c: &CostModel, p: usize, m: usize) -> f64 {
+    if p == 1 {
+        return 0.0;
+    }
+    let frac = (p - 1) as f64 / p as f64 * m as f64;
+    c.alpha * ceil_log2(p) as f64 + (c.beta + c.gamma) * frac
+}
+
+/// Theorem 2: Algorithm 2 (allreduce) — reduce-scatter + mirrored
+/// allgather: `2α⌈log2 p⌉ + 2β·(p−1)/p·m + γ·(p−1)/p·m`.
+pub fn alg2_allreduce(c: &CostModel, p: usize, m: usize) -> f64 {
+    if p == 1 {
+        return 0.0;
+    }
+    let frac = (p - 1) as f64 / p as f64 * m as f64;
+    2.0 * c.alpha * ceil_log2(p) as f64 + (2.0 * c.beta + c.gamma) * frac
+}
+
+/// The allgather phase alone (volume `(p−1)/p·m`, `⌈log2 p⌉` rounds).
+pub fn allgather(c: &CostModel, p: usize, m: usize) -> f64 {
+    if p == 1 {
+        return 0.0;
+    }
+    let frac = (p - 1) as f64 / p as f64 * m as f64;
+    c.alpha * ceil_log2(p) as f64 + c.beta * frac
+}
+
+/// Corollary 3: worst-case bound for irregular partitions,
+/// `⌈log2 p⌉(α + βm + γm)` — all elements can sit in one block.
+pub fn corollary3_bound(c: &CostModel, p: usize, m: usize) -> f64 {
+    ceil_log2(p) as f64 * (c.alpha + (c.beta + c.gamma) * m as f64)
+}
+
+/// Ring (bucket) reduce-scatter [15]: `(p−1)(α + (β+γ)m/p)`.
+pub fn ring_reduce_scatter(c: &CostModel, p: usize, m: usize) -> f64 {
+    if p == 1 {
+        return 0.0;
+    }
+    (p - 1) as f64 * (c.alpha + (c.beta + c.gamma) * m as f64 / p as f64)
+}
+
+/// Ring allreduce [15]: RS ring + AG ring,
+/// `2(p−1)α + (2β+γ)(p−1)m/p`.
+pub fn ring_allreduce(c: &CostModel, p: usize, m: usize) -> f64 {
+    if p == 1 {
+        return 0.0;
+    }
+    let frac = (p - 1) as f64 / p as f64 * m as f64;
+    2.0 * (p - 1) as f64 * c.alpha + (2.0 * c.beta + c.gamma) * frac
+}
+
+/// Recursive doubling allreduce: full vector every round,
+/// `⌈log2 p⌉(α + (β+γ)m)` (+ a fold in and a copy-back round when p is not
+/// a power of two).
+pub fn recursive_doubling_allreduce(c: &CostModel, p: usize, m: usize) -> f64 {
+    if p == 1 {
+        return 0.0;
+    }
+    let q = p.ilog2() as f64;
+    let base = q * (c.alpha + (c.beta + c.gamma) * m as f64);
+    if p.is_power_of_two() {
+        base
+    } else {
+        base + (c.alpha + (c.beta + c.gamma) * m as f64) + (c.alpha + c.beta * m as f64)
+    }
+}
+
+/// Rabenseifner allreduce [16] (recursive halving RS + recursive doubling
+/// AG; power-of-two form): `2α·log2 p + (2β+γ)·(p−1)/p·m`.
+pub fn rabenseifner_allreduce(c: &CostModel, p: usize, m: usize) -> f64 {
+    if p == 1 {
+        return 0.0;
+    }
+    let q = p.ilog2() as f64;
+    let frac = (p - 1) as f64 / p as f64 * m as f64;
+    let base = 2.0 * c.alpha * q + (2.0 * c.beta + c.gamma) * frac;
+    if p.is_power_of_two() {
+        base
+    } else {
+        base + (c.alpha + (c.beta + c.gamma) * m as f64) + (c.alpha + c.beta * m as f64)
+    }
+}
+
+/// Binomial-tree allreduce (reduce to root + broadcast), full vector on
+/// every edge: `2⌈log2 p⌉(α + βm) + ⌈log2 p⌉γm`.
+pub fn binomial_allreduce(c: &CostModel, p: usize, m: usize) -> f64 {
+    if p == 1 {
+        return 0.0;
+    }
+    let q = ceil_log2(p) as f64;
+    2.0 * q * (c.alpha + c.beta * m as f64) + q * c.gamma * m as f64
+}
+
+/// Pipelined binary-tree allreduce estimate: `k` chunks of `c = m/k`
+/// elements through a depth-`⌈log2 p⌉` tree, reduce then broadcast, with
+/// the 2× arity bandwidth penalty the paper mentions (§1). Optimized over
+/// `k` numerically.
+pub fn pipelined_binary_tree_allreduce(c: &CostModel, p: usize, m: usize) -> f64 {
+    if p == 1 {
+        return 0.0;
+    }
+    let d = ceil_log2(p) as f64;
+    let mut best = f64::INFINITY;
+    let mut k = 1usize;
+    while k <= m.max(1) {
+        let chunk = (m as f64 / k as f64).ceil();
+        // per pipeline stage a node serializes two child messages (one port)
+        let stage = 2.0 * (c.alpha + c.beta * chunk) + 2.0 * c.gamma * chunk;
+        let t = 2.0 * (d + k as f64 - 1.0) * stage;
+        best = best.min(t);
+        k *= 2;
+    }
+    best
+}
+
+/// Two-tree allreduce estimate [17]: full-bandwidth pipelined trees.
+pub fn two_tree_allreduce(c: &CostModel, p: usize, m: usize) -> f64 {
+    if p == 1 {
+        return 0.0;
+    }
+    let d = ceil_log2(p) as f64 + 1.0;
+    let mut best = f64::INFINITY;
+    let mut k = 1usize;
+    while k <= m.max(1) {
+        let chunk = (m as f64 / k as f64 / 2.0).ceil(); // halves through each tree
+        let stage = c.alpha + (c.beta + c.gamma) * chunk;
+        let t = 2.0 * (d + k as f64 - 1.0) * stage;
+        best = best.min(t);
+        k *= 2;
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const C: CostModel = CostModel { alpha: 1.0, beta: 0.01, gamma: 0.005 };
+
+    #[test]
+    fn corollary1_exact_values() {
+        // p=22, m=22: q=5, frac = 21/22·22 = 21
+        let t = alg1_reduce_scatter(&C, 22, 22);
+        assert!((t - (5.0 + 0.015 * 21.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn allreduce_is_rs_plus_ag() {
+        for (p, m) in [(22, 220), (64, 4096), (1000, 10_000)] {
+            let lhs = alg2_allreduce(&C, p, m);
+            let rhs = alg1_reduce_scatter(&C, p, m) + allgather(&C, p, m);
+            assert!((lhs - rhs).abs() < 1e-9, "p={p} m={m}");
+        }
+    }
+
+    #[test]
+    fn alg2_beats_recursive_doubling_for_large_m() {
+        let p = 64;
+        let m = 1 << 20;
+        assert!(alg2_allreduce(&C, p, m) < recursive_doubling_allreduce(&C, p, m));
+    }
+
+    #[test]
+    fn ring_wins_never_by_volume_only_by_rounds() {
+        // Volume terms of Alg 2 and ring allreduce are identical; ring only
+        // loses on the α term — so Alg 2 ≤ ring for all p ≥ 2, m.
+        for p in [2usize, 3, 17, 64, 1000] {
+            for m in [1usize, 100, 1 << 16] {
+                assert!(
+                    alg2_allreduce(&C, p, m) <= ring_allreduce(&C, p, m) + 1e-9,
+                    "p={p} m={m}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn small_m_log_algorithms_beat_ring() {
+        let big_p = 1024;
+        let small_m = 16;
+        assert!(alg2_allreduce(&C, big_p, small_m) < ring_allreduce(&C, big_p, small_m) / 10.0);
+    }
+
+    #[test]
+    fn rabenseifner_matches_alg2_on_powers_of_two() {
+        // Both are volume/round optimal for p = 2^k in this model.
+        for (p, m) in [(64, 4096), (256, 1 << 16)] {
+            let a = alg2_allreduce(&C, p, m);
+            let b = rabenseifner_allreduce(&C, p, m);
+            assert!((a - b).abs() < 1e-9, "p={p}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn p1_all_zero() {
+        for f in [
+            alg1_reduce_scatter,
+            alg2_allreduce,
+            ring_allreduce,
+            recursive_doubling_allreduce,
+            binomial_allreduce,
+        ] {
+            assert_eq!(f(&C, 1, 100), 0.0);
+        }
+    }
+
+    #[test]
+    fn pipelined_tree_improves_with_pipelining() {
+        // With chunking allowed, the pipelined tree must beat its own k=1
+        // (pure binomial-ish) configuration for large m.
+        let m = 1 << 20;
+        let d = ceil_log2(64) as f64;
+        let k1 = 2.0 * d * (2.0 * (C.alpha + C.beta * m as f64) + 2.0 * C.gamma * m as f64);
+        assert!(pipelined_binary_tree_allreduce(&C, 64, m) < k1);
+    }
+}

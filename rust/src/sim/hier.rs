@@ -1,0 +1,166 @@
+//! Two-level (clustered) cost model — the §3 setting.
+//!
+//! Nodes of `node_size` consecutive ranks; an edge inside a node pays the
+//! `intra` parameters, an edge between nodes pays `inter` (typically
+//! 10–50× higher latency, lower bandwidth). This is the model under which
+//! the paper's §3 remark — that flat doubling/halving schemes suffer
+//! latency contention on hierarchical systems — becomes measurable, and
+//! under which the decomposed schedule of
+//! `collectives::hierarchical` pays off ([21]).
+
+use crate::datatypes::BlockPartition;
+use crate::schedule::{RecvAction, Schedule};
+
+use super::{CostModel, SimResult};
+
+/// Two-level cost model.
+#[derive(Debug, Clone, Copy)]
+pub struct HierModel {
+    pub node_size: usize,
+    pub intra: CostModel,
+    pub inter: CostModel,
+}
+
+impl HierModel {
+    /// A typical clustered system: fast shared-memory node (0.2 µs,
+    /// 40 GB/s) vs network (2 µs, 10 GB/s); γ from the intra model.
+    pub fn typical(node_size: usize) -> Self {
+        Self {
+            node_size,
+            intra: CostModel::new(2e-7, 4.0 / 40e9, 1e-9),
+            inter: CostModel::new(2e-6, 4.0 / 10e9, 1e-9),
+        }
+    }
+
+    fn edge(&self, a: usize, b: usize) -> &CostModel {
+        if a / self.node_size == b / self.node_size {
+            &self.intra
+        } else {
+            &self.inter
+        }
+    }
+}
+
+/// Asynchronous DES under the two-level model (same semantics as
+/// [`super::simulate`], with per-edge α/β) **including per-node link
+/// contention**: a node has one NIC, so `c` simultaneous cross-node flows
+/// out of (or into) a node in a round each see `c×` the inter-node β.
+/// This is exactly the "constrained per node bandwidth" of §3/[21] that a
+/// one-port-per-rank model hides — flat doubling/halving schedules put
+/// every rank of a node on the wire simultaneously, the decomposed
+/// schedule only its leader.
+pub fn simulate_hier(schedule: &Schedule, part: &BlockPartition, model: &HierModel) -> SimResult {
+    assert_eq!(part.p(), schedule.p);
+    let p = schedule.p;
+    let num_nodes = p.div_ceil(model.node_size);
+    let node_of = |r: usize| r / model.node_size;
+    let mut ready = vec![0.0f64; p];
+    for round in &schedule.rounds {
+        let before = ready.clone();
+        // Per-node cross-link concurrency this round (out and in).
+        let mut out_cnt = vec![0usize; num_nodes];
+        let mut in_cnt = vec![0usize; num_nodes];
+        for (r, step) in round.steps.iter().enumerate() {
+            if let Some(send) = &step.send {
+                if node_of(r) != node_of(send.peer) {
+                    out_cnt[node_of(r)] += 1;
+                    in_cnt[node_of(send.peer)] += 1;
+                }
+            }
+        }
+        for (r, step) in round.steps.iter().enumerate() {
+            let mut t = before[r];
+            if let Some(send) = &step.send {
+                let b = send.blocks.normalized(p);
+                let n = part.circular_elems(b.start, b.len) as f64;
+                let c = model.edge(r, send.peer);
+                let contention = if node_of(r) != node_of(send.peer) {
+                    out_cnt[node_of(r)].max(in_cnt[node_of(send.peer)]) as f64
+                } else {
+                    1.0
+                };
+                t = t.max(before[r] + c.alpha + c.beta * contention * n);
+            }
+            if let Some(recv) = &step.recv {
+                let b = recv.blocks.normalized(p);
+                let n = part.circular_elems(b.start, b.len) as f64;
+                let c = model.edge(r, recv.peer);
+                let contention = if node_of(r) != node_of(recv.peer) {
+                    in_cnt[node_of(r)].max(out_cnt[node_of(recv.peer)]) as f64
+                } else {
+                    1.0
+                };
+                let mut tr =
+                    before[r].max(before[recv.peer]) + c.alpha + c.beta * contention * n;
+                if recv.action == RecvAction::Combine {
+                    tr += model.intra.gamma * n;
+                }
+                t = t.max(tr);
+            }
+            ready[r] = t;
+        }
+    }
+    let total = ready.iter().copied().fold(0.0, f64::max);
+    SimResult { finish: ready, total, rounds: schedule.num_rounds() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::hierarchical::hierarchical_allreduce_schedule;
+    use crate::collectives::Algorithm;
+    use crate::topology::skips::SkipScheme;
+
+    #[test]
+    fn single_node_hier_model_matches_flat_simulation() {
+        // With everything in one node there are no cross-links, hence no
+        // contention: the two simulators must agree exactly.
+        let flat = CostModel::cluster();
+        let p = 32;
+        let model = HierModel { node_size: p, intra: flat, inter: flat };
+        let part = BlockPartition::regular(p, 1 << 12);
+        let sched = Algorithm::parse("ar").unwrap().schedule(p);
+        let a = simulate_hier(&sched, &part, &model).total;
+        let b = super::super::simulate(&sched, &part, &flat).total;
+        assert!((a - b).abs() < 1e-12 * b);
+    }
+
+    #[test]
+    fn contention_scales_cross_node_rounds() {
+        // All ranks of each node crossing simultaneously see c× β: a flat
+        // Alg 2 on 2 nodes must cost strictly more under contention than
+        // with per-rank ports (homogeneous params, same schedule).
+        let flat = CostModel::cluster();
+        let p = 16;
+        let model = HierModel { node_size: 8, intra: flat, inter: flat };
+        let part = BlockPartition::regular(p, 1 << 14);
+        let sched = Algorithm::parse("ar").unwrap().schedule(p);
+        let with_contention = simulate_hier(&sched, &part, &model).total;
+        let no_contention = super::super::simulate(&sched, &part, &flat).total;
+        assert!(with_contention > no_contention * 1.5, "{with_contention} vs {no_contention}");
+    }
+
+    #[test]
+    fn decomposition_pays_off_on_clustered_systems() {
+        // §3/[21]: with constrained inter-node links, the decomposed
+        // schedule beats flat Algorithm 2 (which sends most traffic across
+        // nodes), for a realistically sized vector.
+        let node = 8;
+        let p = 64;
+        let model = HierModel::typical(node);
+        let part = BlockPartition::regular(p, 1 << 20);
+        let flat = Algorithm::parse("ar").unwrap().schedule(p);
+        let hier = hierarchical_allreduce_schedule(p, node, &SkipScheme::HalvingUp);
+        let t_flat = simulate_hier(&flat, &part, &model).total;
+        let t_hier = simulate_hier(&hier, &part, &model).total;
+        assert!(
+            t_hier < t_flat,
+            "hierarchical {t_hier} should beat flat {t_flat} on clustered model"
+        );
+        // while on a homogeneous model the flat schedule wins (fewer rounds)
+        let flat_model = HierModel { node_size: node, intra: CostModel::cluster(), inter: CostModel::cluster() };
+        let t_flat_h = simulate_hier(&flat, &part, &flat_model).total;
+        let t_hier_h = simulate_hier(&hier, &part, &flat_model).total;
+        assert!(t_flat_h < t_hier_h, "flat should win homogeneously: {t_flat_h} vs {t_hier_h}");
+    }
+}

@@ -1,0 +1,115 @@
+//! Circulant graph `C_p^{σ_1,…,σ_q}` — the communication pattern of all the
+//! paper's schedules: vertices `0..p`, directed edges `r → (r+σ_k) mod p`.
+
+use super::skips::{SkipScheme, SkipError};
+
+/// A circulant ("loop network") graph over `p` vertices.
+#[derive(Debug, Clone)]
+pub struct Circulant {
+    pub p: usize,
+    /// The skip set (distances of outgoing edges).
+    pub skips: Vec<usize>,
+}
+
+impl Circulant {
+    pub fn new(p: usize, skips: Vec<usize>) -> Self {
+        Self { p, skips }
+    }
+
+    pub fn from_scheme(p: usize, scheme: &SkipScheme) -> Result<Self, SkipError> {
+        Ok(Self::new(p, scheme.skips(p)?))
+    }
+
+    /// Out-degree = in-degree = number of distinct skips (regularity).
+    pub fn degree(&self) -> usize {
+        let mut s = self.skips.clone();
+        s.sort_unstable();
+        s.dedup();
+        s.len()
+    }
+
+    /// Outgoing neighbors of `r` (the to-processors over all rounds).
+    pub fn out_neighbors(&self, r: usize) -> Vec<usize> {
+        self.skips.iter().map(|&s| (r + s) % self.p).collect()
+    }
+
+    /// Incoming neighbors of `r` (the from-processors over all rounds).
+    pub fn in_neighbors(&self, r: usize) -> Vec<usize> {
+        self.skips.iter().map(|&s| (r + self.p - s % self.p) % self.p).collect()
+    }
+
+    /// BFS hop distance from `a` to `b` using only the skip edges —
+    /// used to sanity-check that the graph is strongly connected (any
+    /// complete skip set reaches every vertex).
+    pub fn hop_distance(&self, a: usize, b: usize) -> Option<usize> {
+        let mut dist = vec![usize::MAX; self.p];
+        let mut queue = std::collections::VecDeque::new();
+        dist[a] = 0;
+        queue.push_back(a);
+        while let Some(v) = queue.pop_front() {
+            if v == b {
+                return Some(dist[v]);
+            }
+            for &s in &self.skips {
+                let w = (v + s) % self.p;
+                if dist[w] == usize::MAX {
+                    dist[w] = dist[v] + 1;
+                    queue.push_back(w);
+                }
+            }
+        }
+        None
+    }
+
+    /// True iff every vertex reaches every other (strong connectivity).
+    pub fn strongly_connected(&self) -> bool {
+        // Vertex-transitive, so reachability from 0 suffices.
+        (0..self.p).all(|v| self.hop_distance(0, v).is_some())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::skips::SkipScheme;
+
+    #[test]
+    fn regular_degree_matches_round_count() {
+        let g = Circulant::from_scheme(22, &SkipScheme::HalvingUp).unwrap();
+        assert_eq!(g.skips, vec![11, 6, 3, 2, 1]);
+        assert_eq!(g.degree(), 5); // ⌈log2 22⌉-regular
+        assert_eq!(g.out_neighbors(21), vec![10, 5, 2, 1, 0]);
+        assert_eq!(g.in_neighbors(21), vec![10, 15, 18, 19, 20]); // the paper's from-list
+    }
+
+    #[test]
+    fn neighbors_are_inverse_relations() {
+        let g = Circulant::from_scheme(37, &SkipScheme::HalvingUp).unwrap();
+        for r in 0..37 {
+            for &t in &g.out_neighbors(r) {
+                assert!(g.in_neighbors(t).contains(&r));
+            }
+        }
+    }
+
+    #[test]
+    fn strongly_connected_for_all_schemes() {
+        for p in [2usize, 5, 22, 64, 100] {
+            for scheme in [SkipScheme::HalvingUp, SkipScheme::PowerOfTwo, SkipScheme::Sqrt] {
+                let g = Circulant::from_scheme(p, &scheme).unwrap();
+                assert!(g.strongly_connected(), "{} p={p}", scheme.name());
+            }
+        }
+    }
+
+    #[test]
+    fn hop_distance_bounded_by_rounds() {
+        // With a complete skip set, any vertex is reachable within q hops
+        // (each skip used at most once on the path) — the path property in
+        // the proof of Theorem 1.
+        let g = Circulant::from_scheme(100, &SkipScheme::HalvingUp).unwrap();
+        for v in 0..100 {
+            assert!(g.hop_distance(0, v).unwrap() <= g.skips.len());
+        }
+    }
+}

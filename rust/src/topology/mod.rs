@@ -1,0 +1,11 @@
+//! Topology layer: skip sequences, circulant graphs, and the spanning
+//! forests that prove the reduce-scatter schedule correct (paper §2.1).
+
+pub mod circulant;
+pub mod search;
+pub mod skips;
+pub mod spanning;
+
+pub use circulant::Circulant;
+pub use skips::{SkipError, SkipScheme};
+pub use spanning::SpanningTree;

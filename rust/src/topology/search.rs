@@ -1,0 +1,197 @@
+//! Skip-sequence search — a tool for the paper's open question.
+//!
+//! §2.1: "It is an open, experimental question, which sequence of skips
+//! may perform best in practice on a concrete high-performance system."
+//! Corollary 2 admits *any* strictly decreasing sequence ending at 1 that
+//! satisfies the in-place condition `σ_{k−1} ≤ 2σ_k`; this module searches
+//! that space against a user-supplied cost functional (typically a DES run
+//! of the induced schedule under a concrete machine model):
+//!
+//!   * [`enumerate_valid`] — exhaustive DFS over all valid sequences
+//!     (tractable for p up to the low hundreds; the count grows roughly
+//!     like the number of "halving chains");
+//!   * [`beam_search`] — bounded-width beam for large p.
+//!
+//! The T7 bench (`rust/benches/t7_skip_search.rs`) runs both against the
+//! homogeneous model (everything with ⌈log2 p⌉ rounds ties — confirming
+//! the paper's analysis) and the clustered contention model of
+//! `sim::hier`, where *node-aware* sequences win.
+
+/// Valid next skips after `s` (`s ≥ 2`): all `σ ∈ [⌈s/2⌉, s−1]`.
+fn next_skips(s: usize) -> std::ops::RangeInclusive<usize> {
+    s.div_ceil(2)..=s - 1
+}
+
+/// Exhaustively enumerate valid sequences for `p`, calling `f` on each.
+/// Stops early if `f` returns `false`. Returns the number visited.
+pub fn enumerate_valid(p: usize, mut f: impl FnMut(&[usize]) -> bool) -> usize {
+    let mut seq = Vec::new();
+    let mut count = 0usize;
+    let mut go = true;
+    fn dfs(
+        s: usize,
+        seq: &mut Vec<usize>,
+        count: &mut usize,
+        go: &mut bool,
+        f: &mut impl FnMut(&[usize]) -> bool,
+    ) {
+        if !*go {
+            return;
+        }
+        if s == 1 {
+            *count += 1;
+            if !f(seq) {
+                *go = false;
+            }
+            return;
+        }
+        for nxt in next_skips(s) {
+            seq.push(nxt);
+            dfs(nxt, seq, count, go, f);
+            seq.pop();
+            if !*go {
+                return;
+            }
+        }
+    }
+    if p >= 2 {
+        dfs(p, &mut seq, &mut count, &mut go, &mut f);
+    }
+    count
+}
+
+/// Exhaustive minimization of `cost` over all valid sequences for `p`.
+/// Returns `(best_sequence, best_cost, sequences_examined)`.
+pub fn exhaustive_best(
+    p: usize,
+    mut cost: impl FnMut(&[usize]) -> f64,
+) -> (Vec<usize>, f64, usize) {
+    let mut best: Option<(Vec<usize>, f64)> = None;
+    let visited = enumerate_valid(p, |seq| {
+        let c = cost(seq);
+        if best.as_ref().is_none_or(|(_, bc)| c < *bc) {
+            best = Some((seq.to_vec(), c));
+        }
+        true
+    });
+    let (seq, c) = best.expect("p ≥ 2 has at least the halving sequence");
+    (seq, c, visited)
+}
+
+/// Beam search: keep the `beam` cheapest partial sequences per depth,
+/// scoring partials with `cost` applied to the *completed* sequence
+/// (partial + greedy halving tail). Returns `(sequence, cost)`.
+pub fn beam_search(
+    p: usize,
+    beam: usize,
+    mut cost: impl FnMut(&[usize]) -> f64,
+) -> (Vec<usize>, f64) {
+    assert!(p >= 2 && beam >= 1);
+    let complete = |prefix: &[usize]| -> Vec<usize> {
+        let mut seq = prefix.to_vec();
+        let mut s = *prefix.last().unwrap_or(&p);
+        while s > 1 {
+            s = s.div_ceil(2);
+            seq.push(s);
+        }
+        seq
+    };
+    let mut frontier: Vec<(Vec<usize>, f64)> = vec![{
+        let full = complete(&[]);
+        let c = cost(&full);
+        (Vec::new(), c)
+    }];
+    let mut best: (Vec<usize>, f64) = (complete(&[]), frontier[0].1);
+    loop {
+        let mut next: Vec<(Vec<usize>, f64)> = Vec::new();
+        for (prefix, _) in &frontier {
+            let s = *prefix.last().unwrap_or(&p);
+            if s == 1 {
+                continue;
+            }
+            for nxt in next_skips(s) {
+                let mut cand = prefix.clone();
+                cand.push(nxt);
+                let full = complete(&cand);
+                let c = cost(&full);
+                if c < best.1 {
+                    best = (full, c);
+                }
+                next.push((cand, c));
+            }
+        }
+        if next.is_empty() {
+            return best;
+        }
+        next.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        next.truncate(beam);
+        frontier = next;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::skips::{validate, SkipScheme};
+    use crate::util::ceil_log2;
+
+    #[test]
+    fn enumeration_yields_only_valid_sequences() {
+        for p in [2usize, 3, 8, 13, 22] {
+            let n = enumerate_valid(p, |seq| {
+                validate(p, seq).unwrap();
+                true
+            });
+            assert!(n >= 1, "p={p}");
+        }
+        // known tiny counts: p=2 → [1]; p=3 → [2,1]; p=4 → [2,1] and [3,2,1]
+        assert_eq!(enumerate_valid(2, |_| true), 1);
+        assert_eq!(enumerate_valid(3, |_| true), 1);
+        assert_eq!(enumerate_valid(4, |_| true), 2);
+    }
+
+    #[test]
+    fn exhaustive_minimizes_rounds_to_ceil_log2() {
+        // cost = number of rounds ⇒ optimum is ⌈log2 p⌉ (the lower bound),
+        // achieved by halving-up among others.
+        for p in [5usize, 16, 22, 30] {
+            let (seq, c, _) = exhaustive_best(p, |s| s.len() as f64);
+            assert_eq!(c as u32, ceil_log2(p), "p={p} got {seq:?}");
+        }
+    }
+
+    #[test]
+    fn early_stop_works() {
+        let mut seen = 0;
+        enumerate_valid(22, |_| {
+            seen += 1;
+            seen < 10
+        });
+        assert_eq!(seen, 10);
+    }
+
+    #[test]
+    fn beam_matches_exhaustive_on_small_p() {
+        // cost: rounds + tiny penalty on max run (a mixed objective)
+        let cost = |s: &[usize]| {
+            s.len() as f64 + 0.001 * crate::topology::skips::max_send_run(22, s) as f64
+        };
+        let (_, exact, _) = exhaustive_best(22, cost);
+        let (_, beamed) = beam_search(22, 32, cost);
+        assert!((beamed - exact).abs() < 1e-12, "beam {beamed} vs exact {exact}");
+    }
+
+    #[test]
+    fn beam_handles_large_p_quickly() {
+        let (seq, _) = beam_search(4096, 8, |s| s.len() as f64);
+        validate(4096, &seq).unwrap();
+        assert_eq!(seq.len() as u32, ceil_log2(4096));
+    }
+
+    #[test]
+    fn halving_up_is_among_the_optima_for_round_count() {
+        let halving = SkipScheme::HalvingUp.skips(22).unwrap();
+        let (_, best, _) = exhaustive_best(22, |s| s.len() as f64);
+        assert_eq!(halving.len() as f64, best);
+    }
+}

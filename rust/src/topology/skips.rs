@@ -1,0 +1,332 @@
+//! Skip (jump) sequences for circulant-graph collective schedules.
+//!
+//! A schedule is driven by a strictly decreasing sequence of skips
+//! `σ_1 > σ_2 > … > σ_q = 1` (with `σ_0 = p` implied). In round `k`
+//! (1-based) every processor `r` sends blocks `R[σ_k … σ_{k−1})` to
+//! processor `(r + σ_k) mod p` and receives the corresponding blocks from
+//! `(r − σ_k) mod p`, folding them into `R[0 … σ_{k−1} − σ_k)` — Algorithm 1
+//! of the paper, generalized to any valid sequence per Corollary 2.
+//!
+//! Validity (checked by [`validate`]):
+//!   1. strictly decreasing, last element 1, all `< p`;
+//!   2. *in-place condition* `σ_{k−1} − σ_k ≤ σ_k` (i.e. `σ_{k−1} ≤ 2σ_k`,
+//!      with `σ_0 = p`): the fold target range must lie inside the live
+//!      region `[0, σ_k)` that survives the round;
+//!   3. the in-place condition implies Corollary 2's requirement that every
+//!      `0 < i < p` is a sum of *distinct* skips ([`is_complete`] verifies
+//!      this independently by dynamic programming, used in property tests).
+
+
+/// The skip-sequence families studied in the paper (§2.1 Examples) plus a
+/// user-supplied escape hatch. The open experimental question the paper
+/// poses — which family performs best on a concrete system — is the T3
+/// bench (`rust/benches/t3_skip_schemes.rs`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SkipScheme {
+    /// The paper's scheme: repeated halving with round-up,
+    /// `σ_k = ⌈σ_{k−1}/2⌉`. Exactly `⌈log2 p⌉` rounds; no sent sequence is
+    /// longer than `⌈p/2⌉` blocks (§3).
+    HalvingUp,
+    /// Straight power-of-two halving à la Bruck et al.:
+    /// `σ_k` = largest power of two `< σ_{k−1}`. Also `⌈log2 p⌉` rounds.
+    PowerOfTwo,
+    /// `σ_k = p − k·⌈√p⌉` while that stays above `⌈√p⌉`, then halving-up:
+    /// `Θ(√p)` rounds — the paper's square-root example.
+    Sqrt,
+    /// `p−1, p−2, …, 1`: the folklore fully-connected algorithm,
+    /// `p−1` rounds, one block per round.
+    FullyConnected,
+    /// Explicit sequence (validated before use).
+    Custom(Vec<usize>),
+}
+
+impl SkipScheme {
+    /// Parse a scheme name as used by the CLI/config (`halving`, `pow2`,
+    /// `sqrt`, `full`, or a comma-separated custom list like `13,7,4,2,1`).
+    pub fn parse(s: &str) -> Result<Self, SkipError> {
+        match s {
+            "halving" | "halving-up" => Ok(Self::HalvingUp),
+            "pow2" | "power-of-two" => Ok(Self::PowerOfTwo),
+            "sqrt" => Ok(Self::Sqrt),
+            "full" | "fully-connected" => Ok(Self::FullyConnected),
+            other => {
+                let parts: Result<Vec<usize>, _> =
+                    other.split(',').map(|t| t.trim().parse::<usize>()).collect();
+                match parts {
+                    Ok(v) if !v.is_empty() => Ok(Self::Custom(v)),
+                    _ => Err(SkipError::UnknownScheme(other.to_string())),
+                }
+            }
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Self::HalvingUp => "halving-up".into(),
+            Self::PowerOfTwo => "power-of-two".into(),
+            Self::Sqrt => "sqrt".into(),
+            Self::FullyConnected => "fully-connected".into(),
+            Self::Custom(v) => format!("custom{v:?}"),
+        }
+    }
+
+    /// Generate and validate the skip sequence `σ_1 … σ_q` for `p` ranks.
+    pub fn skips(&self, p: usize) -> Result<Vec<usize>, SkipError> {
+        if p == 0 {
+            return Err(SkipError::BadP(p));
+        }
+        if p == 1 {
+            return Ok(Vec::new()); // no communication at all
+        }
+        let v = match self {
+            Self::HalvingUp => {
+                let mut v = Vec::new();
+                let mut s = p;
+                while s > 1 {
+                    s = s.div_ceil(2);
+                    v.push(s);
+                }
+                v
+            }
+            Self::PowerOfTwo => {
+                let mut v = Vec::new();
+                let mut s = p;
+                while s > 1 {
+                    let mut t = 1usize;
+                    while t * 2 < s {
+                        t *= 2;
+                    }
+                    s = t;
+                    v.push(s);
+                }
+                v
+            }
+            Self::Sqrt => {
+                let c = (p as f64).sqrt().ceil() as usize;
+                let mut v = Vec::new();
+                let mut s = p;
+                // Arithmetic descent by c while valid and above c…
+                while s > c && s - c > 0 && 2 * (s - c) >= s {
+                    s -= c;
+                    v.push(s);
+                }
+                // …then halving-up to finish.
+                while s > 1 {
+                    s = s.div_ceil(2);
+                    v.push(s);
+                }
+                v
+            }
+            Self::FullyConnected => (1..p).rev().collect(),
+            Self::Custom(v) => v.clone(),
+        };
+        validate(p, &v)?;
+        Ok(v)
+    }
+}
+
+/// Why a skip sequence was rejected.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum SkipError {
+    #[error("p must be ≥ 1, got {0}")]
+    BadP(usize),
+    #[error("unknown skip scheme {0:?}")]
+    UnknownScheme(String),
+    #[error("skip sequence for p={p} must be non-empty and end at 1, got {seq:?}")]
+    MustEndAtOne { p: usize, seq: Vec<usize> },
+    #[error("skips must be strictly decreasing and < p={p}: {seq:?}")]
+    NotDecreasing { p: usize, seq: Vec<usize> },
+    #[error(
+        "in-place condition violated at round {round}: σ_{{k-1}}={prev} > 2·σ_k={cur} (p={p})"
+    )]
+    InPlace { p: usize, round: usize, prev: usize, cur: usize },
+}
+
+/// Validate a skip sequence for `p` ranks (rules in the module docs).
+pub fn validate(p: usize, skips: &[usize]) -> Result<(), SkipError> {
+    if p <= 1 {
+        return if skips.is_empty() {
+            Ok(())
+        } else {
+            Err(SkipError::NotDecreasing { p, seq: skips.to_vec() })
+        };
+    }
+    if skips.last() != Some(&1) {
+        return Err(SkipError::MustEndAtOne { p, seq: skips.to_vec() });
+    }
+    let mut prev = p;
+    for (k, &s) in skips.iter().enumerate() {
+        if s == 0 || s >= prev {
+            return Err(SkipError::NotDecreasing { p, seq: skips.to_vec() });
+        }
+        if prev > 2 * s {
+            return Err(SkipError::InPlace { p, round: k + 1, prev, cur: s });
+        }
+        prev = s;
+    }
+    Ok(())
+}
+
+/// Corollary 2's completeness requirement, checked directly: every
+/// `0 < i < p` must be a sum of *distinct* skips. (The in-place condition
+/// implies this; property tests assert the implication.)
+pub fn is_complete(p: usize, skips: &[usize]) -> bool {
+    // Subset-sum reachability over 0..p with each skip usable once.
+    let mut reach = vec![false; p];
+    reach[0] = true;
+    for &s in skips {
+        for i in (0..p).rev() {
+            if i >= s && reach[i - s] {
+                reach[i] = true;
+            }
+        }
+    }
+    reach.iter().all(|&r| r)
+}
+
+/// Decompose `i` into distinct skips, greedily (largest first). Returns the
+/// chosen skips, or `None` if greedy fails (cannot happen for valid
+/// sequences; the spanning-forest construction in `topology::spanning` uses
+/// the *schedule's* decomposition, which this mirrors).
+pub fn greedy_decompose(i: usize, skips: &[usize]) -> Option<Vec<usize>> {
+    let mut rest = i;
+    let mut used = Vec::new();
+    for &s in skips {
+        if s <= rest {
+            used.push(s);
+            rest -= s;
+        }
+    }
+    if rest == 0 {
+        Some(used)
+    } else {
+        None
+    }
+}
+
+/// Number of communication rounds for a scheme at `p` (len of the skips).
+pub fn rounds(scheme: &SkipScheme, p: usize) -> usize {
+    scheme.skips(p).map(|v| v.len()).unwrap_or(0)
+}
+
+/// The longest consecutive block sequence any processor sends in one round
+/// (`max_k σ_{k−1} − σ_k`). For HalvingUp this is ≤ ⌈p/2⌉ (§3), which is
+/// what lets an implementation avoid half of the result copies [22].
+pub fn max_send_run(p: usize, skips: &[usize]) -> usize {
+    let mut prev = p;
+    let mut best = 0;
+    for &s in skips {
+        best = best.max(prev - s);
+        prev = s;
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ceil_log2;
+
+    #[test]
+    fn halving_up_p22_matches_paper() {
+        // §2.1 worked example: skips 11, 6, 3, 2, 1.
+        let v = SkipScheme::HalvingUp.skips(22).unwrap();
+        assert_eq!(v, vec![11, 6, 3, 2, 1]);
+    }
+
+    #[test]
+    fn halving_up_round_count_is_ceil_log2() {
+        for p in 2..=4096 {
+            let v = SkipScheme::HalvingUp.skips(p).unwrap();
+            assert_eq!(v.len() as u32, ceil_log2(p), "p={p}");
+        }
+    }
+
+    #[test]
+    fn pow2_round_count_is_ceil_log2() {
+        for p in 2..=4096 {
+            let v = SkipScheme::PowerOfTwo.skips(p).unwrap();
+            assert_eq!(v.len() as u32, ceil_log2(p), "p={p} {v:?}");
+        }
+    }
+
+    #[test]
+    fn fully_connected_p_minus_1_rounds() {
+        for p in 2..=128 {
+            let v = SkipScheme::FullyConnected.skips(p).unwrap();
+            assert_eq!(v.len(), p - 1);
+        }
+    }
+
+    #[test]
+    fn sqrt_scheme_valid_and_sublinear() {
+        for p in 2..=2048 {
+            let v = SkipScheme::Sqrt.skips(p).unwrap();
+            validate(p, &v).unwrap();
+            if p >= 64 {
+                assert!(v.len() < p / 2, "p={p} rounds={}", v.len());
+            }
+        }
+    }
+
+    #[test]
+    fn all_schemes_complete() {
+        for p in [2, 3, 7, 22, 100, 255, 256, 257, 1000] {
+            for scheme in [
+                SkipScheme::HalvingUp,
+                SkipScheme::PowerOfTwo,
+                SkipScheme::Sqrt,
+                SkipScheme::FullyConnected,
+            ] {
+                let v = scheme.skips(p).unwrap();
+                assert!(is_complete(p, &v), "{} p={p} {v:?}", scheme.name());
+            }
+        }
+    }
+
+    #[test]
+    fn validate_rejects_bad_sequences() {
+        assert!(matches!(validate(8, &[]), Err(SkipError::MustEndAtOne { .. })));
+        assert!(matches!(validate(8, &[4, 2]), Err(SkipError::MustEndAtOne { .. })));
+        assert!(matches!(validate(8, &[5, 6, 1]), Err(SkipError::NotDecreasing { .. })));
+        assert!(matches!(validate(8, &[8, 4, 2, 1]), Err(SkipError::NotDecreasing { .. })));
+        // 10 > 2*4: fold range would spill outside the live region.
+        assert!(matches!(validate(10, &[4, 2, 1]), Err(SkipError::InPlace { .. })));
+    }
+
+    #[test]
+    fn custom_roundtrip_via_parse() {
+        let s = SkipScheme::parse("6,3,2,1").unwrap();
+        assert_eq!(s.skips(11).unwrap(), vec![6, 3, 2, 1]);
+        assert!(SkipScheme::parse("wat").is_err());
+        assert_eq!(SkipScheme::parse("halving").unwrap(), SkipScheme::HalvingUp);
+    }
+
+    #[test]
+    fn halving_up_max_run_at_most_half() {
+        for p in 2..=2048 {
+            let v = SkipScheme::HalvingUp.skips(p).unwrap();
+            assert!(max_send_run(p, &v) <= p.div_ceil(2), "p={p}");
+        }
+    }
+
+    #[test]
+    fn greedy_decompose_covers_all_targets() {
+        for p in [22usize, 100, 257] {
+            let v = SkipScheme::HalvingUp.skips(p).unwrap();
+            for i in 1..p {
+                let d = greedy_decompose(i, &v).expect("decomposable");
+                assert_eq!(d.iter().sum::<usize>(), i);
+                // distinct by construction (each skip used at most once)
+                let mut dd = d.clone();
+                dd.dedup();
+                assert_eq!(dd, d);
+            }
+        }
+    }
+
+    #[test]
+    fn p1_degenerate() {
+        assert!(SkipScheme::HalvingUp.skips(1).unwrap().is_empty());
+    }
+}

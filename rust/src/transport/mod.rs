@@ -1,0 +1,260 @@
+//! In-process message-passing substrate.
+//!
+//! Substitutes for the paper's MPI cluster (DESIGN.md §2): `p` ranks run as
+//! OS threads; each rank owns an [`Endpoint`] supporting the paper's
+//! communication primitive — a *one-ported simultaneous send/receive*
+//! (MPI_Sendrecv): in one operation a rank sends one message to one peer
+//! and receives one message from a possibly different peer.
+//!
+//! Messages are tagged `(from, round)` and stashed on arrival, so the
+//! rendezvous is insensitive to thread scheduling while still enforcing the
+//! round structure (a message for round `k` can only be consumed by the
+//! round-`k` sendrecv). Per-endpoint counters record rounds, messages and
+//! element volume for the Theorem 1/2 benches.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::time::Duration;
+
+/// A message between ranks: payload plus matching tag.
+#[derive(Debug)]
+pub struct Msg {
+    pub from: usize,
+    pub round: u64,
+    pub payload: Vec<f32>,
+}
+
+/// Transport-level errors (used by failure-injection tests).
+#[derive(Debug, thiserror::Error)]
+pub enum TransportError {
+    #[error("rank {rank}: timeout waiting for round {round} message from {from}")]
+    Timeout { rank: usize, from: usize, round: u64 },
+    #[error("rank {rank}: peer {to} disconnected")]
+    Disconnected { rank: usize, to: usize },
+}
+
+/// Volume counters for one endpoint.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct Counters {
+    pub sendrecv_rounds: u64,
+    pub msgs_sent: u64,
+    pub msgs_recv: u64,
+    pub elems_sent: u64,
+    pub elems_recv: u64,
+}
+
+/// One rank's communication handle.
+pub struct Endpoint {
+    pub rank: usize,
+    pub p: usize,
+    txs: Vec<Sender<Msg>>,
+    rx: Receiver<Msg>,
+    /// Early arrivals keyed by (from, round).
+    stash: HashMap<(usize, u64), Vec<f32>>,
+    pub counters: Counters,
+    /// Receive timeout — deadlock detection in tests; generous default.
+    pub timeout: Duration,
+}
+
+/// Build a fully-connected network of `p` endpoints (one per rank).
+pub fn network(p: usize) -> Vec<Endpoint> {
+    assert!(p >= 1);
+    let mut txs = Vec::with_capacity(p);
+    let mut rxs = Vec::with_capacity(p);
+    for _ in 0..p {
+        let (tx, rx) = channel::<Msg>();
+        txs.push(tx);
+        rxs.push(rx);
+    }
+    rxs.into_iter()
+        .enumerate()
+        .map(|(rank, rx)| Endpoint {
+            rank,
+            p,
+            txs: txs.clone(),
+            rx,
+            stash: HashMap::new(),
+            counters: Counters::default(),
+            timeout: Duration::from_secs(30),
+        })
+        .collect()
+}
+
+impl Endpoint {
+    /// The paper's combined `Send(..) ‖ Recv(..)` primitive.
+    ///
+    /// `send`: optional `(to, payload)`; `recv_from`: optional peer to wait
+    /// for. Either side may be `None` (tree rounds). Returns the received
+    /// payload if `recv_from` was given.
+    pub fn sendrecv(
+        &mut self,
+        send: Option<(usize, Vec<f32>)>,
+        recv_from: Option<usize>,
+        round: u64,
+    ) -> Result<Option<Vec<f32>>, TransportError> {
+        self.counters.sendrecv_rounds += 1;
+        if let Some((to, payload)) = send {
+            debug_assert!(to < self.p && to != self.rank, "bad send target {to}");
+            self.counters.msgs_sent += 1;
+            self.counters.elems_sent += payload.len() as u64;
+            self.txs[to]
+                .send(Msg { from: self.rank, round, payload })
+                .map_err(|_| TransportError::Disconnected { rank: self.rank, to })?;
+        }
+        match recv_from {
+            None => Ok(None),
+            Some(from) => {
+                let payload = self.recv_tagged(from, round)?;
+                self.counters.msgs_recv += 1;
+                self.counters.elems_recv += payload.len() as u64;
+                Ok(Some(payload))
+            }
+        }
+    }
+
+    /// Receive the message tagged `(from, round)`, stashing out-of-order
+    /// arrivals from other peers/rounds.
+    fn recv_tagged(&mut self, from: usize, round: u64) -> Result<Vec<f32>, TransportError> {
+        if let Some(payload) = self.stash.remove(&(from, round)) {
+            return Ok(payload);
+        }
+        loop {
+            match self.rx.recv_timeout(self.timeout) {
+                Ok(msg) => {
+                    if msg.from == from && msg.round == round {
+                        return Ok(msg.payload);
+                    }
+                    self.stash.insert((msg.from, msg.round), msg.payload);
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    return Err(TransportError::Timeout { rank: self.rank, from, round })
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(TransportError::Disconnected { rank: self.rank, to: from })
+                }
+            }
+        }
+    }
+
+    /// Raw one-directional send (used by the coordinator's control plane).
+    pub fn send_to(&mut self, to: usize, round: u64, payload: Vec<f32>) -> Result<(), TransportError> {
+        self.counters.msgs_sent += 1;
+        self.counters.elems_sent += payload.len() as u64;
+        self.txs[to]
+            .send(Msg { from: self.rank, round, payload })
+            .map_err(|_| TransportError::Disconnected { rank: self.rank, to })
+    }
+
+    /// Raw one-directional receive.
+    pub fn recv_from(&mut self, from: usize, round: u64) -> Result<Vec<f32>, TransportError> {
+        let payload = self.recv_tagged(from, round)?;
+        self.counters.msgs_recv += 1;
+        self.counters.elems_recv += payload.len() as u64;
+        Ok(payload)
+    }
+}
+
+/// Run `f(rank, endpoint)` on `p` threads, one per rank, and collect the
+/// per-rank results in rank order. Panics in any rank are propagated.
+pub fn run_ranks<T, F>(p: usize, f: F) -> Vec<T>
+where
+    T: Send + 'static,
+    F: Fn(usize, &mut Endpoint) -> T + Send + Sync + 'static,
+{
+    let endpoints = network(p);
+    let f = std::sync::Arc::new(f);
+    let mut handles = Vec::with_capacity(p);
+    for (rank, mut ep) in endpoints.into_iter().enumerate() {
+        let f = f.clone();
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("rank-{rank}"))
+                .stack_size(8 << 20)
+                .spawn(move || f(rank, &mut ep))
+                .expect("spawn rank thread"),
+        );
+    }
+    handles
+        .into_iter()
+        .enumerate()
+        .map(|(rank, h)| h.join().unwrap_or_else(|e| std::panic::resume_unwind(Box::new(format!("rank {rank} panicked: {e:?}")))))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_sendrecv_roundtrip() {
+        let out = run_ranks(4, |rank, ep| {
+            let to = (rank + 1) % 4;
+            let from = (rank + 3) % 4;
+            let got = ep
+                .sendrecv(Some((to, vec![rank as f32])), Some(from), 0)
+                .unwrap()
+                .unwrap();
+            got[0]
+        });
+        assert_eq!(out, vec![3.0, 0.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn out_of_order_rounds_are_stashed() {
+        // Rank 1 sends rounds 0 and 1 immediately; rank 0 consumes round 1
+        // first, then round 0 — the stash must reorder.
+        let out = run_ranks(2, |rank, ep| {
+            if rank == 1 {
+                ep.send_to(0, 0, vec![10.0]).unwrap();
+                ep.send_to(0, 1, vec![11.0]).unwrap();
+                vec![]
+            } else {
+                let b = ep.recv_from(1, 1).unwrap();
+                let a = ep.recv_from(1, 0).unwrap();
+                vec![a[0], b[0]]
+            }
+        });
+        assert_eq!(out[0], vec![10.0, 11.0]);
+    }
+
+    #[test]
+    fn counters_track_volume() {
+        let out = run_ranks(2, |rank, ep| {
+            let peer = 1 - rank;
+            ep.sendrecv(Some((peer, vec![0.0; 7])), Some(peer), 0).unwrap();
+            ep.counters.clone()
+        });
+        for c in out {
+            assert_eq!(c.msgs_sent, 1);
+            assert_eq!(c.msgs_recv, 1);
+            assert_eq!(c.elems_sent, 7);
+            assert_eq!(c.elems_recv, 7);
+        }
+    }
+
+    #[test]
+    fn timeout_detects_missing_peer() {
+        let out = run_ranks(2, |rank, ep| {
+            if rank == 0 {
+                ep.timeout = Duration::from_millis(50);
+                ep.sendrecv(None, Some(1), 7).map(|_| ()).is_err()
+            } else {
+                true // rank 1 never sends
+            }
+        });
+        assert!(out[0], "rank 0 should have timed out");
+    }
+
+    #[test]
+    fn sendrecv_with_only_send_side() {
+        let out = run_ranks(2, |rank, ep| {
+            if rank == 0 {
+                ep.sendrecv(Some((1, vec![5.0])), None, 0).unwrap();
+                0.0
+            } else {
+                ep.sendrecv(None, Some(0), 0).unwrap().unwrap()[0]
+            }
+        });
+        assert_eq!(out[1], 5.0);
+    }
+}

@@ -1,0 +1,56 @@
+//! Small shared utilities: deterministic PRNG, statistics, table printing,
+//! and a minimal JSON reader/writer (the image is offline, so serde & co.
+//! are unavailable — see Cargo.toml).
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+/// `⌈log2 p⌉` for `p ≥ 1` — the paper's round lower bound (and the round
+/// count of Algorithm 1 with the halving-up scheme, Theorem 1).
+pub fn ceil_log2(p: usize) -> u32 {
+    assert!(p >= 1, "ceil_log2 undefined for 0");
+    (usize::BITS - (p - 1).leading_zeros()).min(usize::BITS)
+}
+
+/// Ceiling division.
+pub fn div_ceil(a: usize, b: usize) -> usize {
+    a.div_ceil(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_log2_small_values() {
+        assert_eq!(ceil_log2(1), 0);
+        assert_eq!(ceil_log2(2), 1);
+        assert_eq!(ceil_log2(3), 2);
+        assert_eq!(ceil_log2(4), 2);
+        assert_eq!(ceil_log2(5), 3);
+        assert_eq!(ceil_log2(22), 5); // the paper's worked example
+        assert_eq!(ceil_log2(1024), 10);
+        assert_eq!(ceil_log2(1025), 11);
+    }
+
+    #[test]
+    fn ceil_log2_is_round_lower_bound() {
+        // 2^(k-1) < p <= 2^k  ⇔  ceil_log2(p) == k
+        for p in 1..10_000usize {
+            let k = ceil_log2(p);
+            assert!(1usize << k >= p);
+            if k > 0 {
+                assert!(1usize << (k - 1) < p);
+            }
+        }
+    }
+
+    #[test]
+    fn div_ceil_basics() {
+        assert_eq!(div_ceil(7, 2), 4);
+        assert_eq!(div_ceil(8, 2), 4);
+        assert_eq!(div_ceil(1, 5), 1);
+    }
+}

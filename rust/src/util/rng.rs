@@ -1,0 +1,125 @@
+//! Deterministic PRNG (splitmix64) — reproducible workloads without `rand`.
+//!
+//! Every workload generator in the benches/tests takes an explicit seed so
+//! that EXPERIMENTS.md rows are exactly reproducible.
+
+/// Splitmix64: tiny, fast, passes BigCrush when used as a stream seeder.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, bound)`; `bound > 0`. (Lemire-style rejection-free
+    /// multiply-shift; bias is < 2^-32 for the bounds used here.)
+    pub fn next_below(&mut self, bound: usize) -> usize {
+        assert!(bound > 0);
+        ((self.next_u64() as u128 * bound as u128) >> 64) as usize
+    }
+
+    /// Uniform f32 in `[0, 1)`.
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Standard normal via Box–Muller (one value per call, simple > fast).
+    pub fn next_normal_f32(&mut self) -> f32 {
+        let u1 = (self.next_f64()).max(1e-12);
+        let u2 = self.next_f64();
+        ((-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()) as f32
+    }
+
+    /// Vector of standard normals.
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.next_normal_f32()).collect()
+    }
+
+    /// Vector of small integer-valued f32 in `[lo, hi)` — used where tests
+    /// need *exact* floating-point sums (commutativity checks).
+    pub fn int_valued_vec(&mut self, n: usize, lo: i64, hi: i64) -> Vec<f32> {
+        assert!(hi > lo);
+        let span = (hi - lo) as usize;
+        (0..n).map(|_| (lo + self.next_below(span) as i64) as f32).collect()
+    }
+
+    /// Random permutation of `0..n` (Fisher–Yates).
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut v: Vec<usize> = (0..n).collect();
+        for i in (1..n).rev() {
+            v.swap(i, self.next_below(i + 1));
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = SplitMix64::new(42);
+        let mut b = SplitMix64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn bounds_respected() {
+        let mut r = SplitMix64::new(7);
+        for _ in 0..10_000 {
+            assert!(r.next_below(13) < 13);
+            let f = r.next_f32();
+            assert!((0.0..1.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn normal_roughly_standard() {
+        let mut r = SplitMix64::new(3);
+        let v = r.normal_vec(20_000);
+        let mean = v.iter().sum::<f32>() / v.len() as f32;
+        let var = v.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / v.len() as f32;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn permutation_is_permutation() {
+        let mut r = SplitMix64::new(9);
+        let p = r.permutation(100);
+        let mut seen = vec![false; 100];
+        for &x in &p {
+            assert!(!seen[x]);
+            seen[x] = true;
+        }
+    }
+
+    #[test]
+    fn int_valued_exactness() {
+        let mut r = SplitMix64::new(11);
+        for x in r.int_valued_vec(1000, -5, 6) {
+            assert_eq!(x, x.round());
+            assert!((-5.0..6.0).contains(&x));
+        }
+    }
+}

@@ -1,0 +1,96 @@
+//! CLI integration tests: every subcommand through `cli::main_with_args`
+//! (in-process; no external process spawning needed).
+
+use circulant_collectives::cli::main_with_args;
+
+fn args(s: &[&str]) -> Vec<String> {
+    s.iter().map(|x| x.to_string()).collect()
+}
+
+#[test]
+fn help_and_info_run() {
+    main_with_args(args(&["help"])).unwrap();
+    main_with_args(args(&["info"])).unwrap();
+}
+
+#[test]
+fn unknown_command_errors() {
+    assert!(main_with_args(args(&["frobnicate"])).is_err());
+}
+
+#[test]
+fn run_verifies_small_collective() {
+    main_with_args(args(&[
+        "run",
+        "--run.p",
+        "5",
+        "--run.m",
+        "64",
+        "--run.algorithm",
+        "allreduce",
+    ]))
+    .unwrap();
+}
+
+#[test]
+fn run_supports_baselines_and_schemes() {
+    for alg in ["ring-allreduce", "rec-doubling-allreduce", "rabenseifner", "ar:sqrt", "rs:full"] {
+        main_with_args(args(&["run", "--run.p", "6", "--run.m", "30", "--run.algorithm", alg]))
+            .unwrap_or_else(|e| panic!("{alg}: {e}"));
+    }
+}
+
+#[test]
+fn run_rejects_bad_algorithm() {
+    assert!(main_with_args(args(&["run", "--run.algorithm", "bogus"])).is_err());
+}
+
+#[test]
+fn simulate_prints_comparison() {
+    main_with_args(args(&["simulate", "--sim.p", "100", "--sim.m", "4096"])).unwrap();
+}
+
+#[test]
+fn trace_reproduces_p22_and_other_p() {
+    main_with_args(args(&["trace"])).unwrap(); // the paper's example
+    main_with_args(args(&["trace", "--trace.p", "13", "--trace.rank", "0"])).unwrap();
+    main_with_args(args(&["trace", "--trace.p", "10", "--trace.scheme", "full"])).unwrap();
+}
+
+#[test]
+fn validate_sweep() {
+    main_with_args(args(&["validate", "--validate.max_p", "40"])).unwrap();
+}
+
+#[test]
+fn config_file_plus_override() {
+    let dir = std::env::temp_dir().join(format!("ccoll-cli-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("run.toml");
+    std::fs::write(
+        &path,
+        "[run]\np = 4\nm = 32\nalgorithm = \"allreduce\"\n[cost]\nalpha = 1e-6\n",
+    )
+    .unwrap();
+    main_with_args(args(&["--config", path.to_str().unwrap(), "run", "--run.p", "3"])).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn train_smoke_if_artifacts_present() {
+    use circulant_collectives::runtime::{default_artifact_dir, Manifest};
+    if Manifest::load(default_artifact_dir()).is_err() {
+        eprintln!("SKIP: no artifacts");
+        return;
+    }
+    main_with_args(args(&[
+        "train",
+        "--train.workers",
+        "2",
+        "--train.steps",
+        "5",
+        "--train.log_every",
+        "0",
+    ]))
+    .unwrap();
+}

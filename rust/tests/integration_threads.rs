@@ -1,0 +1,283 @@
+//! Integration tests: every executable algorithm on the thread network,
+//! against scalar oracles, across operators, partitions and p — plus
+//! failure injection and concurrency stress.
+
+use std::sync::Arc;
+
+use circulant_collectives::collectives::{run_schedule_threads, Algorithm};
+use circulant_collectives::coordinator::{Launcher, OpBackend};
+use circulant_collectives::datatypes::BlockPartition;
+use circulant_collectives::ops::{parse_native, ReduceOp};
+use circulant_collectives::topology::skips::SkipScheme;
+use circulant_collectives::util::rng::SplitMix64;
+
+fn oracle(inputs: &[Vec<f32>], op: &dyn ReduceOp) -> Vec<f32> {
+    let mut acc = inputs[0].clone();
+    for v in &inputs[1..] {
+        op.combine(&mut acc, v);
+    }
+    acc
+}
+
+/// Exact-friendly inputs per op (integer-valued for sum; positive small
+/// range for prod; anything for min/max).
+fn inputs_for(op: &str, p: usize, m: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = SplitMix64::new(seed);
+    (0..p)
+        .map(|_| match op {
+            "sum" => rng.int_valued_vec(m, -9, 10),
+            "prod" => rng.int_valued_vec(m, 1, 3),
+            _ => rng.normal_vec(m),
+        })
+        .collect()
+}
+
+#[test]
+fn every_allreduce_algorithm_every_op() {
+    for alg in Algorithm::allreduce_family() {
+        for op_name in ["sum", "prod", "min", "max"] {
+            for p in [2usize, 3, 7, 8] {
+                // prod folds must associate exactly: use small integers
+                let m = 2 * p + 3;
+                let part = BlockPartition::regular(p, m);
+                let inputs = inputs_for(op_name, p, m, (p * 31) as u64);
+                let op = parse_native(op_name).unwrap();
+                let want = oracle(&inputs, op.as_ref());
+                let op: Arc<dyn ReduceOp> = Arc::from(op);
+                let out = run_schedule_threads(&alg.schedule(p), &part, op, inputs);
+                for (r, buf) in out.iter().enumerate() {
+                    assert_eq!(buf, &want, "{} op={op_name} p={p} r={r}", alg.name());
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn reduce_scatter_family_on_irregular_partitions() {
+    for p in [2usize, 5, 9, 16] {
+        for (wname, part) in [
+            ("random", BlockPartition::random(p, 7 * p + 1, p as u64)),
+            ("zipf", BlockPartition::zipf(p, 11 * p, 1.2, p as u64)),
+            ("single", BlockPartition::single_block(p, 53, p - 1)),
+            ("empty-some", {
+                let mut counts = vec![3usize; p];
+                counts[0] = 0;
+                if p > 2 {
+                    counts[2] = 0;
+                }
+                BlockPartition::from_counts(&counts)
+            }),
+        ] {
+            let inputs = inputs_for("sum", p, part.total(), 7);
+            let op = parse_native("sum").unwrap();
+            let want = oracle(&inputs, op.as_ref());
+            let sched = Algorithm::parse("rs").unwrap().schedule(p);
+            let out = run_schedule_threads(&sched, &part, Arc::new(circulant_collectives::ops::SumOp), inputs);
+            for (r, buf) in out.iter().enumerate() {
+                assert_eq!(
+                    &buf[part.range(r)],
+                    &want[part.range(r)],
+                    "{wname} p={p} r={r}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn all_skip_schemes_execute_correctly() {
+    for scheme in ["halving", "pow2", "sqrt", "full"] {
+        for p in [2usize, 6, 22] {
+            let alg = Algorithm::parse(&format!("ar:{scheme}")).unwrap();
+            let m = 3 * p;
+            let part = BlockPartition::regular(p, m);
+            let inputs = inputs_for("sum", p, m, 3);
+            let op = parse_native("sum").unwrap();
+            let want = oracle(&inputs, op.as_ref());
+            let out = run_schedule_threads(
+                &alg.schedule(p),
+                &part,
+                Arc::new(circulant_collectives::ops::SumOp),
+                inputs,
+            );
+            for buf in out {
+                assert_eq!(buf, want, "{scheme} p={p}");
+            }
+        }
+    }
+}
+
+#[test]
+fn communicator_sequences_many_collectives() {
+    // Stress tag isolation: 20 interleaved collectives per rank.
+    let p = 6;
+    let out = Launcher::new(p).run(move |mut comm| {
+        let mut checksum = 0.0f64;
+        for it in 0..20 {
+            match it % 4 {
+                0 => {
+                    let mut v = vec![(comm.rank() + it) as f32; 8];
+                    comm.allreduce(&mut v, "sum").unwrap();
+                    checksum += v[0] as f64;
+                }
+                1 => {
+                    let send: Vec<f32> = (0..p * 2).map(|j| j as f32).collect();
+                    let mut recv = vec![0.0f32; 2];
+                    comm.reduce_scatter_block(&send, &mut recv, "max").unwrap();
+                    checksum += recv[0] as f64;
+                }
+                2 => {
+                    let mine = vec![comm.rank() as f32];
+                    let mut all = vec![0.0f32; p];
+                    comm.allgather(&mine, &mut all).unwrap();
+                    checksum += all[p - 1] as f64;
+                }
+                _ => {
+                    let mut v = vec![1.0f32; 4];
+                    comm.reduce(&mut v, it % p, "sum").unwrap();
+                    comm.barrier().unwrap();
+                    checksum += v[0] as f64;
+                }
+            }
+        }
+        checksum
+    });
+    // All ranks see identical allreduce/allgather contributions; the only
+    // rank-dependent term is the reduce result at roots vs non-roots, so
+    // just assert determinism across two runs.
+    let out2 = Launcher::new(p).run(move |mut comm| {
+        let mut checksum = 0.0f64;
+        for it in 0..20 {
+            match it % 4 {
+                0 => {
+                    let mut v = vec![(comm.rank() + it) as f32; 8];
+                    comm.allreduce(&mut v, "sum").unwrap();
+                    checksum += v[0] as f64;
+                }
+                1 => {
+                    let send: Vec<f32> = (0..p * 2).map(|j| j as f32).collect();
+                    let mut recv = vec![0.0f32; 2];
+                    comm.reduce_scatter_block(&send, &mut recv, "max").unwrap();
+                    checksum += recv[0] as f64;
+                }
+                2 => {
+                    let mine = vec![comm.rank() as f32];
+                    let mut all = vec![0.0f32; p];
+                    comm.allgather(&mine, &mut all).unwrap();
+                    checksum += all[p - 1] as f64;
+                }
+                _ => {
+                    let mut v = vec![1.0f32; 4];
+                    comm.reduce(&mut v, it % p, "sum").unwrap();
+                    comm.barrier().unwrap();
+                    checksum += v[0] as f64;
+                }
+            }
+        }
+        checksum
+    });
+    assert_eq!(out, out2, "collective sequence must be deterministic");
+}
+
+#[test]
+fn dead_peer_detected_by_timeout() {
+    // Rank 1 exits immediately; the others' allreduce must error out, not
+    // hang (failure injection for the transport layer).
+    use circulant_collectives::collectives::execute_rank;
+    use circulant_collectives::ops::SumOp;
+    let p = 4;
+    let part = BlockPartition::regular(p, 8);
+    let sched = Algorithm::parse("ar").unwrap().schedule(p);
+    let part2 = Arc::new(part);
+    let sched2 = Arc::new(sched);
+    let out = circulant_collectives::transport::run_ranks(p, move |rank, ep| {
+        if rank == 1 {
+            return true; // dies silently
+        }
+        ep.timeout = std::time::Duration::from_millis(200);
+        let mut buf = vec![0.0f32; part2.total()];
+        execute_rank(ep, &sched2, &part2, &SumOp, &mut buf, 0).is_err()
+    });
+    // every surviving rank either errored directly or was downstream of
+    // the dead rank; at least the direct neighbors must error
+    assert!(out[0] || out[2] || out[3], "no rank noticed the dead peer");
+}
+
+#[test]
+fn large_p_smoke() {
+    // 64 threads on one core still completes promptly (channels, no spin).
+    let p = 64;
+    let part = BlockPartition::regular(p, p);
+    let inputs = inputs_for("sum", p, p, 11);
+    let op = parse_native("sum").unwrap();
+    let want = oracle(&inputs, op.as_ref());
+    let out = run_schedule_threads(
+        &Algorithm::parse("ar").unwrap().schedule(p),
+        &part,
+        Arc::new(circulant_collectives::ops::SumOp),
+        inputs,
+    );
+    for buf in out {
+        assert_eq!(buf, want);
+    }
+}
+
+#[test]
+fn native_and_scheme_cross_product_reduce_scatter_counts() {
+    // Transport counters must equal schedule-derived counters exactly.
+    let p = 22;
+    let m = 44;
+    let part = BlockPartition::regular(p, m);
+    let alg = Algorithm::parse("rs").unwrap();
+    let sched = alg.schedule(p);
+    let expected = sched.counters(&part);
+    let part2 = Arc::new(part);
+    let sched2 = Arc::new(sched);
+    let out = circulant_collectives::transport::run_ranks(p, move |rank, ep| {
+        let mut buf = vec![1.0f32; part2.total()];
+        circulant_collectives::collectives::execute_rank(
+            ep,
+            &sched2,
+            &part2,
+            &circulant_collectives::ops::SumOp,
+            &mut buf,
+            0,
+        )
+        .unwrap();
+        (rank, ep.counters.clone())
+    });
+    for (rank, c) in out {
+        assert_eq!(c.elems_sent as usize, expected[rank].elems_sent);
+        assert_eq!(c.elems_recv as usize, expected[rank].elems_recv);
+        assert_eq!(c.sendrecv_rounds as usize, expected[rank].active_rounds);
+    }
+}
+
+#[test]
+fn scheme_from_launcher_is_honored() {
+    // Fully-connected scheme via Launcher: p−1 rounds observed.
+    let p = 9;
+    let out = Launcher::new(p).scheme(SkipScheme::FullyConnected).run(move |mut comm| {
+        let mut v = vec![1.0f32; p];
+        comm.allreduce(&mut v, "sum").unwrap();
+        (v[0], comm.counters().sendrecv_rounds)
+    });
+    for (val, rounds) in out {
+        assert_eq!(val, p as f32);
+        assert_eq!(rounds as usize, 2 * (p - 1));
+    }
+}
+
+#[test]
+fn native_backend_matches_default() {
+    let p = 4;
+    let out = Launcher::new(p).backend(OpBackend::Native).run(move |mut comm| {
+        let mut v = vec![comm.rank() as f32 + 1.0; 5];
+        comm.allreduce(&mut v, "prod").unwrap();
+        v[0]
+    });
+    for x in out {
+        assert_eq!(x, 24.0); // 1·2·3·4
+    }
+}

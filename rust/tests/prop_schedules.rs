@@ -1,0 +1,174 @@
+//! Property tests over randomly generated schedules and partitions.
+//!
+//! proptest is unavailable offline; these are seeded-PRNG property sweeps
+//! (hundreds of random cases per property, deterministic per seed) over:
+//!   * random valid custom skip sequences — Corollary 2 in its full
+//!     generality, not just the four named schemes;
+//!   * random irregular partitions — Corollary 3;
+//!   * the implication chain: in-place condition ⇒ distinct-sum
+//!     completeness ⇒ symbolic correctness ⇒ counter optimality.
+
+use circulant_collectives::collectives::{
+    allreduce_schedule, reduce_scatter_schedule, symbolic, Algorithm,
+};
+use circulant_collectives::datatypes::BlockPartition;
+use circulant_collectives::schedule::Schedule;
+use circulant_collectives::topology::skips::{is_complete, validate, SkipScheme};
+use circulant_collectives::topology::SpanningTree;
+use circulant_collectives::util::ceil_log2;
+use circulant_collectives::util::rng::SplitMix64;
+
+/// Generate a random *valid* skip sequence for p: start at p, repeatedly
+/// pick the next skip uniformly from the valid window [⌈s/2⌉, s−1].
+fn random_valid_skips(p: usize, rng: &mut SplitMix64) -> Vec<usize> {
+    let mut v = Vec::new();
+    let mut s = p;
+    while s > 1 {
+        let lo = s.div_ceil(2);
+        let hi = s - 1;
+        let next = lo + rng.next_below(hi - lo + 1);
+        v.push(next);
+        s = next;
+    }
+    v
+}
+
+#[test]
+fn random_skip_sequences_satisfy_corollary2() {
+    let mut rng = SplitMix64::new(0xC0_FFEE);
+    for _ in 0..300 {
+        let p = 2 + rng.next_below(200);
+        let skips = random_valid_skips(p, &mut rng);
+        validate(p, &skips).unwrap_or_else(|e| panic!("p={p} {skips:?}: {e}"));
+        // in-place condition ⇒ every i decomposes into distinct skips
+        assert!(is_complete(p, &skips), "p={p} {skips:?} not complete");
+        // and the spanning forest is a correct proof object
+        SpanningTree::build(p, &skips).invariant_checks().unwrap();
+    }
+}
+
+#[test]
+fn random_schedules_have_optimal_counters() {
+    let mut rng = SplitMix64::new(42);
+    for _ in 0..120 {
+        let p = 2 + rng.next_below(100);
+        let skips = random_valid_skips(p, &mut rng);
+        let sched = reduce_scatter_schedule(p, &skips);
+        sched.assert_valid();
+        assert_eq!(sched.num_rounds(), skips.len());
+        let part = BlockPartition::uniform(p, 1);
+        for c in sched.counters(&part) {
+            // Volume optimality holds for ANY valid sequence (Theorem 1's
+            // proof never uses the halving structure).
+            assert_eq!(c.blocks_sent, p - 1, "p={p} {skips:?}");
+            assert_eq!(c.blocks_recv, p - 1);
+            assert_eq!(c.blocks_combined, p - 1);
+        }
+    }
+}
+
+#[test]
+fn random_schedules_symbolically_correct() {
+    let mut rng = SplitMix64::new(7);
+    for _ in 0..40 {
+        let p = 2 + rng.next_below(48);
+        let skips = random_valid_skips(p, &mut rng);
+        let rs = reduce_scatter_schedule(p, &skips);
+        symbolic::verify_reduce_scatter(&rs)
+            .unwrap_or_else(|e| panic!("p={p} {skips:?}: {e}"));
+        let ar = allreduce_schedule(p, &skips);
+        symbolic::verify_allreduce(&ar).unwrap_or_else(|e| panic!("p={p} {skips:?}: {e}"));
+    }
+}
+
+#[test]
+fn counters_scale_exactly_with_irregular_partitions() {
+    // elems_sent per rank must equal the sum over rounds of the block-range
+    // sizes, whatever the partition — cross-check two independent code
+    // paths (schedule counters vs spanning-tree accounting).
+    let mut rng = SplitMix64::new(99);
+    for _ in 0..60 {
+        let p = 2 + rng.next_below(40);
+        let m = 1 + rng.next_below(10_000);
+        let part = BlockPartition::random(p, m, rng.next_u64());
+        let skips = SkipScheme::HalvingUp.skips(p).unwrap();
+        let sched = reduce_scatter_schedule(p, &skips);
+        let counters = sched.counters(&part);
+        // Every global block g ≠ r is sent exactly once by rank r (as the
+        // partial destined for g): elems_sent = m − size((r)) … in R-space,
+        // rank r sends blocks (r+1..r+p) mod p exactly once each.
+        for (r, c) in counters.iter().enumerate() {
+            let expect: usize =
+                (1..p).map(|i| part.size((r + i) % p)).sum();
+            assert_eq!(c.elems_sent, expect, "p={p} m={m} r={r}");
+        }
+    }
+}
+
+#[test]
+fn halving_up_run_bound_is_tight_only_for_halving() {
+    // §3 property as a property test: halving-up max run ≤ ⌈p/2⌉ for all p.
+    for p in 2..600 {
+        let skips = SkipScheme::HalvingUp.skips(p).unwrap();
+        let sched = allreduce_schedule(p, &skips);
+        assert!(sched.max_message_blocks() <= p.div_ceil(2), "p={p}");
+    }
+}
+
+#[test]
+fn all_algorithms_structurally_valid_random_p() {
+    let mut rng = SplitMix64::new(1234);
+    for _ in 0..50 {
+        let p = 2 + rng.next_below(64);
+        let algs: Vec<Algorithm> = vec![
+            Algorithm::parse("rs").unwrap(),
+            Algorithm::parse("ar").unwrap(),
+            Algorithm::parse("ag").unwrap(),
+            Algorithm::parse("rs:sqrt").unwrap(),
+            Algorithm::parse("ar:pow2").unwrap(),
+            Algorithm::RingReduceScatter,
+            Algorithm::RingAllreduce,
+            Algorithm::RecursiveDoublingAllreduce,
+            Algorithm::RabenseifnerAllreduce,
+            Algorithm::BinomialAllreduce,
+            Algorithm::BruckAllgather,
+            Algorithm::BinomialReduce { root: rng.next_below(p) },
+            Algorithm::BinomialBcast { root: rng.next_below(p) },
+        ];
+        for alg in algs {
+            let sched: Schedule = alg.schedule(p);
+            sched.assert_valid();
+        }
+    }
+}
+
+#[test]
+fn round_lower_bound_is_respected_and_achieved() {
+    // No valid skip sequence can beat ⌈log2 p⌉ rounds (each round at most
+    // doubles the set of inputs a partial can contain), and halving-up
+    // achieves it.
+    let mut rng = SplitMix64::new(55);
+    for _ in 0..200 {
+        let p = 2 + rng.next_below(500);
+        let skips = random_valid_skips(p, &mut rng);
+        assert!(skips.len() as u32 >= ceil_log2(p), "p={p} {skips:?} beats the lower bound?!");
+        let halving = SkipScheme::HalvingUp.skips(p).unwrap();
+        assert_eq!(halving.len() as u32, ceil_log2(p));
+    }
+}
+
+#[test]
+fn allreduce_equals_rs_plus_mirrored_ag_rounds() {
+    let mut rng = SplitMix64::new(77);
+    for _ in 0..100 {
+        let p = 2 + rng.next_below(128);
+        let skips = random_valid_skips(p, &mut rng);
+        let ar = allreduce_schedule(p, &skips);
+        assert_eq!(ar.num_rounds(), 2 * skips.len());
+        let part = BlockPartition::uniform(p, 2);
+        for c in ar.counters(&part) {
+            assert_eq!(c.blocks_sent, 2 * (p - 1));
+            assert_eq!(c.blocks_combined, p - 1);
+        }
+    }
+}

@@ -1,0 +1,136 @@
+//! Simulator properties: DES agreement with the paper's closed forms and
+//! the structural inequalities between algorithms.
+
+use circulant_collectives::collectives::Algorithm;
+use circulant_collectives::datatypes::BlockPartition;
+use circulant_collectives::sim::{closed_form, simulate, CostModel};
+use circulant_collectives::util::rng::SplitMix64;
+
+#[test]
+fn des_equals_corollary1_exactly_on_regular_partitions() {
+    // The asynchronous DES must telescope to Corollary 1's closed form for
+    // Algorithm 1 on uniform blocks (m divisible by p for exactness).
+    let model = CostModel::new(2.0, 3e-4, 7e-5);
+    let mut rng = SplitMix64::new(5);
+    for _ in 0..80 {
+        let p = 2 + rng.next_below(300);
+        let b = 1 + rng.next_below(500);
+        let m = p * b;
+        let part = BlockPartition::uniform(p, b);
+        let sched = Algorithm::parse("rs").unwrap().schedule(p);
+        let sim = simulate(&sched, &part, &model);
+        let cf = closed_form::alg1_reduce_scatter(&model, p, m);
+        assert!(
+            (sim.total - cf).abs() <= 1e-9 * cf,
+            "p={p} b={b}: DES {} vs Corollary 1 {}",
+            sim.total,
+            cf
+        );
+    }
+}
+
+#[test]
+fn des_equals_theorem2_form_for_allreduce() {
+    let model = CostModel::new(1.0, 1e-4, 5e-5);
+    let mut rng = SplitMix64::new(6);
+    for _ in 0..60 {
+        let p = 2 + rng.next_below(200);
+        let b = 1 + rng.next_below(200);
+        let part = BlockPartition::uniform(p, b);
+        let sched = Algorithm::parse("ar").unwrap().schedule(p);
+        let sim = simulate(&sched, &part, &model);
+        let cf = closed_form::alg2_allreduce(&model, p, p * b);
+        assert!((sim.total - cf).abs() <= 1e-9 * cf, "p={p} b={b}");
+    }
+}
+
+#[test]
+fn corollary3_bound_holds_for_random_irregular_partitions() {
+    let model = CostModel::cluster();
+    let mut rng = SplitMix64::new(8);
+    for _ in 0..100 {
+        let p = 2 + rng.next_below(100);
+        let m = 1 + rng.next_below(100_000);
+        let part = BlockPartition::random(p, m, rng.next_u64());
+        let sched = Algorithm::parse("rs").unwrap().schedule(p);
+        let sim = simulate(&sched, &part, &model);
+        let bound = closed_form::corollary3_bound(&model, p, m);
+        assert!(sim.total <= bound * (1.0 + 1e-9), "p={p} m={m}: {} > {}", sim.total, bound);
+    }
+}
+
+#[test]
+fn ring_des_matches_ring_closed_form() {
+    let model = CostModel::new(1.0, 1e-4, 3e-5);
+    for p in [2usize, 5, 16, 33, 100] {
+        let b = 13;
+        let part = BlockPartition::uniform(p, b);
+        let sim = simulate(&Algorithm::RingAllreduce.schedule(p), &part, &model);
+        let cf = closed_form::ring_allreduce(&model, p, p * b);
+        assert!((sim.total - cf).abs() <= 1e-9 * cf.max(1.0), "p={p}: {} vs {}", sim.total, cf);
+    }
+}
+
+#[test]
+fn volume_dominance_alg2_vs_ring_everywhere() {
+    // Identical volume, strictly fewer rounds ⇒ Alg 2 ≤ ring in the model,
+    // for every p and m.
+    let model = CostModel::cluster();
+    let mut rng = SplitMix64::new(9);
+    for _ in 0..100 {
+        let p = 2 + rng.next_below(500);
+        let m = 1 + rng.next_below(1 << 22);
+        let a = closed_form::alg2_allreduce(&model, p, m);
+        let r = closed_form::ring_allreduce(&model, p, m);
+        assert!(a <= r + 1e-12, "p={p} m={m}: alg2 {a} > ring {r}");
+    }
+}
+
+#[test]
+fn des_monotone_in_alpha_beta_gamma() {
+    let part = BlockPartition::regular(37, 3700);
+    let sched = Algorithm::parse("ar").unwrap().schedule(37);
+    let base = simulate(&sched, &part, &CostModel::new(1.0, 1e-3, 1e-4)).total;
+    for scaled in [
+        CostModel::new(2.0, 1e-3, 1e-4),
+        CostModel::new(1.0, 2e-3, 1e-4),
+        CostModel::new(1.0, 1e-3, 2e-4),
+    ] {
+        assert!(simulate(&sched, &part, &scaled).total > base);
+    }
+}
+
+#[test]
+fn idle_and_degenerate_cases() {
+    let model = CostModel::cluster();
+    // p = 1: nothing to do
+    let part = BlockPartition::regular(1, 100);
+    let sched = Algorithm::parse("ar").unwrap().schedule(1);
+    assert_eq!(simulate(&sched, &part, &model).total, 0.0);
+    // m = 0: pure α cost (rounds still happen with empty payloads)
+    let p = 8;
+    let part = BlockPartition::regular(p, 0);
+    let sched = Algorithm::parse("ar").unwrap().schedule(p);
+    let t = simulate(&sched, &part, &model).total;
+    assert!((t - 6.0 * model.alpha).abs() < 1e-15, "t={t}");
+}
+
+#[test]
+fn selector_agrees_with_des_ranking() {
+    // The closed-form selector must pick an algorithm whose DES time is
+    // within 1% of the DES-best (sanity that formulas track the simulator).
+    let model = CostModel::cluster();
+    let mut rng = SplitMix64::new(31);
+    for _ in 0..20 {
+        let p = 2 + rng.next_below(120);
+        let m = 1 << (4 + rng.next_below(16));
+        let part = BlockPartition::regular(p, m);
+        let mut best = f64::INFINITY;
+        for alg in Algorithm::allreduce_family() {
+            best = best.min(simulate(&alg.schedule(p), &part, &model).total);
+        }
+        let (chosen, _) = circulant_collectives::coordinator::select_allreduce(&model, p, m);
+        let chosen_t = simulate(&chosen.schedule(p), &part, &model).total;
+        assert!(chosen_t <= best * 1.01, "p={p} m={m}: {} at {chosen_t} vs best {best}", chosen.name());
+    }
+}
