@@ -5,7 +5,9 @@
 //!      roofline (a plain slice copy),
 //!   2. the §3 ablation: one bulk combine over a run of blocks vs p
 //!      per-block combines (why the schedule keeps runs consecutive),
-//!   3. message pack (gather of ≤2 slices) throughput,
+//!   3. message pack (gather of ≤2 slices) throughput, plus the
+//!      allocation-count ablation: pooled borrow-pack transport vs a
+//!      fresh `Vec` per round (zero steady-state payload allocations),
 //!   4. PJRT combine throughput per bucket (kernel dispatch amortization),
 //!   5. end-to-end threaded allreduce wall-clock vs DES prediction
 //!      (correlation sanity for using DES in F1/F2).
@@ -22,9 +24,99 @@ use circulant_collectives::util::stats::pearson;
 use circulant_collectives::util::table::{fmt_si, Table};
 use std::sync::Arc;
 
+// Counting allocator for the section-3 allocation ablation: every
+// alloc/realloc anywhere in the process bumps the counter (dealloc is
+// free), so per-round deltas compare the pooled executor against the
+// fresh-Vec-per-round variant on equal terms.
+mod alloc_count {
+    use std::alloc::{GlobalAlloc, Layout, System};
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    pub static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+    pub struct Counting;
+
+    unsafe impl GlobalAlloc for Counting {
+        unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+            System.alloc(layout)
+        }
+        unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+            System.dealloc(ptr, layout)
+        }
+        unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+            System.realloc(ptr, layout, new_size)
+        }
+    }
+
+    pub fn now() -> u64 {
+        ALLOCS.load(Ordering::Relaxed)
+    }
+}
+
+#[global_allocator]
+static COUNTING_ALLOC: alloc_count::Counting = alloc_count::Counting;
+
 fn gbps(elems: usize, seconds: f64) -> f64 {
     // combine reads 2 vectors and writes 1 → 12 bytes per element
     12.0 * elems as f64 / seconds / 1e9
+}
+
+/// The pre-pool executor, kept verbatim as the ablation baseline: packs
+/// every outgoing payload into a brand-new `Vec` and drops every received
+/// one (ownership-transfer `sendrecv_owned`, no recycling).
+fn execute_rank_fresh_vec(
+    ep: &mut circulant_collectives::transport::Endpoint,
+    schedule: &circulant_collectives::schedule::Schedule,
+    part: &BlockPartition,
+    op: &dyn ReduceOp,
+    buf: &mut [f32],
+    round_base: u64,
+) -> u64 {
+    use circulant_collectives::schedule::RecvAction;
+    let p = schedule.p;
+    let r = ep.rank;
+    for (k, round) in schedule.rounds.iter().enumerate() {
+        let step = &round.steps[r];
+        if step.is_idle() {
+            continue;
+        }
+        let tag = round_base + k as u64;
+        let send = step.send.as_ref().map(|t| {
+            let b = t.blocks.normalized(p);
+            let (a, rest) = part.circular_ranges(b.start, b.len);
+            let mut payload = Vec::with_capacity(part.circular_elems(b.start, b.len));
+            payload.extend_from_slice(&buf[a]);
+            if let Some(rest) = rest {
+                payload.extend_from_slice(&buf[rest]);
+            }
+            (t.peer, payload)
+        });
+        let recv_from = step.recv.as_ref().map(|rv| rv.peer);
+        let payload = ep.sendrecv_owned(send, recv_from, tag).unwrap();
+        if let (Some(rv), Some(payload)) = (step.recv.as_ref(), payload) {
+            let b = rv.blocks.normalized(p);
+            let (a, rest) = part.circular_ranges(b.start, b.len);
+            let split = a.len();
+            match rv.action {
+                RecvAction::Combine => {
+                    op.combine(&mut buf[a], &payload[..split]);
+                    if let Some(rest) = rest {
+                        op.combine(&mut buf[rest], &payload[split..]);
+                    }
+                }
+                RecvAction::Store => {
+                    buf[a].copy_from_slice(&payload[..split]);
+                    if let Some(rest) = rest {
+                        buf[rest].copy_from_slice(&payload[split..]);
+                    }
+                }
+            }
+            // payload dropped here: freed, never recycled.
+        }
+    }
+    round_base + schedule.rounds.len() as u64
 }
 
 fn main() {
@@ -120,6 +212,87 @@ fn main() {
         fmt_si(pack.median),
         8.0 * packed as f64 / pack.median / 1e9
     );
+
+    // 3b. allocation ablation: pooled borrow-pack vs fresh Vec per round -
+    // Back-to-back threaded allreduces on one network; the counting
+    // allocator reports process-wide allocations per schedule round, and
+    // the endpoint counters report exact payload-buffer pool hits/misses.
+    {
+        use circulant_collectives::transport::run_ranks;
+        let p = 4usize;
+        let mab = 1 << 14;
+        let part = Arc::new(BlockPartition::regular(p, mab));
+        let skips = SkipScheme::HalvingUp.skips(p).unwrap();
+        let sched = Arc::new(allreduce_schedule(p, &skips));
+        let rounds_per_iter = sched.rounds.len() as u64;
+        let (warm, total) = (20u64, 120u64);
+        let measured_rounds = (total - warm) * rounds_per_iter;
+
+        // pooled (the real executor)
+        let sched2 = sched.clone();
+        let part2 = part.clone();
+        let a0_allocs = alloc_count::now();
+        let pooled = run_ranks(p, move |rank, ep| {
+            let mut buf = vec![rank as f32 + 1.0; mab];
+            let mut tag = 0u64;
+            for _ in 0..warm {
+                tag = circulant_collectives::collectives::execute_rank(
+                    ep, &sched2, &part2, &SumOp, &mut buf, tag,
+                )
+                .unwrap();
+            }
+            let warm_misses = ep.counters.pool_misses;
+            for _ in warm..total {
+                tag = circulant_collectives::collectives::execute_rank(
+                    ep, &sched2, &part2, &SumOp, &mut buf, tag,
+                )
+                .unwrap();
+            }
+            (warm_misses, ep.counters.clone())
+        });
+        let pooled_total_allocs = alloc_count::now() - a0_allocs;
+
+        // fresh-Vec baseline (the pre-pool executor)
+        let sched3 = sched.clone();
+        let part3 = part.clone();
+        let f0 = alloc_count::now();
+        let _fresh = run_ranks(p, move |rank, ep| {
+            let mut buf = vec![rank as f32 + 1.0; mab];
+            let mut tag = 0u64;
+            for _ in 0..total {
+                tag = execute_rank_fresh_vec(ep, &sched3, &part3, &SumOp, &mut buf, tag);
+            }
+        });
+        let fresh_total_allocs = alloc_count::now() - f0;
+
+        let steady_misses: u64 = pooled.iter().map(|(w, c)| c.pool_misses - w).sum();
+        let hits: u64 = pooled.iter().map(|(_, c)| c.pool_hits).sum();
+        let misses: u64 = pooled.iter().map(|(_, c)| c.pool_misses).sum();
+        let hit_rate = 100.0 * hits as f64 / (hits + misses).max(1) as f64;
+        println!("allocation ablation (threaded allreduce p={p}, m={mab}, {} steady rounds/rank):", measured_rounds);
+        println!(
+            "  pooled:    {} total allocs, payload pool {} hits / {} misses ({hit_rate:.1}% hit rate, {} misses after warm-up)",
+            pooled_total_allocs, hits, misses, steady_misses
+        );
+        println!(
+            "  fresh-Vec: {} total allocs ({:.1}× the pooled path)",
+            fresh_total_allocs,
+            fresh_total_allocs as f64 / pooled_total_allocs.max(1) as f64
+        );
+        let steady_hit_rate = 100.0
+            * (1.0 - steady_misses as f64 / (measured_rounds * p as u64) as f64);
+        println!(
+            "  steady-state payload allocations per round: {:.4} (pooled), post-warm-up hit rate {steady_hit_rate:.2}%\n",
+            steady_misses as f64 / measured_rounds as f64
+        );
+        // Quality gate: steady-state misses must not scale with rounds
+        // (a per-round allocation regression would show ~1 per round; a
+        // handful is the bounded release/acquire race, see transport docs).
+        assert!(
+            steady_misses <= measured_rounds / 50,
+            "pooled transport allocated payloads after warm-up: {steady_misses} misses over {measured_rounds} rounds/rank"
+        );
+    }
 
     // 4. PJRT combine per bucket -----------------------------------------
     match Engine::load(default_artifact_dir()) {

@@ -32,6 +32,12 @@ struct Entry {
 /// Exact for the integers involved (all < 2^24).
 fn pack(slots: &[Vec<Entry>]) -> Vec<f32> {
     let mut out = Vec::new();
+    pack_into(&mut out, slots);
+    out
+}
+
+/// [`pack`] into a caller-provided (pooled) buffer instead of allocating.
+fn pack_into(out: &mut Vec<f32>, slots: &[Vec<Entry>]) {
     for slot in slots {
         out.push(slot.len() as f32);
         for e in slot {
@@ -40,7 +46,15 @@ fn pack(slots: &[Vec<Entry>]) -> Vec<f32> {
             out.extend_from_slice(&e.data);
         }
     }
-    out
+}
+
+/// Exact element count [`pack_into`] will produce for `slots` — computed
+/// up front so the pooled buffer is acquired at full size (no regrow).
+fn packed_len(slots: &[Vec<Entry>]) -> usize {
+    slots
+        .iter()
+        .map(|slot| 1 + slot.iter().map(|e| 2 + e.data.len()).sum::<usize>())
+        .sum()
 }
 
 /// Inverse of [`pack`] for `n_slots` slots.
@@ -106,12 +120,15 @@ pub fn alltoall_rank(
         let to = (r + s) % p;
         let from = (r + p - s) % p;
         // Send slots [s, prev) — they migrate to the to-processor, where
-        // they sit at distance [0, len).
-        let payload = pack(&slots[s..prev]);
+        // they sit at distance [0, len). Frame into a pooled buffer and
+        // hand the received one back once unpacked (the loan protocol).
+        let mut payload = ep.acquire(to, packed_len(&slots[s..prev]));
+        pack_into(&mut payload, &slots[s..prev]);
         let received = ep
-            .sendrecv(Some((to, payload)), Some(from), round_base + k as u64)?
+            .sendrecv_owned(Some((to, payload)), Some(from), round_base + k as u64)?
             .expect("recv requested");
         let incoming = unpack(&received, len, r, k)?;
+        ep.release(from, received);
         for (j, entries) in incoming.into_iter().enumerate() {
             slots[j].extend(entries); // ⊕ = concatenation
             slots[s + j].clear(); // migrated away (mirrors R's live region)
@@ -192,11 +209,13 @@ pub fn alltoallv_rank(
         let len = prev - s;
         let to = (r + s) % p;
         let from = (r + p - s) % p;
-        let payload = pack(&slots[s..prev]);
+        let mut payload = ep.acquire(to, packed_len(&slots[s..prev]));
+        pack_into(&mut payload, &slots[s..prev]);
         let received = ep
-            .sendrecv(Some((to, payload)), Some(from), round_base + k as u64)?
+            .sendrecv_owned(Some((to, payload)), Some(from), round_base + k as u64)?
             .expect("recv requested");
         let incoming = unpack(&received, len, r, k)?;
+        ep.release(from, received);
         for (j, entries) in incoming.into_iter().enumerate() {
             slots[j].extend(entries);
             slots[s + j].clear();

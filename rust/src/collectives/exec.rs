@@ -7,11 +7,24 @@
 //! into the outgoing message and receives *scatter/combine* them back —
 //! no rotated copy of the input is ever made (cf. paper §3 on avoiding
 //! copies / MPI datatypes).
+//!
+//! # Borrow-pack `sendrecv` contract
+//!
+//! The executor owns no scratch buffer. Per round it hands the transport
+//! the (≤ 2) working-vector slices of the outgoing circular range; the
+//! transport gathers them directly into a buffer checked out of its
+//! per-peer pool ([`Endpoint::acquire`]). Received payloads are combined /
+//! stored into the working vector and immediately handed back with
+//! [`Endpoint::release`], returning the buffer to *its sender's* pool.
+//! Send-only rounds (tree schedules such as binomial reduce) follow the
+//! identical loan protocol, so after warm-up the executor performs zero
+//! payload allocations per round regardless of schedule shape — the
+//! allocation ablation in `benches/perf_hotpath.rs` measures this.
 
 use crate::datatypes::BlockPartition;
 use crate::ops::ReduceOp;
 use crate::schedule::{RecvAction, Schedule};
-use crate::transport::{Endpoint, TransportError};
+use crate::transport::{Counters, Endpoint, TransportError};
 
 /// Errors surfaced by collective execution.
 #[derive(Debug, thiserror::Error)]
@@ -46,7 +59,6 @@ pub fn execute_rank(
     if buf.len() != part.total() {
         return Err(CollectiveError::BadBuffer { rank: r, got: buf.len(), want: part.total() });
     }
-    let mut scratch: Vec<f32> = Vec::new();
     for (k, round) in schedule.rounds.iter().enumerate() {
         let step = &round.steps[r];
         if step.is_idle() {
@@ -54,17 +66,21 @@ pub fn execute_rank(
         }
         let tag = round_base + k as u64;
 
-        // Pack the outgoing payload (gather ≤2 slices).
-        let send = step.send.as_ref().map(|t| {
-            let b = t.blocks.normalized(p);
-            let (a, rest) = part.circular_ranges(b.start, b.len);
-            scratch.clear();
-            scratch.extend_from_slice(&buf[a]);
-            if let Some(rest) = rest {
-                scratch.extend_from_slice(&buf[rest]);
+        // Borrow-pack the outgoing payload: hand the transport the ≤2
+        // slices of the circular range; it gathers them into a pooled
+        // buffer (no local scratch, no per-round allocation).
+        let send = match step.send.as_ref() {
+            Some(t) => {
+                let b = t.blocks.normalized(p);
+                let (a, rest) = part.circular_ranges(b.start, b.len);
+                let tail: &[f32] = match rest {
+                    Some(rest) => &buf[rest],
+                    None => &[],
+                };
+                Some((t.peer, &buf[a], tail))
             }
-            (t.peer, std::mem::take(&mut scratch))
-        });
+            None => None,
+        };
 
         let recv_from = step.recv.as_ref().map(|rv| rv.peer);
         let payload = ep.sendrecv(send, recv_from, tag)?;
@@ -96,8 +112,8 @@ pub fn execute_rank(
                     }
                 }
             }
-            // Reuse the received allocation for the next round's packing.
-            scratch = payload;
+            // Loan protocol: hand the buffer back to its sender's pool.
+            ep.release(rv.peer, payload);
         }
     }
     Ok(round_base + schedule.rounds.len() as u64)
@@ -111,6 +127,21 @@ pub fn run_schedule_threads(
     op: std::sync::Arc<dyn ReduceOp>,
     inputs: Vec<Vec<f32>>,
 ) -> Vec<Vec<f32>> {
+    run_schedule_threads_with_counters(schedule, part, op, inputs)
+        .into_iter()
+        .map(|(buf, _)| buf)
+        .collect()
+}
+
+/// Like [`run_schedule_threads`] but also returns each rank's transport
+/// [`Counters`] (volume + pool hit/miss — the allocation-regression tests
+/// read these).
+pub fn run_schedule_threads_with_counters(
+    schedule: &Schedule,
+    part: &BlockPartition,
+    op: std::sync::Arc<dyn ReduceOp>,
+    inputs: Vec<Vec<f32>>,
+) -> Vec<(Vec<f32>, Counters)> {
     use crate::transport::run_ranks;
     assert_eq!(inputs.len(), schedule.p);
     let schedule = std::sync::Arc::new(schedule.clone());
@@ -122,7 +153,7 @@ pub fn run_schedule_threads(
         let mut buf = inputs.lock().unwrap()[rank].take().expect("input taken once");
         execute_rank(ep, &schedule, &part, op.as_ref(), &mut buf, 0)
             .unwrap_or_else(|e| panic!("rank {rank}: {e}"));
-        buf
+        (buf, ep.counters.clone())
     })
 }
 
@@ -191,5 +222,79 @@ mod tests {
             execute_rank(ep, &sched, &part, &SumOp, &mut buf, 0).is_err()
         });
         assert!(out.iter().all(|&e| e));
+    }
+
+    #[test]
+    fn pooled_transport_zero_alloc_steady_state() {
+        // Allocation regression: back-to-back allreduces on ONE network.
+        // After the warm-up iterations the pools must serve every payload
+        // (pool misses stop growing — zero steady-state allocations).
+        let p = 2usize;
+        let m = 64usize;
+        let part = Arc::new(BlockPartition::regular(p, m));
+        let skips = SkipScheme::HalvingUp.skips(p).unwrap();
+        let sched = Arc::new(allreduce_schedule(p, &skips));
+        let (warm, total) = (10u64, 50u64);
+        let out = crate::transport::run_ranks(p, move |rank, ep| {
+            let mut buf = vec![rank as f32 + 1.0; m];
+            let mut tag = 0u64;
+            for _ in 0..warm {
+                tag = execute_rank(ep, &sched, &part, &SumOp, &mut buf, tag).unwrap();
+            }
+            let misses_after_warm = ep.counters.pool_misses;
+            for _ in warm..total {
+                tag = execute_rank(ep, &sched, &part, &SumOp, &mut buf, tag).unwrap();
+            }
+            (misses_after_warm, ep.counters.clone())
+        });
+        for (rank, (warm_misses, c)) in out.iter().enumerate() {
+            // Supply only grows on a miss, and a just-released buffer can
+            // race the next acquire, so allow the bounded tail of that
+            // race (≤ 2 per capacity class) — a real regression allocates
+            // every round, i.e. ~(total−warm)·2 = 80 extra misses here.
+            let steady_misses = c.pool_misses - warm_misses;
+            assert!(
+                steady_misses <= 2,
+                "rank {rank}: {steady_misses} pool misses after warm-up (steady-state allocation)"
+            );
+            assert!(c.pool_hits > 0, "rank {rank}: the pool never served a buffer");
+            assert!(c.bufs_recycled > 0, "rank {rank}: no buffer ever returned");
+            let acquires = c.pool_hits + c.pool_misses;
+            assert!(acquires >= total * 2, "rank {rank}: not enough acquires measured");
+        }
+    }
+
+    #[test]
+    fn send_only_rounds_recycle_buffers() {
+        // Binomial allreduce = reduce + bcast: every non-root rank has
+        // send-only rounds (tree edges). The old executor only restored
+        // its scratch when a recv happened, so these rounds allocated
+        // every time; the loan protocol must recycle them identically.
+        let p = 4usize;
+        let m = 32usize;
+        let part = Arc::new(BlockPartition::regular(p, m));
+        let sched = Arc::new(crate::collectives::baselines::binomial_allreduce_schedule(p));
+        let (warm, total) = (5u64, 30u64);
+        let out = crate::transport::run_ranks(p, move |rank, ep| {
+            let mut buf = vec![rank as f32; m];
+            let mut tag = 0u64;
+            for _ in 0..warm {
+                tag = execute_rank(ep, &sched, &part, &SumOp, &mut buf, tag).unwrap();
+            }
+            let misses_after_warm = ep.counters.pool_misses;
+            for _ in warm..total {
+                tag = execute_rank(ep, &sched, &part, &SumOp, &mut buf, tag).unwrap();
+            }
+            (misses_after_warm, ep.counters.clone())
+        });
+        for (rank, (warm_misses, c)) in out.iter().enumerate() {
+            // Tolerate the bounded release/acquire race (see the zero-alloc
+            // test above); a per-round leak would show ~25+ extra misses.
+            let steady_misses = c.pool_misses - warm_misses;
+            assert!(
+                steady_misses <= 4,
+                "rank {rank}: {steady_misses} misses after warm-up — send-only rounds still allocate"
+            );
+        }
     }
 }

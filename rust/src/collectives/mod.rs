@@ -9,7 +9,9 @@ pub mod generators;
 pub mod hierarchical;
 pub mod symbolic;
 
-pub use exec::{execute_rank, run_schedule_threads, CollectiveError};
+pub use exec::{
+    execute_rank, run_schedule_threads, run_schedule_threads_with_counters, CollectiveError,
+};
 pub use generators::{allgather_schedule, allreduce_schedule, reduce_scatter_schedule};
 
 use crate::schedule::Schedule;
@@ -41,42 +43,61 @@ pub enum Algorithm {
 
 impl Algorithm {
     /// Parse a CLI/config name. Circulant variants accept an optional
-    /// `:scheme` suffix, e.g. `allreduce:pow2` or `reduce-scatter:sqrt`.
+    /// `:scheme` suffix (e.g. `allreduce:pow2`, `reduce-scatter:sqrt`);
+    /// rooted binomial variants accept an optional `:root` suffix
+    /// (e.g. `binomial-reduce:3`, default root 0). Suffixes on algorithms
+    /// that take none are rejected. Every [`Algorithm::name`] output
+    /// parses back to the same variant (round-trip tested below).
     pub fn parse(s: &str) -> Option<Algorithm> {
-        let (head, scheme) = match s.split_once(':') {
-            Some((h, sch)) => (h, SkipScheme::parse(sch).ok()?),
-            None => (s, SkipScheme::HalvingUp),
+        let (head, suffix) = match s.split_once(':') {
+            Some((h, x)) => (h, Some(x)),
+            None => (s, None),
         };
+        let scheme = || match suffix {
+            Some(x) => SkipScheme::parse(x).ok(),
+            None => Some(SkipScheme::HalvingUp),
+        };
+        let root = || match suffix {
+            Some(x) => x.parse::<usize>().ok(),
+            None => Some(0),
+        };
+        // Arms that take no suffix go through `bare`, so each arm states
+        // its own suffix policy — there is no separate allowlist to keep
+        // in sync.
+        let bare = |alg: Algorithm| if suffix.is_none() { Some(alg) } else { None };
         Some(match head {
-            "reduce-scatter" | "rs" => Algorithm::CirculantReduceScatter(scheme),
-            "allreduce" | "ar" => Algorithm::CirculantAllreduce(scheme),
-            "allgather" | "ag" => Algorithm::CirculantAllgather(scheme),
-            "ring-rs" => Algorithm::RingReduceScatter,
-            "ring-allreduce" => Algorithm::RingAllreduce,
-            "ring-ag" => Algorithm::RingAllgather,
-            "rec-halving-rs" => Algorithm::RecursiveHalvingReduceScatter,
-            "rec-doubling-allreduce" => Algorithm::RecursiveDoublingAllreduce,
-            "rabenseifner" => Algorithm::RabenseifnerAllreduce,
-            "binomial-allreduce" => Algorithm::BinomialAllreduce,
-            "bruck-ag" => Algorithm::BruckAllgather,
+            "reduce-scatter" | "rs" => Algorithm::CirculantReduceScatter(scheme()?),
+            "allreduce" | "ar" => Algorithm::CirculantAllreduce(scheme()?),
+            "allgather" | "ag" => Algorithm::CirculantAllgather(scheme()?),
+            "ring-rs" => bare(Algorithm::RingReduceScatter)?,
+            "ring-allreduce" => bare(Algorithm::RingAllreduce)?,
+            "ring-ag" => bare(Algorithm::RingAllgather)?,
+            "rec-halving-rs" => bare(Algorithm::RecursiveHalvingReduceScatter)?,
+            "rec-doubling-allreduce" => bare(Algorithm::RecursiveDoublingAllreduce)?,
+            "rabenseifner" => bare(Algorithm::RabenseifnerAllreduce)?,
+            "binomial-reduce" => Algorithm::BinomialReduce { root: root()? },
+            "binomial-bcast" => Algorithm::BinomialBcast { root: root()? },
+            "binomial-allreduce" => bare(Algorithm::BinomialAllreduce)?,
+            "bruck-ag" => bare(Algorithm::BruckAllgather)?,
             _ => return None,
         })
     }
 
-    /// Short display name.
+    /// Canonical display name — always re-parseable by [`Algorithm::parse`]
+    /// (`parse(&alg.name()) == Some(alg)` for every variant).
     pub fn name(&self) -> String {
         match self {
-            Algorithm::CirculantReduceScatter(s) => format!("circulant-rs({})", s.name()),
-            Algorithm::CirculantAllreduce(s) => format!("circulant-allreduce({})", s.name()),
-            Algorithm::CirculantAllgather(s) => format!("circulant-ag({})", s.name()),
+            Algorithm::CirculantReduceScatter(s) => format!("reduce-scatter:{}", s.name()),
+            Algorithm::CirculantAllreduce(s) => format!("allreduce:{}", s.name()),
+            Algorithm::CirculantAllgather(s) => format!("allgather:{}", s.name()),
             Algorithm::RingReduceScatter => "ring-rs".into(),
             Algorithm::RingAllreduce => "ring-allreduce".into(),
             Algorithm::RingAllgather => "ring-ag".into(),
             Algorithm::RecursiveHalvingReduceScatter => "rec-halving-rs".into(),
             Algorithm::RecursiveDoublingAllreduce => "rec-doubling-allreduce".into(),
             Algorithm::RabenseifnerAllreduce => "rabenseifner".into(),
-            Algorithm::BinomialReduce { root } => format!("binomial-reduce({root})"),
-            Algorithm::BinomialBcast { root } => format!("binomial-bcast({root})"),
+            Algorithm::BinomialReduce { root } => format!("binomial-reduce:{root}"),
+            Algorithm::BinomialBcast { root } => format!("binomial-bcast:{root}"),
             Algorithm::BinomialAllreduce => "binomial-allreduce".into(),
             Algorithm::BruckAllgather => "bruck-ag".into(),
         }
@@ -162,6 +183,54 @@ mod tests {
         assert_eq!(Algorithm::parse("ring-allreduce").unwrap(), Algorithm::RingAllreduce);
         assert!(Algorithm::parse("nope").is_none());
         assert!(Algorithm::parse("rs:nope").is_none());
+    }
+
+    #[test]
+    fn parse_binomial_rooted_variants() {
+        assert_eq!(
+            Algorithm::parse("binomial-reduce").unwrap(),
+            Algorithm::BinomialReduce { root: 0 }
+        );
+        assert_eq!(
+            Algorithm::parse("binomial-reduce:3").unwrap(),
+            Algorithm::BinomialReduce { root: 3 }
+        );
+        assert_eq!(
+            Algorithm::parse("binomial-bcast:7").unwrap(),
+            Algorithm::BinomialBcast { root: 7 }
+        );
+        assert!(Algorithm::parse("binomial-reduce:x").is_none());
+        // Suffixes on suffix-less algorithms are rejected, not ignored.
+        assert!(Algorithm::parse("ring-rs:pow2").is_none());
+        assert!(Algorithm::parse("binomial-allreduce:3").is_none());
+    }
+
+    #[test]
+    fn name_parse_roundtrip_every_variant() {
+        let all = vec![
+            Algorithm::CirculantReduceScatter(SkipScheme::HalvingUp),
+            Algorithm::CirculantReduceScatter(SkipScheme::Sqrt),
+            Algorithm::CirculantReduceScatter(SkipScheme::Custom(vec![4, 2, 1])),
+            Algorithm::CirculantAllreduce(SkipScheme::HalvingUp),
+            Algorithm::CirculantAllreduce(SkipScheme::PowerOfTwo),
+            Algorithm::CirculantAllgather(SkipScheme::FullyConnected),
+            Algorithm::RingReduceScatter,
+            Algorithm::RingAllreduce,
+            Algorithm::RingAllgather,
+            Algorithm::RecursiveHalvingReduceScatter,
+            Algorithm::RecursiveDoublingAllreduce,
+            Algorithm::RabenseifnerAllreduce,
+            Algorithm::BinomialReduce { root: 0 },
+            Algorithm::BinomialReduce { root: 5 },
+            Algorithm::BinomialBcast { root: 0 },
+            Algorithm::BinomialBcast { root: 2 },
+            Algorithm::BinomialAllreduce,
+            Algorithm::BruckAllgather,
+        ];
+        for alg in all {
+            let name = alg.name();
+            assert_eq!(Algorithm::parse(&name), Some(alg), "round-trip of {name:?}");
+        }
     }
 
     #[test]

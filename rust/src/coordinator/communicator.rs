@@ -9,6 +9,12 @@
 //! Round tags advance monotonically per communicator, so collectives can
 //! be issued back-to-back without cross-talk (the transport stashes
 //! out-of-order arrivals by `(peer, tag)`).
+//!
+//! Buffer discipline: operations that cannot run in place on the caller's
+//! buffers (reduce-scatter staging, scatter/gather assembly) stage through
+//! one persistent per-communicator working vector — steady-state calls
+//! reuse its capacity instead of allocating, matching the transport's
+//! pooled zero-copy payload protocol.
 
 
 use crate::collectives::alltoall::{alltoall_rank, receive_partition};
@@ -47,11 +53,26 @@ pub struct Communicator {
     scheme: SkipScheme,
     backend: OpBackend,
     tag: u64,
+    /// Persistent staging buffer for out-of-place collectives; capacity is
+    /// retained across calls so steady-state traffic never allocates.
+    work: Vec<f32>,
 }
 
 impl Communicator {
     pub fn new(ep: Endpoint, scheme: SkipScheme, backend: OpBackend) -> Self {
-        Self { ep, scheme, backend, tag: 0 }
+        Self { ep, scheme, backend, tag: 0, work: Vec::new() }
+    }
+
+    /// Stage `src` into the working buffer (reusing its capacity).
+    fn stage(&mut self, src: &[f32]) {
+        self.work.clear();
+        self.work.extend_from_slice(src);
+    }
+
+    /// Resize the working buffer to `n` zeros (reusing its capacity).
+    fn stage_zeros(&mut self, n: usize) {
+        self.work.clear();
+        self.work.resize(n, 0.0);
     }
 
     pub fn rank(&self) -> usize {
@@ -98,11 +119,11 @@ impl Communicator {
             });
         }
         let part = BlockPartition::uniform(p, b);
-        let mut buf = sendbuf.to_vec();
         let sched = reduce_scatter_schedule(p, &self.skips());
         let op = self.op(op)?;
-        self.tag = execute_rank(&mut self.ep, &sched, &part, op.as_ref(), &mut buf, self.tag)?;
-        recvbuf.copy_from_slice(&buf[part.range(self.rank())]);
+        self.stage(sendbuf);
+        self.tag = execute_rank(&mut self.ep, &sched, &part, op.as_ref(), &mut self.work, self.tag)?;
+        recvbuf.copy_from_slice(&self.work[part.range(self.ep.rank)]);
         Ok(())
     }
 
@@ -127,11 +148,11 @@ impl Communicator {
                 want: part.total(),
             });
         }
-        let mut buf = sendbuf.to_vec();
         let sched = reduce_scatter_schedule(p, &self.skips());
         let op = self.op(op)?;
-        self.tag = execute_rank(&mut self.ep, &sched, &part, op.as_ref(), &mut buf, self.tag)?;
-        recvbuf.copy_from_slice(&buf[part.range(self.rank())]);
+        self.stage(sendbuf);
+        self.tag = execute_rank(&mut self.ep, &sched, &part, op.as_ref(), &mut self.work, self.tag)?;
+        recvbuf.copy_from_slice(&self.work[part.range(self.ep.rank)]);
         Ok(())
     }
 
@@ -237,7 +258,6 @@ impl Communicator {
         let p = self.size();
         let b = recvbuf.len();
         let part = BlockPartition::uniform(p, b);
-        let mut buf = vec![0.0f32; part.total()];
         if self.rank() == root {
             let send = sendbuf.ok_or(CollectiveError::BadBuffer {
                 rank: root,
@@ -251,12 +271,14 @@ impl Communicator {
                     want: part.total(),
                 });
             }
-            buf.copy_from_slice(send);
+            self.stage(send);
+        } else {
+            self.stage_zeros(part.total());
         }
         let sched = crate::collectives::baselines::binomial_scatter_schedule(p, root);
         let op = crate::ops::SumOp;
-        self.tag = execute_rank(&mut self.ep, &sched, &part, &op, &mut buf, self.tag)?;
-        recvbuf.copy_from_slice(&buf[part.range(self.rank())]);
+        self.tag = execute_rank(&mut self.ep, &sched, &part, &op, &mut self.work, self.tag)?;
+        recvbuf.copy_from_slice(&self.work[part.range(self.ep.rank)]);
         Ok(())
     }
 
@@ -271,11 +293,12 @@ impl Communicator {
         let p = self.size();
         let b = sendblock.len();
         let part = BlockPartition::uniform(p, b);
-        let mut buf = vec![0.0f32; part.total()];
-        buf[part.range(self.rank())].copy_from_slice(sendblock);
+        self.stage_zeros(part.total());
+        let range = part.range(self.rank());
+        self.work[range].copy_from_slice(sendblock);
         let sched = crate::collectives::baselines::binomial_gather_schedule(p, root);
         let op = crate::ops::SumOp;
-        self.tag = execute_rank(&mut self.ep, &sched, &part, &op, &mut buf, self.tag)?;
+        self.tag = execute_rank(&mut self.ep, &sched, &part, &op, &mut self.work, self.tag)?;
         if self.rank() == root {
             let out = recvbuf.ok_or(CollectiveError::BadBuffer {
                 rank: root,
@@ -289,7 +312,7 @@ impl Communicator {
                     want: part.total(),
                 });
             }
-            out.copy_from_slice(&buf);
+            out.copy_from_slice(&self.work);
         }
         Ok(())
     }

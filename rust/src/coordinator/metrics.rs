@@ -90,8 +90,22 @@ mod tests {
             m: 8,
             wall_seconds: 0.5,
             per_rank: vec![
-                Counters { sendrecv_rounds: 3, msgs_sent: 3, msgs_recv: 3, elems_sent: 12, elems_recv: 12 },
-                Counters { sendrecv_rounds: 3, msgs_sent: 2, msgs_recv: 2, elems_sent: 10, elems_recv: 10 },
+                Counters {
+                    sendrecv_rounds: 3,
+                    msgs_sent: 3,
+                    msgs_recv: 3,
+                    elems_sent: 12,
+                    elems_recv: 12,
+                    ..Counters::default()
+                },
+                Counters {
+                    sendrecv_rounds: 3,
+                    msgs_sent: 2,
+                    msgs_recv: 2,
+                    elems_sent: 10,
+                    elems_recv: 10,
+                    ..Counters::default()
+                },
             ],
         }
     }

@@ -145,9 +145,16 @@ impl BlockPartition {
     /// block range `[start, start+len)` — used by the executor to pack /
     /// combine without materializing a rotated copy (DESIGN.md: global
     /// layout + gather, the datatype-style zero-copy choice of §3).
+    ///
+    /// `len == 0` (a zero-length transfer, as degenerate/irregular
+    /// partitions can produce) yields an empty first range and no second —
+    /// consistent with `circular_elems(start, 0) == 0`.
     pub fn circular_ranges(&self, start: usize, len: usize) -> (Range<usize>, Option<Range<usize>>) {
         let p = self.p();
         assert!(start < p && len <= p, "start={start} len={len} p={p}");
+        if len == 0 {
+            return (self.offsets[start]..self.offsets[start], None);
+        }
         let end = start + len;
         if end <= p {
             (self.range(start).start..self.range(start + len - 1).end, None)
@@ -241,13 +248,27 @@ mod tests {
         let part = BlockPartition::random(9, 313, 5);
         for start in 0..9 {
             for len in 0..=9 {
-                if len == 0 {
-                    continue;
-                }
                 let (a, b) = part.circular_ranges(start, len);
                 let n = a.len() + b.map_or(0, |r| r.len());
                 assert_eq!(n, part.circular_elems(start, len), "start={start} len={len}");
             }
         }
+    }
+
+    #[test]
+    fn zero_length_circular_range_is_empty_not_a_panic() {
+        // start == 0, len == 0 used to underflow (start + len - 1).
+        let part = BlockPartition::from_counts(&[2, 3, 5, 7]);
+        for start in 0..4 {
+            let (a, b) = part.circular_ranges(start, 0);
+            assert!(a.is_empty(), "start={start}");
+            assert!(b.is_none(), "start={start}");
+            assert_eq!(part.circular_elems(start, 0), 0, "start={start}");
+        }
+        // Degenerate single-block partitions hit the same path with
+        // zero-size blocks on every non-root rank.
+        let single = BlockPartition::single_block(5, 40, 2);
+        let (a, b) = single.circular_ranges(0, 0);
+        assert!(a.is_empty() && b.is_none());
     }
 }

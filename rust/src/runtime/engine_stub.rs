@@ -1,0 +1,66 @@
+//! Stub engine used when the crate is built **without** the `pjrt`
+//! feature (the `xla` bindings are not on crates.io, so the default build
+//! must not reference them — see `Cargo.toml`).
+//!
+//! The public surface mirrors `engine.rs` exactly; [`Engine::load`] always
+//! fails, so the methods below are unreachable in practice but keep every
+//! call site (compute service, benches, CLI) compiling. The native ⊕
+//! backend, schedules, transport and simulator are unaffected.
+
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::Manifest;
+
+/// Stand-in for the PJRT client + executable cache. Never constructed:
+/// [`Engine::load`] errors out after validating the manifest.
+pub struct Engine {
+    pub manifest: Manifest,
+    pub stats: Mutex<EngineStats>,
+}
+
+/// Counters for engine activity (same shape as the real engine's).
+#[derive(Debug, Default, Clone)]
+pub struct EngineStats {
+    pub compiles: u64,
+    pub executions: u64,
+    pub padded_elems: u64,
+    pub chunked_calls: u64,
+}
+
+const UNAVAILABLE: &str =
+    "PJRT engine unavailable: built without the `pjrt` feature (xla bindings not linked)";
+
+impl Engine {
+    /// Always fails: the artifacts may exist, but there is no PJRT client
+    /// to execute them without the `pjrt` feature.
+    pub fn load(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let _manifest = Manifest::load(&dir).context("loading artifact manifest")?;
+        Err(anyhow!(UNAVAILABLE))
+    }
+
+    pub fn platform(&self) -> String {
+        "stub".into()
+    }
+
+    pub fn warmup(&self, _ops: &[&str], _scaled: bool, _mlp: bool) -> Result<usize> {
+        Err(anyhow!(UNAVAILABLE))
+    }
+
+    pub fn combine_into(&self, _op: &str, _acc: &mut [f32], _other: &[f32], _identity: f32) -> Result<()> {
+        Err(anyhow!(UNAVAILABLE))
+    }
+
+    pub fn combine_bucket_exact(&self, _op: &str, _acc: &mut [f32], _other: &[f32]) -> Result<()> {
+        Err(anyhow!(UNAVAILABLE))
+    }
+
+    pub fn combine_scaled_into(&self, _r: &mut [f32], _t: &[f32], _scale: f32) -> Result<()> {
+        Err(anyhow!(UNAVAILABLE))
+    }
+
+    pub fn mlp_loss_grad(&self, _params: &[f32], _x: &[f32], _y: &[f32]) -> Result<(f32, Vec<f32>)> {
+        Err(anyhow!(UNAVAILABLE))
+    }
+}

@@ -4,6 +4,11 @@
 //! the [`crate::ops::ReduceOp`] interface so collectives can run their γ
 //! term through XLA.
 
+#[cfg(feature = "pjrt")]
+pub mod engine;
+/// Stub engine when the `xla` bindings are unavailable (default build).
+#[cfg(not(feature = "pjrt"))]
+#[path = "engine_stub.rs"]
 pub mod engine;
 pub mod manifest;
 pub mod service;

@@ -7,7 +7,9 @@
 //! single accelerator queue — and rank threads submit combine / model
 //! requests through a channel. [`ServiceOp`] adapts the handle to the
 //! [`ReduceOp`] interface so the schedule executor is oblivious to the
-//! backend.
+//! backend. The hot combine path is zero-copy: the executor's slices are
+//! passed to the service by pointer (sound because the submitter blocks
+//! for the reply), not round-tripped through owned `Vec`s.
 
 use std::sync::mpsc::{channel, Sender};
 use std::thread::JoinHandle;
@@ -17,8 +19,22 @@ use anyhow::{anyhow, Result};
 use super::Engine;
 use crate::ops::ReduceOp;
 
+/// A `*mut [f32]` that may cross the channel. Soundness: the submitting
+/// thread constructs it from a live `&mut [f32]` and then **blocks on the
+/// reply channel** until the service is done with the pointer, so the
+/// borrow outlives every access and stays exclusive (see
+/// [`ServiceHandle::combine_in_place`]).
+struct RawSliceMut(*mut f32, usize);
+unsafe impl Send for RawSliceMut {}
+
+/// Shared-slice companion of [`RawSliceMut`], same blocking protocol.
+struct RawSlice(*const f32, usize);
+unsafe impl Send for RawSlice {}
+
 enum Request {
-    Combine { op: &'static str, acc: Vec<f32>, other: Vec<f32>, identity: f32, reply: Sender<Result<Vec<f32>>> },
+    /// Zero-copy combine: the engine reduces straight into the caller's
+    /// slice — no `to_vec` round-trips through the channel.
+    CombineInPlace { op: &'static str, acc: RawSliceMut, other: RawSlice, identity: f32, reply: Sender<Result<()>> },
     CombineScaled { r: Vec<f32>, t: Vec<f32>, scale: f32, reply: Sender<Result<Vec<f32>>> },
     MlpLossGrad { params: Vec<f32>, x: Vec<f32>, y: Vec<f32>, reply: Sender<Result<(f32, Vec<f32>)>> },
     Stats { reply: Sender<super::EngineStats> },
@@ -68,11 +84,14 @@ impl ComputeService {
                 let _ = ready_tx.send(Ok(()));
                 while let Ok(req) = rx.recv() {
                     match req {
-                        Request::Combine { op, mut acc, other, identity, reply } => {
-                            let res = engine
-                                .combine_into(op, &mut acc, &other, identity)
-                                .map(|()| acc);
-                            let _ = reply.send(res);
+                        Request::CombineInPlace { op, acc, other, identity, reply } => {
+                            // SAFETY: the submitter blocks on `reply` for
+                            // the whole call (combine_in_place), so both
+                            // slices are live and unaliased right now, and
+                            // all access ends before the reply is sent.
+                            let acc = unsafe { std::slice::from_raw_parts_mut(acc.0, acc.1) };
+                            let other = unsafe { std::slice::from_raw_parts(other.0, other.1) };
+                            let _ = reply.send(engine.combine_into(op, acc, other, identity));
                         }
                         Request::CombineScaled { mut r, t, scale, reply } => {
                             let res = engine.combine_scaled_into(&mut r, &t, scale).map(|()| r);
@@ -106,11 +125,29 @@ impl Drop for ComputeService {
 }
 
 impl ServiceHandle {
-    pub fn combine(&self, op: &'static str, acc: Vec<f32>, other: Vec<f32>, identity: f32) -> Result<Vec<f32>> {
+    /// Combine directly into the caller's slice — the zero-copy path the
+    /// schedule executor uses. Blocks until the service thread finishes,
+    /// which is what makes handing raw pointers across the channel sound.
+    pub fn combine_in_place(
+        &self,
+        op: &'static str,
+        acc: &mut [f32],
+        other: &[f32],
+        identity: f32,
+    ) -> Result<()> {
         let (reply, rx) = channel();
         self.tx
-            .send(Request::Combine { op, acc, other, identity, reply })
+            .send(Request::CombineInPlace {
+                op,
+                acc: RawSliceMut(acc.as_mut_ptr(), acc.len()),
+                other: RawSlice(other.as_ptr(), other.len()),
+                identity,
+                reply,
+            })
             .map_err(|_| anyhow!("compute service gone"))?;
+        // Block until the service replies: the raw pointers must not
+        // outlive this call. A dropped reply means the service exited and
+        // no longer touches the slices.
         rx.recv().map_err(|_| anyhow!("compute service dropped reply"))?
     }
 
@@ -163,11 +200,9 @@ impl ReduceOp for ServiceOp {
     }
 
     fn combine(&self, acc: &mut [f32], other: &[f32]) {
-        let out = self
-            .handle
-            .combine(self.op, acc.to_vec(), other.to_vec(), self.identity)
+        self.handle
+            .combine_in_place(self.op, acc, other, self.identity)
             .unwrap_or_else(|e| panic!("service combine({}): {e}", self.op));
-        acc.copy_from_slice(&out);
     }
 
     fn identity(&self) -> f32 {

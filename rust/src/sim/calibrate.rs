@@ -29,9 +29,10 @@ fn pingpong(n: usize, iters: usize) -> f64 {
     let out = run_ranks(2, move |rank, ep| {
         let payload = vec![0.5f32; n];
         let peer = 1 - rank;
-        // warmup
+        // warmup (borrow-pack API: the transport copies from the slice)
         for round in 0..4u64 {
-            ep.sendrecv(Some((peer, payload.clone())), Some(peer), round).unwrap();
+            let got = ep.sendrecv(Some((peer, &payload, &[])), Some(peer), round).unwrap();
+            ep.release(peer, got.unwrap());
         }
         let t0 = Instant::now();
         for it in 0..iters as u64 {

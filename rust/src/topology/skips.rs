@@ -43,6 +43,13 @@ pub enum SkipScheme {
 impl SkipScheme {
     /// Parse a scheme name as used by the CLI/config (`halving`, `pow2`,
     /// `sqrt`, `full`, or a comma-separated custom list like `13,7,4,2,1`).
+    ///
+    /// Custom sequences are validated *eagerly* for every `p`-independent
+    /// rule (strictly decreasing, ending at 1, consecutive in-place
+    /// condition), so a bad sequence like `"5"` is a [`SkipError`] at the
+    /// CLI boundary instead of a panic later inside schedule generation.
+    /// The `p`-dependent rules (`σ_1 < p`, `p ≤ 2σ_1`) still run in
+    /// [`SkipScheme::skips`].
     pub fn parse(s: &str) -> Result<Self, SkipError> {
         match s {
             "halving" | "halving-up" => Ok(Self::HalvingUp),
@@ -53,20 +60,27 @@ impl SkipScheme {
                 let parts: Result<Vec<usize>, _> =
                     other.split(',').map(|t| t.trim().parse::<usize>()).collect();
                 match parts {
-                    Ok(v) if !v.is_empty() => Ok(Self::Custom(v)),
+                    Ok(v) if !v.is_empty() => {
+                        validate_shape(&v)?;
+                        Ok(Self::Custom(v))
+                    }
                     _ => Err(SkipError::UnknownScheme(other.to_string())),
                 }
             }
         }
     }
 
+    /// Canonical name; custom sequences render as the comma list
+    /// [`SkipScheme::parse`] accepts, so names always round-trip.
     pub fn name(&self) -> String {
         match self {
             Self::HalvingUp => "halving-up".into(),
             Self::PowerOfTwo => "power-of-two".into(),
             Self::Sqrt => "sqrt".into(),
             Self::FullyConnected => "fully-connected".into(),
-            Self::Custom(v) => format!("custom{v:?}"),
+            Self::Custom(v) => {
+                v.iter().map(ToString::to_string).collect::<Vec<_>>().join(",")
+            }
         }
     }
 
@@ -140,6 +154,33 @@ pub enum SkipError {
         "in-place condition violated at round {round}: σ_{{k-1}}={prev} > 2·σ_k={cur} (p={p})"
     )]
     InPlace { p: usize, round: usize, prev: usize, cur: usize },
+    #[error("custom skip sequence {seq:?} rejected at parse time: {why}")]
+    BadCustom { seq: Vec<usize>, why: &'static str },
+}
+
+/// The `p`-independent validity rules, applied eagerly when parsing a
+/// custom sequence (before any `p` is known): non-empty, strictly
+/// decreasing, last element 1, and the in-place condition between
+/// consecutive skips (`σ_{k−1} ≤ 2σ_k`).
+fn validate_shape(seq: &[usize]) -> Result<(), SkipError> {
+    if seq.last() != Some(&1) {
+        return Err(SkipError::BadCustom { seq: seq.to_vec(), why: "must end at 1" });
+    }
+    for w in seq.windows(2) {
+        if w[1] >= w[0] {
+            return Err(SkipError::BadCustom {
+                seq: seq.to_vec(),
+                why: "must be strictly decreasing",
+            });
+        }
+        if w[0] > 2 * w[1] {
+            return Err(SkipError::BadCustom {
+                seq: seq.to_vec(),
+                why: "in-place condition σ_{k-1} ≤ 2·σ_k violated",
+            });
+        }
+    }
+    Ok(())
 }
 
 /// Validate a skip sequence for `p` ranks (rules in the module docs).
@@ -300,6 +341,35 @@ mod tests {
         assert_eq!(s.skips(11).unwrap(), vec![6, 3, 2, 1]);
         assert!(SkipScheme::parse("wat").is_err());
         assert_eq!(SkipScheme::parse("halving").unwrap(), SkipScheme::HalvingUp);
+        // Canonical names parse back to the same scheme (incl. custom).
+        for s in [
+            SkipScheme::HalvingUp,
+            SkipScheme::PowerOfTwo,
+            SkipScheme::Sqrt,
+            SkipScheme::FullyConnected,
+            SkipScheme::Custom(vec![6, 3, 2, 1]),
+        ] {
+            assert_eq!(SkipScheme::parse(&s.name()).unwrap(), s, "{}", s.name());
+        }
+    }
+
+    #[test]
+    fn parse_rejects_invalid_custom_sequences_eagerly() {
+        // A lone number is not a valid skip sequence — it must fail at
+        // parse time (SkipError), not panic later in schedule generation.
+        assert!(matches!(
+            SkipScheme::parse("5"),
+            Err(SkipError::BadCustom { why: "must end at 1", .. })
+        ));
+        assert!(matches!(
+            SkipScheme::parse("3,3,1"),
+            Err(SkipError::BadCustom { why: "must be strictly decreasing", .. })
+        ));
+        assert!(matches!(SkipScheme::parse("9,4,2,1"), Err(SkipError::BadCustom { .. })));
+        assert!(matches!(SkipScheme::parse("2,4,1"), Err(SkipError::BadCustom { .. })));
+        // Valid sequences still parse.
+        assert!(SkipScheme::parse("4,2,1").is_ok());
+        assert!(SkipScheme::parse("1").is_ok());
     }
 
     #[test]

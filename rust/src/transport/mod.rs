@@ -1,4 +1,4 @@
-//! In-process message-passing substrate.
+//! In-process message-passing substrate with pooled, recycled payloads.
 //!
 //! Substitutes for the paper's MPI cluster (DESIGN.md §2): `p` ranks run as
 //! OS threads; each rank owns an [`Endpoint`] supporting the paper's
@@ -11,12 +11,43 @@
 //! round structure (a message for round `k` can only be consumed by the
 //! round-`k` sendrecv). Per-endpoint counters record rounds, messages and
 //! element volume for the Theorem 1/2 benches.
+//!
+//! # The pooled buffer protocol
+//!
+//! The paper's algorithms move exactly `p−1` blocks per processor
+//! (Theorem 1); the transport must not add memory traffic on top. Payload
+//! buffers are therefore *loaned, not allocated*:
+//!
+//!   1. A sender [`acquire`](Endpoint::acquire)s a `Vec<f32>` from its
+//!      per-peer [`BufferPool`] (falling back to any peer's pool, then to a
+//!      fresh allocation — a *pool miss*).
+//!   2. The borrow-pack [`sendrecv`](Endpoint::sendrecv) gathers the
+//!      caller's (≤ 2) slices straight into that pooled buffer and ships
+//!      it; the caller never owns or allocates the message.
+//!   3. The receiver consumes the payload (combine/store) and
+//!      [`release`](Endpoint::release)s it: the buffer travels back to the
+//!      *sender's* pool over a dedicated return channel and is reused for a
+//!      later round.
+//!
+//! After a warm-up pass every acquire is a pool hit and the steady-state
+//! hot path performs **zero payload allocations per round**
+//! (`Counters::pool_hits` / `pool_misses` expose the rate; the Perf bench
+//! has the ablation). One caveat: a released buffer races the owner's
+//! next acquire, and supply only grows on a miss — so a handful of
+//! misses bounded by the number of (peer, capacity) classes can occur at
+//! any point, but misses never scale with rounds. Send-only rounds
+//! recycle identically — the loan protocol does not care whether the
+//! round also received. This pool is
+//! also the seam where a future shared-memory or RDMA-style transport
+//! plugs in: registered buffers replace heap `Vec`s with no executor
+//! change.
 
 use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::time::Duration;
 
-/// A message between ranks: payload plus matching tag.
+/// A message between ranks: payload plus matching tag. The payload buffer
+/// is on loan from the sender's pool (see the module docs).
 #[derive(Debug)]
 pub struct Msg {
     pub from: usize,
@@ -41,6 +72,20 @@ pub struct Counters {
     pub msgs_recv: u64,
     pub elems_sent: u64,
     pub elems_recv: u64,
+    /// Acquires served allocation-free from a pool (a recycled buffer
+    /// with sufficient capacity, ours or another peer's).
+    pub pool_hits: u64,
+    /// Acquires that had to heap-allocate (no pooled buffer was big
+    /// enough) — zero per round in steady state.
+    pub pool_misses: u64,
+    /// Buffers that came back over the return channel.
+    pub bufs_recycled: u64,
+}
+
+/// Recycled payload buffers destined for one peer.
+#[derive(Debug, Default)]
+struct BufferPool {
+    free: Vec<Vec<f32>>,
 }
 
 /// One rank's communication handle.
@@ -49,6 +94,12 @@ pub struct Endpoint {
     pub p: usize,
     txs: Vec<Sender<Msg>>,
     rx: Receiver<Msg>,
+    /// Return path: `(returning peer, buffer)` flowing back to this owner.
+    ret_txs: Vec<Sender<(usize, Vec<f32>)>>,
+    ret_rx: Receiver<(usize, Vec<f32>)>,
+    /// `pools[peer]` holds recycled buffers last used for messages to
+    /// `peer` (affinity keeps capacities matched to that link's payloads).
+    pools: Vec<BufferPool>,
     /// Early arrivals keyed by (from, round).
     stash: HashMap<(usize, u64), Vec<f32>>,
     pub counters: Counters,
@@ -61,18 +112,27 @@ pub fn network(p: usize) -> Vec<Endpoint> {
     assert!(p >= 1);
     let mut txs = Vec::with_capacity(p);
     let mut rxs = Vec::with_capacity(p);
+    let mut ret_txs = Vec::with_capacity(p);
+    let mut ret_rxs = Vec::with_capacity(p);
     for _ in 0..p {
         let (tx, rx) = channel::<Msg>();
         txs.push(tx);
         rxs.push(rx);
+        let (rtx, rrx) = channel::<(usize, Vec<f32>)>();
+        ret_txs.push(rtx);
+        ret_rxs.push(rrx);
     }
     rxs.into_iter()
+        .zip(ret_rxs)
         .enumerate()
-        .map(|(rank, rx)| Endpoint {
+        .map(|(rank, (rx, ret_rx))| Endpoint {
             rank,
             p,
             txs: txs.clone(),
             rx,
+            ret_txs: ret_txs.clone(),
+            ret_rx,
+            pools: (0..p).map(|_| BufferPool::default()).collect(),
             stash: HashMap::new(),
             counters: Counters::default(),
             timeout: Duration::from_secs(30),
@@ -81,12 +141,99 @@ pub fn network(p: usize) -> Vec<Endpoint> {
 }
 
 impl Endpoint {
-    /// The paper's combined `Send(..) ‖ Recv(..)` primitive.
+    /// Pull every returned buffer off the return channel into its pool.
+    fn drain_returns(&mut self) {
+        while let Ok((peer, buf)) = self.ret_rx.try_recv() {
+            self.counters.bufs_recycled += 1;
+            self.pools[peer].free.push(buf);
+        }
+    }
+
+    /// Take a buffer with at least `need` capacity from `free`, if one
+    /// exists. Undersized buffers are never handed out: a *hit* must mean
+    /// the acquire performs no heap allocation (the zero-alloc regression
+    /// tests and the perf ablation rely on that counter being honest).
+    fn take_from(free: &mut Vec<Vec<f32>>, need: usize) -> Option<Vec<f32>> {
+        let i = free.iter().position(|b| b.capacity() >= need)?;
+        let mut buf = free.swap_remove(i);
+        buf.clear();
+        Some(buf)
+    }
+
+    /// Check out an empty buffer of at least `need` capacity for a message
+    /// to `to`, recycling returned payloads when possible (per-peer
+    /// affinity first, then any pool, then — a pool miss — a fresh
+    /// allocation). Undersized pooled buffers stay put; they keep serving
+    /// the smaller payloads of later rounds.
     ///
-    /// `send`: optional `(to, payload)`; `recv_from`: optional peer to wait
-    /// for. Either side may be `None` (tree rounds). Returns the received
-    /// payload if `recv_from` was given.
+    /// `need == 0` (zero-length transfers on degenerate partitions)
+    /// bypasses the pool and the hit/miss counters entirely: an empty
+    /// `Vec` allocates nothing, and pulling a real buffer out of
+    /// circulation for it would starve the payload-carrying rounds.
+    pub fn acquire(&mut self, to: usize, need: usize) -> Vec<f32> {
+        if need == 0 {
+            return Vec::new();
+        }
+        self.drain_returns();
+        if let Some(buf) = Self::take_from(&mut self.pools[to].free, need) {
+            self.counters.pool_hits += 1;
+            return buf;
+        }
+        for peer in 0..self.p {
+            if peer == to {
+                continue;
+            }
+            if let Some(buf) = Self::take_from(&mut self.pools[peer].free, need) {
+                self.counters.pool_hits += 1;
+                return buf;
+            }
+        }
+        self.counters.pool_misses += 1;
+        Vec::with_capacity(need)
+    }
+
+    /// Hand a consumed payload back to the rank that sent it (the buffer's
+    /// owner). Best-effort: if the owner already exited, the buffer is
+    /// simply dropped.
+    pub fn release(&mut self, from: usize, payload: Vec<f32>) {
+        if payload.capacity() == 0 || from == self.rank {
+            return; // nothing worth shipping back
+        }
+        let _ = self.ret_txs[from].send((self.rank, payload));
+    }
+
+    /// The paper's combined `Send(..) ‖ Recv(..)` primitive, borrow-pack
+    /// form: `send` is `(to, head, tail)` — up to two slices (a circular
+    /// block range resolves to at most two; pass `&[]` for an absent
+    /// tail). The transport gathers them into a pooled buffer, so the
+    /// caller neither copies into scratch nor allocates.
+    ///
+    /// Either side may be `None` (tree rounds). Returns the received
+    /// payload if `recv_from` was given; the caller must hand it back via
+    /// [`release`](Endpoint::release) once consumed to keep the sender's
+    /// pool warm.
     pub fn sendrecv(
+        &mut self,
+        send: Option<(usize, &[f32], &[f32])>,
+        recv_from: Option<usize>,
+        round: u64,
+    ) -> Result<Option<Vec<f32>>, TransportError> {
+        self.counters.sendrecv_rounds += 1;
+        if let Some((to, head, tail)) = send {
+            debug_assert!(to < self.p && to != self.rank, "bad send target {to}");
+            let mut payload = self.acquire(to, head.len() + tail.len());
+            payload.extend_from_slice(head);
+            payload.extend_from_slice(tail);
+            self.send_msg(to, round, payload)?;
+        }
+        self.recv_side(recv_from, round)
+    }
+
+    /// Ownership-transfer variant of [`sendrecv`](Endpoint::sendrecv) for
+    /// payloads that are built rather than gathered (the framed, growing
+    /// all-to-all messages). Pair with [`acquire`](Endpoint::acquire) to
+    /// keep this path pooled too.
+    pub fn sendrecv_owned(
         &mut self,
         send: Option<(usize, Vec<f32>)>,
         recv_from: Option<usize>,
@@ -95,12 +242,24 @@ impl Endpoint {
         self.counters.sendrecv_rounds += 1;
         if let Some((to, payload)) = send {
             debug_assert!(to < self.p && to != self.rank, "bad send target {to}");
-            self.counters.msgs_sent += 1;
-            self.counters.elems_sent += payload.len() as u64;
-            self.txs[to]
-                .send(Msg { from: self.rank, round, payload })
-                .map_err(|_| TransportError::Disconnected { rank: self.rank, to })?;
+            self.send_msg(to, round, payload)?;
         }
+        self.recv_side(recv_from, round)
+    }
+
+    fn send_msg(&mut self, to: usize, round: u64, payload: Vec<f32>) -> Result<(), TransportError> {
+        self.counters.msgs_sent += 1;
+        self.counters.elems_sent += payload.len() as u64;
+        self.txs[to]
+            .send(Msg { from: self.rank, round, payload })
+            .map_err(|_| TransportError::Disconnected { rank: self.rank, to })
+    }
+
+    fn recv_side(
+        &mut self,
+        recv_from: Option<usize>,
+        round: u64,
+    ) -> Result<Option<Vec<f32>>, TransportError> {
         match recv_from {
             None => Ok(None),
             Some(from) => {
@@ -138,11 +297,7 @@ impl Endpoint {
 
     /// Raw one-directional send (used by the coordinator's control plane).
     pub fn send_to(&mut self, to: usize, round: u64, payload: Vec<f32>) -> Result<(), TransportError> {
-        self.counters.msgs_sent += 1;
-        self.counters.elems_sent += payload.len() as u64;
-        self.txs[to]
-            .send(Msg { from: self.rank, round, payload })
-            .map_err(|_| TransportError::Disconnected { rank: self.rank, to })
+        self.send_msg(to, round, payload)
     }
 
     /// Raw one-directional receive.
@@ -191,12 +346,24 @@ mod tests {
             let to = (rank + 1) % 4;
             let from = (rank + 3) % 4;
             let got = ep
-                .sendrecv(Some((to, vec![rank as f32])), Some(from), 0)
+                .sendrecv(Some((to, &[rank as f32], &[])), Some(from), 0)
                 .unwrap()
                 .unwrap();
             got[0]
         });
         assert_eq!(out, vec![3.0, 0.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn borrow_pack_gathers_two_slices() {
+        let out = run_ranks(2, |rank, ep| {
+            let peer = 1 - rank;
+            let head = [rank as f32, 10.0];
+            let tail = [20.0];
+            ep.sendrecv(Some((peer, &head, &tail)), Some(peer), 0).unwrap().unwrap()
+        });
+        assert_eq!(out[0], vec![1.0, 10.0, 20.0]);
+        assert_eq!(out[1], vec![0.0, 10.0, 20.0]);
     }
 
     #[test]
@@ -221,7 +388,7 @@ mod tests {
     fn counters_track_volume() {
         let out = run_ranks(2, |rank, ep| {
             let peer = 1 - rank;
-            ep.sendrecv(Some((peer, vec![0.0; 7])), Some(peer), 0).unwrap();
+            ep.sendrecv(Some((peer, &[0.0; 7], &[])), Some(peer), 0).unwrap();
             ep.counters.clone()
         });
         for c in out {
@@ -249,12 +416,61 @@ mod tests {
     fn sendrecv_with_only_send_side() {
         let out = run_ranks(2, |rank, ep| {
             if rank == 0 {
-                ep.sendrecv(Some((1, vec![5.0])), None, 0).unwrap();
+                ep.sendrecv(Some((1, &[5.0], &[])), None, 0).unwrap();
                 0.0
             } else {
                 ep.sendrecv(None, Some(0), 0).unwrap().unwrap()[0]
             }
         });
         assert_eq!(out[1], 5.0);
+    }
+
+    #[test]
+    fn released_buffers_return_to_the_senders_pool() {
+        // Lock-step ping-pong: after the first exchange returns buffers,
+        // every later acquire must be a pool hit on both ranks.
+        let rounds = 16u64;
+        let out = run_ranks(2, move |rank, ep| {
+            let peer = 1 - rank;
+            let data = [rank as f32; 32];
+            for round in 0..rounds {
+                let got = ep.sendrecv(Some((peer, &data, &[])), Some(peer), round).unwrap().unwrap();
+                assert_eq!(got.len(), 32);
+                ep.release(peer, got);
+            }
+            ep.counters.clone()
+        });
+        for (rank, c) in out.iter().enumerate() {
+            assert_eq!(c.pool_hits + c.pool_misses, rounds, "rank {rank}");
+            // First acquire (or two, depending on interleaving) may miss;
+            // once a buffer circulates the pool must serve every acquire.
+            assert!(c.pool_misses <= 2, "rank {rank}: {} misses", c.pool_misses);
+            assert!(c.bufs_recycled > 0, "rank {rank}: nothing recycled");
+        }
+    }
+
+    #[test]
+    fn acquire_prefers_buffer_with_sufficient_capacity() {
+        let mut eps = network(2);
+        let ep = &mut eps[0];
+        // Seed the pool for peer 1 with a small and a big buffer.
+        ep.pools[1].free.push(Vec::with_capacity(4));
+        ep.pools[1].free.push(Vec::with_capacity(64));
+        let buf = ep.acquire(1, 32);
+        assert!(buf.capacity() >= 32, "picked the too-small buffer");
+        assert_eq!(ep.counters.pool_hits, 1);
+        // A request no pooled buffer can hold is a miss — the undersized
+        // buffer stays in the pool rather than being handed out to regrow
+        // (a hit must never hide a heap allocation).
+        let big = ep.acquire(1, 1000);
+        assert!(big.capacity() >= 1000);
+        assert_eq!(ep.counters.pool_misses, 1);
+        // The remaining (small) buffer still serves a small request.
+        let buf2 = ep.acquire(1, 2);
+        assert!(buf2.capacity() >= 2);
+        assert_eq!(ep.counters.pool_hits, 2);
+        // Now everything is checked out: next acquire is a miss.
+        ep.acquire(1, 8);
+        assert_eq!(ep.counters.pool_misses, 2);
     }
 }

@@ -86,6 +86,68 @@ fn reduce_scatter_family_on_irregular_partitions() {
 }
 
 #[test]
+fn executor_oracle_irregular_and_degenerate_partitions() {
+    // The ISSUE-1 sweep: reduce-scatter AND allreduce over random, zipf
+    // and degenerate single-block (zero-size blocks) partitions for
+    // p ∈ {2, 5, 22}, against the scalar oracle.
+    for p in [2usize, 5, 22] {
+        let parts = vec![
+            ("random", BlockPartition::random(p, 5 * p + 3, 40 + p as u64)),
+            ("zipf", BlockPartition::zipf(p, 9 * p, 1.4, p as u64)),
+            ("single-block-0", BlockPartition::single_block(p, 37, 0)),
+            ("single-block-last", BlockPartition::single_block(p, 29, p - 1)),
+        ];
+        for (wname, part) in parts {
+            let inputs = inputs_for("sum", p, part.total(), 13 + p as u64);
+            let op = parse_native("sum").unwrap();
+            let want = oracle(&inputs, op.as_ref());
+            for alg_name in ["rs", "ar"] {
+                let alg = Algorithm::parse(alg_name).unwrap();
+                let out = run_schedule_threads(
+                    &alg.schedule(p),
+                    &part,
+                    Arc::new(circulant_collectives::ops::SumOp),
+                    inputs.clone(),
+                );
+                for (r, buf) in out.iter().enumerate() {
+                    if alg.is_allreduce() {
+                        assert_eq!(buf, &want, "{wname} {alg_name} p={p} r={r}");
+                    } else {
+                        assert_eq!(
+                            &buf[part.range(r)],
+                            &want[part.range(r)],
+                            "{wname} {alg_name} p={p} r={r}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn pool_counters_account_for_every_send() {
+    // The with-counters driver exposes pool statistics: every payload
+    // comes from acquire(), so hits+misses must equal messages sent.
+    // (The steady-state zero-miss property needs a persistent network
+    // across collectives and is asserted in exec.rs's unit tests.)
+    use circulant_collectives::collectives::run_schedule_threads_with_counters;
+    let p = 8usize;
+    let part = BlockPartition::regular(p, 4 * p);
+    let alg = Algorithm::parse("ar").unwrap();
+    let inputs = inputs_for("sum", p, part.total(), 3);
+    let out = run_schedule_threads_with_counters(
+        &alg.schedule(p),
+        &part,
+        Arc::new(circulant_collectives::ops::SumOp),
+        inputs,
+    );
+    for (r, (_, c)) in out.iter().enumerate() {
+        assert_eq!(c.pool_hits + c.pool_misses, c.msgs_sent, "rank {r}");
+    }
+}
+
+#[test]
 fn all_skip_schemes_execute_correctly() {
     for scheme in ["halving", "pow2", "sqrt", "full"] {
         for p in [2usize, 6, 22] {
