@@ -14,7 +14,7 @@
 
 use std::sync::Arc;
 
-use circulant_collectives::bench_harness::{bench_header, fast_mode};
+use circulant_collectives::bench_harness::{bench_header, fast_mode, BenchReport};
 use circulant_collectives::collectives::reduce_scatter_schedule;
 use circulant_collectives::datatypes::BlockPartition;
 use circulant_collectives::ops::SumOp;
@@ -49,6 +49,10 @@ fn main() {
         ],
     );
 
+    let mut report = BenchReport::new("t1");
+    let mut rounds_meas = Vec::new();
+    let mut blocks_meas = Vec::new();
+    let mut elems_sent_meas = Vec::new();
     let mut all_ok = true;
     for &p in &ps {
         let skips = SkipScheme::HalvingUp.skips(p).unwrap();
@@ -68,16 +72,14 @@ fn main() {
         }
         let sched2 = Arc::new(sched.clone());
         let part2 = Arc::new(part.clone());
-        let inputs2 =
-            Arc::new(std::sync::Mutex::new(inputs.into_iter().map(Some).collect::<Vec<_>>()));
-        let outs = circulant_collectives::transport::run_ranks(p, move |rank, ep| {
-            let mut buf = inputs2.lock().unwrap()[rank].take().unwrap();
-            circulant_collectives::collectives::execute_rank(
-                ep, &sched2, &part2, &SumOp, &mut buf, 0,
-            )
-            .unwrap();
-            (buf, ep.counters.clone())
-        });
+        let outs =
+            circulant_collectives::transport::run_ranks_inputs(inputs, move |_rank, ep, mut buf: Vec<f32>| {
+                circulant_collectives::collectives::execute_rank(
+                    ep, &sched2, &part2, &SumOp, &mut buf, 0,
+                )
+                .unwrap();
+                (buf, ep.counters.clone())
+            });
 
         let mut verified = true;
         for (r, (buf, _)) in outs.iter().enumerate() {
@@ -113,9 +115,19 @@ fn main() {
         assert_eq!(c0.sendrecv_rounds as u32, ceil_log2(p), "p={p} rounds");
         assert_eq!(blocks_sent, p - 1, "p={p} blocks");
         assert_eq!(combines, p - 1, "p={p} combines");
+        rounds_meas.push(c0.sendrecv_rounds as f64);
+        blocks_meas.push(blocks_sent as f64);
+        elems_sent_meas.push(c0.elems_sent as f64);
     }
     t.print();
     println!("paper claim: ⌈log2 p⌉ rounds, exactly p−1 blocks sent/received/reduced — {}",
         if all_ok { "REPRODUCED for all p in sweep" } else { "MISMATCH (see table)" });
     assert!(all_ok);
+    report.num("block_elems", b as f64);
+    report.nums("sweep_p", ps.iter().map(|&p| p as f64));
+    report.nums("rounds_measured", rounds_meas);
+    report.nums("blocks_sent_per_rank", blocks_meas);
+    report.nums("elems_sent_rank0", elems_sent_meas);
+    report.num("all_verified", if all_ok { 1.0 } else { 0.0 });
+    report.write();
 }

@@ -9,7 +9,7 @@
 
 use std::sync::Arc;
 
-use circulant_collectives::bench_harness::{bench_header, fast_mode};
+use circulant_collectives::bench_harness::{bench_header, fast_mode, BenchReport};
 use circulant_collectives::collectives::allreduce_schedule;
 use circulant_collectives::datatypes::BlockPartition;
 use circulant_collectives::ops::SumOp;
@@ -33,6 +33,10 @@ fn main() {
         "Theorem 2 (measured, b=64 f32/block)",
         &["p", "rounds", "2⌈log2 p⌉", "blocks/rank", "2(p−1)", "⊕ blocks", "p−1", "DES=Thm2", "verified"],
     );
+    let mut report = BenchReport::new("t2");
+    let mut rounds_meas = Vec::new();
+    let mut blocks_meas = Vec::new();
+    let mut combines_meas = Vec::new();
     let mut all_ok = true;
     for &p in &ps {
         let skips = SkipScheme::HalvingUp.skips(p).unwrap();
@@ -51,16 +55,14 @@ fn main() {
         }
         let sched2 = Arc::new(sched.clone());
         let part2 = Arc::new(part.clone());
-        let inputs2 =
-            Arc::new(std::sync::Mutex::new(inputs.into_iter().map(Some).collect::<Vec<_>>()));
-        let outs = circulant_collectives::transport::run_ranks(p, move |rank, ep| {
-            let mut buf = inputs2.lock().unwrap()[rank].take().unwrap();
-            circulant_collectives::collectives::execute_rank(
-                ep, &sched2, &part2, &SumOp, &mut buf, 0,
-            )
-            .unwrap();
-            (buf, ep.counters.clone())
-        });
+        let outs =
+            circulant_collectives::transport::run_ranks_inputs(inputs, move |_rank, ep, mut buf: Vec<f32>| {
+                circulant_collectives::collectives::execute_rank(
+                    ep, &sched2, &part2, &SumOp, &mut buf, 0,
+                )
+                .unwrap();
+                (buf, ep.counters.clone())
+            });
 
         let verified = outs.iter().all(|(buf, _)| buf[..] == oracle[..]);
         all_ok &= verified;
@@ -85,6 +87,9 @@ fn main() {
         assert_eq!(c0.sendrecv_rounds as u32, 2 * ceil_log2(p));
         assert_eq!(sc[0].blocks_sent, 2 * (p - 1));
         assert_eq!(sc[0].blocks_combined, p - 1);
+        rounds_meas.push(c0.sendrecv_rounds as f64);
+        blocks_meas.push(sc[0].blocks_sent as f64);
+        combines_meas.push(sc[0].blocks_combined as f64);
     }
     t.print();
     println!(
@@ -92,4 +97,11 @@ fn main() {
         if all_ok { "REPRODUCED" } else { "MISMATCH" }
     );
     assert!(all_ok);
+    report.num("block_elems", b as f64);
+    report.nums("sweep_p", ps.iter().map(|&p| p as f64));
+    report.nums("rounds_measured", rounds_meas);
+    report.nums("blocks_sent_per_rank", blocks_meas);
+    report.nums("blocks_combined_per_rank", combines_meas);
+    report.num("all_verified", if all_ok { 1.0 } else { 0.0 });
+    report.write();
 }

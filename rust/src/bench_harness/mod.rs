@@ -1,12 +1,85 @@
 //! In-tree micro-benchmark harness (criterion is unavailable offline).
 //!
 //! Provides warmup + repetition + summary for closures, wall-clock helpers
-//! for the thread-network collectives, and consistent table output so each
-//! bench binary regenerates one table/figure of EXPERIMENTS.md.
+//! for the thread-network collectives, consistent table output so each
+//! bench binary regenerates one table/figure of EXPERIMENTS.md, and a
+//! machine-readable [`BenchReport`] (`BENCH_<name>.json`) so the perf
+//! trajectory is tracked across PRs instead of living only in logs.
 
+use std::collections::BTreeMap;
 use std::time::Instant;
 
+use crate::util::json::Json;
 use crate::util::stats::Summary;
+
+/// Accumulates key → value results for one bench binary and persists them
+/// as `BENCH_<name>.json` (flat-ish JSON: numbers, strings, arrays) in
+/// `CCOLL_BENCH_JSON_DIR` (default: the working directory — note cargo
+/// runs bench binaries with cwd set to the *package* root, `rust/`, so CI
+/// pins the env var to the workspace root). CI and cross-PR tooling diff
+/// these files; keep keys stable.
+pub struct BenchReport {
+    name: String,
+    obj: BTreeMap<String, Json>,
+}
+
+impl BenchReport {
+    pub fn new(name: &str) -> Self {
+        let mut obj = BTreeMap::new();
+        obj.insert("schema".to_string(), Json::Num(1.0));
+        obj.insert("bench".to_string(), Json::Str(name.to_string()));
+        obj.insert("fast_mode".to_string(), Json::Bool(fast_mode()));
+        let unix = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs() as f64)
+            .unwrap_or(0.0);
+        obj.insert("unix_time".to_string(), Json::Num(unix));
+        Self { name: name.to_string(), obj }
+    }
+
+    /// Set an arbitrary JSON value.
+    pub fn set(&mut self, key: &str, v: Json) {
+        self.obj.insert(key.to_string(), v);
+    }
+
+    pub fn num(&mut self, key: &str, v: f64) {
+        self.set(key, Json::Num(v));
+    }
+
+    pub fn str(&mut self, key: &str, v: &str) {
+        self.set(key, Json::Str(v.to_string()));
+    }
+
+    /// Set an array of numbers (sweep axes and per-point results).
+    pub fn nums<I: IntoIterator<Item = f64>>(&mut self, key: &str, vs: I) {
+        self.set(key, Json::Arr(vs.into_iter().map(Json::Num).collect()));
+    }
+
+    /// The report as a JSON value (what [`write`](BenchReport::write)
+    /// persists).
+    pub fn to_json(&self) -> Json {
+        Json::Obj(self.obj.clone())
+    }
+
+    /// Write `BENCH_<name>.json`, returning its path. Failures are
+    /// reported, not fatal — a read-only working directory must not fail
+    /// the bench itself.
+    pub fn write(&self) -> Option<std::path::PathBuf> {
+        let dir = std::env::var("CCOLL_BENCH_JSON_DIR").unwrap_or_else(|_| ".".to_string());
+        let path = std::path::Path::new(&dir).join(format!("BENCH_{}.json", self.name));
+        let text = Json::Obj(self.obj.clone()).render();
+        match std::fs::write(&path, text + "\n") {
+            Ok(()) => {
+                println!("[bench json] wrote {}", path.display());
+                Some(path)
+            }
+            Err(e) => {
+                eprintln!("[bench json] could not write {}: {e}", path.display());
+                None
+            }
+        }
+    }
+}
 
 /// Benchmark a closure: `warmup` untimed runs, then `reps` timed runs.
 /// Returns per-rep seconds.
@@ -79,5 +152,19 @@ mod tests {
     fn adaptive_reports_sane_times() {
         let s = time_adaptive(0.001, 3, || { std::hint::black_box(1 + 1); });
         assert!(s.median > 0.0 && s.median < 1e-3);
+    }
+
+    #[test]
+    fn bench_report_round_trips_through_json() {
+        let mut r = BenchReport::new("unit");
+        r.num("elems_per_sec", 1.5e9);
+        r.str("winner", "rendezvous");
+        r.nums("sweep_p", [2.0, 4.0, 8.0]);
+        let j = r.to_json();
+        let parsed = crate::util::json::Json::parse(&j.render()).unwrap();
+        assert_eq!(parsed.req("bench").as_str(), Some("unit"));
+        assert_eq!(parsed.req("schema").as_usize(), Some(1));
+        assert_eq!(parsed.req("elems_per_sec").as_f64(), Some(1.5e9));
+        assert_eq!(parsed.req("sweep_p").as_arr().unwrap().len(), 3);
     }
 }

@@ -8,23 +8,70 @@
 //! no rotated copy of the input is ever made (cf. paper §3 on avoiding
 //! copies / MPI datatypes).
 //!
-//! # Borrow-pack `sendrecv` contract
+//! # The three-tier copy discipline (transport docs have the full story)
 //!
-//! The executor owns no scratch buffer. Per round it hands the transport
-//! the (≤ 2) working-vector slices of the outgoing circular range; the
-//! transport gathers them directly into a buffer checked out of its
-//! per-peer pool ([`Endpoint::acquire`]). Received payloads are combined /
-//! stored into the working vector and immediately handed back with
-//! [`Endpoint::release`], returning the buffer to *its sender's* pool.
-//! Send-only rounds (tree schedules such as binomial reduce) follow the
-//! identical loan protocol, so after warm-up the executor performs zero
-//! payload allocations per round regardless of schedule shape — the
-//! allocation ablation in `benches/perf_hotpath.rs` measures this.
+//! Per round the executor hands the transport the (≤ 2) working-vector
+//! slices of the outgoing circular range and a verdict on whether the
+//! round may run **rendezvous** (tier 1, zero-copy): the receiver then
+//! combines/stores *directly from this rank's working vector* in one
+//! fused pass and acks; [`Endpoint::finish_round`] holds this rank at the
+//! end of the round until that ack, so the published region is never read
+//! after it can change. The verdict is the §3-style precondition that the
+//! round's send and recv block ranges are **disjoint**
+//! ([`crate::schedule::BlockRange::overlaps`]; whole schedules can be
+//! checked with [`Schedule::rendezvous_safe`]) — full-vector
+//! recursive-doubling rounds fail it and fall back to **pooled** (tier 2):
+//! the transport gathers the slices into a buffer checked out of its
+//! per-peer pool ([`Endpoint::acquire`]), and consumed payloads are handed
+//! back with [`Endpoint::complete`], returning the buffer to *its
+//! sender's* pool. Payloads that must be built rather than gathered (the
+//! framed all-to-all) travel **owned** (tier 3). Send-only rounds (tree
+//! schedules such as binomial reduce) follow the identical protocols, so
+//! after warm-up the executor performs zero payload allocations per round
+//! regardless of schedule shape and tier — the allocation and copy-volume
+//! ablations live in `benches/perf_hotpath.rs`.
+//!
+//! Combines dispatch through the monomorphized [`Kernel`] when the
+//! operator exposes one ([`ReduceOp::kernel`], the four native ops): one
+//! enum branch per payload instead of a virtual call per slice.
+//!
+//! # Commutativity interaction
+//!
+//! Rendezvous changes *where* the second ⊕ operand lives (the sender's
+//! memory instead of a copied payload), never the order or association of
+//! ⊕ applications — both tiers fold the received range into the local
+//! partial as `R[range] ⊕= payload` at the same point in the round
+//! sequence, so the schedule's commutativity assumption (⊕ applied in
+//! skip order, paper §2.1) is exactly as strong on either tier, and the
+//! two produce bit-identical results (asserted by the oracle tests in
+//! `rust/tests/rendezvous.rs`).
+
+use std::ops::Range;
 
 use crate::datatypes::BlockPartition;
 use crate::ops::ReduceOp;
 use crate::schedule::{RecvAction, Schedule};
-use crate::transport::{Counters, Endpoint, TransportError};
+use crate::transport::{Counters, Endpoint, Payload, SendSlices, TransportError};
+
+/// Read-only view of `base[r]`.
+///
+/// # Safety
+///
+/// `r` must be in bounds of the allocation `base` points into, and no
+/// `&mut` spanning `r` may be created while the view lives.
+unsafe fn view<'v>(base: *const f32, r: &Range<usize>) -> &'v [f32] {
+    std::slice::from_raw_parts(base.add(r.start), r.len())
+}
+
+/// Mutable view of `base[r]`.
+///
+/// # Safety
+///
+/// `r` must be in bounds, and nothing else — local or a rendezvous peer —
+/// may access `base[r]` while the view lives.
+unsafe fn view_mut<'v>(base: *mut f32, r: &Range<usize>) -> &'v mut [f32] {
+    std::slice::from_raw_parts_mut(base.add(r.start), r.len())
+}
 
 /// Errors surfaced by collective execution.
 #[derive(Debug, thiserror::Error)]
@@ -46,6 +93,15 @@ pub enum CollectiveError {
 ///
 /// `round_base` offsets the transport round tags so several collectives
 /// can run back-to-back on one endpoint (the coordinator uses this).
+///
+/// The zero-copy rendezvous tier engages per round iff
+/// `ep.rendezvous` is set (see [`Endpoint::rendezvous`]), this rank's
+/// send and recv block ranges for the round are disjoint, and the payload
+/// meets the endpoint's small-message threshold
+/// ([`Endpoint::rendezvous_min_elems`]); other rounds use the pooled
+/// tier. Payload lengths are validated here, once
+/// per round, before any kernel call — the kernels themselves stay on the
+/// unchecked fast path (`ReduceOp` docs).
 pub fn execute_rank(
     ep: &mut Endpoint,
     schedule: &Schedule,
@@ -59,6 +115,19 @@ pub fn execute_rank(
     if buf.len() != part.total() {
         return Err(CollectiveError::BadBuffer { rank: r, got: buf.len(), want: part.total() });
     }
+    // Resolve the monomorphized kernel once — the combine loop below then
+    // pays one enum branch per payload instead of a dyn call per slice.
+    let kern = op.kernel();
+    // All per-round views of the working vector are carved from this raw
+    // base pointer instead of re-borrowing `buf`: while a rendezvous peer
+    // reads our published region, forming a `&mut` that *spans* it (as
+    // `&mut buf[..]` indexing would, transiently, over the whole slice)
+    // is aliasing UB even if the bytes written are disjoint. Raw-derived
+    // disjoint subslices make the executor's accesses per-element
+    // non-overlapping with the peer's reads, which is sound. `buf` itself
+    // is not touched again until the function returns, by which point
+    // every publish has been acked (`finish_round` per round).
+    let base = buf.as_mut_ptr();
     for (k, round) in schedule.rounds.iter().enumerate() {
         let step = &round.steps[r];
         if step.is_idle() {
@@ -66,95 +135,174 @@ pub fn execute_rank(
         }
         let tag = round_base + k as u64;
 
+        // Rendezvous precondition, checked per (rank, round): the region
+        // we publish must not be written before the receiver acks, and
+        // the only writes this rank performs during the round target its
+        // recv range — so disjoint send/recv block ranges ⇒ safe (shared
+        // predicate with the Schedule::rendezvous_safe validator).
+        let rendezvous = step.rendezvous_safe(p);
+
         // Borrow-pack the outgoing payload: hand the transport the ≤2
-        // slices of the circular range; it gathers them into a pooled
-        // buffer (no local scratch, no per-round allocation).
+        // slices of the circular range; it publishes descriptors (tier 1)
+        // or gathers into a pooled buffer (tier 2) — either way no local
+        // scratch and no per-round allocation.
         let send = match step.send.as_ref() {
             Some(t) => {
                 let b = t.blocks.normalized(p);
                 let (a, rest) = part.circular_ranges(b.start, b.len);
-                let tail: &[f32] = match rest {
-                    Some(rest) => &buf[rest],
+                // SAFETY: partition ranges are in bounds of `buf`, and no
+                // write overlaps these read-only views while they are
+                // read: with `rendezvous` the per-step check makes the
+                // recv ranges block-disjoint, and on the pooled tier the
+                // transport copies out of the views inside the sendrecv
+                // call, before any recv-range write happens.
+                let head = unsafe { view(base, &a) };
+                let tail: &[f32] = match &rest {
+                    Some(rest) => unsafe { view(base, rest) },
                     None => &[],
                 };
-                Some((t.peer, &buf[a], tail))
+                Some(SendSlices { to: t.peer, head, tail, rendezvous })
             }
             None => None,
         };
 
         let recv_from = step.recv.as_ref().map(|rv| rv.peer);
-        let payload = ep.sendrecv(send, recv_from, tag)?;
+        let payload = match ep.sendrecv_slices(send, recv_from, tag) {
+            Ok(payload) => payload,
+            Err(e) => {
+                // Quiesce any publish before surfacing the error so the
+                // peer can never read `buf` after we return it.
+                let _ = ep.finish_round();
+                return Err(e.into());
+            }
+        };
 
         if let (Some(rv), Some(payload)) = (step.recv.as_ref(), payload) {
             let b = rv.blocks.normalized(p);
             let want = part.circular_elems(b.start, b.len);
             if payload.len() != want {
-                return Err(CollectiveError::BadPayload {
-                    rank: r,
-                    got: payload.len(),
-                    want,
-                    round: k,
-                });
+                // Validate once per payload (the kernels don't re-check).
+                // Complete the bad payload and quiesce our own publish so
+                // neither side is left waiting on a buffer we abandon.
+                let got = payload.len();
+                ep.complete(rv.peer, tag, payload);
+                let _ = ep.finish_round();
+                return Err(CollectiveError::BadPayload { rank: r, got, want, round: k });
             }
             let (a, rest) = part.circular_ranges(b.start, b.len);
             let split = a.len();
+            // Resolve the payload to (head, tail) source slices. Both
+            // sides derive the split from the same partition and block
+            // range, so a rendezvous publish lines up exactly.
+            let (src_head, src_tail): (&[f32], &[f32]) = match &payload {
+                Payload::Copied(v) => (&v[..split], &v[split..]),
+                // SAFETY: sender blocks in finish_round until our ack
+                // below; the slices stay valid and unwritten meanwhile.
+                Payload::Remote(remote) => unsafe { remote.slices() },
+            };
+            debug_assert_eq!(src_head.len(), split, "sender/receiver split mismatch");
+            // SAFETY: the recv ranges are in bounds, disjoint from each
+            // other (head starts past the wrap point the tail ends at),
+            // and — when this round published — block-disjoint from the
+            // region our receiver is concurrently reading (that is what
+            // `rendezvous` asserted above). Sources live in a different
+            // allocation (the payload Vec or the peer's working vector).
+            let dst_head = unsafe { view_mut(base, &a) };
+            let dst_tail = rest.as_ref().map(|rest| unsafe { view_mut(base, rest) });
             match rv.action {
-                RecvAction::Combine => {
-                    op.combine(&mut buf[a], &payload[..split]);
-                    if let Some(rest) = rest {
-                        op.combine(&mut buf[rest], &payload[split..]);
+                RecvAction::Combine => match kern {
+                    // Fused single pass, monomorphized — the hot path.
+                    Some(kern) => kern.combine_ranges(dst_head, dst_tail, src_head, src_tail),
+                    None => {
+                        op.combine(dst_head, src_head);
+                        if let Some(dst_tail) = dst_tail {
+                            op.combine(dst_tail, src_tail);
+                        }
                     }
-                }
+                },
                 RecvAction::Store => {
-                    buf[a].copy_from_slice(&payload[..split]);
-                    if let Some(rest) = rest {
-                        buf[rest].copy_from_slice(&payload[split..]);
+                    // The one unavoidable copy of allgather-style rounds;
+                    // credit it to the copy-volume counter (rendezvous
+                    // saves the *gather* copy, not this scatter).
+                    ep.counters.bytes_copied += 4 * want as u64;
+                    dst_head.copy_from_slice(src_head);
+                    if let Some(dst_tail) = dst_tail {
+                        dst_tail.copy_from_slice(src_tail);
                     }
                 }
             }
-            // Loan protocol: hand the buffer back to its sender's pool.
-            ep.release(rv.peer, payload);
+            // Loan protocol: pooled buffers return to their sender's
+            // pool; rendezvous publishes are acked.
+            ep.complete(rv.peer, tag, payload);
         }
+
+        // If we published this round, hold here until the receiver acks —
+        // after this point `buf` is ours to mutate again.
+        ep.finish_round()?;
     }
     Ok(round_base + schedule.rounds.len() as u64)
 }
 
 /// Convenience driver for tests/benches: run `schedule` over `p` threads
 /// with per-rank input vectors, returning the final per-rank buffers.
+/// Runs with the rendezvous tier enabled (the default hot path).
 pub fn run_schedule_threads(
     schedule: &Schedule,
     part: &BlockPartition,
     op: std::sync::Arc<dyn ReduceOp>,
     inputs: Vec<Vec<f32>>,
 ) -> Vec<Vec<f32>> {
-    run_schedule_threads_with_counters(schedule, part, op, inputs)
+    run_schedule_threads_tiered(schedule, part, op, inputs, true)
         .into_iter()
         .map(|(buf, _)| buf)
         .collect()
 }
 
 /// Like [`run_schedule_threads`] but also returns each rank's transport
+/// [`Counters`], with the copy tier under caller control: `rendezvous =
+/// false` pins every round to the pooled protocol (the PR-1 baseline the
+/// pool-accounting tests and the perf ablation measure), `true` enables
+/// the zero-copy tier where the schedule allows it.
+pub fn run_schedule_threads_tiered(
+    schedule: &Schedule,
+    part: &BlockPartition,
+    op: std::sync::Arc<dyn ReduceOp>,
+    inputs: Vec<Vec<f32>>,
+    rendezvous: bool,
+) -> Vec<(Vec<f32>, Counters)> {
+    use crate::transport::run_ranks_inputs;
+    assert_eq!(inputs.len(), schedule.p);
+    let schedule = std::sync::Arc::new(schedule.clone());
+    let part = std::sync::Arc::new(part.clone());
+    // Each rank's input travels by move through its spawn closure — no
+    // shared hand-off structure, no lock.
+    run_ranks_inputs(inputs, move |rank, ep, mut buf: Vec<f32>| {
+        ep.rendezvous = rendezvous && crate::transport::rendezvous_env_enabled();
+        if ep.rendezvous {
+            // Test/bench driver: pin the small-payload threshold to 0 so
+            // the zero-copy tier engages deterministically regardless of
+            // payload size (the Communicator keeps the latency-tuned
+            // default).
+            ep.rendezvous_min_elems = 0;
+        }
+        execute_rank(ep, &schedule, &part, op.as_ref(), &mut buf, 0)
+            .unwrap_or_else(|e| panic!("rank {rank}: {e}"));
+        (buf, ep.counters.clone())
+    })
+}
+
+/// Like [`run_schedule_threads`] but also returns each rank's transport
 /// [`Counters`] (volume + pool hit/miss — the allocation-regression tests
-/// read these).
+/// read these). Pinned to the pooled tier so the pool counters account
+/// for every send; use [`run_schedule_threads_tiered`] to measure the
+/// rendezvous tier.
 pub fn run_schedule_threads_with_counters(
     schedule: &Schedule,
     part: &BlockPartition,
     op: std::sync::Arc<dyn ReduceOp>,
     inputs: Vec<Vec<f32>>,
 ) -> Vec<(Vec<f32>, Counters)> {
-    use crate::transport::run_ranks;
-    assert_eq!(inputs.len(), schedule.p);
-    let schedule = std::sync::Arc::new(schedule.clone());
-    let part = std::sync::Arc::new(part.clone());
-    let inputs = std::sync::Arc::new(std::sync::Mutex::new(
-        inputs.into_iter().map(Some).collect::<Vec<_>>(),
-    ));
-    run_ranks(schedule.p, move |rank, ep| {
-        let mut buf = inputs.lock().unwrap()[rank].take().expect("input taken once");
-        execute_rank(ep, &schedule, &part, op.as_ref(), &mut buf, 0)
-            .unwrap_or_else(|e| panic!("rank {rank}: {e}"));
-        (buf, ep.counters.clone())
-    })
+    run_schedule_threads_tiered(schedule, part, op, inputs, false)
 }
 
 #[cfg(test)]
@@ -295,6 +443,42 @@ mod tests {
                 steady_misses <= 4,
                 "rank {rank}: {steady_misses} misses after warm-up — send-only rounds still allocate"
             );
+        }
+    }
+
+    #[test]
+    fn rendezvous_rounds_send_zero_steady_state_allocations_too() {
+        if !crate::transport::rendezvous_env_enabled() {
+            return; // CCOLL_NO_RENDEZVOUS: the publish path is off by design
+        }
+        // The tier-1 analogue of the pooled zero-alloc regression: with
+        // rendezvous enabled, sends neither allocate nor even touch the
+        // pool — every round publishes descriptors.
+        let p = 4usize;
+        let m = 64usize;
+        let part = Arc::new(BlockPartition::regular(p, m));
+        let skips = SkipScheme::HalvingUp.skips(p).unwrap();
+        let sched = Arc::new(allreduce_schedule(p, &skips));
+        assert!(sched.rendezvous_safe());
+        let total = 20u64;
+        let (sched2, part2) = (sched.clone(), part.clone());
+        let out = crate::transport::run_ranks(p, move |rank, ep| {
+            ep.rendezvous = true;
+            ep.rendezvous_min_elems = 0;
+            let mut buf = vec![rank as f32 + 1.0; m];
+            let mut tag = 0u64;
+            for _ in 0..total {
+                tag = execute_rank(ep, &sched2, &part2, &SumOp, &mut buf, tag).unwrap();
+            }
+            ep.counters.clone()
+        });
+        for (rank, c) in out.iter().enumerate() {
+            assert_eq!(c.rendezvous_hits, c.msgs_sent, "rank {rank}: every send rendezvous");
+            assert_eq!(c.pool_hits + c.pool_misses, 0, "rank {rank}: pool untouched");
+            // Copy volume: only the allgather-phase Store scatters remain.
+            let sc = sched.counters(&part)[rank].clone();
+            let store_elems = sc.elems_recv - sc.elems_combined;
+            assert_eq!(c.bytes_copied, 4 * (store_elems as u64) * total, "rank {rank}");
         }
     }
 }

@@ -10,7 +10,8 @@ pub mod hierarchical;
 pub mod symbolic;
 
 pub use exec::{
-    execute_rank, run_schedule_threads, run_schedule_threads_with_counters, CollectiveError,
+    execute_rank, run_schedule_threads, run_schedule_threads_tiered,
+    run_schedule_threads_with_counters, CollectiveError,
 };
 pub use generators::{allgather_schedule, allreduce_schedule, reduce_scatter_schedule};
 

@@ -15,6 +15,16 @@
 //! one persistent per-communicator working vector — steady-state calls
 //! reuse its capacity instead of allocating, matching the transport's
 //! pooled zero-copy payload protocol.
+//!
+//! Communicators enable the transport's zero-copy **rendezvous** tier by
+//! default (see the three-tier copy discipline in `crate::transport`):
+//! rounds whose send/recv block ranges are disjoint and whose payloads
+//! clear the small-message threshold
+//! (`transport::DEFAULT_RENDEZVOUS_MIN_ELEMS`, tunable via
+//! `CCOLL_RENDEZVOUS_MIN_ELEMS`) move payloads without any copy, and the
+//! rest fall back to the pooled tier automatically. Opt out per
+//! communicator with [`Communicator::set_rendezvous`], per launcher with
+//! [`Launcher::rendezvous`], or process-wide with `CCOLL_NO_RENDEZVOUS`.
 
 
 use crate::collectives::alltoall::{alltoall_rank, receive_partition};
@@ -59,8 +69,18 @@ pub struct Communicator {
 }
 
 impl Communicator {
-    pub fn new(ep: Endpoint, scheme: SkipScheme, backend: OpBackend) -> Self {
+    pub fn new(mut ep: Endpoint, scheme: SkipScheme, backend: OpBackend) -> Self {
+        // Default to the zero-copy hot path; the executor still falls back
+        // to the pooled tier per round whenever the schedule's send/recv
+        // ranges overlap (`CCOLL_NO_RENDEZVOUS=1` disables globally).
+        ep.rendezvous = crate::transport::rendezvous_env_enabled();
         Self { ep, scheme, backend, tag: 0, work: Vec::new() }
+    }
+
+    /// Enable/disable the transport's zero-copy rendezvous tier for this
+    /// communicator (on by default; see the module docs).
+    pub fn set_rendezvous(&mut self, enabled: bool) {
+        self.ep.rendezvous = enabled && crate::transport::rendezvous_env_enabled();
     }
 
     /// Stage `src` into the working buffer (reusing its capacity).
@@ -100,6 +120,41 @@ impl Communicator {
         })
     }
 
+    /// Run a schedule with this communicator's tag discipline: the tag
+    /// window for all of the schedule's rounds is reserved *before*
+    /// execution, so a collective that errors midway can never leak its
+    /// round tags into a retry — stale rendezvous acks or stashed
+    /// payloads keyed by `(peer, round)` from the aborted collective
+    /// would otherwise match the new one's rounds.
+    fn run_exec(
+        &mut self,
+        sched: &crate::schedule::Schedule,
+        part: &BlockPartition,
+        op: &dyn ReduceOp,
+        buf: &mut [f32],
+    ) -> Result<(), CollectiveError> {
+        let base = self.tag;
+        self.tag += sched.rounds.len() as u64;
+        execute_rank(&mut self.ep, sched, part, op, buf, base).map(|_| ())
+    }
+
+    /// [`run_exec`](Self::run_exec) on the persistent staging buffer: the
+    /// buffer is lent out for the duration of execution and restored
+    /// afterwards in one place, so its capacity survives every call path
+    /// (the zero-steady-state-allocation property) and later
+    /// `self.work[..]` reads always see the executed data.
+    fn run_exec_on_work(
+        &mut self,
+        sched: &crate::schedule::Schedule,
+        part: &BlockPartition,
+        op: &dyn ReduceOp,
+    ) -> Result<(), CollectiveError> {
+        let mut work = std::mem::take(&mut self.work);
+        let res = self.run_exec(sched, part, op, &mut work);
+        self.work = work;
+        res
+    }
+
     /// MPI_Reduce_scatter_block: every rank contributes `sendbuf`
     /// (`p·b` elements); `recvbuf` (`b` elements) receives block `rank` of
     /// the reduction. Algorithm 1 with this communicator's skip scheme.
@@ -122,7 +177,7 @@ impl Communicator {
         let sched = reduce_scatter_schedule(p, &self.skips());
         let op = self.op(op)?;
         self.stage(sendbuf);
-        self.tag = execute_rank(&mut self.ep, &sched, &part, op.as_ref(), &mut self.work, self.tag)?;
+        self.run_exec_on_work(&sched, &part, op.as_ref())?;
         recvbuf.copy_from_slice(&self.work[part.range(self.ep.rank)]);
         Ok(())
     }
@@ -151,7 +206,7 @@ impl Communicator {
         let sched = reduce_scatter_schedule(p, &self.skips());
         let op = self.op(op)?;
         self.stage(sendbuf);
-        self.tag = execute_rank(&mut self.ep, &sched, &part, op.as_ref(), &mut self.work, self.tag)?;
+        self.run_exec_on_work(&sched, &part, op.as_ref())?;
         recvbuf.copy_from_slice(&self.work[part.range(self.ep.rank)]);
         Ok(())
     }
@@ -164,7 +219,7 @@ impl Communicator {
         let part = BlockPartition::regular(p, buf.len());
         let sched = allreduce_schedule(p, &self.skips());
         let op = self.op(op)?;
-        self.tag = execute_rank(&mut self.ep, &sched, &part, op.as_ref(), buf, self.tag)?;
+        self.run_exec(&sched, &part, op.as_ref(), buf)?;
         Ok(())
     }
 
@@ -185,7 +240,7 @@ impl Communicator {
         let sched = allgather_schedule(p, &self.skips());
         // allgather performs no ⊕; use native sum as a placeholder operator
         let op = crate::ops::SumOp;
-        self.tag = execute_rank(&mut self.ep, &sched, &part, &op, recvbuf, self.tag)?;
+        self.run_exec(&sched, &part, &op, recvbuf)?;
         Ok(())
     }
 
@@ -196,8 +251,10 @@ impl Communicator {
         let p = self.size();
         let part = BlockPartition::uniform(p, block);
         let skips = self.skips();
-        let out = alltoall_rank(&mut self.ep, &part, &skips, sendbuf, self.tag)?;
+        // Reserve the tag window before executing (see run_exec).
+        let base = self.tag;
         self.tag += skips.len() as u64;
+        let out = alltoall_rank(&mut self.ep, &part, &skips, sendbuf, base)?;
         debug_assert_eq!(out.len(), receive_partition(&part, self.rank()).total());
         Ok(out)
     }
@@ -212,15 +269,17 @@ impl Communicator {
         recv_counts: &[usize],
     ) -> Result<Vec<f32>, CollectiveError> {
         let skips = self.skips();
+        // Reserve the tag window before executing (see run_exec).
+        let base = self.tag;
+        self.tag += skips.len() as u64;
         let out = crate::collectives::alltoall::alltoallv_rank(
             &mut self.ep,
             send_counts,
             recv_counts,
             &skips,
             sendbuf,
-            self.tag,
+            base,
         )?;
-        self.tag += skips.len() as u64;
         Ok(out)
     }
 
@@ -231,7 +290,7 @@ impl Communicator {
         let part = BlockPartition::single_block(p, buf.len(), root);
         let sched = reduce_scatter_schedule(p, &self.skips());
         let op = self.op(op)?;
-        self.tag = execute_rank(&mut self.ep, &sched, &part, op.as_ref(), buf, self.tag)?;
+        self.run_exec(&sched, &part, op.as_ref(), buf)?;
         Ok(())
     }
 
@@ -242,7 +301,7 @@ impl Communicator {
         let part = BlockPartition::single_block(p, buf.len(), root);
         let sched = allgather_schedule(p, &self.skips());
         let op = crate::ops::SumOp;
-        self.tag = execute_rank(&mut self.ep, &sched, &part, &op, buf, self.tag)?;
+        self.run_exec(&sched, &part, &op, buf)?;
         Ok(())
     }
 
@@ -277,7 +336,7 @@ impl Communicator {
         }
         let sched = crate::collectives::baselines::binomial_scatter_schedule(p, root);
         let op = crate::ops::SumOp;
-        self.tag = execute_rank(&mut self.ep, &sched, &part, &op, &mut self.work, self.tag)?;
+        self.run_exec_on_work(&sched, &part, &op)?;
         recvbuf.copy_from_slice(&self.work[part.range(self.ep.rank)]);
         Ok(())
     }
@@ -298,7 +357,7 @@ impl Communicator {
         self.work[range].copy_from_slice(sendblock);
         let sched = crate::collectives::baselines::binomial_gather_schedule(p, root);
         let op = crate::ops::SumOp;
-        self.tag = execute_rank(&mut self.ep, &sched, &part, &op, &mut self.work, self.tag)?;
+        self.run_exec_on_work(&sched, &part, &op)?;
         if self.rank() == root {
             let out = recvbuf.ok_or(CollectiveError::BadBuffer {
                 rank: root,
@@ -334,7 +393,7 @@ impl Communicator {
         buf: &mut [f32],
     ) -> Result<(), CollectiveError> {
         let op = self.op(op)?;
-        self.tag = execute_rank(&mut self.ep, sched, part, op.as_ref(), buf, self.tag)?;
+        self.run_exec(sched, part, op.as_ref(), buf)?;
         Ok(())
     }
 }
@@ -345,11 +404,12 @@ pub struct Launcher {
     pub p: usize,
     pub scheme: SkipScheme,
     pub backend: OpBackend,
+    pub rendezvous: bool,
 }
 
 impl Launcher {
     pub fn new(p: usize) -> Self {
-        Self { p, scheme: SkipScheme::HalvingUp, backend: OpBackend::Native }
+        Self { p, scheme: SkipScheme::HalvingUp, backend: OpBackend::Native, rendezvous: true }
     }
 
     pub fn scheme(mut self, scheme: SkipScheme) -> Self {
@@ -362,6 +422,13 @@ impl Launcher {
         self
     }
 
+    /// Enable/disable the zero-copy rendezvous tier for every spawned
+    /// communicator (on by default).
+    pub fn rendezvous(mut self, enabled: bool) -> Self {
+        self.rendezvous = enabled;
+        self
+    }
+
     /// Run `f(comm)` on every rank; returns per-rank results in rank order.
     pub fn run<T, F>(&self, f: F) -> Vec<T>
     where
@@ -370,6 +437,7 @@ impl Launcher {
     {
         let scheme = self.scheme.clone();
         let backend = self.backend.clone();
+        let rendezvous = self.rendezvous;
         crate::transport::run_ranks(self.p, move |_rank, ep| {
             // run_ranks hands us &mut Endpoint; move a fresh Communicator
             // around an owned endpoint instead.
@@ -378,7 +446,9 @@ impl Launcher {
                 // placeholder endpoint; never used after the swap
                 crate::transport::network(1).pop().unwrap(),
             );
-            f(Communicator::new(owned, scheme.clone(), backend.clone()))
+            let mut comm = Communicator::new(owned, scheme.clone(), backend.clone());
+            comm.set_rendezvous(rendezvous);
+            f(comm)
         })
     }
 }

@@ -10,8 +10,10 @@
 //! Both are validated against each other and against scalar folds in
 //! `rust/tests/`.
 
+pub mod kernels;
 pub mod native;
 
+pub use kernels::Kernel;
 pub use native::{MaxOp, MinOp, NativeOp, ProdOp, SumOp};
 
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -21,12 +23,42 @@ use std::sync::atomic::{AtomicU64, Ordering};
 /// `combine` computes `acc[i] ← acc[i] ⊕ other[i]`. Implementations must be
 /// commutative — Algorithm 1 applies ⊕ in skip order, not rank order
 /// (paper §2.1).
+///
+/// # Length contract
+///
+/// Operand slices must have equal length. The *executor* enforces this
+/// once per received payload (`CollectiveError::BadPayload`) before any
+/// kernel call, so implementations stay on the unchecked fast path and
+/// only `debug_assert!` the contract — a release-mode mismatch through
+/// some other caller is a bug at that call site, not in the kernel.
 pub trait ReduceOp: Send + Sync {
     /// Stable name (matches the artifact manifest's `op` field).
     fn name(&self) -> &'static str;
 
-    /// `acc ⊕= other` (slices must have equal length).
+    /// `acc ⊕= other` (slices must have equal length — see the trait docs).
     fn combine(&self, acc: &mut [f32], other: &[f32]);
+
+    /// Out-of-place fused pass: `dst[i] ← a[i] ⊕ b[i]` (all three slices
+    /// equal length). Default is copy-then-combine; native operators
+    /// override with a single fused loop. Not yet on the executor's hot
+    /// path (which is in-place); provided as the kernel-layer building
+    /// block for out-of-place consumers (e.g. a future fused
+    /// staging+combine in the communicator).
+    fn combine_into(&self, dst: &mut [f32], a: &[f32], b: &[f32]) {
+        debug_assert_eq!(dst.len(), a.len(), "⊕ operands must have equal length");
+        dst.copy_from_slice(a);
+        self.combine(dst, b);
+    }
+
+    /// The monomorphized [`Kernel`] implementing this operator, if it is
+    /// one of the four native ops. The executor resolves this once per
+    /// collective and then skips dyn dispatch entirely on the combine hot
+    /// path. Instrumentation wrappers (e.g. [`CountingOp`]) and backend
+    /// operators (PJRT) return `None` so every combine still flows through
+    /// their `combine`.
+    fn kernel(&self) -> Option<Kernel> {
+        None
+    }
 
     /// Identity element (e.g. 0 for sum, +∞ for min) — used to initialize
     /// empty accumulations and pad PJRT buckets.

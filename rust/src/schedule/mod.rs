@@ -35,6 +35,19 @@ impl BlockRange {
     pub fn normalized(self, p: usize) -> Self {
         Self { start: self.start % p, len: self.len }
     }
+
+    /// Whether two circular block ranges share any block id (mod `p`).
+    /// Both ranges must be normalized (`start < p`, `len ≤ p`). Two
+    /// circular intervals overlap iff either start lies inside the other.
+    pub fn overlaps(self, other: BlockRange, p: usize) -> bool {
+        debug_assert!(self.start < p && self.len <= p);
+        debug_assert!(other.start < p && other.len <= p);
+        if self.len == 0 || other.len == 0 {
+            return false;
+        }
+        ((other.start + p - self.start) % p) < self.len
+            || ((self.start + p - other.start) % p) < other.len
+    }
 }
 
 /// What the receiver does with an incoming payload.
@@ -76,6 +89,22 @@ impl RankStep {
 
     pub fn is_idle(&self) -> bool {
         self.send.is_none() && self.recv.is_none()
+    }
+
+    /// The zero-copy rendezvous precondition for this step: the send and
+    /// recv block ranges are disjoint (one-sided steps trivially qualify),
+    /// so a receiver may read the published send region while this rank
+    /// writes only its recv range. This is THE predicate the executor
+    /// uses for its per-round publish verdict and
+    /// [`Schedule::rendezvous_safe`] aggregates — a memory-safety
+    /// precondition, so both must always agree (hence one shared helper).
+    pub fn rendezvous_safe(&self, p: usize) -> bool {
+        match (&self.send, &self.recv) {
+            (Some(send), Some(recv)) => {
+                !send.blocks.normalized(p).overlaps(recv.blocks.normalized(p), p)
+            }
+            _ => true,
+        }
     }
 }
 
@@ -194,6 +223,21 @@ impl Schedule {
         out
     }
 
+    /// Rendezvous precondition (the zero-copy transport tier): in every
+    /// round, every rank's send and recv block ranges are disjoint, so a
+    /// receiver may read the sender's working vector *while the sender
+    /// combines into its own recv range* without racing. Every schedule
+    /// this library generates satisfies it except full-vector
+    /// recursive-doubling allreduce (send range == recv range == all
+    /// blocks), which the executor runs on the pooled tier instead — the
+    /// check is per (rank, round), so mixed schedules degrade only the
+    /// overlapping steps.
+    pub fn rendezvous_safe(&self) -> bool {
+        self.rounds
+            .iter()
+            .all(|round| round.steps.iter().all(|step| step.rendezvous_safe(self.p)))
+    }
+
     /// Max blocks in any single message — the §3 "no sequence longer than
     /// ⌈p/2⌉" property for the halving-up scheme.
     pub fn max_message_blocks(&self) -> usize {
@@ -259,5 +303,58 @@ mod tests {
     #[test]
     fn normalization_wraps() {
         assert_eq!(BlockRange::new(7, 2).normalized(5), BlockRange::new(2, 2));
+    }
+
+    #[test]
+    fn overlap_detection_matches_block_sets() {
+        // Brute force: compare against explicit block-set intersection.
+        let p = 7;
+        for s1 in 0..p {
+            for l1 in 0..=p {
+                for s2 in 0..p {
+                    for l2 in 0..=p {
+                        let a = BlockRange::new(s1, l1);
+                        let b = BlockRange::new(s2, l2);
+                        let set =
+                            |r: BlockRange| (0..r.len).map(|i| (r.start + i) % p).collect::<std::collections::HashSet<_>>();
+                        let want = !set(a).is_disjoint(&set(b));
+                        assert_eq!(a.overlaps(b, p), want, "{a:?} vs {b:?}");
+                        assert_eq!(b.overlaps(a, p), want, "symmetry {a:?} vs {b:?}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rendezvous_safety_classifies_schedules() {
+        // The tiny swap schedule exchanges disjoint blocks — safe.
+        assert!(tiny_valid().rendezvous_safe());
+        // A full-vector exchange (send range == recv range) is not.
+        let mut s = Schedule::new(2, "full-swap");
+        let all = BlockRange::new(0, 2);
+        let step0 = RankStep {
+            send: Some(Transfer { peer: 1, blocks: all }),
+            recv: Some(Recv { peer: 1, blocks: all, action: RecvAction::Combine }),
+        };
+        let step1 = RankStep {
+            send: Some(Transfer { peer: 0, blocks: all }),
+            recv: Some(Recv { peer: 0, blocks: all, action: RecvAction::Combine }),
+        };
+        s.rounds.push(Round { steps: vec![step0, step1] });
+        s.assert_valid();
+        assert!(!s.rendezvous_safe());
+        // One-sided rounds are trivially safe.
+        let mut t = Schedule::new(2, "one-sided");
+        t.rounds.push(Round {
+            steps: vec![
+                RankStep { send: Some(Transfer { peer: 1, blocks: all }), recv: None },
+                RankStep {
+                    send: None,
+                    recv: Some(Recv { peer: 0, blocks: all, action: RecvAction::Store }),
+                },
+            ],
+        });
+        assert!(t.rendezvous_safe());
     }
 }

@@ -1,4 +1,4 @@
-//! In-process message-passing substrate with pooled, recycled payloads.
+//! In-process message-passing substrate with a three-tier copy discipline.
 //!
 //! Substitutes for the paper's MPI cluster (DESIGN.md §2): `p` ranks run as
 //! OS threads; each rank owns an [`Endpoint`] supporting the paper's
@@ -12,47 +12,186 @@
 //! round-`k` sendrecv). Per-endpoint counters record rounds, messages and
 //! element volume for the Theorem 1/2 benches.
 //!
-//! # The pooled buffer protocol
+//! # The three-tier copy discipline
 //!
 //! The paper's algorithms move exactly `p−1` blocks per processor
-//! (Theorem 1); the transport must not add memory traffic on top. Payload
-//! buffers are therefore *loaned, not allocated*:
+//! (Theorem 1); the transport must not add memory traffic on top. Payloads
+//! travel by one of three tiers, fastest first, each falling back to the
+//! next when its precondition fails:
 //!
-//!   1. A sender [`acquire`](Endpoint::acquire)s a `Vec<f32>` from its
-//!      per-peer [`BufferPool`] (falling back to any peer's pool, then to a
-//!      fresh allocation — a *pool miss*).
-//!   2. The borrow-pack [`sendrecv`](Endpoint::sendrecv) gathers the
-//!      caller's (≤ 2) slices straight into that pooled buffer and ships
-//!      it; the caller never owns or allocates the message.
-//!   3. The receiver consumes the payload (combine/store) and
-//!      [`release`](Endpoint::release)s it: the buffer travels back to the
-//!      *sender's* pool over a dedicated return channel and is reused for a
-//!      later round.
+//! 1. **Rendezvous** (zero-copy, [`SendSlices::rendezvous`]) — the sender
+//!    publishes *descriptors* of its ≤ 2 working-vector slices
+//!    ([`RemoteSlices`]); the receiver combines/stores **directly from the
+//!    sender's memory** in one fused pass and then acks
+//!    ([`Endpoint::rendezvous_ack`]); the sender blocks in
+//!    [`Endpoint::finish_round`] until that ack before it may mutate or
+//!    release the published region. Engages only when the caller
+//!    guarantees the published region is not written during the round
+//!    (the executor's send/recv block-range disjointness check), the
+//!    endpoint opted in ([`Endpoint::rendezvous`], off for raw endpoints,
+//!    on for the executor drivers and [`crate::coordinator::Communicator`]),
+//!    the payload is at least [`Endpoint::rendezvous_min_elems`] elements
+//!    (below that, the blocking ack costs more than the copy it saves)
+//!    and `CCOLL_NO_RENDEZVOUS` is unset. Payload bytes copied: **zero**.
+//! 2. **Pooled** (single-copy, [`Endpoint::sendrecv`]) — the sender
+//!    gathers its slices into a `Vec<f32>` *loaned* from its per-peer
+//!    [`BufferPool`]; the receiver consumes it and [`Endpoint::release`]s
+//!    the buffer back to the sender's pool over a dedicated return
+//!    channel. After warm-up every acquire is a pool hit and the
+//!    steady-state path performs zero payload allocations per round
+//!    (`Counters::pool_hits` / `pool_misses`; one caveat: a released
+//!    buffer races the owner's next acquire, so a handful of misses
+//!    bounded by the number of (peer, capacity) classes can occur at any
+//!    point, but misses never scale with rounds).
+//! 3. **Owned** ([`Endpoint::sendrecv_owned`]) — ownership transfer for
+//!    payloads that are *built* rather than gathered (the framed, growing
+//!    all-to-all messages); pair with [`Endpoint::acquire`] to keep this
+//!    path pooled too.
 //!
-//! After a warm-up pass every acquire is a pool hit and the steady-state
-//! hot path performs **zero payload allocations per round**
-//! (`Counters::pool_hits` / `pool_misses` expose the rate; the Perf bench
-//! has the ablation). One caveat: a released buffer races the owner's
-//! next acquire, and supply only grows on a miss — so a handful of
-//! misses bounded by the number of (peer, capacity) classes can occur at
-//! any point, but misses never scale with rounds. Send-only rounds
-//! recycle identically — the loan protocol does not care whether the
-//! round also received. This pool is
-//! also the seam where a future shared-memory or RDMA-style transport
-//! plugs in: registered buffers replace heap `Vec`s with no executor
-//! change.
+//! `Counters::bytes_copied` tallies the payload bytes each tier physically
+//! copies (the gather on tier 2/3 sends, plus `Store` scatters counted by
+//! the executor), and `Counters::rendezvous_hits` counts tier-1 publishes —
+//! the `perf_hotpath` ablation compares the tiers with both.
+//!
+//! ## Rendezvous safety contract
+//!
+//! [`RemoteSlices`] carries raw pointers across threads; the protocol —
+//! not the borrow checker — guarantees their validity:
+//!
+//! * the sender's published region stays **unwritten and alive** from
+//!   publish until [`Endpoint::finish_round`] returns (the executor only
+//!   writes its *recv* ranges during a round and validates they are
+//!   disjoint from the published *send* range, falling back to tier 2
+//!   otherwise);
+//! * the receiver reads the region **only before acking** and never
+//!   writes it;
+//! * sender and receiver working vectors are distinct allocations, so the
+//!   receiver's own writes cannot alias the published region.
+//!
+//! A receiver that dies before acking parks the sender in
+//! `finish_round` until its timeout fires and surfaces an error. Note
+//! the timeout is a failure *detector*, not a cancellation: a receiver
+//! that is merely stalled (not dead) past the sender's timeout still
+//! holds the descriptors, so once `AckTimeout` has fired the publish
+//! contract is void and freeing the published buffer while that peer
+//! lives is a use-after-free hazard. The safety argument for this
+//! in-process transport is therefore that `timeout` (a deliberately
+//! generous 30 s default against thread-scheduling stalls) exceeds any
+//! realistic receiver stall, and that errors abort the whole collective:
+//! tests that shrink the timeout for failure injection also own and
+//! tear down the entire network. A production shared-memory/RDMA port
+//! must replace the timeout with real cancellation (e.g. revoking the
+//! registration) before reclaiming published memory. Consumers other
+//! than the schedule executor (the control plane, all-to-all) never see
+//! tier-1 payloads because only the executor publishes them.
+//!
+//! This pool + descriptor seam is also where a future shared-memory or
+//! RDMA-style transport plugs in: registered buffers replace heap `Vec`s
+//! and descriptors become remote keys, with no executor change.
 
 use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::time::Duration;
 
-/// A message between ranks: payload plus matching tag. The payload buffer
-/// is on loan from the sender's pool (see the module docs).
+/// Descriptors of the (≤ 2) working-vector slices a rendezvous sender
+/// published for one round. See the module docs for the safety contract
+/// that keeps the pointers valid until the receiver acks.
+#[derive(Debug)]
+pub struct RemoteSlices {
+    head: *const f32,
+    head_len: usize,
+    tail: *const f32,
+    tail_len: usize,
+}
+
+// SAFETY: the pointed-to memory is owned by the publishing rank's thread
+// and, per the protocol above, stays alive and unwritten until the
+// receiving thread acks; the receiver only reads. See module docs.
+unsafe impl Send for RemoteSlices {}
+
+impl RemoteSlices {
+    fn new(head: &[f32], tail: &[f32]) -> Self {
+        Self {
+            head: head.as_ptr(),
+            head_len: head.len(),
+            tail: tail.as_ptr(),
+            tail_len: tail.len(),
+        }
+    }
+
+    /// Total published elements.
+    pub fn len(&self) -> usize {
+        self.head_len + self.tail_len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Reconstruct the published slices.
+    ///
+    /// # Safety
+    ///
+    /// Caller must be the rendezvous receiver for this round and must not
+    /// use the slices after calling [`Endpoint::rendezvous_ack`] (which is
+    /// what frees the sender to mutate the region again).
+    pub unsafe fn slices<'a>(&self) -> (&'a [f32], &'a [f32]) {
+        let head = if self.head_len == 0 {
+            &[][..]
+        } else {
+            std::slice::from_raw_parts(self.head, self.head_len)
+        };
+        let tail = if self.tail_len == 0 {
+            &[][..]
+        } else {
+            std::slice::from_raw_parts(self.tail, self.tail_len)
+        };
+        (head, tail)
+    }
+}
+
+/// A received payload: either a pooled/owned buffer (tiers 2–3) or
+/// published rendezvous descriptors (tier 1).
+#[derive(Debug)]
+pub enum Payload {
+    /// A materialized buffer; hand back via [`Endpoint::release`] when it
+    /// came from a pooled sender.
+    Copied(Vec<f32>),
+    /// Zero-copy descriptors; consume then [`Endpoint::rendezvous_ack`].
+    Remote(RemoteSlices),
+}
+
+impl Payload {
+    /// Payload length in elements.
+    pub fn len(&self) -> usize {
+        match self {
+            Payload::Copied(v) => v.len(),
+            Payload::Remote(r) => r.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn expect_copied(self, rank: usize, from: usize) -> Vec<f32> {
+        match self {
+            Payload::Copied(v) => v,
+            Payload::Remote(_) => panic!(
+                "rank {rank}: peer {from} published a rendezvous payload on a \
+                 copied-payload API (sendrecv/recv_from) — only the schedule \
+                 executor speaks the rendezvous protocol"
+            ),
+        }
+    }
+}
+
+/// A message between ranks: payload plus matching tag.
 #[derive(Debug)]
 pub struct Msg {
     pub from: usize,
     pub round: u64,
-    pub payload: Vec<f32>,
+    pub payload: Payload,
 }
 
 /// Transport-level errors (used by failure-injection tests).
@@ -62,6 +201,8 @@ pub enum TransportError {
     Timeout { rank: usize, from: usize, round: u64 },
     #[error("rank {rank}: peer {to} disconnected")]
     Disconnected { rank: usize, to: usize },
+    #[error("rank {rank}: timeout waiting for rendezvous ack (round {round})")]
+    AckTimeout { rank: usize, round: u64 },
 }
 
 /// Volume counters for one endpoint.
@@ -80,12 +221,74 @@ pub struct Counters {
     pub pool_misses: u64,
     /// Buffers that came back over the return channel.
     pub bufs_recycled: u64,
+    /// Sends that published zero-copy rendezvous descriptors (tier 1)
+    /// instead of gathering into a pooled buffer.
+    pub rendezvous_hits: u64,
+    /// Payload bytes physically copied by this endpoint's sends (the
+    /// tier-2/3 gather) plus `Store` scatters credited by the executor.
+    /// Rendezvous publishes copy nothing.
+    pub bytes_copied: u64,
 }
 
 /// Recycled payload buffers destined for one peer.
 #[derive(Debug, Default)]
 struct BufferPool {
     free: Vec<Vec<f32>>,
+}
+
+/// The send half of the executor's borrow-pack sendrecv: up to two
+/// working-vector slices (a circular block range resolves to at most two)
+/// plus the caller's verdict on whether publishing them zero-copy is safe
+/// this round (send/recv range disjointness — see the module docs).
+pub struct SendSlices<'a> {
+    pub to: usize,
+    pub head: &'a [f32],
+    pub tail: &'a [f32],
+    /// Caller guarantees the slices are not written during this round.
+    /// The endpoint still falls back to the pooled tier when rendezvous
+    /// is disabled on this endpoint or the payload is empty.
+    pub rendezvous: bool,
+}
+
+impl<'a> SendSlices<'a> {
+    pub fn len(&self) -> usize {
+        self.head.len() + self.tail.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Process-wide rendezvous kill-switch: setting `CCOLL_NO_RENDEZVOUS` to
+/// any non-empty value other than `0` forces every endpoint to the pooled
+/// tier (for transports/platforms that cannot honor the publish contract,
+/// and for A/B measurements). Enforced inside the transport's publish
+/// decision itself — setting [`Endpoint::rendezvous`] directly cannot
+/// bypass it. The verdict is read once per process and cached (the hot
+/// path pays one atomic load).
+pub fn rendezvous_env_enabled() -> bool {
+    static ENABLED: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *ENABLED.get_or_init(|| match std::env::var("CCOLL_NO_RENDEZVOUS") {
+        Ok(v) => v.is_empty() || v == "0",
+        Err(_) => true,
+    })
+}
+
+/// Default payload threshold (elements) below which a rendezvous-eligible
+/// send still travels the pooled tier: publishing makes the sender block
+/// for the receiver's ack, so for small payloads the copy is cheaper than
+/// putting the receiver's combine on the sender's critical path. 256 f32
+/// = 1 KiB. Override per process with `CCOLL_RENDEZVOUS_MIN_ELEMS`, per
+/// endpoint via [`Endpoint::rendezvous_min_elems`] (the executor test
+/// drivers pin it to 0 to exercise the zero-copy tier deterministically).
+pub const DEFAULT_RENDEZVOUS_MIN_ELEMS: usize = 256;
+
+fn rendezvous_min_from_env() -> usize {
+    std::env::var("CCOLL_RENDEZVOUS_MIN_ELEMS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(DEFAULT_RENDEZVOUS_MIN_ELEMS)
 }
 
 /// One rank's communication handle.
@@ -97,12 +300,26 @@ pub struct Endpoint {
     /// Return path: `(returning peer, buffer)` flowing back to this owner.
     ret_txs: Vec<Sender<(usize, Vec<f32>)>>,
     ret_rx: Receiver<(usize, Vec<f32>)>,
+    /// Rendezvous completion path: `ack_txs[r]` feeds rank r's `ack_rx`.
+    ack_txs: Vec<Sender<u64>>,
+    ack_rx: Receiver<u64>,
+    /// Round tag of an un-acked rendezvous publish, if any. At most one
+    /// can be outstanding (one-ported sends + `finish_round` per round).
+    pending_ack: Option<u64>,
     /// `pools[peer]` holds recycled buffers last used for messages to
     /// `peer` (affinity keeps capacities matched to that link's payloads).
     pools: Vec<BufferPool>,
     /// Early arrivals keyed by (from, round).
-    stash: HashMap<(usize, u64), Vec<f32>>,
+    stash: HashMap<(usize, u64), Payload>,
     pub counters: Counters,
+    /// Opt-in for the zero-copy rendezvous tier. Raw endpoints default to
+    /// `false` so plain `sendrecv` users keep the pooled protocol; the
+    /// schedule-executor drivers and the Communicator switch it on.
+    pub rendezvous: bool,
+    /// Minimum payload (elements) for a rendezvous publish; smaller
+    /// rendezvous-eligible sends stay pooled (latency: the ack round-trip
+    /// outweighs a small copy). See [`DEFAULT_RENDEZVOUS_MIN_ELEMS`].
+    pub rendezvous_min_elems: usize,
     /// Receive timeout — deadlock detection in tests; generous default.
     pub timeout: Duration,
 }
@@ -114,6 +331,8 @@ pub fn network(p: usize) -> Vec<Endpoint> {
     let mut rxs = Vec::with_capacity(p);
     let mut ret_txs = Vec::with_capacity(p);
     let mut ret_rxs = Vec::with_capacity(p);
+    let mut ack_txs = Vec::with_capacity(p);
+    let mut ack_rxs = Vec::with_capacity(p);
     for _ in 0..p {
         let (tx, rx) = channel::<Msg>();
         txs.push(tx);
@@ -121,20 +340,29 @@ pub fn network(p: usize) -> Vec<Endpoint> {
         let (rtx, rrx) = channel::<(usize, Vec<f32>)>();
         ret_txs.push(rtx);
         ret_rxs.push(rrx);
+        let (atx, arx) = channel::<u64>();
+        ack_txs.push(atx);
+        ack_rxs.push(arx);
     }
     rxs.into_iter()
         .zip(ret_rxs)
+        .zip(ack_rxs)
         .enumerate()
-        .map(|(rank, (rx, ret_rx))| Endpoint {
+        .map(|(rank, ((rx, ret_rx), ack_rx))| Endpoint {
             rank,
             p,
             txs: txs.clone(),
             rx,
             ret_txs: ret_txs.clone(),
             ret_rx,
+            ack_txs: ack_txs.clone(),
+            ack_rx,
+            pending_ack: None,
             pools: (0..p).map(|_| BufferPool::default()).collect(),
             stash: HashMap::new(),
             counters: Counters::default(),
+            rendezvous: false,
+            rendezvous_min_elems: rendezvous_min_from_env(),
             timeout: Duration::from_secs(30),
         })
         .collect()
@@ -202,6 +430,54 @@ impl Endpoint {
         let _ = self.ret_txs[from].send((self.rank, payload));
     }
 
+    /// Signal a rendezvous sender that its round-`round` publish has been
+    /// fully consumed — the receiver must not touch the published slices
+    /// afterwards. Best-effort like [`release`](Endpoint::release).
+    pub fn rendezvous_ack(&mut self, from: usize, round: u64) {
+        let _ = self.ack_txs[from].send(round);
+    }
+
+    /// Hand back a consumed [`Payload`], whichever tier it traveled:
+    /// pooled buffers return to the sender's pool, rendezvous payloads
+    /// are acked.
+    pub fn complete(&mut self, from: usize, round: u64, payload: Payload) {
+        match payload {
+            Payload::Copied(v) => self.release(from, v),
+            Payload::Remote(_) => self.rendezvous_ack(from, round),
+        }
+    }
+
+    /// Block until the rendezvous publish of this round (if any) has been
+    /// acked by its receiver. Callers of [`sendrecv_slices`]
+    /// (Endpoint::sendrecv_slices) MUST call this before mutating or
+    /// freeing the published slices — i.e. at the end of every round.
+    /// No-op when nothing was published.
+    pub fn finish_round(&mut self) -> Result<(), TransportError> {
+        let Some(round) = self.pending_ack.take() else {
+            return Ok(());
+        };
+        loop {
+            match self.ack_rx.recv_timeout(self.timeout) {
+                // Acks from aborted earlier rounds (error paths) may
+                // linger; drop anything older than what we wait for.
+                Ok(r) if r == round => return Ok(()),
+                Ok(r) => {
+                    debug_assert!(r < round, "ack from the future: got {r}, awaiting {round}");
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    return Err(TransportError::AckTimeout { rank: self.rank, round })
+                }
+                // Unreachable in practice: every endpoint holds a clone of
+                // its own ack sender (ack_txs[rank]), so the channel can't
+                // disconnect while we're alive to poll it. Mapped to
+                // AckTimeout defensively rather than panicking.
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(TransportError::AckTimeout { rank: self.rank, round })
+                }
+            }
+        }
+    }
+
     /// The paper's combined `Send(..) ‖ Recv(..)` primitive, borrow-pack
     /// form: `send` is `(to, head, tail)` — up to two slices (a circular
     /// block range resolves to at most two; pass `&[]` for an absent
@@ -211,28 +487,73 @@ impl Endpoint {
     /// Either side may be `None` (tree rounds). Returns the received
     /// payload if `recv_from` was given; the caller must hand it back via
     /// [`release`](Endpoint::release) once consumed to keep the sender's
-    /// pool warm.
+    /// pool warm. This entry point never publishes rendezvous descriptors
+    /// and panics if the *peer* published some (mixed-protocol misuse);
+    /// the schedule executor uses [`sendrecv_slices`]
+    /// (Endpoint::sendrecv_slices) instead.
     pub fn sendrecv(
         &mut self,
         send: Option<(usize, &[f32], &[f32])>,
         recv_from: Option<usize>,
         round: u64,
     ) -> Result<Option<Vec<f32>>, TransportError> {
+        let send = send.map(|(to, head, tail)| SendSlices { to, head, tail, rendezvous: false });
+        let payload = self.sendrecv_slices(send, recv_from, round)?;
+        Ok(payload.map(|pl| {
+            let from = recv_from.expect("payload implies recv_from");
+            pl.expect_copied(self.rank, from)
+        }))
+    }
+
+    /// Tier-aware sendrecv used by the schedule executor: gathers into a
+    /// pooled buffer (tier 2), or — when `send.rendezvous` is set, this
+    /// endpoint opted in and the payload is non-empty — publishes
+    /// zero-copy descriptors of the slices (tier 1). After a tier-1
+    /// publish the caller MUST call [`finish_round`]
+    /// (Endpoint::finish_round) before mutating or freeing the slices.
+    ///
+    /// The returned [`Payload`] (when `recv_from` is given) must be handed
+    /// back via [`complete`](Endpoint::complete).
+    pub fn sendrecv_slices(
+        &mut self,
+        send: Option<SendSlices<'_>>,
+        recv_from: Option<usize>,
+        round: u64,
+    ) -> Result<Option<Payload>, TransportError> {
         self.counters.sendrecv_rounds += 1;
-        if let Some((to, head, tail)) = send {
-            debug_assert!(to < self.p && to != self.rank, "bad send target {to}");
-            let mut payload = self.acquire(to, head.len() + tail.len());
-            payload.extend_from_slice(head);
-            payload.extend_from_slice(tail);
-            self.send_msg(to, round, payload)?;
+        if let Some(s) = send {
+            debug_assert!(s.to < self.p && s.to != self.rank, "bad send target {}", s.to);
+            let publish = s.rendezvous
+                && self.rendezvous
+                && rendezvous_env_enabled()
+                && !s.is_empty()
+                && s.len() >= self.rendezvous_min_elems;
+            let payload = if publish {
+                debug_assert!(self.pending_ack.is_none(), "rendezvous publish not finished");
+                self.counters.rendezvous_hits += 1;
+                Payload::Remote(RemoteSlices::new(s.head, s.tail))
+            } else {
+                let mut buf = self.acquire(s.to, s.len());
+                buf.extend_from_slice(s.head);
+                buf.extend_from_slice(s.tail);
+                self.counters.bytes_copied += 4 * buf.len() as u64;
+                Payload::Copied(buf)
+            };
+            self.send_msg(s.to, round, payload)?;
+            // Arm the ack wait only once the publish is actually in
+            // flight — a failed send must not leave finish_round parked
+            // for an ack nobody can ever deliver.
+            if publish {
+                self.pending_ack = Some(round);
+            }
         }
         self.recv_side(recv_from, round)
     }
 
     /// Ownership-transfer variant of [`sendrecv`](Endpoint::sendrecv) for
     /// payloads that are built rather than gathered (the framed, growing
-    /// all-to-all messages). Pair with [`acquire`](Endpoint::acquire) to
-    /// keep this path pooled too.
+    /// all-to-all messages) — tier 3. Pair with
+    /// [`acquire`](Endpoint::acquire) to keep this path pooled too.
     pub fn sendrecv_owned(
         &mut self,
         send: Option<(usize, Vec<f32>)>,
@@ -242,12 +563,17 @@ impl Endpoint {
         self.counters.sendrecv_rounds += 1;
         if let Some((to, payload)) = send {
             debug_assert!(to < self.p && to != self.rank, "bad send target {to}");
-            self.send_msg(to, round, payload)?;
+            self.counters.bytes_copied += 4 * payload.len() as u64;
+            self.send_msg(to, round, Payload::Copied(payload))?;
         }
-        self.recv_side(recv_from, round)
+        let payload = self.recv_side(recv_from, round)?;
+        Ok(payload.map(|pl| {
+            let from = recv_from.expect("payload implies recv_from");
+            pl.expect_copied(self.rank, from)
+        }))
     }
 
-    fn send_msg(&mut self, to: usize, round: u64, payload: Vec<f32>) -> Result<(), TransportError> {
+    fn send_msg(&mut self, to: usize, round: u64, payload: Payload) -> Result<(), TransportError> {
         self.counters.msgs_sent += 1;
         self.counters.elems_sent += payload.len() as u64;
         self.txs[to]
@@ -259,7 +585,7 @@ impl Endpoint {
         &mut self,
         recv_from: Option<usize>,
         round: u64,
-    ) -> Result<Option<Vec<f32>>, TransportError> {
+    ) -> Result<Option<Payload>, TransportError> {
         match recv_from {
             None => Ok(None),
             Some(from) => {
@@ -273,7 +599,7 @@ impl Endpoint {
 
     /// Receive the message tagged `(from, round)`, stashing out-of-order
     /// arrivals from other peers/rounds.
-    fn recv_tagged(&mut self, from: usize, round: u64) -> Result<Vec<f32>, TransportError> {
+    fn recv_tagged(&mut self, from: usize, round: u64) -> Result<Payload, TransportError> {
         if let Some(payload) = self.stash.remove(&(from, round)) {
             return Ok(payload);
         }
@@ -297,7 +623,7 @@ impl Endpoint {
 
     /// Raw one-directional send (used by the coordinator's control plane).
     pub fn send_to(&mut self, to: usize, round: u64, payload: Vec<f32>) -> Result<(), TransportError> {
-        self.send_msg(to, round, payload)
+        self.send_msg(to, round, Payload::Copied(payload))
     }
 
     /// Raw one-directional receive.
@@ -305,7 +631,7 @@ impl Endpoint {
         let payload = self.recv_tagged(from, round)?;
         self.counters.msgs_recv += 1;
         self.counters.elems_recv += payload.len() as u64;
-        Ok(payload)
+        Ok(payload.expect_copied(self.rank, from))
     }
 }
 
@@ -316,16 +642,29 @@ where
     T: Send + 'static,
     F: Fn(usize, &mut Endpoint) -> T + Send + Sync + 'static,
 {
+    run_ranks_inputs(vec![(); p], move |rank, ep, ()| f(rank, ep))
+}
+
+/// Like [`run_ranks`] but moves one element of `inputs` into each rank's
+/// closure (rank r gets `inputs[r]`) — per-rank working vectors travel by
+/// move through the spawn, with no shared `Mutex` hand-off.
+pub fn run_ranks_inputs<I, T, F>(inputs: Vec<I>, f: F) -> Vec<T>
+where
+    I: Send + 'static,
+    T: Send + 'static,
+    F: Fn(usize, &mut Endpoint, I) -> T + Send + Sync + 'static,
+{
+    let p = inputs.len();
     let endpoints = network(p);
     let f = std::sync::Arc::new(f);
     let mut handles = Vec::with_capacity(p);
-    for (rank, mut ep) in endpoints.into_iter().enumerate() {
+    for ((rank, mut ep), input) in endpoints.into_iter().enumerate().zip(inputs) {
         let f = f.clone();
         handles.push(
             std::thread::Builder::new()
                 .name(format!("rank-{rank}"))
                 .stack_size(8 << 20)
-                .spawn(move || f(rank, &mut ep))
+                .spawn(move || f(rank, &mut ep, input))
                 .expect("spawn rank thread"),
         );
     }
@@ -396,6 +735,9 @@ mod tests {
             assert_eq!(c.msgs_recv, 1);
             assert_eq!(c.elems_sent, 7);
             assert_eq!(c.elems_recv, 7);
+            // pooled gather copies every payload byte; no rendezvous
+            assert_eq!(c.bytes_copied, 7 * 4);
+            assert_eq!(c.rendezvous_hits, 0);
         }
     }
 
@@ -472,5 +814,120 @@ mod tests {
         // Now everything is checked out: next acquire is a miss.
         ep.acquire(1, 8);
         assert_eq!(ep.counters.pool_misses, 2);
+    }
+
+    #[test]
+    fn rendezvous_publish_reads_senders_memory_zero_copy() {
+        if !rendezvous_env_enabled() {
+            return; // kill-switch active: the publish path is off by design
+        }
+        // Ring of 3: each rank publishes its buffer, the receiver reads it
+        // directly and acks; finish_round releases the sender.
+        let out = run_ranks(3, |rank, ep| {
+            ep.rendezvous = true;
+            ep.rendezvous_min_elems = 0;
+            let data = [rank as f32, 100.0 + rank as f32];
+            let to = (rank + 1) % 3;
+            let from = (rank + 2) % 3;
+            let send = SendSlices { to, head: &data[..1], tail: &data[1..], rendezvous: true };
+            let payload = ep.sendrecv_slices(Some(send), Some(from), 0).unwrap().unwrap();
+            let got = match &payload {
+                Payload::Remote(r) => {
+                    let (h, t) = unsafe { r.slices() };
+                    vec![h[0], t[0]]
+                }
+                Payload::Copied(_) => panic!("expected a rendezvous payload"),
+            };
+            ep.complete(from, 0, payload);
+            ep.finish_round().unwrap();
+            (got, ep.counters.clone())
+        });
+        for (rank, (got, c)) in out.iter().enumerate() {
+            let from = (rank + 2) % 3;
+            assert_eq!(got, &vec![from as f32, 100.0 + from as f32]);
+            assert_eq!(c.rendezvous_hits, 1, "rank {rank}");
+            assert_eq!(c.bytes_copied, 0, "rank {rank}: rendezvous must copy nothing");
+            assert_eq!(c.pool_hits + c.pool_misses, 0, "rank {rank}: no pool traffic");
+        }
+    }
+
+    #[test]
+    fn rendezvous_disabled_endpoint_falls_back_to_pooled() {
+        // Caller says rendezvous is safe, but the endpoint never opted in:
+        // the payload must travel the pooled tier.
+        let out = run_ranks(2, |rank, ep| {
+            let peer = 1 - rank;
+            let data = [rank as f32; 4];
+            let send = SendSlices { to: peer, head: &data, tail: &[], rendezvous: true };
+            let payload = ep.sendrecv_slices(Some(send), Some(peer), 0).unwrap().unwrap();
+            let ok = matches!(payload, Payload::Copied(_));
+            ep.complete(peer, 0, payload);
+            ep.finish_round().unwrap(); // no-op: nothing published
+            (ok, ep.counters.rendezvous_hits)
+        });
+        for (ok, hits) in out {
+            assert!(ok, "payload should have been pooled");
+            assert_eq!(hits, 0);
+        }
+    }
+
+    #[test]
+    fn finish_round_times_out_when_receiver_never_acks() {
+        if !rendezvous_env_enabled() {
+            return; // kill-switch active: nothing is ever published
+        }
+        let out = run_ranks(2, |rank, ep| {
+            if rank == 0 {
+                ep.rendezvous = true;
+                ep.rendezvous_min_elems = 0;
+                ep.timeout = Duration::from_millis(50);
+                let data = [1.0f32; 8];
+                let send = SendSlices { to: 1, head: &data, tail: &[], rendezvous: true };
+                ep.sendrecv_slices(Some(send), None, 0).unwrap();
+                matches!(ep.finish_round(), Err(TransportError::AckTimeout { .. }))
+            } else {
+                // rank 1 receives the descriptors but never acks
+                let _payload = ep.sendrecv_slices(None, Some(0), 0).unwrap();
+                true
+            }
+        });
+        assert!(out[0], "sender should time out awaiting the ack");
+    }
+
+    #[test]
+    fn empty_publish_skips_rendezvous() {
+        let mut eps = network(2);
+        let ep = &mut eps[0];
+        ep.rendezvous = true;
+        ep.rendezvous_min_elems = 0;
+        let send = SendSlices { to: 1, head: &[], tail: &[], rendezvous: true };
+        ep.sendrecv_slices(Some(send), None, 0).unwrap();
+        assert_eq!(ep.counters.rendezvous_hits, 0, "empty payloads stay pooled");
+        ep.finish_round().unwrap();
+    }
+
+    #[test]
+    fn small_payloads_stay_pooled_below_the_threshold() {
+        if !rendezvous_env_enabled() {
+            return; // kill-switch active: nothing is ever published
+        }
+        let mut eps = network(2);
+        let ep = &mut eps[0];
+        ep.rendezvous = true;
+        ep.rendezvous_min_elems = 8;
+        let data = [1.0f32; 4]; // below the threshold
+        let send = SendSlices { to: 1, head: &data, tail: &[], rendezvous: true };
+        ep.sendrecv_slices(Some(send), None, 0).unwrap();
+        assert_eq!(ep.counters.rendezvous_hits, 0);
+        assert_eq!(ep.counters.bytes_copied, 16, "gathered via the pooled tier");
+        // at the threshold it publishes
+        let data = [1.0f32; 8];
+        let send = SendSlices { to: 1, head: &data, tail: &[], rendezvous: true };
+        ep.sendrecv_slices(Some(send), None, 1).unwrap();
+        assert_eq!(ep.counters.rendezvous_hits, 1);
+        // quiesce: nobody will ack, so clear the pending publish by hand
+        // (unit-test only; eps[1] never ran)
+        ep.timeout = Duration::from_millis(20);
+        assert!(ep.finish_round().is_err());
     }
 }

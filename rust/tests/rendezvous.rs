@@ -1,0 +1,324 @@
+//! Rendezvous-tier tests (ISSUE 2): the zero-copy precondition as a
+//! property over every schedule generator, and bit-identity between the
+//! rendezvous and pooled executors.
+//!
+//! The precondition (transport docs, `Schedule::rendezvous_safe`): in
+//! every round, each rank's send and recv block ranges are disjoint, so a
+//! receiver may read the sender's working vector while the sender writes
+//! only its own recv range. Every generator in the library satisfies it
+//! except full-vector recursive-doubling allreduce, whose butterfly
+//! rounds exchange the *entire* vector both ways — the executor runs
+//! those rounds on the pooled tier automatically, which the fallback
+//! tests below pin down.
+
+use std::sync::Arc;
+
+use circulant_collectives::collectives::baselines;
+use circulant_collectives::collectives::{
+    allgather_schedule, allreduce_schedule, reduce_scatter_schedule, run_schedule_threads_tiered,
+    Algorithm,
+};
+use circulant_collectives::datatypes::BlockPartition;
+use circulant_collectives::ops::{Kernel, ReduceOp, SumOp};
+use circulant_collectives::schedule::Schedule;
+use circulant_collectives::topology::skips::SkipScheme;
+use circulant_collectives::transport::{rendezvous_env_enabled, Counters};
+use circulant_collectives::util::rng::SplitMix64;
+
+/// Independent oracle for `Schedule::rendezvous_safe`: materialize each
+/// step's send/recv block id sets and intersect them.
+fn assert_send_recv_disjoint(sched: &Schedule) {
+    let p = sched.p;
+    for (k, round) in sched.rounds.iter().enumerate() {
+        for (r, step) in round.steps.iter().enumerate() {
+            if let (Some(send), Some(recv)) = (&step.send, &step.recv) {
+                let blocks = |b: circulant_collectives::schedule::BlockRange| {
+                    let b = b.normalized(p);
+                    (0..b.len).map(|i| (b.start + i) % p).collect::<std::collections::HashSet<_>>()
+                };
+                let overlap: Vec<usize> =
+                    blocks(send.blocks).intersection(&blocks(recv.blocks)).copied().collect();
+                assert!(
+                    overlap.is_empty(),
+                    "{}: rank {r} round {k} send/recv share blocks {overlap:?}",
+                    sched.name
+                );
+            }
+        }
+    }
+    assert!(sched.rendezvous_safe(), "{}: rendezvous_safe disagrees with oracle", sched.name);
+}
+
+/// Random *valid* skip sequence (as in prop_schedules.rs): start at p,
+/// next skip uniform in [⌈s/2⌉, s−1].
+fn random_valid_skips(p: usize, rng: &mut SplitMix64) -> Vec<usize> {
+    let mut v = Vec::new();
+    let mut s = p;
+    while s > 1 {
+        let lo = s.div_ceil(2);
+        let hi = s - 1;
+        v.push(lo + rng.next_below(hi - lo + 1));
+        s = *v.last().unwrap();
+    }
+    v
+}
+
+#[test]
+fn circulant_schedules_satisfy_rendezvous_precondition_random_skips() {
+    // Corollary-2 generality: ANY valid skip sequence keeps send/recv
+    // ranges disjoint (the sent partials live at distance ≥ σ_k, the
+    // received ones at the rank's own window — never the same blocks).
+    let mut rng = SplitMix64::new(0xD15C0);
+    for _ in 0..60 {
+        let p = 2 + rng.next_below(96);
+        let skips = random_valid_skips(p, &mut rng);
+        assert_send_recv_disjoint(&reduce_scatter_schedule(p, &skips));
+        assert_send_recv_disjoint(&allgather_schedule(p, &skips));
+        assert_send_recv_disjoint(&allreduce_schedule(p, &skips));
+    }
+}
+
+#[test]
+fn baseline_generators_satisfy_rendezvous_precondition() {
+    let mut rng = SplitMix64::new(0xBA5E);
+    for &p in &[2usize, 3, 4, 5, 7, 8, 12, 16, 22, 31, 32] {
+        let root = rng.next_below(p);
+        assert_send_recv_disjoint(&baselines::ring_reduce_scatter_schedule(p));
+        assert_send_recv_disjoint(&baselines::ring_allgather_schedule(p));
+        assert_send_recv_disjoint(&baselines::ring_allreduce_schedule(p));
+        assert_send_recv_disjoint(&baselines::bruck_allgather_schedule(p));
+        assert_send_recv_disjoint(&baselines::binomial_reduce_schedule(p, root));
+        assert_send_recv_disjoint(&baselines::binomial_bcast_schedule(p, root));
+        assert_send_recv_disjoint(&baselines::binomial_allreduce_schedule(p));
+        assert_send_recv_disjoint(&baselines::binomial_scatter_schedule(p, root));
+        assert_send_recv_disjoint(&baselines::binomial_gather_schedule(p, root));
+        assert_send_recv_disjoint(&baselines::rabenseifner_allreduce_schedule(p));
+        if p.is_power_of_two() {
+            assert_send_recv_disjoint(&baselines::recursive_halving_rs_schedule(p));
+            assert_send_recv_disjoint(&baselines::recursive_doubling_ag_schedule(p));
+        }
+    }
+}
+
+#[test]
+fn recursive_doubling_allreduce_is_the_documented_exception() {
+    // Full-vector butterfly rounds send and receive the SAME block range:
+    // the precondition fails, and the executor must fall back per round.
+    for p in [2usize, 3, 5, 8, 22] {
+        let sched = baselines::recursive_doubling_allreduce_schedule(p);
+        assert!(
+            !sched.rendezvous_safe(),
+            "p={p}: full-vector recursive doubling should not be rendezvous-safe"
+        );
+    }
+}
+
+fn int_inputs(p: usize, m: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = SplitMix64::new(seed);
+    (0..p).map(|_| rng.int_valued_vec(m, -8, 9)).collect()
+}
+
+fn oracle_sum(inputs: &[Vec<f32>]) -> Vec<f32> {
+    let mut acc = vec![0.0f32; inputs[0].len()];
+    for v in inputs {
+        for (a, b) in acc.iter_mut().zip(v) {
+            *a += b;
+        }
+    }
+    acc
+}
+
+#[test]
+fn rendezvous_and_pooled_bit_identical_all_partitions() {
+    // ISSUE-2 oracle: both tiers produce bit-identical buffers for
+    // p ∈ {2, 5, 22} on random / zipf / degenerate single-block
+    // partitions, and match the scalar oracle.
+    for p in [2usize, 5, 22] {
+        let parts = vec![
+            ("random", BlockPartition::random(p, 7 * p + 3, 60 + p as u64)),
+            ("zipf", BlockPartition::zipf(p, 9 * p, 1.3, p as u64)),
+            ("single-block-0", BlockPartition::single_block(p, 41, 0)),
+            ("single-block-last", BlockPartition::single_block(p, 33, p - 1)),
+        ];
+        for (wname, part) in parts {
+            let inputs = int_inputs(p, part.total(), 17 + p as u64);
+            let want = oracle_sum(&inputs);
+            for alg_name in ["rs", "ar"] {
+                let sched = Algorithm::parse(alg_name).unwrap().schedule(p);
+                let rdv = run_schedule_threads_tiered(
+                    &sched,
+                    &part,
+                    Arc::new(SumOp),
+                    inputs.clone(),
+                    true,
+                );
+                let pooled = run_schedule_threads_tiered(
+                    &sched,
+                    &part,
+                    Arc::new(SumOp),
+                    inputs.clone(),
+                    false,
+                );
+                for r in 0..p {
+                    // Bit-identical across tiers (same ⊕ order, different
+                    // operand sourcing), not merely approximately equal.
+                    let (rb, pb) = (&rdv[r].0, &pooled[r].0);
+                    assert_eq!(rb.len(), pb.len());
+                    for i in 0..rb.len() {
+                        assert_eq!(
+                            rb[i].to_bits(),
+                            pb[i].to_bits(),
+                            "{wname} {alg_name} p={p} r={r} i={i}"
+                        );
+                    }
+                    // and correct vs the scalar oracle on the owned range
+                    let range = if alg_name == "ar" {
+                        0..part.total()
+                    } else {
+                        part.range(r)
+                    };
+                    assert_eq!(
+                        &rdv[r].0[range.clone()],
+                        &want[range],
+                        "{wname} {alg_name} p={p} r={r}"
+                    );
+                }
+                // the pooled run must never publish
+                assert!(pooled.iter().all(|(_, c)| c.rendezvous_hits == 0), "{wname} {alg_name}");
+            }
+        }
+    }
+}
+
+#[test]
+fn rendezvous_engages_and_halves_copy_volume() {
+    // On a rendezvous-safe allreduce every send publishes, and the copied
+    // byte volume drops to the allgather-phase Store scatters alone —
+    // strictly less than half the pooled volume (the bench asserts the
+    // same ≥2× bound on large m; this is the test-sized mirror).
+    let p = 5usize;
+    let part = BlockPartition::regular(p, 10 * p);
+    let sched = Algorithm::parse("ar").unwrap().schedule(p);
+    let inputs = int_inputs(p, part.total(), 3);
+    if !rendezvous_env_enabled() {
+        // Under the CCOLL_NO_RENDEZVOUS kill-switch both runs are pooled;
+        // engagement/copy-volume claims don't apply (bit-identity is
+        // covered by the oracle test above).
+        return;
+    }
+    let rdv = run_schedule_threads_tiered(&sched, &part, Arc::new(SumOp), inputs.clone(), true);
+    let pooled = run_schedule_threads_tiered(&sched, &part, Arc::new(SumOp), inputs, false);
+    fn total(out: &[(Vec<f32>, Counters)], f: fn(&Counters) -> u64) -> u64 {
+        out.iter().map(|(_, c)| f(c)).sum()
+    }
+    let rdv_hits = total(&rdv, |c| c.rendezvous_hits);
+    let rdv_msgs = total(&rdv, |c| c.msgs_sent);
+    assert_eq!(rdv_hits, rdv_msgs, "every send of a safe schedule must publish");
+    let rdv_bytes = total(&rdv, |c| c.bytes_copied);
+    let pooled_bytes = total(&pooled, |c| c.bytes_copied);
+    assert!(
+        2 * rdv_bytes <= pooled_bytes,
+        "rendezvous copied {rdv_bytes} bytes, pooled {pooled_bytes} — expected ≥2× reduction"
+    );
+    assert_eq!(total(&rdv, |c| c.pool_hits) + total(&rdv, |c| c.pool_misses), 0);
+}
+
+#[test]
+fn recursive_doubling_fallback_is_correct_and_partial() {
+    // With rendezvous requested on an unsafe schedule, the executor
+    // degrades per round: butterfly rounds travel pooled, one-sided fold
+    // rounds may still publish — and the result stays exact.
+    for p in [2usize, 5, 22] {
+        let part = BlockPartition::regular(p, 3 * p + 1);
+        let sched = baselines::recursive_doubling_allreduce_schedule(p);
+        let inputs = int_inputs(p, part.total(), 29 + p as u64);
+        let want = oracle_sum(&inputs);
+        let out = run_schedule_threads_tiered(&sched, &part, Arc::new(SumOp), inputs, true);
+        for (r, (buf, _)) in out.iter().enumerate() {
+            assert_eq!(buf, &want, "p={p} r={r}");
+        }
+        // Butterfly rounds must have used the pool on every rank that
+        // participated in one (all ranks < 2^⌊log2 p⌋).
+        let pool_acquires: u64 = out.iter().map(|(_, c)| c.pool_hits + c.pool_misses).sum();
+        assert!(pool_acquires > 0, "p={p}: overlapping rounds should have gathered via the pool");
+        if !p.is_power_of_two() && rendezvous_env_enabled() {
+            // fold-in/out rounds are one-sided → rendezvous-eligible
+            let hits: u64 = out.iter().map(|(_, c)| c.rendezvous_hits).sum();
+            assert!(hits > 0, "p={p}: one-sided fold rounds should have published");
+        }
+    }
+}
+
+#[test]
+fn kernel_dispatch_matches_dyn_dispatch_end_to_end() {
+    // The executor takes the monomorphized-kernel path for native ops and
+    // the dyn path for wrappers (kernel() == None). Both must produce
+    // bit-identical collectives.
+    struct DynOnly(SumOp);
+    impl ReduceOp for DynOnly {
+        fn name(&self) -> &'static str {
+            "sum"
+        }
+        fn combine(&self, acc: &mut [f32], other: &[f32]) {
+            self.0.combine(acc, other);
+        }
+        // kernel() deliberately left at the default None
+        fn identity(&self) -> f32 {
+            self.0.identity()
+        }
+    }
+    assert!(SumOp.kernel().is_some());
+    assert_eq!(SumOp.kernel(), Some(Kernel::Sum));
+
+    for p in [2usize, 7, 22] {
+        let part = BlockPartition::regular(p, 6 * p + 5);
+        let sched = Algorithm::parse("ar").unwrap().schedule(p);
+        let inputs = int_inputs(p, part.total(), 91 + p as u64);
+        let fast =
+            run_schedule_threads_tiered(&sched, &part, Arc::new(SumOp), inputs.clone(), true);
+        let dynp =
+            run_schedule_threads_tiered(&sched, &part, Arc::new(DynOnly(SumOp)), inputs, true);
+        for r in 0..p {
+            for i in 0..part.total() {
+                assert_eq!(
+                    fast[r].0[i].to_bits(),
+                    dynp[r].0[i].to_bits(),
+                    "p={p} r={r} i={i}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn back_to_back_rendezvous_collectives_share_one_network() {
+    // Round-tag offsets must keep publishes/acks of consecutive
+    // collectives separated on a persistent network.
+    use circulant_collectives::collectives::execute_rank;
+    use circulant_collectives::transport::run_ranks_inputs;
+    let p = 4usize;
+    let m = 24usize;
+    let part = Arc::new(BlockPartition::regular(p, m));
+    let skips = SkipScheme::HalvingUp.skips(p).unwrap();
+    let sched = Arc::new(allreduce_schedule(p, &skips));
+    let iters = 12u64;
+    let inputs: Vec<Vec<f32>> = (0..p).map(|r| vec![if r == 0 { 1.0 } else { 0.0 }; m]).collect();
+    let out = run_ranks_inputs(inputs, move |_rank, ep, mut buf: Vec<f32>| {
+        ep.rendezvous = true;
+        ep.rendezvous_min_elems = 0;
+        let mut tag = 0u64;
+        for _ in 0..iters {
+            tag = execute_rank(ep, &sched, &part, &SumOp, &mut buf, tag).unwrap();
+        }
+        (buf, ep.counters.clone())
+    });
+    // all ranks must agree exactly after every chained collective, and
+    // the replicated vector stays constant across positions
+    for (buf, c) in &out {
+        assert_eq!(buf, &out[0].0, "ranks disagree after {iters} chained collectives");
+        if rendezvous_env_enabled() {
+            assert_eq!(c.rendezvous_hits, c.msgs_sent);
+        }
+    }
+    assert!(out[0].0.iter().all(|&x| x == out[0].0[0]));
+}
