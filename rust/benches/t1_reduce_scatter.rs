@@ -5,18 +5,24 @@
 //!   * executes Algorithm 1 on the thread network with instrumented
 //!     endpoints and a counting ⊕, reporting measured rounds / blocks /
 //!     ⊕-applications against the theorem's ⌈log2 p⌉ and p−1;
-//!   * verifies the result against a scalar oracle (exact, integer-valued
-//!     data);
+//!   * verifies the result against a scalar oracle (exact in every dtype:
+//!     integer dtypes reduce with wrapping — hence exactly associative —
+//!     arithmetic, and float inputs are small-integer-valued so sums stay
+//!     exactly representable);
 //!   * checks the DES time against Corollary 1's closed form (exact in the
 //!     model).
+//!
+//! Generic over the element type: `CCOLL_BENCH_DTYPE` (f32|f64|i32|i64|u64,
+//! default f32) selects the dtype the payloads travel in; the JSON report
+//! records it in the `dtype` field.
 //!
 //! Regenerates the "Theorem 1" table of EXPERIMENTS.md.
 
 use std::sync::Arc;
 
-use circulant_collectives::bench_harness::{bench_header, fast_mode, BenchReport};
+use circulant_collectives::bench_harness::{bench_dtype, bench_header, fast_mode, BenchReport};
 use circulant_collectives::collectives::reduce_scatter_schedule;
-use circulant_collectives::datatypes::BlockPartition;
+use circulant_collectives::datatypes::{elem, BlockPartition, DType, Elem};
 use circulant_collectives::ops::SumOp;
 use circulant_collectives::sim::{closed_form, simulate, CostModel};
 use circulant_collectives::topology::skips::SkipScheme;
@@ -25,7 +31,18 @@ use circulant_collectives::util::rng::SplitMix64;
 use circulant_collectives::util::table::Table;
 
 fn main() {
+    let dt = bench_dtype();
     bench_header("T1", "Theorem 1 — reduce-scatter rounds & volume, uniform in p");
+    match dt {
+        DType::F32 => sweep::<f32>(),
+        DType::F64 => sweep::<f64>(),
+        DType::I32 => sweep::<i32>(),
+        DType::I64 => sweep::<i64>(),
+        DType::U64 => sweep::<u64>(),
+    }
+}
+
+fn sweep<T: Elem>() {
     let ps: Vec<usize> = if fast_mode() {
         vec![2, 3, 8, 22]
     } else {
@@ -33,9 +50,10 @@ fn main() {
     };
     let b = 257; // elements per block (odd on purpose)
     let model = CostModel::new(1.0, 1e-3, 1e-4); // unit-ish for exact checks
+    let (lo, hi) = elem::test_value_bounds(T::DTYPE);
 
     let mut t = Table::new(
-        "Theorem 1 (measured on the thread network, b=257 f32/block)",
+        &format!("Theorem 1 (measured on the thread network, b=257 {}/block)", T::DTYPE.name()),
         &[
             "p",
             "rounds (meas)",
@@ -50,6 +68,7 @@ fn main() {
     );
 
     let mut report = BenchReport::new("t1");
+    report.str("dtype", T::DTYPE.name());
     let mut rounds_meas = Vec::new();
     let mut blocks_meas = Vec::new();
     let mut elems_sent_meas = Vec::new();
@@ -62,24 +81,24 @@ fn main() {
 
         // --- instrumented threaded execution --------------------------
         let mut rng = SplitMix64::new(p as u64);
-        let inputs: Vec<Vec<f32>> =
-            (0..p).map(|_| rng.int_valued_vec(part.total(), -8, 9)).collect();
-        let mut oracle = vec![0.0f32; part.total()];
+        let inputs: Vec<Vec<T>> =
+            (0..p).map(|_| elem::int_vec(&mut rng, part.total(), lo, hi)).collect();
+        let mut oracle = vec![T::zero(); part.total()];
         for v in &inputs {
-            for (a, x) in oracle.iter_mut().zip(v) {
-                *a += x;
-            }
+            SumOp.combine(&mut oracle, v);
         }
         let sched2 = Arc::new(sched.clone());
         let part2 = Arc::new(part.clone());
-        let outs =
-            circulant_collectives::transport::run_ranks_inputs(inputs, move |_rank, ep, mut buf: Vec<f32>| {
+        let outs = circulant_collectives::transport::run_ranks_inputs_typed::<T, _, _, _>(
+            inputs,
+            move |_rank, ep, mut buf: Vec<T>| {
                 circulant_collectives::collectives::execute_rank(
                     ep, &sched2, &part2, &SumOp, &mut buf, 0,
                 )
                 .unwrap();
                 (buf, ep.counters.clone())
-            });
+            },
+        );
 
         let mut verified = true;
         for (r, (buf, _)) in outs.iter().enumerate() {

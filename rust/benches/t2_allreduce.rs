@@ -6,12 +6,17 @@
 //! DES time must equal Theorem 2's closed form. Also cross-checks the
 //! volume bound of [3,15] (2(p−1) blocks is optimal when the reduction
 //! work is balanced).
+//!
+//! Generic over the element type: `CCOLL_BENCH_DTYPE` (f32|f64|i32|i64|u64,
+//! default f32) selects the dtype the payloads travel in; the JSON report
+//! records it in the `dtype` field. Verification is exact in every dtype
+//! (wrapping integer ⊕; small-integer-valued float inputs).
 
 use std::sync::Arc;
 
-use circulant_collectives::bench_harness::{bench_header, fast_mode, BenchReport};
+use circulant_collectives::bench_harness::{bench_dtype, bench_header, fast_mode, BenchReport};
 use circulant_collectives::collectives::allreduce_schedule;
-use circulant_collectives::datatypes::BlockPartition;
+use circulant_collectives::datatypes::{elem, BlockPartition, DType, Elem};
 use circulant_collectives::ops::SumOp;
 use circulant_collectives::sim::{closed_form, simulate, CostModel};
 use circulant_collectives::topology::skips::SkipScheme;
@@ -20,7 +25,18 @@ use circulant_collectives::util::rng::SplitMix64;
 use circulant_collectives::util::table::Table;
 
 fn main() {
+    let dt = bench_dtype();
     bench_header("T2", "Theorem 2 — allreduce rounds & volume, uniform in p");
+    match dt {
+        DType::F32 => sweep::<f32>(),
+        DType::F64 => sweep::<f64>(),
+        DType::I32 => sweep::<i32>(),
+        DType::I64 => sweep::<i64>(),
+        DType::U64 => sweep::<u64>(),
+    }
+}
+
+fn sweep<T: Elem>() {
     let ps: Vec<usize> = if fast_mode() {
         vec![2, 5, 22]
     } else {
@@ -28,12 +44,14 @@ fn main() {
     };
     let b = 64;
     let model = CostModel::new(1.0, 1e-3, 1e-4);
+    let (lo, hi) = elem::test_value_bounds(T::DTYPE);
 
     let mut t = Table::new(
-        "Theorem 2 (measured, b=64 f32/block)",
+        &format!("Theorem 2 (measured, b=64 {}/block)", T::DTYPE.name()),
         &["p", "rounds", "2⌈log2 p⌉", "blocks/rank", "2(p−1)", "⊕ blocks", "p−1", "DES=Thm2", "verified"],
     );
     let mut report = BenchReport::new("t2");
+    report.str("dtype", T::DTYPE.name());
     let mut rounds_meas = Vec::new();
     let mut blocks_meas = Vec::new();
     let mut combines_meas = Vec::new();
@@ -45,24 +63,24 @@ fn main() {
         let part = BlockPartition::uniform(p, b);
 
         let mut rng = SplitMix64::new(1000 + p as u64);
-        let inputs: Vec<Vec<f32>> =
-            (0..p).map(|_| rng.int_valued_vec(part.total(), -8, 9)).collect();
-        let mut oracle = vec![0.0f32; part.total()];
+        let inputs: Vec<Vec<T>> =
+            (0..p).map(|_| elem::int_vec(&mut rng, part.total(), lo, hi)).collect();
+        let mut oracle = vec![T::zero(); part.total()];
         for v in &inputs {
-            for (a, x) in oracle.iter_mut().zip(v) {
-                *a += x;
-            }
+            SumOp.combine(&mut oracle, v);
         }
         let sched2 = Arc::new(sched.clone());
         let part2 = Arc::new(part.clone());
-        let outs =
-            circulant_collectives::transport::run_ranks_inputs(inputs, move |_rank, ep, mut buf: Vec<f32>| {
+        let outs = circulant_collectives::transport::run_ranks_inputs_typed::<T, _, _, _>(
+            inputs,
+            move |_rank, ep, mut buf: Vec<T>| {
                 circulant_collectives::collectives::execute_rank(
                     ep, &sched2, &part2, &SumOp, &mut buf, 0,
                 )
                 .unwrap();
                 (buf, ep.counters.clone())
-            });
+            },
+        );
 
         let verified = outs.iter().all(|(buf, _)| buf[..] == oracle[..]);
         all_ok &= verified;

@@ -29,6 +29,11 @@ impl BenchReport {
         obj.insert("schema".to_string(), Json::Num(1.0));
         obj.insert("bench".to_string(), Json::Str(name.to_string()));
         obj.insert("fast_mode".to_string(), Json::Bool(fast_mode()));
+        // Every report records its element type. Benches that honor
+        // CCOLL_BENCH_DTYPE overwrite this with the dtype they actually
+        // ran (`report.str("dtype", ...)`); f32-only benches keep the
+        // default so the field is never a lie.
+        obj.insert("dtype".to_string(), Json::Str("f32".to_string()));
         let unix = std::time::SystemTime::now()
             .duration_since(std::time::UNIX_EPOCH)
             .map(|d| d.as_secs() as f64)
@@ -131,8 +136,17 @@ pub fn bench_header(id: &str, what: &str) {
 }
 
 /// Environment knob: `CCOLL_BENCH_FAST=1` shrinks sweeps for smoke runs.
+/// Parsed once per process by [`crate::env_knobs`] (malformed values
+/// abort loudly instead of silently meaning "off").
 pub fn fast_mode() -> bool {
-    std::env::var("CCOLL_BENCH_FAST").map(|v| v == "1").unwrap_or(false)
+    crate::env_knobs::knobs().bench_fast
+}
+
+/// Environment knob: `CCOLL_BENCH_DTYPE` selects the element type the
+/// dtype-aware benches (T1/T2) run in (default f32; see
+/// [`crate::env_knobs`]).
+pub fn bench_dtype() -> crate::datatypes::DType {
+    crate::env_knobs::knobs().bench_dtype
 }
 
 #[cfg(test)]

@@ -1,16 +1,20 @@
 //! `ccoll` command-line interface (hand-rolled; clap unavailable offline).
 //!
 //! Subcommands:
-//!   info       platform + artifact + config report
+//!   info       platform + artifact + config report, plus the supported
+//!              (op, dtype) kernel matrix
 //!   run        execute a collective on the thread network, verify, report
+//!              (generic over `run.dtype`: f32|f64|i32|i64|u64)
 //!   simulate   α-β-γ DES + closed-form comparison sweep
 //!   trace      symbolic round-by-round trace (reproduces the paper's §2.1
 //!              p=22 example)
-//!   validate   Theorem 1/2 counter + correctness sweep over a p range
+//!   validate   Theorem 1/2 counter + correctness sweep over a p range,
+//!              plus an exact data-path check in the configured dtype
 //!   train      end-to-end data-parallel training (PJRT compute + Alg 2)
 //!
 //! Global flags: `--config FILE` and `--key value` overrides (see
-//! `crate::config`).
+//! `crate::config`). Unknown `run.op` / `run.algorithm` / `run.dtype`
+//! values fail with the full list of valid alternatives.
 
 use std::sync::Arc;
 
@@ -19,8 +23,8 @@ use anyhow::{anyhow, bail, Result};
 use crate::collectives::{symbolic, Algorithm};
 use crate::config::Config;
 use crate::coordinator::{train, Launcher, OpBackend, RunMetrics, TrainConfig};
-use crate::datatypes::BlockPartition;
-use crate::ops::{ReduceOp, SumOp};
+use crate::datatypes::{elem, BlockPartition, DType, Elem};
+use crate::ops::{ReduceOp, SumOp, NATIVE_OP_NAMES, OP_NAMES_HELP};
 use crate::runtime::{default_artifact_dir, ComputeService, Manifest};
 use crate::sim::{closed_form, simulate};
 use crate::topology::skips::SkipScheme;
@@ -31,13 +35,15 @@ pub const USAGE: &str = "\
 usage: ccoll [--config FILE] [--key value …] <command>
 
 commands:
-  info                     show platform, artifacts, resolved config
+  info                     show platform, artifacts, resolved config, and
+                           the supported (op, dtype) kernel matrix
   run                      run a collective (keys: run.p run.m run.algorithm
-                           run.op run.backend run.seed run.verify)
+                           run.op run.dtype run.backend run.seed run.verify)
   simulate                 cost-model sweep (keys: sim.p sim.m cost.alpha
                            cost.beta cost.gamma)
   trace                    symbolic trace (keys: trace.p trace.rank)
-  validate                 Theorem 1/2 sweep (keys: validate.max_p)
+  validate                 Theorem 1/2 sweep + exact data-path check
+                           (keys: validate.max_p run.dtype)
   search                   skip-sequence search, the paper's §2.1 open
                            question (keys: search.p search.m search.node
                            search.beam)
@@ -89,6 +95,25 @@ fn cmd_info(cfg: &Config) -> Result<()> {
         }
         Err(e) => println!("artifacts: unavailable ({e}) — run `make artifacts`"),
     }
+    // The supported (op, dtype) kernel matrix, derived from DType::ALL so
+    // a newly added dtype can never leave this table stale: native
+    // kernels are monomorphized per (op, dtype); the PJRT Pallas
+    // artifacts are compiled for f32 only.
+    let cols: Vec<String> =
+        DType::ALL.iter().map(|d| format!("{} ({}B)", d.name(), d.size_bytes())).collect();
+    let mut header: Vec<&str> = vec!["op"];
+    header.extend(cols.iter().map(String::as_str));
+    header.push("pjrt");
+    let mut t = Table::new("kernel matrix (op × dtype)", &header);
+    for op in NATIVE_OP_NAMES {
+        let mut cells: Vec<String> = vec![op.to_string()];
+        cells.extend(DType::ALL.iter().map(|_| "native".to_string()));
+        cells.push("f32 only".into());
+        t.row(&cells);
+    }
+    t.print();
+    println!("integer ⊕ is wrapping (exactly associative — bit-exact oracles);");
+    println!("float ⊕ is IEEE (non-associative — fixed-schedule reproducibility only).");
     let n: usize = cfg.entries().count();
     if n > 0 {
         println!("config:");
@@ -100,6 +125,16 @@ fn cmd_info(cfg: &Config) -> Result<()> {
 }
 
 fn cmd_run(cfg: &Config) -> Result<()> {
+    match cfg.dtype()? {
+        DType::F32 => cmd_run_typed::<f32>(cfg),
+        DType::F64 => cmd_run_typed::<f64>(cfg),
+        DType::I32 => cmd_run_typed::<i32>(cfg),
+        DType::I64 => cmd_run_typed::<i64>(cfg),
+        DType::U64 => cmd_run_typed::<u64>(cfg),
+    }
+}
+
+fn cmd_run_typed<T: Elem>(cfg: &Config) -> Result<()> {
     let p = cfg.get_usize("run.p", 8)?;
     let m = cfg.get_usize("run.m", 1 << 16)?;
     let alg = cfg.algorithm()?;
@@ -108,26 +143,41 @@ fn cmd_run(cfg: &Config) -> Result<()> {
     let seed = cfg.get_usize("run.seed", 1)? as u64;
     let verify = cfg.get_bool("run.verify", true)?;
 
+    if !NATIVE_OP_NAMES.contains(&op_name.as_str()) {
+        bail!("unknown run.op {op_name:?} (valid: {OP_NAMES_HELP})");
+    }
+
     let _service; // keep the compute service alive for the whole run
     let backend = match backend_name.as_str() {
         "native" => OpBackend::Native,
         "pjrt" => {
+            if T::DTYPE != DType::F32 {
+                bail!(
+                    "run.backend=pjrt supports run.dtype=f32 only (the AOT Pallas \
+                     kernels are compiled for f32); got run.dtype={} — use \
+                     run.backend=native for other dtypes",
+                    T::DTYPE.name()
+                );
+            }
             let svc = ComputeService::start(default_artifact_dir(), vec![op_name.clone()], false, false)?;
             let h = svc.handle.clone();
             _service = svc;
             OpBackend::Pjrt(h)
         }
-        other => bail!("unknown backend {other:?} (native|pjrt)"),
+        other => bail!("unknown run.backend {other:?} (valid: native|pjrt)"),
     };
 
     let part = BlockPartition::regular(p, m);
     let sched = alg.schedule(p);
     sched.assert_valid();
 
-    // Integer-valued inputs so float sums verify exactly.
+    // Small-integer-valued inputs so sums verify exactly in every dtype
+    // (float sums stay within the exactly-representable range; integer
+    // sums are wrapping and exact by construction).
+    let (lo, hi) = elem::test_value_bounds(T::DTYPE);
     let mut rng = SplitMix64::new(seed);
-    let inputs: Vec<Vec<f32>> = (0..p).map(|_| rng.int_valued_vec(m, -8, 9)).collect();
-    let mut oracle = vec![0.0f32; m];
+    let inputs: Vec<Vec<T>> = (0..p).map(|_| elem::int_vec(&mut rng, m, lo, hi)).collect();
+    let mut oracle = vec![T::zero(); m];
     for v in &inputs {
         SumOp.combine(&mut oracle, v);
     }
@@ -138,7 +188,7 @@ fn cmd_run(cfg: &Config) -> Result<()> {
     let op2 = op_name.clone();
     let sched3 = sched2.clone();
     let t0 = std::time::Instant::now();
-    let results = Launcher::new(p).backend(backend).run(move |mut comm| {
+    let results = Launcher::new(p).backend(backend).run_typed::<T, _, _>(move |mut comm| {
         let mut buf = inputs2.lock().unwrap()[comm.rank()].take().unwrap();
         comm.run_schedule(&sched3, &part2, &op2, &mut buf).expect("collective");
         (buf, comm.counters())
@@ -147,6 +197,7 @@ fn cmd_run(cfg: &Config) -> Result<()> {
 
     let metrics = RunMetrics {
         algorithm: alg.name(),
+        dtype: T::DTYPE.name().to_string(),
         p,
         m,
         wall_seconds: wall,
@@ -171,7 +222,7 @@ fn cmd_run(cfg: &Config) -> Result<()> {
             }
         }
         if ok {
-            println!("verify: OK (exact match vs scalar oracle)");
+            println!("verify: OK (exact match vs scalar oracle, dtype {})", T::DTYPE.name());
         } else {
             bail!("verification failed");
         }
@@ -235,6 +286,9 @@ fn cmd_trace(cfg: &Config) -> Result<()> {
 
 fn cmd_validate(cfg: &Config) -> Result<()> {
     let max_p = cfg.get_usize("validate.max_p", 128)?;
+    // Parse the dtype up front: a typo must fail before the sweep runs,
+    // not after minutes of counter/symbolic work.
+    let dtype = cfg.dtype()?;
     let mut bad = 0usize;
     for p in 1..=max_p {
         for scheme in [SkipScheme::HalvingUp, SkipScheme::PowerOfTwo, SkipScheme::Sqrt] {
@@ -256,12 +310,63 @@ fn cmd_validate(cfg: &Config) -> Result<()> {
             }
         }
     }
-    if bad == 0 {
-        println!("validate: PASS — Theorem 1 counters + symbolic correctness for p ≤ {max_p} × 3 schemes");
-        Ok(())
-    } else {
-        bail!("{bad} validation failures")
+    if bad != 0 {
+        bail!("{bad} validation failures");
     }
+    println!("validate: PASS — Theorem 1 counters + symbolic correctness for p ≤ {max_p} × 3 schemes");
+    // Data-path check in the configured dtype: small thread-network runs
+    // against an exact scalar oracle (wrapping-integer arithmetic makes
+    // this bit-exact for integer dtypes; small-integer values keep float
+    // sums exact too).
+    match dtype {
+        DType::F32 => validate_data_path::<f32>(),
+        DType::F64 => validate_data_path::<f64>(),
+        DType::I32 => validate_data_path::<i32>(),
+        DType::I64 => validate_data_path::<i64>(),
+        DType::U64 => validate_data_path::<u64>(),
+    }
+}
+
+fn validate_data_path<T: Elem>() -> Result<()> {
+    use crate::collectives::{allreduce_schedule, reduce_scatter_schedule, run_schedule_threads_typed};
+    let (lo, hi) = elem::test_value_bounds(T::DTYPE);
+    for p in [2usize, 3, 5, 9] {
+        let part = BlockPartition::regular(p, 4 * p + 3);
+        let skips = SkipScheme::HalvingUp.skips(p).map_err(|e| anyhow!("{e}"))?;
+        let mut rng = SplitMix64::new(77 + p as u64);
+        let inputs: Vec<Vec<T>> =
+            (0..p).map(|_| elem::int_vec(&mut rng, part.total(), lo, hi)).collect();
+        let mut oracle = vec![T::zero(); part.total()];
+        for v in &inputs {
+            SumOp.combine(&mut oracle, v);
+        }
+        let op: Arc<dyn ReduceOp<T>> = Arc::new(SumOp);
+        let rs = run_schedule_threads_typed::<T>(
+            &reduce_scatter_schedule(p, &skips),
+            &part,
+            op.clone(),
+            inputs.clone(),
+        );
+        for (r, buf) in rs.iter().enumerate() {
+            let range = part.range(r);
+            if buf[range.clone()] != oracle[range] {
+                bail!("data-path FAIL: reduce-scatter p={p} rank {r} ({})", T::DTYPE.name());
+            }
+        }
+        let ar = run_schedule_threads_typed::<T>(
+            &allreduce_schedule(p, &skips),
+            &part,
+            op,
+            inputs,
+        );
+        for (r, buf) in ar.iter().enumerate() {
+            if buf[..] != oracle[..] {
+                bail!("data-path FAIL: allreduce p={p} rank {r} ({})", T::DTYPE.name());
+            }
+        }
+    }
+    println!("validate: data path OK — exact oracle match in dtype {}", T::DTYPE.name());
+    Ok(())
 }
 
 fn cmd_search(cfg: &Config) -> Result<()> {

@@ -1,4 +1,5 @@
-//! All-to-all communication on the circulant schedule (paper §4).
+//! All-to-all communication on the circulant schedule (paper §4), generic
+//! over the element type.
 //!
 //! Take the reduce-scatter algorithm and let ⊕ be *concatenation*: each
 //! partial "sum" for destination `d` is the multiset of `(source, block)`
@@ -10,11 +11,18 @@
 //! (`topology::spanning::subtree_sizes`), giving total volume
 //! `Θ(m/2·⌈log2 p⌉)` instead of reduce-scatter's `(p−1)/p·m`.
 //!
+//! Frame headers are encoded in the payload's own element type via
+//! [`Elem::from_usize`]/[`Elem::to_usize`] — exact for the small
+//! non-negative counts involved in every supported dtype. The pack path
+//! *asserts* each header survives the round-trip (floats lose integer
+//! exactness past 2^24/2^53), so an outsized block aborts loudly rather
+//! than mis-framing the payload.
+//!
 //! This module executes directly over the transport (the growing,
 //! tag-framed payloads don't fit the fixed-block Schedule IR); round
 //! structure and peers are identical to `generators::reduce_scatter_schedule`.
 
-use crate::datatypes::BlockPartition;
+use crate::datatypes::{BlockPartition, Elem};
 use crate::topology::skips::validate;
 use crate::transport::Endpoint;
 
@@ -22,27 +30,44 @@ use super::exec::CollectiveError;
 
 /// One collected entry: a source rank's block for some destination.
 #[derive(Debug, Clone, PartialEq)]
-struct Entry {
+struct Entry<T: Elem> {
     source: usize,
-    data: Vec<f32>,
+    data: Vec<T>,
 }
 
-/// Frame a slot run into a flat f32 payload:
+/// Frame a slot run into a flat payload:
 /// `[num_entries, (source, len, data…)*…]` per slot, slots in run order.
-/// Exact for the integers involved (all < 2^24).
-fn pack(slots: &[Vec<Entry>]) -> Vec<f32> {
+/// Header values are exact in every dtype (see module docs).
+#[cfg(test)]
+fn pack<T: Elem>(slots: &[Vec<Entry<T>>]) -> Vec<T> {
     let mut out = Vec::new();
     pack_into(&mut out, slots);
     out
 }
 
+/// Push one frame-header value, asserting it survives the dtype's
+/// integer round-trip. Float dtypes lose exactness past 2^24 (f32) /
+/// 2^53 (f64); a header that rounds would silently mis-frame the whole
+/// payload downstream, so refuse loudly instead. (Entry lengths that
+/// large mean ≥ 64 MiB blocks — far past any bench here — and integer
+/// dtypes are always exact.)
+fn push_header<T: Elem>(out: &mut Vec<T>, v: usize) {
+    let h = T::from_usize(v);
+    assert!(
+        h.to_usize() == v,
+        "all-to-all frame header {v} is not exactly representable in {:?}",
+        T::DTYPE
+    );
+    out.push(h);
+}
+
 /// [`pack`] into a caller-provided (pooled) buffer instead of allocating.
-fn pack_into(out: &mut Vec<f32>, slots: &[Vec<Entry>]) {
+fn pack_into<T: Elem>(out: &mut Vec<T>, slots: &[Vec<Entry<T>>]) {
     for slot in slots {
-        out.push(slot.len() as f32);
+        push_header(out, slot.len());
         for e in slot {
-            out.push(e.source as f32);
-            out.push(e.data.len() as f32);
+            push_header(out, e.source);
+            push_header(out, e.data.len());
             out.extend_from_slice(&e.data);
         }
     }
@@ -50,7 +75,7 @@ fn pack_into(out: &mut Vec<f32>, slots: &[Vec<Entry>]) {
 
 /// Exact element count [`pack_into`] will produce for `slots` — computed
 /// up front so the pooled buffer is acquired at full size (no regrow).
-fn packed_len(slots: &[Vec<Entry>]) -> usize {
+fn packed_len<T: Elem>(slots: &[Vec<Entry<T>>]) -> usize {
     slots
         .iter()
         .map(|slot| 1 + slot.iter().map(|e| 2 + e.data.len()).sum::<usize>())
@@ -58,7 +83,12 @@ fn packed_len(slots: &[Vec<Entry>]) -> usize {
 }
 
 /// Inverse of [`pack`] for `n_slots` slots.
-fn unpack(payload: &[f32], n_slots: usize, rank: usize, round: usize) -> Result<Vec<Vec<Entry>>, CollectiveError> {
+fn unpack<T: Elem>(
+    payload: &[T],
+    n_slots: usize,
+    rank: usize,
+    round: usize,
+) -> Result<Vec<Vec<Entry<T>>>, CollectiveError> {
     let mut slots = Vec::with_capacity(n_slots);
     let mut i = 0usize;
     let bad = |got: usize| CollectiveError::BadPayload { rank, got, want: 0, round };
@@ -66,15 +96,15 @@ fn unpack(payload: &[f32], n_slots: usize, rank: usize, round: usize) -> Result<
         if i >= payload.len() {
             return Err(bad(payload.len()));
         }
-        let n = payload[i] as usize;
+        let n = payload[i].to_usize();
         i += 1;
         let mut slot = Vec::with_capacity(n);
         for _ in 0..n {
             if i + 2 > payload.len() {
                 return Err(bad(payload.len()));
             }
-            let source = payload[i] as usize;
-            let len = payload[i + 1] as usize;
+            let source = payload[i].to_usize();
+            let len = payload[i + 1].to_usize();
             i += 2;
             if i + len > payload.len() {
                 return Err(bad(payload.len()));
@@ -92,13 +122,13 @@ fn unpack(payload: &[f32], n_slots: usize, rank: usize, round: usize) -> Result<
 /// same layout (block `g` came from rank `g`).
 ///
 /// `skips` must be a valid sequence (e.g. `SkipScheme::HalvingUp`).
-pub fn alltoall_rank(
-    ep: &mut Endpoint,
+pub fn alltoall_rank<T: Elem>(
+    ep: &mut Endpoint<T>,
     part: &BlockPartition,
     skips: &[usize],
-    input: &[f32],
+    input: &[T],
     round_base: u64,
-) -> Result<Vec<f32>, CollectiveError> {
+) -> Result<Vec<T>, CollectiveError> {
     let p = part.p();
     let r = ep.rank;
     validate(p, skips).expect("invalid skip sequence");
@@ -107,7 +137,7 @@ pub fn alltoall_rank(
     }
     // slots[i] = collected entries destined for rank (r + i) mod p
     // (distance space, like the paper's R[i]).
-    let mut slots: Vec<Vec<Entry>> = (0..p)
+    let mut slots: Vec<Vec<Entry<T>>> = (0..p)
         .map(|i| {
             let dest = (r + i) % p;
             vec![Entry { source: r, data: input[part.range(dest)].to_vec() }]
@@ -139,7 +169,7 @@ pub fn alltoall_rank(
     // slots[0] now holds every rank's block for destination r; scatter the
     // entries into rank order. Output layout: block g = data from rank g.
     let out_part = receive_partition(part, r);
-    let mut out = vec![0.0f32; out_part.total()];
+    let mut out = vec![T::zero(); out_part.total()];
     let mut seen = vec![false; p];
     for e in &slots[0] {
         let range = out_part.range(e.source);
@@ -176,14 +206,14 @@ pub fn receive_partition(part: &BlockPartition, r: usize) -> BlockPartition {
 /// count matrix, as in MPI). The schedule is identical to [`alltoall_rank`]
 /// — the framed payloads already carry per-entry lengths, so irregularity
 /// costs nothing extra; only the delivery layout differs.
-pub fn alltoallv_rank(
-    ep: &mut Endpoint,
+pub fn alltoallv_rank<T: Elem>(
+    ep: &mut Endpoint<T>,
     send_counts: &[usize],
     recv_counts: &[usize],
     skips: &[usize],
-    input: &[f32],
+    input: &[T],
     round_base: u64,
-) -> Result<Vec<f32>, CollectiveError> {
+) -> Result<Vec<T>, CollectiveError> {
     let p = ep.p;
     let r = ep.rank;
     if send_counts.len() != p || recv_counts.len() != p {
@@ -198,7 +228,7 @@ pub fn alltoallv_rank(
             want: send_part.total(),
         });
     }
-    let mut slots: Vec<Vec<Entry>> = (0..p)
+    let mut slots: Vec<Vec<Entry<T>>> = (0..p)
         .map(|i| {
             let dest = (r + i) % p;
             vec![Entry { source: r, data: input[send_part.range(dest)].to_vec() }]
@@ -223,7 +253,7 @@ pub fn alltoallv_rank(
         prev = s;
     }
     let recv_part = BlockPartition::from_counts(recv_counts);
-    let mut out = vec![0.0f32; recv_part.total()];
+    let mut out = vec![T::zero(); recv_part.total()];
     let mut seen = vec![false; p];
     for e in &slots[0] {
         let range = recv_part.range(e.source);
@@ -273,7 +303,7 @@ pub fn alltoall_send_volume(part: &BlockPartition, skips: &[usize]) -> usize {
 mod tests {
     use super::*;
     use crate::topology::skips::SkipScheme;
-    use crate::transport::run_ranks;
+    use crate::transport::{run_ranks, run_ranks_typed};
     use std::sync::Arc;
 
     /// Reference all-to-all: out[r][g] = in[g][r-block].
@@ -308,6 +338,35 @@ mod tests {
                     let want = &inputs[g][part.range(r)];
                     assert_eq!(got, want, "p={p} r={r} g={g}");
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn alltoall_transpose_in_i64_is_exact() {
+        // Same transpose over an integer network — headers and payloads
+        // share the i64 dtype; values exceed 2^24 to prove the framing is
+        // not float-limited.
+        let p = 5usize;
+        let block = 2;
+        let part = BlockPartition::uniform(p, block);
+        let base = 1i64 << 40;
+        let inputs: Vec<Vec<i64>> = (0..p)
+            .map(|r| (0..part.total()).map(|j| base + (r as i64) * 1000 + j as i64).collect())
+            .collect();
+        let skips = Arc::new(SkipScheme::HalvingUp.skips(p).unwrap());
+        let part2 = Arc::new(part.clone());
+        let inputs2 = Arc::new(inputs.clone());
+        let outs = run_ranks_typed::<i64, _, _>(p, move |rank, ep| {
+            alltoall_rank(ep, &part2, &skips, &inputs2[rank], 0).unwrap()
+        });
+        for r in 0..p {
+            for g in 0..p {
+                assert_eq!(
+                    &outs[r][g * block..(g + 1) * block],
+                    &inputs[g][part.range(r)],
+                    "p={p} r={r} g={g}"
+                );
             }
         }
     }

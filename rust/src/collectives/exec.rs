@@ -1,5 +1,5 @@
 //! Schedule executor: run any [`Schedule`] with real data over the thread
-//! transport.
+//! transport, generic over the element type.
 //!
 //! Each rank keeps its working vector in **global layout** (block `g` lives
 //! at the partition offset of `g`, for every rank). A circular block range
@@ -7,6 +7,15 @@
 //! into the outgoing message and receives *scatter/combine* them back —
 //! no rotated copy of the input is ever made (cf. paper §3 on avoiding
 //! copies / MPI datatypes).
+//!
+//! # Element types
+//!
+//! [`execute_rank`] is generic over `T:`[`Elem`]: the endpoint, operator
+//! and working vector must agree on one dtype, enforced at compile time.
+//! The f32 drivers ([`run_schedule_threads`], [`run_schedule_threads_tiered`],
+//! [`run_schedule_threads_with_counters`]) keep their original signatures;
+//! the `_typed` variants run any dtype. Copy-volume accounting is credited
+//! at `size_of::<T>()` bytes per element throughout.
 //!
 //! # The three-tier copy discipline (transport docs have the full story)
 //!
@@ -33,7 +42,8 @@
 //!
 //! Combines dispatch through the monomorphized [`Kernel`] when the
 //! operator exposes one ([`ReduceOp::kernel`], the four native ops): one
-//! enum branch per payload instead of a virtual call per slice.
+//! enum branch per payload instead of a virtual call per slice, with the
+//! kernel's generic methods monomorphized per `(op, dtype)`.
 //!
 //! # Commutativity interaction
 //!
@@ -44,11 +54,12 @@
 //! sequence, so the schedule's commutativity assumption (⊕ applied in
 //! skip order, paper §2.1) is exactly as strong on either tier, and the
 //! two produce bit-identical results (asserted by the oracle tests in
-//! `rust/tests/rendezvous.rs`).
+//! `rust/tests/rendezvous.rs` for f32, and in exact integer arithmetic
+//! for every schedule generator in `rust/tests/dtype_oracles.rs`).
 
 use std::ops::Range;
 
-use crate::datatypes::BlockPartition;
+use crate::datatypes::{BlockPartition, Elem};
 use crate::ops::ReduceOp;
 use crate::schedule::{RecvAction, Schedule};
 use crate::transport::{Counters, Endpoint, Payload, SendSlices, TransportError};
@@ -59,7 +70,7 @@ use crate::transport::{Counters, Endpoint, Payload, SendSlices, TransportError};
 ///
 /// `r` must be in bounds of the allocation `base` points into, and no
 /// `&mut` spanning `r` may be created while the view lives.
-unsafe fn view<'v>(base: *const f32, r: &Range<usize>) -> &'v [f32] {
+unsafe fn view<'v, T>(base: *const T, r: &Range<usize>) -> &'v [T] {
     std::slice::from_raw_parts(base.add(r.start), r.len())
 }
 
@@ -69,7 +80,7 @@ unsafe fn view<'v>(base: *const f32, r: &Range<usize>) -> &'v [f32] {
 ///
 /// `r` must be in bounds, and nothing else — local or a rendezvous peer —
 /// may access `base[r]` while the view lives.
-unsafe fn view_mut<'v>(base: *mut f32, r: &Range<usize>) -> &'v mut [f32] {
+unsafe fn view_mut<'v, T>(base: *mut T, r: &Range<usize>) -> &'v mut [T] {
     std::slice::from_raw_parts_mut(base.add(r.start), r.len())
 }
 
@@ -82,6 +93,12 @@ pub enum CollectiveError {
     BadBuffer { rank: usize, got: usize, want: usize },
     #[error("rank {rank}: received {got} elements, expected {want} (round {round})")]
     BadPayload { rank: usize, got: usize, want: usize, round: usize },
+    #[error(
+        "rank {rank}: unknown op {name:?} for dtype {dtype} on this backend \
+         (native ops: sum|prod|min|max for every dtype; the pjrt backend \
+         supports f32 only)"
+    )]
+    UnknownOp { rank: usize, name: String, dtype: &'static str },
 }
 
 /// Execute `schedule` for this endpoint's rank.
@@ -102,12 +119,12 @@ pub enum CollectiveError {
 /// tier. Payload lengths are validated here, once
 /// per round, before any kernel call — the kernels themselves stay on the
 /// unchecked fast path (`ReduceOp` docs).
-pub fn execute_rank(
-    ep: &mut Endpoint,
+pub fn execute_rank<T: Elem>(
+    ep: &mut Endpoint<T>,
     schedule: &Schedule,
     part: &BlockPartition,
-    op: &dyn ReduceOp,
-    buf: &mut [f32],
+    op: &dyn ReduceOp<T>,
+    buf: &mut [T],
     round_base: u64,
 ) -> Result<u64, CollectiveError> {
     let p = schedule.p;
@@ -157,7 +174,7 @@ pub fn execute_rank(
                 // transport copies out of the views inside the sendrecv
                 // call, before any recv-range write happens.
                 let head = unsafe { view(base, &a) };
-                let tail: &[f32] = match &rest {
+                let tail: &[T] = match &rest {
                     Some(rest) => unsafe { view(base, rest) },
                     None => &[],
                 };
@@ -194,7 +211,7 @@ pub fn execute_rank(
             // Resolve the payload to (head, tail) source slices. Both
             // sides derive the split from the same partition and block
             // range, so a rendezvous publish lines up exactly.
-            let (src_head, src_tail): (&[f32], &[f32]) = match &payload {
+            let (src_head, src_tail): (&[T], &[T]) = match &payload {
                 Payload::Copied(v) => (&v[..split], &v[split..]),
                 // SAFETY: sender blocks in finish_round until our ack
                 // below; the slices stay valid and unwritten meanwhile.
@@ -211,7 +228,8 @@ pub fn execute_rank(
             let dst_tail = rest.as_ref().map(|rest| unsafe { view_mut(base, rest) });
             match rv.action {
                 RecvAction::Combine => match kern {
-                    // Fused single pass, monomorphized — the hot path.
+                    // Fused single pass, monomorphized per (op, dtype) —
+                    // the hot path.
                     Some(kern) => kern.combine_ranges(dst_head, dst_tail, src_head, src_tail),
                     None => {
                         op.combine(dst_head, src_head);
@@ -224,7 +242,7 @@ pub fn execute_rank(
                     // The one unavoidable copy of allgather-style rounds;
                     // credit it to the copy-volume counter (rendezvous
                     // saves the *gather* copy, not this scatter).
-                    ep.counters.bytes_copied += 4 * want as u64;
+                    ep.counters.bytes_copied += (std::mem::size_of::<T>() * want) as u64;
                     dst_head.copy_from_slice(src_head);
                     if let Some(dst_tail) = dst_tail {
                         dst_tail.copy_from_slice(src_tail);
@@ -244,15 +262,26 @@ pub fn execute_rank(
 }
 
 /// Convenience driver for tests/benches: run `schedule` over `p` threads
-/// with per-rank input vectors, returning the final per-rank buffers.
-/// Runs with the rendezvous tier enabled (the default hot path).
+/// with per-rank f32 input vectors, returning the final per-rank buffers.
+/// Runs with the rendezvous tier enabled (the default hot path). See
+/// [`run_schedule_threads_typed`] for other dtypes.
 pub fn run_schedule_threads(
     schedule: &Schedule,
     part: &BlockPartition,
     op: std::sync::Arc<dyn ReduceOp>,
     inputs: Vec<Vec<f32>>,
 ) -> Vec<Vec<f32>> {
-    run_schedule_threads_tiered(schedule, part, op, inputs, true)
+    run_schedule_threads_typed::<f32>(schedule, part, op, inputs)
+}
+
+/// [`run_schedule_threads`] over any element type.
+pub fn run_schedule_threads_typed<T: Elem>(
+    schedule: &Schedule,
+    part: &BlockPartition,
+    op: std::sync::Arc<dyn ReduceOp<T>>,
+    inputs: Vec<Vec<T>>,
+) -> Vec<Vec<T>> {
+    run_schedule_threads_tiered_typed::<T>(schedule, part, op, inputs, true)
         .into_iter()
         .map(|(buf, _)| buf)
         .collect()
@@ -270,13 +299,24 @@ pub fn run_schedule_threads_tiered(
     inputs: Vec<Vec<f32>>,
     rendezvous: bool,
 ) -> Vec<(Vec<f32>, Counters)> {
-    use crate::transport::run_ranks_inputs;
+    run_schedule_threads_tiered_typed::<f32>(schedule, part, op, inputs, rendezvous)
+}
+
+/// [`run_schedule_threads_tiered`] over any element type.
+pub fn run_schedule_threads_tiered_typed<T: Elem>(
+    schedule: &Schedule,
+    part: &BlockPartition,
+    op: std::sync::Arc<dyn ReduceOp<T>>,
+    inputs: Vec<Vec<T>>,
+    rendezvous: bool,
+) -> Vec<(Vec<T>, Counters)> {
+    use crate::transport::run_ranks_inputs_typed;
     assert_eq!(inputs.len(), schedule.p);
     let schedule = std::sync::Arc::new(schedule.clone());
     let part = std::sync::Arc::new(part.clone());
     // Each rank's input travels by move through its spawn closure — no
     // shared hand-off structure, no lock.
-    run_ranks_inputs(inputs, move |rank, ep, mut buf: Vec<f32>| {
+    run_ranks_inputs_typed::<T, Vec<T>, (Vec<T>, Counters), _>(inputs, move |rank, ep, mut buf| {
         ep.rendezvous = rendezvous && crate::transport::rendezvous_env_enabled();
         if ep.rendezvous {
             // Test/bench driver: pin the small-payload threshold to 0 so
@@ -355,6 +395,29 @@ mod tests {
             let inputs = int_inputs(p, part.total(), 100 + p as u64);
             let want = oracle_sum(&inputs);
             let out = run_schedule_threads(&sched, &part, Arc::new(SumOp), inputs);
+            for (r, buf) in out.iter().enumerate() {
+                assert_eq!(buf, &want, "p={p} rank {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn typed_allreduce_matches_wrapping_oracle_i64() {
+        use crate::datatypes::elem::int_vec;
+        for p in [2usize, 5, 8] {
+            let part = BlockPartition::regular(p, 3 * p + 2);
+            let skips = SkipScheme::HalvingUp.skips(p).unwrap();
+            let sched = allreduce_schedule(p, &skips);
+            let mut rng = SplitMix64::new(400 + p as u64);
+            let inputs: Vec<Vec<i64>> =
+                (0..p).map(|_| int_vec(&mut rng, part.total(), -8, 9)).collect();
+            let mut want = vec![0i64; part.total()];
+            for v in &inputs {
+                for (a, b) in want.iter_mut().zip(v) {
+                    *a = a.wrapping_add(*b);
+                }
+            }
+            let out = run_schedule_threads_typed::<i64>(&sched, &part, Arc::new(SumOp), inputs);
             for (r, buf) in out.iter().enumerate() {
                 assert_eq!(buf, &want, "p={p} rank {r}");
             }

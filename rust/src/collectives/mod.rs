@@ -11,6 +11,7 @@ pub mod symbolic;
 
 pub use exec::{
     execute_rank, run_schedule_threads, run_schedule_threads_tiered,
+    run_schedule_threads_tiered_typed, run_schedule_threads_typed,
     run_schedule_threads_with_counters, CollectiveError,
 };
 pub use generators::{allgather_schedule, allreduce_schedule, reduce_scatter_schedule};
@@ -43,6 +44,13 @@ pub enum Algorithm {
 }
 
 impl Algorithm {
+    /// Grammar of every name [`Algorithm::parse`] accepts — surfaced by
+    /// CLI/config diagnostics so an unknown value lists its alternatives.
+    pub const NAMES_HELP: &'static str = "reduce-scatter|rs[:scheme], allreduce|ar[:scheme], \
+         allgather|ag[:scheme], ring-rs, ring-allreduce, ring-ag, rec-halving-rs, \
+         rec-doubling-allreduce, rabenseifner, binomial-reduce[:root], \
+         binomial-bcast[:root], binomial-allreduce, bruck-ag";
+
     /// Parse a CLI/config name. Circulant variants accept an optional
     /// `:scheme` suffix (e.g. `allreduce:pow2`, `reduce-scatter:sqrt`);
     /// rooted binomial variants accept an optional `:root` suffix

@@ -160,12 +160,26 @@ impl Config {
     }
 
     /// The collective algorithm (`run.algorithm`, default circulant
-    /// allreduce with halving-up skips).
+    /// allreduce with halving-up skips). Unknown names report the full
+    /// grammar of valid values.
     pub fn algorithm(&self) -> Result<Algorithm, ConfigError> {
         let name = self.get_str("run.algorithm", "allreduce");
         Algorithm::parse(name).ok_or_else(|| ConfigError::Invalid {
             key: "run.algorithm".into(),
-            msg: format!("unknown algorithm {name:?}"),
+            msg: format!("unknown algorithm {name:?} (valid: {})", Algorithm::NAMES_HELP),
+        })
+    }
+
+    /// The element type (`run.dtype`, default f32). Unknown names report
+    /// the valid set.
+    pub fn dtype(&self) -> Result<crate::datatypes::DType, ConfigError> {
+        let name = self.get_str("run.dtype", "f32");
+        crate::datatypes::DType::parse(name).ok_or_else(|| ConfigError::Invalid {
+            key: "run.dtype".into(),
+            msg: format!(
+                "unknown dtype {name:?} (valid: {})",
+                crate::datatypes::DType::NAMES_HELP
+            ),
         })
     }
 
@@ -254,5 +268,23 @@ mod tests {
     fn underscores_in_integers() {
         let cfg = Config::parse("m = 1_048_576").unwrap();
         assert_eq!(cfg.get_usize("m", 0).unwrap(), 1 << 20);
+    }
+
+    #[test]
+    fn dtype_key_parses_and_defaults() {
+        let cfg = Config::new();
+        assert_eq!(cfg.dtype().unwrap(), crate::datatypes::DType::F32);
+        let cfg = Config::parse("run.dtype = \"i64\"").unwrap();
+        assert_eq!(cfg.dtype().unwrap(), crate::datatypes::DType::I64);
+    }
+
+    #[test]
+    fn unknown_values_enumerate_the_valid_set() {
+        let cfg = Config::parse("run.dtype = \"f16\"").unwrap();
+        let err = cfg.dtype().unwrap_err().to_string();
+        assert!(err.contains("f32|f64|i32|i64|u64"), "{err}");
+        let cfg = Config::parse("run.algorithm = \"nope\"").unwrap();
+        let err = cfg.algorithm().unwrap_err().to_string();
+        assert!(err.contains("ring-allreduce") && err.contains("rabenseifner"), "{err}");
     }
 }

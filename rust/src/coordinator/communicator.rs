@@ -1,10 +1,15 @@
-//! The MPI-like communicator: the library's user-facing API.
+//! The MPI-like communicator: the library's user-facing API, generic over
+//! the element type.
 //!
-//! A [`Communicator`] wraps one rank's endpoint plus the collective
+//! A [`Communicator<T>`] wraps one rank's endpoint plus the collective
 //! configuration (skip scheme, ⊕ backend) and exposes the operations the
 //! paper targets: `MPI_Reduce_scatter_block`, `MPI_Reduce_scatter`,
 //! `MPI_Allreduce` (§3), plus the §4 derivations (`allgather`, `alltoall`,
-//! `reduce`, `bcast`) and a `barrier`.
+//! `reduce`, `bcast`) and a `barrier`. The element type defaults to `f32`
+//! (the pre-dtype API); [`Launcher::run_typed`] spawns communicators over
+//! any [`Elem`] dtype — `run.dtype` on the CLI. Native ops serve every
+//! dtype; the PJRT backend is f32-only (its AOT kernels are compiled for
+//! f32) and reports unsupported dtypes as [`CollectiveError::UnknownOp`].
 //!
 //! Round tags advance monotonically per communicator, so collectives can
 //! be issued back-to-back without cross-talk (the transport stashes
@@ -20,19 +25,18 @@
 //! default (see the three-tier copy discipline in `crate::transport`):
 //! rounds whose send/recv block ranges are disjoint and whose payloads
 //! clear the small-message threshold
-//! (`transport::DEFAULT_RENDEZVOUS_MIN_ELEMS`, tunable via
+//! (`transport::DEFAULT_RENDEZVOUS_MIN_ELEMS` elements, tunable via
 //! `CCOLL_RENDEZVOUS_MIN_ELEMS`) move payloads without any copy, and the
 //! rest fall back to the pooled tier automatically. Opt out per
 //! communicator with [`Communicator::set_rendezvous`], per launcher with
 //! [`Launcher::rendezvous`], or process-wide with `CCOLL_NO_RENDEZVOUS`.
-
 
 use crate::collectives::alltoall::{alltoall_rank, receive_partition};
 use crate::collectives::exec::{execute_rank, CollectiveError};
 use crate::collectives::generators::{
     allgather_schedule, allreduce_schedule, reduce_scatter_schedule,
 };
-use crate::datatypes::BlockPartition;
+use crate::datatypes::{BlockPartition, Elem};
 use crate::ops::ReduceOp;
 use crate::topology::skips::SkipScheme;
 use crate::transport::{Counters, Endpoint};
@@ -40,36 +44,37 @@ use crate::transport::{Counters, Endpoint};
 /// Which ⊕ implementation executes the γ term.
 #[derive(Clone)]
 pub enum OpBackend {
-    /// Native Rust loops (`crate::ops::native`).
+    /// Native Rust loops (`crate::ops::native`) — every dtype.
     Native,
-    /// The AOT Pallas kernel through the PJRT compute service.
+    /// The AOT Pallas kernel through the PJRT compute service — f32 only.
     Pjrt(crate::runtime::ServiceHandle),
 }
 
 impl OpBackend {
-    /// Resolve an operator name to a boxed ⊕ for this backend.
-    pub fn resolve(&self, op: &str) -> Option<Box<dyn ReduceOp>> {
+    /// Resolve an operator name to a boxed ⊕ for this backend and dtype.
+    /// Returns `None` for unknown names and for `(backend, dtype)` pairs
+    /// the backend cannot serve (PJRT × non-f32).
+    pub fn resolve<T: Elem>(&self, op: &str) -> Option<Box<dyn ReduceOp<T>>> {
         match self {
-            OpBackend::Native => crate::ops::parse_native(op),
-            OpBackend::Pjrt(handle) => crate::runtime::ServiceOp::new(handle.clone(), op)
-                .map(|o| Box::new(o) as Box<dyn ReduceOp>),
+            OpBackend::Native => crate::ops::parse_native_typed::<T>(op),
+            OpBackend::Pjrt(handle) => T::service_op(handle.clone(), op),
         }
     }
 }
 
-/// One rank's communicator.
-pub struct Communicator {
-    ep: Endpoint,
+/// One rank's communicator over element type `T` (default `f32`).
+pub struct Communicator<T: Elem = f32> {
+    ep: Endpoint<T>,
     scheme: SkipScheme,
     backend: OpBackend,
     tag: u64,
     /// Persistent staging buffer for out-of-place collectives; capacity is
     /// retained across calls so steady-state traffic never allocates.
-    work: Vec<f32>,
+    work: Vec<T>,
 }
 
-impl Communicator {
-    pub fn new(mut ep: Endpoint, scheme: SkipScheme, backend: OpBackend) -> Self {
+impl<T: Elem> Communicator<T> {
+    pub fn new(mut ep: Endpoint<T>, scheme: SkipScheme, backend: OpBackend) -> Self {
         // Default to the zero-copy hot path; the executor still falls back
         // to the pooled tier per round whenever the schedule's send/recv
         // ranges overlap (`CCOLL_NO_RENDEZVOUS=1` disables globally).
@@ -84,7 +89,7 @@ impl Communicator {
     }
 
     /// Stage `src` into the working buffer (reusing its capacity).
-    fn stage(&mut self, src: &[f32]) {
+    fn stage(&mut self, src: &[T]) {
         self.work.clear();
         self.work.extend_from_slice(src);
     }
@@ -92,7 +97,7 @@ impl Communicator {
     /// Resize the working buffer to `n` zeros (reusing its capacity).
     fn stage_zeros(&mut self, n: usize) {
         self.work.clear();
-        self.work.resize(n, 0.0);
+        self.work.resize(n, T::zero());
     }
 
     pub fn rank(&self) -> usize {
@@ -112,11 +117,11 @@ impl Communicator {
         self.scheme.skips(self.size()).expect("valid skip scheme")
     }
 
-    fn op(&self, op: &str) -> Result<Box<dyn ReduceOp>, CollectiveError> {
-        self.backend.resolve(op).ok_or(CollectiveError::BadBuffer {
+    fn op(&self, op: &str) -> Result<Box<dyn ReduceOp<T>>, CollectiveError> {
+        self.backend.resolve::<T>(op).ok_or_else(|| CollectiveError::UnknownOp {
             rank: self.ep.rank,
-            got: 0,
-            want: 0,
+            name: op.to_string(),
+            dtype: T::DTYPE.name(),
         })
     }
 
@@ -130,8 +135,8 @@ impl Communicator {
         &mut self,
         sched: &crate::schedule::Schedule,
         part: &BlockPartition,
-        op: &dyn ReduceOp,
-        buf: &mut [f32],
+        op: &dyn ReduceOp<T>,
+        buf: &mut [T],
     ) -> Result<(), CollectiveError> {
         let base = self.tag;
         self.tag += sched.rounds.len() as u64;
@@ -147,7 +152,7 @@ impl Communicator {
         &mut self,
         sched: &crate::schedule::Schedule,
         part: &BlockPartition,
-        op: &dyn ReduceOp,
+        op: &dyn ReduceOp<T>,
     ) -> Result<(), CollectiveError> {
         let mut work = std::mem::take(&mut self.work);
         let res = self.run_exec(sched, part, op, &mut work);
@@ -160,8 +165,8 @@ impl Communicator {
     /// the reduction. Algorithm 1 with this communicator's skip scheme.
     pub fn reduce_scatter_block(
         &mut self,
-        sendbuf: &[f32],
-        recvbuf: &mut [f32],
+        sendbuf: &[T],
+        recvbuf: &mut [T],
         op: &str,
     ) -> Result<(), CollectiveError> {
         let p = self.size();
@@ -186,9 +191,9 @@ impl Communicator {
     /// `recvbuf` must have `counts[rank]` elements.
     pub fn reduce_scatter(
         &mut self,
-        sendbuf: &[f32],
+        sendbuf: &[T],
         counts: &[usize],
-        recvbuf: &mut [f32],
+        recvbuf: &mut [T],
         op: &str,
     ) -> Result<(), CollectiveError> {
         let p = self.size();
@@ -214,7 +219,7 @@ impl Communicator {
     /// MPI_Allreduce (in place): Algorithm 2. `buf` is both input and
     /// output (`m` elements, any `m ≥ 0`; blocks are split as evenly as
     /// possible).
-    pub fn allreduce(&mut self, buf: &mut [f32], op: &str) -> Result<(), CollectiveError> {
+    pub fn allreduce(&mut self, buf: &mut [T], op: &str) -> Result<(), CollectiveError> {
         let p = self.size();
         let part = BlockPartition::regular(p, buf.len());
         let sched = allreduce_schedule(p, &self.skips());
@@ -225,7 +230,7 @@ impl Communicator {
 
     /// MPI_Allgather: `sendblock` (this rank's contribution) is gathered
     /// into `recvbuf` (`p · sendblock.len()` elements, rank order).
-    pub fn allgather(&mut self, sendblock: &[f32], recvbuf: &mut [f32]) -> Result<(), CollectiveError> {
+    pub fn allgather(&mut self, sendblock: &[T], recvbuf: &mut [T]) -> Result<(), CollectiveError> {
         let p = self.size();
         let b = sendblock.len();
         if recvbuf.len() != p * b {
@@ -247,7 +252,7 @@ impl Communicator {
     /// MPI_Alltoall (regular): block `g` of `sendbuf` goes to rank `g`;
     /// returns the received row (block `g` from rank `g`). §4's
     /// concatenation reduce-scatter in `⌈log2 p⌉` rounds.
-    pub fn alltoall(&mut self, sendbuf: &[f32], block: usize) -> Result<Vec<f32>, CollectiveError> {
+    pub fn alltoall(&mut self, sendbuf: &[T], block: usize) -> Result<Vec<T>, CollectiveError> {
         let p = self.size();
         let part = BlockPartition::uniform(p, block);
         let skips = self.skips();
@@ -264,10 +269,10 @@ impl Communicator {
     /// value concatenates `recv_counts[g]` elements from each rank `g`.
     pub fn alltoallv(
         &mut self,
-        sendbuf: &[f32],
+        sendbuf: &[T],
         send_counts: &[usize],
         recv_counts: &[usize],
-    ) -> Result<Vec<f32>, CollectiveError> {
+    ) -> Result<Vec<T>, CollectiveError> {
         let skips = self.skips();
         // Reserve the tag window before executing (see run_exec).
         let base = self.tag;
@@ -285,7 +290,7 @@ impl Communicator {
 
     /// MPI_Reduce: full vector reduced to `root` (Corollary 3's degenerate
     /// single-block partition; attractive for small `m`).
-    pub fn reduce(&mut self, buf: &mut [f32], root: usize, op: &str) -> Result<(), CollectiveError> {
+    pub fn reduce(&mut self, buf: &mut [T], root: usize, op: &str) -> Result<(), CollectiveError> {
         let p = self.size();
         let part = BlockPartition::single_block(p, buf.len(), root);
         let sched = reduce_scatter_schedule(p, &self.skips());
@@ -296,7 +301,7 @@ impl Communicator {
 
     /// MPI_Bcast from `root` (mirrored allgather on the degenerate
     /// partition).
-    pub fn bcast(&mut self, buf: &mut [f32], root: usize) -> Result<(), CollectiveError> {
+    pub fn bcast(&mut self, buf: &mut [T], root: usize) -> Result<(), CollectiveError> {
         let p = self.size();
         let part = BlockPartition::single_block(p, buf.len(), root);
         let sched = allgather_schedule(p, &self.skips());
@@ -310,8 +315,8 @@ impl Communicator {
     /// (§4's rooted specialization), `⌈log2 p⌉` rounds.
     pub fn scatter(
         &mut self,
-        sendbuf: Option<&[f32]>,
-        recvbuf: &mut [f32],
+        sendbuf: Option<&[T]>,
+        recvbuf: &mut [T],
         root: usize,
     ) -> Result<(), CollectiveError> {
         let p = self.size();
@@ -345,8 +350,8 @@ impl Communicator {
     /// rank order into `recvbuf` (`p·b`, significant at `root` only).
     pub fn gather(
         &mut self,
-        sendblock: &[f32],
-        recvbuf: Option<&mut [f32]>,
+        sendblock: &[T],
+        recvbuf: Option<&mut [T]>,
         root: usize,
     ) -> Result<(), CollectiveError> {
         let p = self.size();
@@ -378,7 +383,7 @@ impl Communicator {
 
     /// Barrier: a zero-payload allreduce round trip.
     pub fn barrier(&mut self) -> Result<(), CollectiveError> {
-        let mut empty = [0.0f32; 0];
+        let mut empty: [T; 0] = [];
         // p blocks of 0 elements still walk the full schedule (all payloads
         // empty), synchronizing every rank with every other transitively.
         self.allreduce(&mut empty, "sum")
@@ -390,7 +395,7 @@ impl Communicator {
         sched: &crate::schedule::Schedule,
         part: &BlockPartition,
         op: &str,
-        buf: &mut [f32],
+        buf: &mut [T],
     ) -> Result<(), CollectiveError> {
         let op = self.op(op)?;
         self.run_exec(sched, part, op.as_ref(), buf)?;
@@ -429,24 +434,35 @@ impl Launcher {
         self
     }
 
-    /// Run `f(comm)` on every rank; returns per-rank results in rank order.
+    /// Run `f(comm)` on every rank over **f32** communicators; returns
+    /// per-rank results in rank order. See [`run_typed`](Launcher::run_typed)
+    /// for other dtypes.
     pub fn run<T, F>(&self, f: F) -> Vec<T>
     where
         T: Send + 'static,
         F: Fn(Communicator) -> T + Send + Sync + 'static,
     {
+        self.run_typed::<f32, T, F>(f)
+    }
+
+    /// Run `f(comm)` on every rank over communicators of element type `E`.
+    pub fn run_typed<E: Elem, T, F>(&self, f: F) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: Fn(Communicator<E>) -> T + Send + Sync + 'static,
+    {
         let scheme = self.scheme.clone();
         let backend = self.backend.clone();
         let rendezvous = self.rendezvous;
-        crate::transport::run_ranks(self.p, move |_rank, ep| {
+        crate::transport::run_ranks_typed::<E, T, _>(self.p, move |_rank, ep| {
             // run_ranks hands us &mut Endpoint; move a fresh Communicator
             // around an owned endpoint instead.
             let owned = std::mem::replace(
                 ep,
                 // placeholder endpoint; never used after the swap
-                crate::transport::network(1).pop().unwrap(),
+                crate::transport::network_typed::<E>(1).pop().unwrap(),
             );
-            let mut comm = Communicator::new(owned, scheme.clone(), backend.clone());
+            let mut comm = Communicator::<E>::new(owned, scheme.clone(), backend.clone());
             comm.set_rendezvous(rendezvous);
             f(comm)
         })
@@ -494,6 +510,46 @@ mod tests {
             }
             assert_eq!(*mx, (p - 1) as f32);
         }
+    }
+
+    #[test]
+    fn typed_launcher_runs_i64_and_u64_communicators() {
+        let p = 4;
+        let m = 9;
+        let out = Launcher::new(p).run_typed::<i64, _, _>(move |mut comm| {
+            let mut buf: Vec<i64> = (0..m).map(|j| comm.rank() as i64 - j).collect();
+            comm.allreduce(&mut buf, "sum").unwrap();
+            buf
+        });
+        for buf in &out {
+            for j in 0..m as usize {
+                let want: i64 = (0..p as i64).map(|r| r - j as i64).sum();
+                assert_eq!(buf[j], want);
+            }
+        }
+        let out = Launcher::new(p).run_typed::<u64, _, _>(move |mut comm| {
+            let mut buf: Vec<u64> = vec![comm.rank() as u64 + 1; 5];
+            comm.allreduce(&mut buf, "prod").unwrap();
+            buf
+        });
+        let want: u64 = (1..=p as u64).product();
+        for buf in &out {
+            assert!(buf.iter().all(|&x| x == want));
+        }
+    }
+
+    #[test]
+    fn unknown_op_is_a_typed_error() {
+        let out = Launcher::new(2).run(move |mut comm| {
+            let mut buf = vec![0.0f32; 4];
+            match comm.allreduce(&mut buf, "xor") {
+                Err(CollectiveError::UnknownOp { name, dtype, .. }) => {
+                    name == "xor" && dtype == "f32"
+                }
+                _ => false,
+            }
+        });
+        assert!(out.iter().all(|&ok| ok), "unknown op must surface as UnknownOp");
     }
 
     #[test]

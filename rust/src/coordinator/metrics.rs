@@ -11,6 +11,8 @@ use crate::util::table::Table;
 #[derive(Debug, Clone, Default)]
 pub struct RunMetrics {
     pub algorithm: String,
+    /// Element type the collective ran over (`run.dtype`).
+    pub dtype: String,
     pub p: usize,
     pub m: usize,
     pub wall_seconds: f64,
@@ -49,10 +51,11 @@ impl RunMetrics {
     pub fn summary_table(&self) -> Table {
         let mut t = Table::new(
             "run metrics",
-            &["algorithm", "p", "m", "rounds", "max elems/rank", "wall s", "elems/s"],
+            &["algorithm", "dtype", "p", "m", "rounds", "max elems/rank", "wall s", "elems/s"],
         );
         t.row(&[
             self.algorithm.clone(),
+            self.dtype.clone(),
             self.p.to_string(),
             self.m.to_string(),
             self.rounds().to_string(),
@@ -67,6 +70,7 @@ impl RunMetrics {
     pub fn to_json(&self) -> Json {
         let mut obj = BTreeMap::new();
         obj.insert("algorithm".into(), Json::Str(self.algorithm.clone()));
+        obj.insert("dtype".into(), Json::Str(self.dtype.clone()));
         obj.insert("p".into(), Json::Num(self.p as f64));
         obj.insert("m".into(), Json::Num(self.m as f64));
         obj.insert("wall_seconds".into(), Json::Num(self.wall_seconds));
@@ -86,6 +90,7 @@ mod tests {
     fn fake() -> RunMetrics {
         RunMetrics {
             algorithm: "test".into(),
+            dtype: "f32".into(),
             p: 2,
             m: 8,
             wall_seconds: 0.5,
@@ -123,6 +128,7 @@ mod tests {
     fn json_has_fields() {
         let j = fake().to_json();
         assert_eq!(j.req("p").as_usize(), Some(2));
+        assert_eq!(j.req("dtype").as_str(), Some("f32"));
         assert_eq!(j.req("per_rank_elems_sent").as_arr().unwrap().len(), 2);
     }
 }

@@ -1,0 +1,400 @@
+//! The scalar element subsystem: the [`Elem`] trait and the [`DType`]
+//! runtime tag.
+//!
+//! The paper's algorithms are datatype-agnostic — MPI_Reduce_scatter /
+//! MPI_Allreduce operate over arbitrary `(datatype, op)` pairs — and so is
+//! this reproduction: every layer of the hot path (kernels, transport,
+//! executor, communicator) is generic over `T: Elem`, with `f32` as the
+//! default type parameter so the original API keeps working unchanged.
+//!
+//! Why it matters beyond generality: float ⊕ is non-associative, so the
+//! commutative skip-order reduction the schedules rely on (paper §2.1)
+//! produces results that depend on the application order and can only be
+//! compared against an oracle with tolerances (or with carefully
+//! range-limited integer-valued floats). The integer dtypes here use
+//! **wrapping** arithmetic, which is exactly associative and commutative —
+//! giving bit-exact cross-tier and cross-algorithm oracles for every
+//! schedule generator (see `rust/tests/dtype_oracles.rs`).
+//!
+//! Supported dtypes: `f32`, `f64`, `i32`, `i64`, `u64`.
+
+use crate::util::rng::SplitMix64;
+
+/// Runtime tag for a supported element type (the `run.dtype` CLI key).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    F64,
+    I32,
+    I64,
+    U64,
+}
+
+impl DType {
+    /// Every supported dtype, in canonical order.
+    pub const ALL: [DType; 5] = [DType::F32, DType::F64, DType::I32, DType::I64, DType::U64];
+
+    /// Human-readable list of valid names (for CLI diagnostics).
+    pub const NAMES_HELP: &'static str = "f32|f64|i32|i64|u64";
+
+    /// Canonical name; round-trips through [`DType::parse`].
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::F64 => "f64",
+            DType::I32 => "i32",
+            DType::I64 => "i64",
+            DType::U64 => "u64",
+        }
+    }
+
+    /// Parse a CLI/config name.
+    pub fn parse(s: &str) -> Option<DType> {
+        match s {
+            "f32" => Some(DType::F32),
+            "f64" => Some(DType::F64),
+            "i32" => Some(DType::I32),
+            "i64" => Some(DType::I64),
+            "u64" => Some(DType::U64),
+            _ => None,
+        }
+    }
+
+    /// Element size in bytes (what the transport's copy-volume counters
+    /// and the rendezvous descriptors account in).
+    pub fn size_bytes(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::F64 | DType::I64 | DType::U64 => 8,
+        }
+    }
+
+    /// Unsigned dtype (test-data generators should avoid negative values)?
+    pub fn is_unsigned(self) -> bool {
+        matches!(self, DType::U64)
+    }
+}
+
+/// A scalar element the collectives can reduce: raw-bytes-copyable, with
+/// the four native ⊕ operations and their identities.
+///
+/// Integer implementations use **wrapping** add/mul, so every native ⊕ is
+/// exactly associative and commutative — reductions are bit-identical
+/// regardless of schedule, tier or association, which is what the exact
+/// cross-tier oracle tests lean on. Float implementations use IEEE
+/// arithmetic (`min`/`max` propagate the non-NaN operand).
+///
+/// `from_i64`/`from_usize`/`to_usize` exist for exact small-integer
+/// round-trips: deterministic test-vector generation and the framed
+/// all-to-all headers (values are small and non-negative by construction).
+pub trait Elem:
+    Copy + Send + Sync + PartialEq + PartialOrd + std::fmt::Debug + std::fmt::Display + Default + 'static
+{
+    /// The runtime tag of this type.
+    const DTYPE: DType;
+
+    fn add(a: Self, b: Self) -> Self;
+    fn mul(a: Self, b: Self) -> Self;
+    fn min(a: Self, b: Self) -> Self;
+    fn max(a: Self, b: Self) -> Self;
+
+    /// Identity of `add`.
+    fn zero() -> Self;
+    /// Identity of `mul`.
+    fn one() -> Self;
+    /// Identity of `min` (+∞ / MAX).
+    fn min_identity() -> Self;
+    /// Identity of `max` (−∞ / MIN).
+    fn max_identity() -> Self;
+
+    /// Exact conversion from a small integer (wraps for out-of-range
+    /// unsigned targets — deterministic, used only by test generators).
+    fn from_i64(v: i64) -> Self;
+    /// Exact conversion from a small non-negative integer (framing headers).
+    fn from_usize(v: usize) -> Self;
+    /// Inverse of [`from_usize`](Elem::from_usize) for valid headers.
+    fn to_usize(self) -> usize;
+
+    /// The PJRT compute-service operator for this dtype, if the AOT Pallas
+    /// kernels support it. The artifacts are compiled for `f32` only, so
+    /// every other dtype returns `None` and the CLI reports the backend as
+    /// unsupported instead of failing opaquely.
+    fn service_op(
+        handle: crate::runtime::ServiceHandle,
+        op: &str,
+    ) -> Option<Box<dyn crate::ops::ReduceOp<Self>>> {
+        let _ = (handle, op);
+        None
+    }
+}
+
+impl Elem for f32 {
+    const DTYPE: DType = DType::F32;
+
+    #[inline(always)]
+    fn add(a: Self, b: Self) -> Self {
+        a + b
+    }
+    #[inline(always)]
+    fn mul(a: Self, b: Self) -> Self {
+        a * b
+    }
+    #[inline(always)]
+    fn min(a: Self, b: Self) -> Self {
+        a.min(b)
+    }
+    #[inline(always)]
+    fn max(a: Self, b: Self) -> Self {
+        a.max(b)
+    }
+    fn zero() -> Self {
+        0.0
+    }
+    fn one() -> Self {
+        1.0
+    }
+    fn min_identity() -> Self {
+        f32::INFINITY
+    }
+    fn max_identity() -> Self {
+        f32::NEG_INFINITY
+    }
+    fn from_i64(v: i64) -> Self {
+        v as f32
+    }
+    fn from_usize(v: usize) -> Self {
+        v as f32
+    }
+    fn to_usize(self) -> usize {
+        self as usize
+    }
+
+    fn service_op(
+        handle: crate::runtime::ServiceHandle,
+        op: &str,
+    ) -> Option<Box<dyn crate::ops::ReduceOp<f32>>> {
+        crate::runtime::ServiceOp::new(handle, op)
+            .map(|o| Box::new(o) as Box<dyn crate::ops::ReduceOp<f32>>)
+    }
+}
+
+impl Elem for f64 {
+    const DTYPE: DType = DType::F64;
+
+    #[inline(always)]
+    fn add(a: Self, b: Self) -> Self {
+        a + b
+    }
+    #[inline(always)]
+    fn mul(a: Self, b: Self) -> Self {
+        a * b
+    }
+    #[inline(always)]
+    fn min(a: Self, b: Self) -> Self {
+        a.min(b)
+    }
+    #[inline(always)]
+    fn max(a: Self, b: Self) -> Self {
+        a.max(b)
+    }
+    fn zero() -> Self {
+        0.0
+    }
+    fn one() -> Self {
+        1.0
+    }
+    fn min_identity() -> Self {
+        f64::INFINITY
+    }
+    fn max_identity() -> Self {
+        f64::NEG_INFINITY
+    }
+    fn from_i64(v: i64) -> Self {
+        v as f64
+    }
+    fn from_usize(v: usize) -> Self {
+        v as f64
+    }
+    fn to_usize(self) -> usize {
+        self as usize
+    }
+}
+
+macro_rules! int_elem {
+    ($t:ty, $dt:expr) => {
+        impl Elem for $t {
+            const DTYPE: DType = $dt;
+
+            #[inline(always)]
+            fn add(a: Self, b: Self) -> Self {
+                a.wrapping_add(b)
+            }
+            #[inline(always)]
+            fn mul(a: Self, b: Self) -> Self {
+                a.wrapping_mul(b)
+            }
+            #[inline(always)]
+            fn min(a: Self, b: Self) -> Self {
+                // Spelled out to dodge inherent/Ord/Elem method ambiguity.
+                if a < b {
+                    a
+                } else {
+                    b
+                }
+            }
+            #[inline(always)]
+            fn max(a: Self, b: Self) -> Self {
+                if a > b {
+                    a
+                } else {
+                    b
+                }
+            }
+            fn zero() -> Self {
+                0
+            }
+            fn one() -> Self {
+                1
+            }
+            fn min_identity() -> Self {
+                <$t>::MAX
+            }
+            fn max_identity() -> Self {
+                <$t>::MIN
+            }
+            fn from_i64(v: i64) -> Self {
+                v as $t
+            }
+            fn from_usize(v: usize) -> Self {
+                v as $t
+            }
+            fn to_usize(self) -> usize {
+                self as usize
+            }
+        }
+    };
+}
+
+int_elem!(i32, DType::I32);
+int_elem!(i64, DType::I64);
+int_elem!(u64, DType::U64);
+
+/// Deterministic vector of small-integer-valued elements in `[lo, hi)` —
+/// the generic analogue of `SplitMix64::int_valued_vec`, exact in every
+/// dtype. For unsigned dtypes pass `lo >= 0` (negative values wrap —
+/// deterministic and bit-exact, but surprising in human-facing output).
+pub fn int_vec<T: Elem>(rng: &mut SplitMix64, n: usize, lo: i64, hi: i64) -> Vec<T> {
+    assert!(hi > lo);
+    let span = (hi - lo) as usize;
+    (0..n).map(|_| T::from_i64(lo + rng.next_below(span) as i64)).collect()
+}
+
+/// `[lo, hi)` bounds appropriate for exact test data in dtype `dt`
+/// (non-negative for unsigned dtypes).
+pub fn test_value_bounds(dt: DType) -> (i64, i64) {
+    if dt.is_unsigned() {
+        (0, 9)
+    } else {
+        (-8, 9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_names_roundtrip() {
+        for dt in DType::ALL {
+            assert_eq!(DType::parse(dt.name()), Some(dt), "{dt:?}");
+        }
+        assert_eq!(DType::parse("f16"), None);
+        assert_eq!(DType::parse(""), None);
+    }
+
+    #[test]
+    fn dtype_sizes_match_mem() {
+        assert_eq!(DType::F32.size_bytes(), std::mem::size_of::<f32>());
+        assert_eq!(DType::F64.size_bytes(), std::mem::size_of::<f64>());
+        assert_eq!(DType::I32.size_bytes(), std::mem::size_of::<i32>());
+        assert_eq!(DType::I64.size_bytes(), std::mem::size_of::<i64>());
+        assert_eq!(DType::U64.size_bytes(), std::mem::size_of::<u64>());
+    }
+
+    fn identities_hold<T: Elem>() {
+        let vals: Vec<T> = (-3..4).map(T::from_i64).collect();
+        for &v in &vals {
+            assert_eq!(T::add(v, T::zero()), v);
+            assert_eq!(T::mul(v, T::one()), v);
+            assert_eq!(T::min(v, T::min_identity()), v);
+            assert_eq!(T::max(v, T::max_identity()), v);
+        }
+    }
+
+    #[test]
+    fn identities_hold_all_dtypes() {
+        identities_hold::<f32>();
+        identities_hold::<f64>();
+        identities_hold::<i32>();
+        identities_hold::<i64>();
+        // unsigned: negative from_i64 wraps, but identities still hold
+        identities_hold::<u64>();
+    }
+
+    fn commutative_assoc_ints<T: Elem>() {
+        let mut rng = SplitMix64::new(5);
+        let xs: Vec<T> = int_vec(&mut rng, 64, -100, 100);
+        for w in xs.chunks_exact(3) {
+            let (a, b, c) = (w[0], w[1], w[2]);
+            assert_eq!(T::add(a, b), T::add(b, a));
+            assert_eq!(T::mul(a, b), T::mul(b, a));
+            assert_eq!(T::add(T::add(a, b), c), T::add(a, T::add(b, c)));
+            assert_eq!(T::mul(T::mul(a, b), c), T::mul(a, T::mul(b, c)));
+            assert_eq!(T::min(a, b), T::min(b, a));
+            assert_eq!(T::max(a, b), T::max(b, a));
+        }
+    }
+
+    #[test]
+    fn integer_ops_exactly_associative_and_commutative() {
+        commutative_assoc_ints::<i32>();
+        commutative_assoc_ints::<i64>();
+        commutative_assoc_ints::<u64>();
+    }
+
+    #[test]
+    fn wrapping_sum_never_panics() {
+        // Debug builds panic on plain +-overflow; Elem::add must not.
+        assert_eq!(i64::MAX.wrapping_add(1), i64::MIN);
+        assert_eq!(<i64 as Elem>::add(i64::MAX, 1), i64::MIN);
+        assert_eq!(<u64 as Elem>::add(u64::MAX, 1), 0);
+        assert_eq!(<i32 as Elem>::mul(i32::MAX, 2), -2);
+    }
+
+    #[test]
+    fn int_vec_deterministic_and_bounded() {
+        let mut a = SplitMix64::new(9);
+        let mut b = SplitMix64::new(9);
+        let va: Vec<i64> = int_vec(&mut a, 500, -8, 9);
+        let vb: Vec<i64> = int_vec(&mut b, 500, -8, 9);
+        assert_eq!(va, vb);
+        assert!(va.iter().all(|&x| (-8..9).contains(&x)));
+        // agrees elementwise with the f32 generator (same rng stream)
+        let mut c = SplitMix64::new(9);
+        let vf: Vec<f32> = int_vec(&mut c, 500, -8, 9);
+        for (x, y) in va.iter().zip(&vf) {
+            assert_eq!(*x as f32, *y);
+        }
+    }
+
+    #[test]
+    fn usize_roundtrip_for_headers() {
+        for v in [0usize, 1, 7, 1000, 123_456] {
+            assert_eq!(f32::from_usize(v).to_usize(), v);
+            assert_eq!(f64::from_usize(v).to_usize(), v);
+            assert_eq!(i32::from_usize(v).to_usize(), v);
+            assert_eq!(i64::from_usize(v).to_usize(), v);
+            assert_eq!(u64::from_usize(v).to_usize(), v);
+        }
+    }
+}

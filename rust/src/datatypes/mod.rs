@@ -1,10 +1,15 @@
-//! Vector block partitions — the data layout vocabulary of the collectives.
+//! Vector block partitions — the data layout vocabulary of the collectives
+//! — and the scalar element subsystem ([`elem`]).
 //!
 //! Every processor's input vector of `m` elements is partitioned *in the
 //! same way* into `p` consecutive blocks (paper §2.1). Blocks may have
 //! equal sizes (MPI_Reduce_scatter_block), arbitrary sizes
 //! (MPI_Reduce_scatter, Corollary 3), or be degenerate with all elements in
 //! one block (reduce-to-root).
+
+pub mod elem;
+
+pub use elem::{DType, Elem};
 
 use std::ops::Range;
 
@@ -216,6 +221,68 @@ mod tests {
         let part = BlockPartition::zipf(16, 16_000, 1.5, 1);
         assert_eq!(part.total(), 16_000);
         assert!(part.max_block() > 16_000 / 16, "should be skewed");
+    }
+
+    /// Shared invariants for the irregular generators: exactly `p` blocks,
+    /// per-block counts sum to `m` (none negative by construction — the
+    /// counts are `usize` and `from_counts` asserts nothing else), and the
+    /// layout is fully determined by the seed.
+    fn assert_partition_invariants(part: &BlockPartition, p: usize, m: usize, what: &str) {
+        assert_eq!(part.p(), p, "{what}: block count");
+        assert_eq!(part.total(), m, "{what}: total");
+        let sum: usize = (0..p).map(|g| part.size(g)).sum();
+        assert_eq!(sum, m, "{what}: counts must sum to m");
+        for g in 0..p {
+            assert!(part.range(g).start <= part.range(g).end, "{what}: block {g} range");
+        }
+    }
+
+    #[test]
+    fn random_partition_invariants_property() {
+        for p in [1usize, 2, 3, 5, 7, 22, 64] {
+            for m in [0usize, 1, p / 2, p, 3 * p + 1, 1000] {
+                for seed in 0..8u64 {
+                    let part = BlockPartition::random(p, m, seed);
+                    assert_partition_invariants(&part, p, m, &format!("random p={p} m={m} s={seed}"));
+                    assert_eq!(part, BlockPartition::random(p, m, seed), "determinism p={p} m={m}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zipf_partition_invariants_property() {
+        for p in [1usize, 2, 5, 16, 22] {
+            for m in [0usize, 1, p, 10 * p, 16_000] {
+                for &a in &[0.5f64, 1.0, 1.5] {
+                    for seed in 0..4u64 {
+                        let part = BlockPartition::zipf(p, m, a, seed);
+                        assert_partition_invariants(
+                            &part,
+                            p,
+                            m,
+                            &format!("zipf p={p} m={m} a={a} s={seed}"),
+                        );
+                        assert_eq!(part, BlockPartition::zipf(p, m, a, seed), "determinism");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn distinct_seeds_usually_differ() {
+        // Not an invariant, but a sanity check that the seed actually
+        // drives the layout: across 10 seeds at p=22, at least two
+        // distinct partitions must appear for each generator.
+        let rand: std::collections::HashSet<Vec<usize>> = (0..10u64)
+            .map(|s| (0..22).map(|g| BlockPartition::random(22, 997, s).size(g)).collect())
+            .collect();
+        assert!(rand.len() > 1, "random ignores its seed");
+        let zipf: std::collections::HashSet<Vec<usize>> = (0..10u64)
+            .map(|s| (0..22).map(|g| BlockPartition::zipf(22, 997, 1.3, s).size(g)).collect())
+            .collect();
+        assert!(zipf.len() > 1, "zipf ignores its seed");
     }
 
     #[test]

@@ -1,0 +1,204 @@
+//! Process-wide `CCOLL_*` environment knobs, parsed **once** and validated
+//! **loudly**.
+//!
+//! Before this module, each knob was re-read ad hoc at its point of use
+//! and malformed values were silently swallowed by `.ok()`/`.unwrap_or()`
+//! chains — `CCOLL_RENDEZVOUS_MIN_ELEMS=abc` quietly behaved like the
+//! default, and `CCOLL_BENCH_FAST=true` quietly behaved like *off* (only
+//! the literal `1` was recognized). Now every knob is parsed exactly once
+//! per process into [`EnvKnobs`]; a value that does not parse aborts with
+//! a message naming the variable, the offending value and the accepted
+//! grammar, instead of running a long job under the wrong configuration.
+//!
+//! Knobs:
+//!
+//! | variable                     | type   | default | consumers |
+//! |------------------------------|--------|---------|-----------|
+//! | `CCOLL_NO_RENDEZVOUS`        | bool   | `0`     | transport tier-1 kill-switch |
+//! | `CCOLL_RENDEZVOUS_MIN_ELEMS` | usize  | 256     | rendezvous small-payload threshold |
+//! | `CCOLL_BENCH_FAST`           | bool   | `0`     | bench sweep shrinking |
+//! | `CCOLL_BENCH_DTYPE`          | dtype  | `f32`   | element type of the T1/T2 benches |
+//! | `CCOLL_PJRT_CHUNK`           | usize? | unset   | PJRT engine chunk-bucket override |
+//!
+//! Booleans accept `0|1|true|false|yes|no` (empty = unset = default).
+//! Integers accept decimal digits with optional `_` separators. Dtypes
+//! accept `f32|f64|i32|i64|u64`.
+
+use std::sync::OnceLock;
+
+use crate::datatypes::DType;
+
+/// The parsed knob set. Construct via [`knobs`] (process env, cached) or
+/// [`parse_from`] (explicit lookup, for tests).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EnvKnobs {
+    /// Rendezvous (zero-copy tier) enabled — `CCOLL_NO_RENDEZVOUS`
+    /// inverted.
+    pub rendezvous_enabled: bool,
+    /// Minimum payload (elements) for a rendezvous publish
+    /// (`CCOLL_RENDEZVOUS_MIN_ELEMS`).
+    pub rendezvous_min_elems: usize,
+    /// Shrink bench sweeps for smoke runs (`CCOLL_BENCH_FAST`).
+    pub bench_fast: bool,
+    /// Element type the dtype-aware benches (T1/T2) run in
+    /// (`CCOLL_BENCH_DTYPE`).
+    pub bench_dtype: DType,
+    /// Preferred chunk bucket (elements) for large PJRT combines
+    /// (`CCOLL_PJRT_CHUNK`); `None` means use the engine's measured
+    /// default. Validated here even when the `pjrt` feature is off, so
+    /// a malformed value always aborts loudly.
+    pub pjrt_chunk: Option<usize>,
+}
+
+fn parse_bool(name: &str, raw: Option<&str>, default: bool) -> Result<bool, String> {
+    match raw {
+        None | Some("") => Ok(default),
+        Some("0") | Some("false") | Some("no") => Ok(false),
+        Some("1") | Some("true") | Some("yes") => Ok(true),
+        Some(v) => Err(format!("{name}={v:?} is not a boolean (accepted: 0|1|true|false|yes|no)")),
+    }
+}
+
+fn parse_usize(name: &str, raw: Option<&str>, default: usize) -> Result<usize, String> {
+    match raw {
+        None | Some("") => Ok(default),
+        Some(v) => v.replace('_', "").parse().map_err(|_| {
+            format!("{name}={v:?} is not a non-negative integer (e.g. {name}=4096)")
+        }),
+    }
+}
+
+fn parse_opt_usize(name: &str, raw: Option<&str>) -> Result<Option<usize>, String> {
+    match raw {
+        None | Some("") => Ok(None),
+        Some(v) => v.replace('_', "").parse().map(Some).map_err(|_| {
+            format!("{name}={v:?} is not a non-negative integer (e.g. {name}=8192)")
+        }),
+    }
+}
+
+fn parse_dtype(name: &str, raw: Option<&str>, default: DType) -> Result<DType, String> {
+    match raw {
+        None | Some("") => Ok(default),
+        Some(v) => DType::parse(v)
+            .ok_or_else(|| format!("{name}={v:?} is not a dtype (accepted: {})", DType::NAMES_HELP)),
+    }
+}
+
+/// Parse a knob set from an arbitrary lookup function — pure, so malformed
+/// values are testable without touching the process environment.
+pub fn parse_from(get: impl Fn(&str) -> Option<String>) -> Result<EnvKnobs, String> {
+    let no_rendezvous =
+        parse_bool("CCOLL_NO_RENDEZVOUS", get("CCOLL_NO_RENDEZVOUS").as_deref(), false)?;
+    Ok(EnvKnobs {
+        rendezvous_enabled: !no_rendezvous,
+        rendezvous_min_elems: parse_usize(
+            "CCOLL_RENDEZVOUS_MIN_ELEMS",
+            get("CCOLL_RENDEZVOUS_MIN_ELEMS").as_deref(),
+            crate::transport::DEFAULT_RENDEZVOUS_MIN_ELEMS,
+        )?,
+        bench_fast: parse_bool("CCOLL_BENCH_FAST", get("CCOLL_BENCH_FAST").as_deref(), false)?,
+        bench_dtype: parse_dtype(
+            "CCOLL_BENCH_DTYPE",
+            get("CCOLL_BENCH_DTYPE").as_deref(),
+            DType::F32,
+        )?,
+        pjrt_chunk: parse_opt_usize("CCOLL_PJRT_CHUNK", get("CCOLL_PJRT_CHUNK").as_deref())?,
+    })
+}
+
+/// The process-wide knob set, parsed from the environment on first use and
+/// cached (the transport's hot path pays one pointer load). Panics with a
+/// clear message on a malformed value — configuration errors must surface
+/// at startup, not as silently-defaulted behavior.
+pub fn knobs() -> &'static EnvKnobs {
+    static KNOBS: OnceLock<EnvKnobs> = OnceLock::new();
+    KNOBS.get_or_init(|| {
+        parse_from(|k| std::env::var(k).ok())
+            .unwrap_or_else(|e| panic!("invalid CCOLL environment knob: {e}"))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    fn with(vars: &[(&str, &str)]) -> Result<EnvKnobs, String> {
+        let map: HashMap<String, String> =
+            vars.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+        parse_from(move |k| map.get(k).cloned())
+    }
+
+    #[test]
+    fn defaults_when_unset() {
+        let k = with(&[]).unwrap();
+        assert!(k.rendezvous_enabled);
+        assert_eq!(k.rendezvous_min_elems, crate::transport::DEFAULT_RENDEZVOUS_MIN_ELEMS);
+        assert!(!k.bench_fast);
+        assert_eq!(k.bench_dtype, DType::F32);
+        assert_eq!(k.pjrt_chunk, None);
+    }
+
+    #[test]
+    fn pjrt_chunk_parses_or_rejects() {
+        assert_eq!(with(&[("CCOLL_PJRT_CHUNK", "8192")]).unwrap().pjrt_chunk, Some(8192));
+        assert_eq!(with(&[("CCOLL_PJRT_CHUNK", "16_384")]).unwrap().pjrt_chunk, Some(16384));
+        let err = with(&[("CCOLL_PJRT_CHUNK", "abc")]).unwrap_err();
+        assert!(err.contains("CCOLL_PJRT_CHUNK") && err.contains("abc"), "{err}");
+    }
+
+    #[test]
+    fn kill_switch_and_threshold_parse() {
+        let k = with(&[("CCOLL_NO_RENDEZVOUS", "1"), ("CCOLL_RENDEZVOUS_MIN_ELEMS", "4_096")])
+            .unwrap();
+        assert!(!k.rendezvous_enabled);
+        assert_eq!(k.rendezvous_min_elems, 4096);
+        let k = with(&[("CCOLL_NO_RENDEZVOUS", "0")]).unwrap();
+        assert!(k.rendezvous_enabled);
+        let k = with(&[("CCOLL_NO_RENDEZVOUS", "")]).unwrap();
+        assert!(k.rendezvous_enabled, "empty string means unset");
+    }
+
+    #[test]
+    fn bool_synonyms_accepted() {
+        for v in ["1", "true", "yes"] {
+            assert!(with(&[("CCOLL_BENCH_FAST", v)]).unwrap().bench_fast, "{v}");
+        }
+        for v in ["0", "false", "no"] {
+            assert!(!with(&[("CCOLL_BENCH_FAST", v)]).unwrap().bench_fast, "{v}");
+        }
+    }
+
+    #[test]
+    fn malformed_values_rejected_loudly() {
+        let err = with(&[("CCOLL_RENDEZVOUS_MIN_ELEMS", "abc")]).unwrap_err();
+        assert!(err.contains("CCOLL_RENDEZVOUS_MIN_ELEMS"), "{err}");
+        assert!(err.contains("abc"), "{err}");
+        let err = with(&[("CCOLL_RENDEZVOUS_MIN_ELEMS", "-1")]).unwrap_err();
+        assert!(err.contains("non-negative"), "{err}");
+        let err = with(&[("CCOLL_NO_RENDEZVOUS", "banana")]).unwrap_err();
+        assert!(err.contains("CCOLL_NO_RENDEZVOUS") && err.contains("banana"), "{err}");
+        let err = with(&[("CCOLL_BENCH_FAST", "2")]).unwrap_err();
+        assert!(err.contains("boolean"), "{err}");
+        let err = with(&[("CCOLL_BENCH_DTYPE", "f16")]).unwrap_err();
+        assert!(err.contains("f32|f64|i32|i64|u64"), "{err}");
+    }
+
+    #[test]
+    fn bench_dtype_parses() {
+        for (v, dt) in
+            [("f32", DType::F32), ("f64", DType::F64), ("i32", DType::I32), ("i64", DType::I64), ("u64", DType::U64)]
+        {
+            assert_eq!(with(&[("CCOLL_BENCH_DTYPE", v)]).unwrap().bench_dtype, dt);
+        }
+    }
+
+    #[test]
+    fn process_knobs_are_consistent_with_env() {
+        // Whatever the ambient env says, the cached set must agree with a
+        // fresh parse of the same lookup (i.e. knobs() is just a cache).
+        let fresh = parse_from(|k| std::env::var(k).ok()).expect("ambient env must be valid");
+        assert_eq!(knobs(), &fresh);
+    }
+}

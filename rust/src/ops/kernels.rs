@@ -1,16 +1,20 @@
-//! Monomorphized, vectorization-friendly reduction kernels.
+//! Monomorphized, vectorization-friendly reduction kernels, generic over
+//! the element type.
 //!
 //! The four native operators share one inner-loop shape, instantiated per
-//! operator through the zero-sized [`MicroOp`] types below — `rustc`
-//! monomorphizes [`Kernel`]'s methods so the hot loops contain *no*
-//! indirect (`dyn`) call, and the executor pays at most one enum `match`
-//! per payload instead of one virtual call per slice.
+//! `(operator, dtype)` pair through the zero-sized [`MicroOp`] types below
+//! — `rustc` monomorphizes [`Kernel`]'s generic methods so the hot loops
+//! contain *no* indirect (`dyn`) call, and the executor pays at most one
+//! enum `match` per payload instead of one virtual call per slice. The
+//! scalar ⊕ itself comes from [`Elem`] (wrapping arithmetic for integer
+//! dtypes — exactly associative, the basis of the bit-exact oracles).
 //!
 //! Loop discipline (the §Perf "fast single pass" the rendezvous path
 //! depends on):
 //!   * **cache-blocked** — operands are walked in [`BLOCK`]-element tiles
-//!     (16 KiB, comfortably L1-resident) so the in-place and out-of-place
-//!     variants have identical locality behavior on multi-slice ranges;
+//!     (16 KiB at 4 bytes/elem, 32 KiB at 8 — L1-resident either way) so
+//!     the in-place and out-of-place variants have identical locality
+//!     behavior on multi-slice ranges;
 //!   * **unrolled** — each tile is processed in [`LANES`]-wide groups via
 //!     `chunks_exact`, which LLVM reliably turns into packed SIMD plus an
 //!     unrolled scalar tail;
@@ -18,24 +22,27 @@
 //!     the executor (`CollectiveError::BadPayload`), not per kernel call;
 //!     kernels only `debug_assert!` the contract (see `ops::ReduceOp`).
 
-/// Elements per cache tile (16 KiB of f32 — L1-sized).
+use crate::datatypes::Elem;
+
+/// Elements per cache tile (16 KiB for 4-byte, 32 KiB for 8-byte elements
+/// — L1-sized either way).
 const BLOCK: usize = 4096;
-/// Unroll width of the inner loop (two AVX2 vectors of f32).
+/// Unroll width of the inner loop (two AVX2 vectors of f32; one of f64).
 const LANES: usize = 16;
 
 /// One scalar application of ⊕ — the only thing that differs between
 /// operators. Zero-sized marker types implement it so every loop below is
-/// monomorphized per operator.
+/// monomorphized per `(operator, dtype)`.
 trait MicroOp: Copy {
-    fn apply(a: f32, b: f32) -> f32;
+    fn apply<T: Elem>(a: T, b: T) -> T;
 }
 
 #[derive(Clone, Copy)]
 struct SumMicro;
 impl MicroOp for SumMicro {
     #[inline(always)]
-    fn apply(a: f32, b: f32) -> f32 {
-        a + b
+    fn apply<T: Elem>(a: T, b: T) -> T {
+        T::add(a, b)
     }
 }
 
@@ -43,8 +50,8 @@ impl MicroOp for SumMicro {
 struct ProdMicro;
 impl MicroOp for ProdMicro {
     #[inline(always)]
-    fn apply(a: f32, b: f32) -> f32 {
-        a * b
+    fn apply<T: Elem>(a: T, b: T) -> T {
+        T::mul(a, b)
     }
 }
 
@@ -52,8 +59,8 @@ impl MicroOp for ProdMicro {
 struct MinMicro;
 impl MicroOp for MinMicro {
     #[inline(always)]
-    fn apply(a: f32, b: f32) -> f32 {
-        a.min(b)
+    fn apply<T: Elem>(a: T, b: T) -> T {
+        T::min(a, b)
     }
 }
 
@@ -61,14 +68,14 @@ impl MicroOp for MinMicro {
 struct MaxMicro;
 impl MicroOp for MaxMicro {
     #[inline(always)]
-    fn apply(a: f32, b: f32) -> f32 {
-        a.max(b)
+    fn apply<T: Elem>(a: T, b: T) -> T {
+        T::max(a, b)
     }
 }
 
 /// In-place fold: `acc[i] ← acc[i] ⊕ other[i]`.
 #[inline]
-fn fold<O: MicroOp>(acc: &mut [f32], other: &[f32]) {
+fn fold<T: Elem, O: MicroOp>(acc: &mut [T], other: &[T]) {
     debug_assert_eq!(acc.len(), other.len(), "⊕ operands must have equal length");
     for (at, bt) in acc.chunks_mut(BLOCK).zip(other.chunks(BLOCK)) {
         let mut ac = at.chunks_exact_mut(LANES);
@@ -87,7 +94,7 @@ fn fold<O: MicroOp>(acc: &mut [f32], other: &[f32]) {
 /// Out-of-place fold: `dst[i] ← a[i] ⊕ b[i]` — one fused pass instead of
 /// copy-then-combine.
 #[inline]
-fn fold_into<O: MicroOp>(dst: &mut [f32], a: &[f32], b: &[f32]) {
+fn fold_into<T: Elem, O: MicroOp>(dst: &mut [T], a: &[T], b: &[T]) {
     debug_assert_eq!(dst.len(), a.len(), "⊕ operands must have equal length");
     debug_assert_eq!(dst.len(), b.len(), "⊕ operands must have equal length");
     for ((dt, at), bt) in dst.chunks_mut(BLOCK).zip(a.chunks(BLOCK)).zip(b.chunks(BLOCK)) {
@@ -112,22 +119,24 @@ fn fold_into<O: MicroOp>(dst: &mut [f32], a: &[f32], b: &[f32]) {
 /// every schedule transfer — with ONE monomorphized instantiation covering
 /// both legs (a single dispatch per payload).
 #[inline]
-fn fold_ranges<O: MicroOp>(
-    dst_head: &mut [f32],
-    dst_tail: Option<&mut [f32]>,
-    src_head: &[f32],
-    src_tail: &[f32],
+fn fold_ranges<T: Elem, O: MicroOp>(
+    dst_head: &mut [T],
+    dst_tail: Option<&mut [T]>,
+    src_head: &[T],
+    src_tail: &[T],
 ) {
-    fold::<O>(dst_head, src_head);
+    fold::<T, O>(dst_head, src_head);
     if let Some(dst_tail) = dst_tail {
-        fold::<O>(dst_tail, src_tail);
+        fold::<T, O>(dst_tail, src_tail);
     }
 }
 
 /// The four native operators as a copyable value — the executor resolves a
 /// `dyn ReduceOp` to a `Kernel` once per collective (`ReduceOp::kernel`)
 /// and from then on pays a predictable enum branch instead of a virtual
-/// call per slice.
+/// call per slice. The variant is dtype-independent; each generic method
+/// monomorphizes per element type at the call site, so one `Kernel` value
+/// serves every dtype.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Kernel {
     Sum,
@@ -146,35 +155,35 @@ impl Kernel {
         }
     }
 
-    /// Identity element of ⊕.
-    pub fn identity(self) -> f32 {
+    /// Identity element of ⊕ in dtype `T`.
+    pub fn identity<T: Elem>(self) -> T {
         match self {
-            Kernel::Sum => 0.0,
-            Kernel::Prod => 1.0,
-            Kernel::Min => f32::INFINITY,
-            Kernel::Max => f32::NEG_INFINITY,
+            Kernel::Sum => T::zero(),
+            Kernel::Prod => T::one(),
+            Kernel::Min => T::min_identity(),
+            Kernel::Max => T::max_identity(),
         }
     }
 
     /// `acc[i] ← acc[i] ⊕ other[i]` (equal lengths; checked in debug only).
     #[inline]
-    pub fn combine(self, acc: &mut [f32], other: &[f32]) {
+    pub fn combine<T: Elem>(self, acc: &mut [T], other: &[T]) {
         match self {
-            Kernel::Sum => fold::<SumMicro>(acc, other),
-            Kernel::Prod => fold::<ProdMicro>(acc, other),
-            Kernel::Min => fold::<MinMicro>(acc, other),
-            Kernel::Max => fold::<MaxMicro>(acc, other),
+            Kernel::Sum => fold::<T, SumMicro>(acc, other),
+            Kernel::Prod => fold::<T, ProdMicro>(acc, other),
+            Kernel::Min => fold::<T, MinMicro>(acc, other),
+            Kernel::Max => fold::<T, MaxMicro>(acc, other),
         }
     }
 
     /// `dst[i] ← a[i] ⊕ b[i]` — out-of-place fused pass.
     #[inline]
-    pub fn combine_into(self, dst: &mut [f32], a: &[f32], b: &[f32]) {
+    pub fn combine_into<T: Elem>(self, dst: &mut [T], a: &[T], b: &[T]) {
         match self {
-            Kernel::Sum => fold_into::<SumMicro>(dst, a, b),
-            Kernel::Prod => fold_into::<ProdMicro>(dst, a, b),
-            Kernel::Min => fold_into::<MinMicro>(dst, a, b),
-            Kernel::Max => fold_into::<MaxMicro>(dst, a, b),
+            Kernel::Sum => fold_into::<T, SumMicro>(dst, a, b),
+            Kernel::Prod => fold_into::<T, ProdMicro>(dst, a, b),
+            Kernel::Min => fold_into::<T, MinMicro>(dst, a, b),
+            Kernel::Max => fold_into::<T, MaxMicro>(dst, a, b),
         }
     }
 
@@ -186,18 +195,18 @@ impl Kernel {
     /// a raw base pointer without ever forming a `&mut` over regions a
     /// rendezvous peer is concurrently reading.
     #[inline]
-    pub fn combine_ranges(
+    pub fn combine_ranges<T: Elem>(
         self,
-        dst_head: &mut [f32],
-        dst_tail: Option<&mut [f32]>,
-        src_head: &[f32],
-        src_tail: &[f32],
+        dst_head: &mut [T],
+        dst_tail: Option<&mut [T]>,
+        src_head: &[T],
+        src_tail: &[T],
     ) {
         match self {
-            Kernel::Sum => fold_ranges::<SumMicro>(dst_head, dst_tail, src_head, src_tail),
-            Kernel::Prod => fold_ranges::<ProdMicro>(dst_head, dst_tail, src_head, src_tail),
-            Kernel::Min => fold_ranges::<MinMicro>(dst_head, dst_tail, src_head, src_tail),
-            Kernel::Max => fold_ranges::<MaxMicro>(dst_head, dst_tail, src_head, src_tail),
+            Kernel::Sum => fold_ranges::<T, SumMicro>(dst_head, dst_tail, src_head, src_tail),
+            Kernel::Prod => fold_ranges::<T, ProdMicro>(dst_head, dst_tail, src_head, src_tail),
+            Kernel::Min => fold_ranges::<T, MinMicro>(dst_head, dst_tail, src_head, src_tail),
+            Kernel::Max => fold_ranges::<T, MaxMicro>(dst_head, dst_tail, src_head, src_tail),
         }
     }
 }
@@ -205,6 +214,7 @@ impl Kernel {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::datatypes::elem::int_vec;
     use crate::util::rng::SplitMix64;
 
     fn scalar(k: Kernel, a: f32, b: f32) -> f32 {
@@ -295,6 +305,56 @@ mod tests {
             for b in ALL.iter().skip(i + 1) {
                 assert_ne!(a.name(), b.name());
             }
+        }
+    }
+
+    /// Generic cross-dtype check: every kernel, every loop shape, against
+    /// a scalar wrapping fold in dtype `T` — exact equality.
+    fn combine_matches_scalar_generic<T: Elem>(seed: u64) {
+        let mut rng = SplitMix64::new(seed);
+        for k in ALL {
+            for n in LENS {
+                let a0: Vec<T> = int_vec(&mut rng, n, -50, 50);
+                let b: Vec<T> = int_vec(&mut rng, n, -50, 50);
+                let mut acc = a0.clone();
+                k.combine(&mut acc, &b);
+                for i in 0..n {
+                    let want = match k {
+                        Kernel::Sum => T::add(a0[i], b[i]),
+                        Kernel::Prod => T::mul(a0[i], b[i]),
+                        Kernel::Min => T::min(a0[i], b[i]),
+                        Kernel::Max => T::max(a0[i], b[i]),
+                    };
+                    assert_eq!(acc[i], want, "{} {:?} n={n} i={i}", k.name(), T::DTYPE);
+                }
+                // identity neutrality in T
+                let mut idacc = vec![k.identity::<T>(); n];
+                k.combine(&mut idacc, &a0);
+                assert_eq!(idacc, a0, "{} {:?} identity", k.name(), T::DTYPE);
+            }
+        }
+    }
+
+    #[test]
+    fn kernels_exact_in_every_dtype() {
+        combine_matches_scalar_generic::<f32>(31);
+        combine_matches_scalar_generic::<f64>(32);
+        combine_matches_scalar_generic::<i32>(33);
+        combine_matches_scalar_generic::<i64>(34);
+        combine_matches_scalar_generic::<u64>(35);
+    }
+
+    #[test]
+    fn combine_into_matches_in_place_i64() {
+        let mut rng = SplitMix64::new(36);
+        for k in ALL {
+            let a: Vec<i64> = int_vec(&mut rng, 97, -9, 9);
+            let b: Vec<i64> = int_vec(&mut rng, 97, -9, 9);
+            let mut dst = vec![0i64; 97];
+            k.combine_into(&mut dst, &a, &b);
+            let mut want = a.clone();
+            k.combine(&mut want, &b);
+            assert_eq!(dst, want, "{}", k.name());
         }
     }
 }

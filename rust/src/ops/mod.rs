@@ -1,11 +1,16 @@
-//! Commutative reduction operators (the paper's ⊕).
+//! Commutative reduction operators (the paper's ⊕), generic over the
+//! element type.
 //!
 //! Two families implement [`ReduceOp`]:
 //!   * native Rust loops ([`native`]) — the default γ backend, written so
-//!     LLVM autovectorizes them;
+//!     LLVM autovectorizes them; implemented for **every** [`Elem`] dtype
+//!     (`f32`, `f64`, `i32`, `i64`, `u64` — integer ⊕ is wrapping, hence
+//!     exactly associative);
 //!   * the PJRT-backed operator in `crate::runtime::PjrtOp`, which executes
 //!     the AOT-compiled Pallas combine kernel (Layer 1) — the three-layer
-//!     hot path.
+//!     hot path. The AOT artifacts are compiled for `f32` only, so the
+//!     PJRT family implements `ReduceOp<f32>` alone (see
+//!     [`Elem::service_op`](crate::datatypes::Elem)).
 //!
 //! Both are validated against each other and against scalar folds in
 //! `rust/tests/`.
@@ -18,11 +23,24 @@ pub use native::{MaxOp, MinOp, NativeOp, ProdOp, SumOp};
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
-/// A binary, commutative, associative elementwise operator on f32 blocks.
+use crate::datatypes::Elem;
+
+/// The names [`parse_native`] accepts, for CLI diagnostics.
+pub const NATIVE_OP_NAMES: [&str; 4] = ["sum", "prod", "min", "max"];
+
+/// Human-readable list of valid operator names.
+pub const OP_NAMES_HELP: &str = "sum|prod|min|max";
+
+/// A binary, commutative, associative elementwise operator on blocks of
+/// `T` (default `f32`, so pre-dtype code and trait objects like
+/// `Box<dyn ReduceOp>` keep meaning the f32 operator).
 ///
 /// `combine` computes `acc[i] ← acc[i] ⊕ other[i]`. Implementations must be
 /// commutative — Algorithm 1 applies ⊕ in skip order, not rank order
-/// (paper §2.1).
+/// (paper §2.1). For float dtypes ⊕ is commutative but *not* associative,
+/// so results are only reproducible for a fixed schedule; the integer
+/// dtypes (wrapping arithmetic) are exactly associative and yield
+/// bit-identical results across schedules and transport tiers.
 ///
 /// # Length contract
 ///
@@ -31,12 +49,12 @@ use std::sync::atomic::{AtomicU64, Ordering};
 /// kernel call, so implementations stay on the unchecked fast path and
 /// only `debug_assert!` the contract — a release-mode mismatch through
 /// some other caller is a bug at that call site, not in the kernel.
-pub trait ReduceOp: Send + Sync {
+pub trait ReduceOp<T: Elem = f32>: Send + Sync {
     /// Stable name (matches the artifact manifest's `op` field).
     fn name(&self) -> &'static str;
 
     /// `acc ⊕= other` (slices must have equal length — see the trait docs).
-    fn combine(&self, acc: &mut [f32], other: &[f32]);
+    fn combine(&self, acc: &mut [T], other: &[T]);
 
     /// Out-of-place fused pass: `dst[i] ← a[i] ⊕ b[i]` (all three slices
     /// equal length). Default is copy-then-combine; native operators
@@ -44,7 +62,7 @@ pub trait ReduceOp: Send + Sync {
     /// path (which is in-place); provided as the kernel-layer building
     /// block for out-of-place consumers (e.g. a future fused
     /// staging+combine in the communicator).
-    fn combine_into(&self, dst: &mut [f32], a: &[f32], b: &[f32]) {
+    fn combine_into(&self, dst: &mut [T], a: &[T], b: &[T]) {
         debug_assert_eq!(dst.len(), a.len(), "⊕ operands must have equal length");
         dst.copy_from_slice(a);
         self.combine(dst, b);
@@ -53,20 +71,27 @@ pub trait ReduceOp: Send + Sync {
     /// The monomorphized [`Kernel`] implementing this operator, if it is
     /// one of the four native ops. The executor resolves this once per
     /// collective and then skips dyn dispatch entirely on the combine hot
-    /// path. Instrumentation wrappers (e.g. [`CountingOp`]) and backend
-    /// operators (PJRT) return `None` so every combine still flows through
-    /// their `combine`.
+    /// path (the kernel's generic methods re-monomorphize per dtype at
+    /// the call site). Instrumentation wrappers (e.g. [`CountingOp`]) and
+    /// backend operators (PJRT) return `None` so every combine still
+    /// flows through their `combine`.
     fn kernel(&self) -> Option<Kernel> {
         None
     }
 
-    /// Identity element (e.g. 0 for sum, +∞ for min) — used to initialize
-    /// empty accumulations and pad PJRT buckets.
-    fn identity(&self) -> f32;
+    /// Identity element (e.g. 0 for sum, +∞/MAX for min) — used to
+    /// initialize empty accumulations and pad PJRT buckets.
+    fn identity(&self) -> T;
 }
 
-/// Parse an operator name (CLI/config) into a boxed native operator.
+/// Parse an operator name (CLI/config) into a boxed native operator over
+/// `f32` — the pre-dtype entry point, kept for source compatibility.
 pub fn parse_native(name: &str) -> Option<Box<dyn ReduceOp>> {
+    parse_native_typed::<f32>(name)
+}
+
+/// Parse an operator name into a boxed native operator over any dtype.
+pub fn parse_native_typed<T: Elem>(name: &str) -> Option<Box<dyn ReduceOp<T>>> {
     match name {
         "sum" => Some(Box::new(SumOp)),
         "prod" => Some(Box::new(ProdOp)),
@@ -79,14 +104,14 @@ pub fn parse_native(name: &str) -> Option<Box<dyn ReduceOp>> {
 /// Instrumentation wrapper: counts invocations and combined elements.
 /// The T1/T2 benches use this to report the exact ⊕ counts of
 /// Theorems 1 and 2.
-pub struct CountingOp<'a> {
-    pub inner: &'a dyn ReduceOp,
+pub struct CountingOp<'a, T: Elem = f32> {
+    pub inner: &'a dyn ReduceOp<T>,
     pub calls: AtomicU64,
     pub elems: AtomicU64,
 }
 
-impl<'a> CountingOp<'a> {
-    pub fn new(inner: &'a dyn ReduceOp) -> Self {
+impl<'a, T: Elem> CountingOp<'a, T> {
+    pub fn new(inner: &'a dyn ReduceOp<T>) -> Self {
         Self { inner, calls: AtomicU64::new(0), elems: AtomicU64::new(0) }
     }
 
@@ -99,18 +124,18 @@ impl<'a> CountingOp<'a> {
     }
 }
 
-impl<'a> ReduceOp for CountingOp<'a> {
+impl<'a, T: Elem> ReduceOp<T> for CountingOp<'a, T> {
     fn name(&self) -> &'static str {
         self.inner.name()
     }
 
-    fn combine(&self, acc: &mut [f32], other: &[f32]) {
+    fn combine(&self, acc: &mut [T], other: &[T]) {
         self.calls.fetch_add(1, Ordering::Relaxed);
         self.elems.fetch_add(acc.len() as u64, Ordering::Relaxed);
         self.inner.combine(acc, other);
     }
 
-    fn identity(&self) -> f32 {
+    fn identity(&self) -> T {
         self.inner.identity()
     }
 }
@@ -121,16 +146,19 @@ mod tests {
 
     #[test]
     fn parse_known_ops() {
-        for name in ["sum", "prod", "min", "max"] {
+        for name in NATIVE_OP_NAMES {
             assert_eq!(parse_native(name).unwrap().name(), name);
+            assert_eq!(parse_native_typed::<i64>(name).unwrap().name(), name);
+            assert_eq!(parse_native_typed::<u64>(name).unwrap().name(), name);
         }
         assert!(parse_native("xor").is_none());
+        assert!(parse_native_typed::<f64>("xor").is_none());
     }
 
     #[test]
     fn counting_op_counts() {
         let sum = SumOp;
-        let c = CountingOp::new(&sum);
+        let c = CountingOp::<f32>::new(&sum);
         let mut a = vec![1.0f32; 10];
         c.combine(&mut a, &vec![2.0f32; 10]);
         c.combine(&mut a[..5], &vec![3.0f32; 5]);
@@ -138,5 +166,16 @@ mod tests {
         assert_eq!(c.elems(), 15);
         assert_eq!(a[0], 6.0);
         assert_eq!(a[9], 3.0);
+    }
+
+    #[test]
+    fn counting_op_counts_typed() {
+        let sum = SumOp;
+        let c = CountingOp::<i64>::new(&sum);
+        let mut a = vec![1i64; 8];
+        c.combine(&mut a, &vec![2i64; 8]);
+        assert_eq!(c.calls(), 1);
+        assert_eq!(c.elems(), 8);
+        assert_eq!(a[0], 3);
     }
 }

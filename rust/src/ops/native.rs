@@ -1,9 +1,12 @@
-//! Native (pure Rust) reduction operators.
+//! Native (pure Rust) reduction operators, generic over the element type.
 //!
 //! Each operator is a thin `dyn`-compatible wrapper over its monomorphized
 //! [`Kernel`] (see [`super::kernels`]): the cache-blocked, unrolled loops
 //! live there, and callers that resolve [`ReduceOp::kernel`] (the schedule
-//! executor) bypass the vtable entirely on the hot path. `perf_hotpath`
+//! executor) bypass the vtable entirely on the hot path. One zero-sized
+//! operator type implements `ReduceOp<T>` for **every** supported dtype
+//! (`impl<T: Elem> ReduceOp<T> for SumOp`), so `SumOp` works unchanged
+//! whether the collective runs over `f32` or `i64`. `perf_hotpath`
 //! measures the kernels against the single-core streaming roofline
 //! (§Perf in DESIGN.md).
 //!
@@ -12,10 +15,12 @@
 //! and the kernels keep only `debug_assert!`s — see the [`ReduceOp`]
 //! trait docs for the contract.
 
+use crate::datatypes::Elem;
+
 use super::kernels::Kernel;
 use super::ReduceOp;
 
-/// Marker trait so generic tests can enumerate the native ops.
+/// Marker trait so generic tests can enumerate the native ops (f32 view).
 pub trait NativeOp: ReduceOp + Default + Copy {}
 
 macro_rules! native_op {
@@ -24,18 +29,18 @@ macro_rules! native_op {
         #[derive(Debug, Default, Clone, Copy)]
         pub struct $name;
 
-        impl ReduceOp for $name {
+        impl<T: Elem> ReduceOp<T> for $name {
             fn name(&self) -> &'static str {
                 $kernel.name()
             }
 
             #[inline]
-            fn combine(&self, acc: &mut [f32], other: &[f32]) {
+            fn combine(&self, acc: &mut [T], other: &[T]) {
                 $kernel.combine(acc, other);
             }
 
             #[inline]
-            fn combine_into(&self, dst: &mut [f32], a: &[f32], b: &[f32]) {
+            fn combine_into(&self, dst: &mut [T], a: &[T], b: &[T]) {
                 $kernel.combine_into(dst, a, b);
             }
 
@@ -43,7 +48,7 @@ macro_rules! native_op {
                 Some($kernel)
             }
 
-            fn identity(&self) -> f32 {
+            fn identity(&self) -> T {
                 $kernel.identity()
             }
         }
@@ -52,12 +57,12 @@ macro_rules! native_op {
 }
 
 native_op!(
-    /// Elementwise addition (MPI_SUM).
+    /// Elementwise addition (MPI_SUM). Wrapping for integer dtypes.
     SumOp,
     Kernel::Sum
 );
 native_op!(
-    /// Elementwise product (MPI_PROD).
+    /// Elementwise product (MPI_PROD). Wrapping for integer dtypes.
     ProdOp,
     Kernel::Prod
 );
@@ -107,18 +112,38 @@ mod tests {
 
     #[test]
     fn known_values() {
-        let mut a = vec![1.0, -2.0, 3.0];
+        let mut a = vec![1.0f32, -2.0, 3.0];
         SumOp.combine(&mut a, &[4.0, 5.0, -6.0]);
         assert_eq!(a, vec![5.0, 3.0, -3.0]);
-        let mut a = vec![2.0, 3.0, 4.0];
+        let mut a = vec![2.0f32, 3.0, 4.0];
         ProdOp.combine(&mut a, &[0.5, -1.0, 0.0]);
         assert_eq!(a, vec![1.0, -3.0, 0.0]);
-        let mut a = vec![1.0, -2.0];
+        let mut a = vec![1.0f32, -2.0];
         MinOp.combine(&mut a, &[0.0, 5.0]);
         assert_eq!(a, vec![0.0, -2.0]);
-        let mut a = vec![1.0, -2.0];
+        let mut a = vec![1.0f32, -2.0];
         MaxOp.combine(&mut a, &[0.0, 5.0]);
         assert_eq!(a, vec![1.0, 5.0]);
+    }
+
+    #[test]
+    fn known_values_integer_dtypes() {
+        let mut a = vec![1i64, -2, 3];
+        SumOp.combine(&mut a, &[4, 5, -6]);
+        assert_eq!(a, vec![5, 3, -3]);
+        let mut a = vec![2i32, 3, -4];
+        ProdOp.combine(&mut a, &[5, -1, 0]);
+        assert_eq!(a, vec![10, -3, 0]);
+        let mut a = vec![1u64, 7];
+        MinOp.combine(&mut a, &[0, 9]);
+        assert_eq!(a, vec![0, 7]);
+        let mut a = vec![1i64, -2];
+        MaxOp.combine(&mut a, &[0, 5]);
+        assert_eq!(a, vec![1, 5]);
+        // wrapping sum is total, not a panic
+        let mut a = vec![i64::MAX];
+        SumOp.combine(&mut a, &[1]);
+        assert_eq!(a, vec![i64::MIN]);
     }
 
     #[test]
@@ -141,7 +166,7 @@ mod tests {
         for op in ops() {
             let k = op.kernel().expect("native op must expose a kernel");
             assert_eq!(k.name(), op.name());
-            assert_eq!(k.identity(), op.identity());
+            assert_eq!(k.identity::<f32>(), op.identity());
         }
     }
 
@@ -152,7 +177,7 @@ mod tests {
     #[cfg(debug_assertions)]
     #[should_panic(expected = "equal length")]
     fn length_mismatch_panics_in_debug() {
-        let mut a = vec![0.0; 3];
+        let mut a = vec![0.0f32; 3];
         SumOp.combine(&mut a, &[0.0; 4]);
     }
 

@@ -117,11 +117,9 @@ impl Engine {
     /// (Mosaic pipelines the grid) the largest bucket would win; override
     /// with `CCOLL_PJRT_CHUNK=<elems>`.
     fn preferred_chunk(&self) -> usize {
-        static CHUNK: std::sync::OnceLock<Option<usize>> = std::sync::OnceLock::new();
-        let env = *CHUNK.get_or_init(|| {
-            std::env::var("CCOLL_PJRT_CHUNK").ok().and_then(|v| v.parse().ok())
-        });
-        let want = env.unwrap_or(8192);
+        // Parsed once per process by `crate::env_knobs` — malformed values
+        // abort loudly at first use instead of silently defaulting.
+        let want = crate::env_knobs::knobs().pjrt_chunk.unwrap_or(8192);
         // snap to an available bucket
         self.manifest
             .buckets

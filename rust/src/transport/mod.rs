@@ -1,4 +1,5 @@
-//! In-process message-passing substrate with a three-tier copy discipline.
+//! In-process message-passing substrate with a three-tier copy discipline,
+//! generic over the element type.
 //!
 //! Substitutes for the paper's MPI cluster (DESIGN.md §2): `p` ranks run as
 //! OS threads; each rank owns an [`Endpoint`] supporting the paper's
@@ -11,6 +12,26 @@
 //! round structure (a message for round `k` can only be consumed by the
 //! round-`k` sendrecv). Per-endpoint counters record rounds, messages and
 //! element volume for the Theorem 1/2 benches.
+//!
+//! # Element types (dtypes)
+//!
+//! [`Endpoint`] is generic over its payload element `E:`[`Elem`], with
+//! `f32` as the default type parameter — `Endpoint`, [`network`],
+//! [`run_ranks`] and [`run_ranks_inputs`] keep their original f32 meaning,
+//! while [`network_typed`], [`run_ranks_typed`] and
+//! [`run_ranks_inputs_typed`] build networks of any supported dtype. The
+//! element size is a compile-time property of the endpoint:
+//!
+//! * **pooled tier** — pools recycle `Vec<E>` by *capacity*; since every
+//!   payload on an `Endpoint<E>` shares one element size, capacity
+//!   matching in elements is exactly capacity matching in bytes, and one
+//!   pool serves every payload shape of the network's dtype;
+//! * **rendezvous tier** — [`RemoteSlices<E>`] descriptors carry their
+//!   element size ([`RemoteSlices::elem_bytes`]) statically in the type,
+//!   so a publish can never be reinterpreted at the wrong width;
+//! * **copy accounting** — `Counters::bytes_copied` is credited
+//!   `size_of::<E>()` per element, so cross-dtype ablations compare real
+//!   byte volume.
 //!
 //! # The three-tier copy discipline
 //!
@@ -32,9 +53,10 @@
 //!    on for the executor drivers and [`crate::coordinator::Communicator`]),
 //!    the payload is at least [`Endpoint::rendezvous_min_elems`] elements
 //!    (below that, the blocking ack costs more than the copy it saves)
-//!    and `CCOLL_NO_RENDEZVOUS` is unset. Payload bytes copied: **zero**.
+//!    and the `CCOLL_NO_RENDEZVOUS` knob is off. Payload bytes copied:
+//!    **zero**.
 //! 2. **Pooled** (single-copy, [`Endpoint::sendrecv`]) — the sender
-//!    gathers its slices into a `Vec<f32>` *loaned* from its per-peer
+//!    gathers its slices into a `Vec<E>` *loaned* from its per-peer
 //!    [`BufferPool`]; the receiver consumes it and [`Endpoint::release`]s
 //!    the buffer back to the sender's pool over a dedicated return
 //!    channel. After warm-up every acquire is a pool hit and the
@@ -52,6 +74,11 @@
 //! copies (the gather on tier 2/3 sends, plus `Store` scatters counted by
 //! the executor), and `Counters::rendezvous_hits` counts tier-1 publishes —
 //! the `perf_hotpath` ablation compares the tiers with both.
+//!
+//! Environment knobs (`CCOLL_NO_RENDEZVOUS`,
+//! `CCOLL_RENDEZVOUS_MIN_ELEMS`) are parsed once per process by
+//! [`crate::env_knobs`] — malformed values abort loudly instead of
+//! silently defaulting.
 //!
 //! ## Rendezvous safety contract
 //!
@@ -93,24 +120,29 @@ use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::time::Duration;
 
+use crate::datatypes::Elem;
+
 /// Descriptors of the (≤ 2) working-vector slices a rendezvous sender
 /// published for one round. See the module docs for the safety contract
-/// that keeps the pointers valid until the receiver acks.
+/// that keeps the pointers valid until the receiver acks. The element
+/// type — and therefore the element size — travels in the type parameter,
+/// so the receiving side can never reinterpret the region at the wrong
+/// width.
 #[derive(Debug)]
-pub struct RemoteSlices {
-    head: *const f32,
+pub struct RemoteSlices<E: Elem = f32> {
+    head: *const E,
     head_len: usize,
-    tail: *const f32,
+    tail: *const E,
     tail_len: usize,
 }
 
 // SAFETY: the pointed-to memory is owned by the publishing rank's thread
 // and, per the protocol above, stays alive and unwritten until the
 // receiving thread acks; the receiver only reads. See module docs.
-unsafe impl Send for RemoteSlices {}
+unsafe impl<E: Elem> Send for RemoteSlices<E> {}
 
-impl RemoteSlices {
-    fn new(head: &[f32], tail: &[f32]) -> Self {
+impl<E: Elem> RemoteSlices<E> {
+    fn new(head: &[E], tail: &[E]) -> Self {
         Self {
             head: head.as_ptr(),
             head_len: head.len(),
@@ -128,6 +160,12 @@ impl RemoteSlices {
         self.len() == 0
     }
 
+    /// Size of one published element in bytes (the descriptor's element
+    /// size — fixed by the endpoint's dtype).
+    pub fn elem_bytes(&self) -> usize {
+        std::mem::size_of::<E>()
+    }
+
     /// Reconstruct the published slices.
     ///
     /// # Safety
@@ -135,7 +173,7 @@ impl RemoteSlices {
     /// Caller must be the rendezvous receiver for this round and must not
     /// use the slices after calling [`Endpoint::rendezvous_ack`] (which is
     /// what frees the sender to mutate the region again).
-    pub unsafe fn slices<'a>(&self) -> (&'a [f32], &'a [f32]) {
+    pub unsafe fn slices<'a>(&self) -> (&'a [E], &'a [E]) {
         let head = if self.head_len == 0 {
             &[][..]
         } else {
@@ -153,15 +191,15 @@ impl RemoteSlices {
 /// A received payload: either a pooled/owned buffer (tiers 2–3) or
 /// published rendezvous descriptors (tier 1).
 #[derive(Debug)]
-pub enum Payload {
+pub enum Payload<E: Elem = f32> {
     /// A materialized buffer; hand back via [`Endpoint::release`] when it
     /// came from a pooled sender.
-    Copied(Vec<f32>),
+    Copied(Vec<E>),
     /// Zero-copy descriptors; consume then [`Endpoint::rendezvous_ack`].
-    Remote(RemoteSlices),
+    Remote(RemoteSlices<E>),
 }
 
-impl Payload {
+impl<E: Elem> Payload<E> {
     /// Payload length in elements.
     pub fn len(&self) -> usize {
         match self {
@@ -174,7 +212,7 @@ impl Payload {
         self.len() == 0
     }
 
-    fn expect_copied(self, rank: usize, from: usize) -> Vec<f32> {
+    fn expect_copied(self, rank: usize, from: usize) -> Vec<E> {
         match self {
             Payload::Copied(v) => v,
             Payload::Remote(_) => panic!(
@@ -188,10 +226,10 @@ impl Payload {
 
 /// A message between ranks: payload plus matching tag.
 #[derive(Debug)]
-pub struct Msg {
+pub struct Msg<E: Elem = f32> {
     pub from: usize,
     pub round: u64,
-    pub payload: Payload,
+    pub payload: Payload<E>,
 }
 
 /// Transport-level errors (used by failure-injection tests).
@@ -225,32 +263,41 @@ pub struct Counters {
     /// instead of gathering into a pooled buffer.
     pub rendezvous_hits: u64,
     /// Payload bytes physically copied by this endpoint's sends (the
-    /// tier-2/3 gather) plus `Store` scatters credited by the executor.
-    /// Rendezvous publishes copy nothing.
+    /// tier-2/3 gather, `size_of::<E>()` per element) plus `Store`
+    /// scatters credited by the executor. Rendezvous publishes copy
+    /// nothing.
     pub bytes_copied: u64,
 }
 
-/// Recycled payload buffers destined for one peer.
-#[derive(Debug, Default)]
-struct BufferPool {
-    free: Vec<Vec<f32>>,
+/// Recycled payload buffers destined for one peer. Capacity matching is
+/// per element, which — the endpoint's dtype being fixed — is equivalent
+/// to matching by byte capacity.
+#[derive(Debug)]
+struct BufferPool<E: Elem> {
+    free: Vec<Vec<E>>,
+}
+
+impl<E: Elem> Default for BufferPool<E> {
+    fn default() -> Self {
+        Self { free: Vec::new() }
+    }
 }
 
 /// The send half of the executor's borrow-pack sendrecv: up to two
 /// working-vector slices (a circular block range resolves to at most two)
 /// plus the caller's verdict on whether publishing them zero-copy is safe
 /// this round (send/recv range disjointness — see the module docs).
-pub struct SendSlices<'a> {
+pub struct SendSlices<'a, E: Elem = f32> {
     pub to: usize,
-    pub head: &'a [f32],
-    pub tail: &'a [f32],
+    pub head: &'a [E],
+    pub tail: &'a [E],
     /// Caller guarantees the slices are not written during this round.
     /// The endpoint still falls back to the pooled tier when rendezvous
     /// is disabled on this endpoint or the payload is empty.
     pub rendezvous: bool,
 }
 
-impl<'a> SendSlices<'a> {
+impl<'a, E: Elem> SendSlices<'a, E> {
     pub fn len(&self) -> usize {
         self.head.len() + self.tail.len()
     }
@@ -260,46 +307,36 @@ impl<'a> SendSlices<'a> {
     }
 }
 
-/// Process-wide rendezvous kill-switch: setting `CCOLL_NO_RENDEZVOUS` to
-/// any non-empty value other than `0` forces every endpoint to the pooled
-/// tier (for transports/platforms that cannot honor the publish contract,
-/// and for A/B measurements). Enforced inside the transport's publish
-/// decision itself — setting [`Endpoint::rendezvous`] directly cannot
-/// bypass it. The verdict is read once per process and cached (the hot
-/// path pays one atomic load).
+/// Process-wide rendezvous kill-switch: the `CCOLL_NO_RENDEZVOUS` knob
+/// (parsed once by [`crate::env_knobs`]; `1|true|yes` disables, malformed
+/// values abort) forces every endpoint to the pooled tier — for
+/// transports/platforms that cannot honor the publish contract, and for
+/// A/B measurements. Enforced inside the transport's publish decision
+/// itself — setting [`Endpoint::rendezvous`] directly cannot bypass it.
 pub fn rendezvous_env_enabled() -> bool {
-    static ENABLED: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
-    *ENABLED.get_or_init(|| match std::env::var("CCOLL_NO_RENDEZVOUS") {
-        Ok(v) => v.is_empty() || v == "0",
-        Err(_) => true,
-    })
+    crate::env_knobs::knobs().rendezvous_enabled
 }
 
 /// Default payload threshold (elements) below which a rendezvous-eligible
 /// send still travels the pooled tier: publishing makes the sender block
 /// for the receiver's ack, so for small payloads the copy is cheaper than
-/// putting the receiver's combine on the sender's critical path. 256 f32
-/// = 1 KiB. Override per process with `CCOLL_RENDEZVOUS_MIN_ELEMS`, per
-/// endpoint via [`Endpoint::rendezvous_min_elems`] (the executor test
+/// putting the receiver's combine on the sender's critical path. 256
+/// elements = 1 KiB of f32 (2 KiB of f64/i64/u64). Override per process
+/// with `CCOLL_RENDEZVOUS_MIN_ELEMS` (validated by [`crate::env_knobs`]),
+/// per endpoint via [`Endpoint::rendezvous_min_elems`] (the executor test
 /// drivers pin it to 0 to exercise the zero-copy tier deterministically).
 pub const DEFAULT_RENDEZVOUS_MIN_ELEMS: usize = 256;
 
-fn rendezvous_min_from_env() -> usize {
-    std::env::var("CCOLL_RENDEZVOUS_MIN_ELEMS")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(DEFAULT_RENDEZVOUS_MIN_ELEMS)
-}
-
-/// One rank's communication handle.
-pub struct Endpoint {
+/// One rank's communication handle for payloads of element type `E`
+/// (default `f32`, so pre-dtype code compiles unchanged).
+pub struct Endpoint<E: Elem = f32> {
     pub rank: usize,
     pub p: usize,
-    txs: Vec<Sender<Msg>>,
-    rx: Receiver<Msg>,
+    txs: Vec<Sender<Msg<E>>>,
+    rx: Receiver<Msg<E>>,
     /// Return path: `(returning peer, buffer)` flowing back to this owner.
-    ret_txs: Vec<Sender<(usize, Vec<f32>)>>,
-    ret_rx: Receiver<(usize, Vec<f32>)>,
+    ret_txs: Vec<Sender<(usize, Vec<E>)>>,
+    ret_rx: Receiver<(usize, Vec<E>)>,
     /// Rendezvous completion path: `ack_txs[r]` feeds rank r's `ack_rx`.
     ack_txs: Vec<Sender<u64>>,
     ack_rx: Receiver<u64>,
@@ -308,9 +345,9 @@ pub struct Endpoint {
     pending_ack: Option<u64>,
     /// `pools[peer]` holds recycled buffers last used for messages to
     /// `peer` (affinity keeps capacities matched to that link's payloads).
-    pools: Vec<BufferPool>,
+    pools: Vec<BufferPool<E>>,
     /// Early arrivals keyed by (from, round).
-    stash: HashMap<(usize, u64), Payload>,
+    stash: HashMap<(usize, u64), Payload<E>>,
     pub counters: Counters,
     /// Opt-in for the zero-copy rendezvous tier. Raw endpoints default to
     /// `false` so plain `sendrecv` users keep the pooled protocol; the
@@ -324,8 +361,14 @@ pub struct Endpoint {
     pub timeout: Duration,
 }
 
-/// Build a fully-connected network of `p` endpoints (one per rank).
+/// Build a fully-connected network of `p` f32 endpoints (one per rank) —
+/// the pre-dtype entry point; see [`network_typed`] for other dtypes.
 pub fn network(p: usize) -> Vec<Endpoint> {
+    network_typed::<f32>(p)
+}
+
+/// Build a fully-connected network of `p` endpoints over any element type.
+pub fn network_typed<E: Elem>(p: usize) -> Vec<Endpoint<E>> {
     assert!(p >= 1);
     let mut txs = Vec::with_capacity(p);
     let mut rxs = Vec::with_capacity(p);
@@ -334,10 +377,10 @@ pub fn network(p: usize) -> Vec<Endpoint> {
     let mut ack_txs = Vec::with_capacity(p);
     let mut ack_rxs = Vec::with_capacity(p);
     for _ in 0..p {
-        let (tx, rx) = channel::<Msg>();
+        let (tx, rx) = channel::<Msg<E>>();
         txs.push(tx);
         rxs.push(rx);
-        let (rtx, rrx) = channel::<(usize, Vec<f32>)>();
+        let (rtx, rrx) = channel::<(usize, Vec<E>)>();
         ret_txs.push(rtx);
         ret_rxs.push(rrx);
         let (atx, arx) = channel::<u64>();
@@ -362,13 +405,13 @@ pub fn network(p: usize) -> Vec<Endpoint> {
             stash: HashMap::new(),
             counters: Counters::default(),
             rendezvous: false,
-            rendezvous_min_elems: rendezvous_min_from_env(),
+            rendezvous_min_elems: crate::env_knobs::knobs().rendezvous_min_elems,
             timeout: Duration::from_secs(30),
         })
         .collect()
 }
 
-impl Endpoint {
+impl<E: Elem> Endpoint<E> {
     /// Pull every returned buffer off the return channel into its pool.
     fn drain_returns(&mut self) {
         while let Ok((peer, buf)) = self.ret_rx.try_recv() {
@@ -381,7 +424,7 @@ impl Endpoint {
     /// exists. Undersized buffers are never handed out: a *hit* must mean
     /// the acquire performs no heap allocation (the zero-alloc regression
     /// tests and the perf ablation rely on that counter being honest).
-    fn take_from(free: &mut Vec<Vec<f32>>, need: usize) -> Option<Vec<f32>> {
+    fn take_from(free: &mut Vec<Vec<E>>, need: usize) -> Option<Vec<E>> {
         let i = free.iter().position(|b| b.capacity() >= need)?;
         let mut buf = free.swap_remove(i);
         buf.clear();
@@ -398,7 +441,7 @@ impl Endpoint {
     /// bypasses the pool and the hit/miss counters entirely: an empty
     /// `Vec` allocates nothing, and pulling a real buffer out of
     /// circulation for it would starve the payload-carrying rounds.
-    pub fn acquire(&mut self, to: usize, need: usize) -> Vec<f32> {
+    pub fn acquire(&mut self, to: usize, need: usize) -> Vec<E> {
         if need == 0 {
             return Vec::new();
         }
@@ -423,7 +466,7 @@ impl Endpoint {
     /// Hand a consumed payload back to the rank that sent it (the buffer's
     /// owner). Best-effort: if the owner already exited, the buffer is
     /// simply dropped.
-    pub fn release(&mut self, from: usize, payload: Vec<f32>) {
+    pub fn release(&mut self, from: usize, payload: Vec<E>) {
         if payload.capacity() == 0 || from == self.rank {
             return; // nothing worth shipping back
         }
@@ -440,7 +483,7 @@ impl Endpoint {
     /// Hand back a consumed [`Payload`], whichever tier it traveled:
     /// pooled buffers return to the sender's pool, rendezvous payloads
     /// are acked.
-    pub fn complete(&mut self, from: usize, round: u64, payload: Payload) {
+    pub fn complete(&mut self, from: usize, round: u64, payload: Payload<E>) {
         match payload {
             Payload::Copied(v) => self.release(from, v),
             Payload::Remote(_) => self.rendezvous_ack(from, round),
@@ -493,10 +536,10 @@ impl Endpoint {
     /// (Endpoint::sendrecv_slices) instead.
     pub fn sendrecv(
         &mut self,
-        send: Option<(usize, &[f32], &[f32])>,
+        send: Option<(usize, &[E], &[E])>,
         recv_from: Option<usize>,
         round: u64,
-    ) -> Result<Option<Vec<f32>>, TransportError> {
+    ) -> Result<Option<Vec<E>>, TransportError> {
         let send = send.map(|(to, head, tail)| SendSlices { to, head, tail, rendezvous: false });
         let payload = self.sendrecv_slices(send, recv_from, round)?;
         Ok(payload.map(|pl| {
@@ -516,10 +559,10 @@ impl Endpoint {
     /// back via [`complete`](Endpoint::complete).
     pub fn sendrecv_slices(
         &mut self,
-        send: Option<SendSlices<'_>>,
+        send: Option<SendSlices<'_, E>>,
         recv_from: Option<usize>,
         round: u64,
-    ) -> Result<Option<Payload>, TransportError> {
+    ) -> Result<Option<Payload<E>>, TransportError> {
         self.counters.sendrecv_rounds += 1;
         if let Some(s) = send {
             debug_assert!(s.to < self.p && s.to != self.rank, "bad send target {}", s.to);
@@ -536,7 +579,7 @@ impl Endpoint {
                 let mut buf = self.acquire(s.to, s.len());
                 buf.extend_from_slice(s.head);
                 buf.extend_from_slice(s.tail);
-                self.counters.bytes_copied += 4 * buf.len() as u64;
+                self.counters.bytes_copied += (std::mem::size_of::<E>() * buf.len()) as u64;
                 Payload::Copied(buf)
             };
             self.send_msg(s.to, round, payload)?;
@@ -556,14 +599,14 @@ impl Endpoint {
     /// [`acquire`](Endpoint::acquire) to keep this path pooled too.
     pub fn sendrecv_owned(
         &mut self,
-        send: Option<(usize, Vec<f32>)>,
+        send: Option<(usize, Vec<E>)>,
         recv_from: Option<usize>,
         round: u64,
-    ) -> Result<Option<Vec<f32>>, TransportError> {
+    ) -> Result<Option<Vec<E>>, TransportError> {
         self.counters.sendrecv_rounds += 1;
         if let Some((to, payload)) = send {
             debug_assert!(to < self.p && to != self.rank, "bad send target {to}");
-            self.counters.bytes_copied += 4 * payload.len() as u64;
+            self.counters.bytes_copied += (std::mem::size_of::<E>() * payload.len()) as u64;
             self.send_msg(to, round, Payload::Copied(payload))?;
         }
         let payload = self.recv_side(recv_from, round)?;
@@ -573,7 +616,7 @@ impl Endpoint {
         }))
     }
 
-    fn send_msg(&mut self, to: usize, round: u64, payload: Payload) -> Result<(), TransportError> {
+    fn send_msg(&mut self, to: usize, round: u64, payload: Payload<E>) -> Result<(), TransportError> {
         self.counters.msgs_sent += 1;
         self.counters.elems_sent += payload.len() as u64;
         self.txs[to]
@@ -585,7 +628,7 @@ impl Endpoint {
         &mut self,
         recv_from: Option<usize>,
         round: u64,
-    ) -> Result<Option<Payload>, TransportError> {
+    ) -> Result<Option<Payload<E>>, TransportError> {
         match recv_from {
             None => Ok(None),
             Some(from) => {
@@ -599,7 +642,7 @@ impl Endpoint {
 
     /// Receive the message tagged `(from, round)`, stashing out-of-order
     /// arrivals from other peers/rounds.
-    fn recv_tagged(&mut self, from: usize, round: u64) -> Result<Payload, TransportError> {
+    fn recv_tagged(&mut self, from: usize, round: u64) -> Result<Payload<E>, TransportError> {
         if let Some(payload) = self.stash.remove(&(from, round)) {
             return Ok(payload);
         }
@@ -622,12 +665,12 @@ impl Endpoint {
     }
 
     /// Raw one-directional send (used by the coordinator's control plane).
-    pub fn send_to(&mut self, to: usize, round: u64, payload: Vec<f32>) -> Result<(), TransportError> {
+    pub fn send_to(&mut self, to: usize, round: u64, payload: Vec<E>) -> Result<(), TransportError> {
         self.send_msg(to, round, Payload::Copied(payload))
     }
 
     /// Raw one-directional receive.
-    pub fn recv_from(&mut self, from: usize, round: u64) -> Result<Vec<f32>, TransportError> {
+    pub fn recv_from(&mut self, from: usize, round: u64) -> Result<Vec<E>, TransportError> {
         let payload = self.recv_tagged(from, round)?;
         self.counters.msgs_recv += 1;
         self.counters.elems_recv += payload.len() as u64;
@@ -635,27 +678,48 @@ impl Endpoint {
     }
 }
 
-/// Run `f(rank, endpoint)` on `p` threads, one per rank, and collect the
-/// per-rank results in rank order. Panics in any rank are propagated.
+/// Run `f(rank, endpoint)` on `p` threads over an **f32** network, one per
+/// rank, and collect the per-rank results in rank order. Panics in any
+/// rank are propagated. See [`run_ranks_typed`] for other dtypes.
 pub fn run_ranks<T, F>(p: usize, f: F) -> Vec<T>
 where
     T: Send + 'static,
     F: Fn(usize, &mut Endpoint) -> T + Send + Sync + 'static,
 {
-    run_ranks_inputs(vec![(); p], move |rank, ep, ()| f(rank, ep))
+    run_ranks_typed::<f32, T, F>(p, f)
+}
+
+/// [`run_ranks`] over a network of any element type.
+pub fn run_ranks_typed<E: Elem, T, F>(p: usize, f: F) -> Vec<T>
+where
+    T: Send + 'static,
+    F: Fn(usize, &mut Endpoint<E>) -> T + Send + Sync + 'static,
+{
+    run_ranks_inputs_typed::<E, (), T, _>(vec![(); p], move |rank, ep, ()| f(rank, ep))
 }
 
 /// Like [`run_ranks`] but moves one element of `inputs` into each rank's
 /// closure (rank r gets `inputs[r]`) — per-rank working vectors travel by
-/// move through the spawn, with no shared `Mutex` hand-off.
+/// move through the spawn, with no shared `Mutex` hand-off. f32 network;
+/// see [`run_ranks_inputs_typed`] for other dtypes.
 pub fn run_ranks_inputs<I, T, F>(inputs: Vec<I>, f: F) -> Vec<T>
 where
     I: Send + 'static,
     T: Send + 'static,
     F: Fn(usize, &mut Endpoint, I) -> T + Send + Sync + 'static,
 {
+    run_ranks_inputs_typed::<f32, I, T, F>(inputs, f)
+}
+
+/// [`run_ranks_inputs`] over a network of any element type.
+pub fn run_ranks_inputs_typed<E: Elem, I, T, F>(inputs: Vec<I>, f: F) -> Vec<T>
+where
+    I: Send + 'static,
+    T: Send + 'static,
+    F: Fn(usize, &mut Endpoint<E>, I) -> T + Send + Sync + 'static,
+{
     let p = inputs.len();
-    let endpoints = network(p);
+    let endpoints = network_typed::<E>(p);
     let f = std::sync::Arc::new(f);
     let mut handles = Vec::with_capacity(p);
     for ((rank, mut ep), input) in endpoints.into_iter().enumerate().zip(inputs) {
@@ -738,6 +802,23 @@ mod tests {
             // pooled gather copies every payload byte; no rendezvous
             assert_eq!(c.bytes_copied, 7 * 4);
             assert_eq!(c.rendezvous_hits, 0);
+        }
+    }
+
+    #[test]
+    fn typed_network_counts_bytes_at_the_element_size() {
+        // Same exchange as above but over i64: copy volume must be
+        // accounted at 8 bytes/element.
+        let out = run_ranks_typed::<i64, _, _>(2, |rank, ep| {
+            let peer = 1 - rank;
+            let data = [rank as i64; 7];
+            let got = ep.sendrecv(Some((peer, &data, &[])), Some(peer), 0).unwrap().unwrap();
+            (got, ep.counters.clone())
+        });
+        for (rank, (got, c)) in out.iter().enumerate() {
+            assert_eq!(got, &vec![(1 - rank) as i64; 7]);
+            assert_eq!(c.elems_sent, 7);
+            assert_eq!(c.bytes_copied, 7 * 8, "i64 gather must count 8 bytes/elem");
         }
     }
 
@@ -833,6 +914,7 @@ mod tests {
             let payload = ep.sendrecv_slices(Some(send), Some(from), 0).unwrap().unwrap();
             let got = match &payload {
                 Payload::Remote(r) => {
+                    assert_eq!(r.elem_bytes(), 4, "f32 descriptors are 4 bytes/elem");
                     let (h, t) = unsafe { r.slices() };
                     vec![h[0], t[0]]
                 }
@@ -929,5 +1011,38 @@ mod tests {
         // (unit-test only; eps[1] never ran)
         ep.timeout = Duration::from_millis(20);
         assert!(ep.finish_round().is_err());
+    }
+
+    #[test]
+    fn typed_rendezvous_roundtrip_i64() {
+        if !rendezvous_env_enabled() {
+            return;
+        }
+        // The zero-copy tier over a non-f32 dtype: descriptors carry the
+        // 8-byte element size, payloads arrive bit-exact, nothing copies.
+        let out = run_ranks_typed::<i64, _, _>(2, |rank, ep| {
+            ep.rendezvous = true;
+            ep.rendezvous_min_elems = 0;
+            let peer = 1 - rank;
+            let data = [rank as i64 - 5, i64::MAX - rank as i64];
+            let send = SendSlices { to: peer, head: &data[..1], tail: &data[1..], rendezvous: true };
+            let payload = ep.sendrecv_slices(Some(send), Some(peer), 0).unwrap().unwrap();
+            let got = match &payload {
+                Payload::Remote(r) => {
+                    assert_eq!(r.elem_bytes(), 8);
+                    let (h, t) = unsafe { r.slices() };
+                    vec![h[0], t[0]]
+                }
+                Payload::Copied(_) => panic!("expected a rendezvous payload"),
+            };
+            ep.complete(peer, 0, payload);
+            ep.finish_round().unwrap();
+            (got, ep.counters.bytes_copied)
+        });
+        for (rank, (got, bytes)) in out.iter().enumerate() {
+            let peer = 1 - rank;
+            assert_eq!(got, &vec![peer as i64 - 5, i64::MAX - peer as i64]);
+            assert_eq!(*bytes, 0, "rank {rank}: rendezvous must copy nothing");
+        }
     }
 }

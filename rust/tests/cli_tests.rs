@@ -46,6 +46,55 @@ fn run_rejects_bad_algorithm() {
 }
 
 #[test]
+fn run_executes_every_dtype_allreduce_and_reduce_scatter() {
+    // ISSUE-3 acceptance: `ccoll run` executes (and exactly verifies)
+    // allreduce and reduce_scatter in every supported dtype.
+    for dtype in ["f32", "f64", "i32", "i64", "u64"] {
+        for alg in ["allreduce", "reduce-scatter"] {
+            main_with_args(args(&[
+                "run",
+                "--run.p",
+                "5",
+                "--run.m",
+                "37",
+                "--run.algorithm",
+                alg,
+                "--run.dtype",
+                dtype,
+            ]))
+            .unwrap_or_else(|e| panic!("{alg} dtype={dtype}: {e}"));
+        }
+    }
+}
+
+#[test]
+fn run_and_validate_reject_bad_dtype_listing_valid_values() {
+    let err = main_with_args(args(&["run", "--run.dtype", "f16"])).unwrap_err();
+    assert!(err.to_string().contains("f32|f64|i32|i64|u64"), "{err}");
+    let err = main_with_args(args(&["validate", "--run.dtype", "bf16", "--validate.max_p", "3"]))
+        .unwrap_err();
+    assert!(err.to_string().contains("f32|f64|i32|i64|u64"), "{err}");
+}
+
+#[test]
+fn bad_algorithm_error_enumerates_alternatives() {
+    let err = main_with_args(args(&["run", "--run.algorithm", "bogus"])).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("ring-allreduce") && msg.contains("rabenseifner"), "{msg}");
+}
+
+#[test]
+fn bad_op_error_enumerates_alternatives() {
+    let err = main_with_args(args(&["run", "--run.op", "xor"])).unwrap_err();
+    assert!(err.to_string().contains("sum|prod|min|max"), "{err}");
+}
+
+#[test]
+fn validate_runs_in_an_integer_dtype() {
+    main_with_args(args(&["validate", "--validate.max_p", "12", "--run.dtype", "i64"])).unwrap();
+}
+
+#[test]
 fn simulate_prints_comparison() {
     main_with_args(args(&["simulate", "--sim.p", "100", "--sim.m", "4096"])).unwrap();
 }

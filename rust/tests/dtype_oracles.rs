@@ -1,0 +1,276 @@
+//! Exact-arithmetic dtype oracles (ISSUE 3): the integer dtypes use
+//! wrapping ⊕, which is *exactly* associative and commutative — so every
+//! schedule, every transport tier and every association of the reduction
+//! must produce **bit-identical** results. No tolerances anywhere in this
+//! file: every assertion is `==` on integer values.
+//!
+//! Three layers of oracle:
+//!   1. pooled vs rendezvous tier bit-identity (i64/u64) over regular /
+//!      random / zipf / degenerate single-block partitions;
+//!   2. cross-generator identity: every schedule generator in the library
+//!      executes bit-identically on both tiers, and every allreduce /
+//!      reduce-scatter generator agrees exactly with the scalar wrapping
+//!      fold;
+//!   3. all four native ops (sum/prod/min/max) exact in every integer
+//!      dtype end-to-end.
+
+use std::sync::Arc;
+
+use circulant_collectives::collectives::{
+    baselines, run_schedule_threads_tiered_typed, run_schedule_threads_typed, Algorithm,
+};
+use circulant_collectives::datatypes::elem::{int_vec, test_value_bounds};
+use circulant_collectives::datatypes::{BlockPartition, Elem};
+use circulant_collectives::ops::{parse_native_typed, ReduceOp, SumOp};
+use circulant_collectives::schedule::Schedule;
+use circulant_collectives::topology::skips::SkipScheme;
+use circulant_collectives::util::rng::SplitMix64;
+
+fn inputs_for<T: Elem>(p: usize, m: usize, seed: u64) -> Vec<Vec<T>> {
+    let (lo, hi) = test_value_bounds(T::DTYPE);
+    let mut rng = SplitMix64::new(seed);
+    (0..p).map(|_| int_vec(&mut rng, m, lo, hi)).collect()
+}
+
+/// Scalar fold of `op` over all rank inputs — exact for integer dtypes in
+/// any association, so it is THE unique correct answer.
+fn fold_oracle<T: Elem>(inputs: &[Vec<T>], op: &dyn ReduceOp<T>) -> Vec<T> {
+    let mut acc = vec![op.identity(); inputs[0].len()];
+    for v in inputs {
+        op.combine(&mut acc, v);
+    }
+    acc
+}
+
+/// The partition shapes of the oracle matrix, for one (p, m).
+fn partitions(p: usize, m: usize) -> Vec<(String, BlockPartition)> {
+    let mut v = vec![
+        ("regular".to_string(), BlockPartition::regular(p, m)),
+        ("random".to_string(), BlockPartition::random(p, m, 60 + p as u64)),
+        ("zipf".to_string(), BlockPartition::zipf(p, m, 1.3, p as u64)),
+        ("single-block-0".to_string(), BlockPartition::single_block(p, m, 0)),
+    ];
+    if p > 1 {
+        v.push(("single-block-last".to_string(), BlockPartition::single_block(p, m, p - 1)));
+    }
+    v
+}
+
+fn assert_cross_tier_identity<T: Elem>(seed: u64) {
+    for p in [2usize, 5, 22] {
+        let m = 7 * p + 3;
+        for (wname, part) in partitions(p, m) {
+            let inputs = inputs_for::<T>(p, part.total(), seed + p as u64);
+            let want = fold_oracle::<T>(&inputs, &SumOp);
+            for alg_name in ["rs", "ar"] {
+                let sched = Algorithm::parse(alg_name).unwrap().schedule(p);
+                let rdv = run_schedule_threads_tiered_typed::<T>(
+                    &sched,
+                    &part,
+                    Arc::new(SumOp),
+                    inputs.clone(),
+                    true,
+                );
+                let pooled = run_schedule_threads_tiered_typed::<T>(
+                    &sched,
+                    &part,
+                    Arc::new(SumOp),
+                    inputs.clone(),
+                    false,
+                );
+                for r in 0..p {
+                    assert_eq!(
+                        rdv[r].0, pooled[r].0,
+                        "{:?} {wname} {alg_name} p={p} r={r}: tiers disagree",
+                        T::DTYPE
+                    );
+                    // …and both match the unique exact answer on the
+                    // region the collective's semantics define.
+                    let range =
+                        if alg_name == "ar" { 0..part.total() } else { part.range(r) };
+                    assert_eq!(
+                        &rdv[r].0[range.clone()],
+                        &want[range],
+                        "{:?} {wname} {alg_name} p={p} r={r}: wrong result",
+                        T::DTYPE
+                    );
+                }
+                assert!(
+                    pooled.iter().all(|(_, c)| c.rendezvous_hits == 0),
+                    "pooled run published"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pooled_and_rendezvous_bit_identical_i64() {
+    assert_cross_tier_identity::<i64>(17);
+}
+
+#[test]
+fn pooled_and_rendezvous_bit_identical_u64() {
+    assert_cross_tier_identity::<u64>(23);
+}
+
+/// Every schedule generator in the library, instantiated for `p` (rooted
+/// generators at two roots; power-of-two-only generators gated).
+fn all_generator_schedules(p: usize) -> Vec<Schedule> {
+    let mut v = Vec::new();
+    for scheme in [SkipScheme::HalvingUp, SkipScheme::PowerOfTwo, SkipScheme::Sqrt] {
+        let skips = scheme.skips(p).unwrap();
+        v.push(circulant_collectives::collectives::reduce_scatter_schedule(p, &skips));
+        v.push(circulant_collectives::collectives::allgather_schedule(p, &skips));
+        v.push(circulant_collectives::collectives::allreduce_schedule(p, &skips));
+    }
+    v.push(baselines::ring_reduce_scatter_schedule(p));
+    v.push(baselines::ring_allgather_schedule(p));
+    v.push(baselines::ring_allreduce_schedule(p));
+    v.push(baselines::bruck_allgather_schedule(p));
+    v.push(baselines::binomial_allreduce_schedule(p));
+    v.push(baselines::rabenseifner_allreduce_schedule(p));
+    // the documented rendezvous-unsafe generator: falls back per round
+    v.push(baselines::recursive_doubling_allreduce_schedule(p));
+    for root in [0, p - 1] {
+        v.push(baselines::binomial_reduce_schedule(p, root));
+        v.push(baselines::binomial_bcast_schedule(p, root));
+        v.push(baselines::binomial_scatter_schedule(p, root));
+        v.push(baselines::binomial_gather_schedule(p, root));
+    }
+    if p.is_power_of_two() {
+        v.push(baselines::recursive_halving_rs_schedule(p));
+        v.push(baselines::recursive_doubling_ag_schedule(p));
+    }
+    v
+}
+
+#[test]
+fn every_generator_bit_identical_across_tiers_i64() {
+    // Executing the SAME schedule on the rendezvous and pooled tiers must
+    // be bit-for-bit indistinguishable, whatever the schedule computes —
+    // the tier only changes where the ⊕ operand is read from, never the
+    // value. Covers every generator, including the rendezvous-unsafe
+    // recursive-doubling butterfly (per-round fallback).
+    for p in [2usize, 5, 8, 22] {
+        let part = BlockPartition::regular(p, 3 * p + 1);
+        for sched in all_generator_schedules(p) {
+            let inputs = inputs_for::<i64>(p, part.total(), 7 + p as u64);
+            let rdv = run_schedule_threads_tiered_typed::<i64>(
+                &sched,
+                &part,
+                Arc::new(SumOp),
+                inputs.clone(),
+                true,
+            );
+            let pooled = run_schedule_threads_tiered_typed::<i64>(
+                &sched,
+                &part,
+                Arc::new(SumOp),
+                inputs,
+                false,
+            );
+            for r in 0..p {
+                assert_eq!(
+                    rdv[r].0, pooled[r].0,
+                    "{} p={p} r={r}: tiers disagree",
+                    sched.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn allreduce_generators_agree_exactly_i64() {
+    // Wrapping ⊕ has a unique answer: every allreduce generator (circulant
+    // under all three schemes, ring, recursive doubling, Rabenseifner,
+    // binomial) must replicate exactly that vector on every rank.
+    for p in [2usize, 5, 22] {
+        let part = BlockPartition::regular(p, 4 * p + 3);
+        let inputs = inputs_for::<i64>(p, part.total(), 300 + p as u64);
+        let want = fold_oracle::<i64>(&inputs, &SumOp);
+        let mut algs = Algorithm::allreduce_family();
+        algs.push(Algorithm::parse("ar:pow2").unwrap());
+        algs.push(Algorithm::parse("ar:sqrt").unwrap());
+        for alg in algs {
+            let sched = alg.schedule(p);
+            let out = run_schedule_threads_typed::<i64>(
+                &sched,
+                &part,
+                Arc::new(SumOp),
+                inputs.clone(),
+            );
+            for (r, buf) in out.iter().enumerate() {
+                assert_eq!(buf, &want, "{} p={p} r={r}", alg.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn reduce_scatter_generators_agree_exactly_u64() {
+    for p in [2usize, 5, 8, 22] {
+        let part = BlockPartition::regular(p, 5 * p + 1);
+        let inputs = inputs_for::<u64>(p, part.total(), 500 + p as u64);
+        let want = fold_oracle::<u64>(&inputs, &SumOp);
+        let mut algs = vec![
+            Algorithm::parse("rs").unwrap(),
+            Algorithm::parse("rs:pow2").unwrap(),
+            Algorithm::parse("rs:sqrt").unwrap(),
+            Algorithm::parse("ring-rs").unwrap(),
+        ];
+        if p.is_power_of_two() {
+            algs.push(Algorithm::parse("rec-halving-rs").unwrap());
+        }
+        for alg in algs {
+            let sched = alg.schedule(p);
+            let out = run_schedule_threads_typed::<u64>(
+                &sched,
+                &part,
+                Arc::new(SumOp),
+                inputs.clone(),
+            );
+            for (r, buf) in out.iter().enumerate() {
+                let range = part.range(r);
+                assert_eq!(
+                    &buf[range.clone()],
+                    &want[range],
+                    "{} p={p} r={r}",
+                    alg.name()
+                );
+            }
+        }
+    }
+}
+
+fn assert_all_ops_exact<T: Elem>(seed: u64) {
+    let p = 5usize;
+    let part = BlockPartition::regular(p, 31);
+    let sched = Algorithm::parse("ar").unwrap().schedule(p);
+    for name in ["sum", "prod", "min", "max"] {
+        let op: Arc<dyn ReduceOp<T>> = Arc::from(parse_native_typed::<T>(name).unwrap());
+        let inputs = inputs_for::<T>(p, part.total(), seed);
+        let want = fold_oracle::<T>(&inputs, op.as_ref());
+        let out = run_schedule_threads_typed::<T>(&sched, &part, op, inputs);
+        for (r, buf) in out.iter().enumerate() {
+            assert_eq!(buf, &want, "{name} {:?} r={r}", T::DTYPE);
+        }
+    }
+}
+
+#[test]
+fn all_native_ops_exact_in_every_integer_dtype() {
+    assert_all_ops_exact::<i32>(41);
+    assert_all_ops_exact::<i64>(42);
+    assert_all_ops_exact::<u64>(43);
+}
+
+#[test]
+fn float_dtypes_exact_on_small_integer_data() {
+    // f32/f64 with small-integer-valued data stay exactly representable,
+    // so even the float dtypes verify with == here (the general float
+    // caveat — non-associative ⊕ — needs values that actually round).
+    assert_cross_tier_identity::<f32>(71);
+    assert_cross_tier_identity::<f64>(72);
+}

@@ -1,0 +1,232 @@
+//! Zero-length edge audit (ISSUE 3): `m = 0` collectives, reduce-scatter
+//! with empty blocks, and degenerate single-block partitions must neither
+//! panic, nor deadlock in rendezvous ack parking, nor corrupt adjacent
+//! data — across all three transport tiers and the whole Communicator API.
+//!
+//! The transport-level invariants these lean on: empty payloads never
+//! publish rendezvous descriptors (`SendSlices::is_empty` guard), so no
+//! ack is ever awaited for them; `Endpoint::acquire(_, 0)` bypasses the
+//! pool (an empty `Vec` allocates nothing); and zero-length circular
+//! ranges resolve to empty slices, which every kernel accepts.
+
+use std::sync::Arc;
+
+use circulant_collectives::collectives::{
+    run_schedule_threads_tiered, run_schedule_threads_tiered_typed, Algorithm,
+};
+use circulant_collectives::coordinator::Launcher;
+use circulant_collectives::datatypes::BlockPartition;
+use circulant_collectives::ops::SumOp;
+
+#[test]
+fn zero_length_allreduce_and_reduce_scatter_all_tiers() {
+    // m = 0: every block of every rank is empty; both tiers must complete
+    // (no send ever publishes, so no rank can park awaiting an ack) and
+    // return empty buffers.
+    for p in [2usize, 3, 5, 8] {
+        let part = BlockPartition::regular(p, 0);
+        for alg_name in ["rs", "ar"] {
+            let sched = Algorithm::parse(alg_name).unwrap().schedule(p);
+            for rendezvous in [true, false] {
+                let inputs: Vec<Vec<f32>> = vec![Vec::new(); p];
+                let out = run_schedule_threads_tiered(
+                    &sched,
+                    &part,
+                    Arc::new(SumOp),
+                    inputs,
+                    rendezvous,
+                );
+                for (r, (buf, c)) in out.iter().enumerate() {
+                    assert!(buf.is_empty(), "{alg_name} p={p} r={r}");
+                    assert_eq!(
+                        c.rendezvous_hits, 0,
+                        "{alg_name} p={p} r={r}: empty payloads must never publish"
+                    );
+                    assert_eq!(c.elems_sent, 0);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn tiny_m_mostly_empty_blocks_exact() {
+    // 0 < m < p: only the first m blocks are non-empty (one element each);
+    // rounds mix empty and 1-element transfers. Exact in i64.
+    for p in [3usize, 5, 22] {
+        for m in [1usize, 2, p - 1] {
+            let part = BlockPartition::regular(p, m);
+            let inputs: Vec<Vec<i64>> =
+                (0..p).map(|r| (0..m).map(|j| (r * 10 + j) as i64).collect()).collect();
+            let mut want = vec![0i64; m];
+            for v in &inputs {
+                for (a, b) in want.iter_mut().zip(v) {
+                    *a += *b; // values tiny; no overflow
+                }
+            }
+            for alg_name in ["rs", "ar"] {
+                let sched = Algorithm::parse(alg_name).unwrap().schedule(p);
+                for rendezvous in [true, false] {
+                    let out = run_schedule_threads_tiered_typed::<i64>(
+                        &sched,
+                        &part,
+                        Arc::new(SumOp),
+                        inputs.clone(),
+                        rendezvous,
+                    );
+                    for (r, (buf, _)) in out.iter().enumerate() {
+                        let range =
+                            if alg_name == "ar" { 0..m } else { part.range(r) };
+                        assert_eq!(
+                            &buf[range.clone()],
+                            &want[range],
+                            "{alg_name} p={p} m={m} r={r} rdv={rendezvous}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn single_block_nonroot_ranks_complete_on_both_tiers() {
+    // Degenerate Corollary-3 partition: all m elements in block `root`.
+    // Non-root ranks own empty blocks — they forward partials but keep
+    // nothing; rendezvous rounds whose payloads are empty must fall back
+    // silently rather than park for an ack.
+    for p in [2usize, 5, 22] {
+        let m = 17usize;
+        for root in [0, p / 2, p - 1] {
+            let part = BlockPartition::single_block(p, m, root);
+            let inputs: Vec<Vec<i64>> =
+                (0..p).map(|r| vec![r as i64 + 1; m]).collect();
+            let want: i64 = (1..=p as i64).sum();
+            let sched = Algorithm::parse("rs").unwrap().schedule(p);
+            for rendezvous in [true, false] {
+                let out = run_schedule_threads_tiered_typed::<i64>(
+                    &sched,
+                    &part,
+                    Arc::new(SumOp),
+                    inputs.clone(),
+                    rendezvous,
+                );
+                // root's block carries the full reduction …
+                let (root_buf, _) = &out[root];
+                assert!(
+                    root_buf[part.range(root)].iter().all(|&x| x == want),
+                    "p={p} root={root} rdv={rendezvous}"
+                );
+                // … and every non-root recv range is empty (nothing to
+                // fill — their owned block has zero length).
+                for (r, (buf, _)) in out.iter().enumerate() {
+                    assert_eq!(buf.len(), m, "p={p} r={r}");
+                    if r != root {
+                        assert_eq!(part.range(r).len(), 0);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn communicator_zero_length_collectives() {
+    // The whole user-facing API at m = 0 / b = 0: nothing may panic,
+    // deadlock or return the wrong (non-empty) shape.
+    let p = 4usize;
+    let out = Launcher::new(p).run(move |mut comm| {
+        // allreduce of an empty vector (this is also what barrier does)
+        let mut empty: Vec<f32> = Vec::new();
+        comm.allreduce(&mut empty, "sum").unwrap();
+        assert!(empty.is_empty());
+
+        // reduce_scatter where several ranks own empty blocks
+        let counts = vec![0usize, 3, 0, 2];
+        let total: usize = counts.iter().sum();
+        let send: Vec<f32> = (0..total).map(|j| j as f32).collect();
+        let mut recv = vec![f32::NAN; counts[comm.rank()]];
+        comm.reduce_scatter(&send, &counts, &mut recv, "sum").unwrap();
+        let part = BlockPartition::from_counts(&counts);
+        for (i, j) in part.range(comm.rank()).enumerate() {
+            assert_eq!(recv[i], (p * j) as f32);
+        }
+
+        // reduce-to-root and bcast of empty vectors
+        let mut nothing: Vec<f32> = Vec::new();
+        comm.reduce(&mut nothing, 1, "sum").unwrap();
+        comm.bcast(&mut nothing, 1).unwrap();
+
+        // allgather / scatter / gather with zero-sized blocks
+        let mut all: Vec<f32> = Vec::new();
+        comm.allgather(&[], &mut all).unwrap();
+        assert!(all.is_empty());
+        let mut mine: Vec<f32> = Vec::new();
+        let root_send: Option<Vec<f32>> = (comm.rank() == 0).then(Vec::new);
+        comm.scatter(root_send.as_deref(), &mut mine, 0).unwrap();
+        let mut gathered = (comm.rank() == 0).then(Vec::new);
+        comm.gather(&mine, gathered.as_deref_mut(), 0).unwrap();
+
+        // all-to-all with empty blocks, regular and irregular
+        let got = comm.alltoall(&[], 0).unwrap();
+        assert!(got.is_empty());
+        let zeros = vec![0usize; p];
+        let got = comm.alltoallv(&[], &zeros, &zeros).unwrap();
+        assert!(got.is_empty());
+
+        // and the network is still healthy afterwards
+        let mut live = vec![comm.rank() as f32];
+        comm.allreduce(&mut live, "sum").unwrap();
+        live[0]
+    });
+    let want: f32 = (0..p).map(|r| r as f32).sum();
+    assert!(out.iter().all(|&x| x == want), "network unhealthy after zero-length collectives");
+}
+
+#[test]
+fn reduce_scatter_all_counts_zero() {
+    // Fully-empty irregular partition: p blocks, every count 0.
+    let p = 5usize;
+    let out = Launcher::new(p).run(move |mut comm| {
+        let counts = vec![0usize; p];
+        let mut recv: Vec<f32> = Vec::new();
+        comm.reduce_scatter(&[], &counts, &mut recv, "sum").is_ok() && recv.is_empty()
+    });
+    assert!(out.iter().all(|&ok| ok));
+}
+
+#[test]
+fn min_max_identity_on_empty_blocks_is_not_skipped() {
+    // Ops whose identity is not 0 (min: MAX, max: MIN) over a partition
+    // with empty blocks: untouched regions must be *preserved*, reduced
+    // regions exact — i.e. the executor never writes identity junk over
+    // data and never skips a non-empty combine next to an empty one.
+    for p in [2usize, 5] {
+        let part = BlockPartition::from_counts(
+            &(0..p).map(|g| if g % 2 == 0 { 3 } else { 0 }).collect::<Vec<_>>(),
+        );
+        let m = part.total();
+        let inputs: Vec<Vec<i64>> =
+            (0..p).map(|r| (0..m).map(|j| (r as i64 + 2) * (j as i64 + 1)).collect()).collect();
+        let mut want = vec![i64::MAX; m];
+        for v in &inputs {
+            for (a, b) in want.iter_mut().zip(v) {
+                *a = (*a).min(*b);
+            }
+        }
+        let sched = Algorithm::parse("ar").unwrap().schedule(p);
+        for rendezvous in [true, false] {
+            let op = circulant_collectives::ops::parse_native_typed::<i64>("min").unwrap();
+            let out = run_schedule_threads_tiered_typed::<i64>(
+                &sched,
+                &part,
+                Arc::from(op),
+                inputs.clone(),
+                rendezvous,
+            );
+            for (r, (buf, _)) in out.iter().enumerate() {
+                assert_eq!(buf, &want, "p={p} r={r} rdv={rendezvous}");
+            }
+        }
+    }
+}
