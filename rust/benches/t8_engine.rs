@@ -1,0 +1,143 @@
+//! T8 — engine amortization: persistent rank workers vs spawn-per-call.
+//!
+//! The ISSUE-4 acceptance gate: for small (≤ 4 KiB) repeated allreduces
+//! at p=8, a warm [`CollectiveEngine`] (workers + endpoint network +
+//! plan cache all persistent) must beat the cold path (a full
+//! `Launcher::run` per operation: p thread spawns, fresh endpoints,
+//! fresh schedule) by ≥ 2× per-op latency. Also reports pipelined
+//! throughput with a window of in-flight operations, plan-cache
+//! hit rates, and the thread-spawn ledger. Emits `BENCH_t8.json`.
+
+use circulant_collectives::bench_harness::{bench_header, fast_mode, time_reps, BenchReport};
+use circulant_collectives::coordinator::Launcher;
+use circulant_collectives::engine::{CollectiveEngine, EngineConfig, OpRequest};
+use circulant_collectives::transport::rank_threads_spawned;
+use circulant_collectives::util::stats::Summary;
+use circulant_collectives::util::table::{fmt_si, Table};
+
+fn main() {
+    bench_header("T8", "persistent engine vs spawn-per-call — per-op latency amortization");
+    let p = 8usize;
+    // Element counts ≤ 1024 f32 = ≤ 4 KiB payloads — the regime where
+    // per-op overhead dominates and amortization matters most.
+    let sizes: Vec<usize> = if fast_mode() { vec![64, 1024] } else { vec![64, 256, 1024] };
+    let (cold_reps, warm_reps) = if fast_mode() { (10, 300) } else { (30, 1500) };
+
+    let mut report = BenchReport::new("t8");
+    report.num("p", p as f64);
+    report.nums("sweep_m", sizes.iter().map(|&m| m as f64));
+    let mut cold_us = Vec::new();
+    let mut warm_us = Vec::new();
+    let mut speedups = Vec::new();
+    let mut pipelined_ops_per_sec = Vec::new();
+
+    let mut t = Table::new(
+        &format!("repeated f32 sum-allreduce, p={p} (medians)"),
+        &["m (elems)", "bytes", "cold/op", "warm/op", "speedup", "pipelined ops/s"],
+    );
+
+    for &m in &sizes {
+        let inputs: Vec<Vec<f32>> =
+            (0..p).map(|r| (0..m).map(|j| ((r + j) % 7) as f32).collect()).collect();
+        let want: Vec<f32> =
+            (0..m).map(|j| (0..p).map(|r| ((r + j) % 7) as f32).sum()).collect();
+
+        // --- cold: full Launcher::run per op (spawns p threads every
+        // time — exactly what pre-engine callers did) -----------------
+        let cold_inputs = inputs.clone();
+        let cold_want = want.clone();
+        let cold = Summary::of(&time_reps(2, cold_reps, move || {
+            let ins = std::sync::Arc::new(std::sync::Mutex::new(
+                cold_inputs.clone().into_iter().map(Some).collect::<Vec<_>>(),
+            ));
+            let out = Launcher::new(p).run(move |mut comm| {
+                let mut buf = ins.lock().unwrap()[comm.rank()].take().unwrap();
+                comm.allreduce(&mut buf, "sum").unwrap();
+                buf
+            });
+            assert_eq!(out[0], cold_want);
+        }));
+
+        // --- warm: one persistent engine, sequential submit → wait ----
+        let spawned_before = rank_threads_spawned();
+        let mut engine: CollectiveEngine<f32> = CollectiveEngine::new(EngineConfig::new(p));
+        let warm_inputs = inputs.clone();
+        let warm_want = want.clone();
+        let warm = {
+            let engine = &mut engine;
+            Summary::of(&time_reps(20, warm_reps, move || {
+                let out = engine
+                    .submit(OpRequest::allreduce(warm_inputs.clone(), "sum"))
+                    .unwrap()
+                    .wait()
+                    .unwrap();
+                assert_eq!(out[0], warm_want);
+            }))
+        };
+
+        // --- warm, pipelined: window of 8 in-flight ops ---------------
+        let pipe_ops = if fast_mode() { 400 } else { 2000 };
+        let t0 = std::time::Instant::now();
+        let mut window = std::collections::VecDeque::new();
+        for _ in 0..pipe_ops {
+            window.push_back(engine.submit(OpRequest::allreduce(inputs.clone(), "sum")).unwrap());
+            if window.len() >= 8 {
+                window.pop_front().unwrap().wait().unwrap();
+            }
+        }
+        while let Some(h) = window.pop_front() {
+            h.wait().unwrap();
+        }
+        let pipe_rate = pipe_ops as f64 / t0.elapsed().as_secs_f64();
+        let stats = engine.plan_stats();
+        engine.shutdown();
+        let engine_spawned = rank_threads_spawned() - spawned_before;
+        assert_eq!(
+            engine_spawned, p as u64,
+            "m={m}: warm engine must spawn exactly p threads for its whole lifetime"
+        );
+        assert!(
+            stats.hits as usize >= warm_reps + pipe_ops,
+            "m={m}: repeated identical ops must hit the plan cache ({} hits)",
+            stats.hits
+        );
+
+        let speedup = cold.median / warm.median;
+        t.row(&[
+            m.to_string(),
+            (4 * m).to_string(),
+            format!("{}s", fmt_si(cold.median)),
+            format!("{}s", fmt_si(warm.median)),
+            format!("{speedup:.1}×"),
+            fmt_si(pipe_rate),
+        ]);
+        cold_us.push(cold.median * 1e6);
+        warm_us.push(warm.median * 1e6);
+        speedups.push(speedup);
+        pipelined_ops_per_sec.push(pipe_rate);
+
+        // The acceptance gate (per size, all ≤ 4 KiB): warm ≥ 2× cold.
+        assert!(
+            speedup >= 2.0,
+            "m={m} ({} B): warm engine only {speedup:.2}× faster than spawn-per-call \
+             (cold {:.1}µs vs warm {:.1}µs) — acceptance requires ≥ 2×",
+            4 * m,
+            cold.median * 1e6,
+            warm.median * 1e6,
+        );
+    }
+    t.print();
+    let min_speedup = speedups.iter().cloned().fold(f64::INFINITY, f64::min);
+    println!(
+        "engine amortization: warm-engine per-op latency beats cold spawn-per-call by \
+         ≥ {min_speedup:.1}× for every payload ≤ 4 KiB at p={p} — spawn-once, plan-cached, \
+         pool-warm serving path REPRODUCED"
+    );
+    report.nums("cold_us", cold_us);
+    report.nums("warm_us", warm_us);
+    report.nums("speedup", speedups);
+    report.nums("pipelined_ops_per_sec", pipelined_ops_per_sec);
+    report.num("min_speedup", min_speedup);
+    report.num("gate_speedup", 2.0);
+    report.write();
+}

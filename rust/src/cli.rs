@@ -1,10 +1,13 @@
 //! `ccoll` command-line interface (hand-rolled; clap unavailable offline).
 //!
 //! Subcommands:
-//!   info       platform + artifact + config report, plus the supported
-//!              (op, dtype) kernel matrix
+//!   info       platform + artifact + config report, the supported
+//!              (op, dtype) kernel matrix, and every CCOLL_* knob
 //!   run        execute a collective on the thread network, verify, report
 //!              (generic over `run.dtype`: f32|f64|i32|i64|u64)
+//!   serve      replay a recorded (or synthesized) mix of collectives
+//!              through ONE persistent engine — the serving-path driver
+//!              (per-op latency, plan-cache stats, spawn-once assertion)
 //!   simulate   α-β-γ DES + closed-form comparison sweep
 //!   trace      symbolic round-by-round trace (reproduces the paper's §2.1
 //!              p=22 example)
@@ -35,10 +38,16 @@ pub const USAGE: &str = "\
 usage: ccoll [--config FILE] [--key value …] <command>
 
 commands:
-  info                     show platform, artifacts, resolved config, and
-                           the supported (op, dtype) kernel matrix
+  info                     show platform, artifacts, resolved config, the
+                           supported (op, dtype) kernel matrix, and every
+                           CCOLL_* environment knob
   run                      run a collective (keys: run.p run.m run.algorithm
                            run.op run.dtype run.backend run.seed run.verify)
+  serve                    replay a mix of collectives through one
+                           persistent engine (keys: serve.p serve.ops
+                           serve.m serve.inflight serve.seed serve.scheme
+                           serve.verify serve.trace|--trace FILE run.dtype
+                           run.op engine.queue_depth engine.park)
   simulate                 cost-model sweep (keys: sim.p sim.m cost.alpha
                            cost.beta cost.gamma)
   trace                    symbolic trace (keys: trace.p trace.rank)
@@ -72,6 +81,7 @@ pub fn main_with_args(args: Vec<String>) -> Result<()> {
     match cmd {
         "info" => cmd_info(&cfg),
         "run" => cmd_run(&cfg),
+        "serve" => cmd_serve(&cfg),
         "simulate" => cmd_simulate(&cfg),
         "trace" => cmd_trace(&cfg),
         "validate" => cmd_validate(&cfg),
@@ -114,6 +124,50 @@ fn cmd_info(cfg: &Config) -> Result<()> {
     t.print();
     println!("integer ⊕ is wrapping (exactly associative — bit-exact oracles);");
     println!("float ⊕ is IEEE (non-associative — fixed-schedule reproducibility only).");
+    // Every CCOLL_* knob with its resolved value (parsed once per process
+    // by env_knobs; malformed values abort before we get here).
+    let k = crate::env_knobs::knobs();
+    let mut kt = Table::new("environment knobs (CCOLL_*)", &["knob", "value", "meaning"]);
+    kt.row(&[
+        "CCOLL_NO_RENDEZVOUS".into(),
+        if k.rendezvous_enabled { "0 (rendezvous on)".into() } else { "1 (rendezvous OFF)".into() },
+        "kill-switch for the zero-copy transport tier".into(),
+    ]);
+    kt.row(&[
+        "CCOLL_RENDEZVOUS_MIN_ELEMS".into(),
+        k.rendezvous_min_elems.to_string(),
+        "min payload (elems) for a rendezvous publish".into(),
+    ]);
+    kt.row(&[
+        "CCOLL_BENCH_FAST".into(),
+        if k.bench_fast { "1".into() } else { "0".into() },
+        "shrink bench sweeps for smoke runs".into(),
+    ]);
+    kt.row(&[
+        "CCOLL_BENCH_DTYPE".into(),
+        k.bench_dtype.name().to_string(),
+        "element type of the T1/T2 benches".into(),
+    ]);
+    kt.row(&[
+        "CCOLL_PJRT_CHUNK".into(),
+        k.pjrt_chunk.map_or("unset".to_string(), |v| v.to_string()),
+        "PJRT combine chunk-bucket override (elems)".into(),
+    ]);
+    kt.row(&[
+        "CCOLL_ENGINE_QUEUE_DEPTH".into(),
+        if k.engine_queue_depth == 0 {
+            "0 (unbounded)".into()
+        } else {
+            k.engine_queue_depth.to_string()
+        },
+        "max in-flight engine ops before submit parks".into(),
+    ]);
+    kt.row(&[
+        "CCOLL_ENGINE_PARK".into(),
+        k.engine_park.name().to_string(),
+        format!("engine worker wait strategy ({})", crate::engine::ParkPolicy::NAMES_HELP),
+    ]);
+    kt.print();
     let n: usize = cfg.entries().count();
     if n > 0 {
         println!("config:");
@@ -227,6 +281,250 @@ fn cmd_run_typed<T: Elem>(cfg: &Config) -> Result<()> {
             bail!("verification failed");
         }
     }
+    Ok(())
+}
+
+/// One replayed operation of the serve trace.
+#[derive(Debug, Clone)]
+struct TraceOp {
+    /// `true` = allreduce, `false` = reduce-scatter (regular partition).
+    allreduce: bool,
+    m: usize,
+    op: String,
+}
+
+/// Parse a recorded trace: one op per line, `<kind> <m> [op]` with kind ∈
+/// `allreduce|ar|reduce-scatter|rs`, `#` comments and blank lines ignored.
+fn parse_trace(path: &str) -> Result<Vec<TraceOp>> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow!("cannot read trace {path}: {e}"))?;
+    let mut ops = Vec::new();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut fields = line.split_whitespace();
+        let kind = fields.next().unwrap();
+        let allreduce = match kind {
+            "allreduce" | "ar" => true,
+            "reduce-scatter" | "rs" => false,
+            other => bail!(
+                "trace {path}:{}: unknown kind {other:?} (valid: allreduce|ar|reduce-scatter|rs)",
+                ln + 1
+            ),
+        };
+        let m: usize = fields
+            .next()
+            .ok_or_else(|| anyhow!("trace {path}:{}: missing element count", ln + 1))?
+            .replace('_', "")
+            .parse()
+            .map_err(|_| anyhow!("trace {path}:{}: bad element count", ln + 1))?;
+        let op = fields.next().unwrap_or("sum").to_string();
+        if !NATIVE_OP_NAMES.contains(&op.as_str()) {
+            bail!("trace {path}:{}: unknown op {op:?} (valid: {OP_NAMES_HELP})", ln + 1);
+        }
+        if let Some(extra) = fields.next() {
+            bail!("trace {path}:{}: trailing field {extra:?} (format: <kind> <m> [op])", ln + 1);
+        }
+        ops.push(TraceOp { allreduce, m, op });
+    }
+    if ops.is_empty() {
+        bail!("trace {path}: no operations");
+    }
+    Ok(ops)
+}
+
+/// Deterministic synthetic mix when no trace file is given: alternating
+/// allreduce/reduce-scatter over a few payload sizes and ⊕ names.
+fn synth_mix(n: usize, m: usize, base_op: &str, seed: u64) -> Vec<TraceOp> {
+    let mut rng = SplitMix64::new(seed);
+    let sizes = [m.max(1), (m / 2).max(1), (m / 4).max(1)];
+    let ops = [base_op, "max"];
+    (0..n)
+        .map(|_| TraceOp {
+            allreduce: rng.next_below(2) == 0,
+            m: sizes[rng.next_below(sizes.len())],
+            op: ops[rng.next_below(ops.len())].to_string(),
+        })
+        .collect()
+}
+
+fn cmd_serve(cfg: &Config) -> Result<()> {
+    match cfg.dtype()? {
+        DType::F32 => cmd_serve_typed::<f32>(cfg),
+        DType::F64 => cmd_serve_typed::<f64>(cfg),
+        DType::I32 => cmd_serve_typed::<i32>(cfg),
+        DType::I64 => cmd_serve_typed::<i64>(cfg),
+        DType::U64 => cmd_serve_typed::<u64>(cfg),
+    }
+}
+
+/// The serving-path replay driver: ONE persistent engine, a window of
+/// in-flight operations, per-op latency accounting, and a hard assertion
+/// that the whole replay spawned exactly `p` rank threads (spawn-once).
+fn cmd_serve_typed<T: Elem>(cfg: &Config) -> Result<()> {
+    use crate::engine::{CollectiveEngine, EngineConfig, OpHandle, OpRequest, ParkPolicy};
+    use std::collections::VecDeque;
+    use std::time::Instant;
+
+    let p = cfg.get_usize("serve.p", 8)?;
+    let n_ops = cfg.get_usize("serve.ops", 1000)?;
+    let m = cfg.get_usize("serve.m", 1024)?;
+    let inflight = cfg.get_usize("serve.inflight", 8)?.max(1);
+    let seed = cfg.get_usize("serve.seed", 1)? as u64;
+    let verify = cfg.get_bool("serve.verify", true)?;
+    let base_op = cfg.get_str("run.op", "sum").to_string();
+    if !NATIVE_OP_NAMES.contains(&base_op.as_str()) {
+        bail!("unknown run.op {base_op:?} (valid: {OP_NAMES_HELP})");
+    }
+    let scheme = SkipScheme::parse(cfg.get_str("serve.scheme", "halving"))
+        .map_err(|e| anyhow!("{e}"))?;
+    let knobs = crate::env_knobs::knobs();
+    let queue_depth = cfg.get_usize("engine.queue_depth", knobs.engine_queue_depth)?;
+    let park_name = cfg.get_str("engine.park", knobs.engine_park.name());
+    let park = ParkPolicy::parse(park_name).ok_or_else(|| {
+        anyhow!("unknown engine.park {park_name:?} (valid: {})", ParkPolicy::NAMES_HELP)
+    })?;
+
+    // `serve --trace FILE` (the bare --trace flag) or `--serve.trace FILE`.
+    let trace_path = cfg.get("serve.trace").or_else(|| cfg.get("trace"));
+    let trace = match trace_path {
+        Some(path) if path != "true" => parse_trace(path)?,
+        Some(_) => bail!("--trace needs a file path (or use --serve.trace FILE)"),
+        None => synth_mix(n_ops, m, &base_op, seed),
+    };
+    if trace.is_empty() {
+        bail!("serve: nothing to replay (serve.ops = 0?)");
+    }
+
+    println!(
+        "serve: p={p}, {} ops ({}), window={inflight}, dtype={}, scheme={}, \
+         queue_depth={queue_depth}, park={}",
+        trace.len(),
+        trace_path.map_or_else(|| format!("synthetic mix, seed {seed}"), |t| format!("trace {t}")),
+        T::DTYPE.name(),
+        scheme.name(),
+        park.name(),
+    );
+
+    let spawned_before = crate::transport::rank_threads_spawned();
+    let mut engine = CollectiveEngine::<T>::new(
+        EngineConfig::new(p)
+            .scheme(scheme)
+            .queue_depth(queue_depth)
+            .park(park),
+    );
+
+    let (lo, hi) = elem::test_value_bounds(T::DTYPE);
+    let mut rng = SplitMix64::new(seed ^ 0x5e3e);
+    // (submit time, handle, oracle, op) — popped in submission order once
+    // the window fills; per-op latency is submit→wait-complete.
+    let mut pending: VecDeque<(Instant, OpHandle<T>, Option<Vec<T>>, TraceOp)> =
+        VecDeque::with_capacity(inflight);
+    let mut latencies: Vec<f64> = Vec::with_capacity(trace.len());
+    let mut verified_ops = 0usize;
+    let mut drain_one = |pending: &mut VecDeque<(Instant, OpHandle<T>, Option<Vec<T>>, TraceOp)>,
+                         latencies: &mut Vec<f64>|
+     -> Result<()> {
+        let (t_submit, handle, oracle, top) = pending.pop_front().expect("nonempty window");
+        let out = handle.wait().map_err(|e| anyhow!("serve op failed: {e}"))?;
+        latencies.push(t_submit.elapsed().as_secs_f64());
+        if let Some(want) = oracle {
+            verified_ops += 1;
+            let part = BlockPartition::regular(p, top.m);
+            for (r, buf) in out.iter().enumerate() {
+                let good = if top.allreduce {
+                    buf[..] == want[..]
+                } else {
+                    buf[part.range(r)] == want[part.range(r)]
+                };
+                if !good {
+                    bail!(
+                        "serve VERIFY FAILED: {} m={} op={} rank {r}",
+                        if top.allreduce { "allreduce" } else { "reduce-scatter" },
+                        top.m,
+                        top.op
+                    );
+                }
+            }
+        }
+        Ok(())
+    };
+
+    let t0 = Instant::now();
+    for top in &trace {
+        let inputs: Vec<Vec<T>> = (0..p).map(|_| elem::int_vec(&mut rng, top.m, lo, hi)).collect();
+        let oracle = if verify && top.op == "sum" {
+            let mut acc = vec![T::zero(); top.m];
+            for v in &inputs {
+                SumOp.combine(&mut acc, v);
+            }
+            Some(acc)
+        } else {
+            None
+        };
+        let req = if top.allreduce {
+            OpRequest::allreduce(inputs, &top.op)
+        } else {
+            OpRequest::reduce_scatter(inputs, &top.op)
+        };
+        let handle = engine.submit(req).map_err(|e| anyhow!("submit failed: {e}"))?;
+        pending.push_back((Instant::now(), handle, oracle, top.clone()));
+        if pending.len() >= inflight {
+            drain_one(&mut pending, &mut latencies)?;
+        }
+    }
+    while !pending.is_empty() {
+        drain_one(&mut pending, &mut latencies)?;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = engine.plan_stats();
+    engine.shutdown();
+
+    // Spawn-once assertion: the whole replay must have created exactly the
+    // p engine workers — any per-op thread spawn is a serving regression.
+    let spawned = crate::transport::rank_threads_spawned() - spawned_before;
+    if spawned != p as u64 {
+        bail!(
+            "engine spawned {spawned} rank threads over {} ops (want exactly {p}: \
+             spawn-once violated — something spawns per operation)",
+            trace.len()
+        );
+    }
+
+    let lat = crate::util::stats::Summary::of(&latencies);
+    let mut t = Table::new(
+        "serve replay",
+        &["ops", "wall s", "ops/s", "lat mean", "lat p50", "lat p95", "plan hit/miss", "threads"],
+    );
+    t.row(&[
+        trace.len().to_string(),
+        format!("{wall:.3}"),
+        fmt_si(trace.len() as f64 / wall),
+        format!("{}s", fmt_si(lat.mean)),
+        format!("{}s", fmt_si(lat.median)),
+        format!("{}s", fmt_si(lat.p95)),
+        format!("{}/{}", stats.hits, stats.misses),
+        format!("{spawned} (= p ✓)"),
+    ]);
+    t.print();
+    if verify && verified_ops == 0 {
+        println!(
+            "serve: note — verification is on but the mix contained no sum ops, \
+             so no result was oracle-checked"
+        );
+    }
+    println!(
+        "serve: OK — {} ops through one engine, {} plan-cache hits, spawn-once verified{}",
+        trace.len(),
+        stats.hits,
+        if verified_ops > 0 {
+            format!(", {verified_ops} sum ops verified exactly")
+        } else {
+            String::new()
+        }
+    );
     Ok(())
 }
 

@@ -1,6 +1,15 @@
 //! Schedule executor: run any [`Schedule`] with real data over the thread
 //! transport, generic over the element type.
 //!
+//! The execution core is the resumable [`OpCursor`] — one rank's driver
+//! for one collective, advanced by [`OpCursor::step`] in either blocking
+//! mode (the classic one-shot executor, [`execute_rank`]) or non-blocking
+//! mode (the [`crate::engine`] worker loop, which interleaves many
+//! cursors on one thread so several collectives can be in flight and
+//! complete out of submission order). Each cursor tags its traffic with
+//! its own operation epoch, so concurrent schedules on the same endpoints
+//! never cross-match (`crate::transport` docs, "Op tags").
+//!
 //! Each rank keeps its working vector in **global layout** (block `g` lives
 //! at the partition offset of `g`, for every rank). A circular block range
 //! resolves to at most two contiguous slices; sends *gather* those slices
@@ -62,7 +71,7 @@ use std::ops::Range;
 use crate::datatypes::{BlockPartition, Elem};
 use crate::ops::ReduceOp;
 use crate::schedule::{RecvAction, Schedule};
-use crate::transport::{Counters, Endpoint, Payload, SendSlices, TransportError};
+use crate::transport::{Counters, Endpoint, Payload, SendSlices, Tag, TransportError};
 
 /// Read-only view of `base[r]`.
 ///
@@ -101,7 +110,318 @@ pub enum CollectiveError {
     UnknownOp { rank: usize, name: String, dtype: &'static str },
 }
 
-/// Execute `schedule` for this endpoint's rank.
+/// Whether a driver made it to the end of its schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Progress {
+    /// Every round executed; the working vector holds the final result.
+    Done,
+    /// Waiting on a peer (an incoming payload or a rendezvous ack). Only
+    /// non-blocking [`OpCursor::step`]s return this.
+    Pending,
+}
+
+/// What the cursor is waiting for within its current round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Wait {
+    /// Round not yet entered: send side (if any) still to be issued.
+    Send,
+    /// Send issued; waiting for the round's incoming payload.
+    Recv,
+    /// Payload consumed (or none expected); waiting for the rendezvous
+    /// ack of this round's publish (trivially satisfied for pooled sends).
+    Ack,
+}
+
+/// Resumable per-operation schedule driver — one rank's execution state
+/// for one collective, advanced by [`step`](OpCursor::step).
+///
+/// The cursor holds **no borrow** of the working vector, the endpoint or
+/// the schedule: callers pass them to every `step`, which makes the
+/// cursor freely storable in the [`crate::engine`] worker's table of
+/// in-flight operations (no self-referential structs). Two modes share
+/// one code path:
+///
+///  * **blocking** (`step(.., true)`) runs the whole schedule in one
+///    call, parking on the transport's blocking receives/acks exactly
+///    like the pre-engine executor — [`execute_rank`] is now this;
+///  * **non-blocking** (`step(.., false)`) advances as far as possible
+///    without parking and returns [`Progress::Pending`] at the first
+///    wait, so a single worker thread can interleave many cursors and
+///    complete operations out of submission order.
+///
+/// Wire discipline: every message/ack of this operation is tagged
+/// `Tag { op: op_tag, round: round_base + k }` — concurrent cursors on
+/// one endpoint cannot cross-match as long as their `op_tag`s differ
+/// (the engine allocates a fresh epoch per submitted op; the legacy
+/// blocking path runs in epoch 0 with the communicator's monotonic
+/// round windows).
+///
+/// # Safety contract (same as the original executor, per `step` call)
+///
+/// `buf` must be the *same allocation* across every `step` of one
+/// cursor whenever a rendezvous publish may be outstanding: published
+/// [`RemoteSlices`](crate::transport::RemoteSlices) point into it, and
+/// the cursor only returns `Pending`/`Done` in states where either no
+/// publish is outstanding or the published region is not mutated until
+/// the ack arrives (the `Wait::Ack` gate). Callers must not mutate or
+/// move the buffer contents between steps of an unfinished cursor; on
+/// error the cursor quiesces its own publishes before returning.
+#[derive(Debug, Clone)]
+pub struct OpCursor {
+    op_tag: u64,
+    round_base: u64,
+    round: usize,
+    wait: Wait,
+    /// Monotone count of state advances — the engine's liveness watchdog
+    /// compares successive values to detect a stalled operation.
+    progress: u64,
+}
+
+impl OpCursor {
+    /// A cursor for one operation: `op_tag` is the wire epoch (0 = the
+    /// legacy single-op space), `round_base` offsets the round tags
+    /// within the epoch (the communicator reserves monotonic windows in
+    /// epoch 0; tagged engine ops start at 0).
+    pub fn new(op_tag: u64, round_base: u64) -> Self {
+        Self { op_tag, round_base, round: 0, wait: Wait::Send, progress: 0 }
+    }
+
+    /// Monotone progress stamp (see field docs).
+    pub fn progress(&self) -> u64 {
+        self.progress
+    }
+
+    /// The operation epoch this cursor tags its traffic with.
+    pub fn op_tag(&self) -> u64 {
+        self.op_tag
+    }
+
+    fn tag(&self) -> Tag {
+        Tag::new(self.op_tag, self.round_base + self.round as u64)
+    }
+
+    /// The error a watchdog should report for a cursor stuck in its
+    /// current wait — matched to the wait *kind*, mirroring the blocking
+    /// executor's distinction: a cursor parked on a rendezvous ack
+    /// reports `AckTimeout`, one parked on an incoming payload reports
+    /// `Timeout` naming the round's recv peer.
+    pub fn timeout_error(&self, schedule: &Schedule, rank: usize) -> CollectiveError {
+        let round = self.round_base + self.round as u64;
+        match self.wait {
+            Wait::Ack => CollectiveError::Transport(TransportError::AckTimeout { rank, round }),
+            Wait::Send | Wait::Recv => {
+                let from = schedule
+                    .rounds
+                    .get(self.round)
+                    .and_then(|r| r.steps[rank].recv.as_ref().map(|rv| rv.peer))
+                    .unwrap_or(rank);
+                CollectiveError::Transport(TransportError::Timeout { rank, from, round })
+            }
+        }
+    }
+
+    /// Quiesce after an error/timeout: block (bounded by `ep.timeout`)
+    /// until no publish of this operation is outstanding, so no peer can
+    /// read the working vector after the caller reclaims it. Best-effort;
+    /// other interleaved operations' publishes are left pending.
+    pub fn abort<T: Elem>(&mut self, ep: &mut Endpoint<T>) {
+        let _ = ep.finish_op(self.op_tag);
+    }
+
+    /// Advance this operation as far as possible. Blocking mode returns
+    /// only `Done` (or an error); non-blocking mode may return `Pending`.
+    /// See the type docs for the buffer contract.
+    pub fn step<T: Elem>(
+        &mut self,
+        ep: &mut Endpoint<T>,
+        schedule: &Schedule,
+        part: &BlockPartition,
+        op: &dyn ReduceOp<T>,
+        buf: &mut [T],
+        blocking: bool,
+    ) -> Result<Progress, CollectiveError> {
+        let p = schedule.p;
+        let r = ep.rank;
+        if buf.len() != part.total() {
+            return Err(CollectiveError::BadBuffer { rank: r, got: buf.len(), want: part.total() });
+        }
+        // Resolve the monomorphized kernel once per step call — the
+        // combine path then pays one enum branch per payload instead of a
+        // dyn call per slice.
+        let kern = op.kernel();
+        // All per-round views of the working vector are carved from this
+        // raw base pointer instead of re-borrowing `buf`: while a
+        // rendezvous peer reads our published region, forming a `&mut`
+        // that *spans* it (as `&mut buf[..]` indexing would, transiently,
+        // over the whole slice) is aliasing UB even if the bytes written
+        // are disjoint. Raw-derived disjoint subslices make this rank's
+        // accesses per-element non-overlapping with the peer's reads,
+        // which is sound. The engine's interleaved cursors each own a
+        // distinct working-vector allocation, so one op's writes can
+        // never alias another op's published region either.
+        let base = buf.as_mut_ptr();
+        loop {
+            if self.round >= schedule.rounds.len() {
+                return Ok(Progress::Done);
+            }
+            let step = &schedule.rounds[self.round].steps[r];
+            let tag = self.tag();
+            match self.wait {
+                Wait::Send => {
+                    if step.is_idle() {
+                        self.round += 1;
+                        self.progress += 1;
+                        continue;
+                    }
+                    // Rendezvous precondition, checked per (rank, round):
+                    // the region we publish must not be written before the
+                    // receiver acks, and the only writes this rank performs
+                    // during the round target its recv range — so disjoint
+                    // send/recv block ranges ⇒ safe (shared predicate with
+                    // the Schedule::rendezvous_safe validator).
+                    let rendezvous = step.rendezvous_safe(p);
+
+                    // Borrow-pack the outgoing payload: hand the transport
+                    // the ≤2 slices of the circular range; it publishes
+                    // descriptors (tier 1) or gathers into a pooled buffer
+                    // (tier 2) — either way no local scratch and no
+                    // per-round allocation.
+                    let send = match step.send.as_ref() {
+                        Some(t) => {
+                            let b = t.blocks.normalized(p);
+                            let (a, rest) = part.circular_ranges(b.start, b.len);
+                            // SAFETY: partition ranges are in bounds of
+                            // `buf`, and no write overlaps these read-only
+                            // views while they are read: with `rendezvous`
+                            // the per-step check makes the recv ranges
+                            // block-disjoint, and on the pooled tier the
+                            // transport copies out of the views inside the
+                            // sendrecv call, before any recv-range write.
+                            let head = unsafe { view(base, &a) };
+                            let tail: &[T] = match &rest {
+                                Some(rest) => unsafe { view(base, rest) },
+                                None => &[],
+                            };
+                            Some(SendSlices { to: t.peer, head, tail, rendezvous })
+                        }
+                        None => None,
+                    };
+
+                    if let Err(e) = ep.sendrecv_slices_tagged(send, None, tag) {
+                        // Quiesce any publish before surfacing the error so
+                        // the peer can never read `buf` after we return it.
+                        self.abort(ep);
+                        return Err(e.into());
+                    }
+                    self.progress += 1;
+                    self.wait = if step.recv.is_some() { Wait::Recv } else { Wait::Ack };
+                }
+                Wait::Recv => {
+                    let rv = step.recv.as_ref().expect("Recv wait implies a recv step");
+                    let payload = if blocking {
+                        match ep.recv_payload(rv.peer, tag) {
+                            Ok(payload) => payload,
+                            Err(e) => {
+                                self.abort(ep);
+                                return Err(e.into());
+                            }
+                        }
+                    } else {
+                        match ep.try_recv_payload(rv.peer, tag) {
+                            Some(payload) => payload,
+                            None => return Ok(Progress::Pending),
+                        }
+                    };
+                    let b = rv.blocks.normalized(p);
+                    let want = part.circular_elems(b.start, b.len);
+                    if payload.len() != want {
+                        // Validate once per payload (the kernels don't
+                        // re-check). Complete the bad payload and quiesce
+                        // our own publish so neither side is left waiting
+                        // on a buffer we abandon.
+                        let got = payload.len();
+                        ep.complete_tagged(rv.peer, tag, payload);
+                        self.abort(ep);
+                        return Err(CollectiveError::BadPayload {
+                            rank: r,
+                            got,
+                            want,
+                            round: self.round,
+                        });
+                    }
+                    let (a, rest) = part.circular_ranges(b.start, b.len);
+                    let split = a.len();
+                    // Resolve the payload to (head, tail) source slices.
+                    // Both sides derive the split from the same partition
+                    // and block range, so a rendezvous publish lines up.
+                    let (src_head, src_tail): (&[T], &[T]) = match &payload {
+                        Payload::Copied(v) => (&v[..split], &v[split..]),
+                        // SAFETY: sender parks (or polls) until our ack
+                        // below; the slices stay valid and unwritten
+                        // meanwhile.
+                        Payload::Remote(remote) => unsafe { remote.slices() },
+                    };
+                    debug_assert_eq!(src_head.len(), split, "sender/receiver split mismatch");
+                    // SAFETY: the recv ranges are in bounds, disjoint from
+                    // each other (head starts past the wrap point the tail
+                    // ends at), and — when this round published —
+                    // block-disjoint from the region our receiver is
+                    // concurrently reading (what `rendezvous` asserted at
+                    // send time). Sources live in a different allocation
+                    // (the payload Vec or the peer's working vector).
+                    let dst_head = unsafe { view_mut(base, &a) };
+                    let dst_tail = rest.as_ref().map(|rest| unsafe { view_mut(base, rest) });
+                    match rv.action {
+                        RecvAction::Combine => match kern {
+                            // Fused single pass, monomorphized per
+                            // (op, dtype) — the hot path.
+                            Some(kern) => {
+                                kern.combine_ranges(dst_head, dst_tail, src_head, src_tail)
+                            }
+                            None => {
+                                op.combine(dst_head, src_head);
+                                if let Some(dst_tail) = dst_tail {
+                                    op.combine(dst_tail, src_tail);
+                                }
+                            }
+                        },
+                        RecvAction::Store => {
+                            // The one unavoidable copy of allgather-style
+                            // rounds; credit it to the copy-volume counter
+                            // (rendezvous saves the *gather* copy, not
+                            // this scatter).
+                            ep.counters.bytes_copied += (std::mem::size_of::<T>() * want) as u64;
+                            dst_head.copy_from_slice(src_head);
+                            if let Some(dst_tail) = dst_tail {
+                                dst_tail.copy_from_slice(src_tail);
+                            }
+                        }
+                    }
+                    // Loan protocol: pooled buffers return to their
+                    // sender's pool; rendezvous publishes are acked.
+                    ep.complete_tagged(rv.peer, tag, payload);
+                    self.progress += 1;
+                    self.wait = Wait::Ack;
+                }
+                Wait::Ack => {
+                    // If this round published, hold (or poll) here until
+                    // the receiver acks — only after that is `buf` ours to
+                    // mutate again in the next round.
+                    if blocking {
+                        ep.finish_op(self.op_tag)?;
+                    } else if !ep.try_finish(tag) {
+                        return Ok(Progress::Pending);
+                    }
+                    self.progress += 1;
+                    self.round += 1;
+                    self.wait = Wait::Send;
+                }
+            }
+        }
+    }
+}
+
+/// Execute `schedule` for this endpoint's rank, blocking until complete.
 ///
 /// `buf` is the rank's working vector (`part.total()` elements, global
 /// layout). On return it contains whatever the schedule semantics leave
@@ -109,16 +429,19 @@ pub enum CollectiveError {
 /// allreduce, the whole buffer; for allgather, all blocks.
 ///
 /// `round_base` offsets the transport round tags so several collectives
-/// can run back-to-back on one endpoint (the coordinator uses this).
+/// can run back-to-back on one endpoint (the coordinator uses this). All
+/// traffic runs in op-epoch 0, the legacy wire space; for *concurrent*
+/// operations on one endpoint use an [`OpCursor`] per op with distinct
+/// `op_tag`s (what [`crate::engine`] does).
 ///
-/// The zero-copy rendezvous tier engages per round iff
-/// `ep.rendezvous` is set (see [`Endpoint::rendezvous`]), this rank's
-/// send and recv block ranges for the round are disjoint, and the payload
-/// meets the endpoint's small-message threshold
+/// The zero-copy rendezvous tier engages per round iff `ep.rendezvous` is
+/// set (see [`Endpoint::rendezvous`]), this rank's send and recv block
+/// ranges for the round are disjoint, and the payload meets the
+/// endpoint's small-message threshold
 /// ([`Endpoint::rendezvous_min_elems`]); other rounds use the pooled
-/// tier. Payload lengths are validated here, once
-/// per round, before any kernel call — the kernels themselves stay on the
-/// unchecked fast path (`ReduceOp` docs).
+/// tier. Payload lengths are validated once per round, before any kernel
+/// call — the kernels themselves stay on the unchecked fast path
+/// (`ReduceOp` docs).
 pub fn execute_rank<T: Elem>(
     ep: &mut Endpoint<T>,
     schedule: &Schedule,
@@ -127,138 +450,11 @@ pub fn execute_rank<T: Elem>(
     buf: &mut [T],
     round_base: u64,
 ) -> Result<u64, CollectiveError> {
-    let p = schedule.p;
-    let r = ep.rank;
-    if buf.len() != part.total() {
-        return Err(CollectiveError::BadBuffer { rank: r, got: buf.len(), want: part.total() });
+    let mut cursor = OpCursor::new(0, round_base);
+    match cursor.step(ep, schedule, part, op, buf, true)? {
+        Progress::Done => Ok(round_base + schedule.rounds.len() as u64),
+        Progress::Pending => unreachable!("blocking OpCursor::step never yields Pending"),
     }
-    // Resolve the monomorphized kernel once — the combine loop below then
-    // pays one enum branch per payload instead of a dyn call per slice.
-    let kern = op.kernel();
-    // All per-round views of the working vector are carved from this raw
-    // base pointer instead of re-borrowing `buf`: while a rendezvous peer
-    // reads our published region, forming a `&mut` that *spans* it (as
-    // `&mut buf[..]` indexing would, transiently, over the whole slice)
-    // is aliasing UB even if the bytes written are disjoint. Raw-derived
-    // disjoint subslices make the executor's accesses per-element
-    // non-overlapping with the peer's reads, which is sound. `buf` itself
-    // is not touched again until the function returns, by which point
-    // every publish has been acked (`finish_round` per round).
-    let base = buf.as_mut_ptr();
-    for (k, round) in schedule.rounds.iter().enumerate() {
-        let step = &round.steps[r];
-        if step.is_idle() {
-            continue;
-        }
-        let tag = round_base + k as u64;
-
-        // Rendezvous precondition, checked per (rank, round): the region
-        // we publish must not be written before the receiver acks, and
-        // the only writes this rank performs during the round target its
-        // recv range — so disjoint send/recv block ranges ⇒ safe (shared
-        // predicate with the Schedule::rendezvous_safe validator).
-        let rendezvous = step.rendezvous_safe(p);
-
-        // Borrow-pack the outgoing payload: hand the transport the ≤2
-        // slices of the circular range; it publishes descriptors (tier 1)
-        // or gathers into a pooled buffer (tier 2) — either way no local
-        // scratch and no per-round allocation.
-        let send = match step.send.as_ref() {
-            Some(t) => {
-                let b = t.blocks.normalized(p);
-                let (a, rest) = part.circular_ranges(b.start, b.len);
-                // SAFETY: partition ranges are in bounds of `buf`, and no
-                // write overlaps these read-only views while they are
-                // read: with `rendezvous` the per-step check makes the
-                // recv ranges block-disjoint, and on the pooled tier the
-                // transport copies out of the views inside the sendrecv
-                // call, before any recv-range write happens.
-                let head = unsafe { view(base, &a) };
-                let tail: &[T] = match &rest {
-                    Some(rest) => unsafe { view(base, rest) },
-                    None => &[],
-                };
-                Some(SendSlices { to: t.peer, head, tail, rendezvous })
-            }
-            None => None,
-        };
-
-        let recv_from = step.recv.as_ref().map(|rv| rv.peer);
-        let payload = match ep.sendrecv_slices(send, recv_from, tag) {
-            Ok(payload) => payload,
-            Err(e) => {
-                // Quiesce any publish before surfacing the error so the
-                // peer can never read `buf` after we return it.
-                let _ = ep.finish_round();
-                return Err(e.into());
-            }
-        };
-
-        if let (Some(rv), Some(payload)) = (step.recv.as_ref(), payload) {
-            let b = rv.blocks.normalized(p);
-            let want = part.circular_elems(b.start, b.len);
-            if payload.len() != want {
-                // Validate once per payload (the kernels don't re-check).
-                // Complete the bad payload and quiesce our own publish so
-                // neither side is left waiting on a buffer we abandon.
-                let got = payload.len();
-                ep.complete(rv.peer, tag, payload);
-                let _ = ep.finish_round();
-                return Err(CollectiveError::BadPayload { rank: r, got, want, round: k });
-            }
-            let (a, rest) = part.circular_ranges(b.start, b.len);
-            let split = a.len();
-            // Resolve the payload to (head, tail) source slices. Both
-            // sides derive the split from the same partition and block
-            // range, so a rendezvous publish lines up exactly.
-            let (src_head, src_tail): (&[T], &[T]) = match &payload {
-                Payload::Copied(v) => (&v[..split], &v[split..]),
-                // SAFETY: sender blocks in finish_round until our ack
-                // below; the slices stay valid and unwritten meanwhile.
-                Payload::Remote(remote) => unsafe { remote.slices() },
-            };
-            debug_assert_eq!(src_head.len(), split, "sender/receiver split mismatch");
-            // SAFETY: the recv ranges are in bounds, disjoint from each
-            // other (head starts past the wrap point the tail ends at),
-            // and — when this round published — block-disjoint from the
-            // region our receiver is concurrently reading (that is what
-            // `rendezvous` asserted above). Sources live in a different
-            // allocation (the payload Vec or the peer's working vector).
-            let dst_head = unsafe { view_mut(base, &a) };
-            let dst_tail = rest.as_ref().map(|rest| unsafe { view_mut(base, rest) });
-            match rv.action {
-                RecvAction::Combine => match kern {
-                    // Fused single pass, monomorphized per (op, dtype) —
-                    // the hot path.
-                    Some(kern) => kern.combine_ranges(dst_head, dst_tail, src_head, src_tail),
-                    None => {
-                        op.combine(dst_head, src_head);
-                        if let Some(dst_tail) = dst_tail {
-                            op.combine(dst_tail, src_tail);
-                        }
-                    }
-                },
-                RecvAction::Store => {
-                    // The one unavoidable copy of allgather-style rounds;
-                    // credit it to the copy-volume counter (rendezvous
-                    // saves the *gather* copy, not this scatter).
-                    ep.counters.bytes_copied += (std::mem::size_of::<T>() * want) as u64;
-                    dst_head.copy_from_slice(src_head);
-                    if let Some(dst_tail) = dst_tail {
-                        dst_tail.copy_from_slice(src_tail);
-                    }
-                }
-            }
-            // Loan protocol: pooled buffers return to their sender's
-            // pool; rendezvous publishes are acked.
-            ep.complete(rv.peer, tag, payload);
-        }
-
-        // If we published this round, hold here until the receiver acks —
-        // after this point `buf` is ours to mutate again.
-        ep.finish_round()?;
-    }
-    Ok(round_base + schedule.rounds.len() as u64)
 }
 
 /// Convenience driver for tests/benches: run `schedule` over `p` threads
@@ -422,6 +618,42 @@ mod tests {
                 assert_eq!(buf, &want, "p={p} rank {r}");
             }
         }
+    }
+
+    #[test]
+    fn cursor_drives_both_ranks_nonblocking_on_one_thread() {
+        // The engine worker pattern in miniature: drive BOTH ranks of a
+        // p=2 allreduce from a single thread with non-blocking cursors —
+        // no call may park, and interleaved polling must converge.
+        let p = 2;
+        let part = BlockPartition::regular(p, 8);
+        let skips = SkipScheme::HalvingUp.skips(p).unwrap();
+        let sched = allreduce_schedule(p, &skips);
+        let mut eps = crate::transport::network(p);
+        let mut bufs = [vec![1.0f32; 8], vec![2.0f32; 8]];
+        let mut cursors = [OpCursor::new(7, 0), OpCursor::new(7, 0)];
+        let mut done = [false, false];
+        let mut polls = 0;
+        while !(done[0] && done[1]) {
+            for r in 0..p {
+                if done[r] {
+                    continue;
+                }
+                match cursors[r]
+                    .step(&mut eps[r], &sched, &part, &SumOp, &mut bufs[r], false)
+                    .unwrap()
+                {
+                    Progress::Done => done[r] = true,
+                    Progress::Pending => {}
+                }
+            }
+            polls += 1;
+            assert!(polls < 10_000, "cursors stopped making progress");
+        }
+        for buf in &bufs {
+            assert_eq!(buf, &vec![3.0f32; 8]);
+        }
+        assert!(cursors[0].progress() > 0 && cursors[0].op_tag() == 7);
     }
 
     #[test]

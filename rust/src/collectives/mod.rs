@@ -12,12 +12,48 @@ pub mod symbolic;
 pub use exec::{
     execute_rank, run_schedule_threads, run_schedule_threads_tiered,
     run_schedule_threads_tiered_typed, run_schedule_threads_typed,
-    run_schedule_threads_with_counters, CollectiveError,
+    run_schedule_threads_with_counters, CollectiveError, OpCursor, Progress,
 };
 pub use generators::{allgather_schedule, allreduce_schedule, reduce_scatter_schedule};
 
+use std::sync::Arc;
+
 use crate::schedule::Schedule;
 use crate::topology::skips::SkipScheme;
+
+/// Precomputed circulant planning vocabulary for a fixed `(scheme, p)`:
+/// the canonical algorithm names (`Arc<str>`, so a plan-cache key costs a
+/// refcount bump instead of a `String` allocation) plus the validated
+/// skip sequence. Built once at construction by **both**
+/// [`crate::coordinator::Communicator`] and
+/// [`crate::engine::CollectiveEngine`] — one derivation site, so their
+/// shared `PlanCache` key spaces can never drift apart.
+#[derive(Debug, Clone)]
+pub struct CirculantPlans {
+    pub allreduce: Arc<str>,
+    pub reduce_scatter: Arc<str>,
+    pub allgather: Arc<str>,
+    /// The scheme's skip sequence for `p` (`Arc` so miss-path build
+    /// closures can hold it without borrowing their owner).
+    pub skips: Arc<Vec<usize>>,
+}
+
+impl CirculantPlans {
+    /// Derive the vocabulary; panics on an invalid `(scheme, p)` — this
+    /// runs once at communicator/engine construction, where a bad scheme
+    /// must fail loudly rather than on the Nth collective.
+    pub fn new(scheme: &SkipScheme, p: usize) -> Self {
+        let skips = scheme
+            .skips(p)
+            .unwrap_or_else(|e| panic!("invalid skip scheme for p={p}: {e}"));
+        Self {
+            allreduce: Algorithm::CirculantAllreduce(scheme.clone()).name().into(),
+            reduce_scatter: Algorithm::CirculantReduceScatter(scheme.clone()).name().into(),
+            allgather: Algorithm::CirculantAllgather(scheme.clone()).name().into(),
+            skips: Arc::new(skips),
+        }
+    }
+}
 
 /// Every schedule-expressible algorithm in the library, for the CLI,
 /// benches and the simulator. (All-to-all is separate — `alltoall` — since

@@ -13,7 +13,17 @@
 //!
 //! Round tags advance monotonically per communicator, so collectives can
 //! be issued back-to-back without cross-talk (the transport stashes
-//! out-of-order arrivals by `(peer, tag)`).
+//! out-of-order arrivals by `(peer, tag)`). All communicator traffic runs
+//! in op-epoch 0 of the transport's tag space; *concurrent* collectives
+//! (several in flight at once) belong to [`crate::engine`], which
+//! allocates a fresh epoch per operation.
+//!
+//! Schedules are resolved through a [`PlanCache`] (shared across all
+//! ranks of a [`Launcher`] job): repeated collectives with the same
+//! `(algorithm, p, partition, dtype)` reuse one built `Arc<Schedule>`
+//! instead of regenerating it per call and per rank. Cache hits/misses
+//! appear in each rank's transport counters (`plan_hits`/`plan_misses`)
+//! and therefore in [`crate::coordinator::RunMetrics`].
 //!
 //! Buffer discipline: operations that cannot run in place on the caller's
 //! buffers (reduce-scatter staging, scatter/gather assembly) stage through
@@ -31,15 +41,28 @@
 //! communicator with [`Communicator::set_rendezvous`], per launcher with
 //! [`Launcher::rendezvous`], or process-wide with `CCOLL_NO_RENDEZVOUS`.
 
+use std::sync::Arc;
+
 use crate::collectives::alltoall::{alltoall_rank, receive_partition};
 use crate::collectives::exec::{execute_rank, CollectiveError};
 use crate::collectives::generators::{
     allgather_schedule, allreduce_schedule, reduce_scatter_schedule,
 };
+use crate::collectives::{Algorithm, CirculantPlans};
 use crate::datatypes::{BlockPartition, Elem};
+use crate::engine::{CollectiveEngine, EngineConfig};
 use crate::ops::ReduceOp;
+use crate::schedule::{Plan, PlanCache, PlanKey, Schedule};
 use crate::topology::skips::SkipScheme;
 use crate::transport::{Counters, Endpoint};
+
+/// The three circulant schedule families a communicator plans for.
+#[derive(Clone, Copy)]
+enum CirculantFamily {
+    Allreduce,
+    ReduceScatter,
+    Allgather,
+}
 
 /// Which ⊕ implementation executes the γ term.
 #[derive(Clone)]
@@ -66,11 +89,23 @@ impl OpBackend {
 pub struct Communicator<T: Elem = f32> {
     ep: Endpoint<T>,
     scheme: SkipScheme,
+    /// Precomputed circulant plan vocabulary (canonical names + validated
+    /// skip sequence) for this `(scheme, p)` — shared derivation with the
+    /// engine ([`CirculantPlans`]), so no collective call re-derives
+    /// either and the two entry points key one plan space.
+    vocab: CirculantPlans,
     backend: OpBackend,
     tag: u64,
     /// Persistent staging buffer for out-of-place collectives; capacity is
     /// retained across calls so steady-state traffic never allocates.
     work: Vec<T>,
+    /// Memoized `(algorithm, p, partition, dtype) → plan` — repeated
+    /// collectives on this communicator regenerate nothing. Private per
+    /// communicator by default; [`Launcher`] shares one across all ranks
+    /// (and with the engine when one is involved), so a plan is built
+    /// once per *job*, not once per rank. Hits/misses are mirrored into
+    /// this rank's transport counters (`plan_hits`/`plan_misses`).
+    plans: Arc<PlanCache>,
 }
 
 impl<T: Elem> Communicator<T> {
@@ -79,13 +114,69 @@ impl<T: Elem> Communicator<T> {
         // to the pooled tier per round whenever the schedule's send/recv
         // ranges overlap (`CCOLL_NO_RENDEZVOUS=1` disables globally).
         ep.rendezvous = crate::transport::rendezvous_env_enabled();
-        Self { ep, scheme, backend, tag: 0, work: Vec::new() }
+        let vocab = CirculantPlans::new(&scheme, ep.p);
+        Self {
+            vocab,
+            ep,
+            scheme,
+            backend,
+            tag: 0,
+            work: Vec::new(),
+            plans: Arc::new(PlanCache::new()),
+        }
     }
 
     /// Enable/disable the transport's zero-copy rendezvous tier for this
     /// communicator (on by default; see the module docs).
     pub fn set_rendezvous(&mut self, enabled: bool) {
         self.ep.rendezvous = enabled && crate::transport::rendezvous_env_enabled();
+    }
+
+    /// Replace this communicator's plan cache with a shared one (what the
+    /// launcher/engine do so all ranks reuse one set of built plans).
+    pub fn set_plan_cache(&mut self, plans: Arc<PlanCache>) {
+        self.plans = plans;
+    }
+
+    /// This communicator's plan cache.
+    pub fn plan_cache(&self) -> Arc<PlanCache> {
+        self.plans.clone()
+    }
+
+    /// Resolve `(algorithm, partition)` through the plan cache, building
+    /// via `build` on a miss, and mirror the outcome into this rank's
+    /// transport counters.
+    fn plan_with(
+        &mut self,
+        algorithm: Arc<str>,
+        part: &BlockPartition,
+        build: impl FnOnce() -> Schedule,
+    ) -> Arc<Plan> {
+        let key = PlanKey::new(algorithm, self.ep.p, part, T::DTYPE);
+        let (plan, hit) = self.plans.get_or_build(key, part, build);
+        if hit {
+            self.ep.counters.plan_hits += 1;
+        } else {
+            self.ep.counters.plan_misses += 1;
+        }
+        plan
+    }
+
+    /// [`plan_with`](Self::plan_with) for the three circulant families:
+    /// keys with the precomputed name (refcount bump, no allocation) and
+    /// builds — only on a miss — from the cached skip sequence, so a
+    /// cache-hit collective does no per-call derivation work at all.
+    fn circulant_plan(&mut self, family: CirculantFamily, part: &BlockPartition) -> Arc<Plan> {
+        let (name, gen): (Arc<str>, fn(usize, &[usize]) -> Schedule) = match family {
+            CirculantFamily::Allreduce => (self.vocab.allreduce.clone(), allreduce_schedule),
+            CirculantFamily::ReduceScatter => {
+                (self.vocab.reduce_scatter.clone(), reduce_scatter_schedule)
+            }
+            CirculantFamily::Allgather => (self.vocab.allgather.clone(), allgather_schedule),
+        };
+        let p = self.ep.p;
+        let skips = self.vocab.skips.clone();
+        self.plan_with(name, part, move || gen(p, &skips))
     }
 
     /// Stage `src` into the working buffer (reusing its capacity).
@@ -113,8 +204,14 @@ impl<T: Elem> Communicator<T> {
         self.ep.counters.clone()
     }
 
-    fn skips(&self) -> Vec<usize> {
-        self.scheme.skips(self.size()).expect("valid skip scheme")
+    /// This communicator's skip scheme.
+    pub fn scheme(&self) -> &SkipScheme {
+        &self.scheme
+    }
+
+    /// The cached skip sequence of this communicator's `(scheme, p)`.
+    pub fn skips(&self) -> &[usize] {
+        &self.vocab.skips
     }
 
     fn op(&self, op: &str) -> Result<Box<dyn ReduceOp<T>>, CollectiveError> {
@@ -179,10 +276,10 @@ impl<T: Elem> Communicator<T> {
             });
         }
         let part = BlockPartition::uniform(p, b);
-        let sched = reduce_scatter_schedule(p, &self.skips());
+        let plan = self.circulant_plan(CirculantFamily::ReduceScatter, &part);
         let op = self.op(op)?;
         self.stage(sendbuf);
-        self.run_exec_on_work(&sched, &part, op.as_ref())?;
+        self.run_exec_on_work(&plan.schedule, &plan.part, op.as_ref())?;
         recvbuf.copy_from_slice(&self.work[part.range(self.ep.rank)]);
         Ok(())
     }
@@ -208,10 +305,10 @@ impl<T: Elem> Communicator<T> {
                 want: part.total(),
             });
         }
-        let sched = reduce_scatter_schedule(p, &self.skips());
+        let plan = self.circulant_plan(CirculantFamily::ReduceScatter, &part);
         let op = self.op(op)?;
         self.stage(sendbuf);
-        self.run_exec_on_work(&sched, &part, op.as_ref())?;
+        self.run_exec_on_work(&plan.schedule, &plan.part, op.as_ref())?;
         recvbuf.copy_from_slice(&self.work[part.range(self.ep.rank)]);
         Ok(())
     }
@@ -222,9 +319,9 @@ impl<T: Elem> Communicator<T> {
     pub fn allreduce(&mut self, buf: &mut [T], op: &str) -> Result<(), CollectiveError> {
         let p = self.size();
         let part = BlockPartition::regular(p, buf.len());
-        let sched = allreduce_schedule(p, &self.skips());
+        let plan = self.circulant_plan(CirculantFamily::Allreduce, &part);
         let op = self.op(op)?;
-        self.run_exec(&sched, &part, op.as_ref(), buf)?;
+        self.run_exec(&plan.schedule, &plan.part, op.as_ref(), buf)?;
         Ok(())
     }
 
@@ -242,10 +339,10 @@ impl<T: Elem> Communicator<T> {
         }
         let part = BlockPartition::uniform(p, b);
         recvbuf[part.range(self.rank())].copy_from_slice(sendblock);
-        let sched = allgather_schedule(p, &self.skips());
+        let plan = self.circulant_plan(CirculantFamily::Allgather, &part);
         // allgather performs no ⊕; use native sum as a placeholder operator
         let op = crate::ops::SumOp;
-        self.run_exec(&sched, &part, &op, recvbuf)?;
+        self.run_exec(&plan.schedule, &plan.part, &op, recvbuf)?;
         Ok(())
     }
 
@@ -255,11 +352,10 @@ impl<T: Elem> Communicator<T> {
     pub fn alltoall(&mut self, sendbuf: &[T], block: usize) -> Result<Vec<T>, CollectiveError> {
         let p = self.size();
         let part = BlockPartition::uniform(p, block);
-        let skips = self.skips();
         // Reserve the tag window before executing (see run_exec).
         let base = self.tag;
-        self.tag += skips.len() as u64;
-        let out = alltoall_rank(&mut self.ep, &part, &skips, sendbuf, base)?;
+        self.tag += self.vocab.skips.len() as u64;
+        let out = alltoall_rank(&mut self.ep, &part, &self.vocab.skips, sendbuf, base)?;
         debug_assert_eq!(out.len(), receive_partition(&part, self.rank()).total());
         Ok(out)
     }
@@ -273,15 +369,14 @@ impl<T: Elem> Communicator<T> {
         send_counts: &[usize],
         recv_counts: &[usize],
     ) -> Result<Vec<T>, CollectiveError> {
-        let skips = self.skips();
         // Reserve the tag window before executing (see run_exec).
         let base = self.tag;
-        self.tag += skips.len() as u64;
+        self.tag += self.vocab.skips.len() as u64;
         let out = crate::collectives::alltoall::alltoallv_rank(
             &mut self.ep,
             send_counts,
             recv_counts,
-            &skips,
+            &self.vocab.skips,
             sendbuf,
             base,
         )?;
@@ -293,9 +388,9 @@ impl<T: Elem> Communicator<T> {
     pub fn reduce(&mut self, buf: &mut [T], root: usize, op: &str) -> Result<(), CollectiveError> {
         let p = self.size();
         let part = BlockPartition::single_block(p, buf.len(), root);
-        let sched = reduce_scatter_schedule(p, &self.skips());
+        let plan = self.circulant_plan(CirculantFamily::ReduceScatter, &part);
         let op = self.op(op)?;
-        self.run_exec(&sched, &part, op.as_ref(), buf)?;
+        self.run_exec(&plan.schedule, &plan.part, op.as_ref(), buf)?;
         Ok(())
     }
 
@@ -304,9 +399,9 @@ impl<T: Elem> Communicator<T> {
     pub fn bcast(&mut self, buf: &mut [T], root: usize) -> Result<(), CollectiveError> {
         let p = self.size();
         let part = BlockPartition::single_block(p, buf.len(), root);
-        let sched = allgather_schedule(p, &self.skips());
+        let plan = self.circulant_plan(CirculantFamily::Allgather, &part);
         let op = crate::ops::SumOp;
-        self.run_exec(&sched, &part, &op, buf)?;
+        self.run_exec(&plan.schedule, &plan.part, &op, buf)?;
         Ok(())
     }
 
@@ -339,9 +434,11 @@ impl<T: Elem> Communicator<T> {
         } else {
             self.stage_zeros(part.total());
         }
-        let sched = crate::collectives::baselines::binomial_scatter_schedule(p, root);
+        let plan = self.plan_with(format!("binomial-scatter:{root}").into(), &part, || {
+            crate::collectives::baselines::binomial_scatter_schedule(p, root)
+        });
         let op = crate::ops::SumOp;
-        self.run_exec_on_work(&sched, &part, &op)?;
+        self.run_exec_on_work(&plan.schedule, &plan.part, &op)?;
         recvbuf.copy_from_slice(&self.work[part.range(self.ep.rank)]);
         Ok(())
     }
@@ -360,9 +457,11 @@ impl<T: Elem> Communicator<T> {
         self.stage_zeros(part.total());
         let range = part.range(self.rank());
         self.work[range].copy_from_slice(sendblock);
-        let sched = crate::collectives::baselines::binomial_gather_schedule(p, root);
+        let plan = self.plan_with(format!("binomial-gather:{root}").into(), &part, || {
+            crate::collectives::baselines::binomial_gather_schedule(p, root)
+        });
         let op = crate::ops::SumOp;
-        self.run_exec_on_work(&sched, &part, &op)?;
+        self.run_exec_on_work(&plan.schedule, &plan.part, &op)?;
         if self.rank() == root {
             let out = recvbuf.ok_or(CollectiveError::BadBuffer {
                 rank: root,
@@ -403,8 +502,16 @@ impl<T: Elem> Communicator<T> {
     }
 }
 
-/// Launcher: spawns `p` rank threads, hands each a [`Communicator`], and
-/// collects results — the in-process stand-in for `mpiexec`.
+/// Launcher: the in-process stand-in for `mpiexec`, for **one-shot** jobs
+/// — spawn, run `f(comm)` on every rank, join. Built on the persistent
+/// engine's worker substrate: [`Launcher::run`] spawns a
+/// [`CollectiveEngine`], runs the closure on its workers (each rank's
+/// communicator sharing the engine's plan cache, so a schedule is built
+/// once per job rather than once per rank), and shuts the engine down.
+/// For *repeated* collectives, skip the wrapper and hold an engine
+/// directly ([`Launcher::engine`] / [`Launcher::engine_typed`]): spawn
+/// once, [`submit`](CollectiveEngine::submit) many — the `t8_engine`
+/// bench measures the per-op amortization.
 pub struct Launcher {
     pub p: usize,
     pub scheme: SkipScheme,
@@ -445,7 +552,28 @@ impl Launcher {
         self.run_typed::<f32, T, F>(f)
     }
 
+    /// A persistent [`CollectiveEngine`] with this launcher's
+    /// configuration (f32). Spawn once, submit many; see the engine docs.
+    pub fn engine(&self) -> CollectiveEngine {
+        self.engine_typed::<f32>()
+    }
+
+    /// [`engine`](Launcher::engine) over any element type.
+    pub fn engine_typed<E: Elem>(&self) -> CollectiveEngine<E> {
+        CollectiveEngine::new(
+            EngineConfig::new(self.p)
+                .scheme(self.scheme.clone())
+                .backend(self.backend.clone())
+                .rendezvous(self.rendezvous),
+        )
+    }
+
     /// Run `f(comm)` on every rank over communicators of element type `E`.
+    ///
+    /// Thin wrapper over the engine substrate: spawns an engine, runs the
+    /// closure once on every worker (all rank communicators share the
+    /// engine's plan cache), and shuts the engine down — one-shot
+    /// semantics, persistent machinery.
     pub fn run_typed<E: Elem, T, F>(&self, f: F) -> Vec<T>
     where
         T: Send + 'static,
@@ -454,18 +582,24 @@ impl Launcher {
         let scheme = self.scheme.clone();
         let backend = self.backend.clone();
         let rendezvous = self.rendezvous;
-        crate::transport::run_ranks_typed::<E, T, _>(self.p, move |_rank, ep| {
-            // run_ranks hands us &mut Endpoint; move a fresh Communicator
-            // around an owned endpoint instead.
+        let mut engine = self.engine_typed::<E>();
+        let plans = engine.plan_cache();
+        let out = engine.run_closure(move |_rank, ep| {
+            // The worker lends us &mut Endpoint; move a Communicator
+            // around an owned endpoint instead (the engine is shut down
+            // right after, so the worker never touches the placeholder).
             let owned = std::mem::replace(
                 ep,
                 // placeholder endpoint; never used after the swap
                 crate::transport::network_typed::<E>(1).pop().unwrap(),
             );
             let mut comm = Communicator::<E>::new(owned, scheme.clone(), backend.clone());
+            comm.set_plan_cache(plans.clone());
             comm.set_rendezvous(rendezvous);
             f(comm)
-        })
+        });
+        engine.shutdown();
+        out
     }
 }
 
@@ -640,6 +774,50 @@ mod tests {
         for j in 0..p * b {
             assert_eq!(all[j], 2.0 * (j as f32 + 1.0), "gather j={j}");
         }
+    }
+
+    #[test]
+    fn repeated_collectives_hit_the_plan_cache() {
+        let p = 4;
+        let m = 24;
+        let out = Launcher::new(p).run(move |mut comm| {
+            let mut buf = vec![1.0f32; m];
+            comm.allreduce(&mut buf, "sum").unwrap();
+            comm.allreduce(&mut buf, "sum").unwrap(); // same plan again
+            let mut small = vec![1.0f32; m / 2]; // different partition
+            comm.allreduce(&mut small, "sum").unwrap();
+            (buf[0], comm.counters())
+        });
+        for (rank, (x, c)) in out.iter().enumerate() {
+            assert_eq!(*x, (p * p) as f32, "rank {rank}: double allreduce of ones");
+            assert_eq!(c.plan_hits + c.plan_misses, 3, "rank {rank}: three plan lookups");
+            // The second identical call is always a hit; the first and the
+            // resized call may hit or miss per rank depending on who built
+            // first (the cache is shared across ranks).
+            assert!(c.plan_hits >= 1, "rank {rank}: repeated plan must hit");
+            assert!(c.plan_misses <= 2, "rank {rank}: only two distinct plans exist");
+        }
+    }
+
+    #[test]
+    fn launcher_engine_serves_the_same_results_as_run() {
+        use crate::engine::OpRequest;
+        let p = 3;
+        let m = 17;
+        let inputs: Vec<Vec<f32>> =
+            (0..p).map(|r| (0..m).map(|j| (r + j) as f32).collect()).collect();
+        let want: Vec<f32> =
+            (0..m).map(|j| (0..p).map(|r| (r + j) as f32).sum()).collect();
+        let mut engine = Launcher::new(p).engine();
+        for _ in 0..3 {
+            let out =
+                engine.submit(OpRequest::allreduce(inputs.clone(), "sum")).unwrap().wait().unwrap();
+            for buf in &out {
+                assert_eq!(buf, &want);
+            }
+        }
+        assert!(engine.plan_stats().hits >= 2, "repeated submits reuse the plan");
+        engine.shutdown();
     }
 
     #[test]

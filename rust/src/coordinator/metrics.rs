@@ -39,6 +39,17 @@ impl RunMetrics {
         self.per_rank.iter().map(|c| c.sendrecv_rounds).max().unwrap_or(0)
     }
 
+    /// Plan-cache hits across ranks (schedules served memoized — see
+    /// `crate::schedule::PlanCache`).
+    pub fn plan_hits(&self) -> u64 {
+        self.per_rank.iter().map(|c| c.plan_hits).sum()
+    }
+
+    /// Plan-cache misses across ranks (schedules generated fresh).
+    pub fn plan_misses(&self) -> u64 {
+        self.per_rank.iter().map(|c| c.plan_misses).sum()
+    }
+
     /// Aggregate throughput in elements moved per second (whole job).
     pub fn elems_per_second(&self) -> f64 {
         if self.wall_seconds <= 0.0 {
@@ -75,6 +86,8 @@ impl RunMetrics {
         obj.insert("m".into(), Json::Num(self.m as f64));
         obj.insert("wall_seconds".into(), Json::Num(self.wall_seconds));
         obj.insert("rounds".into(), Json::Num(self.rounds() as f64));
+        obj.insert("plan_hits".into(), Json::Num(self.plan_hits() as f64));
+        obj.insert("plan_misses".into(), Json::Num(self.plan_misses() as f64));
         obj.insert(
             "per_rank_elems_sent".into(),
             Json::Arr(self.per_rank.iter().map(|c| Json::Num(c.elems_sent as f64)).collect()),
@@ -130,5 +143,18 @@ mod tests {
         assert_eq!(j.req("p").as_usize(), Some(2));
         assert_eq!(j.req("dtype").as_str(), Some("f32"));
         assert_eq!(j.req("per_rank_elems_sent").as_arr().unwrap().len(), 2);
+        assert_eq!(j.req("plan_hits").as_usize(), Some(0));
+        assert_eq!(j.req("plan_misses").as_usize(), Some(0));
+    }
+
+    #[test]
+    fn plan_counters_aggregate_across_ranks() {
+        let mut m = fake();
+        m.per_rank[0].plan_hits = 3;
+        m.per_rank[0].plan_misses = 1;
+        m.per_rank[1].plan_hits = 2;
+        assert_eq!(m.plan_hits(), 5);
+        assert_eq!(m.plan_misses(), 1);
+        assert_eq!(m.to_json().req("plan_hits").as_usize(), Some(5));
     }
 }

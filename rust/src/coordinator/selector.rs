@@ -31,7 +31,15 @@ fn candidates() -> Vec<(Algorithm, fn(&CostModel, usize, usize) -> f64)> {
 pub fn select_allreduce(model: &CostModel, p: usize, m: usize) -> (Algorithm, f64) {
     let mut best: Option<(Algorithm, f64)> = None;
     for (alg, f) in candidates() {
-        if matches!(alg, Algorithm::RecursiveHalvingReduceScatter) && !p.is_power_of_two() {
+        // Rabenseifner is only considered for power-of-two p. Its non-pow2
+        // closed form folds the extra ranks in with flat `α+βm(+γm)` terms,
+        // but the actual schedule halves over *block groups* of uneven
+        // size, so the formula is an approximation there — predicting with
+        // it could hand a non-pow2 job to the schedule the model flattered
+        // rather than the one that is actually fastest. (A previous guard
+        // here filtered RecursiveHalvingReduceScatter, which is not an
+        // allreduce and was never in the candidate set — dead code.)
+        if matches!(alg, Algorithm::RabenseifnerAllreduce) && !p.is_power_of_two() {
             continue;
         }
         let t = f(model, p, m);
@@ -81,6 +89,34 @@ mod tests {
             "expected a q-round algorithm for m=1, got {}",
             alg.name()
         );
+    }
+
+    #[test]
+    fn rabenseifner_gated_to_powers_of_two() {
+        // The non-pow2 guard must actually bite: across cost models and
+        // regimes, selection at non-power-of-two p never returns
+        // Rabenseifner (its closed form is only exact for pow2), while at
+        // power-of-two p it stays a legal candidate (it ties Algorithm 2
+        // there, and ties resolve to the earlier candidate, so we assert
+        // legality via prediction equality rather than selection).
+        for model in [CostModel::cluster(), CostModel::latency_bound()] {
+            for p in [3usize, 5, 6, 7, 22, 100, 1000] {
+                for m in [1usize, 1 << 10, 1 << 22] {
+                    let (alg, _) = select_allreduce(&model, p, m);
+                    assert!(
+                        !matches!(alg, Algorithm::RabenseifnerAllreduce),
+                        "p={p} m={m}: rabenseifner selected for non-pow2 p"
+                    );
+                }
+            }
+        }
+        let c = CostModel::cluster();
+        for p in [4usize, 64, 1024] {
+            let twin = (closed_form::rabenseifner_allreduce(&c, p, 1 << 20)
+                - closed_form::alg2_allreduce(&c, p, 1 << 20))
+            .abs();
+            assert!(twin < 1e-12, "p={p}: pow2 rabenseifner must tie alg2");
+        }
     }
 
     #[test]

@@ -146,6 +146,23 @@ impl BlockPartition {
         }
     }
 
+    /// Stable 64-bit fingerprint of the exact block layout (FNV-1a over
+    /// the offset vector). Used as the partition component of a
+    /// [`crate::schedule::PlanKey`]; two partitions with the same `p` and
+    /// per-block counts always agree, and the plan cache verifies the full
+    /// layout on every hit so a (astronomically unlikely) collision can
+    /// never serve a wrong plan.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for &o in &self.offsets {
+            for b in (o as u64).to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        }
+        h
+    }
+
     /// The (up to two) contiguous element ranges covering the circular
     /// block range `[start, start+len)` — used by the executor to pack /
     /// combine without materializing a rotated copy (DESIGN.md: global

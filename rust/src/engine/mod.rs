@@ -1,0 +1,857 @@
+//! The persistent collective engine: spawn `p` rank workers **once**,
+//! keep the typed endpoint network alive, and feed it a stream of
+//! collectives.
+//!
+//! The paper's schedules are pure functions of `(p, partition, skip
+//! scheme)`, and the pre-engine entry points
+//! ([`crate::coordinator::Launcher::run`], the `run_schedule_threads*`
+//! drivers) rebuilt *everything* per call: `p` fresh threads, a fresh
+//! endpoint network (cold buffer pools!), and freshly generated
+//! schedules. Fine for one-shot benches; fatal for serving repeated
+//! traffic, where per-op cost should be the schedule's communication and
+//! nothing else. A [`CollectiveEngine`] amortizes all three:
+//!
+//!  * **threads** — `p` long-lived workers, spawned once in
+//!    [`CollectiveEngine::new`] and joined in
+//!    [`shutdown`](CollectiveEngine::shutdown) (the `ccoll serve` soak
+//!    asserts zero per-op spawns via
+//!    [`crate::transport::rank_threads_spawned`]);
+//!  * **transport** — one persistent `Endpoint<T>` per worker, so buffer
+//!    pools stay warm across operations and steady-state traffic
+//!    allocates nothing;
+//!  * **plans** — a shared [`PlanCache`] memoizing
+//!    `(algorithm, p, partition, dtype) → Arc<Plan>`, so a repeated
+//!    collective pays one hash lookup on the submission path.
+//!
+//! # Submission model
+//!
+//! [`submit`](CollectiveEngine::submit) enqueues an [`OpRequest`] (the
+//! collective kind, ⊕ name, and per-rank input vectors) and returns an
+//! [`OpHandle`] future immediately; [`OpHandle::wait`] joins that one
+//! operation. Several operations may be in flight at once and complete
+//! **out of submission order**: each worker keeps a table of resumable
+//! [`OpCursor`]s and round-robin polls them with the transport's
+//! non-blocking primitives, so a small op submitted after a large one
+//! overtakes it instead of queueing behind it. Cross-op isolation on the
+//! wire comes from the operation **tag** (epoch) allocated per submit —
+//! see the `crate::transport` docs ("Op tags").
+//!
+//! Backpressure: `queue_depth` (config `engine.queue_depth`, env
+//! `CCOLL_ENGINE_QUEUE_DEPTH`, 0 = unbounded) caps in-flight operations;
+//! `submit` parks until a slot frees. The worker's wait strategy between
+//! poll passes is [`ParkPolicy`] (`engine.park` / `CCOLL_ENGINE_PARK`):
+//! `spin` for minimum latency, `yield` (default) for a fair middle
+//! ground, `sleep` for minimum idle CPU. Idle workers (no in-flight op)
+//! always block on the submission channel regardless of policy.
+//!
+//! # When to prefer the engine vs the launcher
+//!
+//! [`Launcher`](crate::coordinator::Launcher) remains the right tool for
+//! one-shot jobs and for interactive per-rank programs (its closure gets
+//! a full [`Communicator`](crate::coordinator::Communicator)); it is
+//! itself a thin wrapper that spawns an engine, runs the closure on every
+//! worker, and shuts down. The engine is the right tool when the same
+//! process issues many collectives over time — serving, training loops,
+//! benches measuring steady state.
+
+use std::any::Any;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::collectives::exec::{CollectiveError, OpCursor, Progress};
+use crate::collectives::generators::{allreduce_schedule, reduce_scatter_schedule};
+use crate::collectives::CirculantPlans;
+use crate::coordinator::OpBackend;
+use crate::datatypes::{BlockPartition, Elem};
+use crate::ops::ReduceOp;
+use crate::schedule::{Plan, PlanCache, PlanCacheStats, PlanKey};
+use crate::topology::skips::SkipScheme;
+use crate::transport::{network_typed, Endpoint};
+
+/// How a worker waits between poll passes while operations are in flight
+/// (idle workers always block on the submission channel).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParkPolicy {
+    /// Busy-spin (`spin_loop` hint) — lowest latency, one core per worker.
+    Spin,
+    /// `thread::yield_now` between passes — the default.
+    Yield,
+    /// Sleep ~50µs between passes — lowest idle CPU, adds wakeup latency.
+    Sleep,
+}
+
+impl ParkPolicy {
+    /// Grammar accepted by [`ParkPolicy::parse`], for knob diagnostics.
+    pub const NAMES_HELP: &'static str = "spin|yield|sleep";
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "spin" => Some(ParkPolicy::Spin),
+            "yield" => Some(ParkPolicy::Yield),
+            "sleep" => Some(ParkPolicy::Sleep),
+            _ => None,
+        }
+    }
+
+    /// Canonical name; round-trips through [`ParkPolicy::parse`].
+    pub fn name(self) -> &'static str {
+        match self {
+            ParkPolicy::Spin => "spin",
+            ParkPolicy::Yield => "yield",
+            ParkPolicy::Sleep => "sleep",
+        }
+    }
+
+    fn park(self) {
+        match self {
+            ParkPolicy::Spin => std::hint::spin_loop(),
+            ParkPolicy::Yield => thread::yield_now(),
+            ParkPolicy::Sleep => thread::sleep(Duration::from_micros(50)),
+        }
+    }
+}
+
+/// Engine construction parameters. Defaults come from the process-wide
+/// `CCOLL_ENGINE_*` knobs (`crate::env_knobs`); the builder methods
+/// override per engine.
+#[derive(Clone)]
+pub struct EngineConfig {
+    pub p: usize,
+    pub scheme: SkipScheme,
+    pub backend: OpBackend,
+    /// Enable the zero-copy rendezvous transport tier (subject to the
+    /// process-wide `CCOLL_NO_RENDEZVOUS` kill-switch).
+    pub rendezvous: bool,
+    /// Override the per-endpoint small-payload rendezvous threshold
+    /// (`None` keeps the latency-tuned process default; tests pin 0).
+    pub rendezvous_min_elems: Option<usize>,
+    /// Max operations in flight before `submit` parks (0 = unbounded).
+    pub queue_depth: usize,
+    /// Worker wait strategy between poll passes.
+    pub park: ParkPolicy,
+}
+
+impl EngineConfig {
+    pub fn new(p: usize) -> Self {
+        let knobs = crate::env_knobs::knobs();
+        Self {
+            p,
+            scheme: SkipScheme::HalvingUp,
+            backend: OpBackend::Native,
+            rendezvous: true,
+            rendezvous_min_elems: None,
+            queue_depth: knobs.engine_queue_depth,
+            park: knobs.engine_park,
+        }
+    }
+
+    pub fn scheme(mut self, scheme: SkipScheme) -> Self {
+        self.scheme = scheme;
+        self
+    }
+
+    pub fn backend(mut self, backend: OpBackend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    pub fn rendezvous(mut self, enabled: bool) -> Self {
+        self.rendezvous = enabled;
+        self
+    }
+
+    pub fn rendezvous_min_elems(mut self, elems: usize) -> Self {
+        self.rendezvous_min_elems = Some(elems);
+        self
+    }
+
+    pub fn queue_depth(mut self, depth: usize) -> Self {
+        self.queue_depth = depth;
+        self
+    }
+
+    pub fn park(mut self, park: ParkPolicy) -> Self {
+        self.park = park;
+        self
+    }
+}
+
+/// Which collective an [`OpRequest`] runs.
+#[derive(Debug, Clone)]
+pub enum CollectiveKind {
+    /// Algorithm 2 over the regular partition of the input length.
+    Allreduce,
+    /// Algorithm 1 over the regular partition (block `r` finishes at
+    /// rank `r` of the returned buffer).
+    ReduceScatter,
+    /// Algorithm 1 over an explicit per-block partition (Corollary 3).
+    ReduceScatterCounts(Vec<usize>),
+}
+
+/// One collective to run through the engine: the kind, the ⊕ name
+/// (resolved against the engine's backend), and one input vector per rank
+/// (all the same length — the working vectors move in and are returned
+/// transformed by [`OpHandle::wait`]).
+#[derive(Debug)]
+pub struct OpRequest<T: Elem = f32> {
+    pub kind: CollectiveKind,
+    pub op: String,
+    pub inputs: Vec<Vec<T>>,
+}
+
+impl<T: Elem> OpRequest<T> {
+    pub fn allreduce(inputs: Vec<Vec<T>>, op: &str) -> Self {
+        Self { kind: CollectiveKind::Allreduce, op: op.to_string(), inputs }
+    }
+
+    pub fn reduce_scatter(inputs: Vec<Vec<T>>, op: &str) -> Self {
+        Self { kind: CollectiveKind::ReduceScatter, op: op.to_string(), inputs }
+    }
+
+    pub fn reduce_scatter_counts(inputs: Vec<Vec<T>>, counts: Vec<usize>, op: &str) -> Self {
+        Self { kind: CollectiveKind::ReduceScatterCounts(counts), op: op.to_string(), inputs }
+    }
+}
+
+/// How long `submit` waits for an in-flight slot under `queue_depth`
+/// backpressure before failing with [`EngineError::BackpressureTimeout`]
+/// — comfortably past the transport's 30s per-op liveness watchdog, so a
+/// wedged op fails (and releases its slot) long before this fires unless
+/// a worker is actually gone.
+const BACKPRESSURE_TIMEOUT: Duration = Duration::from_secs(90);
+
+/// Errors surfaced by the engine's submission/completion paths.
+#[derive(Debug, thiserror::Error)]
+pub enum EngineError {
+    #[error("engine(p={p}): request carries inputs for {got} ranks")]
+    WrongRankCount { p: usize, got: usize },
+    #[error("engine(p={p}): rank {rank} input has {got} elements, others have {want}")]
+    RaggedInputs { p: usize, rank: usize, got: usize, want: usize },
+    #[error("engine(p={p}): reduce-scatter counts vector has {got} entries (need one per rank)")]
+    BadCountsLen { p: usize, got: usize },
+    #[error("engine: reduce-scatter counts sum to {want} elements but inputs have {got}")]
+    BadCounts { got: usize, want: usize },
+    #[error(
+        "engine: unknown op {name:?} for dtype {dtype} on this backend \
+         (native ops: sum|prod|min|max for every dtype; pjrt is f32 only)"
+    )]
+    UnknownOp { name: String, dtype: &'static str },
+    #[error(
+        "engine: backpressure timeout — {in_flight} ops in flight ≥ queue depth {depth} \
+         with no completion for {secs}s (worker dead or peer wedged?)",
+        secs = BACKPRESSURE_TIMEOUT.as_secs()
+    )]
+    BackpressureTimeout { in_flight: usize, depth: usize },
+    #[error("engine: worker {rank} is gone (engine shut down or crashed)")]
+    WorkerGone { rank: usize },
+    #[error("engine: already shut down")]
+    ShutDown,
+    #[error("engine: operation results lost (a worker exited early)")]
+    ResultsLost,
+    #[error("rank {rank}: {source}")]
+    Collective {
+        rank: usize,
+        #[source]
+        source: CollectiveError,
+    },
+}
+
+/// Per-operation bookkeeping shared by the `p` rank-sides of one op.
+struct OpShared {
+    /// Rank-sides not yet finished; the last one releases the in-flight
+    /// slot.
+    remaining: AtomicUsize,
+    inflight: Arc<AtomicUsize>,
+}
+
+/// One rank's share of a submitted operation.
+struct RankOp<T: Elem> {
+    op_tag: u64,
+    plan: Arc<Plan>,
+    op: Arc<dyn ReduceOp<T>>,
+    buf: Vec<T>,
+    done: Sender<(usize, Result<Vec<T>, CollectiveError>)>,
+    shared: Arc<OpShared>,
+}
+
+/// Type-erased one-shot closure a worker runs inline on its endpoint —
+/// the substrate [`crate::coordinator::Launcher`] is built on. A job may
+/// consume the endpoint (the launcher's communicator closures do), so the
+/// engine must be shut down after a closure run; see
+/// [`CollectiveEngine::run_closure`].
+type JobFn<T> = Box<dyn FnOnce(usize, &mut Endpoint<T>) -> Box<dyn Any + Send> + Send>;
+
+struct Job<T: Elem> {
+    run: JobFn<T>,
+    done: Sender<(usize, Box<dyn Any + Send>)>,
+}
+
+enum WorkerCmd<T: Elem> {
+    Op(RankOp<T>),
+    Job(Job<T>),
+    Shutdown,
+}
+
+/// Future for one submitted operation.
+pub struct OpHandle<T: Elem = f32> {
+    op_id: u64,
+    p: usize,
+    rx: Receiver<(usize, Result<Vec<T>, CollectiveError>)>,
+}
+
+impl<T: Elem> OpHandle<T> {
+    /// The operation's wire epoch (unique per engine, monotonically
+    /// increasing in submission order).
+    pub fn op_id(&self) -> u64 {
+        self.op_id
+    }
+
+    /// Block until every rank finished this operation; returns the
+    /// per-rank working vectors in rank order (allreduce: the full
+    /// reduction everywhere; reduce-scatter: block `r` finished at rank
+    /// `r`). The first rank error wins; remaining ranks are still
+    /// drained so the engine is quiesced when this returns.
+    pub fn wait(self) -> Result<Vec<Vec<T>>, EngineError> {
+        let mut out: Vec<Option<Vec<T>>> = (0..self.p).map(|_| None).collect();
+        let mut err: Option<EngineError> = None;
+        for _ in 0..self.p {
+            match self.rx.recv() {
+                Ok((rank, Ok(buf))) => out[rank] = Some(buf),
+                Ok((rank, Err(source))) => {
+                    err.get_or_insert(EngineError::Collective { rank, source });
+                }
+                Err(_) => {
+                    err.get_or_insert(EngineError::ResultsLost);
+                    break;
+                }
+            }
+        }
+        match err {
+            Some(e) => Err(e),
+            None => Ok(out.into_iter().map(|b| b.expect("every rank reported")).collect()),
+        }
+    }
+}
+
+/// One in-flight operation in a worker's table.
+struct ActiveOp<T: Elem> {
+    cursor: OpCursor,
+    plan: Arc<Plan>,
+    op: Arc<dyn ReduceOp<T>>,
+    buf: Vec<T>,
+    done: Sender<(usize, Result<Vec<T>, CollectiveError>)>,
+    shared: Arc<OpShared>,
+    /// Last observed cursor progress stamp (liveness watchdog).
+    last_progress: u64,
+    /// When to declare this op stuck if no progress happens.
+    deadline: Instant,
+}
+
+impl<T: Elem> ActiveOp<T> {
+    fn finish(&mut self, rank: usize, result: Result<Vec<T>, CollectiveError>) {
+        // The handle may have been dropped — completion accounting must
+        // happen regardless, so the in-flight slot is always released.
+        let _ = self.done.send((rank, result));
+        if self.shared.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            self.shared.inflight.fetch_sub(1, Ordering::AcqRel);
+        }
+    }
+}
+
+/// The persistent engine: `p` long-lived rank workers around a persistent
+/// typed endpoint network, fed through per-worker submission queues. See
+/// the module docs.
+pub struct CollectiveEngine<T: Elem = f32> {
+    p: usize,
+    scheme: SkipScheme,
+    /// Precomputed circulant plan vocabulary (canonical names + validated
+    /// skip sequence), derived by the same [`CirculantPlans`] helper the
+    /// communicator uses — one derivation site, one plan-key space.
+    vocab: CirculantPlans,
+    backend: OpBackend,
+    queue_depth: usize,
+    /// Next operation epoch (starts at 1; epoch 0 is the legacy untagged
+    /// wire space).
+    next_op: u64,
+    inflight: Arc<AtomicUsize>,
+    plans: Arc<PlanCache>,
+    txs: Vec<Sender<WorkerCmd<T>>>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl<T: Elem> CollectiveEngine<T> {
+    /// Spawn the `p` rank workers and their endpoint network. This is the
+    /// engine's only thread spawn — every subsequent operation reuses
+    /// them ([`crate::transport::rank_threads_spawned`] counts exactly
+    /// `p` for an engine's whole lifetime).
+    pub fn new(cfg: EngineConfig) -> Self {
+        assert!(cfg.p >= 1, "engine needs at least one rank");
+        // Validate the scheme + derive the plan vocabulary once, up
+        // front: every submission reuses both, and a bad scheme should
+        // fail at construction — not on the Nth submit.
+        let vocab = CirculantPlans::new(&cfg.scheme, cfg.p);
+        let endpoints = network_typed::<T>(cfg.p);
+        let mut txs = Vec::with_capacity(cfg.p);
+        let mut workers = Vec::with_capacity(cfg.p);
+        for (rank, mut ep) in endpoints.into_iter().enumerate() {
+            ep.rendezvous = cfg.rendezvous && crate::transport::rendezvous_env_enabled();
+            if let Some(min) = cfg.rendezvous_min_elems {
+                ep.rendezvous_min_elems = min;
+            }
+            let (tx, rx) = channel::<WorkerCmd<T>>();
+            txs.push(tx);
+            let park = cfg.park;
+            crate::transport::note_rank_thread_spawn();
+            workers.push(
+                thread::Builder::new()
+                    .name(format!("engine-rank-{rank}"))
+                    .stack_size(8 << 20)
+                    .spawn(move || worker_loop(rank, ep, rx, park))
+                    .expect("spawn engine worker"),
+            );
+        }
+        Self {
+            p: cfg.p,
+            vocab,
+            scheme: cfg.scheme,
+            backend: cfg.backend,
+            queue_depth: cfg.queue_depth,
+            next_op: 1,
+            inflight: Arc::new(AtomicUsize::new(0)),
+            plans: Arc::new(PlanCache::new()),
+            txs,
+            workers,
+        }
+    }
+
+    /// The engine's skip scheme.
+    pub fn scheme(&self) -> &SkipScheme {
+        &self.scheme
+    }
+
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    /// Operations submitted but not yet finished on every rank.
+    pub fn in_flight(&self) -> usize {
+        self.inflight.load(Ordering::Acquire)
+    }
+
+    /// The shared plan cache (hand it to communicators that should reuse
+    /// this engine's plans).
+    pub fn plan_cache(&self) -> Arc<PlanCache> {
+        self.plans.clone()
+    }
+
+    /// Plan-cache hit/miss/size counters.
+    pub fn plan_stats(&self) -> PlanCacheStats {
+        self.plans.stats()
+    }
+
+    /// Enqueue one collective; returns its future immediately. Parks when
+    /// `queue_depth` operations are already in flight. See [`OpRequest`]
+    /// for input semantics and [`OpHandle::wait`] for result layout.
+    pub fn submit(&mut self, req: OpRequest<T>) -> Result<OpHandle<T>, EngineError> {
+        let p = self.p;
+        if self.txs.is_empty() {
+            return Err(EngineError::ShutDown);
+        }
+        if req.inputs.len() != p {
+            return Err(EngineError::WrongRankCount { p, got: req.inputs.len() });
+        }
+        let m = req.inputs.first().map_or(0, Vec::len);
+        for (rank, v) in req.inputs.iter().enumerate() {
+            if v.len() != m {
+                return Err(EngineError::RaggedInputs { p, rank, got: v.len(), want: m });
+            }
+        }
+        let (algorithm, part, is_allreduce) = match &req.kind {
+            CollectiveKind::Allreduce => {
+                (&self.vocab.allreduce, BlockPartition::regular(p, m), true)
+            }
+            CollectiveKind::ReduceScatter => {
+                (&self.vocab.reduce_scatter, BlockPartition::regular(p, m), false)
+            }
+            CollectiveKind::ReduceScatterCounts(counts) => {
+                if counts.len() != p {
+                    return Err(EngineError::BadCountsLen { p, got: counts.len() });
+                }
+                let part = BlockPartition::from_counts(counts);
+                if part.total() != m {
+                    return Err(EngineError::BadCounts { got: m, want: part.total() });
+                }
+                (&self.vocab.reduce_scatter, part, false)
+            }
+        };
+        let key = PlanKey::new(algorithm.clone(), p, &part, T::DTYPE);
+        // The skip sequence was validated at construction; plan builds
+        // (cache misses only) reuse it instead of re-deriving per submit.
+        let skips = &self.vocab.skips;
+        let (plan, _hit) = self.plans.get_or_build(key, &part, || {
+            if is_allreduce {
+                allreduce_schedule(p, skips)
+            } else {
+                reduce_scatter_schedule(p, skips)
+            }
+        });
+        let op: Arc<dyn ReduceOp<T>> =
+            Arc::from(self.backend.resolve::<T>(&req.op).ok_or_else(|| EngineError::UnknownOp {
+                name: req.op.clone(),
+                dtype: T::DTYPE.name(),
+            })?);
+
+        // Backpressure: park until an in-flight slot frees. Workers
+        // release slots as ops finish (even on error or watchdog
+        // timeout), so this drains within the transport's 30s liveness
+        // bound unless a worker is actually gone — the deadline turns
+        // that pathology into an error instead of a silent forever-spin.
+        if self.queue_depth > 0 {
+            let deadline = Instant::now() + BACKPRESSURE_TIMEOUT;
+            while self.inflight.load(Ordering::Acquire) >= self.queue_depth {
+                if Instant::now() >= deadline {
+                    return Err(EngineError::BackpressureTimeout {
+                        in_flight: self.inflight.load(Ordering::Acquire),
+                        depth: self.queue_depth,
+                    });
+                }
+                thread::sleep(Duration::from_micros(50));
+            }
+        }
+
+        let op_tag = self.next_op;
+        self.next_op += 1;
+        self.inflight.fetch_add(1, Ordering::AcqRel);
+        let (tx, rx) = channel();
+        let shared =
+            Arc::new(OpShared { remaining: AtomicUsize::new(p), inflight: self.inflight.clone() });
+        for (rank, buf) in req.inputs.into_iter().enumerate() {
+            let cmd = WorkerCmd::Op(RankOp {
+                op_tag,
+                plan: plan.clone(),
+                op: op.clone(),
+                buf,
+                done: tx.clone(),
+                shared: shared.clone(),
+            });
+            if self.txs[rank].send(cmd).is_err() {
+                // Partial fan-out failure: roll back the shares of the
+                // ranks that never received the op, so the delivered
+                // ranks' eventual completion (or watchdog timeout) still
+                // releases the in-flight slot instead of leaking it.
+                let undelivered = p - rank;
+                if shared.remaining.fetch_sub(undelivered, Ordering::AcqRel) == undelivered {
+                    self.inflight.fetch_sub(1, Ordering::AcqRel);
+                }
+                return Err(EngineError::WorkerGone { rank });
+            }
+        }
+        Ok(OpHandle { op_id: op_tag, p, rx })
+    }
+
+    /// Run `f(rank, endpoint)` once on every worker and collect the
+    /// results in rank order — the launcher substrate. The closure may
+    /// consume/replace the endpoint (the launcher's communicator does),
+    /// so the engine is only good for [`shutdown`]
+    /// (CollectiveEngine::shutdown) afterwards; that is why this is
+    /// crate-private. Worker panics propagate like `run_ranks`' did.
+    pub(crate) fn run_closure<R, F>(&mut self, f: F) -> Vec<R>
+    where
+        R: Send + 'static,
+        F: Fn(usize, &mut Endpoint<T>) -> R + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let (tx, rx) = channel::<(usize, Box<dyn Any + Send>)>();
+        for rank in 0..self.p {
+            let f = f.clone();
+            let run: JobFn<T> =
+                Box::new(move |rank, ep| Box::new(f(rank, ep)) as Box<dyn Any + Send>);
+            if self.txs[rank].send(WorkerCmd::Job(Job { run, done: tx.clone() })).is_err() {
+                self.join_workers_propagating();
+                panic!("engine worker {rank} exited before running its job");
+            }
+        }
+        drop(tx);
+        let mut out: Vec<Option<R>> = (0..self.p).map(|_| None).collect();
+        for _ in 0..self.p {
+            match rx.recv() {
+                Ok((rank, boxed)) => {
+                    out[rank] = Some(*boxed.downcast::<R>().expect("job result type"));
+                }
+                Err(_) => {
+                    // A worker died before reporting — join to surface its
+                    // panic payload with the original message.
+                    self.join_workers_propagating();
+                    panic!("engine worker exited before returning its job result");
+                }
+            }
+        }
+        out.into_iter().map(|r| r.expect("all ranks reported")).collect()
+    }
+
+    /// Ask every worker to finish its in-flight operations and exit, then
+    /// join them. Propagates worker panics. Idempotent.
+    pub fn shutdown(&mut self) {
+        if self.workers.is_empty() {
+            return;
+        }
+        for tx in &self.txs {
+            let _ = tx.send(WorkerCmd::Shutdown);
+        }
+        self.join_workers_propagating();
+    }
+
+    fn join_workers_propagating(&mut self) {
+        // Closing the command channels unblocks idle workers' recv().
+        self.txs.clear();
+        for handle in self.workers.drain(..) {
+            if let Err(payload) = handle.join() {
+                if !thread::panicking() {
+                    std::panic::resume_unwind(payload);
+                }
+            }
+        }
+    }
+}
+
+impl<T: Elem> Drop for CollectiveEngine<T> {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// The worker body: admit commands, round-robin poll the in-flight
+/// cursors with non-blocking steps, park per policy when nothing moved.
+fn worker_loop<T: Elem>(
+    rank: usize,
+    mut ep: Endpoint<T>,
+    rx: Receiver<WorkerCmd<T>>,
+    park: ParkPolicy,
+) {
+    let mut active: Vec<ActiveOp<T>> = Vec::new();
+    let mut shutting_down = false;
+    loop {
+        // Admit work. With nothing in flight, block on the queue (no
+        // busy-wait while idle); otherwise drain whatever is ready.
+        if active.is_empty() {
+            if shutting_down {
+                break;
+            }
+            match rx.recv() {
+                Ok(cmd) => admit(cmd, &mut active, &mut ep, rank, &mut shutting_down),
+                Err(_) => break, // engine dropped the sender: exit
+            }
+        }
+        loop {
+            match rx.try_recv() {
+                Ok(cmd) => admit(cmd, &mut active, &mut ep, rank, &mut shutting_down),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    shutting_down = true;
+                    break;
+                }
+            }
+        }
+
+        // One non-blocking poll pass over every in-flight op. An op whose
+        // peer messages have arrived advances (possibly several rounds);
+        // ops waiting on slower peers stay put — that is what lets a
+        // later small op complete before an earlier big one.
+        let now = Instant::now();
+        let timeout = ep.timeout;
+        let mut made_progress = false;
+        active.retain_mut(|a| {
+            match a.cursor.step(
+                &mut ep,
+                &a.plan.schedule,
+                &a.plan.part,
+                a.op.as_ref(),
+                &mut a.buf,
+                false,
+            ) {
+                Ok(Progress::Done) => {
+                    made_progress = true;
+                    let buf = std::mem::take(&mut a.buf);
+                    a.finish(rank, Ok(buf));
+                    false
+                }
+                Ok(Progress::Pending) => {
+                    let progress = a.cursor.progress();
+                    if progress != a.last_progress {
+                        a.last_progress = progress;
+                        a.deadline = now + timeout;
+                        made_progress = true;
+                        true
+                    } else if now >= a.deadline {
+                        // Liveness watchdog: the blocking executor's
+                        // recv/ack timeouts, ported to the polled world.
+                        let err = a.cursor.timeout_error(&a.plan.schedule, rank);
+                        a.cursor.abort(&mut ep);
+                        cleanup_failed_op(&mut ep, &mut a.buf, a.cursor.op_tag());
+                        a.finish(rank, Err(err));
+                        made_progress = true;
+                        false
+                    } else {
+                        true
+                    }
+                }
+                Err(e) => {
+                    // step() already quiesced this op's publishes
+                    // (bounded by ep.timeout); if that quiesce itself
+                    // timed out the buffer is not safe to free.
+                    cleanup_failed_op(&mut ep, &mut a.buf, a.cursor.op_tag());
+                    made_progress = true;
+                    a.finish(rank, Err(e));
+                    false
+                }
+            }
+        });
+        if !active.is_empty() && !made_progress {
+            park.park();
+        }
+    }
+}
+
+/// Failure-path teardown for one op on one endpoint, in two steps.
+///
+/// **Quarantine:** if the op's quiesce (`finish_op`) *timed out*, the
+/// rendezvous contract is void — a merely-stalled (not dead) peer may
+/// still hold `RemoteSlices` descriptors into the working vector, so
+/// freeing it would be a use-after-free on the peer's side
+/// (`crate::transport` docs, "Rendezvous safety contract"). Deliberately
+/// leak the allocation for the process lifetime instead: a bounded leak
+/// on an already-failed op (each has burned its 30s watchdog) in
+/// exchange for unconditional memory safety. The handle receives the
+/// error, so nothing observes the emptied buffer.
+///
+/// **Forget:** then drop every remaining wire artifact of the epoch
+/// (stashed payloads completed back to their senders, stale pending-ack
+/// entries removed), so repeated failures cannot grow the persistent
+/// endpoint's stash without bound.
+fn cleanup_failed_op<T: Elem>(ep: &mut Endpoint<T>, buf: &mut Vec<T>, op_tag: u64) {
+    if ep.op_has_pending_publish(op_tag) {
+        std::mem::forget(std::mem::take(buf));
+    }
+    ep.forget_op(op_tag);
+}
+
+fn admit<T: Elem>(
+    cmd: WorkerCmd<T>,
+    active: &mut Vec<ActiveOp<T>>,
+    ep: &mut Endpoint<T>,
+    rank: usize,
+    shutting_down: &mut bool,
+) {
+    match cmd {
+        WorkerCmd::Op(op) => {
+            let deadline = Instant::now() + ep.timeout;
+            active.push(ActiveOp {
+                cursor: OpCursor::new(op.op_tag, 0),
+                plan: op.plan,
+                op: op.op,
+                buf: op.buf,
+                done: op.done,
+                shared: op.shared,
+                last_progress: 0,
+                deadline,
+            });
+        }
+        WorkerCmd::Job(job) => {
+            // Jobs run inline and may block on collectives of their own
+            // (epoch 0); the launcher only uses them on an otherwise-idle
+            // engine.
+            let out = (job.run)(rank, ep);
+            let _ = job.done.send((rank, out));
+        }
+        WorkerCmd::Shutdown => *shutting_down = true,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::SumOp;
+
+    fn int_inputs(p: usize, m: usize, seed: u64) -> Vec<Vec<i64>> {
+        let mut rng = crate::util::rng::SplitMix64::new(seed);
+        (0..p).map(|_| crate::datatypes::elem::int_vec(&mut rng, m, -8, 9)).collect()
+    }
+
+    fn oracle_sum(inputs: &[Vec<i64>]) -> Vec<i64> {
+        let mut acc = vec![0i64; inputs[0].len()];
+        for v in inputs {
+            SumOp.combine(&mut acc, v);
+        }
+        acc
+    }
+
+    #[test]
+    fn single_op_round_trip() {
+        let p = 4;
+        let m = 37;
+        let inputs = int_inputs(p, m, 7);
+        let want = oracle_sum(&inputs);
+        let mut engine = CollectiveEngine::<i64>::new(EngineConfig::new(p));
+        let handle = engine.submit(OpRequest::allreduce(inputs, "sum")).unwrap();
+        let out = handle.wait().unwrap();
+        for (r, buf) in out.iter().enumerate() {
+            assert_eq!(buf, &want, "rank {r}");
+        }
+        engine.shutdown();
+    }
+
+    #[test]
+    fn park_policy_round_trips() {
+        for policy in [ParkPolicy::Spin, ParkPolicy::Yield, ParkPolicy::Sleep] {
+            assert_eq!(ParkPolicy::parse(policy.name()), Some(policy));
+        }
+        assert_eq!(ParkPolicy::parse("nap"), None);
+    }
+
+    #[test]
+    fn submit_validates_requests() {
+        let p = 3;
+        let mut engine = CollectiveEngine::<i64>::new(EngineConfig::new(p));
+        // wrong rank count
+        let err = engine.submit(OpRequest::allreduce(int_inputs(2, 8, 1), "sum")).unwrap_err();
+        assert!(matches!(err, EngineError::WrongRankCount { got: 2, .. }), "{err}");
+        // ragged inputs
+        let mut ragged = int_inputs(p, 8, 2);
+        ragged[1].pop();
+        let err = engine.submit(OpRequest::allreduce(ragged, "sum")).unwrap_err();
+        assert!(matches!(err, EngineError::RaggedInputs { rank: 1, .. }), "{err}");
+        // bad counts
+        let err = engine
+            .submit(OpRequest::reduce_scatter_counts(int_inputs(p, 8, 3), vec![1, 2, 3], "sum"))
+            .unwrap_err();
+        assert!(matches!(err, EngineError::BadCounts { got: 8, want: 6 }), "{err}");
+        // counts-vector length mismatch gets its own diagnostic (not the
+        // misleading wrong-rank-count-of-inputs message)
+        let err = engine
+            .submit(OpRequest::reduce_scatter_counts(int_inputs(p, 8, 3), vec![4, 4], "sum"))
+            .unwrap_err();
+        assert!(matches!(err, EngineError::BadCountsLen { got: 2, .. }), "{err}");
+        // unknown op
+        let err = engine.submit(OpRequest::allreduce(int_inputs(p, 8, 4), "xor")).unwrap_err();
+        assert!(matches!(err, EngineError::UnknownOp { .. }), "{err}");
+        // the engine must still be healthy after rejected submissions
+        let want = oracle_sum(&int_inputs(p, 8, 5));
+        let out =
+            engine.submit(OpRequest::allreduce(int_inputs(p, 8, 5), "sum")).unwrap().wait().unwrap();
+        assert_eq!(out[0], want);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn shutdown_is_idempotent_and_drop_safe() {
+        let mut engine = CollectiveEngine::<f32>::new(EngineConfig::new(2));
+        engine.shutdown();
+        engine.shutdown();
+        let err = engine.submit(OpRequest::allreduce(vec![vec![0.0f32; 4]; 2], "sum")).unwrap_err();
+        assert!(matches!(err, EngineError::ShutDown), "{err}");
+        drop(engine); // Drop after shutdown must be a no-op
+    }
+}

@@ -19,14 +19,18 @@
 //! | `CCOLL_BENCH_FAST`           | bool   | `0`     | bench sweep shrinking |
 //! | `CCOLL_BENCH_DTYPE`          | dtype  | `f32`   | element type of the T1/T2 benches |
 //! | `CCOLL_PJRT_CHUNK`           | usize? | unset   | PJRT engine chunk-bucket override |
+//! | `CCOLL_ENGINE_QUEUE_DEPTH`   | usize  | `0`     | engine in-flight op cap (0 = unbounded) |
+//! | `CCOLL_ENGINE_PARK`          | park   | `yield` | engine worker wait strategy |
 //!
 //! Booleans accept `0|1|true|false|yes|no` (empty = unset = default).
 //! Integers accept decimal digits with optional `_` separators. Dtypes
-//! accept `f32|f64|i32|i64|u64`.
+//! accept `f32|f64|i32|i64|u64`; park policies accept `spin|yield|sleep`.
+//! `ccoll info` lists every knob with its resolved value.
 
 use std::sync::OnceLock;
 
 use crate::datatypes::DType;
+use crate::engine::ParkPolicy;
 
 /// The parsed knob set. Construct via [`knobs`] (process env, cached) or
 /// [`parse_from`] (explicit lookup, for tests).
@@ -48,6 +52,14 @@ pub struct EnvKnobs {
     /// default. Validated here even when the `pjrt` feature is off, so
     /// a malformed value always aborts loudly.
     pub pjrt_chunk: Option<usize>,
+    /// Default cap on in-flight engine operations before `submit` parks
+    /// (`CCOLL_ENGINE_QUEUE_DEPTH`; 0 = unbounded). Per-engine override:
+    /// `EngineConfig::queue_depth` / config key `engine.queue_depth`.
+    pub engine_queue_depth: usize,
+    /// Default engine worker wait strategy between poll passes
+    /// (`CCOLL_ENGINE_PARK`: spin|yield|sleep). Per-engine override:
+    /// `EngineConfig::park` / config key `engine.park`.
+    pub engine_park: ParkPolicy,
 }
 
 fn parse_bool(name: &str, raw: Option<&str>, default: bool) -> Result<bool, String> {
@@ -85,6 +97,15 @@ fn parse_dtype(name: &str, raw: Option<&str>, default: DType) -> Result<DType, S
     }
 }
 
+fn parse_park(name: &str, raw: Option<&str>, default: ParkPolicy) -> Result<ParkPolicy, String> {
+    match raw {
+        None | Some("") => Ok(default),
+        Some(v) => ParkPolicy::parse(v).ok_or_else(|| {
+            format!("{name}={v:?} is not a park policy (accepted: {})", ParkPolicy::NAMES_HELP)
+        }),
+    }
+}
+
 /// Parse a knob set from an arbitrary lookup function — pure, so malformed
 /// values are testable without touching the process environment.
 pub fn parse_from(get: impl Fn(&str) -> Option<String>) -> Result<EnvKnobs, String> {
@@ -104,6 +125,16 @@ pub fn parse_from(get: impl Fn(&str) -> Option<String>) -> Result<EnvKnobs, Stri
             DType::F32,
         )?,
         pjrt_chunk: parse_opt_usize("CCOLL_PJRT_CHUNK", get("CCOLL_PJRT_CHUNK").as_deref())?,
+        engine_queue_depth: parse_usize(
+            "CCOLL_ENGINE_QUEUE_DEPTH",
+            get("CCOLL_ENGINE_QUEUE_DEPTH").as_deref(),
+            0,
+        )?,
+        engine_park: parse_park(
+            "CCOLL_ENGINE_PARK",
+            get("CCOLL_ENGINE_PARK").as_deref(),
+            ParkPolicy::Yield,
+        )?,
     })
 }
 
@@ -138,6 +169,22 @@ mod tests {
         assert!(!k.bench_fast);
         assert_eq!(k.bench_dtype, DType::F32);
         assert_eq!(k.pjrt_chunk, None);
+        assert_eq!(k.engine_queue_depth, 0, "0 = unbounded");
+        assert_eq!(k.engine_park, ParkPolicy::Yield);
+    }
+
+    #[test]
+    fn engine_knobs_parse_and_reject_loudly() {
+        let k = with(&[("CCOLL_ENGINE_QUEUE_DEPTH", "64"), ("CCOLL_ENGINE_PARK", "spin")]).unwrap();
+        assert_eq!(k.engine_queue_depth, 64);
+        assert_eq!(k.engine_park, ParkPolicy::Spin);
+        for v in ["yield", "sleep"] {
+            assert_eq!(with(&[("CCOLL_ENGINE_PARK", v)]).unwrap().engine_park.name(), v);
+        }
+        let err = with(&[("CCOLL_ENGINE_QUEUE_DEPTH", "deep")]).unwrap_err();
+        assert!(err.contains("CCOLL_ENGINE_QUEUE_DEPTH") && err.contains("deep"), "{err}");
+        let err = with(&[("CCOLL_ENGINE_PARK", "nap")]).unwrap_err();
+        assert!(err.contains("CCOLL_ENGINE_PARK") && err.contains("spin|yield|sleep"), "{err}");
     }
 
     #[test]

@@ -23,6 +23,7 @@ pub mod collectives;
 pub mod config;
 pub mod coordinator;
 pub mod datatypes;
+pub mod engine;
 pub mod env_knobs;
 pub mod ops;
 pub mod runtime;

@@ -17,6 +17,10 @@
 //! the datatype-style zero-copy representation §3 of the paper alludes to —
 //! no rotated copy of the input is ever materialized.
 
+pub mod plan_cache;
+
+pub use plan_cache::{Plan, PlanCache, PlanCacheStats, PlanKey};
+
 use crate::datatypes::BlockPartition;
 
 /// A circular range of `len` global blocks starting at block `start`.

@@ -1,0 +1,292 @@
+//! Plan cache: memoized `(algorithm, p, partition, dtype) → Arc<Plan>`.
+//!
+//! The paper's Algorithm 1/2 schedules are pure functions of
+//! `(p, partition, skip scheme)` — yet the pre-engine code regenerated
+//! them on every collective call. For one-shot benches that is noise; for
+//! the ROADMAP's serving workload (thousands of repeated collectives per
+//! second through one [`crate::engine::CollectiveEngine`]) it is pure
+//! waste on the submission path. A [`PlanCache`] memoizes built plans
+//! behind `Arc`s so repeated collectives pay one hash lookup, and both the
+//! engine's submission path and every [`crate::coordinator::Communicator`]
+//! route their schedules through one.
+//!
+//! Keys carry a 64-bit partition *fingerprint*
+//! ([`crate::datatypes::BlockPartition::fingerprint`]) rather than the
+//! whole offset vector; every hit verifies the stored partition against
+//! the requested one, so a fingerprint collision degrades to a (counted)
+//! miss instead of ever serving a wrong schedule.
+//!
+//! Hit/miss counters are surfaced two ways: globally per cache
+//! ([`PlanCache::stats`], what `ccoll serve` and the engine report) and
+//! per rank through `transport::Counters::{plan_hits, plan_misses}`
+//! (credited by the communicator, aggregated by
+//! [`crate::coordinator::RunMetrics`]).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::datatypes::{BlockPartition, DType};
+use crate::schedule::Schedule;
+
+/// A fully-resolved execution plan: the schedule plus the partition it was
+/// built for, shared behind one `Arc` so every rank of every repeated
+/// collective reuses a single allocation.
+#[derive(Debug)]
+pub struct Plan {
+    pub schedule: Schedule,
+    pub part: BlockPartition,
+}
+
+/// Cache key — what a schedule is a pure function of, plus the dtype (the
+/// schedule itself is dtype-independent, but plans are handed to typed
+/// executors; keying by dtype keeps one cached plan from pinning another
+/// dtype's partition object and makes the counters per-dtype honest).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    /// Canonical algorithm name (e.g. `allreduce:halving-up`,
+    /// `binomial-scatter:3`) — free-form so non-`Algorithm` schedules
+    /// (rooted scatter/gather trees) can participate. `Arc<str>` so
+    /// steady-state callers (communicator, engine) key repeated lookups
+    /// with a refcount bump instead of a fresh `String` allocation.
+    pub algorithm: Arc<str>,
+    pub p: usize,
+    /// [`BlockPartition::fingerprint`] of the exact block layout.
+    pub partition: u64,
+    pub dtype: DType,
+}
+
+impl PlanKey {
+    pub fn new(
+        algorithm: impl Into<Arc<str>>,
+        p: usize,
+        part: &BlockPartition,
+        dtype: DType,
+    ) -> Self {
+        Self { algorithm: algorithm.into(), p, partition: part.fingerprint(), dtype }
+    }
+}
+
+/// Snapshot of a cache's counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PlanCacheStats {
+    /// Lookups served from the cache.
+    pub hits: u64,
+    /// Lookups that had to build (including the never-cached collision
+    /// fallback).
+    pub misses: u64,
+    /// Entries dropped to stay under the capacity bound.
+    pub evictions: u64,
+    /// Distinct plans currently held.
+    pub entries: usize,
+}
+
+/// Default capacity bound ([`PlanCache::with_capacity`]): generous for
+/// any realistic working set of collective geometries, while keeping a
+/// long-lived serving engine fed arbitrary payload sizes from growing
+/// its plan map without limit.
+pub const DEFAULT_PLAN_CACHE_CAPACITY: usize = 1024;
+
+/// Thread-safe memo of built plans. Cheap to share: clone the `Arc` the
+/// launcher/engine wraps it in.
+///
+/// Bounded: when full, inserting a new plan evicts an arbitrary resident
+/// entry (plans are cheap to rebuild, so a simple bound beats LRU
+/// bookkeeping on the submission path; evictions are counted in
+/// [`PlanCacheStats`]).
+#[derive(Debug)]
+pub struct PlanCache {
+    plans: Mutex<HashMap<PlanKey, Arc<Plan>>>,
+    capacity: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl Default for PlanCache {
+    fn default() -> Self {
+        Self::with_capacity(DEFAULT_PLAN_CACHE_CAPACITY)
+    }
+}
+
+impl PlanCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A cache holding at most `capacity` plans (0 = unbounded).
+    pub fn with_capacity(capacity: usize) -> Self {
+        Self {
+            plans: Mutex::new(HashMap::new()),
+            capacity,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// Look up `key`, building (and caching) the schedule on a miss.
+    /// Returns the shared plan and whether this lookup was a hit.
+    ///
+    /// The build runs *outside* the lock, so concurrent ranks missing on
+    /// the same key may build in parallel; the first insert wins and the
+    /// losers adopt it (each still counts as a miss — they did the work).
+    /// A fingerprint collision (stored partition ≠ requested) returns a
+    /// fresh, **uncached** plan rather than ever serving a wrong schedule.
+    pub fn get_or_build(
+        &self,
+        key: PlanKey,
+        part: &BlockPartition,
+        build: impl FnOnce() -> Schedule,
+    ) -> (Arc<Plan>, bool) {
+        let mut collision = false;
+        if let Some(plan) = self.plans.lock().unwrap().get(&key) {
+            if plan.part == *part {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return (plan.clone(), true);
+            }
+            collision = true;
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let plan = Arc::new(Plan { schedule: build(), part: part.clone() });
+        if collision {
+            // Never cached: the slot is owned by the other layout.
+            return (plan, false);
+        }
+        let mut map = self.plans.lock().unwrap();
+        if let Some(existing) = map.get(&key) {
+            // Raced with another builder; adopt the winner if its layout
+            // matches (it does unless we also collided).
+            if existing.part == *part {
+                return (existing.clone(), false);
+            }
+            return (plan, false);
+        }
+        // Capacity bound: evict an arbitrary resident entry before
+        // inserting (see the type docs for why not LRU).
+        if self.capacity > 0 && map.len() >= self.capacity {
+            if let Some(victim) = map.keys().next().cloned() {
+                map.remove(&victim);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        map.insert(key, plan.clone());
+        (plan, false)
+    }
+
+    /// Counter + size snapshot.
+    pub fn stats(&self) -> PlanCacheStats {
+        PlanCacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            entries: self.plans.lock().unwrap().len(),
+        }
+    }
+
+    /// Drop every cached plan (counters are kept).
+    pub fn clear(&self) {
+        self.plans.lock().unwrap().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::generators::{allreduce_schedule, reduce_scatter_schedule};
+    use crate::topology::skips::SkipScheme;
+
+    fn build(p: usize, m: usize, allreduce: bool) -> (BlockPartition, Schedule) {
+        let part = BlockPartition::regular(p, m);
+        let skips = SkipScheme::HalvingUp.skips(p).unwrap();
+        let sched =
+            if allreduce { allreduce_schedule(p, &skips) } else { reduce_scatter_schedule(p, &skips) };
+        (part, sched)
+    }
+
+    #[test]
+    fn second_lookup_is_a_hit_and_shares_the_arc() {
+        let cache = PlanCache::new();
+        let (part, sched) = build(6, 60, true);
+        let key = PlanKey::new("allreduce:halving-up", 6, &part, DType::F32);
+        let (a, hit_a) = cache.get_or_build(key.clone(), &part, || sched.clone());
+        let (b, hit_b) = cache.get_or_build(key, &part, || panic!("must not rebuild"));
+        assert!(!hit_a && hit_b);
+        assert!(Arc::ptr_eq(&a, &b), "hit must share the cached Arc");
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+    }
+
+    #[test]
+    fn differing_partition_dtype_or_algorithm_miss() {
+        let cache = PlanCache::new();
+        let (part, sched) = build(5, 50, true);
+        let (part2, _) = build(5, 55, true); // different layout
+        let mk = |alg: &str, part: &BlockPartition, dt| PlanKey::new(alg, 5, part, dt);
+        cache.get_or_build(mk("allreduce:halving-up", &part, DType::F32), &part, || sched.clone());
+        // same algorithm, different partition → miss
+        let (_, hit) = cache.get_or_build(
+            mk("allreduce:halving-up", &part2, DType::F32),
+            &part2,
+            || sched.clone(),
+        );
+        assert!(!hit);
+        // same partition, different dtype → miss
+        let (_, hit) =
+            cache.get_or_build(mk("allreduce:halving-up", &part, DType::I64), &part, || sched.clone());
+        assert!(!hit);
+        // same partition + dtype, different algorithm/scheme → miss
+        let (_, hit) =
+            cache.get_or_build(mk("allreduce:pow2", &part, DType::F32), &part, || sched.clone());
+        assert!(!hit);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (0, 4, 4));
+        // and each of those now hits
+        let (_, hit) =
+            cache.get_or_build(mk("allreduce:pow2", &part, DType::F32), &part, || unreachable!());
+        assert!(hit);
+    }
+
+    #[test]
+    fn fingerprint_collision_never_serves_a_wrong_plan() {
+        // Forge a key whose fingerprint belongs to a *different* layout:
+        // the cache must detect the mismatch and build fresh, uncached.
+        let cache = PlanCache::new();
+        let (part_a, sched_a) = build(4, 40, false);
+        let (part_b, sched_b) = build(4, 44, false);
+        let key_a = PlanKey::new("rs", 4, &part_a, DType::F32);
+        cache.get_or_build(key_a.clone(), &part_a, || sched_a.clone());
+        // Same key bits, but the caller's partition is B's layout.
+        let (plan, hit) = cache.get_or_build(key_a, &part_b, || sched_b.clone());
+        assert!(!hit);
+        assert_eq!(plan.part, part_b, "must carry the requested layout");
+        assert_eq!(cache.stats().entries, 1, "collision fallback is never cached");
+    }
+
+    #[test]
+    fn capacity_bound_evicts_instead_of_growing() {
+        let cache = PlanCache::with_capacity(4);
+        for m in 0..10usize {
+            let (part, sched) = build(3, 30 + m, true);
+            cache.get_or_build(PlanKey::new("ar", 3, &part, DType::F32), &part, || sched.clone());
+        }
+        let s = cache.stats();
+        assert!(s.entries <= 4, "{} entries exceed the capacity bound", s.entries);
+        assert_eq!(s.evictions, 6, "10 distinct plans through a 4-slot cache");
+        assert_eq!(s.misses, 10);
+        // An evicted key simply rebuilds (a miss), never errors.
+        let (part, sched) = build(3, 30, true);
+        let (plan, _) = cache.get_or_build(PlanKey::new("ar", 3, &part, DType::F32), &part, || {
+            sched.clone()
+        });
+        assert_eq!(plan.part, part);
+    }
+
+    #[test]
+    fn fingerprints_distinguish_layouts_with_equal_totals() {
+        let a = BlockPartition::from_counts(&[2, 3, 5]);
+        let b = BlockPartition::from_counts(&[3, 2, 5]);
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        assert_eq!(a.fingerprint(), BlockPartition::from_counts(&[2, 3, 5]).fingerprint());
+    }
+}

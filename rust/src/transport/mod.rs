@@ -7,11 +7,27 @@
 //! (MPI_Sendrecv): in one operation a rank sends one message to one peer
 //! and receives one message from a possibly different peer.
 //!
-//! Messages are tagged `(from, round)` and stashed on arrival, so the
-//! rendezvous is insensitive to thread scheduling while still enforcing the
-//! round structure (a message for round `k` can only be consumed by the
-//! round-`k` sendrecv). Per-endpoint counters record rounds, messages and
-//! element volume for the Theorem 1/2 benches.
+//! Messages are tagged `(from, op, round)` ([`Tag`]) and stashed on
+//! arrival, so the rendezvous is insensitive to thread scheduling while
+//! still enforcing the round structure (a message for round `k` of
+//! operation `o` can only be consumed by that operation's round-`k`
+//! sendrecv). Per-endpoint counters record rounds, messages and element
+//! volume for the Theorem 1/2 benches.
+//!
+//! # Op tags (the wire discipline for concurrent collectives)
+//!
+//! A plain `round: u64` tag is enough for one collective at a time — the
+//! communicator reserves monotonic round windows so *back-to-back* ops
+//! never collide. It is **not** enough for several collectives in flight
+//! on the same endpoints (the [`crate::engine`] worker loop interleaves
+//! them): two concurrent schedules both counting rounds 0,1,2,… would
+//! cross-match messages and rendezvous acks. Every wire artifact —
+//! messages, the stash, rendezvous ack channels and the pending-publish
+//! set — is therefore keyed by a [`Tag`]: an operation epoch `op` plus the
+//! round within that operation. The legacy `round: u64` APIs all operate
+//! in epoch 0 (`Tag::untagged`), so single-collective callers (and every
+//! pre-engine test) keep their exact wire behavior; the engine allocates a
+//! fresh nonzero epoch per submitted operation.
 //!
 //! # Element types (dtypes)
 //!
@@ -117,10 +133,50 @@
 //! and descriptors become remote keys, with no executor change.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::time::Duration;
 
 use crate::datatypes::Elem;
+
+/// Wire tag of one message/ack: the operation epoch plus the round within
+/// that operation. See the module docs ("Op tags") — epoch 0 is the
+/// legacy/untagged space shared by every `round: u64` API; the engine
+/// allocates epochs ≥ 1 so concurrent collectives on the same endpoints
+/// can never cross-match.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Tag {
+    /// Operation epoch (0 = the untagged/legacy space).
+    pub op: u64,
+    /// Round within the operation.
+    pub round: u64,
+}
+
+impl Tag {
+    pub fn new(op: u64, round: u64) -> Self {
+        Self { op, round }
+    }
+
+    /// The epoch-0 tag the plain `round: u64` APIs use.
+    pub fn untagged(round: u64) -> Self {
+        Self { op: 0, round }
+    }
+}
+
+/// Process-wide count of rank worker threads ever spawned (by
+/// [`run_ranks`]-family drivers and the [`crate::engine`] workers). The
+/// `ccoll serve` soak and the engine tests read this to prove the
+/// persistent engine spawns its `p` workers **once** — not per operation.
+static RANK_THREADS_SPAWNED: AtomicU64 = AtomicU64::new(0);
+
+/// Total rank threads spawned by this process so far.
+pub fn rank_threads_spawned() -> u64 {
+    RANK_THREADS_SPAWNED.load(Ordering::Relaxed)
+}
+
+pub(crate) fn note_rank_thread_spawn() {
+    RANK_THREADS_SPAWNED.fetch_add(1, Ordering::Relaxed);
+}
 
 /// Descriptors of the (≤ 2) working-vector slices a rendezvous sender
 /// published for one round. See the module docs for the safety contract
@@ -228,7 +284,7 @@ impl<E: Elem> Payload<E> {
 #[derive(Debug)]
 pub struct Msg<E: Elem = f32> {
     pub from: usize,
-    pub round: u64,
+    pub tag: Tag,
     pub payload: Payload<E>,
 }
 
@@ -267,6 +323,12 @@ pub struct Counters {
     /// scatters credited by the executor. Rendezvous publishes copy
     /// nothing.
     pub bytes_copied: u64,
+    /// Collectives this rank ran whose `(algorithm, p, partition, dtype)`
+    /// plan was served from a [`crate::schedule::PlanCache`] (credited by
+    /// the communicator / engine, not the transport itself).
+    pub plan_hits: u64,
+    /// Collectives whose plan had to be generated fresh (a cache miss).
+    pub plan_misses: u64,
 }
 
 /// Recycled payload buffers destined for one peer. Capacity matching is
@@ -338,16 +400,18 @@ pub struct Endpoint<E: Elem = f32> {
     ret_txs: Vec<Sender<(usize, Vec<E>)>>,
     ret_rx: Receiver<(usize, Vec<E>)>,
     /// Rendezvous completion path: `ack_txs[r]` feeds rank r's `ack_rx`.
-    ack_txs: Vec<Sender<u64>>,
-    ack_rx: Receiver<u64>,
-    /// Round tag of an un-acked rendezvous publish, if any. At most one
-    /// can be outstanding (one-ported sends + `finish_round` per round).
-    pending_ack: Option<u64>,
+    ack_txs: Vec<Sender<Tag>>,
+    ack_rx: Receiver<Tag>,
+    /// Tags of un-acked rendezvous publishes. A single blocking collective
+    /// has at most one outstanding (one-ported sends + `finish_round` per
+    /// round); the engine's interleaved operations can each have one, so
+    /// this is a (tiny) set rather than an `Option`.
+    pending_acks: Vec<Tag>,
     /// `pools[peer]` holds recycled buffers last used for messages to
     /// `peer` (affinity keeps capacities matched to that link's payloads).
     pools: Vec<BufferPool<E>>,
-    /// Early arrivals keyed by (from, round).
-    stash: HashMap<(usize, u64), Payload<E>>,
+    /// Early arrivals keyed by (from, tag).
+    stash: HashMap<(usize, Tag), Payload<E>>,
     pub counters: Counters,
     /// Opt-in for the zero-copy rendezvous tier. Raw endpoints default to
     /// `false` so plain `sendrecv` users keep the pooled protocol; the
@@ -383,7 +447,7 @@ pub fn network_typed<E: Elem>(p: usize) -> Vec<Endpoint<E>> {
         let (rtx, rrx) = channel::<(usize, Vec<E>)>();
         ret_txs.push(rtx);
         ret_rxs.push(rrx);
-        let (atx, arx) = channel::<u64>();
+        let (atx, arx) = channel::<Tag>();
         ack_txs.push(atx);
         ack_rxs.push(arx);
     }
@@ -400,7 +464,7 @@ pub fn network_typed<E: Elem>(p: usize) -> Vec<Endpoint<E>> {
             ret_rx,
             ack_txs: ack_txs.clone(),
             ack_rx,
-            pending_ack: None,
+            pending_acks: Vec::new(),
             pools: (0..p).map(|_| BufferPool::default()).collect(),
             stash: HashMap::new(),
             counters: Counters::default(),
@@ -476,49 +540,134 @@ impl<E: Elem> Endpoint<E> {
     /// Signal a rendezvous sender that its round-`round` publish has been
     /// fully consumed — the receiver must not touch the published slices
     /// afterwards. Best-effort like [`release`](Endpoint::release).
+    /// Epoch-0 form of [`rendezvous_ack_tagged`]
+    /// (Endpoint::rendezvous_ack_tagged).
     pub fn rendezvous_ack(&mut self, from: usize, round: u64) {
-        let _ = self.ack_txs[from].send(round);
+        self.rendezvous_ack_tagged(from, Tag::untagged(round));
+    }
+
+    /// Ack a tagged rendezvous publish (the engine's per-operation path).
+    pub fn rendezvous_ack_tagged(&mut self, from: usize, tag: Tag) {
+        let _ = self.ack_txs[from].send(tag);
     }
 
     /// Hand back a consumed [`Payload`], whichever tier it traveled:
     /// pooled buffers return to the sender's pool, rendezvous payloads
-    /// are acked.
+    /// are acked. Epoch-0 form of [`complete_tagged`]
+    /// (Endpoint::complete_tagged).
     pub fn complete(&mut self, from: usize, round: u64, payload: Payload<E>) {
+        self.complete_tagged(from, Tag::untagged(round), payload);
+    }
+
+    /// [`complete`](Endpoint::complete) for a tagged operation.
+    pub fn complete_tagged(&mut self, from: usize, tag: Tag, payload: Payload<E>) {
         match payload {
             Payload::Copied(v) => self.release(from, v),
-            Payload::Remote(_) => self.rendezvous_ack(from, round),
+            Payload::Remote(_) => self.rendezvous_ack_tagged(from, tag),
         }
     }
 
-    /// Block until the rendezvous publish of this round (if any) has been
-    /// acked by its receiver. Callers of [`sendrecv_slices`]
-    /// (Endpoint::sendrecv_slices) MUST call this before mutating or
-    /// freeing the published slices — i.e. at the end of every round.
-    /// No-op when nothing was published.
-    pub fn finish_round(&mut self) -> Result<(), TransportError> {
-        let Some(round) = self.pending_ack.take() else {
-            return Ok(());
-        };
-        loop {
+    /// Drop the ack for `tag` from the pending set if present.
+    fn remove_pending(&mut self, tag: Tag) {
+        if let Some(i) = self.pending_acks.iter().position(|&t| t == tag) {
+            self.pending_acks.swap_remove(i);
+        }
+        // Acks for tags not in the set are stale leftovers from aborted
+        // rounds (error paths) and are dropped silently — exactly the old
+        // single-op behavior for acks older than the awaited round.
+    }
+
+    /// Pull every already-delivered ack off the channel (non-blocking).
+    fn drain_acks(&mut self) {
+        while let Ok(tag) = self.ack_rx.try_recv() {
+            self.remove_pending(tag);
+        }
+    }
+
+    /// Block until every pending ack matching `wait_on` has arrived.
+    fn finish_where(&mut self, wait_on: impl Fn(Tag) -> bool) -> Result<(), TransportError> {
+        self.drain_acks();
+        while let Some(&tag) = self.pending_acks.iter().find(|&&t| wait_on(t)) {
             match self.ack_rx.recv_timeout(self.timeout) {
-                // Acks from aborted earlier rounds (error paths) may
-                // linger; drop anything older than what we wait for.
-                Ok(r) if r == round => return Ok(()),
-                Ok(r) => {
-                    debug_assert!(r < round, "ack from the future: got {r}, awaiting {round}");
-                }
+                Ok(t) => self.remove_pending(t),
                 Err(RecvTimeoutError::Timeout) => {
-                    return Err(TransportError::AckTimeout { rank: self.rank, round })
+                    return Err(TransportError::AckTimeout { rank: self.rank, round: tag.round })
                 }
                 // Unreachable in practice: every endpoint holds a clone of
                 // its own ack sender (ack_txs[rank]), so the channel can't
                 // disconnect while we're alive to poll it. Mapped to
                 // AckTimeout defensively rather than panicking.
                 Err(RecvTimeoutError::Disconnected) => {
-                    return Err(TransportError::AckTimeout { rank: self.rank, round })
+                    return Err(TransportError::AckTimeout { rank: self.rank, round: tag.round })
                 }
             }
         }
+        Ok(())
+    }
+
+    /// Block until every outstanding rendezvous publish (any epoch) has
+    /// been acked by its receiver. Callers of [`sendrecv_slices`]
+    /// (Endpoint::sendrecv_slices) MUST call this before mutating or
+    /// freeing the published slices — i.e. at the end of every round.
+    /// No-op when nothing was published.
+    pub fn finish_round(&mut self) -> Result<(), TransportError> {
+        self.finish_where(|_| true)
+    }
+
+    /// Block until no publish of operation epoch `op` is outstanding —
+    /// the engine's per-operation quiesce (other interleaved operations'
+    /// publishes are left pending).
+    pub fn finish_op(&mut self, op: u64) -> Result<(), TransportError> {
+        self.finish_where(move |t| t.op == op)
+    }
+
+    /// Non-blocking ack poll: drain delivered acks and report whether the
+    /// publish tagged `tag` (if any) has completed. `true` means the
+    /// caller may mutate/free the slices it published under `tag`.
+    pub fn try_finish(&mut self, tag: Tag) -> bool {
+        self.drain_acks();
+        !self.pending_acks.contains(&tag)
+    }
+
+    /// Whether any rendezvous publish of operation epoch `op` is still
+    /// un-acked (after draining delivered acks). When a quiesce
+    /// ([`finish_op`](Endpoint::finish_op)) has *timed out*, the publish
+    /// contract is void: a live peer may still hold descriptors into the
+    /// published buffer, so freeing it would be a use-after-free on the
+    /// peer's side — the engine's failure paths use this predicate to
+    /// quarantine such buffers instead of dropping them.
+    pub fn op_has_pending_publish(&mut self, op: u64) -> bool {
+        self.drain_acks();
+        self.pending_acks.iter().any(|t| t.op == op)
+    }
+
+    /// Discard every artifact of operation epoch `op` from this endpoint:
+    /// stashed payloads of that epoch are *completed* (pooled buffers
+    /// return to their sender's pool, rendezvous publishes are acked —
+    /// acking without reading is always safe and unblocks the sender) and
+    /// its pending-ack entries are dropped (later acks for them are
+    /// ignored as stale). Engine workers call this when an op fails so a
+    /// long-lived endpoint does not accumulate stranded buffers from
+    /// aborted operations. Returns the number of stashed payloads
+    /// discarded. Messages of the epoch still in flight when this runs
+    /// (a peer that fails later than us) are bounded by that op's
+    /// remaining rounds and stay in the stash — rare-failure residue, not
+    /// steady-state growth.
+    pub fn forget_op(&mut self, op: u64) -> usize {
+        while let Ok(msg) = self.rx.try_recv() {
+            self.stash.insert((msg.from, msg.tag), msg.payload);
+        }
+        let keys: Vec<(usize, Tag)> =
+            self.stash.keys().filter(|(_, t)| t.op == op).copied().collect();
+        let discarded = keys.len();
+        for (from, tag) in keys {
+            if let Some(payload) = self.stash.remove(&(from, tag)) {
+                self.complete_tagged(from, tag, payload);
+            }
+        }
+        self.drain_acks();
+        self.pending_acks.retain(|t| t.op != op);
+        discarded
     }
 
     /// The paper's combined `Send(..) ‖ Recv(..)` primitive, borrow-pack
@@ -563,6 +712,19 @@ impl<E: Elem> Endpoint<E> {
         recv_from: Option<usize>,
         round: u64,
     ) -> Result<Option<Payload<E>>, TransportError> {
+        self.sendrecv_slices_tagged(send, recv_from, Tag::untagged(round))
+    }
+
+    /// [`sendrecv_slices`](Endpoint::sendrecv_slices) with a full
+    /// operation [`Tag`] — the entry point the per-operation executor
+    /// drivers use so several collectives can be in flight on one
+    /// endpoint without cross-matching (see the module docs, "Op tags").
+    pub fn sendrecv_slices_tagged(
+        &mut self,
+        send: Option<SendSlices<'_, E>>,
+        recv_from: Option<usize>,
+        tag: Tag,
+    ) -> Result<Option<Payload<E>>, TransportError> {
         self.counters.sendrecv_rounds += 1;
         if let Some(s) = send {
             debug_assert!(s.to < self.p && s.to != self.rank, "bad send target {}", s.to);
@@ -572,7 +734,10 @@ impl<E: Elem> Endpoint<E> {
                 && !s.is_empty()
                 && s.len() >= self.rendezvous_min_elems;
             let payload = if publish {
-                debug_assert!(self.pending_ack.is_none(), "rendezvous publish not finished");
+                debug_assert!(
+                    !self.pending_acks.contains(&tag),
+                    "rendezvous publish for {tag:?} already outstanding"
+                );
                 self.counters.rendezvous_hits += 1;
                 Payload::Remote(RemoteSlices::new(s.head, s.tail))
             } else {
@@ -582,15 +747,18 @@ impl<E: Elem> Endpoint<E> {
                 self.counters.bytes_copied += (std::mem::size_of::<E>() * buf.len()) as u64;
                 Payload::Copied(buf)
             };
-            self.send_msg(s.to, round, payload)?;
+            self.send_msg(s.to, tag, payload)?;
             // Arm the ack wait only once the publish is actually in
             // flight — a failed send must not leave finish_round parked
             // for an ack nobody can ever deliver.
             if publish {
-                self.pending_ack = Some(round);
+                self.pending_acks.push(tag);
             }
         }
-        self.recv_side(recv_from, round)
+        match recv_from {
+            None => Ok(None),
+            Some(from) => self.recv_payload(from, tag).map(Some),
+        }
     }
 
     /// Ownership-transfer variant of [`sendrecv`](Endpoint::sendrecv) for
@@ -603,59 +771,69 @@ impl<E: Elem> Endpoint<E> {
         recv_from: Option<usize>,
         round: u64,
     ) -> Result<Option<Vec<E>>, TransportError> {
+        let tag = Tag::untagged(round);
         self.counters.sendrecv_rounds += 1;
         if let Some((to, payload)) = send {
             debug_assert!(to < self.p && to != self.rank, "bad send target {to}");
             self.counters.bytes_copied += (std::mem::size_of::<E>() * payload.len()) as u64;
-            self.send_msg(to, round, Payload::Copied(payload))?;
+            self.send_msg(to, tag, Payload::Copied(payload))?;
         }
-        let payload = self.recv_side(recv_from, round)?;
-        Ok(payload.map(|pl| {
-            let from = recv_from.expect("payload implies recv_from");
-            pl.expect_copied(self.rank, from)
-        }))
-    }
-
-    fn send_msg(&mut self, to: usize, round: u64, payload: Payload<E>) -> Result<(), TransportError> {
-        self.counters.msgs_sent += 1;
-        self.counters.elems_sent += payload.len() as u64;
-        self.txs[to]
-            .send(Msg { from: self.rank, round, payload })
-            .map_err(|_| TransportError::Disconnected { rank: self.rank, to })
-    }
-
-    fn recv_side(
-        &mut self,
-        recv_from: Option<usize>,
-        round: u64,
-    ) -> Result<Option<Payload<E>>, TransportError> {
         match recv_from {
             None => Ok(None),
             Some(from) => {
-                let payload = self.recv_tagged(from, round)?;
-                self.counters.msgs_recv += 1;
-                self.counters.elems_recv += payload.len() as u64;
-                Ok(Some(payload))
+                let payload = self.recv_payload(from, tag)?;
+                Ok(Some(payload.expect_copied(self.rank, from)))
             }
         }
     }
 
-    /// Receive the message tagged `(from, round)`, stashing out-of-order
-    /// arrivals from other peers/rounds.
-    fn recv_tagged(&mut self, from: usize, round: u64) -> Result<Payload<E>, TransportError> {
-        if let Some(payload) = self.stash.remove(&(from, round)) {
+    fn send_msg(&mut self, to: usize, tag: Tag, payload: Payload<E>) -> Result<(), TransportError> {
+        self.counters.msgs_sent += 1;
+        self.counters.elems_sent += payload.len() as u64;
+        self.txs[to]
+            .send(Msg { from: self.rank, tag, payload })
+            .map_err(|_| TransportError::Disconnected { rank: self.rank, to })
+    }
+
+    /// Blocking receive of the payload tagged `(from, tag)`, with volume
+    /// accounting; stashes out-of-order arrivals from other peers/tags.
+    pub fn recv_payload(&mut self, from: usize, tag: Tag) -> Result<Payload<E>, TransportError> {
+        let payload = self.recv_tagged(from, tag)?;
+        self.counters.msgs_recv += 1;
+        self.counters.elems_recv += payload.len() as u64;
+        Ok(payload)
+    }
+
+    /// Non-blocking receive: drain whatever has already arrived into the
+    /// stash, then take the payload tagged `(from, tag)` if present. The
+    /// engine's worker loop polls this so one thread can interleave
+    /// several in-flight operations without parking on any single one.
+    pub fn try_recv_payload(&mut self, from: usize, tag: Tag) -> Option<Payload<E>> {
+        while let Ok(msg) = self.rx.try_recv() {
+            self.stash.insert((msg.from, msg.tag), msg.payload);
+        }
+        let payload = self.stash.remove(&(from, tag))?;
+        self.counters.msgs_recv += 1;
+        self.counters.elems_recv += payload.len() as u64;
+        Some(payload)
+    }
+
+    /// Receive the message tagged `(from, tag)`, stashing out-of-order
+    /// arrivals from other peers/tags.
+    fn recv_tagged(&mut self, from: usize, tag: Tag) -> Result<Payload<E>, TransportError> {
+        if let Some(payload) = self.stash.remove(&(from, tag)) {
             return Ok(payload);
         }
         loop {
             match self.rx.recv_timeout(self.timeout) {
                 Ok(msg) => {
-                    if msg.from == from && msg.round == round {
+                    if msg.from == from && msg.tag == tag {
                         return Ok(msg.payload);
                     }
-                    self.stash.insert((msg.from, msg.round), msg.payload);
+                    self.stash.insert((msg.from, msg.tag), msg.payload);
                 }
                 Err(RecvTimeoutError::Timeout) => {
-                    return Err(TransportError::Timeout { rank: self.rank, from, round })
+                    return Err(TransportError::Timeout { rank: self.rank, from, round: tag.round })
                 }
                 Err(RecvTimeoutError::Disconnected) => {
                     return Err(TransportError::Disconnected { rank: self.rank, to: from })
@@ -666,14 +844,12 @@ impl<E: Elem> Endpoint<E> {
 
     /// Raw one-directional send (used by the coordinator's control plane).
     pub fn send_to(&mut self, to: usize, round: u64, payload: Vec<E>) -> Result<(), TransportError> {
-        self.send_msg(to, round, Payload::Copied(payload))
+        self.send_msg(to, Tag::untagged(round), Payload::Copied(payload))
     }
 
     /// Raw one-directional receive.
     pub fn recv_from(&mut self, from: usize, round: u64) -> Result<Vec<E>, TransportError> {
-        let payload = self.recv_tagged(from, round)?;
-        self.counters.msgs_recv += 1;
-        self.counters.elems_recv += payload.len() as u64;
+        let payload = self.recv_payload(from, Tag::untagged(round))?;
         Ok(payload.expect_copied(self.rank, from))
     }
 }
@@ -724,6 +900,7 @@ where
     let mut handles = Vec::with_capacity(p);
     for ((rank, mut ep), input) in endpoints.into_iter().enumerate().zip(inputs) {
         let f = f.clone();
+        note_rank_thread_spawn();
         handles.push(
             std::thread::Builder::new()
                 .name(format!("rank-{rank}"))
@@ -1011,6 +1188,114 @@ mod tests {
         // (unit-test only; eps[1] never ran)
         ep.timeout = Duration::from_millis(20);
         assert!(ep.finish_round().is_err());
+    }
+
+    #[test]
+    fn op_tags_do_not_cross_match() {
+        // Two interleaved "operations" use the same round numbers in
+        // different epochs: matching must key on (op, round), not round
+        // alone — the concurrent-collectives wire discipline.
+        let out = run_ranks(2, |rank, ep| {
+            let peer = 1 - rank;
+            let a = Tag::new(1, 0);
+            let b = Tag::new(2, 0);
+            let pay_a = [100.0 + rank as f32];
+            let pay_b = [200.0 + rank as f32];
+            // Send op 2's round 0 first…
+            ep.sendrecv_slices_tagged(
+                Some(SendSlices { to: peer, head: &pay_b, tail: &[], rendezvous: false }),
+                None,
+                b,
+            )
+            .unwrap();
+            ep.sendrecv_slices_tagged(
+                Some(SendSlices { to: peer, head: &pay_a, tail: &[], rendezvous: false }),
+                None,
+                a,
+            )
+            .unwrap();
+            // …but consume op 1's first: the stash must hold them apart.
+            let got_a = ep.recv_payload(peer, a).unwrap();
+            let got_b = ep.recv_payload(peer, b).unwrap();
+            let va = got_a.expect_copied(rank, peer);
+            let vb = got_b.expect_copied(rank, peer);
+            (va[0], vb[0])
+        });
+        for (rank, &(va, vb)) in out.iter().enumerate() {
+            let peer = (1 - rank) as f32;
+            assert_eq!(va, 100.0 + peer, "rank {rank}: op-1 payload");
+            assert_eq!(vb, 200.0 + peer, "rank {rank}: op-2 payload");
+        }
+    }
+
+    #[test]
+    fn try_recv_and_try_finish_poll_without_blocking() {
+        let mut eps = network(2);
+        // Nothing sent yet: polling must return None, not park.
+        assert!(eps[0].try_recv_payload(1, Tag::untagged(0)).is_none());
+        eps[1].send_to(0, 5, vec![42.0]).unwrap();
+        // The message is in flight on an in-process channel; drain + take.
+        let got = eps[0]
+            .try_recv_payload(1, Tag::untagged(5))
+            .expect("message already delivered")
+            .expect_copied(0, 1);
+        assert_eq!(got, vec![42.0]);
+        assert_eq!(eps[0].counters.msgs_recv, 1);
+    }
+
+    #[test]
+    fn try_finish_tracks_per_op_publishes() {
+        if !rendezvous_env_enabled() {
+            return; // kill-switch active: nothing is ever published
+        }
+        let mut eps = network(2);
+        eps[0].rendezvous = true;
+        eps[0].rendezvous_min_elems = 0;
+        let data = [1.0f32; 4];
+        let t1 = Tag::new(1, 0);
+        let t2 = Tag::new(2, 0);
+        let send = |to| SendSlices { to, head: &data, tail: &[], rendezvous: true };
+        eps[0].sendrecv_slices_tagged(Some(send(1)), None, t1).unwrap();
+        eps[0].sendrecv_slices_tagged(Some(send(1)), None, t2).unwrap();
+        assert!(!eps[0].try_finish(t1), "op 1 publish still outstanding");
+        assert!(!eps[0].try_finish(t2), "op 2 publish still outstanding");
+        // Receiver acks op 2 only: op 1 must stay pending.
+        eps[1].rendezvous_ack_tagged(0, t2);
+        assert!(eps[0].try_finish(t2), "op 2 acked");
+        assert!(!eps[0].try_finish(t1), "op 1 must not be released by op 2's ack");
+        eps[1].rendezvous_ack_tagged(0, t1);
+        assert!(eps[0].try_finish(t1));
+        // finish_op on a quiesced epoch is a no-op.
+        eps[0].finish_op(1).unwrap();
+        eps[0].finish_round().unwrap();
+    }
+
+    #[test]
+    fn forget_op_discards_only_that_epochs_artifacts() {
+        let mut eps = network(2);
+        let data = [1.0f32; 4];
+        let send = |to| SendSlices { to, head: &data[..], tail: &[][..], rendezvous: false };
+        // Two payloads of epoch 9 and one of epoch 3 arrive at rank 0.
+        eps[1].sendrecv_slices_tagged(Some(send(0)), None, Tag::new(9, 0)).unwrap();
+        eps[1].sendrecv_slices_tagged(Some(send(0)), None, Tag::new(9, 1)).unwrap();
+        eps[1].sendrecv_slices_tagged(Some(send(0)), None, Tag::new(3, 0)).unwrap();
+        assert_eq!(eps[0].forget_op(9), 2, "both epoch-9 payloads discarded");
+        // Epoch 3 is untouched and still receivable.
+        let got =
+            eps[0].recv_payload(1, Tag::new(3, 0)).unwrap().expect_copied(0, 1);
+        assert_eq!(got, vec![1.0; 4]);
+        // A pending publish of a forgotten epoch is dropped too, so no
+        // later wait can park on an ack that will never be matched.
+        if rendezvous_env_enabled() {
+            eps[0].rendezvous = true;
+            eps[0].rendezvous_min_elems = 0;
+            let s = SendSlices { to: 1, head: &data[..], tail: &[][..], rendezvous: true };
+            eps[0].sendrecv_slices_tagged(Some(s), None, Tag::new(9, 2)).unwrap();
+            assert!(!eps[0].try_finish(Tag::new(9, 2)));
+            eps[0].forget_op(9);
+            assert!(eps[0].try_finish(Tag::new(9, 2)));
+            eps[0].finish_round().unwrap();
+        }
     }
 
     #[test]

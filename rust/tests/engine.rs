@@ -1,0 +1,380 @@
+//! Engine concurrency suite (ISSUE-4): N in-flight operations on ONE
+//! persistent engine must be bit-identical (exact integer dtypes) to the
+//! same operations run sequentially, across both copy tiers — and the
+//! engine must never spawn threads per operation.
+//!
+//! CI runs this suite twice: as-is (rendezvous tier active where
+//! schedules allow) and under `CCOLL_NO_RENDEZVOUS=1` (pooled tier only),
+//! so both tiers are covered in both engine configurations exercised
+//! below.
+
+use std::sync::{Mutex, MutexGuard};
+
+use circulant_collectives::cli::main_with_args;
+use circulant_collectives::datatypes::{elem, Elem};
+use circulant_collectives::engine::{
+    CollectiveEngine, CollectiveKind, EngineConfig, EngineError, OpRequest,
+};
+use circulant_collectives::ops::ReduceOp;
+use circulant_collectives::ops::SumOp;
+use circulant_collectives::topology::skips::SkipScheme;
+use circulant_collectives::transport::rank_threads_spawned;
+use circulant_collectives::util::rng::SplitMix64;
+
+/// Serialize every test in this binary: some assert on the process-global
+/// rank-thread-spawn counter (`ccoll serve` does so internally), which a
+/// concurrently running engine test would pollute.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+fn int_inputs<T: Elem>(p: usize, m: usize, seed: u64) -> Vec<Vec<T>> {
+    let (lo, hi) = elem::test_value_bounds(T::DTYPE);
+    let mut rng = SplitMix64::new(seed);
+    (0..p).map(|_| elem::int_vec(&mut rng, m, lo, hi)).collect()
+}
+
+/// A deterministic mixed workload: allreduces and reduce-scatters over
+/// several sizes and ops, reproducible per seed.
+fn mixed_requests<T: Elem>(p: usize, n: usize, seed: u64) -> Vec<OpRequest<T>> {
+    let sizes = [4 * p + 3, 16, 2 * p, 64];
+    let mut rng = SplitMix64::new(seed);
+    (0..n)
+        .map(|i| {
+            let m = sizes[rng.next_below(sizes.len())];
+            let inputs = int_inputs::<T>(p, m, seed.wrapping_mul(31).wrapping_add(i as u64));
+            let op = if i % 3 == 0 { "max" } else { "sum" };
+            match i % 2 {
+                0 => OpRequest::allreduce(inputs, op),
+                _ => OpRequest::reduce_scatter(inputs, op),
+            }
+        })
+        .collect()
+}
+
+fn engine_with_tier<T: Elem>(p: usize, rendezvous: bool) -> CollectiveEngine<T> {
+    // Pin the rendezvous threshold to 0 so the zero-copy tier engages
+    // deterministically for every payload size when enabled (mirrors the
+    // executor test drivers).
+    CollectiveEngine::new(
+        EngineConfig::new(p).rendezvous(rendezvous).rendezvous_min_elems(0),
+    )
+}
+
+/// Run the same request list sequentially (submit → wait, one at a time)
+/// and return the per-op per-rank results.
+fn run_sequential<T: Elem>(p: usize, reqs: Vec<OpRequest<T>>, rendezvous: bool) -> Vec<Vec<Vec<T>>> {
+    let mut engine = engine_with_tier::<T>(p, rendezvous);
+    let out = reqs
+        .into_iter()
+        .map(|req| engine.submit(req).unwrap().wait().unwrap())
+        .collect();
+    engine.shutdown();
+    out
+}
+
+/// Submit ALL requests before waiting on any, then wait in reverse
+/// submission order — maximal overlap plus out-of-order joins.
+fn run_concurrent<T: Elem>(p: usize, reqs: Vec<OpRequest<T>>, rendezvous: bool) -> Vec<Vec<Vec<T>>> {
+    let mut engine = engine_with_tier::<T>(p, rendezvous);
+    let handles: Vec<_> = reqs.into_iter().map(|req| engine.submit(req).unwrap()).collect();
+    let n = handles.len();
+    let mut out: Vec<Option<Vec<Vec<T>>>> = (0..n).map(|_| None).collect();
+    for (i, handle) in handles.into_iter().enumerate().rev() {
+        out[i] = Some(handle.wait().unwrap());
+    }
+    engine.shutdown();
+    out.into_iter().map(|r| r.unwrap()).collect()
+}
+
+#[test]
+fn concurrent_ops_bit_identical_to_sequential_i64() {
+    let _serial = serial();
+    // Exact wrapping arithmetic: any divergence (cross-matched payload,
+    // wrong schedule, reordered ⊕) shows up as a bit difference.
+    for p in [2usize, 5, 8] {
+        for rendezvous in [true, false] {
+            let seq = run_sequential::<i64>(p, mixed_requests(p, 12, 99 + p as u64), rendezvous);
+            let conc = run_concurrent::<i64>(p, mixed_requests(p, 12, 99 + p as u64), rendezvous);
+            assert_eq!(
+                seq, conc,
+                "p={p} rendezvous={rendezvous}: concurrent ≠ sequential (bit-exact i64)"
+            );
+        }
+    }
+}
+
+#[test]
+fn concurrent_ops_bit_identical_to_sequential_u64() {
+    let _serial = serial();
+    for rendezvous in [true, false] {
+        let p = 5;
+        let seq = run_sequential::<u64>(p, mixed_requests(p, 10, 7), rendezvous);
+        let conc = run_concurrent::<u64>(p, mixed_requests(p, 10, 7), rendezvous);
+        assert_eq!(seq, conc, "rendezvous={rendezvous}: u64 mix diverged");
+    }
+}
+
+#[test]
+fn concurrent_results_match_scalar_oracle_i64() {
+    let _serial = serial();
+    // Independent ground truth (not just self-consistency): every
+    // in-flight allreduce must equal the wrapping scalar fold of its own
+    // inputs — concurrent ops must not bleed into each other.
+    let p = 4;
+    let n = 8;
+    let mut engine = engine_with_tier::<i64>(p, true);
+    let mut handles = Vec::new();
+    let mut oracles = Vec::new();
+    for i in 0..n {
+        let m = 11 + 7 * i; // every op a different size
+        let inputs = int_inputs::<i64>(p, m, 1000 + i as u64);
+        let mut want = vec![0i64; m];
+        for v in &inputs {
+            SumOp.combine(&mut want, v);
+        }
+        oracles.push(want);
+        handles.push(engine.submit(OpRequest::allreduce(inputs, "sum")).unwrap());
+    }
+    for (i, handle) in handles.into_iter().enumerate().rev() {
+        let out = handle.wait().unwrap();
+        for (r, buf) in out.iter().enumerate() {
+            assert_eq!(buf, &oracles[i], "op {i} rank {r}");
+        }
+    }
+    engine.shutdown();
+}
+
+#[test]
+fn irregular_reduce_scatter_counts_through_the_engine() {
+    let _serial = serial();
+    let p = 4;
+    let counts = vec![1usize, 0, 5, 2];
+    let m: usize = counts.iter().sum();
+    let inputs = int_inputs::<i64>(p, m, 42);
+    let mut want = vec![0i64; m];
+    for v in &inputs {
+        SumOp.combine(&mut want, v);
+    }
+    let part = circulant_collectives::datatypes::BlockPartition::from_counts(&counts);
+    let mut engine = engine_with_tier::<i64>(p, true);
+    let out = engine
+        .submit(OpRequest::reduce_scatter_counts(inputs, counts, "sum"))
+        .unwrap()
+        .wait()
+        .unwrap();
+    for (r, buf) in out.iter().enumerate() {
+        assert_eq!(&buf[part.range(r)], &want[part.range(r)], "rank {r}");
+    }
+    engine.shutdown();
+}
+
+#[test]
+fn queue_depth_bounds_in_flight_ops() {
+    let _serial = serial();
+    let p = 3;
+    let depth = 2;
+    let mut engine: CollectiveEngine<i64> =
+        CollectiveEngine::new(EngineConfig::new(p).queue_depth(depth));
+    let mut handles = Vec::new();
+    for i in 0..10 {
+        let handle = engine.submit(OpRequest::allreduce(int_inputs(p, 32, i), "sum")).unwrap();
+        assert!(
+            engine.in_flight() <= depth,
+            "after submit {i}: {} in flight > depth {depth}",
+            engine.in_flight()
+        );
+        handles.push(handle);
+    }
+    for handle in handles {
+        handle.wait().unwrap();
+    }
+    // The last rank's slot release races the final wait() return by a few
+    // instructions; give it a bounded moment before asserting drain.
+    for _ in 0..10_000 {
+        if engine.in_flight() == 0 {
+            break;
+        }
+        std::thread::yield_now();
+    }
+    assert_eq!(engine.in_flight(), 0);
+    engine.shutdown();
+}
+
+#[test]
+fn engine_reuses_workers_across_many_ops() {
+    let _serial = serial();
+    // Mini-soak: hundreds of mixed ops through one engine, then prove the
+    // spawn-once property with the process-wide rank-thread counter.
+    let p = 4;
+    let before = rank_threads_spawned();
+    let mut engine = engine_with_tier::<i64>(p, true);
+    let reqs = mixed_requests::<i64>(p, 300, 5);
+    let mut window = std::collections::VecDeque::new();
+    for req in reqs {
+        window.push_back(engine.submit(req).unwrap());
+        if window.len() >= 8 {
+            window.pop_front().unwrap().wait().unwrap();
+        }
+    }
+    while let Some(h) = window.pop_front() {
+        h.wait().unwrap();
+    }
+    let stats = engine.plan_stats();
+    engine.shutdown();
+    let spawned = rank_threads_spawned() - before;
+    assert_eq!(spawned, p as u64, "engine must spawn exactly p workers for 300 ops");
+    // 4 sizes × 2 kinds = at most 8 distinct plans for 300 ops.
+    assert!(stats.entries <= 8, "{} plans cached", stats.entries);
+    assert!(stats.hits >= 292, "only {} plan hits over 300 ops", stats.hits);
+}
+
+#[test]
+fn out_of_order_completion_small_overtakes_large() {
+    let _serial = serial();
+    // A large op submitted first and a tiny op submitted second: waiting
+    // on the tiny one first must complete promptly (the worker loop
+    // interleaves, so the small op cannot be queued behind the large
+    // one). Correctness of both is asserted; timing is not (CI boxes).
+    let p = 4;
+    let mut engine = engine_with_tier::<i64>(p, true);
+    let big_inputs = int_inputs::<i64>(p, 200_000, 1);
+    let mut big_want = vec![0i64; 200_000];
+    for v in &big_inputs {
+        SumOp.combine(&mut big_want, v);
+    }
+    let small_inputs = int_inputs::<i64>(p, 16, 2);
+    let mut small_want = vec![0i64; 16];
+    for v in &small_inputs {
+        SumOp.combine(&mut small_want, v);
+    }
+    let big = engine.submit(OpRequest::allreduce(big_inputs, "sum")).unwrap();
+    let small = engine.submit(OpRequest::allreduce(small_inputs, "sum")).unwrap();
+    assert!(small.op_id() > big.op_id(), "submission order gives monotone epochs");
+    let small_out = small.wait().unwrap();
+    for buf in &small_out {
+        assert_eq!(buf, &small_want);
+    }
+    let big_out = big.wait().unwrap();
+    for buf in &big_out {
+        assert_eq!(buf, &big_want);
+    }
+    engine.shutdown();
+}
+
+#[test]
+fn engine_matches_launcher_results_f32() {
+    let _serial = serial();
+    // Cross-entry-point agreement in f32 (small-integer values keep IEEE
+    // sums exact): the engine and the one-shot launcher must produce the
+    // same bits for the same inputs and schedule.
+    use circulant_collectives::coordinator::Launcher;
+    let p = 5;
+    let m = 33;
+    let inputs = int_inputs::<f32>(p, m, 321);
+    let mut engine: CollectiveEngine<f32> =
+        CollectiveEngine::new(EngineConfig::new(p).scheme(SkipScheme::HalvingUp));
+    let engine_out =
+        engine.submit(OpRequest::allreduce(inputs.clone(), "sum")).unwrap().wait().unwrap();
+    engine.shutdown();
+    let inputs2 = std::sync::Arc::new(std::sync::Mutex::new(
+        inputs.into_iter().map(Some).collect::<Vec<_>>(),
+    ));
+    let launcher_out = Launcher::new(p).run(move |mut comm| {
+        let mut buf = inputs2.lock().unwrap()[comm.rank()].take().unwrap();
+        comm.allreduce(&mut buf, "sum").unwrap();
+        buf
+    });
+    assert_eq!(engine_out, launcher_out);
+}
+
+#[test]
+fn kind_debug_and_errors_render() {
+    let _serial = serial();
+    // EngineError surfaces readable diagnostics (the CLI prints them).
+    let mut engine = CollectiveEngine::<i64>::new(EngineConfig::new(2));
+    let err = engine.submit(OpRequest::allreduce(int_inputs(3, 4, 0), "sum")).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("inputs for 3 ranks"), "{msg}");
+    let err = engine
+        .submit(OpRequest {
+            kind: CollectiveKind::ReduceScatterCounts(vec![9, 9]),
+            op: "sum".into(),
+            inputs: int_inputs(2, 4, 0),
+        })
+        .unwrap_err();
+    assert!(matches!(err, EngineError::BadCounts { got: 4, want: 18 }), "{err}");
+    engine.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// `ccoll serve` — the replay driver end-to-end (in-process CLI calls).
+// ---------------------------------------------------------------------
+
+fn args(s: &[&str]) -> Vec<String> {
+    s.iter().map(|x| x.to_string()).collect()
+}
+
+#[test]
+fn serve_replays_a_synthetic_mix() {
+    let _serial = serial();
+    main_with_args(args(&[
+        "serve",
+        "--serve.p",
+        "4",
+        "--serve.ops",
+        "60",
+        "--serve.m",
+        "128",
+        "--serve.inflight",
+        "6",
+    ]))
+    .unwrap();
+}
+
+#[test]
+fn serve_replays_a_recorded_trace_in_i64() {
+    let _serial = serial();
+    let dir = std::env::temp_dir();
+    let path = dir.join(format!("ccoll_trace_{}.txt", std::process::id()));
+    std::fs::write(
+        &path,
+        "# recorded mix\nallreduce 64 sum\nrs 33 sum\nar 128 max\nreduce-scatter 16 sum\n",
+    )
+    .unwrap();
+    main_with_args(args(&[
+        "serve",
+        "--serve.p",
+        "3",
+        "--trace",
+        path.to_str().unwrap(),
+        "--run.dtype",
+        "i64",
+    ]))
+    .unwrap();
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn serve_rejects_bad_traces_and_knobs() {
+    let _serial = serial();
+    let dir = std::env::temp_dir();
+    let path = dir.join(format!("ccoll_bad_trace_{}.txt", std::process::id()));
+    std::fs::write(&path, "frobnicate 64 sum\n").unwrap();
+    let err = main_with_args(args(&["serve", "--trace", path.to_str().unwrap()])).unwrap_err();
+    assert!(err.to_string().contains("unknown kind"), "{err}");
+    std::fs::remove_file(&path).ok();
+    let err = main_with_args(args(&[
+        "serve",
+        "--serve.p",
+        "2",
+        "--serve.ops",
+        "2",
+        "--engine.park",
+        "nap",
+    ]))
+    .unwrap_err();
+    assert!(err.to_string().contains("spin|yield|sleep"), "{err}");
+}

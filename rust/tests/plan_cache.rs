@@ -1,0 +1,198 @@
+//! Plan-cache suite (ISSUE-4): repeated identical operations hit the
+//! cache (counter-asserted), differing partition/dtype/scheme miss, and
+//! cached-schedule results stay bit-identical to freshly generated ones.
+
+use std::sync::Arc;
+
+use circulant_collectives::collectives::{allreduce_schedule, run_schedule_threads_typed};
+use circulant_collectives::coordinator::Launcher;
+use circulant_collectives::datatypes::{elem, BlockPartition, DType, Elem};
+use circulant_collectives::engine::{CollectiveEngine, EngineConfig, OpRequest};
+use circulant_collectives::ops::{ReduceOp, SumOp};
+use circulant_collectives::schedule::{PlanCache, PlanKey};
+use circulant_collectives::topology::skips::SkipScheme;
+use circulant_collectives::util::rng::SplitMix64;
+
+fn int_inputs<T: Elem>(p: usize, m: usize, seed: u64) -> Vec<Vec<T>> {
+    let (lo, hi) = elem::test_value_bounds(T::DTYPE);
+    let mut rng = SplitMix64::new(seed);
+    (0..p).map(|_| elem::int_vec(&mut rng, m, lo, hi)).collect()
+}
+
+#[test]
+fn second_identical_engine_op_is_a_cache_hit() {
+    let p = 6;
+    let mut engine = CollectiveEngine::<i64>::new(EngineConfig::new(p));
+    engine.submit(OpRequest::allreduce(int_inputs(p, 40, 1), "sum")).unwrap().wait().unwrap();
+    let s1 = engine.plan_stats();
+    assert_eq!((s1.hits, s1.misses, s1.entries), (0, 1, 1), "first op builds");
+    engine.submit(OpRequest::allreduce(int_inputs(p, 40, 2), "sum")).unwrap().wait().unwrap();
+    let s2 = engine.plan_stats();
+    assert_eq!((s2.hits, s2.misses, s2.entries), (1, 1, 1), "second identical op hits");
+    // Different size → different partition → miss; different kind → miss.
+    engine.submit(OpRequest::allreduce(int_inputs(p, 41, 3), "sum")).unwrap().wait().unwrap();
+    engine.submit(OpRequest::reduce_scatter(int_inputs(p, 40, 4), "sum")).unwrap().wait().unwrap();
+    let s3 = engine.plan_stats();
+    assert_eq!((s3.hits, s3.misses, s3.entries), (1, 3, 3));
+    // A different ⊕ on the same geometry still hits: plans don't depend
+    // on the operator.
+    engine.submit(OpRequest::allreduce(int_inputs(p, 40, 5), "max")).unwrap().wait().unwrap();
+    assert_eq!(engine.plan_stats().hits, 2);
+    engine.shutdown();
+}
+
+#[test]
+fn differing_partition_dtype_scheme_are_misses_unit() {
+    // Key-level coverage (no engine): the four key components each
+    // discriminate.
+    let cache = PlanCache::new();
+    let p = 5;
+    let part_a = BlockPartition::regular(p, 50);
+    let part_b = BlockPartition::regular(p, 55);
+    let skips = SkipScheme::HalvingUp.skips(p).unwrap();
+    let build = || allreduce_schedule(p, &skips);
+    let (_, hit) =
+        cache.get_or_build(PlanKey::new("ar:halving-up", p, &part_a, DType::I64), &part_a, build);
+    assert!(!hit);
+    for (key, part) in [
+        (PlanKey::new("ar:halving-up", p, &part_b, DType::I64), &part_b), // partition differs
+        (PlanKey::new("ar:halving-up", p, &part_a, DType::U64), &part_a), // dtype differs
+        (PlanKey::new("ar:pow2", p, &part_a, DType::I64), &part_a),       // scheme differs
+        (PlanKey::new("rs:halving-up", p, &part_a, DType::I64), &part_a), // algorithm differs
+    ] {
+        let (_, hit) = cache.get_or_build(key, part, build);
+        assert!(!hit, "distinct key must miss");
+    }
+    let (_, hit) =
+        cache.get_or_build(PlanKey::new("ar:halving-up", p, &part_a, DType::I64), &part_a, build);
+    assert!(hit, "original key still hits");
+    let stats = cache.stats();
+    assert_eq!((stats.hits, stats.misses, stats.entries), (1, 5, 5));
+}
+
+#[test]
+fn cached_plans_are_bit_identical_to_fresh_schedules() {
+    // Engine results on a warm cache vs the standalone threaded executor
+    // with a freshly generated schedule: exact i64 equality.
+    let p = 5;
+    let m = 4 * p + 3;
+    let part = BlockPartition::regular(p, m);
+    let skips = SkipScheme::HalvingUp.skips(p).unwrap();
+    let mut engine = CollectiveEngine::<i64>::new(EngineConfig::new(p));
+    // Warm the cache, then run the measured op through the cached plan.
+    engine.submit(OpRequest::allreduce(int_inputs(p, m, 50), "sum")).unwrap().wait().unwrap();
+    let cached =
+        engine.submit(OpRequest::allreduce(int_inputs(p, m, 51), "sum")).unwrap().wait().unwrap();
+    assert!(engine.plan_stats().hits >= 1, "second op must come from the cache");
+    engine.shutdown();
+    let fresh_sched = allreduce_schedule(p, &skips); // regenerated from scratch
+    let op: Arc<dyn ReduceOp<i64>> = Arc::new(SumOp);
+    let fresh = run_schedule_threads_typed::<i64>(&fresh_sched, &part, op, int_inputs(p, m, 51));
+    assert_eq!(cached, fresh, "cached plan diverged from freshly generated schedule");
+}
+
+#[test]
+fn engine_and_communicator_share_one_plan_key_space() {
+    // The engine and the communicator derive their plan keys through the
+    // same CirculantPlans vocabulary; a communicator handed an engine's
+    // cache must HIT the plan the engine already built — if the two
+    // entry points' canonical names ever drifted apart, this would miss.
+    use circulant_collectives::coordinator::{Communicator, OpBackend};
+    let p = 4;
+    let m = 20;
+    let mut engine = CollectiveEngine::<f32>::new(EngineConfig::new(p));
+    engine
+        .submit(OpRequest::allreduce(vec![vec![1.0f32; m]; p], "sum"))
+        .unwrap()
+        .wait()
+        .unwrap();
+    let plans = engine.plan_cache();
+    engine.shutdown();
+    let misses_before = plans.stats().misses;
+    let plans2 = plans.clone();
+    let hits = circulant_collectives::transport::run_ranks(p, move |_rank, ep| {
+        let owned =
+            std::mem::replace(ep, circulant_collectives::transport::network(1).pop().unwrap());
+        let mut comm = Communicator::new(owned, SkipScheme::HalvingUp, OpBackend::Native);
+        comm.set_plan_cache(plans2.clone());
+        let mut buf = vec![1.0f32; m];
+        comm.allreduce(&mut buf, "sum").unwrap();
+        comm.counters().plan_hits
+    });
+    assert!(hits.iter().all(|&h| h == 1), "communicator missed the engine-built plan: {hits:?}");
+    assert_eq!(plans.stats().misses, misses_before, "no new plan may be built");
+}
+
+#[test]
+fn communicator_counters_expose_plan_hits() {
+    // The per-rank transport counters mirror cache outcomes, so
+    // RunMetrics (which aggregates Counters) reports them.
+    let p = 3;
+    let out = Launcher::new(p).run(move |mut comm| {
+        let mut a = vec![1.0f32; 30];
+        comm.allreduce(&mut a, "sum").unwrap();
+        comm.allreduce(&mut a, "sum").unwrap();
+        comm.allreduce(&mut a, "sum").unwrap();
+        comm.counters()
+    });
+    for (rank, c) in out.iter().enumerate() {
+        assert_eq!(c.plan_hits + c.plan_misses, 3, "rank {rank}: three lookups");
+        assert!(c.plan_hits >= 2, "rank {rank}: repeats must hit the shared cache");
+    }
+    // Aggregate across the job: only the first call can build. Ranks
+    // race on that first lookup (builds run outside the cache lock), so
+    // between 1 and p misses are legal; 9 lookups happened in total.
+    let total_misses: u64 = out.iter().map(|c| c.plan_misses).sum();
+    let total_hits: u64 = out.iter().map(|c| c.plan_hits).sum();
+    assert!(
+        (1..=p as u64).contains(&total_misses),
+        "launcher shares one cache across ranks (misses={total_misses})"
+    );
+    assert_eq!(total_hits + total_misses, 3 * p as u64);
+}
+
+#[test]
+fn every_communicator_collective_is_plan_cached() {
+    // Each API (allreduce, reduce_scatter*, allgather, reduce, bcast,
+    // scatter, gather) resolves through the cache: running the same
+    // program twice on one communicator doubles lookups but builds no
+    // new plans.
+    let p = 4;
+    let b = 3;
+    let out = Launcher::new(p).run(move |mut comm| {
+        let mut lookups = Vec::new();
+        for _ in 0..2 {
+            let mut buf = vec![1.0f32; p * b];
+            comm.allreduce(&mut buf, "sum").unwrap();
+            let send: Vec<f32> = vec![1.0; p * b];
+            let mut recv = vec![0.0f32; b];
+            comm.reduce_scatter_block(&send, &mut recv, "sum").unwrap();
+            let mine = vec![comm.rank() as f32; b];
+            let mut all = vec![0.0f32; p * b];
+            comm.allgather(&mine, &mut all).unwrap();
+            let mut r = vec![1.0f32; 7];
+            comm.reduce(&mut r, 0, "sum").unwrap();
+            comm.bcast(&mut r, 0).unwrap();
+            let sendbuf: Option<Vec<f32>> =
+                (comm.rank() == 0).then(|| vec![1.0f32; p * b]);
+            let mut mine2 = vec![0.0f32; b];
+            comm.scatter(sendbuf.as_deref(), &mut mine2, 0).unwrap();
+            let mut gath = (comm.rank() == 0).then(|| vec![0.0f32; p * b]);
+            comm.gather(&mine2, gath.as_deref_mut(), 0).unwrap();
+            let c = comm.counters();
+            lookups.push((c.plan_hits, c.plan_misses));
+        }
+        lookups
+    });
+    let pass1_misses: u64 = out.iter().map(|l| l[0].1).sum();
+    let pass2_misses: u64 = out.iter().map(|l| l[1].1).sum();
+    assert_eq!(
+        pass2_misses, pass1_misses,
+        "second pass of the same program must build zero new plans"
+    );
+    for (rank, l) in out.iter().enumerate() {
+        let (h1, _) = l[0];
+        let (h2, _) = l[1];
+        assert!(h2 > h1, "rank {rank}: second pass produced no cache hits");
+    }
+}
