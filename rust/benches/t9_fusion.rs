@@ -1,0 +1,151 @@
+//! T9 — fusion tier: fused small-op batching vs the unfused engine.
+//!
+//! The ISSUE-5 acceptance gate: for small (≤ 1 KiB) repeated allreduces
+//! at p=8 under a windowed trace replay, the engine's fusion tier
+//! (compatible in-flight ops coalesced into one circulant run) must
+//! deliver ≥ 2× the ops/s of the same engine with fusion off. N small
+//! allreduces as N separate schedules pay `N·⌈log₂ p⌉` round latencies;
+//! fused they pay ~`⌈log₂ p⌉` per batch plus a pack/scatter copy that is
+//! trivially cheap at these sizes. Every replayed op is verified against
+//! the scalar oracle on both paths. Emits `BENCH_t9.json`.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use circulant_collectives::bench_harness::{bench_header, fast_mode, BenchReport};
+use circulant_collectives::engine::{CollectiveEngine, EngineConfig, OpRequest};
+use circulant_collectives::util::stats::Summary;
+use circulant_collectives::util::table::{fmt_si, Table};
+
+/// Replay `n_ops` identical sum-allreduces through `engine` with a
+/// window of in-flight operations (the serving pattern: submit ahead,
+/// wait on the oldest), verifying every completed op. Returns ops/s.
+fn replay(
+    engine: &mut CollectiveEngine<f32>,
+    inputs: &[Vec<f32>],
+    want: &[f32],
+    n_ops: usize,
+    window: usize,
+) -> f64 {
+    let mut pending: VecDeque<_> = VecDeque::with_capacity(window);
+    let t0 = Instant::now();
+    for _ in 0..n_ops {
+        pending.push_back(engine.submit(OpRequest::allreduce(inputs.to_vec(), "sum")).unwrap());
+        if pending.len() >= window {
+            let out = pending.pop_front().unwrap().wait().unwrap();
+            assert_eq!(out[0], want, "fused/unfused replay produced a wrong sum");
+        }
+    }
+    while let Some(h) = pending.pop_front() {
+        let out = h.wait().unwrap();
+        assert_eq!(out[0], want);
+    }
+    t0.elapsed().as_secs_f64().recip() * n_ops as f64
+}
+
+fn main() {
+    bench_header("T9", "fusion tier — fused small-op batching vs unfused engine ops/s");
+    let p = 8usize;
+    let replay_window = 32usize;
+    let fusion_window = 16u64;
+    let fusion_max_bytes = 1 << 20;
+    // ≤ 256 f32 elements = ≤ 1 KiB payloads: the latency-bound regime the
+    // fusion tier exists for.
+    let sizes: Vec<usize> = if fast_mode() { vec![64, 256] } else { vec![16, 64, 256] };
+    let (reps, n_ops): (usize, usize) = if fast_mode() { (3, 400) } else { (5, 2000) };
+
+    let mut report = BenchReport::new("t9");
+    report.num("p", p as f64);
+    report.num("replay_window", replay_window as f64);
+    report.num("fusion_window", fusion_window as f64);
+    report.num("fusion_max_bytes", fusion_max_bytes as f64);
+    report.num("ops_per_replay", n_ops as f64);
+    report.nums("sweep_m", sizes.iter().map(|&m| m as f64));
+
+    let mut unfused_rates = Vec::new();
+    let mut fused_rates = Vec::new();
+    let mut speedups = Vec::new();
+    let mut avg_batches = Vec::new();
+
+    let mut t = Table::new(
+        &format!("windowed replay of f32 sum-allreduces, p={p} (median of {reps} reps)"),
+        &["m (elems)", "bytes", "unfused ops/s", "fused ops/s", "speedup", "avg batch"],
+    );
+
+    for &m in &sizes {
+        let inputs: Vec<Vec<f32>> =
+            (0..p).map(|r| (0..m).map(|j| ((r + j) % 7) as f32).collect()).collect();
+        let want: Vec<f32> =
+            (0..m).map(|j| (0..p).map(|r| ((r + j) % 7) as f32).sum()).collect();
+
+        // --- unfused: the PR-4 engine as-is ---------------------------
+        let mut engine: CollectiveEngine<f32> = CollectiveEngine::new(EngineConfig::new(p));
+        replay(&mut engine, &inputs, &want, n_ops / 4, replay_window); // warm-up
+        let unfused = Summary::of(
+            &(0..reps)
+                .map(|_| replay(&mut engine, &inputs, &want, n_ops, replay_window))
+                .collect::<Vec<_>>(),
+        );
+        engine.shutdown();
+
+        // --- fused: same engine + the fusion tier ---------------------
+        let mut engine: CollectiveEngine<f32> = CollectiveEngine::new(
+            EngineConfig::new(p)
+                .fusion(true)
+                .fusion_window(fusion_window)
+                .fusion_max_bytes(fusion_max_bytes),
+        );
+        replay(&mut engine, &inputs, &want, n_ops / 4, replay_window); // warm-up
+        let fused = Summary::of(
+            &(0..reps)
+                .map(|_| replay(&mut engine, &inputs, &want, n_ops, replay_window))
+                .collect::<Vec<_>>(),
+        );
+        let fstats = engine.fusion_stats();
+        engine.shutdown();
+        assert!(fstats.batches > 0, "m={m}: the fused replay never formed a batch");
+        assert!(
+            fstats.avg_batch() >= 2.0,
+            "m={m}: avg batch {:.2} < 2 — fusion is not coalescing",
+            fstats.avg_batch()
+        );
+
+        let speedup = fused.median / unfused.median;
+        t.row(&[
+            m.to_string(),
+            (4 * m).to_string(),
+            fmt_si(unfused.median),
+            fmt_si(fused.median),
+            format!("{speedup:.1}×"),
+            format!("{:.1}", fstats.avg_batch()),
+        ]);
+        unfused_rates.push(unfused.median);
+        fused_rates.push(fused.median);
+        speedups.push(speedup);
+        avg_batches.push(fstats.avg_batch());
+
+        // The acceptance gate (per size, all ≤ 1 KiB): fused ≥ 2× ops/s.
+        assert!(
+            speedup >= 2.0,
+            "m={m} ({} B): fusion only {speedup:.2}× the unfused ops/s \
+             ({} vs {}) — acceptance requires ≥ 2×",
+            4 * m,
+            fmt_si(fused.median),
+            fmt_si(unfused.median),
+        );
+    }
+    t.print();
+    let min_speedup = speedups.iter().cloned().fold(f64::INFINITY, f64::min);
+    println!(
+        "fusion tier: fused batching beats the unfused engine by ≥ {min_speedup:.1}× ops/s \
+         for every payload ≤ 1 KiB at p={p} under a windowed replay — message aggregation \
+         over one round-optimal circulant run REPRODUCED"
+    );
+    report.nums("unfused_ops_per_sec", unfused_rates);
+    report.nums("fused_ops_per_sec", fused_rates);
+    report.nums("speedup", speedups);
+    report.nums("avg_batch", avg_batches);
+    report.num("min_speedup", min_speedup);
+    report.num("gate_speedup", 2.0);
+    report.write();
+}

@@ -46,8 +46,10 @@ commands:
   serve                    replay a mix of collectives through one
                            persistent engine (keys: serve.p serve.ops
                            serve.m serve.inflight serve.seed serve.scheme
-                           serve.verify serve.trace|--trace FILE run.dtype
-                           run.op engine.queue_depth engine.park)
+                           serve.verify serve.trace|--trace FILE
+                           serve.fuse|--fuse serve.json FILE run.dtype
+                           run.op engine.queue_depth engine.park
+                           engine.fusion.max_bytes engine.fusion.window)
   simulate                 cost-model sweep (keys: sim.p sim.m cost.alpha
                            cost.beta cost.gamma)
   trace                    symbolic trace (keys: trace.p trace.rank)
@@ -166,6 +168,16 @@ fn cmd_info(cfg: &Config) -> Result<()> {
         "CCOLL_ENGINE_PARK".into(),
         k.engine_park.name().to_string(),
         format!("engine worker wait strategy ({})", crate::engine::ParkPolicy::NAMES_HELP),
+    ]);
+    kt.row(&[
+        "CCOLL_FUSION_MAX_BYTES".into(),
+        k.fusion_max_bytes.to_string(),
+        "fusion-tier batch byte budget (larger ops bypass)".into(),
+    ]);
+    kt.row(&[
+        "CCOLL_FUSION_WINDOW".into(),
+        k.fusion_window.to_string(),
+        "fusion flush window in completed engine steps (0 = off)".into(),
     ]);
     kt.print();
     let n: usize = cfg.entries().count();
@@ -386,6 +398,19 @@ fn cmd_serve_typed<T: Elem>(cfg: &Config) -> Result<()> {
     let park = ParkPolicy::parse(park_name).ok_or_else(|| {
         anyhow!("unknown engine.park {park_name:?} (valid: {})", ParkPolicy::NAMES_HELP)
     })?;
+    // `serve --fuse` (bare flag) or `--serve.fuse 1`: run the replay
+    // through the engine's fusion tier (batch compatible small ops into
+    // one circulant run per batch).
+    let fuse = cfg.get_bool("serve.fuse", cfg.get_bool("fuse", false)?)?;
+    let fusion_max_bytes = cfg.get_usize("engine.fusion.max_bytes", knobs.fusion_max_bytes)?;
+    let fusion_window =
+        cfg.get_usize("engine.fusion.window", knobs.fusion_window as usize)? as u64;
+    if fuse && fusion_window == 0 {
+        bail!(
+            "--fuse with engine.fusion.window 0 never fuses anything \
+             (window 0 disables fusion)"
+        );
+    }
 
     // `serve --trace FILE` (the bare --trace flag) or `--serve.trace FILE`.
     let trace_path = cfg.get("serve.trace").or_else(|| cfg.get("trace"));
@@ -400,20 +425,28 @@ fn cmd_serve_typed<T: Elem>(cfg: &Config) -> Result<()> {
 
     println!(
         "serve: p={p}, {} ops ({}), window={inflight}, dtype={}, scheme={}, \
-         queue_depth={queue_depth}, park={}",
+         queue_depth={queue_depth}, park={}, fusion={}",
         trace.len(),
         trace_path.map_or_else(|| format!("synthetic mix, seed {seed}"), |t| format!("trace {t}")),
         T::DTYPE.name(),
         scheme.name(),
         park.name(),
+        if fuse {
+            format!("on (budget {fusion_max_bytes} B, window {fusion_window} steps)")
+        } else {
+            "off".to_string()
+        },
     );
 
     let spawned_before = crate::transport::rank_threads_spawned();
     let mut engine = CollectiveEngine::<T>::new(
         EngineConfig::new(p)
-            .scheme(scheme)
+            .scheme(scheme.clone())
             .queue_depth(queue_depth)
-            .park(park),
+            .park(park)
+            .fusion(fuse)
+            .fusion_max_bytes(fusion_max_bytes)
+            .fusion_window(fusion_window),
     );
 
     let (lo, hi) = elem::test_value_bounds(T::DTYPE);
@@ -480,6 +513,7 @@ fn cmd_serve_typed<T: Elem>(cfg: &Config) -> Result<()> {
     }
     let wall = t0.elapsed().as_secs_f64();
     let stats = engine.plan_stats();
+    let fstats = engine.fusion_stats();
     engine.shutdown();
 
     // Spawn-once assertion: the whole replay must have created exactly the
@@ -494,31 +528,120 @@ fn cmd_serve_typed<T: Elem>(cfg: &Config) -> Result<()> {
     }
 
     let lat = crate::util::stats::Summary::of(&latencies);
+    let ops_per_sec = trace.len() as f64 / wall;
     let mut t = Table::new(
         "serve replay",
-        &["ops", "wall s", "ops/s", "lat mean", "lat p50", "lat p95", "plan hit/miss", "threads"],
+        &[
+            "ops", "wall s", "ops/s", "lat mean", "lat p50", "lat p95", "lat p99",
+            "plan hit/miss", "threads",
+        ],
     );
     t.row(&[
         trace.len().to_string(),
         format!("{wall:.3}"),
-        fmt_si(trace.len() as f64 / wall),
+        fmt_si(ops_per_sec),
         format!("{}s", fmt_si(lat.mean)),
         format!("{}s", fmt_si(lat.median)),
         format!("{}s", fmt_si(lat.p95)),
+        format!("{}s", fmt_si(lat.p99)),
         format!("{}/{}", stats.hits, stats.misses),
         format!("{spawned} (= p ✓)"),
     ]);
     t.print();
+    if fuse {
+        println!(
+            "fusion: {} batches fusing {} ops (avg {:.1}/batch, {} B packed), \
+             {} singles, {} large + {} counts bypassed, fused-plan hit/miss {}/{}",
+            fstats.batches,
+            fstats.fused_ops,
+            fstats.avg_batch(),
+            fstats.fused_bytes,
+            fstats.single_flushes,
+            fstats.bypass_large,
+            fstats.bypass_kind,
+            fstats.plan_hits,
+            fstats.plan_misses,
+        );
+    }
     if verify && verified_ops == 0 {
         println!(
             "serve: note — verification is on but the mix contained no sum ops, \
              so no result was oracle-checked"
         );
     }
+
+    // Machine-readable report (serve.json FILE): latency percentiles,
+    // plan + fusion stats — what CI diffs across soaks.
+    if let Some(path) = cfg.get("serve.json") {
+        use crate::util::json::Json;
+        use std::collections::BTreeMap;
+        let mut fusion = BTreeMap::new();
+        fusion.insert("enabled".to_string(), Json::Bool(fuse));
+        fusion.insert("batches".to_string(), Json::Num(fstats.batches as f64));
+        fusion.insert("fused_ops".to_string(), Json::Num(fstats.fused_ops as f64));
+        fusion.insert("avg_batch".to_string(), Json::Num(fstats.avg_batch()));
+        fusion.insert("fused_bytes".to_string(), Json::Num(fstats.fused_bytes as f64));
+        fusion.insert("single_flushes".to_string(), Json::Num(fstats.single_flushes as f64));
+        fusion.insert("bypass_large".to_string(), Json::Num(fstats.bypass_large as f64));
+        fusion.insert("bypass_kind".to_string(), Json::Num(fstats.bypass_kind as f64));
+        fusion.insert("plan_hits".to_string(), Json::Num(fstats.plan_hits as f64));
+        fusion.insert("plan_misses".to_string(), Json::Num(fstats.plan_misses as f64));
+        fusion.insert("flush_budget".to_string(), Json::Num(fstats.flush_budget as f64));
+        fusion.insert("flush_window".to_string(), Json::Num(fstats.flush_window as f64));
+        fusion.insert(
+            "flush_incompatible".to_string(),
+            Json::Num(fstats.flush_incompatible as f64),
+        );
+        fusion.insert("flush_forced".to_string(), Json::Num(fstats.flush_forced as f64));
+        let mut obj = BTreeMap::new();
+        obj.insert("schema".to_string(), Json::Num(1.0));
+        obj.insert("kind".to_string(), Json::Str("serve".to_string()));
+        obj.insert("p".to_string(), Json::Num(p as f64));
+        obj.insert("ops".to_string(), Json::Num(trace.len() as f64));
+        obj.insert("dtype".to_string(), Json::Str(T::DTYPE.name().to_string()));
+        obj.insert("scheme".to_string(), Json::Str(scheme.name()));
+        obj.insert("wall_seconds".to_string(), Json::Num(wall));
+        obj.insert("ops_per_sec".to_string(), Json::Num(ops_per_sec));
+        obj.insert("lat_mean_s".to_string(), Json::Num(lat.mean));
+        obj.insert("lat_p50_s".to_string(), Json::Num(lat.median));
+        obj.insert("lat_p95_s".to_string(), Json::Num(lat.p95));
+        obj.insert("lat_p99_s".to_string(), Json::Num(lat.p99));
+        obj.insert("lat_max_s".to_string(), Json::Num(lat.max));
+        obj.insert("plan_hits".to_string(), Json::Num(stats.hits as f64));
+        obj.insert("plan_misses".to_string(), Json::Num(stats.misses as f64));
+        obj.insert("verified_ops".to_string(), Json::Num(verified_ops as f64));
+        obj.insert("rank_threads_spawned".to_string(), Json::Num(spawned as f64));
+        obj.insert("fusion".to_string(), Json::Obj(fusion));
+        std::fs::write(path, Json::Obj(obj).render() + "\n")
+            .map_err(|e| anyhow!("cannot write serve.json {path}: {e}"))?;
+        println!("serve: wrote {path}");
+    }
+
+    // Fusion soak gate: a long fused replay that never formed a batch or
+    // never hit a fused plan would silently measure the unfused path —
+    // fail loudly instead (short replays are exempt; a tiny trace may
+    // legitimately have no compatible pair).
+    if fuse && trace.len() >= 200 {
+        if fstats.batches == 0 {
+            bail!(
+                "fusion soak: no fused batches formed over {} ops — \
+                 incompatible mix or mis-set budget/window?",
+                trace.len()
+            );
+        }
+        if fstats.plan_hits == 0 {
+            bail!(
+                "fusion soak: {} fused batches but zero fused-plan cache hits — \
+                 every batch shape was unique, the plan cache is not amortizing",
+                fstats.batches
+            );
+        }
+    }
     println!(
-        "serve: OK — {} ops through one engine, {} plan-cache hits, spawn-once verified{}",
+        "serve: OK — {} ops through one engine, {} plan-cache hits{}, spawn-once verified{}",
         trace.len(),
         stats.hits,
+        if fuse { format!(", {} fused batches", fstats.batches) } else { String::new() },
         if verified_ops > 0 {
             format!(", {verified_ops} sum ops verified exactly")
         } else {

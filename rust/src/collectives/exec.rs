@@ -108,6 +108,10 @@ pub enum CollectiveError {
          supports f32 only)"
     )]
     UnknownOp { rank: usize, name: String, dtype: &'static str },
+    #[error("rank {rank}: engine worker gone before the operation was delivered")]
+    WorkerLost { rank: usize },
+    #[error("fused batch (epoch {fused_op}, {members} member ops): {detail}")]
+    FusedBatch { fused_op: u64, members: usize, detail: String },
 }
 
 /// Whether a driver made it to the end of its schedule.

@@ -517,11 +517,23 @@ pub struct Launcher {
     pub scheme: SkipScheme,
     pub backend: OpBackend,
     pub rendezvous: bool,
+    /// Enable the engine's fusion tier on engines handed out by
+    /// [`Launcher::engine`] (coalesce compatible small in-flight ops into
+    /// one fused run — see `crate::engine::fusion`). Off by default; the
+    /// one-shot `run`/`run_typed` paths never batch (their closures issue
+    /// blocking collectives, not engine submissions).
+    pub fusion: bool,
 }
 
 impl Launcher {
     pub fn new(p: usize) -> Self {
-        Self { p, scheme: SkipScheme::HalvingUp, backend: OpBackend::Native, rendezvous: true }
+        Self {
+            p,
+            scheme: SkipScheme::HalvingUp,
+            backend: OpBackend::Native,
+            rendezvous: true,
+            fusion: false,
+        }
     }
 
     pub fn scheme(mut self, scheme: SkipScheme) -> Self {
@@ -538,6 +550,13 @@ impl Launcher {
     /// communicator (on by default).
     pub fn rendezvous(mut self, enabled: bool) -> Self {
         self.rendezvous = enabled;
+        self
+    }
+
+    /// Enable the fusion tier on engines from [`Launcher::engine`] /
+    /// [`Launcher::engine_typed`] (off by default).
+    pub fn fusion(mut self, enabled: bool) -> Self {
+        self.fusion = enabled;
         self
     }
 
@@ -564,7 +583,8 @@ impl Launcher {
             EngineConfig::new(self.p)
                 .scheme(self.scheme.clone())
                 .backend(self.backend.clone())
-                .rendezvous(self.rendezvous),
+                .rendezvous(self.rendezvous)
+                .fusion(self.fusion),
         )
     }
 

@@ -1,0 +1,855 @@
+//! The fusion tier: coalesce compatible in-flight small collectives into
+//! **one** circulant run.
+//!
+//! The paper's schedules are round-optimal per collective — `⌈log₂ p⌉`
+//! rounds, `p−1` blocks — but for the tiny payloads that dominate serving
+//! traffic the fixed per-round latency swamps the volume term: N small
+//! allreduces as N separate runs pay `N·⌈log₂ p⌉` round latencies for
+//! work that fits in one. The schedule is indifferent to how the vector
+//! is composed (⊕ is elementwise), so a batch of compatible operations
+//! can execute as a single fused collective — the classic message-
+//! aggregation lever, applied at the engine's submission seam.
+//!
+//! # How a batch forms and flushes
+//!
+//! A [`Fuser`] sits ahead of the per-worker submission queues. A
+//! submitted op joins the pending batch iff it has the same collective
+//! kind (allreduce / regular reduce-scatter), the same ⊕ name, and fits
+//! the byte budget; `ReduceScatterCounts` and ops larger than the budget
+//! **bypass** the batcher (for a large op, one extra fused pack/scatter
+//! copy costs more than the rounds it saves — fusion would be a
+//! pessimization). The pending batch is flushed when:
+//!
+//!  * adding the next op would exceed the byte budget
+//!    ([`EngineConfig::fusion_max_bytes`](super::EngineConfig)), or
+//!  * an incompatible op arrives, or
+//!  * the **flush window** expires — measured in *completed engine
+//!    steps* (operations finished since the batch opened,
+//!    [`EngineConfig::fusion_window`](super::EngineConfig)), not
+//!    wall-clock, so an idle engine burns no timer and a busy engine
+//!    flushes at a rate proportional to its own throughput; there is no
+//!    timer thread, so expiry is checked at every submit and every
+//!    handle wait ([`Fuser::flush_if_stale`]), or
+//!  * a member's [`OpHandle`](super::OpHandle) is waited on (the handle
+//!    force-flushes, so batching can never deadlock a caller), or
+//!  * the engine shuts down or parks on `queue_depth` backpressure (a
+//!    batched op occupies an in-flight slot but cannot complete until
+//!    dispatched).
+//!
+//! A 1-member "batch" is dispatched through the ordinary unfused path —
+//! pack/scatter would be pure overhead.
+//!
+//! # The fused run
+//!
+//! Member inputs are packed **block-major**: for each owner block `g`,
+//! every member's block `g` (of its own regular partition) lands
+//! consecutively, so the fused [`BlockPartition`] — per-block counts
+//! summed across members — keeps each constituent op's blocks whole on
+//! their owning ranks. Rank `r` packs its members' inputs into a pooled
+//! segment buffer with [`crate::ops::kernels::pack_segments`], the whole
+//! batch runs as one tagged operation (one wire epoch per fused run)
+//! through the same [`OpCursor`](crate::collectives::exec::OpCursor)
+//! worker path as any other op, and the result segments are scattered
+//! back per member with exact per-op offsets
+//! ([`crate::ops::kernels::scatter_segments`]) — every span for a fused
+//! allreduce, the owned-block span for a fused reduce-scatter. Fused
+//! plans are memoized in the engine's [`PlanCache`] under the fused
+//! partition's fingerprint, which *is* the batch-shape fingerprint
+//! (kind + member-length sequence determine it), so repeated traffic
+//! mixes hit cache.
+//!
+//! Each member's handle resolves independently. A failed fused run fails
+//! **every** member, each with the fusion tag in its diagnostic
+//! ([`CollectiveError::FusedBatch`]); a batch that cannot even be
+//! delivered (a worker died mid-fan-out) rolls back all members'
+//! undelivered rank shares so no in-flight slot leaks — the PR-4 partial
+//! fan-out reasoning extended to fused epochs.
+//!
+//! # Correctness caveat (commutativity over fused segments)
+//!
+//! Fusing changes which *fused block* an element lives in, so the ⊕
+//! application order for a given element can differ from its unfused
+//! run's order. For the wrapping-integer dtypes ⊕ is exactly
+//! associative and commutative, so fused results are bit-identical to
+//! unfused (asserted by `rust/tests/fusion.rs`); float results remain
+//! deterministic per batch shape but may round differently than the
+//! unfused run — same caveat class as the schedule's own commutativity
+//! assumption (paper §2.1).
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+
+use crate::collectives::exec::CollectiveError;
+use crate::collectives::generators::{allreduce_schedule, reduce_scatter_schedule};
+use crate::collectives::CirculantPlans;
+use crate::datatypes::{BlockPartition, Elem};
+use crate::ops::kernels::SegmentSpan;
+use crate::ops::ReduceOp;
+use crate::schedule::{Plan, PlanCache, PlanKey};
+
+use super::{
+    CollectiveKind, DoneRx, DoneTx, EngineError, InflightCounter, OpShared, RankOp, StepCounter,
+    WorkerCmd,
+};
+
+/// Default fusion byte budget: 64 KiB of member payload per batch. Small
+/// enough that a fused run stays latency-bound (the regime where fusion
+/// wins), large enough to coalesce dozens of KiB-scale ops. Override with
+/// `CCOLL_FUSION_MAX_BYTES` / `engine.fusion.max_bytes`.
+pub const DEFAULT_FUSION_MAX_BYTES: usize = 64 * 1024;
+
+/// Default flush window: a pending batch waits at most this many
+/// completed engine steps for more members. Override with
+/// `CCOLL_FUSION_WINDOW` / `engine.fusion.window`; 0 disables fusion.
+pub const DEFAULT_FUSION_WINDOW: u64 = 8;
+
+/// Why a pending batch was flushed (each maps to a [`FusionStats`]
+/// counter).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(super) enum FlushReason {
+    /// The byte budget was reached (or the next op would exceed it).
+    Budget,
+    /// The completed-step window expired.
+    Window,
+    /// An incompatible operation arrived.
+    Incompatible,
+    /// A member handle was waited on, the engine parked on backpressure,
+    /// or the engine is shutting down.
+    Forced,
+}
+
+/// Counters of the fusion tier's behavior, snapshot via
+/// [`CollectiveEngine::fusion_stats`](super::CollectiveEngine::fusion_stats).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FusionStats {
+    /// Fused runs dispatched (batches of ≥ 2 members).
+    pub batches: u64,
+    /// Member operations carried by those fused runs.
+    pub fused_ops: u64,
+    /// Member payload bytes packed through fused runs.
+    pub fused_bytes: u64,
+    /// 1-member batches dispatched through the unfused path.
+    pub single_flushes: u64,
+    /// Ops over the byte budget that bypassed the batcher.
+    pub bypass_large: u64,
+    /// Non-fusible kinds (`ReduceScatterCounts`) that bypassed it.
+    pub bypass_kind: u64,
+    /// Fused-plan cache hits (the batch shape was seen before).
+    pub plan_hits: u64,
+    /// Fused-plan cache misses (a new batch shape built its schedule).
+    pub plan_misses: u64,
+    /// Flushes triggered by the byte budget.
+    pub flush_budget: u64,
+    /// Flushes triggered by the completed-step window.
+    pub flush_window: u64,
+    /// Flushes triggered by an incompatible arrival.
+    pub flush_incompatible: u64,
+    /// Forced flushes (handle wait, backpressure, shutdown).
+    pub flush_forced: u64,
+}
+
+impl FusionStats {
+    /// Mean members per fused run (0 when nothing fused).
+    pub fn avg_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.fused_ops as f64 / self.batches as f64
+        }
+    }
+}
+
+/// Pack/scatter geometry of one fused batch, shared by every rank:
+/// `spans[j][g]` maps member `j`'s elements of owner block `g` to their
+/// offset in the fused vector. The spans of all members tile the fused
+/// vector exactly once.
+#[derive(Debug)]
+pub(crate) struct FusedLayout {
+    pub(crate) spans: Vec<Vec<SegmentSpan>>,
+    pub(crate) total: usize,
+}
+
+impl FusedLayout {
+    /// Derive the block-major layout and the fused partition (per-block
+    /// counts summed across members) from the members' own partitions.
+    pub(super) fn new(parts: &[BlockPartition], p: usize) -> (Self, BlockPartition) {
+        let mut counts = vec![0usize; p];
+        for part in parts {
+            for (g, c) in counts.iter_mut().enumerate() {
+                *c += part.size(g);
+            }
+        }
+        let fused = BlockPartition::from_counts(&counts);
+        let mut spans: Vec<Vec<SegmentSpan>> =
+            (0..parts.len()).map(|_| Vec::with_capacity(p)).collect();
+        let mut cursor: Vec<usize> = (0..p).map(|g| fused.range(g).start).collect();
+        for g in 0..p {
+            for (j, part) in parts.iter().enumerate() {
+                spans[j].push((part.range(g), cursor[g]));
+                cursor[g] += part.size(g);
+            }
+        }
+        (Self { spans, total: fused.total() }, fused)
+    }
+}
+
+/// One rank's share of one member op inside a fused run: the member's
+/// input vector for that rank (scatter-back target) plus its completion
+/// plumbing.
+pub(crate) struct FusedShare<T: Elem> {
+    pub(crate) buf: Vec<T>,
+    pub(crate) done: DoneTx<T>,
+    pub(crate) shared: Arc<OpShared>,
+}
+
+/// The fused command one worker receives: pack `shares` into a segment
+/// buffer per `layout`, drive the fused plan under `op_tag`, scatter the
+/// results back.
+pub(crate) struct FusedRankOp<T: Elem> {
+    pub(crate) op_tag: u64,
+    pub(crate) plan: Arc<Plan>,
+    pub(crate) op: Arc<dyn ReduceOp<T>>,
+    pub(crate) allreduce: bool,
+    pub(crate) layout: Arc<FusedLayout>,
+    pub(crate) shares: Vec<FusedShare<T>>,
+}
+
+/// A batched member op awaiting flush.
+struct Member<T: Elem> {
+    op_id: u64,
+    m: usize,
+    inputs: Vec<Vec<T>>,
+    done: DoneTx<T>,
+    shared: Arc<OpShared>,
+}
+
+/// The open batch: compatible members accumulated since `opened_at`
+/// completed engine steps.
+struct PendingBatch<T: Elem> {
+    allreduce: bool,
+    op_name: String,
+    op: Arc<dyn ReduceOp<T>>,
+    members: Vec<Member<T>>,
+    bytes: usize,
+    opened_at: u64,
+}
+
+/// The batching stage + submission fan-out. Shared as
+/// `Arc<Mutex<Fuser<T>>>` between the engine (submit, shutdown) and every
+/// [`OpHandle`](super::OpHandle) (force-flush on wait); workers never
+/// touch it.
+pub(crate) struct Fuser<T: Elem> {
+    p: usize,
+    vocab: CirculantPlans,
+    txs: Vec<Sender<WorkerCmd<T>>>,
+    plans: Arc<PlanCache>,
+    inflight: InflightCounter,
+    completed: StepCounter,
+    /// Next operation epoch (starts at 1; epoch 0 is the legacy untagged
+    /// wire space). Single ops run under their own id; each fused run
+    /// takes one fresh epoch for the whole batch.
+    next_op: u64,
+    enabled: bool,
+    max_bytes: usize,
+    window: u64,
+    pending: Option<PendingBatch<T>>,
+    stats: FusionStats,
+    pub(super) shut_down: bool,
+}
+
+impl<T: Elem> Fuser<T> {
+    #[allow(clippy::too_many_arguments)]
+    pub(super) fn new(
+        p: usize,
+        vocab: CirculantPlans,
+        txs: Vec<Sender<WorkerCmd<T>>>,
+        plans: Arc<PlanCache>,
+        inflight: InflightCounter,
+        completed: StepCounter,
+        enabled: bool,
+        max_bytes: usize,
+        window: u64,
+    ) -> Self {
+        Self {
+            p,
+            vocab,
+            txs,
+            plans,
+            inflight,
+            completed,
+            next_op: 1,
+            // window == 0 means "flush on every submit": batching never
+            // coalesces anything, so treat it as fusion-off outright.
+            enabled: enabled && window > 0,
+            max_bytes,
+            window,
+            pending: None,
+            stats: FusionStats::default(),
+            shut_down: false,
+        }
+    }
+
+    pub(super) fn stats(&self) -> FusionStats {
+        self.stats
+    }
+
+    fn alloc_op(&mut self) -> u64 {
+        let id = self.next_op;
+        self.next_op += 1;
+        id
+    }
+
+    /// Whether `op_id` is sitting in the pending batch (so its handle
+    /// must force a flush before waiting).
+    pub(super) fn pending_contains(&self, op_id: u64) -> bool {
+        self.pending.as_ref().is_some_and(|b| b.members.iter().any(|m| m.op_id == op_id))
+    }
+
+    /// Flush the pending batch if its completed-step window has expired.
+    /// The window has no timer thread behind it: it is enforced at every
+    /// engine interaction — each submit (fusible or not) and, via this
+    /// hook, each [`OpHandle::wait`](super::OpHandle::wait) — so a batch
+    /// cannot outlive its window while anyone is observing the engine.
+    pub(super) fn flush_if_stale(&mut self) {
+        if let Some(b) = &self.pending {
+            if self.completed.load(Ordering::Acquire).saturating_sub(b.opened_at) >= self.window {
+                self.flush(FlushReason::Window);
+            }
+        }
+    }
+
+    /// Admit one validated operation: batch it when eligible, otherwise
+    /// dispatch it unfused (flushing the pending batch first so it is
+    /// never starved by incompatible traffic). Returns the op id and the
+    /// handle's receiving end.
+    pub(super) fn submit_op(
+        &mut self,
+        kind: CollectiveKind,
+        op_name: &str,
+        op: Arc<dyn ReduceOp<T>>,
+        inputs: Vec<Vec<T>>,
+        m: usize,
+    ) -> Result<(u64, DoneRx<T>), EngineError> {
+        if self.shut_down {
+            return Err(EngineError::ShutDown);
+        }
+        let op_id = self.alloc_op();
+        let (tx, rx) = channel();
+        let shared =
+            Arc::new(OpShared::new(self.p, self.inflight.clone(), self.completed.clone()));
+        self.inflight.fetch_add(1, Ordering::AcqRel);
+
+        let bytes = m.saturating_mul(std::mem::size_of::<T>());
+        let allreduce = match &kind {
+            CollectiveKind::Allreduce => true,
+            CollectiveKind::ReduceScatter => false,
+            CollectiveKind::ReduceScatterCounts(_) => {
+                if self.enabled {
+                    self.stats.bypass_kind += 1;
+                }
+                self.flush(FlushReason::Incompatible);
+                self.dispatch_single(op_id, &kind, op, inputs, tx, shared)?;
+                return Ok((op_id, rx));
+            }
+        };
+        if !self.enabled || bytes > self.max_bytes {
+            if self.enabled {
+                // An over-budget same-kind arrival is a budget-driven
+                // flush (the batcher cannot hold it); with fusion off no
+                // batch can exist, so no flush is needed at all.
+                self.stats.bypass_large += 1;
+                self.flush(FlushReason::Budget);
+            }
+            self.dispatch_single(op_id, &kind, op, inputs, tx, shared)?;
+            return Ok((op_id, rx));
+        }
+
+        // Eligible: flush a pending batch this op cannot join, then join
+        // (or open) the batch.
+        if let Some(b) = &self.pending {
+            let reason = if b.allreduce != allreduce || b.op_name != op_name {
+                Some(FlushReason::Incompatible)
+            } else if b.bytes + bytes > self.max_bytes {
+                Some(FlushReason::Budget)
+            } else if self.completed.load(Ordering::Acquire).saturating_sub(b.opened_at)
+                >= self.window
+            {
+                Some(FlushReason::Window)
+            } else {
+                None
+            };
+            if let Some(r) = reason {
+                self.flush(r);
+            }
+        }
+        let opened_at = self.completed.load(Ordering::Acquire);
+        let batch = self.pending.get_or_insert_with(|| PendingBatch {
+            allreduce,
+            op_name: op_name.to_string(),
+            op,
+            members: Vec::new(),
+            bytes: 0,
+            opened_at,
+        });
+        batch.members.push(Member { op_id, m, inputs, done: tx, shared });
+        batch.bytes += bytes;
+        if batch.bytes >= self.max_bytes {
+            self.flush(FlushReason::Budget);
+        }
+        Ok((op_id, rx))
+    }
+
+    /// Dispatch the pending batch (if any) as one fused run — or through
+    /// the unfused path when it holds a single member. Errors cannot be
+    /// returned here (the members' handles are already out): a failed
+    /// fan-out delivers a [`CollectiveError`] through every affected
+    /// member's handle and rolls back the undelivered rank shares.
+    pub(super) fn flush(&mut self, why: FlushReason) {
+        let Some(batch) = self.pending.take() else { return };
+        match why {
+            FlushReason::Budget => self.stats.flush_budget += 1,
+            FlushReason::Window => self.stats.flush_window += 1,
+            FlushReason::Incompatible => self.stats.flush_incompatible += 1,
+            FlushReason::Forced => self.stats.flush_forced += 1,
+        }
+        let p = self.p;
+        let kind =
+            if batch.allreduce { CollectiveKind::Allreduce } else { CollectiveKind::ReduceScatter };
+        if batch.members.len() == 1 {
+            // Pack/scatter for one op is pure overhead; run it unfused.
+            self.stats.single_flushes += 1;
+            let member = batch.members.into_iter().next().expect("one member");
+            // The handle owns the error channel; dispatch_single already
+            // routed per-rank errors there, so the Err return (which
+            // submit would surface) is redundant here.
+            let _ = self.dispatch_single(
+                member.op_id,
+                &kind,
+                batch.op,
+                member.inputs,
+                member.done,
+                member.shared,
+            );
+            return;
+        }
+
+        let k = batch.members.len();
+        self.stats.batches += 1;
+        self.stats.fused_ops += k as u64;
+        self.stats.fused_bytes += batch.bytes as u64;
+        let parts: Vec<BlockPartition> =
+            batch.members.iter().map(|mm| BlockPartition::regular(p, mm.m)).collect();
+        let (layout, fused_part) = FusedLayout::new(&parts, p);
+        let layout = Arc::new(layout);
+        let name = if batch.allreduce {
+            self.vocab.allreduce.clone()
+        } else {
+            self.vocab.reduce_scatter.clone()
+        };
+        // The fused partition's fingerprint IS the batch-shape key:
+        // (kind, ⊕-independent member-length sequence) determine it, so
+        // repeated traffic mixes hit the same cached plan — and it shares
+        // the engine's one plan-key space, so a fused batch whose layout
+        // coincides with an unfused geometry reuses that plan too.
+        let (plan, hit) = self.plan_for(name, &fused_part, batch.allreduce);
+        if hit {
+            self.stats.plan_hits += 1;
+        } else {
+            self.stats.plan_misses += 1;
+        }
+        let op_tag = self.alloc_op(); // one wire epoch for the whole fused run
+        let mut per_rank: Vec<Vec<FusedShare<T>>> = (0..p).map(|_| Vec::with_capacity(k)).collect();
+        for member in batch.members {
+            for (r, buf) in member.inputs.into_iter().enumerate() {
+                per_rank[r].push(FusedShare {
+                    buf,
+                    done: member.done.clone(),
+                    shared: member.shared.clone(),
+                });
+            }
+        }
+        for rank in 0..p {
+            let cmd = WorkerCmd::Fused(FusedRankOp {
+                op_tag,
+                plan: plan.clone(),
+                op: batch.op.clone(),
+                allreduce: batch.allreduce,
+                layout: layout.clone(),
+                shares: std::mem::take(&mut per_rank[rank]),
+            });
+            if let Err(undelivered) = self.txs[rank].send(cmd) {
+                // A batch that cannot flush because a member's rank share
+                // fails to deliver must roll back ALL members' in-flight
+                // slots: recover this rank's shares from the bounced
+                // command, then fail every still-undelivered rank share
+                // of every member. Delivered ranks (< rank) complete or
+                // watchdog out on their own and release the rest.
+                if let WorkerCmd::Fused(f) = undelivered.0 {
+                    per_rank[rank] = f.shares;
+                }
+                for (r, shares) in per_rank.iter().enumerate().skip(rank) {
+                    for share in shares {
+                        let _ = share.done.send((
+                            r,
+                            Err(CollectiveError::FusedBatch {
+                                fused_op: op_tag,
+                                members: k,
+                                detail: format!(
+                                    "worker {rank} gone before the fused run was delivered"
+                                ),
+                            }),
+                        ));
+                        share.shared.note_rank_done();
+                    }
+                }
+                return;
+            }
+        }
+    }
+
+    /// The unfused fan-out (what `CollectiveEngine::submit` always did):
+    /// one [`RankOp`] per worker under the op's own epoch. On a dead
+    /// worker, every undelivered rank share is failed through the handle
+    /// *and* rolled back, then the failing rank is reported.
+    fn dispatch_single(
+        &mut self,
+        op_tag: u64,
+        kind: &CollectiveKind,
+        op: Arc<dyn ReduceOp<T>>,
+        inputs: Vec<Vec<T>>,
+        done: DoneTx<T>,
+        shared: Arc<OpShared>,
+    ) -> Result<(), EngineError> {
+        let p = self.p;
+        let m = inputs.first().map_or(0, Vec::len);
+        let (algorithm, part, is_allreduce) = match kind {
+            CollectiveKind::Allreduce => {
+                (self.vocab.allreduce.clone(), BlockPartition::regular(p, m), true)
+            }
+            CollectiveKind::ReduceScatter => {
+                (self.vocab.reduce_scatter.clone(), BlockPartition::regular(p, m), false)
+            }
+            CollectiveKind::ReduceScatterCounts(counts) => {
+                (self.vocab.reduce_scatter.clone(), BlockPartition::from_counts(counts), false)
+            }
+        };
+        let (plan, _hit) = self.plan_for(algorithm, &part, is_allreduce);
+        for (rank, buf) in inputs.into_iter().enumerate() {
+            let cmd = WorkerCmd::Op(RankOp {
+                op_tag,
+                plan: plan.clone(),
+                op: op.clone(),
+                buf,
+                done: done.clone(),
+                shared: shared.clone(),
+            });
+            if self.txs[rank].send(cmd).is_err() {
+                for r in rank..p {
+                    let _ = done.send((r, Err(CollectiveError::WorkerLost { rank: r })));
+                    shared.note_rank_done();
+                }
+                return Err(EngineError::WorkerGone { rank });
+            }
+        }
+        Ok(())
+    }
+
+    /// Memoized plan lookup shared by the fused and unfused paths — the
+    /// skip sequence was validated at engine construction, so cache
+    /// misses rebuild from it without re-deriving anything.
+    fn plan_for(
+        &mut self,
+        algorithm: Arc<str>,
+        part: &BlockPartition,
+        is_allreduce: bool,
+    ) -> (Arc<Plan>, bool) {
+        let key = PlanKey::new(algorithm, self.p, part, T::DTYPE);
+        let skips = self.vocab.skips.clone();
+        let p = self.p;
+        self.plans.get_or_build(key, part, move || {
+            if is_allreduce {
+                allreduce_schedule(p, &skips)
+            } else {
+                reduce_scatter_schedule(p, &skips)
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{CollectiveEngine, EngineConfig, OpRequest};
+    use super::*;
+    use crate::ops::SumOp;
+    use std::time::Duration;
+
+    fn int_inputs(p: usize, m: usize, seed: u64) -> Vec<Vec<i64>> {
+        let mut rng = crate::util::rng::SplitMix64::new(seed);
+        (0..p).map(|_| crate::datatypes::elem::int_vec(&mut rng, m, -8, 9)).collect()
+    }
+
+    fn oracle_sum(inputs: &[Vec<i64>]) -> Vec<i64> {
+        let mut acc = vec![0i64; inputs[0].len()];
+        for v in inputs {
+            SumOp.combine(&mut acc, v);
+        }
+        acc
+    }
+
+    /// Fusion on, with a window/budget so large that only forced flushes
+    /// (handle waits) dispatch — deterministic batch composition.
+    fn fused_cfg(p: usize) -> EngineConfig {
+        EngineConfig::new(p).fusion(true).fusion_window(1_000_000).fusion_max_bytes(1 << 24)
+    }
+
+    #[test]
+    fn layout_tiles_the_fused_vector_block_major() {
+        let p = 3;
+        let parts = [
+            BlockPartition::regular(p, 7),
+            BlockPartition::regular(p, 0),
+            BlockPartition::regular(p, 4),
+        ];
+        let (layout, fused) = FusedLayout::new(&parts, p);
+        assert_eq!(layout.total, 11);
+        assert_eq!(fused.total(), 11);
+        // Per-block counts sum across members.
+        for g in 0..p {
+            let want: usize = parts.iter().map(|pt| pt.size(g)).sum();
+            assert_eq!(fused.size(g), want, "block {g}");
+        }
+        // Spans tile [0, total) exactly once.
+        let mut covered = vec![false; layout.total];
+        for spans in &layout.spans {
+            assert_eq!(spans.len(), p);
+            for (src, dst) in spans {
+                for i in 0..src.len() {
+                    assert!(!covered[dst + i], "offset {} covered twice", dst + i);
+                    covered[dst + i] = true;
+                }
+            }
+        }
+        assert!(covered.iter().all(|&c| c), "layout left a hole");
+        // Each member's block g lands whole inside fused block g.
+        for (j, spans) in layout.spans.iter().enumerate() {
+            for (g, (src, dst)) in spans.iter().enumerate() {
+                let fr = fused.range(g);
+                assert!(
+                    *dst >= fr.start && dst + src.len() <= fr.end,
+                    "member {j} block {g} leaks out of fused block {g}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fused_batch_matches_oracle_and_counts_stats() {
+        let p = 4;
+        let mut engine = CollectiveEngine::<i64>::new(fused_cfg(p));
+        let run_round = |engine: &mut CollectiveEngine<i64>, seed: u64| {
+            let lens = [8usize, 16, 8, 16];
+            let mut handles = Vec::new();
+            let mut oracles = Vec::new();
+            for (i, &m) in lens.iter().enumerate() {
+                let inputs = int_inputs(p, m, seed + i as u64);
+                oracles.push(oracle_sum(&inputs));
+                handles.push(engine.submit(OpRequest::allreduce(inputs, "sum")).unwrap());
+            }
+            for (i, h) in handles.into_iter().enumerate() {
+                let out = h.wait().unwrap();
+                for (r, buf) in out.iter().enumerate() {
+                    assert_eq!(buf, &oracles[i], "op {i} rank {r}");
+                }
+            }
+        };
+        run_round(&mut engine, 100);
+        let s = engine.fusion_stats();
+        assert_eq!(s.batches, 1, "{s:?}");
+        assert_eq!(s.fused_ops, 4, "{s:?}");
+        assert_eq!(s.plan_misses, 1, "first batch shape builds its plan: {s:?}");
+        assert_eq!(s.flush_forced, 1, "the first wait flushed: {s:?}");
+        // The same shape again: the fused plan must be a cache hit.
+        run_round(&mut engine, 200);
+        let s = engine.fusion_stats();
+        assert_eq!((s.batches, s.fused_ops), (2, 8), "{s:?}");
+        assert_eq!(s.plan_hits, 1, "repeated batch shape must hit the plan cache: {s:?}");
+        assert_eq!(s.single_flushes, 0, "{s:?}");
+        engine.shutdown();
+    }
+
+    #[test]
+    fn window_zero_disables_fusion_and_counts_bypass() {
+        let p = 2;
+        let mut engine =
+            CollectiveEngine::<i64>::new(EngineConfig::new(p).fusion(true).fusion_window(0));
+        let inputs = int_inputs(p, 8, 3);
+        let want = oracle_sum(&inputs);
+        let out = engine.submit(OpRequest::allreduce(inputs, "sum")).unwrap().wait().unwrap();
+        assert_eq!(out[0], want);
+        let s = engine.fusion_stats();
+        assert_eq!(s.batches, 0);
+        assert_eq!(s.fused_ops, 0);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn large_and_counts_ops_bypass_the_batcher() {
+        let p = 2;
+        // Budget of 64 bytes = 8 i64 elements.
+        let mut engine = CollectiveEngine::<i64>::new(
+            EngineConfig::new(p).fusion(true).fusion_window(1_000_000).fusion_max_bytes(64),
+        );
+        // 16 elems = 128 B > budget → bypass_large, runs unfused.
+        let big = int_inputs(p, 16, 5);
+        let want_big = oracle_sum(&big);
+        let out = engine.submit(OpRequest::allreduce(big, "sum")).unwrap().wait().unwrap();
+        assert_eq!(out[0], want_big);
+        // Counts reduce-scatter → bypass_kind.
+        let counts = vec![3usize, 5];
+        let inputs = int_inputs(p, 8, 6);
+        let want = oracle_sum(&inputs);
+        let part = BlockPartition::from_counts(&counts);
+        let out = engine
+            .submit(OpRequest::reduce_scatter_counts(inputs, counts, "sum"))
+            .unwrap()
+            .wait()
+            .unwrap();
+        for (r, buf) in out.iter().enumerate() {
+            assert_eq!(&buf[part.range(r)], &want[part.range(r)], "rank {r}");
+        }
+        let s = engine.fusion_stats();
+        assert_eq!(s.bypass_large, 1, "{s:?}");
+        assert_eq!(s.bypass_kind, 1, "{s:?}");
+        assert_eq!(s.batches, 0, "{s:?}");
+        engine.shutdown();
+    }
+
+    #[test]
+    fn budget_flushes_mid_stream_and_results_stay_exact() {
+        let p = 2;
+        // Budget 256 B = 32 i64 elems: three 16-elem ops → flush after 2.
+        let mut engine = CollectiveEngine::<i64>::new(
+            EngineConfig::new(p).fusion(true).fusion_window(1_000_000).fusion_max_bytes(256),
+        );
+        let mut handles = Vec::new();
+        let mut oracles = Vec::new();
+        for i in 0..3 {
+            let inputs = int_inputs(p, 16, 40 + i);
+            oracles.push(oracle_sum(&inputs));
+            handles.push(engine.submit(OpRequest::allreduce(inputs, "sum")).unwrap());
+        }
+        for (i, h) in handles.into_iter().enumerate() {
+            let out = h.wait().unwrap();
+            assert_eq!(out[0], oracles[i], "op {i}");
+        }
+        let s = engine.fusion_stats();
+        assert_eq!(s.flush_budget, 1, "{s:?}");
+        assert_eq!(s.batches, 1, "{s:?}");
+        assert_eq!(s.fused_ops, 2, "{s:?}");
+        assert_eq!(s.single_flushes, 1, "the third op flushed alone on wait: {s:?}");
+        engine.shutdown();
+    }
+
+    /// Kill one worker by sending it a direct Shutdown and waiting for
+    /// its receiver to drop.
+    fn kill_worker(engine: &CollectiveEngine<i64>, rank: usize) {
+        let _ = engine.txs[rank].send(WorkerCmd::Shutdown);
+        for _ in 0..20_000 {
+            if engine.txs[rank].send(WorkerCmd::Shutdown).is_err() {
+                return;
+            }
+            std::thread::sleep(Duration::from_micros(100));
+        }
+        panic!("worker {rank} did not exit");
+    }
+
+    #[test]
+    fn flush_with_all_workers_dead_rolls_back_every_member() {
+        let p = 3;
+        let mut engine = CollectiveEngine::<i64>::new(fused_cfg(p));
+        for r in 0..p {
+            kill_worker(&engine, r);
+        }
+        let h1 = engine.submit(OpRequest::allreduce(int_inputs(p, 8, 1), "sum")).unwrap();
+        let h2 = engine.submit(OpRequest::allreduce(int_inputs(p, 8, 2), "sum")).unwrap();
+        assert_eq!(engine.in_flight(), 2, "both members occupy slots while batched");
+        for h in [h1, h2] {
+            let err = h.wait().unwrap_err();
+            let msg = err.to_string();
+            assert!(msg.contains("fused batch"), "diagnostic must carry the fusion tag: {msg}");
+        }
+        // The rollback must have released every member's in-flight slot.
+        for _ in 0..10_000 {
+            if engine.in_flight() == 0 {
+                break;
+            }
+            std::thread::yield_now();
+        }
+        assert_eq!(engine.in_flight(), 0, "rolled-back members leaked in-flight slots");
+        engine.shutdown();
+    }
+
+    #[test]
+    fn partial_flush_failure_rolls_back_undelivered_shares() {
+        let p = 3;
+        let mut engine = CollectiveEngine::<i64>::new(
+            fused_cfg(p).op_timeout(Duration::from_millis(300)),
+        );
+        kill_worker(&engine, p - 1);
+        let h1 = engine.submit(OpRequest::allreduce(int_inputs(p, 8, 11), "sum")).unwrap();
+        let h2 = engine.submit(OpRequest::allreduce(int_inputs(p, 8, 12), "sum")).unwrap();
+        // Force the flush: ranks 0..p-1 receive the fused run; the dead
+        // worker's shares are failed immediately, the delivered ranks
+        // watchdog out (they need the dead peer), and EVERY member
+        // resolves with the fusion tag in its diagnostic.
+        for h in [h1, h2] {
+            let err = h.wait().unwrap_err();
+            let msg = err.to_string();
+            assert!(msg.contains("fused batch"), "{msg}");
+        }
+        for _ in 0..50_000 {
+            if engine.in_flight() == 0 {
+                break;
+            }
+            std::thread::sleep(Duration::from_micros(100));
+        }
+        assert_eq!(engine.in_flight(), 0, "partial fused fan-out leaked in-flight slots");
+        engine.shutdown();
+    }
+
+    #[test]
+    fn queue_depth_backpressure_flushes_the_pending_batch() {
+        let p = 2;
+        let depth = 2;
+        let mut engine =
+            CollectiveEngine::<i64>::new(fused_cfg(p).queue_depth(depth));
+        let mut handles = Vec::new();
+        let mut oracles = Vec::new();
+        // Ops 1+2 fill the depth while batched; op 3's submit must flush
+        // them (they can never complete unflushed) instead of timing out.
+        for i in 0..5u64 {
+            let inputs = int_inputs(p, 8, 60 + i);
+            oracles.push(oracle_sum(&inputs));
+            handles.push(engine.submit(OpRequest::allreduce(inputs, "sum")).unwrap());
+            assert!(engine.in_flight() <= depth, "depth bound violated");
+        }
+        for (i, h) in handles.into_iter().enumerate() {
+            let out = h.wait().unwrap();
+            assert_eq!(out[0], oracles[i], "op {i}");
+        }
+        engine.shutdown();
+    }
+
+    #[test]
+    fn shutdown_flushes_the_pending_batch_first() {
+        let p = 2;
+        let mut engine = CollectiveEngine::<i64>::new(fused_cfg(p));
+        let inputs = int_inputs(p, 8, 77);
+        let want = oracle_sum(&inputs);
+        let handle = engine.submit(OpRequest::allreduce(inputs, "sum")).unwrap();
+        engine.shutdown(); // must dispatch + drain the batched op, not strand it
+        let out = handle.wait().unwrap();
+        assert_eq!(out[0], want);
+    }
+}

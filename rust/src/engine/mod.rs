@@ -44,6 +44,15 @@
 //! ground, `sleep` for minimum idle CPU. Idle workers (no in-flight op)
 //! always block on the submission channel regardless of policy.
 //!
+//! # The fusion tier
+//!
+//! For small repeated collectives the per-round latency dominates; the
+//! engine can coalesce compatible in-flight operations into **one** fused
+//! circulant run (opt-in via [`EngineConfig::fusion`]). The batcher, its
+//! flush policy (byte budget + a window of *completed engine steps*),
+//! the block-major pack/scatter layout and the failure semantics live in
+//! [`fusion`] — see that module's docs.
+//!
 //! # When to prefer the engine vs the launcher
 //!
 //! [`Launcher`](crate::coordinator::Launcher) remains the right tool for
@@ -54,22 +63,37 @@
 //! process issues many collectives over time — serving, training loops,
 //! benches measuring steady state.
 
+pub mod fusion;
+
+pub use fusion::{FusionStats, DEFAULT_FUSION_MAX_BYTES, DEFAULT_FUSION_WINDOW};
+
 use std::any::Any;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
 use crate::collectives::exec::{CollectiveError, OpCursor, Progress};
-use crate::collectives::generators::{allreduce_schedule, reduce_scatter_schedule};
 use crate::collectives::CirculantPlans;
 use crate::coordinator::OpBackend;
-use crate::datatypes::{BlockPartition, Elem};
-use crate::ops::ReduceOp;
-use crate::schedule::{Plan, PlanCache, PlanCacheStats, PlanKey};
+use crate::datatypes::Elem;
+use crate::ops::{kernels, ReduceOp};
+use crate::schedule::{Plan, PlanCache, PlanCacheStats};
 use crate::topology::skips::SkipScheme;
 use crate::transport::{network_typed, Endpoint};
+
+use fusion::{FlushReason, FusedLayout, FusedRankOp, FusedShare, Fuser};
+
+/// Shared count of operations submitted but not yet finished everywhere.
+pub(crate) type InflightCounter = Arc<AtomicUsize>;
+/// Monotone count of fully-completed operations — the engine's logical
+/// clock; the fusion tier's flush window is measured against it.
+pub(crate) type StepCounter = Arc<AtomicU64>;
+/// The sending half of one operation's completion channel.
+pub(crate) type DoneTx<T> = Sender<(usize, Result<Vec<T>, CollectiveError>)>;
+/// The receiving half ([`OpHandle`]'s end).
+pub(crate) type DoneRx<T> = Receiver<(usize, Result<Vec<T>, CollectiveError>)>;
 
 /// How a worker waits between poll passes while operations are in flight
 /// (idle workers always block on the submission channel).
@@ -132,6 +156,23 @@ pub struct EngineConfig {
     pub queue_depth: usize,
     /// Worker wait strategy between poll passes.
     pub park: ParkPolicy,
+    /// Enable the fusion tier: coalesce compatible small in-flight ops
+    /// into one fused circulant run (see [`fusion`]). Off by default —
+    /// fusion trades a pack/scatter copy for saved rounds, a win only
+    /// for latency-bound small-op traffic.
+    pub fusion: bool,
+    /// Fusion byte budget: a pending batch flushes before exceeding it,
+    /// and any single op larger than it bypasses the batcher. Default
+    /// from `CCOLL_FUSION_MAX_BYTES`.
+    pub fusion_max_bytes: usize,
+    /// Fusion flush window in **completed engine steps** (not
+    /// wall-clock); 0 disables fusion. Default from
+    /// `CCOLL_FUSION_WINDOW`.
+    pub fusion_window: u64,
+    /// Override the per-endpoint message/ack timeout (the liveness
+    /// watchdog bound). `None` keeps the transport's generous default;
+    /// failure-injection tests shrink it.
+    pub op_timeout: Option<Duration>,
 }
 
 impl EngineConfig {
@@ -145,6 +186,10 @@ impl EngineConfig {
             rendezvous_min_elems: None,
             queue_depth: knobs.engine_queue_depth,
             park: knobs.engine_park,
+            fusion: false,
+            fusion_max_bytes: knobs.fusion_max_bytes,
+            fusion_window: knobs.fusion_window,
+            op_timeout: None,
         }
     }
 
@@ -175,6 +220,26 @@ impl EngineConfig {
 
     pub fn park(mut self, park: ParkPolicy) -> Self {
         self.park = park;
+        self
+    }
+
+    pub fn fusion(mut self, enabled: bool) -> Self {
+        self.fusion = enabled;
+        self
+    }
+
+    pub fn fusion_max_bytes(mut self, bytes: usize) -> Self {
+        self.fusion_max_bytes = bytes;
+        self
+    }
+
+    pub fn fusion_window(mut self, window: u64) -> Self {
+        self.fusion_window = window;
+        self
+    }
+
+    pub fn op_timeout(mut self, timeout: Duration) -> Self {
+        self.op_timeout = Some(timeout);
         self
     }
 }
@@ -259,22 +324,42 @@ pub enum EngineError {
     },
 }
 
-/// Per-operation bookkeeping shared by the `p` rank-sides of one op.
-struct OpShared {
+/// Per-operation bookkeeping shared by the `p` rank-sides of one op
+/// (fused members each have their own — a fused run carries one per
+/// member, so each member's slot releases independently).
+pub(crate) struct OpShared {
     /// Rank-sides not yet finished; the last one releases the in-flight
-    /// slot.
+    /// slot and ticks the completed-step clock.
     remaining: AtomicUsize,
-    inflight: Arc<AtomicUsize>,
+    inflight: InflightCounter,
+    completed: StepCounter,
 }
 
-/// One rank's share of a submitted operation.
-struct RankOp<T: Elem> {
-    op_tag: u64,
-    plan: Arc<Plan>,
-    op: Arc<dyn ReduceOp<T>>,
-    buf: Vec<T>,
-    done: Sender<(usize, Result<Vec<T>, CollectiveError>)>,
-    shared: Arc<OpShared>,
+impl OpShared {
+    pub(crate) fn new(p: usize, inflight: InflightCounter, completed: StepCounter) -> Self {
+        Self { remaining: AtomicUsize::new(p), inflight, completed }
+    }
+
+    /// One rank's share of this operation is settled — a result or error
+    /// was delivered, or the share was rolled back as undeliverable. The
+    /// last share releases the in-flight slot and advances the engine's
+    /// completed-step clock (the fusion flush window counts those steps).
+    pub(crate) fn note_rank_done(&self) {
+        if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            self.inflight.fetch_sub(1, Ordering::AcqRel);
+            self.completed.fetch_add(1, Ordering::AcqRel);
+        }
+    }
+}
+
+/// One rank's share of a submitted (unfused) operation.
+pub(crate) struct RankOp<T: Elem> {
+    pub(crate) op_tag: u64,
+    pub(crate) plan: Arc<Plan>,
+    pub(crate) op: Arc<dyn ReduceOp<T>>,
+    pub(crate) buf: Vec<T>,
+    pub(crate) done: DoneTx<T>,
+    pub(crate) shared: Arc<OpShared>,
 }
 
 /// Type-erased one-shot closure a worker runs inline on its endpoint —
@@ -284,13 +369,14 @@ struct RankOp<T: Elem> {
 /// [`CollectiveEngine::run_closure`].
 type JobFn<T> = Box<dyn FnOnce(usize, &mut Endpoint<T>) -> Box<dyn Any + Send> + Send>;
 
-struct Job<T: Elem> {
+pub(crate) struct Job<T: Elem> {
     run: JobFn<T>,
     done: Sender<(usize, Box<dyn Any + Send>)>,
 }
 
-enum WorkerCmd<T: Elem> {
+pub(crate) enum WorkerCmd<T: Elem> {
     Op(RankOp<T>),
+    Fused(FusedRankOp<T>),
     Job(Job<T>),
     Shutdown,
 }
@@ -299,12 +385,16 @@ enum WorkerCmd<T: Elem> {
 pub struct OpHandle<T: Elem = f32> {
     op_id: u64,
     p: usize,
-    rx: Receiver<(usize, Result<Vec<T>, CollectiveError>)>,
+    rx: DoneRx<T>,
+    /// The engine's batching stage: waiting on a still-batched member
+    /// must force its batch out, or the wait could never return.
+    fuser: Arc<Mutex<Fuser<T>>>,
 }
 
 impl<T: Elem> OpHandle<T> {
-    /// The operation's wire epoch (unique per engine, monotonically
-    /// increasing in submission order).
+    /// The operation's id (unique per engine, monotonically increasing
+    /// in submission order). Unfused operations use it as their wire
+    /// epoch; a fused member's batch runs under its own separate epoch.
     pub fn op_id(&self) -> u64 {
         self.op_id
     }
@@ -313,8 +403,23 @@ impl<T: Elem> OpHandle<T> {
     /// per-rank working vectors in rank order (allreduce: the full
     /// reduction everywhere; reduce-scatter: block `r` finished at rank
     /// `r`). The first rank error wins; remaining ranks are still
-    /// drained so the engine is quiesced when this returns.
+    /// drained so the engine is quiesced when this returns. If this
+    /// operation is still sitting in the fusion tier's pending batch,
+    /// the batch is flushed first — a waited handle can never deadlock
+    /// on its own batching.
     pub fn wait(self) -> Result<Vec<Vec<T>>, EngineError> {
+        {
+            let mut fuser = self.fuser.lock().unwrap();
+            if fuser.pending_contains(self.op_id) {
+                fuser.flush(FlushReason::Forced);
+            } else {
+                // Opportunistic window enforcement: the completed-step
+                // window has no timer behind it, so waits on *other*
+                // operations also evict a batch that outlived its
+                // window (see `Fuser::flush_if_stale`).
+                fuser.flush_if_stale();
+            }
+        }
         let mut out: Vec<Option<Vec<T>>> = (0..self.p).map(|_| None).collect();
         let mut err: Option<EngineError> = None;
         for _ in 0..self.p {
@@ -336,14 +441,22 @@ impl<T: Elem> OpHandle<T> {
     }
 }
 
-/// One in-flight operation in a worker's table.
+/// What an in-flight worker entry resolves into on completion: one
+/// operation's handle, or a fused batch's many.
+enum ActiveKind<T: Elem> {
+    Single { done: DoneTx<T>, shared: Arc<OpShared> },
+    Fused { allreduce: bool, layout: Arc<FusedLayout>, shares: Vec<FusedShare<T>> },
+}
+
+/// One in-flight operation in a worker's table (`buf` is the working
+/// vector: the member's own for a single op, the packed segment buffer
+/// for a fused run).
 struct ActiveOp<T: Elem> {
     cursor: OpCursor,
     plan: Arc<Plan>,
     op: Arc<dyn ReduceOp<T>>,
     buf: Vec<T>,
-    done: Sender<(usize, Result<Vec<T>, CollectiveError>)>,
-    shared: Arc<OpShared>,
+    kind: ActiveKind<T>,
     /// Last observed cursor progress stamp (liveness watchdog).
     last_progress: u64,
     /// When to declare this op stuck if no progress happens.
@@ -351,12 +464,59 @@ struct ActiveOp<T: Elem> {
 }
 
 impl<T: Elem> ActiveOp<T> {
-    fn finish(&mut self, rank: usize, result: Result<Vec<T>, CollectiveError>) {
-        // The handle may have been dropped — completion accounting must
-        // happen regardless, so the in-flight slot is always released.
-        let _ = self.done.send((rank, result));
-        if self.shared.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
-            self.shared.inflight.fetch_sub(1, Ordering::AcqRel);
+    /// Deliver success. Single ops hand their working vector to the
+    /// handle; fused runs scatter each member's result segments back
+    /// (every span for allreduce, the owned-block span for
+    /// reduce-scatter) and return the spent segment buffer for reuse.
+    /// The handle may have been dropped — completion accounting happens
+    /// regardless, so in-flight slots are always released.
+    fn finish_ok(&mut self, rank: usize) -> Option<Vec<T>> {
+        let buf = std::mem::take(&mut self.buf);
+        match &mut self.kind {
+            ActiveKind::Single { done, shared } => {
+                let _ = done.send((rank, Ok(buf)));
+                shared.note_rank_done();
+                None
+            }
+            ActiveKind::Fused { allreduce, layout, shares } => {
+                for (j, share) in shares.iter_mut().enumerate() {
+                    let spans = &layout.spans[j];
+                    let spans = if *allreduce { &spans[..] } else { &spans[rank..rank + 1] };
+                    let mut out = std::mem::take(&mut share.buf);
+                    kernels::scatter_segments(&mut out, &buf, spans);
+                    let _ = share.done.send((rank, Ok(out)));
+                    share.shared.note_rank_done();
+                }
+                Some(buf)
+            }
+        }
+    }
+
+    /// Deliver failure. Every member of a failed fused run gets the
+    /// error with the fusion tag (batch epoch + member count) in its
+    /// diagnostic — per-op error isolation with a traceable cause.
+    fn finish_err(&mut self, rank: usize, err: CollectiveError) {
+        let fused_op = self.cursor.op_tag();
+        match &mut self.kind {
+            ActiveKind::Single { done, shared } => {
+                let _ = done.send((rank, Err(err)));
+                shared.note_rank_done();
+            }
+            ActiveKind::Fused { shares, .. } => {
+                let detail = err.to_string();
+                let members = shares.len();
+                for share in shares.iter() {
+                    let _ = share.done.send((
+                        rank,
+                        Err(CollectiveError::FusedBatch {
+                            fused_op,
+                            members,
+                            detail: detail.clone(),
+                        }),
+                    ));
+                    share.shared.note_rank_done();
+                }
+            }
         }
     }
 }
@@ -367,17 +527,15 @@ impl<T: Elem> ActiveOp<T> {
 pub struct CollectiveEngine<T: Elem = f32> {
     p: usize,
     scheme: SkipScheme,
-    /// Precomputed circulant plan vocabulary (canonical names + validated
-    /// skip sequence), derived by the same [`CirculantPlans`] helper the
-    /// communicator uses — one derivation site, one plan-key space.
-    vocab: CirculantPlans,
     backend: OpBackend,
     queue_depth: usize,
-    /// Next operation epoch (starts at 1; epoch 0 is the legacy untagged
-    /// wire space).
-    next_op: u64,
-    inflight: Arc<AtomicUsize>,
+    inflight: InflightCounter,
     plans: Arc<PlanCache>,
+    /// The batching stage + submission fan-out ([`fusion`]): holds the
+    /// plan vocabulary, the epoch allocator and the pending batch.
+    /// Shared with every [`OpHandle`] so a waited member can force its
+    /// batch out; workers never touch it.
+    fuser: Arc<Mutex<Fuser<T>>>,
     txs: Vec<Sender<WorkerCmd<T>>>,
     workers: Vec<thread::JoinHandle<()>>,
 }
@@ -401,6 +559,9 @@ impl<T: Elem> CollectiveEngine<T> {
             if let Some(min) = cfg.rendezvous_min_elems {
                 ep.rendezvous_min_elems = min;
             }
+            if let Some(timeout) = cfg.op_timeout {
+                ep.timeout = timeout;
+            }
             let (tx, rx) = channel::<WorkerCmd<T>>();
             txs.push(tx);
             let park = cfg.park;
@@ -413,15 +574,28 @@ impl<T: Elem> CollectiveEngine<T> {
                     .expect("spawn engine worker"),
             );
         }
+        let inflight: InflightCounter = Arc::new(AtomicUsize::new(0));
+        let completed: StepCounter = Arc::new(AtomicU64::new(0));
+        let plans = Arc::new(PlanCache::new());
+        let fuser = Arc::new(Mutex::new(Fuser::new(
+            cfg.p,
+            vocab,
+            txs.clone(),
+            plans.clone(),
+            inflight.clone(),
+            completed,
+            cfg.fusion,
+            cfg.fusion_max_bytes,
+            cfg.fusion_window,
+        )));
         Self {
             p: cfg.p,
-            vocab,
             scheme: cfg.scheme,
             backend: cfg.backend,
             queue_depth: cfg.queue_depth,
-            next_op: 1,
-            inflight: Arc::new(AtomicUsize::new(0)),
-            plans: Arc::new(PlanCache::new()),
+            inflight,
+            plans,
+            fuser,
             txs,
             workers,
         }
@@ -452,9 +626,25 @@ impl<T: Elem> CollectiveEngine<T> {
         self.plans.stats()
     }
 
+    /// Fusion-tier counters (batches, fused ops, bypasses, flush
+    /// reasons, fused-plan hits) — all zero when fusion is off.
+    pub fn fusion_stats(&self) -> FusionStats {
+        self.fuser.lock().unwrap().stats()
+    }
+
+    /// Dispatch the fusion tier's pending batch immediately (no-op when
+    /// empty or fusion is off). Waiting on any member's handle does this
+    /// implicitly; call it to bound latency before going idle.
+    pub fn flush(&self) {
+        self.fuser.lock().unwrap().flush(FlushReason::Forced);
+    }
+
     /// Enqueue one collective; returns its future immediately. Parks when
-    /// `queue_depth` operations are already in flight. See [`OpRequest`]
-    /// for input semantics and [`OpHandle::wait`] for result layout.
+    /// `queue_depth` operations are already in flight. With the fusion
+    /// tier enabled the operation may be held briefly in a pending batch
+    /// (see [`fusion`] for the flush policy); [`OpHandle::wait`] always
+    /// forces it out. See [`OpRequest`] for input semantics and
+    /// [`OpHandle::wait`] for result layout.
     pub fn submit(&mut self, req: OpRequest<T>) -> Result<OpHandle<T>, EngineError> {
         let p = self.p;
         if self.txs.is_empty() {
@@ -469,35 +659,15 @@ impl<T: Elem> CollectiveEngine<T> {
                 return Err(EngineError::RaggedInputs { p, rank, got: v.len(), want: m });
             }
         }
-        let (algorithm, part, is_allreduce) = match &req.kind {
-            CollectiveKind::Allreduce => {
-                (&self.vocab.allreduce, BlockPartition::regular(p, m), true)
+        if let CollectiveKind::ReduceScatterCounts(counts) = &req.kind {
+            if counts.len() != p {
+                return Err(EngineError::BadCountsLen { p, got: counts.len() });
             }
-            CollectiveKind::ReduceScatter => {
-                (&self.vocab.reduce_scatter, BlockPartition::regular(p, m), false)
+            let want: usize = counts.iter().sum();
+            if want != m {
+                return Err(EngineError::BadCounts { got: m, want });
             }
-            CollectiveKind::ReduceScatterCounts(counts) => {
-                if counts.len() != p {
-                    return Err(EngineError::BadCountsLen { p, got: counts.len() });
-                }
-                let part = BlockPartition::from_counts(counts);
-                if part.total() != m {
-                    return Err(EngineError::BadCounts { got: m, want: part.total() });
-                }
-                (&self.vocab.reduce_scatter, part, false)
-            }
-        };
-        let key = PlanKey::new(algorithm.clone(), p, &part, T::DTYPE);
-        // The skip sequence was validated at construction; plan builds
-        // (cache misses only) reuse it instead of re-deriving per submit.
-        let skips = &self.vocab.skips;
-        let (plan, _hit) = self.plans.get_or_build(key, &part, || {
-            if is_allreduce {
-                allreduce_schedule(p, skips)
-            } else {
-                reduce_scatter_schedule(p, skips)
-            }
-        });
+        }
         let op: Arc<dyn ReduceOp<T>> =
             Arc::from(self.backend.resolve::<T>(&req.op).ok_or_else(|| EngineError::UnknownOp {
                 name: req.op.clone(),
@@ -512,6 +682,10 @@ impl<T: Elem> CollectiveEngine<T> {
         if self.queue_depth > 0 {
             let deadline = Instant::now() + BACKPRESSURE_TIMEOUT;
             while self.inflight.load(Ordering::Acquire) >= self.queue_depth {
+                // A pending fused batch occupies in-flight slots but can
+                // never complete until dispatched: flush before parking,
+                // or the park could only end in BackpressureTimeout.
+                self.fuser.lock().unwrap().flush(FlushReason::Forced);
                 if Instant::now() >= deadline {
                     return Err(EngineError::BackpressureTimeout {
                         in_flight: self.inflight.load(Ordering::Acquire),
@@ -522,34 +696,9 @@ impl<T: Elem> CollectiveEngine<T> {
             }
         }
 
-        let op_tag = self.next_op;
-        self.next_op += 1;
-        self.inflight.fetch_add(1, Ordering::AcqRel);
-        let (tx, rx) = channel();
-        let shared =
-            Arc::new(OpShared { remaining: AtomicUsize::new(p), inflight: self.inflight.clone() });
-        for (rank, buf) in req.inputs.into_iter().enumerate() {
-            let cmd = WorkerCmd::Op(RankOp {
-                op_tag,
-                plan: plan.clone(),
-                op: op.clone(),
-                buf,
-                done: tx.clone(),
-                shared: shared.clone(),
-            });
-            if self.txs[rank].send(cmd).is_err() {
-                // Partial fan-out failure: roll back the shares of the
-                // ranks that never received the op, so the delivered
-                // ranks' eventual completion (or watchdog timeout) still
-                // releases the in-flight slot instead of leaking it.
-                let undelivered = p - rank;
-                if shared.remaining.fetch_sub(undelivered, Ordering::AcqRel) == undelivered {
-                    self.inflight.fetch_sub(1, Ordering::AcqRel);
-                }
-                return Err(EngineError::WorkerGone { rank });
-            }
-        }
-        Ok(OpHandle { op_id: op_tag, p, rx })
+        let (op_id, rx) =
+            self.fuser.lock().unwrap().submit_op(req.kind, &req.op, op, req.inputs, m)?;
+        Ok(OpHandle { op_id, p, rx, fuser: self.fuser.clone() })
     }
 
     /// Run `f(rank, endpoint)` once on every worker and collect the
@@ -563,6 +712,9 @@ impl<T: Elem> CollectiveEngine<T> {
         R: Send + 'static,
         F: Fn(usize, &mut Endpoint<T>) -> R + Send + Sync + 'static,
     {
+        // Jobs run inline on otherwise-idle workers; a batched op left
+        // pending would be stranded behind them, so dispatch it first.
+        self.fuser.lock().unwrap().flush(FlushReason::Forced);
         let f = Arc::new(f);
         let (tx, rx) = channel::<(usize, Box<dyn Any + Send>)>();
         for rank in 0..self.p {
@@ -593,10 +745,17 @@ impl<T: Elem> CollectiveEngine<T> {
     }
 
     /// Ask every worker to finish its in-flight operations and exit, then
-    /// join them. Propagates worker panics. Idempotent.
+    /// join them. A pending fused batch is dispatched first so its
+    /// members complete rather than strand. Propagates worker panics.
+    /// Idempotent.
     pub fn shutdown(&mut self) {
         if self.workers.is_empty() {
             return;
+        }
+        {
+            let mut fuser = self.fuser.lock().unwrap();
+            fuser.flush(FlushReason::Forced);
+            fuser.shut_down = true;
         }
         for tx in &self.txs {
             let _ = tx.send(WorkerCmd::Shutdown);
@@ -623,8 +782,34 @@ impl<T: Elem> Drop for CollectiveEngine<T> {
     }
 }
 
+/// Most segment buffers a worker keeps around for fused runs — enough to
+/// cover a window of interleaved fused batches without unbounded hoard.
+const SEGMENT_POOL_CAP: usize = 4;
+
+/// Check a segment buffer with at least `need` capacity out of the
+/// worker-local pool (or allocate one — a one-time warm-up cost per
+/// capacity class, like the transport's payload pools).
+fn take_segment<T: Elem>(pool: &mut Vec<Vec<T>>, need: usize) -> Vec<T> {
+    if let Some(i) = pool.iter().position(|b| b.capacity() >= need) {
+        let mut buf = pool.swap_remove(i);
+        buf.clear();
+        buf
+    } else {
+        Vec::with_capacity(need)
+    }
+}
+
+/// Return a spent segment buffer to the worker-local pool.
+fn recycle_segment<T: Elem>(pool: &mut Vec<Vec<T>>, buf: Vec<T>) {
+    if buf.capacity() > 0 && pool.len() < SEGMENT_POOL_CAP {
+        pool.push(buf);
+    }
+}
+
 /// The worker body: admit commands, round-robin poll the in-flight
 /// cursors with non-blocking steps, park per policy when nothing moved.
+/// Fused runs pack into (and recycle) worker-local pooled segment
+/// buffers, so steady-state fused traffic allocates nothing per batch.
 fn worker_loop<T: Elem>(
     rank: usize,
     mut ep: Endpoint<T>,
@@ -632,6 +817,7 @@ fn worker_loop<T: Elem>(
     park: ParkPolicy,
 ) {
     let mut active: Vec<ActiveOp<T>> = Vec::new();
+    let mut seg_pool: Vec<Vec<T>> = Vec::new();
     let mut shutting_down = false;
     loop {
         // Admit work. With nothing in flight, block on the queue (no
@@ -641,13 +827,17 @@ fn worker_loop<T: Elem>(
                 break;
             }
             match rx.recv() {
-                Ok(cmd) => admit(cmd, &mut active, &mut ep, rank, &mut shutting_down),
+                Ok(cmd) => {
+                    admit(cmd, &mut active, &mut seg_pool, &mut ep, rank, &mut shutting_down)
+                }
                 Err(_) => break, // engine dropped the sender: exit
             }
         }
         loop {
             match rx.try_recv() {
-                Ok(cmd) => admit(cmd, &mut active, &mut ep, rank, &mut shutting_down),
+                Ok(cmd) => {
+                    admit(cmd, &mut active, &mut seg_pool, &mut ep, rank, &mut shutting_down)
+                }
                 Err(TryRecvError::Empty) => break,
                 Err(TryRecvError::Disconnected) => {
                     shutting_down = true;
@@ -674,8 +864,9 @@ fn worker_loop<T: Elem>(
             ) {
                 Ok(Progress::Done) => {
                     made_progress = true;
-                    let buf = std::mem::take(&mut a.buf);
-                    a.finish(rank, Ok(buf));
+                    if let Some(segment) = a.finish_ok(rank) {
+                        recycle_segment(&mut seg_pool, segment);
+                    }
                     false
                 }
                 Ok(Progress::Pending) => {
@@ -691,7 +882,7 @@ fn worker_loop<T: Elem>(
                         let err = a.cursor.timeout_error(&a.plan.schedule, rank);
                         a.cursor.abort(&mut ep);
                         cleanup_failed_op(&mut ep, &mut a.buf, a.cursor.op_tag());
-                        a.finish(rank, Err(err));
+                        a.finish_err(rank, err);
                         made_progress = true;
                         false
                     } else {
@@ -704,7 +895,7 @@ fn worker_loop<T: Elem>(
                     // timed out the buffer is not safe to free.
                     cleanup_failed_op(&mut ep, &mut a.buf, a.cursor.op_tag());
                     made_progress = true;
-                    a.finish(rank, Err(e));
+                    a.finish_err(rank, e);
                     false
                 }
             }
@@ -741,6 +932,7 @@ fn cleanup_failed_op<T: Elem>(ep: &mut Endpoint<T>, buf: &mut Vec<T>, op_tag: u6
 fn admit<T: Elem>(
     cmd: WorkerCmd<T>,
     active: &mut Vec<ActiveOp<T>>,
+    seg_pool: &mut Vec<Vec<T>>,
     ep: &mut Endpoint<T>,
     rank: usize,
     shutting_down: &mut bool,
@@ -753,8 +945,31 @@ fn admit<T: Elem>(
                 plan: op.plan,
                 op: op.op,
                 buf: op.buf,
-                done: op.done,
-                shared: op.shared,
+                kind: ActiveKind::Single { done: op.done, shared: op.shared },
+                last_progress: 0,
+                deadline,
+            });
+        }
+        WorkerCmd::Fused(f) => {
+            // Pack this rank's member inputs into a pooled segment buffer
+            // (strided gather, block-major layout) — parallel across the
+            // p workers — then drive the fused run like any other op.
+            let mut buf = take_segment(seg_pool, f.layout.total);
+            buf.resize(f.layout.total, T::default());
+            for (j, share) in f.shares.iter().enumerate() {
+                kernels::pack_segments(&mut buf, &share.buf, &f.layout.spans[j]);
+            }
+            let deadline = Instant::now() + ep.timeout;
+            active.push(ActiveOp {
+                cursor: OpCursor::new(f.op_tag, 0),
+                plan: f.plan,
+                op: f.op,
+                buf,
+                kind: ActiveKind::Fused {
+                    allreduce: f.allreduce,
+                    layout: f.layout,
+                    shares: f.shares,
+                },
                 last_progress: 0,
                 deadline,
             });

@@ -21,6 +21,8 @@
 //! | `CCOLL_PJRT_CHUNK`           | usize? | unset   | PJRT engine chunk-bucket override |
 //! | `CCOLL_ENGINE_QUEUE_DEPTH`   | usize  | `0`     | engine in-flight op cap (0 = unbounded) |
 //! | `CCOLL_ENGINE_PARK`          | park   | `yield` | engine worker wait strategy |
+//! | `CCOLL_FUSION_MAX_BYTES`     | usize  | 65536   | fusion-tier batch byte budget (ops above it bypass the batcher) |
+//! | `CCOLL_FUSION_WINDOW`        | usize  | `8`     | fusion-tier flush window in completed engine steps (0 disables fusion) |
 //!
 //! Booleans accept `0|1|true|false|yes|no` (empty = unset = default).
 //! Integers accept decimal digits with optional `_` separators. Dtypes
@@ -60,6 +62,19 @@ pub struct EnvKnobs {
     /// (`CCOLL_ENGINE_PARK`: spin|yield|sleep). Per-engine override:
     /// `EngineConfig::park` / config key `engine.park`.
     pub engine_park: ParkPolicy,
+    /// Default fusion-tier batch byte budget (`CCOLL_FUSION_MAX_BYTES`):
+    /// a pending batch flushes before exceeding it, and any single op
+    /// larger than it bypasses the batcher entirely. Per-engine override:
+    /// `EngineConfig::fusion_max_bytes` / config key
+    /// `engine.fusion.max_bytes`.
+    pub fusion_max_bytes: usize,
+    /// Default fusion-tier flush window (`CCOLL_FUSION_WINDOW`), measured
+    /// in **completed engine steps** — not wall-clock: a pending batch is
+    /// flushed once this many operations have completed since it opened.
+    /// 0 disables fusion outright (a zero-step window could never
+    /// coalesce anything). Per-engine override:
+    /// `EngineConfig::fusion_window` / config key `engine.fusion.window`.
+    pub fusion_window: u64,
 }
 
 fn parse_bool(name: &str, raw: Option<&str>, default: bool) -> Result<bool, String> {
@@ -135,6 +150,16 @@ pub fn parse_from(get: impl Fn(&str) -> Option<String>) -> Result<EnvKnobs, Stri
             get("CCOLL_ENGINE_PARK").as_deref(),
             ParkPolicy::Yield,
         )?,
+        fusion_max_bytes: parse_usize(
+            "CCOLL_FUSION_MAX_BYTES",
+            get("CCOLL_FUSION_MAX_BYTES").as_deref(),
+            crate::engine::DEFAULT_FUSION_MAX_BYTES,
+        )?,
+        fusion_window: parse_usize(
+            "CCOLL_FUSION_WINDOW",
+            get("CCOLL_FUSION_WINDOW").as_deref(),
+            crate::engine::DEFAULT_FUSION_WINDOW as usize,
+        )? as u64,
     })
 }
 
@@ -171,6 +196,22 @@ mod tests {
         assert_eq!(k.pjrt_chunk, None);
         assert_eq!(k.engine_queue_depth, 0, "0 = unbounded");
         assert_eq!(k.engine_park, ParkPolicy::Yield);
+        assert_eq!(k.fusion_max_bytes, crate::engine::DEFAULT_FUSION_MAX_BYTES);
+        assert_eq!(k.fusion_window, crate::engine::DEFAULT_FUSION_WINDOW);
+    }
+
+    #[test]
+    fn fusion_knobs_parse_and_reject_loudly() {
+        let k =
+            with(&[("CCOLL_FUSION_MAX_BYTES", "16_384"), ("CCOLL_FUSION_WINDOW", "4")]).unwrap();
+        assert_eq!(k.fusion_max_bytes, 16_384);
+        assert_eq!(k.fusion_window, 4);
+        let k = with(&[("CCOLL_FUSION_WINDOW", "0")]).unwrap();
+        assert_eq!(k.fusion_window, 0, "0 must parse (it disables fusion)");
+        let err = with(&[("CCOLL_FUSION_MAX_BYTES", "big")]).unwrap_err();
+        assert!(err.contains("CCOLL_FUSION_MAX_BYTES") && err.contains("big"), "{err}");
+        let err = with(&[("CCOLL_FUSION_WINDOW", "-3")]).unwrap_err();
+        assert!(err.contains("CCOLL_FUSION_WINDOW") && err.contains("non-negative"), "{err}");
     }
 
     #[test]

@@ -22,6 +22,8 @@
 //!     the executor (`CollectiveError::BadPayload`), not per kernel call;
 //!     kernels only `debug_assert!` the contract (see `ops::ReduceOp`).
 
+use std::ops::Range;
+
 use crate::datatypes::Elem;
 
 /// Elements per cache tile (16 KiB for 4-byte, 32 KiB for 8-byte elements
@@ -211,6 +213,44 @@ impl Kernel {
     }
 }
 
+// ---------------------------------------------------------------------
+// Fused-batch pack/scatter kernels (the engine's fusion tier)
+// ---------------------------------------------------------------------
+
+/// One copy directive of a fused-batch layout: the *member-local* element
+/// range and the offset where those elements live in the fused vector.
+/// A member participating in a fused collective over `p` ranks has one
+/// span per owner block (its block `g` lands inside fused block `g`), so
+/// the engine's `FusedLayout` holds `p` spans per member and the spans of
+/// all members tile the fused vector exactly once.
+pub type SegmentSpan = (Range<usize>, usize);
+
+/// Strided gather of one member's input into the fused vector:
+/// `fused[dst .. dst + src.len()] ← member[src]` for every span. Spans
+/// with empty source ranges (zero-size blocks, zero-length member ops)
+/// copy nothing — the empty-payload audit holds through packing.
+#[inline]
+pub fn pack_segments<T: Elem>(fused: &mut [T], member: &[T], spans: &[SegmentSpan]) {
+    for (src, dst) in spans {
+        debug_assert!(src.end <= member.len(), "pack span {src:?} out of member bounds");
+        fused[*dst..*dst + src.len()].copy_from_slice(&member[src.clone()]);
+    }
+}
+
+/// Exact inverse of [`pack_segments`] for the spans given: scatter the
+/// fused result segments back into the member's buffer with per-op
+/// offsets — `member[src] ← fused[dst .. dst + src.len()]`. A fused
+/// allreduce scatters every span (the full member vector); a fused
+/// reduce-scatter scatters only the member's owned-block span at each
+/// rank.
+#[inline]
+pub fn scatter_segments<T: Elem>(member: &mut [T], fused: &[T], spans: &[SegmentSpan]) {
+    for (src, dst) in spans {
+        debug_assert!(src.end <= member.len(), "scatter span {src:?} out of member bounds");
+        member[src.clone()].copy_from_slice(&fused[*dst..*dst + src.len()]);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -355,6 +395,98 @@ mod tests {
             let mut want = a.clone();
             k.combine(&mut want, &b);
             assert_eq!(dst, want, "{}", k.name());
+        }
+    }
+
+    /// Hand-build the fused block-major layout for members with regular
+    /// partitions — the same geometry `engine::fusion::FusedLayout`
+    /// derives — so the kernels are testable in isolation.
+    fn block_major_spans(lens: &[usize], p: usize) -> (Vec<Vec<SegmentSpan>>, usize) {
+        let parts: Vec<crate::datatypes::BlockPartition> =
+            lens.iter().map(|&m| crate::datatypes::BlockPartition::regular(p, m)).collect();
+        let total: usize = lens.iter().sum();
+        let mut spans: Vec<Vec<SegmentSpan>> = vec![Vec::with_capacity(p); lens.len()];
+        let mut cursor = 0usize;
+        for g in 0..p {
+            for (j, part) in parts.iter().enumerate() {
+                spans[j].push((part.range(g), cursor));
+                cursor += part.size(g);
+            }
+        }
+        assert_eq!(cursor, total);
+        (spans, total)
+    }
+
+    #[test]
+    fn pack_then_scatter_is_identity_mixed_lengths() {
+        // Three members of mixed lengths, including a zero-length one:
+        // pack tiles the fused vector exactly, scatter inverts exactly.
+        let mut rng = SplitMix64::new(40);
+        let p = 4;
+        let lens = [13usize, 0, 7];
+        let (spans, total) = block_major_spans(&lens, p);
+        let members: Vec<Vec<i64>> =
+            lens.iter().map(|&m| int_vec(&mut rng, m, -99, 99)).collect();
+        let mut fused = vec![i64::MIN; total];
+        for (j, m) in members.iter().enumerate() {
+            pack_segments(&mut fused, m, &spans[j]);
+        }
+        assert!(!fused.contains(&i64::MIN), "pack must cover the whole fused vector");
+        for (j, m) in members.iter().enumerate() {
+            let mut back = vec![0i64; m.len()];
+            scatter_segments(&mut back, &fused, &spans[j]);
+            assert_eq!(&back, m, "member {j} did not round-trip");
+        }
+    }
+
+    #[test]
+    fn combine_over_fused_segments_matches_per_member_combines() {
+        // ⊕ applied to the packed fused vectors equals ⊕ applied to each
+        // member separately — the algebraic fact the fusion tier rests on.
+        let mut rng = SplitMix64::new(41);
+        let p = 3;
+        let lens = [9usize, 4, 11];
+        let (spans, total) = block_major_spans(&lens, p);
+        for k in ALL {
+            let a: Vec<Vec<i64>> = lens.iter().map(|&m| int_vec(&mut rng, m, -9, 9)).collect();
+            let b: Vec<Vec<i64>> = lens.iter().map(|&m| int_vec(&mut rng, m, -9, 9)).collect();
+            let pack = |ms: &[Vec<i64>]| {
+                let mut fused = vec![0i64; total];
+                for (j, m) in ms.iter().enumerate() {
+                    pack_segments(&mut fused, m, &spans[j]);
+                }
+                fused
+            };
+            let mut fused = pack(&a);
+            k.combine(&mut fused, &pack(&b));
+            for (j, (av, bv)) in a.iter().zip(&b).enumerate() {
+                let mut want = av.clone();
+                k.combine(&mut want, bv);
+                let mut got = vec![0i64; want.len()];
+                scatter_segments(&mut got, &fused, &spans[j]);
+                assert_eq!(got, want, "{} member {j}", k.name());
+            }
+        }
+    }
+
+    #[test]
+    fn scatter_of_single_span_touches_only_that_range() {
+        // The fused reduce-scatter path scatters one owned-block span;
+        // every other element of the member buffer must stay untouched.
+        let p = 4;
+        let lens = [10usize];
+        let (spans, total) = block_major_spans(&lens, p);
+        let fused: Vec<i64> = (0..total as i64).collect();
+        let mut member = vec![-1i64; 10];
+        let rank = 2;
+        scatter_segments(&mut member, &fused, &spans[0][rank..rank + 1]);
+        let (src, dst) = &spans[0][rank];
+        for (i, &v) in member.iter().enumerate() {
+            if src.contains(&i) {
+                assert_eq!(v, fused[dst + (i - src.start)]);
+            } else {
+                assert_eq!(v, -1, "element {i} outside the span was written");
+            }
         }
     }
 }

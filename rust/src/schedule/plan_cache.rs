@@ -87,16 +87,42 @@ pub struct PlanCacheStats {
 /// its plan map without limit.
 pub const DEFAULT_PLAN_CACHE_CAPACITY: usize = 1024;
 
+/// One resident plan plus the logical timestamp of its last use — the
+/// bookkeeping the LRU eviction policy runs on.
+#[derive(Debug)]
+struct Entry {
+    plan: Arc<Plan>,
+    /// Value of [`Inner::tick`] at the entry's last hit (or insert).
+    stamp: u64,
+}
+
+/// The mutable half of the cache, under one lock: the plan map and the
+/// monotone use counter that stamps entries.
+#[derive(Debug, Default)]
+struct Inner {
+    map: HashMap<PlanKey, Entry>,
+    tick: u64,
+}
+
 /// Thread-safe memo of built plans. Cheap to share: clone the `Arc` the
 /// launcher/engine wraps it in.
 ///
-/// Bounded: when full, inserting a new plan evicts an arbitrary resident
-/// entry (plans are cheap to rebuild, so a simple bound beats LRU
-/// bookkeeping on the submission path; evictions are counted in
-/// [`PlanCacheStats`]).
+/// Bounded with a **timestamp-counter LRU**: every lookup stamps its
+/// entry with a monotone use counter, and inserting into a full cache
+/// evicts the entry with the oldest stamp (evictions are counted in
+/// [`PlanCacheStats`]). The stamp update is one store under the lock the
+/// lookup already holds, so the *hit* path pays nothing extra — while
+/// hot plans (the fusion tier's repeated batch shapes, a serving
+/// engine's steady geometry mix) survive eviction pressure from a churn
+/// of one-off shapes instead of being evicted arbitrarily. Eviction
+/// itself is an O(capacity) min-stamp scan, deliberately: it runs only
+/// on an insert at capacity, i.e. on a miss that just paid a full
+/// schedule *build* (orders of magnitude more than scanning ≤1024
+/// stamps), so linked-list LRU bookkeeping on every hit would cost more
+/// than it saves.
 #[derive(Debug)]
 pub struct PlanCache {
-    plans: Mutex<HashMap<PlanKey, Arc<Plan>>>,
+    inner: Mutex<Inner>,
     capacity: usize,
     hits: AtomicU64,
     misses: AtomicU64,
@@ -117,7 +143,7 @@ impl PlanCache {
     /// A cache holding at most `capacity` plans (0 = unbounded).
     pub fn with_capacity(capacity: usize) -> Self {
         Self {
-            plans: Mutex::new(HashMap::new()),
+            inner: Mutex::new(Inner::default()),
             capacity,
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
@@ -140,12 +166,19 @@ impl PlanCache {
         build: impl FnOnce() -> Schedule,
     ) -> (Arc<Plan>, bool) {
         let mut collision = false;
-        if let Some(plan) = self.plans.lock().unwrap().get(&key) {
-            if plan.part == *part {
-                self.hits.fetch_add(1, Ordering::Relaxed);
-                return (plan.clone(), true);
+        {
+            let mut inner = self.inner.lock().unwrap();
+            inner.tick += 1;
+            let tick = inner.tick;
+            if let Some(entry) = inner.map.get_mut(&key) {
+                if entry.plan.part == *part {
+                    // LRU stamp: a hit marks the entry most-recently-used.
+                    entry.stamp = tick;
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    return (entry.plan.clone(), true);
+                }
+                collision = true;
             }
-            collision = true;
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
         let plan = Arc::new(Plan { schedule: build(), part: part.clone() });
@@ -153,24 +186,30 @@ impl PlanCache {
             // Never cached: the slot is owned by the other layout.
             return (plan, false);
         }
-        let mut map = self.plans.lock().unwrap();
-        if let Some(existing) = map.get(&key) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some(existing) = inner.map.get_mut(&key) {
             // Raced with another builder; adopt the winner if its layout
-            // matches (it does unless we also collided).
-            if existing.part == *part {
-                return (existing.clone(), false);
+            // matches (it does unless we also collided). Adoption is a
+            // use, so it refreshes the entry's LRU stamp.
+            if existing.plan.part == *part {
+                existing.stamp = tick;
+                return (existing.plan.clone(), false);
             }
             return (plan, false);
         }
-        // Capacity bound: evict an arbitrary resident entry before
-        // inserting (see the type docs for why not LRU).
-        if self.capacity > 0 && map.len() >= self.capacity {
-            if let Some(victim) = map.keys().next().cloned() {
-                map.remove(&victim);
+        // Capacity bound: evict the least-recently-used resident entry
+        // (oldest stamp) before inserting.
+        if self.capacity > 0 && inner.map.len() >= self.capacity {
+            if let Some(victim) =
+                inner.map.iter().min_by_key(|(_, e)| e.stamp).map(|(k, _)| k.clone())
+            {
+                inner.map.remove(&victim);
                 self.evictions.fetch_add(1, Ordering::Relaxed);
             }
         }
-        map.insert(key, plan.clone());
+        inner.map.insert(key, Entry { plan: plan.clone(), stamp: tick });
         (plan, false)
     }
 
@@ -180,13 +219,13 @@ impl PlanCache {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
             evictions: self.evictions.load(Ordering::Relaxed),
-            entries: self.plans.lock().unwrap().len(),
+            entries: self.inner.lock().unwrap().map.len(),
         }
     }
 
     /// Drop every cached plan (counters are kept).
     pub fn clear(&self) {
-        self.plans.lock().unwrap().clear();
+        self.inner.lock().unwrap().map.clear();
     }
 }
 
@@ -280,6 +319,39 @@ mod tests {
             sched.clone()
         });
         assert_eq!(plan.part, part);
+    }
+
+    #[test]
+    fn eviction_order_is_least_recently_used() {
+        // Capacity 3: insert A, B, C, then *touch* A (a hit refreshes its
+        // LRU stamp). Inserting D must evict B — the least recently used
+        // — never the hot A (what the old arbitrary-evict policy could
+        // do to a fusion tier's hottest batch shape).
+        let cache = PlanCache::with_capacity(3);
+        let shapes: Vec<(BlockPartition, Schedule)> =
+            (0..4).map(|i| build(3, 30 + i, true)).collect();
+        let key = |i: usize| PlanKey::new("ar", 3, &shapes[i].0, DType::F32);
+        for (i, (part, sched)) in shapes.iter().enumerate().take(3) {
+            let (_, hit) = cache.get_or_build(key(i), part, || sched.clone());
+            assert!(!hit, "insert {i}");
+        }
+        // Touch A (shape 0): now B (shape 1) is the oldest use.
+        let (_, hit) = cache.get_or_build(key(0), &shapes[0].0, || unreachable!());
+        assert!(hit, "A must hit");
+        // Insert D (shape 3): evicts exactly one entry — B.
+        cache.get_or_build(key(3), &shapes[3].0, || shapes[3].1.clone());
+        assert_eq!(cache.stats().evictions, 1);
+        assert_eq!(cache.stats().entries, 3);
+        // Survivors first (hits don't mutate residency) — then prove B is
+        // gone (its lookup is a miss, which re-inserts it and bumps the
+        // eviction count once more).
+        for i in [0usize, 2, 3] {
+            let (_, hit) = cache.get_or_build(key(i), &shapes[i].0, || shapes[i].1.clone());
+            assert!(hit, "shape {i}: LRU must have kept A/C/D");
+        }
+        let (_, hit) = cache.get_or_build(key(1), &shapes[1].0, || shapes[1].1.clone());
+        assert!(!hit, "B must have been the eviction victim");
+        assert_eq!(cache.stats().evictions, 2);
     }
 
     #[test]

@@ -9,6 +9,7 @@ pub struct Summary {
     pub mean: f64,
     pub median: f64,
     pub p95: f64,
+    pub p99: f64,
     pub stddev: f64,
 }
 
@@ -28,6 +29,7 @@ impl Summary {
             mean,
             median: percentile_sorted(&s, 50.0),
             p95: percentile_sorted(&s, 95.0),
+            p99: percentile_sorted(&s, 99.0),
             stddev: var.sqrt(),
         }
     }
@@ -80,6 +82,10 @@ mod tests {
         assert_eq!(s.mean, 3.0);
         assert_eq!(s.median, 3.0);
         assert_eq!(s.n, 5);
+        // interpolated tail percentiles of [1..5]
+        assert!((s.p95 - 4.8).abs() < 1e-12);
+        assert!((s.p99 - 4.96).abs() < 1e-12);
+        assert!(s.p95 <= s.p99 && s.p99 <= s.max);
     }
 
     #[test]

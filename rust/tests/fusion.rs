@@ -1,0 +1,358 @@
+//! Fusion-tier correctness suite (ISSUE-5): a fused batch of mixed-length
+//! allreduces / reduce-scatters must be bit-identical to sequential
+//! unfused execution in the exact integer dtypes, across both copy tiers
+//! — including zero-length member ops (PR-3's empty-payload audit must
+//! hold through pack/scatter).
+//!
+//! CI runs this suite twice: as-is (rendezvous tier active where
+//! schedules allow) and under `CCOLL_NO_RENDEZVOUS=1` (pooled tier only).
+
+use std::sync::{Mutex, MutexGuard};
+
+use circulant_collectives::cli::main_with_args;
+use circulant_collectives::datatypes::{elem, BlockPartition, Elem};
+use circulant_collectives::engine::{CollectiveEngine, EngineConfig, OpRequest};
+use circulant_collectives::ops::SumOp;
+use circulant_collectives::util::json::Json;
+use circulant_collectives::util::rng::SplitMix64;
+
+/// Serialize tests that assert on the process-global rank-thread-spawn
+/// counter (`ccoll serve` does so internally).
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+fn int_inputs<T: Elem>(p: usize, m: usize, seed: u64) -> Vec<Vec<T>> {
+    let (lo, hi) = elem::test_value_bounds(T::DTYPE);
+    let mut rng = SplitMix64::new(seed);
+    (0..p).map(|_| elem::int_vec(&mut rng, m, lo, hi)).collect()
+}
+
+/// An engine whose pending batch only ever flushes when forced by a
+/// handle wait — deterministic batch composition for the tests.
+fn engine_with<T: Elem>(p: usize, rendezvous: bool, fusion: bool) -> CollectiveEngine<T> {
+    CollectiveEngine::new(
+        EngineConfig::new(p)
+            .rendezvous(rendezvous)
+            .rendezvous_min_elems(0)
+            .fusion(fusion)
+            .fusion_window(1_000_000)
+            .fusion_max_bytes(1 << 24),
+    )
+}
+
+/// Mixed-length member ops, including a zero-length one in the middle.
+fn member_lens(p: usize) -> Vec<usize> {
+    vec![4 * p + 3, 16, 0, 2 * p, 64, 1]
+}
+
+/// Run the given (kind, lens) workload: submit all, then wait in reverse
+/// submission order. With `fusion` on, the whole set rides one fused run
+/// (same kind + op, unbounded window); off, each op runs alone.
+fn run_batch<T: Elem>(
+    p: usize,
+    lens: &[usize],
+    allreduce: bool,
+    rendezvous: bool,
+    fusion: bool,
+    seed: u64,
+) -> Vec<Vec<Vec<T>>> {
+    let mut engine = engine_with::<T>(p, rendezvous, fusion);
+    let handles: Vec<_> = lens
+        .iter()
+        .enumerate()
+        .map(|(i, &m)| {
+            let inputs = int_inputs::<T>(p, m, seed.wrapping_mul(131).wrapping_add(i as u64));
+            let req = if allreduce {
+                OpRequest::allreduce(inputs, "sum")
+            } else {
+                OpRequest::reduce_scatter(inputs, "sum")
+            };
+            engine.submit(req).unwrap()
+        })
+        .collect();
+    let n = handles.len();
+    let mut out: Vec<Option<Vec<Vec<T>>>> = (0..n).map(|_| None).collect();
+    for (i, handle) in handles.into_iter().enumerate().rev() {
+        out[i] = Some(handle.wait().unwrap());
+    }
+    if fusion {
+        let s = engine.fusion_stats();
+        assert_eq!(s.batches, 1, "the whole set must ride one fused run: {s:?}");
+        assert_eq!(s.fused_ops as usize, lens.len(), "{s:?}");
+    }
+    engine.shutdown();
+    out.into_iter().map(|r| r.unwrap()).collect()
+}
+
+#[test]
+fn fused_allreduce_bit_identical_to_unfused_i64_both_tiers() {
+    let _serial = serial();
+    for p in [2usize, 5, 8] {
+        for rendezvous in [true, false] {
+            let lens = member_lens(p);
+            let fused = run_batch::<i64>(p, &lens, true, rendezvous, true, 9 + p as u64);
+            let unfused = run_batch::<i64>(p, &lens, true, rendezvous, false, 9 + p as u64);
+            assert_eq!(
+                fused, unfused,
+                "p={p} rendezvous={rendezvous}: fused allreduce ≠ unfused (bit-exact i64)"
+            );
+        }
+    }
+}
+
+#[test]
+fn fused_allreduce_bit_identical_to_unfused_u64() {
+    let _serial = serial();
+    let p = 5;
+    let lens = member_lens(p);
+    for rendezvous in [true, false] {
+        let fused = run_batch::<u64>(p, &lens, true, rendezvous, true, 77);
+        let unfused = run_batch::<u64>(p, &lens, true, rendezvous, false, 77);
+        assert_eq!(fused, unfused, "rendezvous={rendezvous}: u64 fused batch diverged");
+    }
+}
+
+#[test]
+fn fused_reduce_scatter_owned_blocks_bit_identical_and_oracle_exact() {
+    let _serial = serial();
+    // Reduce-scatter semantics: block r is finished at rank r. The fused
+    // run must deliver each member's owned block bit-identical to the
+    // unfused run AND to the wrapping scalar fold of its own inputs.
+    for p in [2usize, 5, 8] {
+        for rendezvous in [true, false] {
+            let lens = member_lens(p);
+            let fused = run_batch::<i64>(p, &lens, false, rendezvous, true, 40 + p as u64);
+            let unfused = run_batch::<i64>(p, &lens, false, rendezvous, false, 40 + p as u64);
+            for (i, &m) in lens.iter().enumerate() {
+                let seed = (40 + p as u64).wrapping_mul(131).wrapping_add(i as u64);
+                let inputs = int_inputs::<i64>(p, m, seed);
+                let mut want = vec![0i64; m];
+                for v in &inputs {
+                    SumOp.combine(&mut want, v);
+                }
+                let part = BlockPartition::regular(p, m);
+                for r in 0..p {
+                    let range = part.range(r);
+                    assert_eq!(
+                        &fused[i][r][range.clone()],
+                        &unfused[i][r][range.clone()],
+                        "p={p} rendezvous={rendezvous} op {i} rank {r}: fused ≠ unfused"
+                    );
+                    assert_eq!(
+                        &fused[i][r][range.clone()],
+                        &want[range],
+                        "p={p} rendezvous={rendezvous} op {i} rank {r}: fused ≠ oracle"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn zero_length_member_survives_pack_scatter() {
+    let _serial = serial();
+    // Explicit regression for the empty-payload audit through the fusion
+    // tier: an m=0 member inside a real batch resolves to an empty result
+    // on every rank, and its neighbors are unaffected.
+    let p = 4;
+    let mut engine = engine_with::<i64>(p, true, true);
+    let a = int_inputs::<i64>(p, 24, 1);
+    let mut want_a = vec![0i64; 24];
+    for v in &a {
+        SumOp.combine(&mut want_a, v);
+    }
+    let empty: Vec<Vec<i64>> = vec![Vec::new(); p];
+    let b = int_inputs::<i64>(p, 7, 2);
+    let mut want_b = vec![0i64; 7];
+    for v in &b {
+        SumOp.combine(&mut want_b, v);
+    }
+    let ha = engine.submit(OpRequest::allreduce(a, "sum")).unwrap();
+    let he = engine.submit(OpRequest::allreduce(empty, "sum")).unwrap();
+    let hb = engine.submit(OpRequest::allreduce(b, "sum")).unwrap();
+    let out_e = he.wait().unwrap();
+    for (r, buf) in out_e.iter().enumerate() {
+        assert!(buf.is_empty(), "rank {r}: zero-length member must stay empty");
+    }
+    for buf in ha.wait().unwrap() {
+        assert_eq!(buf, want_a);
+    }
+    for buf in hb.wait().unwrap() {
+        assert_eq!(buf, want_b);
+    }
+    assert_eq!(engine.fusion_stats().batches, 1);
+    engine.shutdown();
+}
+
+#[test]
+fn mixed_kind_traffic_fuses_per_kind_and_stays_exact() {
+    let _serial = serial();
+    // Alternating allreduce / reduce-scatter: each kind switch flushes the
+    // pending batch, results stay oracle-exact throughout.
+    let p = 4;
+    let mut engine = engine_with::<i64>(p, true, true);
+    let mut handles = Vec::new();
+    let mut oracles = Vec::new();
+    let mut kinds = Vec::new();
+    let mut sizes = Vec::new();
+    for i in 0..12u64 {
+        let m = [16usize, 33, 8][i as usize % 3];
+        let inputs = int_inputs::<i64>(p, m, 600 + i);
+        let mut want = vec![0i64; m];
+        for v in &inputs {
+            SumOp.combine(&mut want, v);
+        }
+        let allreduce = (i / 2) % 2 == 0; // pairs: ar, ar, rs, rs, …
+        let req = if allreduce {
+            OpRequest::allreduce(inputs, "sum")
+        } else {
+            OpRequest::reduce_scatter(inputs, "sum")
+        };
+        handles.push(engine.submit(req).unwrap());
+        oracles.push(want);
+        kinds.push(allreduce);
+        sizes.push(m);
+    }
+    for (i, handle) in handles.into_iter().enumerate() {
+        let out = handle.wait().unwrap();
+        let part = BlockPartition::regular(p, sizes[i]);
+        for (r, buf) in out.iter().enumerate() {
+            if kinds[i] {
+                assert_eq!(buf, &oracles[i], "op {i} rank {r}");
+            } else {
+                let range = part.range(r);
+                assert_eq!(&buf[range.clone()], &oracles[i][range], "op {i} rank {r}");
+            }
+        }
+    }
+    let s = engine.fusion_stats();
+    assert!(s.batches >= 2, "kind alternation must still form batches: {s:?}");
+    assert!(s.flush_incompatible >= 1, "kind switches must flush: {s:?}");
+    engine.shutdown();
+}
+
+#[test]
+fn fused_plan_cache_hits_on_repeated_batch_shapes() {
+    let _serial = serial();
+    let p = 4;
+    let mut engine = engine_with::<i64>(p, true, true);
+    for round in 0..3u64 {
+        let handles: Vec<_> = [8usize, 24, 8]
+            .iter()
+            .enumerate()
+            .map(|(i, &m)| {
+                let inputs = int_inputs::<i64>(p, m, 900 + round * 10 + i as u64);
+                engine.submit(OpRequest::allreduce(inputs, "sum")).unwrap()
+            })
+            .collect();
+        for h in handles {
+            h.wait().unwrap();
+        }
+    }
+    let s = engine.fusion_stats();
+    assert_eq!(s.batches, 3, "{s:?}");
+    assert_eq!(s.plan_misses, 1, "one build for the repeated batch shape: {s:?}");
+    assert_eq!(s.plan_hits, 2, "rounds 2 and 3 must hit the fused plan: {s:?}");
+    engine.shutdown();
+}
+
+#[test]
+fn fusion_soak_spawns_once_and_reuses_plans() {
+    let _serial = serial();
+    // 400 mixed small ops through one fused engine: spawn-once plus a
+    // bounded plan set (few distinct batch shapes are NOT guaranteed —
+    // batch composition varies — but fused plans must hit eventually).
+    let p = 4;
+    let before = circulant_collectives::transport::rank_threads_spawned();
+    let mut engine = CollectiveEngine::<i64>::new(
+        EngineConfig::new(p).fusion(true).fusion_window(8).fusion_max_bytes(1 << 16),
+    );
+    let mut window = std::collections::VecDeque::new();
+    let mut rng = SplitMix64::new(321);
+    for i in 0..400u64 {
+        let m = [8usize, 16, 32][rng.next_below(3)];
+        let inputs = int_inputs::<i64>(p, m, 5000 + i);
+        let req = if rng.next_below(2) == 0 {
+            OpRequest::allreduce(inputs, "sum")
+        } else {
+            OpRequest::reduce_scatter(inputs, "sum")
+        };
+        window.push_back(engine.submit(req).unwrap());
+        if window.len() >= 16 {
+            window.pop_front().unwrap().wait().unwrap();
+        }
+    }
+    while let Some(h) = window.pop_front() {
+        h.wait().unwrap();
+    }
+    let s = engine.fusion_stats();
+    engine.shutdown();
+    let spawned = circulant_collectives::transport::rank_threads_spawned() - before;
+    assert_eq!(spawned, p as u64, "fusion must not add any thread spawns");
+    assert!(s.batches > 0, "400 compatible-rich ops must form batches: {s:?}");
+    assert!(s.plan_hits > 0, "repeated shapes must hit the fused plan cache: {s:?}");
+}
+
+// ---------------------------------------------------------------------
+// `ccoll serve --fuse` — the replay driver end-to-end.
+// ---------------------------------------------------------------------
+
+fn args(s: &[&str]) -> Vec<String> {
+    s.iter().map(|x| x.to_string()).collect()
+}
+
+#[test]
+fn serve_fuse_soaks_and_reports_percentiles_and_fusion_stats() {
+    let _serial = serial();
+    let dir = std::env::temp_dir();
+    let json_path = dir.join(format!("ccoll_serve_fuse_{}.json", std::process::id()));
+    main_with_args(args(&[
+        "serve",
+        "--fuse",
+        "--serve.p",
+        "4",
+        "--serve.ops",
+        "300",
+        "--serve.m",
+        "128",
+        "--serve.inflight",
+        "16",
+        "--serve.json",
+        json_path.to_str().unwrap(),
+    ]))
+    .unwrap();
+    let doc = Json::parse(&std::fs::read_to_string(&json_path).unwrap()).unwrap();
+    std::fs::remove_file(&json_path).ok();
+    // Latency percentiles recorded in the serve JSON output.
+    for key in ["lat_mean_s", "lat_p50_s", "lat_p95_s", "lat_p99_s", "ops_per_sec"] {
+        let v = doc.req(key).as_f64().unwrap_or_else(|| panic!("{key} must be numeric"));
+        assert!(v.is_finite() && v >= 0.0, "{key} = {v}");
+    }
+    assert_eq!(doc.req("dtype").as_str(), Some("f32"));
+    assert_eq!(doc.req("ops").as_usize(), Some(300));
+    let fusion = doc.req("fusion");
+    assert!(fusion.req("batches").as_usize().unwrap() > 0, "soak must fuse");
+    assert!(fusion.req("plan_hits").as_usize().unwrap() > 0, "fused plans must hit");
+    assert_eq!(doc.req("rank_threads_spawned").as_usize(), Some(4), "spawn-once through --fuse");
+}
+
+#[test]
+fn serve_fuse_rejects_zero_window() {
+    let _serial = serial();
+    let err = main_with_args(args(&[
+        "serve",
+        "--fuse",
+        "--serve.p",
+        "2",
+        "--serve.ops",
+        "4",
+        "--engine.fusion.window",
+        "0",
+    ]))
+    .unwrap_err();
+    assert!(err.to_string().contains("window 0"), "{err}");
+}
