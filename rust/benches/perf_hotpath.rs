@@ -418,6 +418,13 @@ fn main() {
         t.print();
         let (_, rdv_wall, rdv_bytes) = results[0];
         let (_, pooled_wall, pooled_bytes) = results[1];
+        // Copy crediting is routed through the Transport trait; if any
+        // backend or tier stops reporting, this ablation would silently
+        // compare zeros.
+        assert!(
+            pooled_bytes > 0,
+            "pooled tier must report copied payload bytes (bytes_copied crediting broke)"
+        );
         let copy_ratio = pooled_bytes as f64 / rdv_bytes.max(1) as f64;
         let speedup = pooled_wall / rdv_wall;
         report.num("copy_ratio_pooled_over_rendezvous", copy_ratio);

@@ -14,6 +14,10 @@
 //!   validate   Theorem 1/2 counter + correctness sweep over a p range,
 //!              plus an exact data-path check in the configured dtype
 //!   train      end-to-end data-parallel training (PJRT compute + Alg 2)
+//!   launch     run THIS process as one rank of a multi-process collective
+//!              over the Unix-domain-socket transport (`--backend uds`),
+//!              or all ranks in-process (`--backend thread`) — the
+//!              cross-backend acceptance driver
 //!
 //! Global flags: `--config FILE` and `--key value` overrides (see
 //! `crate::config`). Unknown `run.op` / `run.algorithm` / `run.dtype`
@@ -60,6 +64,11 @@ commands:
                            search.beam)
   train                    E2E data-parallel training (keys: train.workers
                            train.steps train.lr train.backend)
+  launch                   one rank of a multi-process collective over UDS
+                           (keys: --backend thread|uds --rank R --world P
+                           --dir SOCKDIR launch.m launch.seed launch.verify
+                           run.dtype transport.backend; thread backend runs
+                           every rank in this one process)
 ";
 
 /// Entry point: parse args, dispatch. Returns the process exit code.
@@ -89,6 +98,7 @@ pub fn main_with_args(args: Vec<String>) -> Result<()> {
         "validate" => cmd_validate(&cfg),
         "search" => cmd_search(&cfg),
         "train" => cmd_train(&cfg),
+        "launch" => cmd_launch(&cfg),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
             Ok(())
@@ -126,6 +136,31 @@ fn cmd_info(cfg: &Config) -> Result<()> {
     t.print();
     println!("integer ⊕ is wrapping (exactly associative — bit-exact oracles);");
     println!("float ⊕ is IEEE (non-associative — fixed-schedule reproducibility only).");
+    // The registered transport backends and their capability flags, the
+    // same enumerate-from-the-registry discipline as the kernel matrix:
+    // a newly added backend can never leave this table stale. The
+    // executor consults exactly these flags when picking a copy tier
+    // (rendezvous → pooled → framed copy).
+    let active = crate::env_knobs::knobs().transport_backend;
+    let mut bt = Table::new(
+        "transport backends (capability flags)",
+        &["backend", "rendezvous", "loaned buffers", "max inline", "active"],
+    );
+    for b in crate::transport::backends() {
+        let caps = b.caps();
+        bt.row(&[
+            b.name().to_string(),
+            if caps.supports_rendezvous { "yes (zero-copy tier)".into() } else { "no".into() },
+            if caps.supports_loaned_buffers { "yes (pooled tier)".into() } else { "no".into() },
+            if caps.max_inline_bytes == usize::MAX {
+                "unbounded".into()
+            } else {
+                caps.max_inline_bytes.to_string()
+            },
+            if *b == active { "← CCOLL_TRANSPORT".into() } else { String::new() },
+        ]);
+    }
+    bt.print();
     // Every CCOLL_* knob with its resolved value (parsed once per process
     // by env_knobs; malformed values abort before we get here).
     let k = crate::env_knobs::knobs();
@@ -178,6 +213,14 @@ fn cmd_info(cfg: &Config) -> Result<()> {
         "CCOLL_FUSION_WINDOW".into(),
         k.fusion_window.to_string(),
         "fusion flush window in completed engine steps (0 = off)".into(),
+    ]);
+    kt.row(&[
+        "CCOLL_TRANSPORT".into(),
+        k.transport_backend.name().to_string(),
+        format!(
+            "default transport backend ({})",
+            crate::transport::TransportBackend::NAMES_HELP
+        ),
     ]);
     kt.print();
     let n: usize = cfg.entries().count();
@@ -847,5 +890,151 @@ fn cmd_train(cfg: &Config) -> Result<()> {
         "loss {:.4} → {:.4}; grad allreduce: {} rounds/step, {} elems/step/worker",
         report.first_loss, report.final_loss, report.rounds_per_allreduce, report.grad_elems_per_step
     );
+    Ok(())
+}
+
+fn cmd_launch(cfg: &Config) -> Result<()> {
+    match cfg.dtype()? {
+        DType::F32 => cmd_launch_typed::<f32>(cfg),
+        DType::F64 => cmd_launch_typed::<f64>(cfg),
+        DType::I32 => cmd_launch_typed::<i32>(cfg),
+        DType::I64 => cmd_launch_typed::<i64>(cfg),
+        DType::U64 => cmd_launch_typed::<u64>(cfg),
+    }
+}
+
+/// The multi-process bootstrap driver: run this process as ONE rank of a
+/// p-process allreduce over the Unix-domain-socket transport, verify the
+/// result against the scalar sum oracle AND against an in-process
+/// thread-backend run of the same schedule (bit-identity — the schedule
+/// fixes the ⊕ association, so only the wire differs between backends).
+/// Every process regenerates all p ranks' inputs deterministically from
+/// the seed, so no input distribution step is needed. With
+/// `--backend thread` the same collective runs entirely in this process —
+/// the oracle side of the cross-backend acceptance gate.
+fn cmd_launch_typed<T: Elem>(cfg: &Config) -> Result<()> {
+    use crate::collectives::{allreduce_schedule, execute_rank, run_schedule_threads_typed};
+    use crate::transport::uds::UdsTransport;
+    use crate::transport::{Transport, TransportBackend};
+    use std::path::Path;
+
+    // `--backend` is the bootstrap shorthand for `transport.backend`;
+    // both spellings go through the same loud enumerate-on-error parse.
+    let backend = match cfg.get("backend") {
+        Some(name) => TransportBackend::parse(name).ok_or_else(|| {
+            anyhow!("unknown --backend {name:?} (valid: {})", TransportBackend::NAMES_HELP)
+        })?,
+        None => cfg.transport_backend()?,
+    };
+    let world = match cfg.get("launch.world").or_else(|| cfg.get("world")) {
+        Some(v) => v
+            .replace('_', "")
+            .parse::<usize>()
+            .map_err(|_| anyhow!("bad --world {v:?} (want a positive integer)"))?,
+        None => 4,
+    };
+    if world == 0 {
+        bail!("--world must be ≥ 1");
+    }
+    let m = cfg.get_usize("launch.m", 1 << 12)?;
+    let seed = cfg.get_usize("launch.seed", 1)? as u64;
+    let verify = cfg.get_bool("launch.verify", true)?;
+
+    // Deterministic inputs for ALL ranks from the seed — every process
+    // computes the same vectors, its own rank's share, the scalar oracle
+    // and the thread-backend cross-check without exchanging a byte of
+    // input data.
+    let (lo, hi) = elem::test_value_bounds(T::DTYPE);
+    let mut rng = SplitMix64::new(seed);
+    let inputs: Vec<Vec<T>> = (0..world).map(|_| elem::int_vec(&mut rng, m, lo, hi)).collect();
+    let mut oracle = vec![T::zero(); m];
+    for v in &inputs {
+        SumOp.combine(&mut oracle, v);
+    }
+
+    let part = BlockPartition::regular(world, m);
+    let skips = SkipScheme::HalvingUp.skips(world).map_err(|e| anyhow!("{e}"))?;
+    let sched = allreduce_schedule(world, &skips);
+    sched.assert_valid();
+
+    match backend {
+        TransportBackend::Thread => {
+            let out = run_schedule_threads_typed::<T>(&sched, &part, Arc::new(SumOp), inputs);
+            if verify {
+                for (r, buf) in out.iter().enumerate() {
+                    if buf[..] != oracle[..] {
+                        bail!("launch VERIFY FAILED: thread backend rank {r}");
+                    }
+                }
+            }
+            println!(
+                "launch: OK — thread backend, p={world} allreduce of {m} {} elems in one \
+                 process{}",
+                T::DTYPE.name(),
+                if verify { " (exact oracle match)" } else { "" },
+            );
+        }
+        TransportBackend::Uds => {
+            let rank = match cfg.get("launch.rank").or_else(|| cfg.get("rank")) {
+                Some(v) => v
+                    .parse::<usize>()
+                    .map_err(|_| anyhow!("bad --rank {v:?} (want 0..{world})"))?,
+                None => bail!("--backend uds needs --rank R (this process's rank)"),
+            };
+            if rank >= world {
+                bail!("--rank {rank} out of range for --world {world}");
+            }
+            let dir = cfg.get("launch.dir").or_else(|| cfg.get("dir")).ok_or_else(|| {
+                anyhow!(
+                    "--backend uds needs --dir SOCKDIR (a directory shared by all {world} \
+                     rank processes for their rank-R.sock files)"
+                )
+            })?;
+            std::fs::create_dir_all(dir)
+                .map_err(|e| anyhow!("cannot create --dir {dir}: {e}"))?;
+            let t0 = std::time::Instant::now();
+            let mut transport = UdsTransport::<T>::connect(rank, world, Path::new(dir))
+                .map_err(|e| anyhow!("uds bootstrap failed (rank {rank}/{world} in {dir}): {e}"))?;
+            let bootstrap = t0.elapsed().as_secs_f64();
+            let mut buf = inputs[rank].clone();
+            let t1 = std::time::Instant::now();
+            execute_rank(&mut transport, &sched, &part, &SumOp, &mut buf, 0)
+                .map_err(|e| anyhow!("rank {rank}: {e}"))?;
+            let wall = t1.elapsed().as_secs_f64();
+            if verify {
+                if buf[..] != oracle[..] {
+                    bail!(
+                        "launch VERIFY FAILED: uds rank {rank} diverges from the scalar sum \
+                         oracle"
+                    );
+                }
+                // Cross-backend bit-identity: the same schedule over the
+                // in-process thread backend — same rounds, same ⊕
+                // association, only the wire differs.
+                let thread_out =
+                    run_schedule_threads_typed::<T>(&sched, &part, Arc::new(SumOp), inputs);
+                if thread_out[rank][..] != buf[..] {
+                    bail!(
+                        "launch VERIFY FAILED: rank {rank} uds result is not bit-identical \
+                         to the thread backend"
+                    );
+                }
+            }
+            let c = transport.counters();
+            println!(
+                "launch: OK — uds backend, rank {rank}/{world}, {m} {} elems, {} rounds, \
+                 bootstrap {bootstrap:.3}s, collective {wall:.3}s, sent {} msgs / {} elems, \
+                 copied {} B, recv-pool hits/misses {}/{}{}",
+                T::DTYPE.name(),
+                sched.rounds.len(),
+                c.msgs_sent,
+                c.elems_sent,
+                c.bytes_copied,
+                c.pool_hits,
+                c.pool_misses,
+                if verify { " (exact oracle + thread-backend bit-identity)" } else { "" },
+            );
+        }
+    }
     Ok(())
 }

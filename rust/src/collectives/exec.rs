@@ -1,5 +1,5 @@
-//! Schedule executor: run any [`Schedule`] with real data over the thread
-//! transport, generic over the element type.
+//! Schedule executor: run any [`Schedule`] with real data over any
+//! [`Transport`] backend, generic over the element type.
 //!
 //! The execution core is the resumable [`OpCursor`] — one rank's driver
 //! for one collective, advanced by [`OpCursor::step`] in either blocking
@@ -9,6 +9,14 @@
 //! complete out of submission order). Each cursor tags its traffic with
 //! its own operation epoch, so concurrent schedules on the same endpoints
 //! never cross-match (`crate::transport` docs, "Op tags").
+//!
+//! The cursor is generic over `C:`[`Transport`]`<T>` — the in-process
+//! [`crate::transport::ThreadTransport`] and the cross-process
+//! [`crate::transport::uds::UdsTransport`] run the identical state
+//! machine. Backend differences are expressed as capability flags, not
+//! code paths: the rendezvous verdict below consults
+//! [`Transport::caps`], so a backend without a shared address space
+//! simply sees every round fall back to its copy tier.
 //!
 //! Each rank keeps its working vector in **global layout** (block `g` lives
 //! at the partition offset of `g`, for every rank). A circular block range
@@ -32,17 +40,18 @@
 //! slices of the outgoing circular range and a verdict on whether the
 //! round may run **rendezvous** (tier 1, zero-copy): the receiver then
 //! combines/stores *directly from this rank's working vector* in one
-//! fused pass and acks; [`Endpoint::finish_round`] holds this rank at the
-//! end of the round until that ack, so the published region is never read
-//! after it can change. The verdict is the §3-style precondition that the
-//! round's send and recv block ranges are **disjoint**
+//! fused pass and acks; [`Transport::finish_round`] holds this rank at
+//! the end of the round until that ack, so the published region is never
+//! read after it can change. The verdict requires the backend capability
+//! (`caps().supports_rendezvous`) **and** the §3-style precondition that
+//! the round's send and recv block ranges are **disjoint**
 //! ([`crate::schedule::BlockRange::overlaps`]; whole schedules can be
 //! checked with [`Schedule::rendezvous_safe`]) — full-vector
 //! recursive-doubling rounds fail it and fall back to **pooled** (tier 2):
 //! the transport gathers the slices into a buffer checked out of its
-//! per-peer pool ([`Endpoint::acquire`]), and consumed payloads are handed
-//! back with [`Endpoint::complete`], returning the buffer to *its
-//! sender's* pool. Payloads that must be built rather than gathered (the
+//! per-peer pool ([`Transport::acquire`]), and consumed payloads are
+//! handed back with [`Transport::complete_tagged`], returning the buffer
+//! to *its sender's* pool. Payloads that must be built rather than gathered (the
 //! framed all-to-all) travel **owned** (tier 3). Send-only rounds (tree
 //! schedules such as binomial reduce) follow the identical protocols, so
 //! after warm-up the executor performs zero payload allocations per round
@@ -71,7 +80,7 @@ use std::ops::Range;
 use crate::datatypes::{BlockPartition, Elem};
 use crate::ops::ReduceOp;
 use crate::schedule::{RecvAction, Schedule};
-use crate::transport::{Counters, Endpoint, Payload, SendSlices, Tag, TransportError};
+use crate::transport::{Counters, Payload, SendSlices, Tag, Transport, TransportError};
 
 /// Read-only view of `base[r]`.
 ///
@@ -224,20 +233,21 @@ impl OpCursor {
         }
     }
 
-    /// Quiesce after an error/timeout: block (bounded by `ep.timeout`)
-    /// until no publish of this operation is outstanding, so no peer can
-    /// read the working vector after the caller reclaims it. Best-effort;
-    /// other interleaved operations' publishes are left pending.
-    pub fn abort<T: Elem>(&mut self, ep: &mut Endpoint<T>) {
+    /// Quiesce after an error/timeout: block (bounded by the transport
+    /// timeout) until no publish of this operation is outstanding, so no
+    /// peer can read the working vector after the caller reclaims it.
+    /// Best-effort; other interleaved operations' publishes are left
+    /// pending.
+    pub fn abort<T: Elem, C: Transport<T>>(&mut self, ep: &mut C) {
         let _ = ep.finish_op(self.op_tag);
     }
 
     /// Advance this operation as far as possible. Blocking mode returns
     /// only `Done` (or an error); non-blocking mode may return `Pending`.
     /// See the type docs for the buffer contract.
-    pub fn step<T: Elem>(
+    pub fn step<T: Elem, C: Transport<T>>(
         &mut self,
-        ep: &mut Endpoint<T>,
+        ep: &mut C,
         schedule: &Schedule,
         part: &BlockPartition,
         op: &dyn ReduceOp<T>,
@@ -245,7 +255,7 @@ impl OpCursor {
         blocking: bool,
     ) -> Result<Progress, CollectiveError> {
         let p = schedule.p;
-        let r = ep.rank;
+        let r = ep.rank();
         if buf.len() != part.total() {
             return Err(CollectiveError::BadBuffer { rank: r, got: buf.len(), want: part.total() });
         }
@@ -277,13 +287,19 @@ impl OpCursor {
                         self.progress += 1;
                         continue;
                     }
-                    // Rendezvous precondition, checked per (rank, round):
-                    // the region we publish must not be written before the
-                    // receiver acks, and the only writes this rank performs
-                    // during the round target its recv range — so disjoint
-                    // send/recv block ranges ⇒ safe (shared predicate with
-                    // the Schedule::rendezvous_safe validator).
-                    let rendezvous = step.rendezvous_safe(p);
+                    // Rendezvous verdict, checked per (rank, round): the
+                    // backend must be able to publish at all (capability
+                    // flag — a socket transport has no shared address
+                    // space), and the region we publish must not be
+                    // written before the receiver acks; the only writes
+                    // this rank performs during the round target its recv
+                    // range — so disjoint send/recv block ranges ⇒ safe
+                    // (shared predicate with the Schedule::rendezvous_safe
+                    // validator). Backends that fail either test fall
+                    // back rendezvous → pooled → framed copy on their own
+                    // send path.
+                    let rendezvous =
+                        step.rendezvous_safe(p) && ep.caps().supports_rendezvous;
 
                     // Borrow-pack the outgoing payload: hand the transport
                     // the ≤2 slices of the circular range; it publishes
@@ -391,10 +407,11 @@ impl OpCursor {
                         },
                         RecvAction::Store => {
                             // The one unavoidable copy of allgather-style
-                            // rounds; credit it to the copy-volume counter
-                            // (rendezvous saves the *gather* copy, not
+                            // rounds; credited through the trait so every
+                            // backend's copy volume is accounted the same
+                            // way (rendezvous saves the *gather* copy, not
                             // this scatter).
-                            ep.counters.bytes_copied += (std::mem::size_of::<T>() * want) as u64;
+                            ep.credit_copied((std::mem::size_of::<T>() * want) as u64);
                             dst_head.copy_from_slice(src_head);
                             if let Some(dst_tail) = dst_tail {
                                 dst_tail.copy_from_slice(src_tail);
@@ -425,7 +442,9 @@ impl OpCursor {
     }
 }
 
-/// Execute `schedule` for this endpoint's rank, blocking until complete.
+/// Execute `schedule` for this transport's rank, blocking until complete.
+/// Works over any [`Transport`] backend — threads in-process, Unix-domain
+/// sockets across processes (`ccoll launch`).
 ///
 /// `buf` is the rank's working vector (`part.total()` elements, global
 /// layout). On return it contains whatever the schedule semantics leave
@@ -438,16 +457,17 @@ impl OpCursor {
 /// operations on one endpoint use an [`OpCursor`] per op with distinct
 /// `op_tag`s (what [`crate::engine`] does).
 ///
-/// The zero-copy rendezvous tier engages per round iff `ep.rendezvous` is
-/// set (see [`Endpoint::rendezvous`]), this rank's send and recv block
+/// The zero-copy rendezvous tier engages per round iff the backend
+/// supports it ([`Transport::caps`]), the transport opted in
+/// ([`Transport::set_rendezvous`]), this rank's send and recv block
 /// ranges for the round are disjoint, and the payload meets the
-/// endpoint's small-message threshold
-/// ([`Endpoint::rendezvous_min_elems`]); other rounds use the pooled
-/// tier. Payload lengths are validated once per round, before any kernel
+/// transport's small-message threshold
+/// ([`Transport::set_rendezvous_min_elems`]); other rounds use the copy
+/// tiers. Payload lengths are validated once per round, before any kernel
 /// call — the kernels themselves stay on the unchecked fast path
 /// (`ReduceOp` docs).
-pub fn execute_rank<T: Elem>(
-    ep: &mut Endpoint<T>,
+pub fn execute_rank<T: Elem, C: Transport<T>>(
+    ep: &mut C,
     schedule: &Schedule,
     part: &BlockPartition,
     op: &dyn ReduceOp<T>,

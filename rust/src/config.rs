@@ -183,6 +183,24 @@ impl Config {
         })
     }
 
+    /// The transport backend (`transport.backend`, default from the
+    /// process-wide `CCOLL_TRANSPORT` knob, which itself defaults to the
+    /// in-process thread backend). Unknown names report the valid set.
+    pub fn transport_backend(
+        &self,
+    ) -> Result<crate::transport::TransportBackend, ConfigError> {
+        use crate::transport::TransportBackend;
+        let default = crate::env_knobs::knobs().transport_backend;
+        let name = self.get_str("transport.backend", default.name());
+        TransportBackend::parse(name).ok_or_else(|| ConfigError::Invalid {
+            key: "transport.backend".into(),
+            msg: format!(
+                "unknown transport backend {name:?} (valid: {})",
+                TransportBackend::NAMES_HELP
+            ),
+        })
+    }
+
     /// The α-β-γ cost model (`cost.*`, defaults = CostModel::cluster()).
     pub fn cost_model(&self) -> Result<CostModel, ConfigError> {
         let d = CostModel::cluster();
@@ -286,5 +304,24 @@ mod tests {
         let cfg = Config::parse("run.algorithm = \"nope\"").unwrap();
         let err = cfg.algorithm().unwrap_err().to_string();
         assert!(err.contains("ring-allreduce") && err.contains("rabenseifner"), "{err}");
+        let cfg = Config::parse("transport.backend = \"tcp\"").unwrap();
+        let err = cfg.transport_backend().unwrap_err().to_string();
+        assert!(err.contains("thread|uds"), "{err}");
+    }
+
+    #[test]
+    fn transport_backend_key_parses_and_defaults() {
+        use crate::transport::TransportBackend;
+        let cfg = Config::new();
+        // The ambient default follows the process-wide CCOLL_TRANSPORT
+        // knob (thread unless the env overrides it).
+        assert_eq!(
+            cfg.transport_backend().unwrap(),
+            crate::env_knobs::knobs().transport_backend
+        );
+        let cfg = Config::parse("transport.backend = \"uds\"").unwrap();
+        assert_eq!(cfg.transport_backend().unwrap(), TransportBackend::Uds);
+        let cfg = Config::parse("transport.backend = \"thread\"").unwrap();
+        assert_eq!(cfg.transport_backend().unwrap(), TransportBackend::Thread);
     }
 }

@@ -236,13 +236,16 @@ struct PendingBatch<T: Elem> {
 }
 
 /// The batching stage + submission fan-out. Shared as
-/// `Arc<Mutex<Fuser<T>>>` between the engine (submit, shutdown) and every
-/// [`OpHandle`](super::OpHandle) (force-flush on wait); workers never
-/// touch it.
-pub(crate) struct Fuser<T: Elem> {
+/// `Arc<Mutex<Fuser<T, C>>>` between the engine (submit, shutdown) and
+/// every [`OpHandle`](super::OpHandle) (force-flush on wait); workers
+/// never touch it. `C` is the engine's transport backend — the fuser
+/// never calls transport methods itself (it only feeds the per-worker
+/// command queues), so it carries the parameter without a
+/// [`crate::transport::Transport`] bound.
+pub(crate) struct Fuser<T: Elem, C = crate::transport::Endpoint<T>> {
     p: usize,
     vocab: CirculantPlans,
-    txs: Vec<Sender<WorkerCmd<T>>>,
+    txs: Vec<Sender<WorkerCmd<T, C>>>,
     plans: Arc<PlanCache>,
     inflight: InflightCounter,
     completed: StepCounter,
@@ -258,12 +261,12 @@ pub(crate) struct Fuser<T: Elem> {
     pub(super) shut_down: bool,
 }
 
-impl<T: Elem> Fuser<T> {
+impl<T: Elem, C> Fuser<T, C> {
     #[allow(clippy::too_many_arguments)]
     pub(super) fn new(
         p: usize,
         vocab: CirculantPlans,
-        txs: Vec<Sender<WorkerCmd<T>>>,
+        txs: Vec<Sender<WorkerCmd<T, C>>>,
         plans: Arc<PlanCache>,
         inflight: InflightCounter,
         completed: StepCounter,

@@ -16,9 +16,12 @@
 //!    [`shutdown`](CollectiveEngine::shutdown) (the `ccoll serve` soak
 //!    asserts zero per-op spawns via
 //!    [`crate::transport::rank_threads_spawned`]);
-//!  * **transport** — one persistent `Endpoint<T>` per worker, so buffer
-//!    pools stay warm across operations and steady-state traffic
-//!    allocates nothing;
+//!  * **transport** — one persistent [`Transport`] per worker (the
+//!    in-process [`crate::transport::ThreadTransport`] by default; any
+//!    other backend — e.g. the Unix-domain-socket transport for
+//!    multi-process runs — via
+//!    [`CollectiveEngine::with_transports`]), so buffer pools stay warm
+//!    across operations and steady-state traffic allocates nothing;
 //!  * **plans** — a shared [`PlanCache`] memoizing
 //!    `(algorithm, p, partition, dtype) → Arc<Plan>`, so a repeated
 //!    collective pays one hash lookup on the submission path.
@@ -81,7 +84,7 @@ use crate::datatypes::Elem;
 use crate::ops::{kernels, ReduceOp};
 use crate::schedule::{Plan, PlanCache, PlanCacheStats};
 use crate::topology::skips::SkipScheme;
-use crate::transport::{network_typed, Endpoint};
+use crate::transport::{network_typed, Endpoint, Transport};
 
 use fusion::{FlushReason, FusedLayout, FusedRankOp, FusedShare, Fuser};
 
@@ -362,36 +365,36 @@ pub(crate) struct RankOp<T: Elem> {
     pub(crate) shared: Arc<OpShared>,
 }
 
-/// Type-erased one-shot closure a worker runs inline on its endpoint —
+/// Type-erased one-shot closure a worker runs inline on its transport —
 /// the substrate [`crate::coordinator::Launcher`] is built on. A job may
-/// consume the endpoint (the launcher's communicator closures do), so the
-/// engine must be shut down after a closure run; see
+/// consume the transport (the launcher's communicator closures do), so
+/// the engine must be shut down after a closure run; see
 /// [`CollectiveEngine::run_closure`].
-type JobFn<T> = Box<dyn FnOnce(usize, &mut Endpoint<T>) -> Box<dyn Any + Send> + Send>;
+type JobFn<C> = Box<dyn FnOnce(usize, &mut C) -> Box<dyn Any + Send> + Send>;
 
-pub(crate) struct Job<T: Elem> {
-    run: JobFn<T>,
+pub(crate) struct Job<C> {
+    run: JobFn<C>,
     done: Sender<(usize, Box<dyn Any + Send>)>,
 }
 
-pub(crate) enum WorkerCmd<T: Elem> {
+pub(crate) enum WorkerCmd<T: Elem, C = Endpoint<T>> {
     Op(RankOp<T>),
     Fused(FusedRankOp<T>),
-    Job(Job<T>),
+    Job(Job<C>),
     Shutdown,
 }
 
 /// Future for one submitted operation.
-pub struct OpHandle<T: Elem = f32> {
+pub struct OpHandle<T: Elem = f32, C = Endpoint<T>> {
     op_id: u64,
     p: usize,
     rx: DoneRx<T>,
     /// The engine's batching stage: waiting on a still-batched member
     /// must force its batch out, or the wait could never return.
-    fuser: Arc<Mutex<Fuser<T>>>,
+    fuser: Arc<Mutex<Fuser<T, C>>>,
 }
 
-impl<T: Elem> OpHandle<T> {
+impl<T: Elem, C> OpHandle<T, C> {
     /// The operation's id (unique per engine, monotonically increasing
     /// in submission order). Unfused operations use it as their wire
     /// epoch; a fused member's batch runs under its own separate epoch.
@@ -522,9 +525,12 @@ impl<T: Elem> ActiveOp<T> {
 }
 
 /// The persistent engine: `p` long-lived rank workers around a persistent
-/// typed endpoint network, fed through per-worker submission queues. See
-/// the module docs.
-pub struct CollectiveEngine<T: Elem = f32> {
+/// typed transport network, fed through per-worker submission queues. See
+/// the module docs. `C` is the transport backend — the in-process
+/// [`crate::transport::ThreadTransport`] by default
+/// ([`CollectiveEngine::new`]), or any other [`Transport`] via
+/// [`CollectiveEngine::with_transports`].
+pub struct CollectiveEngine<T: Elem = f32, C = Endpoint<T>> {
     p: usize,
     scheme: SkipScheme,
     backend: OpBackend,
@@ -535,34 +541,62 @@ pub struct CollectiveEngine<T: Elem = f32> {
     /// plan vocabulary, the epoch allocator and the pending batch.
     /// Shared with every [`OpHandle`] so a waited member can force its
     /// batch out; workers never touch it.
-    fuser: Arc<Mutex<Fuser<T>>>,
-    txs: Vec<Sender<WorkerCmd<T>>>,
+    fuser: Arc<Mutex<Fuser<T, C>>>,
+    txs: Vec<Sender<WorkerCmd<T, C>>>,
     workers: Vec<thread::JoinHandle<()>>,
 }
 
 impl<T: Elem> CollectiveEngine<T> {
-    /// Spawn the `p` rank workers and their endpoint network. This is the
-    /// engine's only thread spawn — every subsequent operation reuses
-    /// them ([`crate::transport::rank_threads_spawned`] counts exactly
-    /// `p` for an engine's whole lifetime).
+    /// Spawn the `p` rank workers over a fresh in-process
+    /// [`crate::transport::ThreadTransport`] network — the default
+    /// single-process engine all PR 1–5 entry points use.
     pub fn new(cfg: EngineConfig) -> Self {
         assert!(cfg.p >= 1, "engine needs at least one rank");
+        let endpoints = network_typed::<T>(cfg.p);
+        Self::with_transports(cfg, endpoints)
+    }
+}
+
+impl<T: Elem, C> CollectiveEngine<T, C> {
+    /// Spawn the `p` rank workers over caller-provided transports (one
+    /// per rank, in rank order — e.g.
+    /// [`crate::transport::uds::uds_network_typed`] handles, or one
+    /// process's single [`crate::transport::uds::UdsTransport`] with the
+    /// other ranks' workers living in peer processes). This is the
+    /// engine's only thread spawn — every subsequent operation reuses
+    /// the workers ([`crate::transport::rank_threads_spawned`] counts
+    /// exactly `transports.len()` for an engine's whole lifetime).
+    ///
+    /// The config's rendezvous/timeout knobs are applied through the
+    /// [`Transport`] trait; backends without a tier (the UDS backend has
+    /// no rendezvous) treat the corresponding setters as no-ops and the
+    /// executor falls back per its capability flags.
+    pub fn with_transports(cfg: EngineConfig, transports: Vec<C>) -> Self
+    where
+        C: Transport<T> + Send + 'static,
+    {
+        assert!(cfg.p >= 1, "engine needs at least one rank");
+        assert_eq!(
+            transports.len(),
+            cfg.p,
+            "engine(p={}) needs one transport per rank",
+            cfg.p
+        );
         // Validate the scheme + derive the plan vocabulary once, up
         // front: every submission reuses both, and a bad scheme should
         // fail at construction — not on the Nth submit.
         let vocab = CirculantPlans::new(&cfg.scheme, cfg.p);
-        let endpoints = network_typed::<T>(cfg.p);
         let mut txs = Vec::with_capacity(cfg.p);
         let mut workers = Vec::with_capacity(cfg.p);
-        for (rank, mut ep) in endpoints.into_iter().enumerate() {
-            ep.rendezvous = cfg.rendezvous && crate::transport::rendezvous_env_enabled();
+        for (rank, mut ep) in transports.into_iter().enumerate() {
+            ep.set_rendezvous(cfg.rendezvous && crate::transport::rendezvous_env_enabled());
             if let Some(min) = cfg.rendezvous_min_elems {
-                ep.rendezvous_min_elems = min;
+                ep.set_rendezvous_min_elems(min);
             }
             if let Some(timeout) = cfg.op_timeout {
-                ep.timeout = timeout;
+                ep.set_timeout(timeout);
             }
-            let (tx, rx) = channel::<WorkerCmd<T>>();
+            let (tx, rx) = channel::<WorkerCmd<T, C>>();
             txs.push(tx);
             let park = cfg.park;
             crate::transport::note_rank_thread_spawn();
@@ -645,7 +679,7 @@ impl<T: Elem> CollectiveEngine<T> {
     /// (see [`fusion`] for the flush policy); [`OpHandle::wait`] always
     /// forces it out. See [`OpRequest`] for input semantics and
     /// [`OpHandle::wait`] for result layout.
-    pub fn submit(&mut self, req: OpRequest<T>) -> Result<OpHandle<T>, EngineError> {
+    pub fn submit(&mut self, req: OpRequest<T>) -> Result<OpHandle<T, C>, EngineError> {
         let p = self.p;
         if self.txs.is_empty() {
             return Err(EngineError::ShutDown);
@@ -701,16 +735,16 @@ impl<T: Elem> CollectiveEngine<T> {
         Ok(OpHandle { op_id, p, rx, fuser: self.fuser.clone() })
     }
 
-    /// Run `f(rank, endpoint)` once on every worker and collect the
+    /// Run `f(rank, transport)` once on every worker and collect the
     /// results in rank order — the launcher substrate. The closure may
-    /// consume/replace the endpoint (the launcher's communicator does),
+    /// consume/replace the transport (the launcher's communicator does),
     /// so the engine is only good for [`shutdown`]
     /// (CollectiveEngine::shutdown) afterwards; that is why this is
     /// crate-private. Worker panics propagate like `run_ranks`' did.
     pub(crate) fn run_closure<R, F>(&mut self, f: F) -> Vec<R>
     where
         R: Send + 'static,
-        F: Fn(usize, &mut Endpoint<T>) -> R + Send + Sync + 'static,
+        F: Fn(usize, &mut C) -> R + Send + Sync + 'static,
     {
         // Jobs run inline on otherwise-idle workers; a batched op left
         // pending would be stranded behind them, so dispatch it first.
@@ -719,7 +753,7 @@ impl<T: Elem> CollectiveEngine<T> {
         let (tx, rx) = channel::<(usize, Box<dyn Any + Send>)>();
         for rank in 0..self.p {
             let f = f.clone();
-            let run: JobFn<T> =
+            let run: JobFn<C> =
                 Box::new(move |rank, ep| Box::new(f(rank, ep)) as Box<dyn Any + Send>);
             if self.txs[rank].send(WorkerCmd::Job(Job { run, done: tx.clone() })).is_err() {
                 self.join_workers_propagating();
@@ -776,7 +810,7 @@ impl<T: Elem> CollectiveEngine<T> {
     }
 }
 
-impl<T: Elem> Drop for CollectiveEngine<T> {
+impl<T: Elem, C> Drop for CollectiveEngine<T, C> {
     fn drop(&mut self) {
         self.shutdown();
     }
@@ -810,10 +844,10 @@ fn recycle_segment<T: Elem>(pool: &mut Vec<Vec<T>>, buf: Vec<T>) {
 /// cursors with non-blocking steps, park per policy when nothing moved.
 /// Fused runs pack into (and recycle) worker-local pooled segment
 /// buffers, so steady-state fused traffic allocates nothing per batch.
-fn worker_loop<T: Elem>(
+fn worker_loop<T: Elem, C: Transport<T>>(
     rank: usize,
-    mut ep: Endpoint<T>,
-    rx: Receiver<WorkerCmd<T>>,
+    mut ep: C,
+    rx: Receiver<WorkerCmd<T, C>>,
     park: ParkPolicy,
 ) {
     let mut active: Vec<ActiveOp<T>> = Vec::new();
@@ -851,7 +885,7 @@ fn worker_loop<T: Elem>(
         // ops waiting on slower peers stay put — that is what lets a
         // later small op complete before an earlier big one.
         let now = Instant::now();
-        let timeout = ep.timeout;
+        let timeout = ep.timeout();
         let mut made_progress = false;
         active.retain_mut(|a| {
             match a.cursor.step(
@@ -922,24 +956,24 @@ fn worker_loop<T: Elem>(
 /// (stashed payloads completed back to their senders, stale pending-ack
 /// entries removed), so repeated failures cannot grow the persistent
 /// endpoint's stash without bound.
-fn cleanup_failed_op<T: Elem>(ep: &mut Endpoint<T>, buf: &mut Vec<T>, op_tag: u64) {
+fn cleanup_failed_op<T: Elem, C: Transport<T>>(ep: &mut C, buf: &mut Vec<T>, op_tag: u64) {
     if ep.op_has_pending_publish(op_tag) {
         std::mem::forget(std::mem::take(buf));
     }
     ep.forget_op(op_tag);
 }
 
-fn admit<T: Elem>(
-    cmd: WorkerCmd<T>,
+fn admit<T: Elem, C: Transport<T>>(
+    cmd: WorkerCmd<T, C>,
     active: &mut Vec<ActiveOp<T>>,
     seg_pool: &mut Vec<Vec<T>>,
-    ep: &mut Endpoint<T>,
+    ep: &mut C,
     rank: usize,
     shutting_down: &mut bool,
 ) {
     match cmd {
         WorkerCmd::Op(op) => {
-            let deadline = Instant::now() + ep.timeout;
+            let deadline = Instant::now() + ep.timeout();
             active.push(ActiveOp {
                 cursor: OpCursor::new(op.op_tag, 0),
                 plan: op.plan,
@@ -959,7 +993,7 @@ fn admit<T: Elem>(
             for (j, share) in f.shares.iter().enumerate() {
                 kernels::pack_segments(&mut buf, &share.buf, &f.layout.spans[j]);
             }
-            let deadline = Instant::now() + ep.timeout;
+            let deadline = Instant::now() + ep.timeout();
             active.push(ActiveOp {
                 cursor: OpCursor::new(f.op_tag, 0),
                 plan: f.plan,

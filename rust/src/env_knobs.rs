@@ -23,16 +23,19 @@
 //! | `CCOLL_ENGINE_PARK`          | park   | `yield` | engine worker wait strategy |
 //! | `CCOLL_FUSION_MAX_BYTES`     | usize  | 65536   | fusion-tier batch byte budget (ops above it bypass the batcher) |
 //! | `CCOLL_FUSION_WINDOW`        | usize  | `8`     | fusion-tier flush window in completed engine steps (0 disables fusion) |
+//! | `CCOLL_TRANSPORT`            | transport | `thread` | default transport backend (`transport.backend` overrides per run) |
 //!
 //! Booleans accept `0|1|true|false|yes|no` (empty = unset = default).
 //! Integers accept decimal digits with optional `_` separators. Dtypes
-//! accept `f32|f64|i32|i64|u64`; park policies accept `spin|yield|sleep`.
+//! accept `f32|f64|i32|i64|u64`; park policies accept `spin|yield|sleep`;
+//! transport backends accept `thread|uds`.
 //! `ccoll info` lists every knob with its resolved value.
 
 use std::sync::OnceLock;
 
 use crate::datatypes::DType;
 use crate::engine::ParkPolicy;
+use crate::transport::TransportBackend;
 
 /// The parsed knob set. Construct via [`knobs`] (process env, cached) or
 /// [`parse_from`] (explicit lookup, for tests).
@@ -75,6 +78,10 @@ pub struct EnvKnobs {
     /// coalesce anything). Per-engine override:
     /// `EngineConfig::fusion_window` / config key `engine.fusion.window`.
     pub fusion_window: u64,
+    /// Default transport backend (`CCOLL_TRANSPORT`: thread|uds) — which
+    /// [`crate::transport::Transport`] implementation carries the rank
+    /// network. Per-run override: config key `transport.backend`.
+    pub transport_backend: TransportBackend,
 }
 
 fn parse_bool(name: &str, raw: Option<&str>, default: bool) -> Result<bool, String> {
@@ -121,6 +128,22 @@ fn parse_park(name: &str, raw: Option<&str>, default: ParkPolicy) -> Result<Park
     }
 }
 
+fn parse_transport(
+    name: &str,
+    raw: Option<&str>,
+    default: TransportBackend,
+) -> Result<TransportBackend, String> {
+    match raw {
+        None | Some("") => Ok(default),
+        Some(v) => TransportBackend::parse(v).ok_or_else(|| {
+            format!(
+                "{name}={v:?} is not a transport backend (accepted: {})",
+                TransportBackend::NAMES_HELP
+            )
+        }),
+    }
+}
+
 /// Parse a knob set from an arbitrary lookup function — pure, so malformed
 /// values are testable without touching the process environment.
 pub fn parse_from(get: impl Fn(&str) -> Option<String>) -> Result<EnvKnobs, String> {
@@ -160,6 +183,11 @@ pub fn parse_from(get: impl Fn(&str) -> Option<String>) -> Result<EnvKnobs, Stri
             get("CCOLL_FUSION_WINDOW").as_deref(),
             crate::engine::DEFAULT_FUSION_WINDOW as usize,
         )? as u64,
+        transport_backend: parse_transport(
+            "CCOLL_TRANSPORT",
+            get("CCOLL_TRANSPORT").as_deref(),
+            TransportBackend::Thread,
+        )?,
     })
 }
 
@@ -198,6 +226,19 @@ mod tests {
         assert_eq!(k.engine_park, ParkPolicy::Yield);
         assert_eq!(k.fusion_max_bytes, crate::engine::DEFAULT_FUSION_MAX_BYTES);
         assert_eq!(k.fusion_window, crate::engine::DEFAULT_FUSION_WINDOW);
+        assert_eq!(k.transport_backend, TransportBackend::Thread);
+    }
+
+    #[test]
+    fn transport_knob_parses_and_rejects_loudly() {
+        for (v, want) in [("thread", TransportBackend::Thread), ("uds", TransportBackend::Uds)] {
+            assert_eq!(with(&[("CCOLL_TRANSPORT", v)]).unwrap().transport_backend, want, "{v}");
+        }
+        let k = with(&[("CCOLL_TRANSPORT", "")]).unwrap();
+        assert_eq!(k.transport_backend, TransportBackend::Thread, "empty string means unset");
+        let err = with(&[("CCOLL_TRANSPORT", "tcp")]).unwrap_err();
+        assert!(err.contains("CCOLL_TRANSPORT") && err.contains("tcp"), "{err}");
+        assert!(err.contains("thread|uds"), "must enumerate the valid set: {err}");
     }
 
     #[test]

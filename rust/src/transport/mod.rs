@@ -131,6 +131,29 @@
 //! This pool + descriptor seam is also where a future shared-memory or
 //! RDMA-style transport plugs in: registered buffers replace heap `Vec`s
 //! and descriptors become remote keys, with no executor change.
+//!
+//! # Transport backends (the [`Transport`] trait)
+//!
+//! The surface the schedule executor ([`crate::collectives`]) and the
+//! engine workers actually consume is the [`Transport`] trait: tagged
+//! send/recv plus try-variants, pooled acquire/release, the rendezvous
+//! quiesce family (`finish_op`/`try_finish`/`forget_op`) and counters.
+//! Each backend reports [`TransportCaps`] — capability flags that replace
+//! the old hard-coded three-tier assumption: the executor publishes
+//! rendezvous descriptors only when `caps().supports_rendezvous` holds,
+//! falling back rendezvous → pooled → framed copy per backend.
+//!
+//! Two backends are registered ([`backends`], selected by the
+//! `transport.backend` config key / `CCOLL_TRANSPORT` env knob):
+//!
+//! * [`ThreadTransport`] (= [`Endpoint`], the default) — ranks are OS
+//!   threads sharing one address space; supports every tier and remains
+//!   the semantics oracle for all others;
+//! * [`uds::UdsTransport`] — ranks are OS processes on one machine,
+//!   exchanging length-prefixed [`Tag`]-framed messages over Unix-domain
+//!   sockets (`ccoll launch --backend uds`). Rendezvous is unsupported
+//!   (no shared address space); recv-side buffers are pooled and reused
+//!   across rounds.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -854,6 +877,272 @@ impl<E: Elem> Endpoint<E> {
     }
 }
 
+pub mod uds;
+
+/// Capability flags of one transport backend. The executor consults these
+/// instead of assuming the thread transport's behavior: a backend that
+/// cannot honor the rendezvous publish contract (no shared address space)
+/// reports `supports_rendezvous: false`, and every rendezvous-eligible
+/// send falls back to the pooled/framed copy tier on that backend.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TransportCaps {
+    /// The backend can deliver zero-copy [`RemoteSlices`] descriptors and
+    /// honor the publish/ack contract (tier 1).
+    pub supports_rendezvous: bool,
+    /// [`Transport::release`] actually recycles consumed buffers back to
+    /// a pool (tier 2); `false` means release is a plain drop.
+    pub supports_loaned_buffers: bool,
+    /// Largest payload (bytes) one send moves eagerly; `usize::MAX` means
+    /// unbounded (both built-in backends — channels and stream sockets —
+    /// have no inline limit).
+    pub max_inline_bytes: usize,
+}
+
+/// The registered transport backends, selected by the `transport.backend`
+/// config key / `CCOLL_TRANSPORT` env knob (loud-parsed by
+/// [`crate::env_knobs`]: unknown names abort with the enumerated valid
+/// set, same diagnostic grammar as `run.algorithm`/`run.dtype`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TransportBackend {
+    /// In-process channel transport ([`ThreadTransport`]): ranks are OS
+    /// threads sharing one address space — the default, and the semantics
+    /// oracle every other backend is tested against.
+    #[default]
+    Thread,
+    /// Unix-domain-socket transport ([`uds::UdsTransport`]): ranks are OS
+    /// processes on one machine (`ccoll launch --backend uds`).
+    Uds,
+}
+
+impl TransportBackend {
+    /// Accepted names, for diagnostics.
+    pub const NAMES_HELP: &'static str = "thread|uds";
+
+    pub fn parse(name: &str) -> Option<Self> {
+        match name {
+            "thread" => Some(Self::Thread),
+            "uds" => Some(Self::Uds),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Thread => "thread",
+            Self::Uds => "uds",
+        }
+    }
+
+    /// The capability flags a transport of this backend reports.
+    pub fn caps(&self) -> TransportCaps {
+        match self {
+            Self::Thread => TransportCaps {
+                supports_rendezvous: true,
+                supports_loaned_buffers: true,
+                max_inline_bytes: usize::MAX,
+            },
+            Self::Uds => TransportCaps {
+                supports_rendezvous: false,
+                supports_loaned_buffers: true,
+                max_inline_bytes: usize::MAX,
+            },
+        }
+    }
+}
+
+/// Every registered backend, for enumerating diagnostics (`ccoll info`
+/// prints this table with each backend's capability flags).
+pub fn backends() -> &'static [TransportBackend] {
+    &[TransportBackend::Thread, TransportBackend::Uds]
+}
+
+/// The communication surface the schedule executor
+/// ([`crate::collectives::exec::OpCursor`]) and the engine worker loop
+/// actually consume, extracted from [`Endpoint`] so the same cursor state
+/// machine runs over any backend — threads today, Unix-domain sockets
+/// ([`uds::UdsTransport`]), shared memory or RDMA tomorrow.
+///
+/// Contract notes, backend-independent:
+///
+/// * all wire artifacts are keyed by [`Tag`] (see the module docs);
+/// * a send whose [`SendSlices::rendezvous`] verdict is `true` may only
+///   publish descriptors when [`Transport::caps`] reports
+///   `supports_rendezvous` — otherwise it must travel a copy tier, and
+///   the quiesce family (`finish_*`, `op_has_pending_publish`) degrades
+///   to no-ops that report "nothing pending";
+/// * **all** payload-byte crediting flows through
+///   [`Transport::credit_copied`] / the backend's own send paths into
+///   [`Counters::bytes_copied`], so no backend can silently under-report
+///   copy volume (the `perf_hotpath` ablation asserts non-zero on the
+///   pooled tier).
+pub trait Transport<E: Elem> {
+    /// This endpoint's rank in `0..p`.
+    fn rank(&self) -> usize;
+    /// World size.
+    fn p(&self) -> usize;
+    /// Capability flags of this backend (fixed per backend).
+    fn caps(&self) -> TransportCaps;
+
+    /// The paper's one-ported simultaneous send/receive over up to two
+    /// working-vector slices, tagged. See
+    /// [`Endpoint::sendrecv_slices_tagged`] for tier semantics.
+    fn sendrecv_slices_tagged(
+        &mut self,
+        send: Option<SendSlices<'_, E>>,
+        recv_from: Option<usize>,
+        tag: Tag,
+    ) -> Result<Option<Payload<E>>, TransportError>;
+
+    /// Blocking receive of the payload tagged `(from, tag)`.
+    fn recv_payload(&mut self, from: usize, tag: Tag) -> Result<Payload<E>, TransportError>;
+
+    /// Non-blocking receive; `None` when nothing matching has arrived.
+    fn try_recv_payload(&mut self, from: usize, tag: Tag) -> Option<Payload<E>>;
+
+    /// Hand back a consumed payload, whichever tier it traveled.
+    fn complete_tagged(&mut self, from: usize, tag: Tag, payload: Payload<E>);
+
+    /// Check out an empty buffer of at least `need` capacity for a
+    /// message to `to` (pool-recycled where the backend supports it).
+    fn acquire(&mut self, to: usize, need: usize) -> Vec<E>;
+
+    /// Return a consumed buffer toward whoever can reuse it.
+    fn release(&mut self, from: usize, payload: Vec<E>);
+
+    /// Block until every outstanding publish (any epoch) is acked.
+    fn finish_round(&mut self) -> Result<(), TransportError>;
+
+    /// Block until no publish of epoch `op` is outstanding.
+    fn finish_op(&mut self, op: u64) -> Result<(), TransportError>;
+
+    /// Non-blocking: `true` when no publish tagged `tag` is outstanding.
+    fn try_finish(&mut self, tag: Tag) -> bool;
+
+    /// Whether any publish of epoch `op` is still un-acked.
+    fn op_has_pending_publish(&mut self, op: u64) -> bool;
+
+    /// Discard every artifact of epoch `op`; returns payloads discarded.
+    fn forget_op(&mut self, op: u64) -> usize;
+
+    /// Volume counters (read side).
+    fn counters(&self) -> &Counters;
+
+    /// Volume counters (credit side — plan hits etc.).
+    fn counters_mut(&mut self) -> &mut Counters;
+
+    /// Credit `bytes` of physical payload copy to this transport. The
+    /// executor routes its `Store` scatter accounting through this, so
+    /// copy-volume reporting is uniform across backends.
+    fn credit_copied(&mut self, bytes: u64) {
+        self.counters_mut().bytes_copied += bytes;
+    }
+
+    /// Receive/ack timeout currently in force.
+    fn timeout(&self) -> Duration;
+    fn set_timeout(&mut self, timeout: Duration);
+
+    /// Opt in/out of the rendezvous tier. No-op on backends whose caps
+    /// report `supports_rendezvous: false`.
+    fn set_rendezvous(&mut self, on: bool);
+
+    /// Minimum payload (elements) for a rendezvous publish. No-op on
+    /// non-rendezvous backends.
+    fn set_rendezvous_min_elems(&mut self, min: usize);
+}
+
+/// The default in-process backend: [`Endpoint`] under its trait name. All
+/// PR 1–5 entry points construct it directly ([`network_typed`]) and its
+/// counters semantics are unchanged — it is the oracle the cross-backend
+/// bit-identity suite compares every other backend against.
+pub type ThreadTransport<E = f32> = Endpoint<E>;
+
+impl<E: Elem> Transport<E> for Endpoint<E> {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn p(&self) -> usize {
+        self.p
+    }
+
+    fn caps(&self) -> TransportCaps {
+        TransportBackend::Thread.caps()
+    }
+
+    fn sendrecv_slices_tagged(
+        &mut self,
+        send: Option<SendSlices<'_, E>>,
+        recv_from: Option<usize>,
+        tag: Tag,
+    ) -> Result<Option<Payload<E>>, TransportError> {
+        Endpoint::sendrecv_slices_tagged(self, send, recv_from, tag)
+    }
+
+    fn recv_payload(&mut self, from: usize, tag: Tag) -> Result<Payload<E>, TransportError> {
+        Endpoint::recv_payload(self, from, tag)
+    }
+
+    fn try_recv_payload(&mut self, from: usize, tag: Tag) -> Option<Payload<E>> {
+        Endpoint::try_recv_payload(self, from, tag)
+    }
+
+    fn complete_tagged(&mut self, from: usize, tag: Tag, payload: Payload<E>) {
+        Endpoint::complete_tagged(self, from, tag, payload)
+    }
+
+    fn acquire(&mut self, to: usize, need: usize) -> Vec<E> {
+        Endpoint::acquire(self, to, need)
+    }
+
+    fn release(&mut self, from: usize, payload: Vec<E>) {
+        Endpoint::release(self, from, payload)
+    }
+
+    fn finish_round(&mut self) -> Result<(), TransportError> {
+        Endpoint::finish_round(self)
+    }
+
+    fn finish_op(&mut self, op: u64) -> Result<(), TransportError> {
+        Endpoint::finish_op(self, op)
+    }
+
+    fn try_finish(&mut self, tag: Tag) -> bool {
+        Endpoint::try_finish(self, tag)
+    }
+
+    fn op_has_pending_publish(&mut self, op: u64) -> bool {
+        Endpoint::op_has_pending_publish(self, op)
+    }
+
+    fn forget_op(&mut self, op: u64) -> usize {
+        Endpoint::forget_op(self, op)
+    }
+
+    fn counters(&self) -> &Counters {
+        &self.counters
+    }
+
+    fn counters_mut(&mut self) -> &mut Counters {
+        &mut self.counters
+    }
+
+    fn timeout(&self) -> Duration {
+        self.timeout
+    }
+
+    fn set_timeout(&mut self, timeout: Duration) {
+        self.timeout = timeout;
+    }
+
+    fn set_rendezvous(&mut self, on: bool) {
+        self.rendezvous = on;
+    }
+
+    fn set_rendezvous_min_elems(&mut self, min: usize) {
+        self.rendezvous_min_elems = min;
+    }
+}
+
 /// Run `f(rank, endpoint)` on `p` threads over an **f32** network, one per
 /// rank, and collect the per-rank results in rank order. Panics in any
 /// rank are propagated. See [`run_ranks_typed`] for other dtypes.
@@ -1295,6 +1584,54 @@ mod tests {
             eps[0].forget_op(9);
             assert!(eps[0].try_finish(Tag::new(9, 2)));
             eps[0].finish_round().unwrap();
+        }
+    }
+
+    #[test]
+    fn backend_registry_parses_and_reports_caps() {
+        assert_eq!(TransportBackend::parse("thread"), Some(TransportBackend::Thread));
+        assert_eq!(TransportBackend::parse("uds"), Some(TransportBackend::Uds));
+        assert_eq!(TransportBackend::parse("tcp"), None);
+        assert_eq!(TransportBackend::default(), TransportBackend::Thread);
+        assert!(TransportBackend::Thread.caps().supports_rendezvous);
+        assert!(!TransportBackend::Uds.caps().supports_rendezvous);
+        // Every registered backend round-trips through parse(name()).
+        for b in backends() {
+            assert_eq!(TransportBackend::parse(b.name()), Some(*b));
+            assert!(TransportBackend::NAMES_HELP.contains(b.name()));
+        }
+    }
+
+    #[test]
+    fn endpoint_implements_the_transport_trait_with_identical_semantics() {
+        // Drive a 2-rank exchange purely through the trait surface: the
+        // ThreadTransport impl must delegate to the inherent methods, so
+        // counters and payloads match the concrete-API tests exactly.
+        fn exchange<C: Transport<f32>>(ep: &mut C, peer: usize) -> Vec<f32> {
+            let data = [ep.rank() as f32; 7];
+            let send =
+                SendSlices { to: peer, head: &data, tail: &[], rendezvous: false };
+            let payload = ep
+                .sendrecv_slices_tagged(Some(send), Some(peer), Tag::untagged(0))
+                .unwrap()
+                .unwrap();
+            let got = match &payload {
+                Payload::Copied(v) => v.clone(),
+                Payload::Remote(_) => panic!("non-rendezvous send published"),
+            };
+            ep.complete_tagged(peer, Tag::untagged(0), payload);
+            ep.finish_round().unwrap();
+            got
+        }
+        let out = run_ranks(2, |rank, ep| {
+            assert_eq!(Transport::<f32>::rank(ep), rank);
+            assert_eq!(Transport::<f32>::p(ep), 2);
+            let got = exchange(ep, 1 - rank);
+            (got, ep.counters.clone())
+        });
+        for (rank, (got, c)) in out.iter().enumerate() {
+            assert_eq!(got, &vec![(1 - rank) as f32; 7]);
+            assert_eq!(c.bytes_copied, 7 * 4, "trait path must credit the gather");
         }
     }
 

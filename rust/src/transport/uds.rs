@@ -1,0 +1,758 @@
+//! Unix-domain-socket transport backend: the circulant engine across OS
+//! processes.
+//!
+//! [`UdsTransport`] implements [`Transport`] over a fully-connected mesh
+//! of `SOCK_STREAM` Unix-domain sockets, so `p` ranks can be `p` separate
+//! processes on one machine (`ccoll launch --backend uds --launch.rank R
+//! --launch.world p`). Messages are length-prefixed [`Tag`]-framed:
+//!
+//! ```text
+//! [from: u32 LE][op: u64 LE][round: u64 LE][len(elems): u64 LE][payload]
+//! ```
+//!
+//! a fixed 28-byte header followed by `len * size_of::<E>()` payload bytes
+//! in **native** endianness — a Unix socket never leaves the machine, so
+//! sender and receiver always agree on byte order and element layout.
+//!
+//! # Capability profile (vs the thread backend)
+//!
+//! * **Rendezvous: unsupported** (`caps().supports_rendezvous == false`).
+//!   There is no shared address space to publish [`RemoteSlices`]
+//!   (super::RemoteSlices) into, so every send travels the framed copy
+//!   tier; the executor's capability check makes rendezvous-safe rounds
+//!   fall back automatically, and the whole quiesce family
+//!   ([`Transport::finish_op`] & co.) trivially reports "nothing pending".
+//! * **Pooled recv buffers: supported.** Each peer connection is serviced
+//!   by one reader thread that receives into buffers recycled from
+//!   [`Transport::release`] via a per-peer free-list channel, so the
+//!   steady state performs no per-round payload allocation
+//!   (`Counters::pool_hits` / `pool_misses` count reader-side reuse).
+//! * **Copy accounting.** Every send credits `Counters::bytes_copied`
+//!   with the framed payload bytes — the socket write is a physical copy —
+//!   so cross-backend ablations compare real volume and no backend
+//!   under-reports (the trait-level crediting contract).
+//!
+//! # Bootstrap (deadlock-free mesh)
+//!
+//! Every rank **binds** its listener socket `<dir>/rank-<r>.sock` first,
+//! then **connects** to all lower ranks (retrying until their listeners
+//! appear), then **accepts** from all higher ranks; each connector sends
+//! its rank as a 4-byte handshake. Because binds strictly precede
+//! connects and connects retry, any interleaving of process start-up
+//! converges. [`uds_network_typed`] wraps this for same-process tests.
+//!
+//! Reader threads are I/O plumbing, not rank workers: they do **not**
+//! count toward [`super::rank_threads_spawned`], so the engine's
+//! spawn-once assertions hold per process on this backend too.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
+
+use crate::datatypes::Elem;
+
+use super::{
+    Counters, Payload, SendSlices, Tag, Transport, TransportBackend, TransportCaps,
+    TransportError,
+};
+
+/// Framed-message header size: from(u32) + op(u64) + round(u64) + len(u64).
+const HEADER_BYTES: usize = 28;
+
+/// How long the bootstrap retries a connect to a peer whose listener has
+/// not appeared yet, and how long it waits in accept for higher ranks.
+const DEFAULT_BOOTSTRAP_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// One decoded inbound message, produced by a reader thread.
+struct Inbound<E: Elem> {
+    from: usize,
+    tag: Tag,
+    buf: Vec<E>,
+    /// The reader received into a recycled buffer (owner credits a pool
+    /// hit) rather than a fresh allocation (a miss).
+    reused: bool,
+}
+
+/// View a primitive-element slice as raw bytes for a socket write.
+///
+/// SAFETY: `E: Elem` is one of the five built-in primitives (f32/f64/
+/// i32/i64/u64) — plain-old-data with no padding, no invalid bit
+/// patterns and no drop glue — and the peer decodes at the same width on
+/// the same machine (native endianness).
+fn as_bytes<E: Elem>(s: &[E]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(s.as_ptr() as *const u8, std::mem::size_of_val(s)) }
+}
+
+/// Socket path of `rank`'s listener inside the rendezvous directory.
+pub fn socket_path(dir: &Path, rank: usize) -> PathBuf {
+    dir.join(format!("rank-{rank}.sock"))
+}
+
+fn io_disconnected(rank: usize, to: usize) -> TransportError {
+    TransportError::Disconnected { rank, to }
+}
+
+/// Reader loop for one peer connection: decode frames, receive into
+/// recycled buffers when one fits, forward to the owner's inbox. Exits
+/// when the peer closes its write half or the owner drops its inbox.
+fn reader_loop<E: Elem>(
+    owner: usize,
+    peer: usize,
+    mut stream: UnixStream,
+    inbox: Sender<Inbound<E>>,
+    free_rx: Receiver<Vec<E>>,
+) {
+    let esz = std::mem::size_of::<E>();
+    let mut free: Vec<Vec<E>> = Vec::new();
+    let mut hdr = [0u8; HEADER_BYTES];
+    loop {
+        if stream.read_exact(&mut hdr).is_err() {
+            return; // peer closed (normal teardown) or died
+        }
+        let from = u32::from_le_bytes(hdr[0..4].try_into().unwrap()) as usize;
+        let op = u64::from_le_bytes(hdr[4..12].try_into().unwrap());
+        let round = u64::from_le_bytes(hdr[12..20].try_into().unwrap());
+        let len = u64::from_le_bytes(hdr[20..28].try_into().unwrap()) as usize;
+        debug_assert_eq!(from, peer, "rank {owner}: frame claims from={from} on link to {peer}");
+        // Recycle: drain the free-list, then take the first buffer that
+        // can hold the payload without regrowing (a hit must never hide a
+        // heap allocation — same honesty rule as the thread pool).
+        while let Ok(b) = free_rx.try_recv() {
+            free.push(b);
+        }
+        let (mut buf, reused) = match free.iter().position(|b| b.capacity() >= len) {
+            Some(i) => {
+                let mut b = free.swap_remove(i);
+                b.clear();
+                (b, true)
+            }
+            None => (Vec::with_capacity(len), false),
+        };
+        if len > 0 {
+            // SAFETY: `buf` has at least `len` elements of capacity; E is
+            // POD (see `as_bytes`), so filling its storage from the wire
+            // and then claiming `len` initialized elements is sound.
+            let ok = unsafe {
+                let dst = std::slice::from_raw_parts_mut(buf.as_mut_ptr() as *mut u8, len * esz);
+                let ok = stream.read_exact(dst).is_ok();
+                if ok {
+                    buf.set_len(len);
+                }
+                ok
+            };
+            if !ok {
+                return; // truncated frame: peer died mid-message
+            }
+        }
+        let msg = Inbound { from: peer, tag: Tag::new(op, round), buf, reused };
+        if inbox.send(msg).is_err() {
+            return; // owner dropped its transport
+        }
+    }
+}
+
+/// One rank's Unix-domain-socket communication handle. See the module
+/// docs for the wire format, capability profile and bootstrap protocol.
+pub struct UdsTransport<E: Elem> {
+    rank: usize,
+    p: usize,
+    /// Write halves, one per peer (`None` at `rank` itself). Reads happen
+    /// on per-peer reader threads holding clones of the same sockets.
+    writers: Vec<Option<UnixStream>>,
+    /// All reader threads feed this single inbox.
+    rx: Receiver<Inbound<E>>,
+    /// Free-list senders, one per peer reader: `release(from, buf)` ships
+    /// consumed buffers back so the `from`-link reader receives into them.
+    free_txs: Vec<Option<Sender<Vec<E>>>>,
+    /// Early arrivals keyed by `(from, tag)`, exactly like the thread
+    /// backend's stash.
+    stash: HashMap<(usize, Tag), Payload<E>>,
+    readers: Vec<std::thread::JoinHandle<()>>,
+    counters: Counters,
+    timeout: Duration,
+}
+
+impl<E: Elem> UdsTransport<E> {
+    /// Join the `p`-rank mesh rendezvoused in `dir` as `rank`, blocking
+    /// until every pairwise connection is up (bounded by the bootstrap
+    /// timeout). Each process calls this exactly once for its own rank.
+    pub fn connect(rank: usize, p: usize, dir: &Path) -> std::io::Result<Self> {
+        Self::connect_with_timeout(rank, p, dir, DEFAULT_BOOTSTRAP_TIMEOUT)
+    }
+
+    /// [`connect`](UdsTransport::connect) with an explicit bootstrap
+    /// timeout (tests shrink it for failure injection).
+    pub fn connect_with_timeout(
+        rank: usize,
+        p: usize,
+        dir: &Path,
+        bootstrap: Duration,
+    ) -> std::io::Result<Self> {
+        assert!(p >= 1 && rank < p, "rank {rank} out of range for world {p}");
+        let deadline = Instant::now() + bootstrap;
+        // 1. Bind our own listener FIRST — lower ranks' connects retry
+        //    until it exists, so bind-before-connect makes the mesh
+        //    convergent under any process start order.
+        let own = socket_path(dir, rank);
+        let _ = std::fs::remove_file(&own); // stale socket from a dead run
+        let listener = UnixListener::bind(&own)?;
+        listener.set_nonblocking(true)?;
+
+        let mut streams: Vec<Option<UnixStream>> = (0..p).map(|_| None).collect();
+        // 2. Connect to every lower rank, retrying until its listener
+        //    appears; identify ourselves with a 4-byte rank handshake.
+        for peer in 0..rank {
+            let path = socket_path(dir, peer);
+            let stream = loop {
+                match UnixStream::connect(&path) {
+                    Ok(s) => break s,
+                    Err(e) => {
+                        if Instant::now() >= deadline {
+                            return Err(std::io::Error::new(
+                                std::io::ErrorKind::TimedOut,
+                                format!(
+                                    "rank {rank}: peer {peer} never bound {} ({e})",
+                                    path.display()
+                                ),
+                            ));
+                        }
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                }
+            };
+            let mut s = stream;
+            s.write_all(&(rank as u32).to_le_bytes())?;
+            streams[peer] = Some(s);
+        }
+        // 3. Accept one connection from every higher rank; the handshake
+        //    says which.
+        let mut accepted = 0usize;
+        while accepted < p - 1 - rank {
+            match listener.accept() {
+                Ok((mut s, _)) => {
+                    s.set_nonblocking(false)?;
+                    let mut hs = [0u8; 4];
+                    s.read_exact(&mut hs)?;
+                    let peer = u32::from_le_bytes(hs) as usize;
+                    if peer <= rank || peer >= p || streams[peer].is_some() {
+                        return Err(std::io::Error::new(
+                            std::io::ErrorKind::InvalidData,
+                            format!("rank {rank}: bogus handshake from \"rank {peer}\""),
+                        ));
+                    }
+                    streams[peer] = Some(s);
+                    accepted += 1;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        return Err(std::io::Error::new(
+                            std::io::ErrorKind::TimedOut,
+                            format!(
+                                "rank {rank}: only {accepted}/{} higher ranks connected",
+                                p - 1 - rank
+                            ),
+                        ));
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        drop(listener);
+        let _ = std::fs::remove_file(&own); // mesh is up; the name is done
+
+        // 4. Split each connection: a clone for our writes, the original
+        //    to a reader thread (plain I/O plumbing — deliberately NOT
+        //    counted by note_rank_thread_spawn, so spawn-once assertions
+        //    see only true rank workers).
+        let (inbox_tx, inbox_rx) = channel::<Inbound<E>>();
+        let mut writers: Vec<Option<UnixStream>> = (0..p).map(|_| None).collect();
+        let mut free_txs: Vec<Option<Sender<Vec<E>>>> = (0..p).map(|_| None).collect();
+        let mut readers = Vec::with_capacity(p.saturating_sub(1));
+        for (peer, slot) in streams.into_iter().enumerate() {
+            let Some(stream) = slot else { continue };
+            writers[peer] = Some(stream.try_clone()?);
+            let (ftx, frx) = channel::<Vec<E>>();
+            free_txs[peer] = Some(ftx);
+            let tx = inbox_tx.clone();
+            readers.push(
+                std::thread::Builder::new()
+                    .name(format!("uds-reader-{rank}-{peer}"))
+                    .spawn(move || reader_loop::<E>(rank, peer, stream, tx, frx))
+                    .expect("spawn uds reader thread"),
+            );
+        }
+        Ok(Self {
+            rank,
+            p,
+            writers,
+            rx: inbox_rx,
+            free_txs,
+            stash: HashMap::new(),
+            readers,
+            counters: Counters::default(),
+            timeout: Duration::from_secs(30),
+        })
+    }
+
+    /// Frame and write one tagged payload (up to two slices) to `to`.
+    /// The socket write is the backend's physical copy: credited to
+    /// `bytes_copied` so framed sends can never under-report volume.
+    fn send_frame(
+        &mut self,
+        to: usize,
+        tag: Tag,
+        head: &[E],
+        tail: &[E],
+    ) -> Result<(), TransportError> {
+        debug_assert!(to < self.p && to != self.rank, "bad send target {to}");
+        let len = head.len() + tail.len();
+        let mut hdr = [0u8; HEADER_BYTES];
+        hdr[0..4].copy_from_slice(&(self.rank as u32).to_le_bytes());
+        hdr[4..12].copy_from_slice(&tag.op.to_le_bytes());
+        hdr[12..20].copy_from_slice(&tag.round.to_le_bytes());
+        hdr[20..28].copy_from_slice(&(len as u64).to_le_bytes());
+        let rank = self.rank;
+        let w = self.writers[to].as_mut().expect("send to unconnected peer");
+        w.write_all(&hdr)
+            .and_then(|()| w.write_all(as_bytes(head)))
+            .and_then(|()| w.write_all(as_bytes(tail)))
+            .map_err(|_| io_disconnected(rank, to))?;
+        self.counters.msgs_sent += 1;
+        self.counters.elems_sent += len as u64;
+        self.counters.bytes_copied += (std::mem::size_of::<E>() * len) as u64;
+        Ok(())
+    }
+
+    /// Account one consumed inbound message and convert it to a payload.
+    fn accept_inbound(&mut self, msg: Inbound<E>) -> ((usize, Tag), Payload<E>) {
+        if msg.reused {
+            self.counters.pool_hits += 1;
+        } else {
+            self.counters.pool_misses += 1;
+        }
+        ((msg.from, msg.tag), Payload::Copied(msg.buf))
+    }
+
+    /// Receive the payload tagged `(from, tag)`, stashing out-of-order
+    /// arrivals — the socket-backed twin of the thread backend's
+    /// `recv_tagged`.
+    fn recv_tagged(&mut self, from: usize, tag: Tag) -> Result<Payload<E>, TransportError> {
+        if let Some(payload) = self.stash.remove(&(from, tag)) {
+            return Ok(payload);
+        }
+        loop {
+            match self.rx.recv_timeout(self.timeout) {
+                Ok(msg) => {
+                    let (key, payload) = self.accept_inbound(msg);
+                    if key == (from, tag) {
+                        return Ok(payload);
+                    }
+                    self.stash.insert(key, payload);
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    return Err(TransportError::Timeout {
+                        rank: self.rank,
+                        from,
+                        round: tag.round,
+                    })
+                }
+                // All reader threads exited: every peer hung up.
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(io_disconnected(self.rank, from))
+                }
+            }
+        }
+    }
+
+    /// Drain everything already decoded into the stash (non-blocking).
+    fn drain_inbox(&mut self) {
+        while let Ok(msg) = self.rx.try_recv() {
+            let (key, payload) = self.accept_inbound(msg);
+            self.stash.insert(key, payload);
+        }
+    }
+}
+
+impl<E: Elem> Transport<E> for UdsTransport<E> {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn p(&self) -> usize {
+        self.p
+    }
+
+    fn caps(&self) -> TransportCaps {
+        TransportBackend::Uds.caps()
+    }
+
+    fn sendrecv_slices_tagged(
+        &mut self,
+        send: Option<SendSlices<'_, E>>,
+        recv_from: Option<usize>,
+        tag: Tag,
+    ) -> Result<Option<Payload<E>>, TransportError> {
+        self.counters.sendrecv_rounds += 1;
+        if let Some(s) = send {
+            // Rendezvous is unsupported on this backend: whatever the
+            // caller's safety verdict, the payload travels the framed
+            // copy tier (the executor's caps check normally prevents the
+            // verdict from even being set).
+            self.send_frame(s.to, tag, s.head, s.tail)?;
+        }
+        match recv_from {
+            None => Ok(None),
+            Some(from) => Transport::recv_payload(self, from, tag).map(Some),
+        }
+    }
+
+    fn recv_payload(&mut self, from: usize, tag: Tag) -> Result<Payload<E>, TransportError> {
+        let payload = self.recv_tagged(from, tag)?;
+        self.counters.msgs_recv += 1;
+        self.counters.elems_recv += payload.len() as u64;
+        Ok(payload)
+    }
+
+    fn try_recv_payload(&mut self, from: usize, tag: Tag) -> Option<Payload<E>> {
+        self.drain_inbox();
+        let payload = self.stash.remove(&(from, tag))?;
+        self.counters.msgs_recv += 1;
+        self.counters.elems_recv += payload.len() as u64;
+        Some(payload)
+    }
+
+    fn complete_tagged(&mut self, from: usize, _tag: Tag, payload: Payload<E>) {
+        match payload {
+            Payload::Copied(v) => Transport::release(self, from, v),
+            // Unreachable: this backend never constructs Remote payloads.
+            Payload::Remote(_) => unreachable!(
+                "rank {}: rendezvous payload on the UDS backend (caps forbid publishes)",
+                self.rank
+            ),
+        }
+    }
+
+    fn acquire(&mut self, _to: usize, need: usize) -> Vec<E> {
+        // Sends write working-vector slices straight to the socket, so
+        // there is no sender-side staging pool to recycle from; the
+        // backend's pooling lives on the receive side (reader free-lists).
+        Vec::with_capacity(need)
+    }
+
+    fn release(&mut self, from: usize, payload: Vec<E>) {
+        if payload.capacity() == 0 || from == self.rank {
+            return;
+        }
+        if let Some(ftx) = &self.free_txs[from] {
+            if ftx.send(payload).is_ok() {
+                self.counters.bufs_recycled += 1;
+            }
+        }
+    }
+
+    // No publish can ever be outstanding: the quiesce family is trivial.
+    fn finish_round(&mut self) -> Result<(), TransportError> {
+        Ok(())
+    }
+
+    fn finish_op(&mut self, _op: u64) -> Result<(), TransportError> {
+        Ok(())
+    }
+
+    fn try_finish(&mut self, _tag: Tag) -> bool {
+        true
+    }
+
+    fn op_has_pending_publish(&mut self, _op: u64) -> bool {
+        false
+    }
+
+    fn forget_op(&mut self, op: u64) -> usize {
+        self.drain_inbox();
+        let keys: Vec<(usize, Tag)> =
+            self.stash.keys().filter(|(_, t)| t.op == op).copied().collect();
+        let discarded = keys.len();
+        for (from, tag) in keys {
+            if let Some(payload) = self.stash.remove(&(from, tag)) {
+                self.complete_tagged(from, tag, payload);
+            }
+        }
+        discarded
+    }
+
+    fn counters(&self) -> &Counters {
+        &self.counters
+    }
+
+    fn counters_mut(&mut self) -> &mut Counters {
+        &mut self.counters
+    }
+
+    fn timeout(&self) -> Duration {
+        self.timeout
+    }
+
+    fn set_timeout(&mut self, timeout: Duration) {
+        self.timeout = timeout;
+    }
+
+    fn set_rendezvous(&mut self, _on: bool) {
+        // Capability-gated off: nothing to opt into.
+    }
+
+    fn set_rendezvous_min_elems(&mut self, _min: usize) {}
+}
+
+impl<E: Elem> Drop for UdsTransport<E> {
+    fn drop(&mut self) {
+        // Closing our socket halves EOFs every peer's reader for this
+        // link; buffered data already written is still delivered first
+        // (AF_UNIX stream semantics), so a peer mid-collective finishes
+        // reading what we sent. Dropping the free-list senders unblocks
+        // nothing (readers only try_recv them) but lets readers observe
+        // the hang-up through their own read side.
+        for w in self.writers.iter_mut().flatten() {
+            let _ = w.shutdown(std::net::Shutdown::Both);
+        }
+        self.free_txs.clear();
+        for h in self.readers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Build a `p`-rank UDS mesh **inside one process** (one bootstrap thread
+/// per rank, joined before returning) — the cross-backend test harness.
+/// Production multi-process use calls [`UdsTransport::connect`] once per
+/// process instead (`ccoll launch`).
+pub fn uds_network_typed<E: Elem>(p: usize, dir: &Path) -> std::io::Result<Vec<UdsTransport<E>>> {
+    let handles: Vec<_> = (0..p)
+        .map(|rank| {
+            let dir = dir.to_path_buf();
+            std::thread::Builder::new()
+                .name(format!("uds-bootstrap-{rank}"))
+                .spawn(move || UdsTransport::<E>::connect(rank, p, &dir))
+                .expect("spawn uds bootstrap thread")
+        })
+        .collect();
+    handles
+        .into_iter()
+        .map(|h| h.join().expect("uds bootstrap thread panicked"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Fresh rendezvous dir under the target tmpdir, unique per test.
+    fn scratch_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "ccoll-uds-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).expect("create scratch dir");
+        dir
+    }
+
+    fn run_mesh<E: Elem, T, F>(p: usize, dir: &Path, f: F) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: Fn(usize, &mut UdsTransport<E>) -> T + Send + Sync + 'static,
+    {
+        let transports = uds_network_typed::<E>(p, dir).expect("mesh bootstrap");
+        let f = std::sync::Arc::new(f);
+        let handles: Vec<_> = transports
+            .into_iter()
+            .enumerate()
+            .map(|(rank, mut t)| {
+                let f = f.clone();
+                std::thread::spawn(move || f(rank, &mut t))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("mesh rank panicked")).collect()
+    }
+
+    #[test]
+    fn ring_sendrecv_roundtrip_over_sockets() {
+        let dir = scratch_dir("ring");
+        let out = run_mesh::<i64, _, _>(4, &dir, |rank, t| {
+            let to = (rank + 1) % 4;
+            let from = (rank + 3) % 4;
+            let data = [rank as i64, 100 + rank as i64];
+            let send = SendSlices { to, head: &data[..1], tail: &data[1..], rendezvous: false };
+            let payload = t
+                .sendrecv_slices_tagged(Some(send), Some(from), Tag::untagged(0))
+                .unwrap()
+                .unwrap();
+            let got = match &payload {
+                Payload::Copied(v) => v.clone(),
+                Payload::Remote(_) => unreachable!(),
+            };
+            t.complete_tagged(from, Tag::untagged(0), payload);
+            (got, t.counters().clone())
+        });
+        for (rank, (got, c)) in out.iter().enumerate() {
+            let from = (rank + 3) % 4;
+            assert_eq!(got, &vec![from as i64, 100 + from as i64]);
+            assert_eq!(c.msgs_sent, 1);
+            assert_eq!(c.msgs_recv, 1);
+            assert_eq!(c.elems_sent, 2);
+            assert_eq!(c.elems_recv, 2);
+            assert_eq!(c.bytes_copied, 2 * 8, "framed i64 send copies 8 B/elem");
+            assert_eq!(c.rendezvous_hits, 0);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rendezvous_verdict_is_ignored_and_payload_travels_framed() {
+        // Even a caller that (wrongly) claims rendezvous safety must get a
+        // Copied payload: the backend cannot publish.
+        let dir = scratch_dir("no-rdv");
+        let out = run_mesh::<f32, _, _>(2, &dir, |rank, t| {
+            assert!(!t.caps().supports_rendezvous);
+            t.set_rendezvous(true); // must be a no-op
+            let peer = 1 - rank;
+            let data = [rank as f32; 300]; // above any min-elems threshold
+            let send = SendSlices { to: peer, head: &data, tail: &[], rendezvous: true };
+            let payload = t
+                .sendrecv_slices_tagged(Some(send), Some(peer), Tag::untagged(0))
+                .unwrap()
+                .unwrap();
+            let copied = matches!(payload, Payload::Copied(_));
+            t.complete_tagged(peer, Tag::untagged(0), payload);
+            t.finish_round().unwrap(); // trivial: nothing ever pends
+            (copied, t.counters().rendezvous_hits)
+        });
+        for (copied, hits) in out {
+            assert!(copied, "UDS payloads must always be framed copies");
+            assert_eq!(hits, 0);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn out_of_order_tags_are_stashed() {
+        let dir = scratch_dir("stash");
+        let out = run_mesh::<i64, _, _>(2, &dir, |rank, t| {
+            if rank == 1 {
+                for (op, val) in [(7u64, 70i64), (9, 90)] {
+                    let data = [val];
+                    let send =
+                        SendSlices { to: 0, head: &data, tail: &[], rendezvous: false };
+                    t.sendrecv_slices_tagged(Some(send), None, Tag::new(op, 0)).unwrap();
+                }
+                vec![]
+            } else {
+                // Consume epoch 9 before epoch 7: the stash must reorder.
+                let b = Transport::recv_payload(t, 1, Tag::new(9, 0)).unwrap();
+                let a = Transport::recv_payload(t, 1, Tag::new(7, 0)).unwrap();
+                let read = |p: &Payload<i64>| match p {
+                    Payload::Copied(v) => v[0],
+                    Payload::Remote(_) => unreachable!(),
+                };
+                let out = vec![read(&a), read(&b)];
+                t.complete_tagged(1, Tag::new(7, 0), a);
+                t.complete_tagged(1, Tag::new(9, 0), b);
+                out
+            }
+        });
+        assert_eq!(out[0], vec![70, 90]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn released_buffers_are_reused_by_the_reader() {
+        // Lock-step ping-pong with releases: after warm-up the reader must
+        // serve from recycled buffers (pool hits), not fresh allocations.
+        let dir = scratch_dir("recycle");
+        let rounds = 16u64;
+        let out = run_mesh::<f64, _, _>(2, &dir, move |rank, t| {
+            let peer = 1 - rank;
+            let data = [rank as f64; 32];
+            for round in 0..rounds {
+                let send =
+                    SendSlices { to: peer, head: &data, tail: &[], rendezvous: false };
+                let payload = t
+                    .sendrecv_slices_tagged(Some(send), Some(peer), Tag::untagged(round))
+                    .unwrap()
+                    .unwrap();
+                assert_eq!(payload.len(), 32);
+                t.complete_tagged(peer, Tag::untagged(round), payload);
+            }
+            t.counters().clone()
+        });
+        for (rank, c) in out.iter().enumerate() {
+            assert_eq!(c.pool_hits + c.pool_misses, rounds, "rank {rank}");
+            // The free-list hand-off races the next recv, so early rounds
+            // may miss; steady state must hit (same bound family as the
+            // thread pool's warm-up caveat).
+            assert!(
+                c.pool_hits >= rounds - 4,
+                "rank {rank}: only {} hits in {rounds} rounds — recv buffers \
+                 are not being recycled",
+                c.pool_hits
+            );
+            assert!(c.bufs_recycled > 0, "rank {rank}: release never recycled");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn timeout_detects_missing_peer_message() {
+        let dir = scratch_dir("timeout");
+        let out = run_mesh::<f32, _, _>(2, &dir, |rank, t| {
+            if rank == 0 {
+                t.set_timeout(Duration::from_millis(50));
+                matches!(
+                    Transport::recv_payload(t, 1, Tag::untagged(3)),
+                    Err(TransportError::Timeout { .. })
+                )
+            } else {
+                true // rank 1 never sends
+            }
+        });
+        assert!(out[0], "rank 0 should have timed out");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn forget_op_discards_only_that_epoch() {
+        let dir = scratch_dir("forget");
+        let out = run_mesh::<i64, _, _>(2, &dir, |rank, t| {
+            if rank == 1 {
+                for tag in [Tag::new(9, 0), Tag::new(9, 1), Tag::new(3, 0)] {
+                    let data = [5i64; 4];
+                    let send =
+                        SendSlices { to: 0, head: &data, tail: &[], rendezvous: false };
+                    t.sendrecv_slices_tagged(Some(send), None, tag).unwrap();
+                }
+                0
+            } else {
+                // Wait until all three frames are decodable, then forget.
+                let deadline = Instant::now() + Duration::from_secs(10);
+                loop {
+                    t.drain_inbox();
+                    if t.stash.len() == 3 {
+                        break;
+                    }
+                    assert!(Instant::now() < deadline, "frames never arrived");
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                let discarded = t.forget_op(9);
+                let rest = Transport::recv_payload(t, 1, Tag::new(3, 0)).unwrap();
+                assert_eq!(rest.len(), 4);
+                t.complete_tagged(1, Tag::new(3, 0), rest);
+                discarded
+            }
+        });
+        assert_eq!(out[0], 2, "exactly the two epoch-9 payloads discarded");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

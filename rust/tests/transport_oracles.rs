@@ -1,0 +1,272 @@
+//! Cross-backend transport oracles (ISSUE 6): the thread backend (the
+//! PR 1–5 oracle, with its rendezvous/pooled tiers) and the
+//! Unix-domain-socket backend (framed copies only) execute the SAME
+//! schedule over the SAME inputs — the schedule fixes the ⊕ association,
+//! so for the wrapping-integer dtypes the two backends must produce
+//! **bit-identical** results for every schedule generator in the library
+//! and for regular and zipf partitions alike. No tolerances anywhere in
+//! this file: every assertion is `==` on integer values.
+//!
+//! Also here: the UDS engine mini-soak — ≥100 operations through ONE
+//! `CollectiveEngine::with_transports` over socket transports, asserting
+//! exact results and spawn-once per process (the engine's `p` workers are
+//! the only rank threads the whole soak creates).
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use circulant_collectives::collectives::{
+    baselines, execute_rank, run_schedule_threads_tiered_typed, Algorithm,
+};
+use circulant_collectives::datatypes::elem::{int_vec, test_value_bounds};
+use circulant_collectives::datatypes::{BlockPartition, Elem};
+use circulant_collectives::engine::{CollectiveEngine, EngineConfig, OpRequest};
+use circulant_collectives::ops::{ReduceOp, SumOp};
+use circulant_collectives::schedule::Schedule;
+use circulant_collectives::topology::skips::SkipScheme;
+use circulant_collectives::transport::rank_threads_spawned;
+use circulant_collectives::transport::uds::uds_network_typed;
+use circulant_collectives::util::rng::SplitMix64;
+
+/// Every test in this binary takes this guard: the mini-soak asserts an
+/// exact `rank_threads_spawned` delta, and the identity tests spawn rank
+/// threads of their own (the thread-backend side), so they must not
+/// overlap with it.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// A fresh scratch directory for one UDS mesh (sockets are filesystem
+/// objects, so concurrent meshes need disjoint directories).
+fn scratch_dir(tag: &str) -> PathBuf {
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    let n = NEXT.fetch_add(1, Ordering::Relaxed);
+    let dir = std::env::temp_dir()
+        .join(format!("ccoll-xbackend-{tag}-{}-{n}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("create scratch dir");
+    dir
+}
+
+fn inputs_for<T: Elem>(p: usize, m: usize, seed: u64) -> Vec<Vec<T>> {
+    let (lo, hi) = test_value_bounds(T::DTYPE);
+    let mut rng = SplitMix64::new(seed);
+    (0..p).map(|_| int_vec(&mut rng, m, lo, hi)).collect()
+}
+
+/// Scalar fold of `op` over all rank inputs — exact for integer dtypes in
+/// any association, so it is THE unique correct answer.
+fn fold_oracle<T: Elem>(inputs: &[Vec<T>], op: &dyn ReduceOp<T>) -> Vec<T> {
+    let mut acc = vec![op.identity(); inputs[0].len()];
+    for v in inputs {
+        op.combine(&mut acc, v);
+    }
+    acc
+}
+
+/// Every schedule generator in the library, instantiated for `p` (rooted
+/// generators at two roots; power-of-two-only generators gated) — the
+/// same enumeration `rust/tests/dtype_oracles.rs` uses for its cross-tier
+/// matrix.
+fn all_generator_schedules(p: usize) -> Vec<Schedule> {
+    let mut v = Vec::new();
+    for scheme in [SkipScheme::HalvingUp, SkipScheme::PowerOfTwo, SkipScheme::Sqrt] {
+        let skips = scheme.skips(p).unwrap();
+        v.push(circulant_collectives::collectives::reduce_scatter_schedule(p, &skips));
+        v.push(circulant_collectives::collectives::allgather_schedule(p, &skips));
+        v.push(circulant_collectives::collectives::allreduce_schedule(p, &skips));
+    }
+    v.push(baselines::ring_reduce_scatter_schedule(p));
+    v.push(baselines::ring_allgather_schedule(p));
+    v.push(baselines::ring_allreduce_schedule(p));
+    v.push(baselines::bruck_allgather_schedule(p));
+    v.push(baselines::binomial_allreduce_schedule(p));
+    v.push(baselines::rabenseifner_allreduce_schedule(p));
+    v.push(baselines::recursive_doubling_allreduce_schedule(p));
+    for root in [0, p - 1] {
+        v.push(baselines::binomial_reduce_schedule(p, root));
+        v.push(baselines::binomial_bcast_schedule(p, root));
+        v.push(baselines::binomial_scatter_schedule(p, root));
+        v.push(baselines::binomial_gather_schedule(p, root));
+    }
+    if p.is_power_of_two() {
+        v.push(baselines::recursive_halving_rs_schedule(p));
+        v.push(baselines::recursive_doubling_ag_schedule(p));
+    }
+    v
+}
+
+/// The partition shapes of the cross-backend matrix for one `(p, m)`:
+/// the regular partition and a skewed zipf partition (possibly with
+/// empty blocks — zero-length frames must round-trip the sockets too).
+fn partitions(p: usize, m: usize) -> Vec<(&'static str, BlockPartition)> {
+    vec![
+        ("regular", BlockPartition::regular(p, m)),
+        ("zipf", BlockPartition::zipf(p, m, 1.3, p as u64)),
+    ]
+}
+
+/// Execute one schedule over a fresh p-process-shaped UDS mesh (p
+/// transports in this process, one plain thread per rank — the wire is
+/// real sockets even though the ranks share an address space here).
+fn run_uds<T: Elem>(
+    sched: &Schedule,
+    part: &BlockPartition,
+    inputs: &[Vec<T>],
+    tag: &str,
+) -> Vec<Vec<T>> {
+    let p = sched.p;
+    let dir = scratch_dir(tag);
+    let transports = uds_network_typed::<T>(p, &dir).expect("uds bootstrap");
+    let sched = Arc::new(sched.clone());
+    let part = Arc::new(part.clone());
+    let handles: Vec<_> = transports
+        .into_iter()
+        .enumerate()
+        .map(|(r, mut t)| {
+            let sched = sched.clone();
+            let part = part.clone();
+            let mut buf = inputs[r].clone();
+            std::thread::Builder::new()
+                .name(format!("uds-oracle-rank-{r}"))
+                .stack_size(8 << 20)
+                .spawn(move || {
+                    execute_rank(&mut t, &sched, &part, &SumOp, &mut buf, 0)
+                        .unwrap_or_else(|e| panic!("uds rank {r}: {e}"));
+                    buf
+                })
+                .expect("spawn uds oracle rank")
+        })
+        .collect();
+    let out = handles.into_iter().map(|h| h.join().expect("uds rank thread")).collect();
+    let _ = std::fs::remove_dir_all(&dir);
+    out
+}
+
+fn assert_cross_backend_identity<T: Elem>(seed: u64) {
+    let _guard = serial();
+    for p in [2usize, 5, 8] {
+        let m = 7 * p + 3;
+        for (wname, part) in partitions(p, m) {
+            for sched in all_generator_schedules(p) {
+                let inputs = inputs_for::<T>(p, part.total(), seed + p as u64);
+                let thread = run_schedule_threads_tiered_typed::<T>(
+                    &sched,
+                    &part,
+                    Arc::new(SumOp),
+                    inputs.clone(),
+                    true,
+                );
+                let uds = run_uds::<T>(&sched, &part, &inputs, "gen");
+                for r in 0..p {
+                    assert_eq!(
+                        thread[r].0, uds[r],
+                        "{:?} {wname} {} p={p} r={r}: thread and uds backends disagree",
+                        T::DTYPE, sched.name
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn thread_and_uds_bit_identical_every_generator_i64() {
+    assert_cross_backend_identity::<i64>(17);
+}
+
+#[test]
+fn thread_and_uds_bit_identical_every_generator_u64() {
+    assert_cross_backend_identity::<u64>(23);
+}
+
+#[test]
+fn uds_matches_the_exact_fold_oracle_i64() {
+    // Beyond agreeing with the thread backend, the socket backend must
+    // compute the unique wrapping-sum answer on the region each
+    // collective's semantics define — allreduce everywhere, the owned
+    // block for reduce-scatter — over regular and zipf partitions.
+    let _guard = serial();
+    for p in [2usize, 5, 8] {
+        let m = 7 * p + 3;
+        for (wname, part) in partitions(p, m) {
+            let inputs = inputs_for::<i64>(p, part.total(), 400 + p as u64);
+            let want = fold_oracle::<i64>(&inputs, &SumOp);
+            for alg_name in ["rs", "ar"] {
+                let sched = Algorithm::parse(alg_name).unwrap().schedule(p);
+                let uds = run_uds::<i64>(&sched, &part, &inputs, "oracle");
+                for (r, buf) in uds.iter().enumerate() {
+                    let range =
+                        if alg_name == "ar" { 0..part.total() } else { part.range(r) };
+                    assert_eq!(
+                        &buf[range.clone()],
+                        &want[range],
+                        "{wname} {alg_name} p={p} r={r}: uds result is wrong"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn uds_engine_mini_soak_spawns_once_per_process() {
+    let _guard = serial();
+    let p = 4usize;
+    let n_ops = 120usize; // ≥ 100, windowed so several stay in flight
+    let window = 8usize;
+    let before = rank_threads_spawned();
+    let dir = scratch_dir("soak");
+    let transports = uds_network_typed::<i64>(p, &dir).expect("uds bootstrap");
+    let mut engine = CollectiveEngine::with_transports(EngineConfig::new(p), transports);
+
+    let mut rng = SplitMix64::new(0x50AC);
+    let sizes = [8usize, 17, 33, 64];
+    let mut pending: std::collections::VecDeque<(Vec<i64>, _)> =
+        std::collections::VecDeque::with_capacity(window);
+    let mut drain = |pending: &mut std::collections::VecDeque<(Vec<i64>, _)>| {
+        let (want, handle): (Vec<i64>, circulant_collectives::engine::OpHandle<i64, _>) =
+            pending.pop_front().expect("nonempty window");
+        let out = handle.wait().expect("soak op");
+        for (r, buf) in out.iter().enumerate() {
+            assert_eq!(buf, &want, "soak rank {r}");
+        }
+    };
+    for i in 0..n_ops {
+        let m = sizes[i % sizes.len()];
+        let inputs: Vec<Vec<i64>> =
+            (0..p).map(|_| int_vec(&mut rng, m, -8, 9)).collect();
+        let want = fold_oracle::<i64>(&inputs, &SumOp);
+        let handle = engine.submit(OpRequest::allreduce(inputs, "sum")).expect("submit");
+        pending.push_back((want, handle));
+        if pending.len() >= window {
+            drain(&mut pending);
+        }
+    }
+    while !pending.is_empty() {
+        drain(&mut pending);
+    }
+    let plan_stats = engine.plan_stats();
+    engine.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // Spawn-once: the soak's only rank threads are the engine's p
+    // workers — socket reader threads are transport plumbing, counted
+    // nowhere, and nothing may spawn per operation.
+    assert_eq!(
+        rank_threads_spawned() - before,
+        p as u64,
+        "uds engine must spawn exactly p rank workers for the whole soak"
+    );
+    // Repeated shapes must amortize through the plan cache, same as the
+    // thread-backend engine.
+    assert!(
+        plan_stats.hits > plan_stats.misses,
+        "soak replayed {} shapes but plan cache saw hits={} misses={}",
+        sizes.len(),
+        plan_stats.hits,
+        plan_stats.misses
+    );
+}
