@@ -18,6 +18,11 @@
 //!              over the Unix-domain-socket transport (`--backend uds`),
 //!              or all ranks in-process (`--backend thread`) — the
 //!              cross-backend acceptance driver
+//!   chaos      engine soak under a seeded, declarative fault plan
+//!              (`transport::fault`): kill a rank mid-soak, assert the
+//!              RankDown error taxonomy, survivor bit-exactness, the
+//!              2×op-timeout hang bound, spawn-once, and drain-mode
+//!              shutdown — the robustness acceptance driver
 //!
 //! Global flags: `--config FILE` and `--key value` overrides (see
 //! `crate::config`). Unknown `run.op` / `run.algorithm` / `run.dtype`
@@ -68,7 +73,17 @@ commands:
                            (keys: --backend thread|uds --rank R --world P
                            --dir SOCKDIR launch.m launch.seed launch.verify
                            run.dtype transport.backend; thread backend runs
-                           every rank in this one process)
+                           every rank in this one process; launch.iters
+                           repeats the collective back-to-back)
+  chaos                    fault-injection soak: one persistent engine over
+                           fault-wrapped transports, kill a rank mid-run,
+                           assert RankDown taxonomy + survivor bit-exactness
+                           + no hang beyond 2× the op timeout (keys: chaos.p
+                           chaos.ops chaos.m chaos.inflight chaos.seed
+                           chaos.timeout_ms chaos.drop_prob chaos.json FILE
+                           --kill-rank R --at-op N run.dtype
+                           engine.retry.attempts engine.retry.base_ms
+                           engine.backpressure_timeout)
 ";
 
 /// Entry point: parse args, dispatch. Returns the process exit code.
@@ -99,6 +114,7 @@ pub fn main_with_args(args: Vec<String>) -> Result<()> {
         "search" => cmd_search(&cfg),
         "train" => cmd_train(&cfg),
         "launch" => cmd_launch(&cfg),
+        "chaos" => cmd_chaos(&cfg),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
             Ok(())
@@ -221,6 +237,21 @@ fn cmd_info(cfg: &Config) -> Result<()> {
             "default transport backend ({})",
             crate::transport::TransportBackend::NAMES_HELP
         ),
+    ]);
+    kt.row(&[
+        "CCOLL_RETRY_ATTEMPTS".into(),
+        k.retry_attempts.to_string(),
+        "transient-send retries before a peer is declared down (0 = fail fast)".into(),
+    ]);
+    kt.row(&[
+        "CCOLL_RETRY_BASE_MS".into(),
+        k.retry_base_ms.to_string(),
+        "base backoff between send retries (doubles per attempt)".into(),
+    ]);
+    kt.row(&[
+        "CCOLL_ENGINE_BACKPRESSURE_TIMEOUT".into(),
+        format!("{}s", k.engine_backpressure_timeout_secs),
+        "max wait for a queue slot before submit fails loudly".into(),
     ]);
     kt.print();
     let n: usize = cfg.entries().count();
@@ -454,6 +485,12 @@ fn cmd_serve_typed<T: Elem>(cfg: &Config) -> Result<()> {
              (window 0 disables fusion)"
         );
     }
+    let retry_attempts = cfg.get_usize("engine.retry.attempts", knobs.retry_attempts)?;
+    let retry_base_ms = cfg.get_usize("engine.retry.base_ms", knobs.retry_base_ms as usize)? as u64;
+    let backpressure_secs = cfg.get_usize(
+        "engine.backpressure_timeout",
+        knobs.engine_backpressure_timeout_secs as usize,
+    )? as u64;
 
     // `serve --trace FILE` (the bare --trace flag) or `--serve.trace FILE`.
     let trace_path = cfg.get("serve.trace").or_else(|| cfg.get("trace"));
@@ -489,7 +526,9 @@ fn cmd_serve_typed<T: Elem>(cfg: &Config) -> Result<()> {
             .park(park)
             .fusion(fuse)
             .fusion_max_bytes(fusion_max_bytes)
-            .fusion_window(fusion_window),
+            .fusion_window(fusion_window)
+            .retry(retry_attempts, retry_base_ms)
+            .backpressure_timeout(std::time::Duration::from_secs(backpressure_secs)),
     );
 
     let (lo, hi) = elem::test_value_bounds(T::DTYPE);
@@ -939,6 +978,11 @@ fn cmd_launch_typed<T: Elem>(cfg: &Config) -> Result<()> {
     let m = cfg.get_usize("launch.m", 1 << 12)?;
     let seed = cfg.get_usize("launch.seed", 1)? as u64;
     let verify = cfg.get_bool("launch.verify", true)?;
+    // `launch.iters` repeats the collective back-to-back (fresh inputs,
+    // advancing wire epochs). The kill-one-rank CI smoke relies on a
+    // large iteration count to keep survivors on the wire long enough
+    // for the kill to land mid-collective.
+    let iters = cfg.get_usize("launch.iters", 1)?.max(1);
 
     // Deterministic inputs for ALL ranks from the seed — every process
     // computes the same vectors, its own rank's share, the scalar oracle
@@ -959,11 +1003,14 @@ fn cmd_launch_typed<T: Elem>(cfg: &Config) -> Result<()> {
 
     match backend {
         TransportBackend::Thread => {
-            let out = run_schedule_threads_typed::<T>(&sched, &part, Arc::new(SumOp), inputs);
-            if verify {
-                for (r, buf) in out.iter().enumerate() {
-                    if buf[..] != oracle[..] {
-                        bail!("launch VERIFY FAILED: thread backend rank {r}");
+            for _ in 0..iters {
+                let out =
+                    run_schedule_threads_typed::<T>(&sched, &part, Arc::new(SumOp), inputs.clone());
+                if verify {
+                    for (r, buf) in out.iter().enumerate() {
+                        if buf[..] != oracle[..] {
+                            bail!("launch VERIFY FAILED: thread backend rank {r}");
+                        }
                     }
                 }
             }
@@ -992,14 +1039,24 @@ fn cmd_launch_typed<T: Elem>(cfg: &Config) -> Result<()> {
             })?;
             std::fs::create_dir_all(dir)
                 .map_err(|e| anyhow!("cannot create --dir {dir}: {e}"))?;
+            // Stale-socket hygiene: remove leftovers from a crashed run,
+            // refuse loudly if another live process already serves this
+            // rank in this directory.
+            UdsTransport::<T>::preflight_socket(Path::new(dir), rank)
+                .map_err(|e| anyhow!("uds preflight failed (rank {rank} in {dir}): {e}"))?;
             let t0 = std::time::Instant::now();
             let mut transport = UdsTransport::<T>::connect(rank, world, Path::new(dir))
                 .map_err(|e| anyhow!("uds bootstrap failed (rank {rank}/{world} in {dir}): {e}"))?;
             let bootstrap = t0.elapsed().as_secs_f64();
             let mut buf = inputs[rank].clone();
             let t1 = std::time::Instant::now();
-            execute_rank(&mut transport, &sched, &part, &SumOp, &mut buf, 0)
-                .map_err(|e| anyhow!("rank {rank}: {e}"))?;
+            let mut round_base = 0u64;
+            for _ in 0..iters {
+                buf.copy_from_slice(&inputs[rank]);
+                round_base =
+                    execute_rank(&mut transport, &sched, &part, &SumOp, &mut buf, round_base)
+                        .map_err(|e| anyhow!("rank {rank}: {e}"))?;
+            }
             let wall = t1.elapsed().as_secs_f64();
             if verify {
                 if buf[..] != oracle[..] {
@@ -1022,9 +1079,9 @@ fn cmd_launch_typed<T: Elem>(cfg: &Config) -> Result<()> {
             }
             let c = transport.counters();
             println!(
-                "launch: OK — uds backend, rank {rank}/{world}, {m} {} elems, {} rounds, \
-                 bootstrap {bootstrap:.3}s, collective {wall:.3}s, sent {} msgs / {} elems, \
-                 copied {} B, recv-pool hits/misses {}/{}{}",
+                "launch: OK — uds backend, rank {rank}/{world}, {m} {} elems × {iters} iters, \
+                 {} rounds, bootstrap {bootstrap:.3}s, collective {wall:.3}s, sent {} msgs / \
+                 {} elems, copied {} B, recv-pool hits/misses {}/{}{}",
                 T::DTYPE.name(),
                 sched.rounds.len(),
                 c.msgs_sent,
@@ -1036,5 +1093,314 @@ fn cmd_launch_typed<T: Elem>(cfg: &Config) -> Result<()> {
             );
         }
     }
+    Ok(())
+}
+
+/// Engine transports under chaos: the in-process thread network with a
+/// seeded fault plan layered on every rank's endpoint.
+type ChaosNet<T> = crate::transport::fault::FaultTransport<T, crate::transport::Endpoint<T>>;
+
+fn cmd_chaos(cfg: &Config) -> Result<()> {
+    match cfg.dtype()? {
+        DType::F32 => cmd_chaos_typed::<f32>(cfg),
+        DType::F64 => cmd_chaos_typed::<f64>(cfg),
+        DType::I32 => cmd_chaos_typed::<i32>(cfg),
+        DType::I64 => cmd_chaos_typed::<i64>(cfg),
+        DType::U64 => cmd_chaos_typed::<u64>(cfg),
+    }
+}
+
+/// The robustness acceptance driver: ONE persistent engine whose rank
+/// transports are wrapped in [`crate::transport::fault::FaultTransport`]
+/// with a seeded plan — by default a fault-injected kill of one rank
+/// mid-soak (`--kill-rank R --at-op N`), optionally message drops
+/// (`chaos.drop_prob`). The soak then *asserts* the failure contract:
+///
+///   - every op that completes is bit-exact vs the scalar sum oracle;
+///   - every op failed by the kill carries the `RankDown` taxonomy
+///     (positive death detection), never a bare liveness `Timeout`;
+///   - no wait blocks longer than 2× the op timeout (the hang bound);
+///   - exactly `p` rank threads were spawned (spawn-once survives chaos);
+///   - in-flight accounting drains to zero (no leaked slots after ≥ the
+///     killed half of the soak failed);
+///   - drain-mode shutdown completes in-flight work and rejects new
+///     submissions.
+fn cmd_chaos_typed<T: Elem>(cfg: &Config) -> Result<()> {
+    use crate::collectives::CollectiveError;
+    use crate::engine::{CollectiveEngine, EngineConfig, EngineError, OpHandle, OpRequest};
+    use crate::transport::fault::{FaultAction, FaultPlan, FaultRule, FaultTransport};
+    use crate::transport::{network_typed, TransportError};
+    use std::collections::VecDeque;
+    use std::time::{Duration, Instant};
+
+    let p = cfg.get_usize("chaos.p", 4)?;
+    if p < 2 {
+        bail!("chaos.p must be ≥ 2 (a one-rank collective has no peer to kill)");
+    }
+    let n_ops = cfg.get_usize("chaos.ops", 250)?;
+    if n_ops == 0 {
+        bail!("chaos.ops must be ≥ 1");
+    }
+    let m = cfg.get_usize("chaos.m", 256)?;
+    let inflight = cfg.get_usize("chaos.inflight", 4)?.max(1);
+    let seed = cfg.get_usize("chaos.seed", 1)? as u64;
+    let timeout_ms = cfg.get_usize("chaos.timeout_ms", 2_000)? as u64;
+    let drop_prob = cfg.get_f64("chaos.drop_prob", 0.0)?;
+    if !(0.0..=1.0).contains(&drop_prob) {
+        bail!("chaos.drop_prob must be in [0, 1], got {drop_prob}");
+    }
+    // The kill is on by default (this is the acceptance driver for the
+    // failure path); `--chaos.kill 0` runs a fault-plan soak without it.
+    let kill_enabled = cfg.get_bool("chaos.kill", true)?;
+    let kill_rank = match cfg.get("chaos.kill_rank").or_else(|| cfg.get("kill-rank")) {
+        Some(v) => v
+            .parse::<usize>()
+            .map_err(|_| anyhow!("bad --kill-rank {v:?} (want 0..{p})"))?,
+        None => p - 1,
+    };
+    if kill_rank >= p {
+        bail!("--kill-rank {kill_rank} out of range for chaos.p {p}");
+    }
+    // 1-based submitted-op index at which the kill engages (the fault
+    // layer kills once it observes an op tag ≥ this watermark).
+    let at_op = match cfg.get("chaos.at_op").or_else(|| cfg.get("at-op")) {
+        Some(v) => v
+            .replace('_', "")
+            .parse::<u64>()
+            .map_err(|_| anyhow!("bad --at-op {v:?} (want a positive op index)"))?,
+        None => ((n_ops / 2) as u64).max(1),
+    };
+    let knobs = crate::env_knobs::knobs();
+    let queue_depth = cfg.get_usize("engine.queue_depth", knobs.engine_queue_depth)?;
+    let retry_attempts = cfg.get_usize("engine.retry.attempts", knobs.retry_attempts)?;
+    let retry_base_ms = cfg.get_usize("engine.retry.base_ms", knobs.retry_base_ms as usize)? as u64;
+    let backpressure_secs = cfg.get_usize(
+        "engine.backpressure_timeout",
+        knobs.engine_backpressure_timeout_secs as usize,
+    )? as u64;
+
+    let mut plan = FaultPlan::new(seed);
+    if kill_enabled {
+        plan = plan.kill_rank(kill_rank, at_op);
+    }
+    if drop_prob > 0.0 {
+        plan = plan.rule(FaultRule::new(FaultAction::Drop).with_probability(drop_prob));
+    }
+    println!(
+        "chaos: p={p}, {n_ops} ops of {m} {} elems, window={inflight}, seed={seed}, \
+         op_timeout={timeout_ms}ms, kill={}, drop_prob={drop_prob}",
+        T::DTYPE.name(),
+        if kill_enabled { format!("rank {kill_rank} at op {at_op}") } else { "off".into() },
+    );
+
+    let spawned_before = crate::transport::rank_threads_spawned();
+    let transports: Vec<ChaosNet<T>> = network_typed::<T>(p)
+        .into_iter()
+        .map(|ep| FaultTransport::new(ep, plan.clone()))
+        .collect();
+    let mut engine = CollectiveEngine::<T, ChaosNet<T>>::with_transports(
+        EngineConfig::new(p)
+            .queue_depth(queue_depth)
+            .op_timeout(Duration::from_millis(timeout_ms))
+            .retry(retry_attempts, retry_base_ms)
+            .backpressure_timeout(Duration::from_secs(backpressure_secs)),
+        transports,
+    );
+
+    let hang_bound = Duration::from_millis(2 * timeout_ms);
+    let (lo, hi) = elem::test_value_bounds(T::DTYPE);
+    let mut rng = SplitMix64::new(seed ^ 0xc4a0);
+    let mut completed = 0usize;
+    let mut failed_rank_down = 0usize;
+    let mut failed_timeout = 0usize;
+    let mut failed_other: Vec<String> = Vec::new();
+    let mut max_wait = Duration::ZERO;
+    let mut latencies: Vec<f64> = Vec::with_capacity(n_ops);
+    // (submit time, handle, oracle) in submission order.
+    let mut pending: VecDeque<(Instant, OpHandle<T, ChaosNet<T>>, Vec<T>)> =
+        VecDeque::with_capacity(inflight);
+    let mut drain_one = |pending: &mut VecDeque<(Instant, OpHandle<T, ChaosNet<T>>, Vec<T>)>,
+                         latencies: &mut Vec<f64>|
+     -> Result<()> {
+        let (t_submit, handle, oracle) = pending.pop_front().expect("nonempty window");
+        let t_wait = Instant::now();
+        let outcome = handle.wait();
+        let waited = t_wait.elapsed();
+        max_wait = max_wait.max(waited);
+        if waited > hang_bound {
+            bail!(
+                "chaos HANG: a wait blocked {:.3}s, over the 2×op-timeout bound of {:.3}s",
+                waited.as_secs_f64(),
+                hang_bound.as_secs_f64()
+            );
+        }
+        latencies.push(t_submit.elapsed().as_secs_f64());
+        match outcome {
+            Ok(out) => {
+                for (r, buf) in out.iter().enumerate() {
+                    if buf[..] != oracle[..] {
+                        bail!("chaos VERIFY FAILED: surviving op diverges from oracle at rank {r}");
+                    }
+                }
+                completed += 1;
+            }
+            Err(EngineError::Collective {
+                source: CollectiveError::RankDown { .. }, ..
+            }) => failed_rank_down += 1,
+            Err(EngineError::Collective {
+                source:
+                    CollectiveError::Transport(
+                        TransportError::Timeout { .. } | TransportError::AckTimeout { .. },
+                    ),
+                ..
+            }) => failed_timeout += 1,
+            Err(other) => failed_other.push(other.to_string()),
+        }
+        Ok(())
+    };
+
+    let t0 = Instant::now();
+    for _ in 0..n_ops {
+        let inputs: Vec<Vec<T>> = (0..p).map(|_| elem::int_vec(&mut rng, m, lo, hi)).collect();
+        let mut oracle = vec![T::zero(); m];
+        for v in &inputs {
+            SumOp.combine(&mut oracle, v);
+        }
+        let handle = engine
+            .submit(OpRequest::allreduce(inputs, "sum"))
+            .map_err(|e| anyhow!("chaos submit failed: {e}"))?;
+        pending.push_back((Instant::now(), handle, oracle));
+        if pending.len() >= inflight {
+            drain_one(&mut pending, &mut latencies)?;
+        }
+    }
+    while !pending.is_empty() {
+        drain_one(&mut pending, &mut latencies)?;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    // In-flight accounting must drain to zero: every failed op released
+    // its queue slot (the leak check — a lost slot would accumulate and
+    // eventually wedge submission behind backpressure). The last rank
+    // share settles concurrently with `wait` returning, so allow a
+    // bounded grace period.
+    let drain_deadline = Instant::now() + Duration::from_secs(2);
+    while engine.in_flight() > 0 && Instant::now() < drain_deadline {
+        std::thread::sleep(Duration::from_micros(100));
+    }
+    let in_flight_end = engine.in_flight();
+
+    // Drain-mode shutdown: completes in-flight work (none left) and
+    // rejects new submissions with the shut-down error.
+    engine.drain_shutdown();
+    let post_inputs: Vec<Vec<T>> = (0..p).map(|_| vec![T::zero(); 4]).collect();
+    match engine.submit(OpRequest::allreduce(post_inputs, "sum")) {
+        Err(EngineError::ShutDown) => {}
+        Ok(_) => bail!("chaos: submit after drain_shutdown unexpectedly succeeded"),
+        Err(other) => bail!(
+            "chaos: submit after drain_shutdown failed with {other:?} (want the shut-down error)"
+        ),
+    }
+
+    let spawned = crate::transport::rank_threads_spawned() - spawned_before;
+    let lat = crate::util::stats::Summary::of(&latencies);
+    let mut t = Table::new(
+        "chaos soak",
+        &["ops", "completed", "rank-down", "timeout", "wall s", "lat p99", "max wait", "threads"],
+    );
+    t.row(&[
+        n_ops.to_string(),
+        completed.to_string(),
+        failed_rank_down.to_string(),
+        failed_timeout.to_string(),
+        format!("{wall:.3}"),
+        format!("{}s", fmt_si(lat.p99)),
+        format!("{}s", fmt_si(max_wait.as_secs_f64())),
+        spawned.to_string(),
+    ]);
+    t.print();
+
+    if let Some(path) = cfg.get("chaos.json") {
+        use crate::util::json::Json;
+        use std::collections::BTreeMap;
+        let mut obj = BTreeMap::new();
+        obj.insert("schema".to_string(), Json::Num(1.0));
+        obj.insert("kind".to_string(), Json::Str("chaos".to_string()));
+        obj.insert("p".to_string(), Json::Num(p as f64));
+        obj.insert("ops".to_string(), Json::Num(n_ops as f64));
+        obj.insert("m".to_string(), Json::Num(m as f64));
+        obj.insert("dtype".to_string(), Json::Str(T::DTYPE.name().to_string()));
+        obj.insert("seed".to_string(), Json::Num(seed as f64));
+        obj.insert("kill_enabled".to_string(), Json::Bool(kill_enabled));
+        obj.insert("kill_rank".to_string(), Json::Num(kill_rank as f64));
+        obj.insert("at_op".to_string(), Json::Num(at_op as f64));
+        obj.insert("drop_prob".to_string(), Json::Num(drop_prob));
+        obj.insert("op_timeout_ms".to_string(), Json::Num(timeout_ms as f64));
+        obj.insert("completed".to_string(), Json::Num(completed as f64));
+        obj.insert("failed_rank_down".to_string(), Json::Num(failed_rank_down as f64));
+        obj.insert("failed_timeout".to_string(), Json::Num(failed_timeout as f64));
+        obj.insert("failed_other".to_string(), Json::Num(failed_other.len() as f64));
+        obj.insert("wall_seconds".to_string(), Json::Num(wall));
+        obj.insert("lat_p50_s".to_string(), Json::Num(lat.median));
+        obj.insert("lat_p99_s".to_string(), Json::Num(lat.p99));
+        obj.insert("max_wait_s".to_string(), Json::Num(max_wait.as_secs_f64()));
+        obj.insert("hang_bound_s".to_string(), Json::Num(hang_bound.as_secs_f64()));
+        obj.insert("rank_threads_spawned".to_string(), Json::Num(spawned as f64));
+        obj.insert("in_flight_end".to_string(), Json::Num(in_flight_end as f64));
+        std::fs::write(path, Json::Obj(obj).render() + "\n")
+            .map_err(|e| anyhow!("cannot write chaos.json {path}: {e}"))?;
+        println!("chaos: wrote {path}");
+    }
+
+    // The assertions that make this a gate, not a demo.
+    if !failed_other.is_empty() {
+        bail!(
+            "chaos: {} ops failed outside the expected taxonomy (RankDown / Timeout), e.g.: {}",
+            failed_other.len(),
+            failed_other[0]
+        );
+    }
+    if failed_timeout > 0 && drop_prob == 0.0 {
+        bail!(
+            "chaos: {failed_timeout} ops failed with a liveness Timeout but no drops were \
+             configured — the kill should surface as RankDown (positive detection), not as a \
+             silent stall"
+        );
+    }
+    if kill_enabled && (at_op as usize) <= n_ops && failed_rank_down == 0 {
+        bail!(
+            "chaos: rank {kill_rank} was killed at op {at_op} of {n_ops} but no op failed \
+             with RankDown — the failure path never engaged"
+        );
+    }
+    if completed + failed_rank_down + failed_timeout != n_ops {
+        bail!(
+            "chaos: accounting mismatch — {completed} completed + {failed_rank_down} rank-down \
+             + {failed_timeout} timeout ≠ {n_ops} submitted"
+        );
+    }
+    if spawned != p as u64 {
+        bail!(
+            "chaos: engine spawned {spawned} rank threads over {n_ops} ops (want exactly {p}: \
+             spawn-once violated under faults)"
+        );
+    }
+    if in_flight_end != 0 {
+        bail!(
+            "chaos: {in_flight_end} in-flight slots never drained after the soak — a failed op \
+             leaked its queue slot"
+        );
+    }
+    println!(
+        "chaos: OK — {completed} ops completed bit-exact, {failed_rank_down} failed fast with \
+         RankDown{}, max wait {:.3}s ≤ {:.3}s hang bound, spawn-once + drain-shutdown verified",
+        if failed_timeout > 0 {
+            format!(", {failed_timeout} timed out under drops")
+        } else {
+            String::new()
+        },
+        max_wait.as_secs_f64(),
+        hang_bound.as_secs_f64(),
+    );
     Ok(())
 }

@@ -119,6 +119,13 @@ pub enum CollectiveError {
     UnknownOp { rank: usize, name: String, dtype: &'static str },
     #[error("rank {rank}: engine worker gone before the operation was delivered")]
     WorkerLost { rank: usize },
+    /// A peer this operation's remaining schedule depends on was
+    /// positively detected dead ([`Transport::peer_status`]) — distinct
+    /// from `Transport(Timeout)`, where nothing arrived but the peer may
+    /// merely be slow. The engine raises this *fast* (next poll pass
+    /// after the death notice) instead of burning the liveness watchdog.
+    #[error("rank {rank}: peer rank {peer} is down ({detail}) — remaining schedule cannot complete")]
+    RankDown { rank: usize, peer: usize, detail: String },
     #[error("fused batch (epoch {fused_op}, {members} member ops): {detail}")]
     FusedBatch { fused_op: u64, members: usize, detail: String },
 }
@@ -231,6 +238,42 @@ impl OpCursor {
                 CollectiveError::Transport(TransportError::Timeout { rank, from, round })
             }
         }
+    }
+
+    /// The first peer in this cursor's **remaining** schedule (its
+    /// current round onward) that the health bitmap reports down —
+    /// `up[r] == false` means rank `r` is dead (the shape
+    /// [`Transport::peer_status`] returns). `None` means every rank the
+    /// rest of the schedule touches is still up, so the operation can in
+    /// principle complete. The engine's fast-fail path calls this per
+    /// poll pass once any peer is marked down, so an op that still needs
+    /// the dead rank fails with [`CollectiveError::RankDown`] immediately
+    /// instead of waiting out the liveness watchdog.
+    ///
+    /// Deliberately conservative about the current round: even a
+    /// partially-completed round (send issued, recv pending, or parked on
+    /// the ack) is counted in full, because the remaining wait of the
+    /// round involves exactly the round's peers.
+    pub fn first_needed_down_peer(
+        &self,
+        schedule: &Schedule,
+        rank: usize,
+        up: &[bool],
+    ) -> Option<usize> {
+        for round in schedule.rounds.iter().skip(self.round) {
+            let step = &round.steps[rank];
+            if let Some(s) = step.send.as_ref() {
+                if !up.get(s.peer).copied().unwrap_or(true) {
+                    return Some(s.peer);
+                }
+            }
+            if let Some(rv) = step.recv.as_ref() {
+                if !up.get(rv.peer).copied().unwrap_or(true) {
+                    return Some(rv.peer);
+                }
+            }
+        }
+        None
     }
 
     /// Quiesce after an error/timeout: block (bounded by the transport

@@ -89,8 +89,8 @@ use crate::ops::ReduceOp;
 use crate::schedule::{Plan, PlanCache, PlanKey};
 
 use super::{
-    CollectiveKind, DoneRx, DoneTx, EngineError, InflightCounter, OpShared, RankOp, StepCounter,
-    WorkerCmd,
+    CollectiveKind, DoneRx, DoneTx, EngineError, InflightCounter, InflightTags, OpShared, RankOp,
+    StepCounter, WorkerCmd,
 };
 
 /// Default fusion byte budget: 64 KiB of member payload per batch. Small
@@ -249,6 +249,11 @@ pub(crate) struct Fuser<T: Elem, C = crate::transport::Endpoint<T>> {
     plans: Arc<PlanCache>,
     inflight: InflightCounter,
     completed: StepCounter,
+    /// Live op-id set shared with the engine — every submitted member
+    /// registers here (via [`OpShared::new`]) and deregisters when its
+    /// last rank share settles, so backpressure diagnostics can name the
+    /// stuck operations.
+    inflight_tags: InflightTags,
     /// Next operation epoch (starts at 1; epoch 0 is the legacy untagged
     /// wire space). Single ops run under their own id; each fused run
     /// takes one fresh epoch for the whole batch.
@@ -270,6 +275,7 @@ impl<T: Elem, C> Fuser<T, C> {
         plans: Arc<PlanCache>,
         inflight: InflightCounter,
         completed: StepCounter,
+        inflight_tags: InflightTags,
         enabled: bool,
         max_bytes: usize,
         window: u64,
@@ -281,6 +287,7 @@ impl<T: Elem, C> Fuser<T, C> {
             plans,
             inflight,
             completed,
+            inflight_tags,
             next_op: 1,
             // window == 0 means "flush on every submit": batching never
             // coalesces anything, so treat it as fusion-off outright.
@@ -339,8 +346,13 @@ impl<T: Elem, C> Fuser<T, C> {
         }
         let op_id = self.alloc_op();
         let (tx, rx) = channel();
-        let shared =
-            Arc::new(OpShared::new(self.p, self.inflight.clone(), self.completed.clone()));
+        let shared = Arc::new(OpShared::new(
+            self.p,
+            op_id,
+            self.inflight.clone(),
+            self.completed.clone(),
+            self.inflight_tags.clone(),
+        ));
         self.inflight.fetch_add(1, Ordering::AcqRel);
 
         let bytes = m.saturating_mul(std::mem::size_of::<T>());

@@ -71,6 +71,7 @@ pub mod fusion;
 pub use fusion::{FusionStats, DEFAULT_FUSION_MAX_BYTES, DEFAULT_FUSION_WINDOW};
 
 use std::any::Any;
+use std::collections::BTreeSet;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
@@ -84,7 +85,7 @@ use crate::datatypes::Elem;
 use crate::ops::{kernels, ReduceOp};
 use crate::schedule::{Plan, PlanCache, PlanCacheStats};
 use crate::topology::skips::SkipScheme;
-use crate::transport::{network_typed, Endpoint, Transport};
+use crate::transport::{network_typed, Endpoint, Transport, TransportError};
 
 use fusion::{FlushReason, FusedLayout, FusedRankOp, FusedShare, Fuser};
 
@@ -176,6 +177,19 @@ pub struct EngineConfig {
     /// watchdog bound). `None` keeps the transport's generous default;
     /// failure-injection tests shrink it.
     pub op_timeout: Option<Duration>,
+    /// How long `submit` may park on `queue_depth` backpressure before
+    /// failing with [`EngineError::BackpressureTimeout`]. Default from
+    /// `CCOLL_ENGINE_BACKPRESSURE_TIMEOUT` (seconds); config key
+    /// `engine.backpressure_timeout`.
+    pub backpressure_timeout: Duration,
+    /// Transient-send retry budget applied to every rank transport via
+    /// [`Transport::set_retry`]. Default from `CCOLL_RETRY_ATTEMPTS`;
+    /// config key `engine.retry.attempts`.
+    pub retry_attempts: usize,
+    /// Base backoff (ms, doubling per attempt) between those retries.
+    /// Default from `CCOLL_RETRY_BASE_MS`; config key
+    /// `engine.retry.base_ms`.
+    pub retry_base_ms: u64,
 }
 
 impl EngineConfig {
@@ -193,6 +207,9 @@ impl EngineConfig {
             fusion_max_bytes: knobs.fusion_max_bytes,
             fusion_window: knobs.fusion_window,
             op_timeout: None,
+            backpressure_timeout: Duration::from_secs(knobs.engine_backpressure_timeout_secs),
+            retry_attempts: knobs.retry_attempts,
+            retry_base_ms: knobs.retry_base_ms,
         }
     }
 
@@ -245,6 +262,17 @@ impl EngineConfig {
         self.op_timeout = Some(timeout);
         self
     }
+
+    pub fn backpressure_timeout(mut self, timeout: Duration) -> Self {
+        self.backpressure_timeout = timeout;
+        self
+    }
+
+    pub fn retry(mut self, attempts: usize, base_ms: u64) -> Self {
+        self.retry_attempts = attempts;
+        self.retry_base_ms = base_ms;
+        self
+    }
 }
 
 /// Which collective an [`OpRequest`] runs.
@@ -284,12 +312,26 @@ impl<T: Elem> OpRequest<T> {
     }
 }
 
-/// How long `submit` waits for an in-flight slot under `queue_depth`
-/// backpressure before failing with [`EngineError::BackpressureTimeout`]
-/// — comfortably past the transport's 30s per-op liveness watchdog, so a
-/// wedged op fails (and releases its slot) long before this fires unless
-/// a worker is actually gone.
-const BACKPRESSURE_TIMEOUT: Duration = Duration::from_secs(90);
+/// Default seconds `submit` waits for an in-flight slot under
+/// `queue_depth` backpressure before failing with
+/// [`EngineError::BackpressureTimeout`] — comfortably past the
+/// transport's 30s per-op liveness watchdog, so a wedged op fails (and
+/// releases its slot) long before this fires unless a worker is actually
+/// gone. Override with `CCOLL_ENGINE_BACKPRESSURE_TIMEOUT` /
+/// `engine.backpressure_timeout` / [`EngineConfig::backpressure_timeout`].
+pub const DEFAULT_BACKPRESSURE_TIMEOUT_SECS: u64 = 90;
+
+/// Render the in-flight op-tag set for a backpressure diagnostic —
+/// bounded so a deep queue cannot flood the error message.
+fn render_tags(tags: &[u64]) -> String {
+    const SHOWN: usize = 16;
+    let head: Vec<String> = tags.iter().take(SHOWN).map(u64::to_string).collect();
+    if tags.len() > SHOWN {
+        format!("[{}, … +{} more]", head.join(", "), tags.len() - SHOWN)
+    } else {
+        format!("[{}]", head.join(", "))
+    }
+}
 
 /// Errors surfaced by the engine's submission/completion paths.
 #[derive(Debug, thiserror::Error)]
@@ -309,10 +351,10 @@ pub enum EngineError {
     UnknownOp { name: String, dtype: &'static str },
     #[error(
         "engine: backpressure timeout — {in_flight} ops in flight ≥ queue depth {depth} \
-         with no completion for {secs}s (worker dead or peer wedged?)",
-        secs = BACKPRESSURE_TIMEOUT.as_secs()
+         with no completion for {secs}s; stuck op tags {tags} (worker dead or peer wedged?)",
+        tags = render_tags(stuck_tags)
     )]
-    BackpressureTimeout { in_flight: usize, depth: usize },
+    BackpressureTimeout { in_flight: usize, depth: usize, secs: u64, stuck_tags: Vec<u64> },
     #[error("engine: worker {rank} is gone (engine shut down or crashed)")]
     WorkerGone { rank: usize },
     #[error("engine: already shut down")]
@@ -327,6 +369,12 @@ pub enum EngineError {
     },
 }
 
+/// The live set of in-flight operation ids — registered at submission,
+/// deregistered when the last rank share settles. The
+/// [`EngineError::BackpressureTimeout`] diagnostic snapshots it so a
+/// stuck queue names *which* ops are wedged, not just how many.
+pub(crate) type InflightTags = Arc<Mutex<BTreeSet<u64>>>;
+
 /// Per-operation bookkeeping shared by the `p` rank-sides of one op
 /// (fused members each have their own — a fused run carries one per
 /// member, so each member's slot releases independently).
@@ -336,11 +384,21 @@ pub(crate) struct OpShared {
     remaining: AtomicUsize,
     inflight: InflightCounter,
     completed: StepCounter,
+    /// This op's id, held in `tags` until every rank share settles.
+    tag: u64,
+    tags: InflightTags,
 }
 
 impl OpShared {
-    pub(crate) fn new(p: usize, inflight: InflightCounter, completed: StepCounter) -> Self {
-        Self { remaining: AtomicUsize::new(p), inflight, completed }
+    pub(crate) fn new(
+        p: usize,
+        tag: u64,
+        inflight: InflightCounter,
+        completed: StepCounter,
+        tags: InflightTags,
+    ) -> Self {
+        tags.lock().unwrap().insert(tag);
+        Self { remaining: AtomicUsize::new(p), inflight, completed, tag, tags }
     }
 
     /// One rank's share of this operation is settled — a result or error
@@ -351,6 +409,7 @@ impl OpShared {
         if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
             self.inflight.fetch_sub(1, Ordering::AcqRel);
             self.completed.fetch_add(1, Ordering::AcqRel);
+            self.tags.lock().unwrap().remove(&self.tag);
         }
     }
 }
@@ -535,7 +594,9 @@ pub struct CollectiveEngine<T: Elem = f32, C = Endpoint<T>> {
     scheme: SkipScheme,
     backend: OpBackend,
     queue_depth: usize,
+    backpressure_timeout: Duration,
     inflight: InflightCounter,
+    inflight_tags: InflightTags,
     plans: Arc<PlanCache>,
     /// The batching stage + submission fan-out ([`fusion`]): holds the
     /// plan vocabulary, the epoch allocator and the pending batch.
@@ -596,6 +657,7 @@ impl<T: Elem, C> CollectiveEngine<T, C> {
             if let Some(timeout) = cfg.op_timeout {
                 ep.set_timeout(timeout);
             }
+            ep.set_retry(cfg.retry_attempts, cfg.retry_base_ms);
             let (tx, rx) = channel::<WorkerCmd<T, C>>();
             txs.push(tx);
             let park = cfg.park;
@@ -609,6 +671,7 @@ impl<T: Elem, C> CollectiveEngine<T, C> {
             );
         }
         let inflight: InflightCounter = Arc::new(AtomicUsize::new(0));
+        let inflight_tags: InflightTags = Arc::new(Mutex::new(BTreeSet::new()));
         let completed: StepCounter = Arc::new(AtomicU64::new(0));
         let plans = Arc::new(PlanCache::new());
         let fuser = Arc::new(Mutex::new(Fuser::new(
@@ -618,6 +681,7 @@ impl<T: Elem, C> CollectiveEngine<T, C> {
             plans.clone(),
             inflight.clone(),
             completed,
+            inflight_tags.clone(),
             cfg.fusion,
             cfg.fusion_max_bytes,
             cfg.fusion_window,
@@ -627,7 +691,9 @@ impl<T: Elem, C> CollectiveEngine<T, C> {
             scheme: cfg.scheme,
             backend: cfg.backend,
             queue_depth: cfg.queue_depth,
+            backpressure_timeout: cfg.backpressure_timeout,
             inflight,
+            inflight_tags,
             plans,
             fuser,
             txs,
@@ -714,7 +780,7 @@ impl<T: Elem, C> CollectiveEngine<T, C> {
         // bound unless a worker is actually gone — the deadline turns
         // that pathology into an error instead of a silent forever-spin.
         if self.queue_depth > 0 {
-            let deadline = Instant::now() + BACKPRESSURE_TIMEOUT;
+            let deadline = Instant::now() + self.backpressure_timeout;
             while self.inflight.load(Ordering::Acquire) >= self.queue_depth {
                 // A pending fused batch occupies in-flight slots but can
                 // never complete until dispatched: flush before parking,
@@ -724,6 +790,14 @@ impl<T: Elem, C> CollectiveEngine<T, C> {
                     return Err(EngineError::BackpressureTimeout {
                         in_flight: self.inflight.load(Ordering::Acquire),
                         depth: self.queue_depth,
+                        secs: self.backpressure_timeout.as_secs(),
+                        stuck_tags: self
+                            .inflight_tags
+                            .lock()
+                            .unwrap()
+                            .iter()
+                            .copied()
+                            .collect(),
                     });
                 }
                 thread::sleep(Duration::from_micros(50));
@@ -776,6 +850,31 @@ impl<T: Elem, C> CollectiveEngine<T, C> {
             }
         }
         out.into_iter().map(|r| r.expect("all ranks reported")).collect()
+    }
+
+    /// Drain-mode shutdown: immediately reject **new** submissions
+    /// (`EngineError::ShutDown`), dispatch the pending fused batch, let
+    /// every already-submitted operation run to completion (or to its
+    /// per-op watchdog error), then join the workers. The wait for
+    /// in-flight ops is bounded by the backpressure timeout — ops release
+    /// their slots even on failure within the op-timeout watchdog, so
+    /// only a dead worker can make this bound bite, and [`shutdown`]
+    /// (CollectiveEngine::shutdown) still tears down afterwards either
+    /// way. Idempotent, like `shutdown`.
+    pub fn drain_shutdown(&mut self) {
+        if self.workers.is_empty() {
+            return;
+        }
+        {
+            let mut fuser = self.fuser.lock().unwrap();
+            fuser.flush(FlushReason::Forced);
+            fuser.shut_down = true; // submit_op now refuses new work
+        }
+        let deadline = Instant::now() + self.backpressure_timeout;
+        while self.inflight.load(Ordering::Acquire) > 0 && Instant::now() < deadline {
+            thread::sleep(Duration::from_micros(100));
+        }
+        self.shutdown();
     }
 
     /// Ask every worker to finish its in-flight operations and exit, then
@@ -887,7 +986,31 @@ fn worker_loop<T: Elem, C: Transport<T>>(
         let now = Instant::now();
         let timeout = ep.timeout();
         let mut made_progress = false;
+        // Fast-fail on positive peer death: the transport's health bitmap
+        // (fed by reader-thread EOF notices or fault-injected kills —
+        // updated as the poll steps below drain the inbox) marks dead
+        // ranks, and any op whose *remaining* schedule touches one can
+        // never complete — fail it with RankDown now instead of burning
+        // its liveness watchdog. Ops that no longer need the dead rank
+        // keep running: the circulant pattern fixes each round's peers,
+        // so this is a per-op decision, not an engine-wide abort.
+        let status = ep.peer_status();
+        let any_down = status.iter().any(|&up| !up);
         active.retain_mut(|a| {
+            if any_down {
+                if let Some(peer) =
+                    a.cursor.first_needed_down_peer(&a.plan.schedule, rank, &status)
+                {
+                    let detail = ep
+                        .peer_down(peer)
+                        .unwrap_or_else(|| "peer reported down".to_string());
+                    a.cursor.abort(&mut ep);
+                    cleanup_failed_op(&mut ep, &mut a.buf, a.cursor.op_tag());
+                    a.finish_err(rank, CollectiveError::RankDown { rank, peer, detail });
+                    made_progress = true;
+                    return false;
+                }
+            }
             match a.cursor.step(
                 &mut ep,
                 &a.plan.schedule,
@@ -929,6 +1052,17 @@ fn worker_loop<T: Elem, C: Transport<T>>(
                     // timed out the buffer is not safe to free.
                     cleanup_failed_op(&mut ep, &mut a.buf, a.cursor.op_tag());
                     made_progress = true;
+                    // A send/recv that hit a positively-dead peer is the
+                    // same failure class as the bitmap fast-fail above —
+                    // surface it under the one RankDown taxonomy.
+                    let e = match e {
+                        CollectiveError::Transport(TransportError::PeerDown {
+                            peer,
+                            detail,
+                            ..
+                        }) => CollectiveError::RankDown { rank, peer, detail },
+                        other => other,
+                    };
                     a.finish_err(rank, e);
                     false
                 }
@@ -1092,6 +1226,43 @@ mod tests {
             engine.submit(OpRequest::allreduce(int_inputs(p, 8, 5), "sum")).unwrap().wait().unwrap();
         assert_eq!(out[0], want);
         engine.shutdown();
+    }
+
+    #[test]
+    fn drain_shutdown_completes_in_flight_and_rejects_new() {
+        let p = 2;
+        let inputs = int_inputs(p, 16, 9);
+        let want = oracle_sum(&inputs);
+        let mut engine = CollectiveEngine::<i64>::new(EngineConfig::new(p));
+        let handle = engine.submit(OpRequest::allreduce(inputs, "sum")).unwrap();
+        engine.drain_shutdown();
+        // New work is rejected …
+        let err = engine.submit(OpRequest::allreduce(int_inputs(p, 16, 10), "sum")).unwrap_err();
+        assert!(matches!(err, EngineError::ShutDown), "{err}");
+        // … but the already-submitted op completed, not errored.
+        let out = handle.wait().unwrap();
+        for (r, buf) in out.iter().enumerate() {
+            assert_eq!(buf, &want, "rank {r}");
+        }
+        engine.drain_shutdown(); // idempotent
+    }
+
+    #[test]
+    fn config_carries_retry_and_backpressure_knobs() {
+        let cfg = EngineConfig::new(2)
+            .retry(7, 40)
+            .backpressure_timeout(Duration::from_secs(3));
+        assert_eq!((cfg.retry_attempts, cfg.retry_base_ms), (7, 40));
+        assert_eq!(cfg.backpressure_timeout, Duration::from_secs(3));
+        // Defaults resolve from the process knob set.
+        let cfg = EngineConfig::new(2);
+        let knobs = crate::env_knobs::knobs();
+        assert_eq!(cfg.retry_attempts, knobs.retry_attempts);
+        assert_eq!(cfg.retry_base_ms, knobs.retry_base_ms);
+        assert_eq!(
+            cfg.backpressure_timeout,
+            Duration::from_secs(knobs.engine_backpressure_timeout_secs)
+        );
     }
 
     #[test]

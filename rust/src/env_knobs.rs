@@ -24,6 +24,9 @@
 //! | `CCOLL_FUSION_MAX_BYTES`     | usize  | 65536   | fusion-tier batch byte budget (ops above it bypass the batcher) |
 //! | `CCOLL_FUSION_WINDOW`        | usize  | `8`     | fusion-tier flush window in completed engine steps (0 disables fusion) |
 //! | `CCOLL_TRANSPORT`            | transport | `thread` | default transport backend (`transport.backend` overrides per run) |
+//! | `CCOLL_RETRY_ATTEMPTS`       | usize  | `3`     | transient-send retry budget per frame (UDS writer; `engine.retry.attempts` overrides per run) |
+//! | `CCOLL_RETRY_BASE_MS`        | usize  | `10`    | base backoff between send retries, doubling per attempt (`engine.retry.base_ms` overrides per run) |
+//! | `CCOLL_ENGINE_BACKPRESSURE_TIMEOUT` | usize | `90` | seconds `submit` may park on a full engine queue before `BackpressureTimeout` (`engine.backpressure_timeout` overrides per run) |
 //!
 //! Booleans accept `0|1|true|false|yes|no` (empty = unset = default).
 //! Integers accept decimal digits with optional `_` separators. Dtypes
@@ -82,6 +85,25 @@ pub struct EnvKnobs {
     /// [`crate::transport::Transport`] implementation carries the rank
     /// network. Per-run override: config key `transport.backend`.
     pub transport_backend: TransportBackend,
+    /// Default retry budget for transient send errors
+    /// (`CCOLL_RETRY_ATTEMPTS`): how many times a backend writer may
+    /// re-attempt a frame segment that hit a transient condition
+    /// (`WouldBlock`) before surfacing `PeerDown`. 0 disables retries.
+    /// Per-run override: `EngineConfig::retry_attempts` / config key
+    /// `engine.retry.attempts`.
+    pub retry_attempts: usize,
+    /// Base backoff in milliseconds between transient-send retries
+    /// (`CCOLL_RETRY_BASE_MS`); attempt `k` sleeps `base << (k-1)`
+    /// (capped). Per-run override: `EngineConfig::retry_base_ms` /
+    /// config key `engine.retry.base_ms`.
+    pub retry_base_ms: u64,
+    /// Seconds [`crate::engine::CollectiveEngine::submit`] may park
+    /// waiting for queue-depth headroom before failing with
+    /// `EngineError::BackpressureTimeout`
+    /// (`CCOLL_ENGINE_BACKPRESSURE_TIMEOUT`). Per-engine override:
+    /// `EngineConfig::backpressure_timeout` / config key
+    /// `engine.backpressure_timeout`.
+    pub engine_backpressure_timeout_secs: u64,
 }
 
 fn parse_bool(name: &str, raw: Option<&str>, default: bool) -> Result<bool, String> {
@@ -188,6 +210,21 @@ pub fn parse_from(get: impl Fn(&str) -> Option<String>) -> Result<EnvKnobs, Stri
             get("CCOLL_TRANSPORT").as_deref(),
             TransportBackend::Thread,
         )?,
+        retry_attempts: parse_usize(
+            "CCOLL_RETRY_ATTEMPTS",
+            get("CCOLL_RETRY_ATTEMPTS").as_deref(),
+            crate::transport::DEFAULT_RETRY_ATTEMPTS,
+        )?,
+        retry_base_ms: parse_usize(
+            "CCOLL_RETRY_BASE_MS",
+            get("CCOLL_RETRY_BASE_MS").as_deref(),
+            crate::transport::DEFAULT_RETRY_BASE_MS as usize,
+        )? as u64,
+        engine_backpressure_timeout_secs: parse_usize(
+            "CCOLL_ENGINE_BACKPRESSURE_TIMEOUT",
+            get("CCOLL_ENGINE_BACKPRESSURE_TIMEOUT").as_deref(),
+            crate::engine::DEFAULT_BACKPRESSURE_TIMEOUT_SECS as usize,
+        )? as u64,
     })
 }
 
@@ -227,6 +264,36 @@ mod tests {
         assert_eq!(k.fusion_max_bytes, crate::engine::DEFAULT_FUSION_MAX_BYTES);
         assert_eq!(k.fusion_window, crate::engine::DEFAULT_FUSION_WINDOW);
         assert_eq!(k.transport_backend, TransportBackend::Thread);
+        assert_eq!(k.retry_attempts, crate::transport::DEFAULT_RETRY_ATTEMPTS);
+        assert_eq!(k.retry_base_ms, crate::transport::DEFAULT_RETRY_BASE_MS);
+        assert_eq!(
+            k.engine_backpressure_timeout_secs,
+            crate::engine::DEFAULT_BACKPRESSURE_TIMEOUT_SECS
+        );
+    }
+
+    #[test]
+    fn retry_and_backpressure_knobs_parse_and_reject_loudly() {
+        let k = with(&[
+            ("CCOLL_RETRY_ATTEMPTS", "5"),
+            ("CCOLL_RETRY_BASE_MS", "25"),
+            ("CCOLL_ENGINE_BACKPRESSURE_TIMEOUT", "2"),
+        ])
+        .unwrap();
+        assert_eq!(k.retry_attempts, 5);
+        assert_eq!(k.retry_base_ms, 25);
+        assert_eq!(k.engine_backpressure_timeout_secs, 2);
+        let k = with(&[("CCOLL_RETRY_ATTEMPTS", "0")]).unwrap();
+        assert_eq!(k.retry_attempts, 0, "0 must parse (it disables retries)");
+        let err = with(&[("CCOLL_RETRY_ATTEMPTS", "lots")]).unwrap_err();
+        assert!(err.contains("CCOLL_RETRY_ATTEMPTS") && err.contains("lots"), "{err}");
+        let err = with(&[("CCOLL_RETRY_BASE_MS", "-5")]).unwrap_err();
+        assert!(err.contains("CCOLL_RETRY_BASE_MS") && err.contains("non-negative"), "{err}");
+        let err = with(&[("CCOLL_ENGINE_BACKPRESSURE_TIMEOUT", "forever")]).unwrap_err();
+        assert!(
+            err.contains("CCOLL_ENGINE_BACKPRESSURE_TIMEOUT") && err.contains("forever"),
+            "{err}"
+        );
     }
 
     #[test]

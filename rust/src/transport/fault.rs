@@ -1,0 +1,607 @@
+//! Deterministic fault injection over any [`Transport`] backend.
+//!
+//! The paper's circulant schedules fix the communication pattern per
+//! round, so "rank 2's round-3 message to rank 0 is dropped" is a
+//! *well-defined, reproducible* event — this module turns that into a
+//! test harness. A [`FaultTransport`] wraps any backend (thread or UDS)
+//! and applies a seeded, declarative [`FaultPlan`] on the send side:
+//!
+//! * **drop** — the message is silently black-holed (the receiver sees
+//!   nothing and its liveness timeout eventually fires);
+//! * **delay** — the send is stalled for a fixed duration (must stay
+//!   under the consumer's `op_timeout` to be survivable);
+//! * **duplicate** — the frame is sent twice (the stash keys arrivals by
+//!   `(from, tag)`, so the duplicate must be absorbed harmlessly);
+//! * **truncate** — only a prefix of the payload is sent (the executor's
+//!   length validation must reject it, not corrupt the result);
+//! * **kill** — from a given operation epoch onward the named rank is
+//!   dead: its own sends/receives fail with
+//!   [`TransportError::PeerDown`], and every *other* rank's wrapper
+//!   reports it down through [`Transport::peer_status`] — the same
+//!   signal a real process death produces on the UDS backend, so the
+//!   engine's fast-fail path is exercised identically in-process.
+//!
+//! Rules are keyed by `(rank, op, round)` — any field wildcardable — or
+//! fire probabilistically under a [`SplitMix64`] stream seeded per rank
+//! (`seed ^ rank`), so a chaos soak is bit-reproducible from its seed
+//! alone. All injected sends travel the copy tier (rendezvous is forced
+//! off for the affected message): injecting faults into a zero-copy
+//! publish would violate the publish/ack contract rather than test it.
+//!
+//! Kill triggers are **epoch-based, not wall-clock**: every wrapper
+//! tracks the highest operation epoch it has touched, and a
+//! `kill_rank(r).from_op(n)` rule engages on each wrapper independently
+//! once its own epoch watermark reaches `n`. Engine op tags are
+//! allocated monotonically and fan out to every rank, so all wrappers
+//! observe the trigger at the same point in the op stream — no shared
+//! state, no racy clock.
+
+use std::marker::PhantomData;
+use std::time::Duration;
+
+use crate::datatypes::Elem;
+use crate::util::rng::SplitMix64;
+
+use super::{
+    Counters, Payload, SendSlices, Tag, Transport, TransportCaps, TransportError,
+};
+
+/// What to do to a matched message (or rank).
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultAction {
+    /// Black-hole the send; the receiver times out (or fast-fails if a
+    /// kill also marked the sender down).
+    Drop,
+    /// Stall the send for this long, then deliver normally.
+    Delay(Duration),
+    /// Send the frame twice under the same tag.
+    Duplicate,
+    /// Send only the first `keep` elements of the payload.
+    Truncate(usize),
+}
+
+/// One declarative message rule: `action` applies when every present
+/// key field matches and the per-rank probability draw passes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultRule {
+    pub action: FaultAction,
+    /// Acting rank (the wrapper whose send is affected); `None` = any.
+    pub rank: Option<usize>,
+    /// Destination peer of the send; `None` = any.
+    pub to: Option<usize>,
+    /// Operation epoch; `None` = any.
+    pub op: Option<u64>,
+    /// Round within the operation; `None` = any.
+    pub round: Option<u64>,
+    /// Probability in `[0, 1]` that a key-matched send is affected
+    /// (1.0 = always). Drawn from the wrapper's seeded stream.
+    pub probability: f64,
+}
+
+impl FaultRule {
+    pub fn new(action: FaultAction) -> Self {
+        Self { action, rank: None, to: None, op: None, round: None, probability: 1.0 }
+    }
+
+    pub fn on_rank(mut self, rank: usize) -> Self {
+        self.rank = Some(rank);
+        self
+    }
+
+    pub fn to_peer(mut self, to: usize) -> Self {
+        self.to = Some(to);
+        self
+    }
+
+    pub fn at_op(mut self, op: u64) -> Self {
+        self.op = Some(op);
+        self
+    }
+
+    pub fn at_round(mut self, round: u64) -> Self {
+        self.round = Some(round);
+        self
+    }
+
+    pub fn with_probability(mut self, probability: f64) -> Self {
+        assert!((0.0..=1.0).contains(&probability), "probability {probability} not in [0, 1]");
+        self.probability = probability;
+        self
+    }
+
+    fn matches(&self, rank: usize, to: usize, tag: Tag) -> bool {
+        self.rank.is_none_or(|r| r == rank)
+            && self.to.is_none_or(|t| t == to)
+            && self.op.is_none_or(|o| o == tag.op)
+            && self.round.is_none_or(|r| r == tag.round)
+    }
+}
+
+/// A rank death: from operation epoch `from_op` onward, `rank` is dead
+/// as far as every wrapper sharing the plan is concerned.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KillRule {
+    pub rank: usize,
+    pub from_op: u64,
+}
+
+/// The full declarative fault schedule one chaos run executes. Clone it
+/// into every rank's [`FaultTransport`]; determinism comes from the
+/// seed, not from shared state.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub rules: Vec<FaultRule>,
+    pub kills: Vec<KillRule>,
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64) -> Self {
+        Self { seed, rules: Vec::new(), kills: Vec::new() }
+    }
+
+    /// Add a message rule.
+    pub fn rule(mut self, rule: FaultRule) -> Self {
+        self.rules.push(rule);
+        self
+    }
+
+    /// Kill `rank` from operation epoch `from_op` onward.
+    pub fn kill_rank(mut self, rank: usize, from_op: u64) -> Self {
+        self.kills.push(KillRule { rank, from_op });
+        self
+    }
+
+    /// Shorthand: drop rank `rank`'s round-`round` send of epoch `op`.
+    pub fn drop_at(self, rank: usize, op: u64, round: u64) -> Self {
+        self.rule(FaultRule::new(FaultAction::Drop).on_rank(rank).at_op(op).at_round(round))
+    }
+
+    /// Shorthand: delay rank `rank`'s round-`round` send of epoch `op`.
+    pub fn delay_at(self, rank: usize, op: u64, round: u64, by: Duration) -> Self {
+        self.rule(FaultRule::new(FaultAction::Delay(by)).on_rank(rank).at_op(op).at_round(round))
+    }
+
+    /// Whether any rule or kill exists at all (an empty plan is a
+    /// transparent wrapper).
+    pub fn is_empty(&self) -> bool {
+        self.rules.is_empty() && self.kills.is_empty()
+    }
+}
+
+/// Counts of faults actually injected by one wrapper — chaos runs
+/// report these so "nothing happened" soaks are distinguishable from
+/// "the plan never fired".
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    pub drops: u64,
+    pub delays: u64,
+    pub duplicates: u64,
+    pub truncations: u64,
+    /// Sends/receives refused because a kill rule had engaged (self or
+    /// the peer dead).
+    pub dead_refusals: u64,
+}
+
+/// A [`Transport`] decorator applying a [`FaultPlan`] — see the module
+/// docs. All non-send surfaces (pools, quiesce, counters) delegate
+/// untouched, so cleanup paths (`forget_op`) keep working even on a
+/// "dead" rank: death here models the *wire* going dark, not the local
+/// process memory.
+pub struct FaultTransport<E: Elem, T: Transport<E>> {
+    inner: T,
+    plan: FaultPlan,
+    rng: SplitMix64,
+    /// Highest operation epoch this wrapper has touched — the kill
+    /// trigger watermark.
+    max_op_seen: u64,
+    stats: FaultStats,
+    _elem: PhantomData<E>,
+}
+
+impl<E: Elem, T: Transport<E>> FaultTransport<E, T> {
+    pub fn new(inner: T, plan: FaultPlan) -> Self {
+        let rank = inner.rank() as u64;
+        let seed = plan.seed ^ rank.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        Self { inner, plan, rng: SplitMix64::new(seed), max_op_seen: 0, stats: FaultStats::default(), _elem: PhantomData }
+    }
+
+    /// Injection counters so far.
+    pub fn stats(&self) -> FaultStats {
+        self.stats
+    }
+
+    /// The wrapped backend (e.g. to read backend-specific state in
+    /// tests).
+    pub fn inner(&self) -> &T {
+        &self.inner
+    }
+
+    pub fn inner_mut(&mut self) -> &mut T {
+        &mut self.inner
+    }
+
+    pub fn into_inner(self) -> T {
+        self.inner
+    }
+
+    fn note_op(&mut self, op: u64) {
+        if op > self.max_op_seen {
+            self.max_op_seen = op;
+        }
+    }
+
+    /// Kill detail for `rank` if a kill rule has engaged at the current
+    /// epoch watermark.
+    fn killed(&self, rank: usize) -> Option<String> {
+        self.plan
+            .kills
+            .iter()
+            .find(|k| k.rank == rank && self.max_op_seen >= k.from_op)
+            .map(|k| format!("fault-injected kill of rank {} from op {}", k.rank, k.from_op))
+    }
+
+    fn self_dead(&self) -> Option<TransportError> {
+        self.killed(self.inner.rank()).map(|detail| TransportError::PeerDown {
+            rank: self.inner.rank(),
+            peer: self.inner.rank(),
+            detail,
+        })
+    }
+
+    /// First matching rule's action for a send, probability included.
+    fn action_for(&mut self, to: usize, tag: Tag) -> Option<FaultAction> {
+        let rank = self.inner.rank();
+        for i in 0..self.plan.rules.len() {
+            if !self.plan.rules[i].matches(rank, to, tag) {
+                continue;
+            }
+            let p = self.plan.rules[i].probability;
+            if p >= 1.0 || self.rng.next_f64() < p {
+                return Some(self.plan.rules[i].action.clone());
+            }
+        }
+        None
+    }
+}
+
+impl<E: Elem, T: Transport<E>> Transport<E> for FaultTransport<E, T> {
+    fn rank(&self) -> usize {
+        self.inner.rank()
+    }
+
+    fn p(&self) -> usize {
+        self.inner.p()
+    }
+
+    fn caps(&self) -> TransportCaps {
+        // Rendezvous is reported unsupported: injected faults must act
+        // on materialized frames, and a publish whose descriptors are
+        // dropped/truncated would break the ack contract instead of
+        // testing the failure path.
+        TransportCaps { supports_rendezvous: false, ..self.inner.caps() }
+    }
+
+    fn sendrecv_slices_tagged(
+        &mut self,
+        send: Option<SendSlices<'_, E>>,
+        recv_from: Option<usize>,
+        tag: Tag,
+    ) -> Result<Option<Payload<E>>, TransportError> {
+        self.note_op(tag.op);
+        if let Some(err) = self.self_dead() {
+            self.stats.dead_refusals += 1;
+            return Err(err);
+        }
+        let rank = self.inner.rank();
+        let send = match send {
+            None => None,
+            Some(s) => {
+                if let Some(detail) = self.killed(s.to) {
+                    // A dead destination behaves like a dead socket:
+                    // the write fails loudly, not silently.
+                    self.stats.dead_refusals += 1;
+                    return Err(TransportError::PeerDown { rank, peer: s.to, detail });
+                }
+                match self.action_for(s.to, tag) {
+                    None => Some(SendSlices { rendezvous: false, ..s }),
+                    Some(FaultAction::Drop) => {
+                        self.stats.drops += 1;
+                        None
+                    }
+                    Some(FaultAction::Delay(by)) => {
+                        self.stats.delays += 1;
+                        std::thread::sleep(by);
+                        Some(SendSlices { rendezvous: false, ..s })
+                    }
+                    Some(FaultAction::Duplicate) => {
+                        self.stats.duplicates += 1;
+                        let dup = SendSlices {
+                            to: s.to,
+                            head: s.head,
+                            tail: s.tail,
+                            rendezvous: false,
+                        };
+                        self.inner.sendrecv_slices_tagged(Some(dup), None, tag)?;
+                        Some(SendSlices { rendezvous: false, ..s })
+                    }
+                    Some(FaultAction::Truncate(keep)) => {
+                        self.stats.truncations += 1;
+                        let head_keep = keep.min(s.head.len());
+                        let tail_keep = keep.saturating_sub(head_keep).min(s.tail.len());
+                        Some(SendSlices {
+                            to: s.to,
+                            head: &s.head[..head_keep],
+                            tail: &s.tail[..tail_keep],
+                            rendezvous: false,
+                        })
+                    }
+                }
+            }
+        };
+        if let Some(from) = recv_from {
+            if let Some(detail) = self.killed(from) {
+                // Still push the (possibly faulted) send out so peers
+                // that only needed our data can finish, then refuse the
+                // receive: nothing will ever arrive from a dead peer.
+                self.inner.sendrecv_slices_tagged(send, None, tag)?;
+                self.stats.dead_refusals += 1;
+                return Err(TransportError::PeerDown { rank, peer: from, detail });
+            }
+        }
+        self.inner.sendrecv_slices_tagged(send, recv_from, tag)
+    }
+
+    fn recv_payload(&mut self, from: usize, tag: Tag) -> Result<Payload<E>, TransportError> {
+        self.note_op(tag.op);
+        if let Some(err) = self.self_dead() {
+            self.stats.dead_refusals += 1;
+            return Err(err);
+        }
+        if let Some(detail) = self.killed(from) {
+            self.stats.dead_refusals += 1;
+            return Err(TransportError::PeerDown { rank: self.inner.rank(), peer: from, detail });
+        }
+        self.inner.recv_payload(from, tag)
+    }
+
+    fn try_recv_payload(&mut self, from: usize, tag: Tag) -> Option<Payload<E>> {
+        self.note_op(tag.op);
+        if self.killed(self.inner.rank()).is_some() || self.killed(from).is_some() {
+            // Poll-mode callers learn of the death through peer_status /
+            // the blocking paths; a poll just never yields data.
+            return None;
+        }
+        self.inner.try_recv_payload(from, tag)
+    }
+
+    fn complete_tagged(&mut self, from: usize, tag: Tag, payload: Payload<E>) {
+        self.inner.complete_tagged(from, tag, payload)
+    }
+
+    fn acquire(&mut self, to: usize, need: usize) -> Vec<E> {
+        self.inner.acquire(to, need)
+    }
+
+    fn release(&mut self, from: usize, payload: Vec<E>) {
+        self.inner.release(from, payload)
+    }
+
+    fn finish_round(&mut self) -> Result<(), TransportError> {
+        self.inner.finish_round()
+    }
+
+    fn finish_op(&mut self, op: u64) -> Result<(), TransportError> {
+        self.note_op(op);
+        self.inner.finish_op(op)
+    }
+
+    fn try_finish(&mut self, tag: Tag) -> bool {
+        self.inner.try_finish(tag)
+    }
+
+    fn op_has_pending_publish(&mut self, op: u64) -> bool {
+        self.inner.op_has_pending_publish(op)
+    }
+
+    fn forget_op(&mut self, op: u64) -> usize {
+        self.inner.forget_op(op)
+    }
+
+    fn counters(&self) -> &Counters {
+        self.inner.counters()
+    }
+
+    fn counters_mut(&mut self) -> &mut Counters {
+        self.inner.counters_mut()
+    }
+
+    fn peer_status(&self) -> Vec<bool> {
+        let mut status = self.inner.peer_status();
+        for (r, up) in status.iter_mut().enumerate() {
+            if r != self.inner.rank() && self.killed(r).is_some() {
+                *up = false;
+            }
+        }
+        status
+    }
+
+    fn peer_down(&self, peer: usize) -> Option<String> {
+        if peer != self.inner.rank() {
+            if let Some(detail) = self.killed(peer) {
+                return Some(detail);
+            }
+        }
+        self.inner.peer_down(peer)
+    }
+
+    fn timeout(&self) -> Duration {
+        self.inner.timeout()
+    }
+
+    fn set_timeout(&mut self, timeout: Duration) {
+        self.inner.set_timeout(timeout)
+    }
+
+    fn set_rendezvous(&mut self, on: bool) {
+        self.inner.set_rendezvous(on)
+    }
+
+    fn set_rendezvous_min_elems(&mut self, min: usize) {
+        self.inner.set_rendezvous_min_elems(min)
+    }
+
+    fn set_retry(&mut self, attempts: usize, base_ms: u64) {
+        self.inner.set_retry(attempts, base_ms)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::network_typed;
+
+    fn pair() -> Vec<crate::transport::Endpoint<i64>> {
+        network_typed::<i64>(2)
+    }
+
+    #[test]
+    fn empty_plan_is_transparent() {
+        let mut eps = pair().into_iter();
+        let mut a = FaultTransport::new(eps.next().unwrap(), FaultPlan::new(1));
+        let mut b = eps.next().unwrap();
+        let tag = Tag::new(7, 0);
+        let data = [1i64, 2, 3];
+        a.sendrecv_slices_tagged(
+            Some(SendSlices { to: 1, head: &data, tail: &[], rendezvous: false }),
+            None,
+            tag,
+        )
+        .unwrap();
+        let got = b.recv_payload(0, tag).unwrap();
+        assert_eq!(got.len(), 3);
+        assert_eq!(a.stats(), FaultStats::default());
+        assert!(a.peer_status().iter().all(|&up| up));
+    }
+
+    #[test]
+    fn drop_rule_black_holes_the_send() {
+        let mut eps = pair().into_iter();
+        let plan = FaultPlan::new(2).drop_at(0, 7, 0);
+        let mut a = FaultTransport::new(eps.next().unwrap(), plan);
+        let mut b = eps.next().unwrap();
+        b.timeout = Duration::from_millis(50);
+        let data = [5i64; 4];
+        a.sendrecv_slices_tagged(
+            Some(SendSlices { to: 1, head: &data, tail: &[], rendezvous: false }),
+            None,
+            Tag::new(7, 0),
+        )
+        .unwrap();
+        assert_eq!(a.stats().drops, 1);
+        let err = b.recv_payload(0, Tag::new(7, 0)).unwrap_err();
+        assert!(matches!(err, TransportError::Timeout { .. }), "{err}");
+        // A different round of the same op is untouched.
+        a.sendrecv_slices_tagged(
+            Some(SendSlices { to: 1, head: &data, tail: &[], rendezvous: false }),
+            None,
+            Tag::new(7, 1),
+        )
+        .unwrap();
+        assert_eq!(b.recv_payload(0, Tag::new(7, 1)).unwrap().len(), 4);
+    }
+
+    #[test]
+    fn kill_marks_peer_down_everywhere_once_epoch_reached() {
+        let mut eps = pair().into_iter();
+        let plan = FaultPlan::new(3).kill_rank(1, 5);
+        let mut a = FaultTransport::new(eps.next().unwrap(), plan.clone());
+        let mut b = FaultTransport::new(eps.next().unwrap(), plan);
+        // Before the trigger epoch everything flows.
+        let data = [9i64; 2];
+        a.sendrecv_slices_tagged(
+            Some(SendSlices { to: 1, head: &data, tail: &[], rendezvous: false }),
+            None,
+            Tag::new(4, 0),
+        )
+        .unwrap();
+        assert_eq!(b.recv_payload(0, Tag::new(4, 0)).unwrap().len(), 2);
+        assert!(a.peer_status()[1]);
+        // From epoch 5 on: rank 1 is dead to rank 0, and rank 1's own
+        // operations refuse.
+        let err = a
+            .sendrecv_slices_tagged(
+                Some(SendSlices { to: 1, head: &data, tail: &[], rendezvous: false }),
+                None,
+                Tag::new(5, 0),
+            )
+            .unwrap_err();
+        assert!(matches!(err, TransportError::PeerDown { peer: 1, .. }), "{err}");
+        assert!(!a.peer_status()[1], "health bitmap must reflect the kill");
+        assert!(a.peer_down(1).is_some());
+        let err = b.recv_payload(0, Tag::new(5, 0)).unwrap_err();
+        assert!(matches!(err, TransportError::PeerDown { .. }), "{err}");
+        assert!(b.peer_status()[1], "own slot stays up by contract");
+    }
+
+    #[test]
+    fn truncate_shortens_the_frame() {
+        let mut eps = pair().into_iter();
+        let plan =
+            FaultPlan::new(4).rule(FaultRule::new(FaultAction::Truncate(2)).on_rank(0).at_op(9));
+        let mut a = FaultTransport::new(eps.next().unwrap(), plan);
+        let mut b = eps.next().unwrap();
+        let data = [3i64; 6];
+        a.sendrecv_slices_tagged(
+            Some(SendSlices { to: 1, head: &data, tail: &[], rendezvous: false }),
+            None,
+            Tag::new(9, 0),
+        )
+        .unwrap();
+        assert_eq!(a.stats().truncations, 1);
+        assert_eq!(b.recv_payload(0, Tag::new(9, 0)).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn duplicate_sends_twice_and_stash_absorbs() {
+        let mut eps = pair().into_iter();
+        let plan = FaultPlan::new(5)
+            .rule(FaultRule::new(FaultAction::Duplicate).on_rank(0).at_op(3).at_round(0));
+        let mut a = FaultTransport::new(eps.next().unwrap(), plan);
+        let mut b = eps.next().unwrap();
+        let data = [7i64; 3];
+        a.sendrecv_slices_tagged(
+            Some(SendSlices { to: 1, head: &data, tail: &[], rendezvous: false }),
+            None,
+            Tag::new(3, 0),
+        )
+        .unwrap();
+        assert_eq!(a.stats().duplicates, 1);
+        // Both copies arrive; the tagged receive consumes one and the
+        // stash (keyed by (from, tag)) absorbs the other harmlessly.
+        assert_eq!(b.recv_payload(0, Tag::new(3, 0)).unwrap().len(), 3);
+    }
+
+    #[test]
+    fn probability_stream_is_reproducible_from_the_seed() {
+        let run = |seed: u64| -> u64 {
+            let mut eps = pair().into_iter();
+            let plan = FaultPlan::new(seed)
+                .rule(FaultRule::new(FaultAction::Drop).on_rank(0).with_probability(0.5));
+            let mut a = FaultTransport::new(eps.next().unwrap(), plan);
+            let _b = eps.next().unwrap();
+            let data = [1i64; 2];
+            for round in 0..64 {
+                let _ = a.sendrecv_slices_tagged(
+                    Some(SendSlices { to: 1, head: &data, tail: &[], rendezvous: false }),
+                    None,
+                    Tag::new(1, round),
+                );
+            }
+            a.stats().drops
+        };
+        let d1 = run(42);
+        assert_eq!(d1, run(42), "same seed, same drops");
+        assert!(d1 > 0 && d1 < 64, "p=0.5 over 64 sends should drop some, not all: {d1}");
+    }
+}

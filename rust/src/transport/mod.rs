@@ -154,6 +154,11 @@
 //!   sockets (`ccoll launch --backend uds`). Rendezvous is unsupported
 //!   (no shared address space); recv-side buffers are pooled and reused
 //!   across rounds.
+//!
+//! A third piece — not a registered backend but a wrapper over any of
+//! them — is [`fault::FaultTransport`]: deterministic, seeded fault
+//! injection (drop/delay/duplicate/truncate/kill) for chaos-testing the
+//! failure paths reproducibly (`ccoll chaos`, `rust/tests/faults.rs`).
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -320,6 +325,15 @@ pub enum TransportError {
     Disconnected { rank: usize, to: usize },
     #[error("rank {rank}: timeout waiting for rendezvous ack (round {round})")]
     AckTimeout { rank: usize, round: u64 },
+    /// A peer was positively detected dead (EOF / IO error on its
+    /// connection, or a fault-injected kill) — unlike [`Timeout`]
+    /// (TransportError::Timeout), which merely says nothing arrived in
+    /// time. The distinction is the error taxonomy the engine's
+    /// fast-fail path keys on: a down peer fails every operation that
+    /// still needs it *immediately* instead of burning one liveness
+    /// timeout per in-flight op.
+    #[error("rank {rank}: peer {peer} is down ({detail})")]
+    PeerDown { rank: usize, peer: usize, detail: String },
 }
 
 /// Volume counters for one endpoint.
@@ -411,6 +425,17 @@ pub fn rendezvous_env_enabled() -> bool {
 /// per endpoint via [`Endpoint::rendezvous_min_elems`] (the executor test
 /// drivers pin it to 0 to exercise the zero-copy tier deterministically).
 pub const DEFAULT_RENDEZVOUS_MIN_ELEMS: usize = 256;
+
+/// Default retry budget for transient send errors (`WouldBlock` on a
+/// backend writer): how many re-attempts a frame segment gets before the
+/// peer is declared down. Override per process with `CCOLL_RETRY_ATTEMPTS`
+/// or per engine via `EngineConfig::retry_attempts` → [`Transport::set_retry`].
+pub const DEFAULT_RETRY_ATTEMPTS: usize = 3;
+
+/// Default base backoff (milliseconds) between transient-send retries;
+/// attempt `k` sleeps `base << (k-1)`, capped. Override with
+/// `CCOLL_RETRY_BASE_MS` / `EngineConfig::retry_base_ms`.
+pub const DEFAULT_RETRY_BASE_MS: u64 = 10;
 
 /// One rank's communication handle for payloads of element type `E`
 /// (default `f32`, so pre-dtype code compiles unchanged).
@@ -877,6 +902,7 @@ impl<E: Elem> Endpoint<E> {
     }
 }
 
+pub mod fault;
 pub mod uds;
 
 /// Capability flags of one transport backend. The executor consults these
@@ -1037,6 +1063,24 @@ pub trait Transport<E: Elem> {
         self.counters_mut().bytes_copied += bytes;
     }
 
+    /// Per-peer liveness as seen by this endpoint: `status[r]` is `true`
+    /// while peer `r` is believed alive. Backends with no failure
+    /// detector (the in-process thread transport — a thread cannot
+    /// vanish without the whole process going with it) report all-up;
+    /// the UDS backend flips a peer's bit the moment its reader thread
+    /// observes EOF or an IO error, and [`fault::FaultTransport`]
+    /// flips them on injected kills. One's own slot is always `true`.
+    fn peer_status(&self) -> Vec<bool> {
+        vec![true; self.p()]
+    }
+
+    /// Failure detail for a down peer (`None` while the peer is up) —
+    /// the `detail` a [`TransportError::PeerDown`] for that peer would
+    /// carry. Default: no peer is ever down.
+    fn peer_down(&self, _peer: usize) -> Option<String> {
+        None
+    }
+
     /// Receive/ack timeout currently in force.
     fn timeout(&self) -> Duration;
     fn set_timeout(&mut self, timeout: Duration);
@@ -1048,6 +1092,15 @@ pub trait Transport<E: Elem> {
     /// Minimum payload (elements) for a rendezvous publish. No-op on
     /// non-rendezvous backends.
     fn set_rendezvous_min_elems(&mut self, min: usize);
+
+    /// Retry policy for *transient* transport errors (interrupted /
+    /// would-block socket writes): up to `attempts` retries with
+    /// `base_ms` backoff doubling per attempt. No-op on backends with
+    /// nothing transient (in-process channels either deliver or the
+    /// process is gone). Defaults come from `CCOLL_RETRY_ATTEMPTS` /
+    /// `CCOLL_RETRY_BASE_MS`; the engine applies its `engine.retry.*`
+    /// config through this.
+    fn set_retry(&mut self, _attempts: usize, _base_ms: u64) {}
 }
 
 /// The default in-process backend: [`Endpoint`] under its trait name. All

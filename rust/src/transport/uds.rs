@@ -66,14 +66,22 @@ const HEADER_BYTES: usize = 28;
 /// not appeared yet, and how long it waits in accept for higher ranks.
 const DEFAULT_BOOTSTRAP_TIMEOUT: Duration = Duration::from_secs(30);
 
-/// One decoded inbound message, produced by a reader thread.
-struct Inbound<E: Elem> {
-    from: usize,
-    tag: Tag,
-    buf: Vec<E>,
-    /// The reader received into a recycled buffer (owner credits a pool
-    /// hit) rather than a fresh allocation (a miss).
-    reused: bool,
+/// What a reader thread feeds the owner's inbox: a decoded frame, or the
+/// positive observation that the peer's connection died.
+enum Inbound<E: Elem> {
+    /// One decoded inbound message.
+    Msg {
+        from: usize,
+        tag: Tag,
+        buf: Vec<E>,
+        /// The reader received into a recycled buffer (owner credits a
+        /// pool hit) rather than a fresh allocation (a miss).
+        reused: bool,
+    },
+    /// The peer's connection EOF'd or errored: the peer process is gone.
+    /// The owner flips the peer's health bit and fails waiters with
+    /// [`TransportError::PeerDown`] instead of burning its timeout.
+    PeerGone { peer: usize, detail: String },
 }
 
 /// View a primitive-element slice as raw bytes for a socket write.
@@ -97,7 +105,10 @@ fn io_disconnected(rank: usize, to: usize) -> TransportError {
 
 /// Reader loop for one peer connection: decode frames, receive into
 /// recycled buffers when one fits, forward to the owner's inbox. Exits
-/// when the peer closes its write half or the owner drops its inbox.
+/// when the peer closes its write half or the owner drops its inbox —
+/// and in the former case reports the death as a first-class
+/// [`Inbound::PeerGone`] event first, so the owner can fail fast
+/// instead of hanging until its liveness timeout.
 fn reader_loop<E: Elem>(
     owner: usize,
     peer: usize,
@@ -109,8 +120,18 @@ fn reader_loop<E: Elem>(
     let mut free: Vec<Vec<E>> = Vec::new();
     let mut hdr = [0u8; HEADER_BYTES];
     loop {
-        if stream.read_exact(&mut hdr).is_err() {
-            return; // peer closed (normal teardown) or died
+        if let Err(e) = stream.read_exact(&mut hdr) {
+            // Peer closed (normal teardown) or died. Either way the link
+            // is dead: tell the owner, which decides whether anything
+            // still needed this peer. Best-effort — the owner may
+            // already be gone itself.
+            let detail = if e.kind() == std::io::ErrorKind::UnexpectedEof {
+                "connection closed (EOF)".to_string()
+            } else {
+                format!("read error: {e}")
+            };
+            let _ = inbox.send(Inbound::PeerGone { peer, detail });
+            return;
         }
         let from = u32::from_le_bytes(hdr[0..4].try_into().unwrap()) as usize;
         let op = u64::from_le_bytes(hdr[4..12].try_into().unwrap());
@@ -144,10 +165,18 @@ fn reader_loop<E: Elem>(
                 ok
             };
             if !ok {
-                return; // truncated frame: peer died mid-message
+                // Truncated frame: peer died mid-message.
+                let _ = inbox.send(Inbound::PeerGone {
+                    peer,
+                    detail: format!(
+                        "connection died mid-frame (op {op} round {round}, \
+                         expected {len} elems)"
+                    ),
+                });
+                return;
             }
         }
-        let msg = Inbound { from: peer, tag: Tag::new(op, round), buf, reused };
+        let msg = Inbound::Msg { from: peer, tag: Tag::new(op, round), buf, reused };
         if inbox.send(msg).is_err() {
             return; // owner dropped its transport
         }
@@ -173,6 +202,16 @@ pub struct UdsTransport<E: Elem> {
     readers: Vec<std::thread::JoinHandle<()>>,
     counters: Counters,
     timeout: Duration,
+    /// Health bitmap: `peer_down[r]` holds the failure detail once peer
+    /// `r`'s connection was positively observed dead (reader EOF/IO
+    /// error, or a failed write on our side). Updated whenever the inbox
+    /// is drained; read through [`Transport::peer_status`].
+    peer_down: Vec<Option<String>>,
+    /// Transient-write retry policy: attempts and base backoff (doubling
+    /// per attempt). From `CCOLL_RETRY_*` by default; the engine applies
+    /// its `engine.retry.*` config through [`Transport::set_retry`].
+    retry_attempts: usize,
+    retry_base_ms: u64,
 }
 
 impl<E: Elem> UdsTransport<E> {
@@ -214,7 +253,9 @@ impl<E: Elem> UdsTransport<E> {
                             return Err(std::io::Error::new(
                                 std::io::ErrorKind::TimedOut,
                                 format!(
-                                    "rank {rank}: peer {peer} never bound {} ({e})",
+                                    "rank {rank}: bootstrap deadline ({:.1}s) expired — \
+                                     missing rank {peer}, which never bound {} ({e})",
+                                    bootstrap.as_secs_f64(),
                                     path.display()
                                 ),
                             ));
@@ -248,11 +289,19 @@ impl<E: Elem> UdsTransport<E> {
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                     if Instant::now() >= deadline {
+                        let missing: Vec<String> = (rank + 1..p)
+                            .filter(|&r| streams[r].is_none())
+                            .map(|r| r.to_string())
+                            .collect();
                         return Err(std::io::Error::new(
                             std::io::ErrorKind::TimedOut,
                             format!(
-                                "rank {rank}: only {accepted}/{} higher ranks connected",
-                                p - 1 - rank
+                                "rank {rank}: bootstrap deadline ({:.1}s) expired with only \
+                                 {accepted}/{} higher ranks connected — missing rank(s) {} \
+                                 (did those processes start?)",
+                                bootstrap.as_secs_f64(),
+                                p - 1 - rank,
+                                missing.join(", "),
                             ),
                         ));
                     }
@@ -285,6 +334,7 @@ impl<E: Elem> UdsTransport<E> {
                     .expect("spawn uds reader thread"),
             );
         }
+        let knobs = crate::env_knobs::knobs();
         Ok(Self {
             rank,
             p,
@@ -295,12 +345,51 @@ impl<E: Elem> UdsTransport<E> {
             readers,
             counters: Counters::default(),
             timeout: Duration::from_secs(30),
+            peer_down: (0..p).map(|_| None).collect(),
+            retry_attempts: knobs.retry_attempts,
+            retry_base_ms: knobs.retry_base_ms,
         })
+    }
+
+    /// Preflight a rendezvous directory before a fresh `ccoll launch`
+    /// run: a leftover `rank-<r>.sock` from a **crashed** previous run is
+    /// removed (nothing is listening on it), but a socket with a *live*
+    /// listener means another process is already serving that rank in
+    /// this directory — refuse loudly rather than corrupt its mesh.
+    pub fn preflight_socket(dir: &Path, rank: usize) -> std::io::Result<()> {
+        let path = socket_path(dir, rank);
+        if !path.exists() {
+            return Ok(());
+        }
+        match UnixStream::connect(&path) {
+            Ok(_) => Err(std::io::Error::new(
+                std::io::ErrorKind::AddrInUse,
+                format!(
+                    "rank {rank}: {} already has a live listener — another process is \
+                     serving this rank in this directory (pick a fresh --dir, or stop it)",
+                    path.display()
+                ),
+            )),
+            Err(_) => {
+                // Stale: bound by a process that died without unlinking.
+                std::fs::remove_file(&path)?;
+                eprintln!(
+                    "ccoll: removed stale socket {} left by a crashed previous run",
+                    path.display()
+                );
+                Ok(())
+            }
+        }
     }
 
     /// Frame and write one tagged payload (up to two slices) to `to`.
     /// The socket write is the backend's physical copy: credited to
     /// `bytes_copied` so framed sends can never under-report volume.
+    ///
+    /// Never panics: a write to a dead or never-connected peer returns
+    /// [`TransportError::PeerDown`] (and records the death in the health
+    /// bitmap), so one killed rank degrades to typed errors instead of
+    /// taking its peers down with it.
     fn send_frame(
         &mut self,
         to: usize,
@@ -309,45 +398,86 @@ impl<E: Elem> UdsTransport<E> {
         tail: &[E],
     ) -> Result<(), TransportError> {
         debug_assert!(to < self.p && to != self.rank, "bad send target {to}");
+        let rank = self.rank;
+        if let Some(detail) = self.peer_down[to].clone() {
+            return Err(TransportError::PeerDown { rank, peer: to, detail });
+        }
         let len = head.len() + tail.len();
         let mut hdr = [0u8; HEADER_BYTES];
         hdr[0..4].copy_from_slice(&(self.rank as u32).to_le_bytes());
         hdr[4..12].copy_from_slice(&tag.op.to_le_bytes());
         hdr[12..20].copy_from_slice(&tag.round.to_le_bytes());
         hdr[20..28].copy_from_slice(&(len as u64).to_le_bytes());
-        let rank = self.rank;
-        let w = self.writers[to].as_mut().expect("send to unconnected peer");
-        w.write_all(&hdr)
-            .and_then(|()| w.write_all(as_bytes(head)))
-            .and_then(|()| w.write_all(as_bytes(tail)))
-            .map_err(|_| io_disconnected(rank, to))?;
+        let (attempts, base_ms) = (self.retry_attempts, self.retry_base_ms);
+        let outcome = match self.writers[to].as_mut() {
+            None => Err("no connection to this peer (bootstrap never linked it)".to_string()),
+            Some(w) => write_frame(w, &hdr, as_bytes(head), as_bytes(tail), attempts, base_ms),
+        };
+        if let Err(detail) = outcome {
+            self.peer_down[to] = Some(detail.clone());
+            return Err(TransportError::PeerDown { rank, peer: to, detail });
+        }
         self.counters.msgs_sent += 1;
         self.counters.elems_sent += len as u64;
         self.counters.bytes_copied += (std::mem::size_of::<E>() * len) as u64;
         Ok(())
     }
 
-    /// Account one consumed inbound message and convert it to a payload.
-    fn accept_inbound(&mut self, msg: Inbound<E>) -> ((usize, Tag), Payload<E>) {
-        if msg.reused {
-            self.counters.pool_hits += 1;
-        } else {
-            self.counters.pool_misses += 1;
+    /// Account one consumed inbound event. A decoded frame becomes a
+    /// stash-keyed payload; a [`Inbound::PeerGone`] notice flips the
+    /// peer's health bit and yields nothing.
+    fn accept_inbound(&mut self, msg: Inbound<E>) -> Option<((usize, Tag), Payload<E>)> {
+        match msg {
+            Inbound::Msg { from, tag, buf, reused } => {
+                if reused {
+                    self.counters.pool_hits += 1;
+                } else {
+                    self.counters.pool_misses += 1;
+                }
+                Some(((from, tag), Payload::Copied(buf)))
+            }
+            Inbound::PeerGone { peer, detail } => {
+                // First observation wins (it names the root cause; a
+                // later write failure would just echo the broken pipe).
+                if self.peer_down[peer].is_none() {
+                    self.peer_down[peer] = Some(detail);
+                }
+                None
+            }
         }
-        ((msg.from, msg.tag), Payload::Copied(msg.buf))
     }
 
     /// Receive the payload tagged `(from, tag)`, stashing out-of-order
     /// arrivals — the socket-backed twin of the thread backend's
-    /// `recv_tagged`.
+    /// `recv_tagged`, plus positive failure detection: a peer observed
+    /// dead fails the receive with [`TransportError::PeerDown`]
+    /// *immediately*, not after burning the liveness timeout. (Frames
+    /// that arrived before the death are still consumable: per-sender
+    /// channel order guarantees every frame precedes its link's
+    /// `PeerGone` notice, and the stash is checked first.)
     fn recv_tagged(&mut self, from: usize, tag: Tag) -> Result<Payload<E>, TransportError> {
         if let Some(payload) = self.stash.remove(&(from, tag)) {
             return Ok(payload);
         }
+        if let Some(detail) = self.peer_down[from].clone() {
+            return Err(TransportError::PeerDown { rank: self.rank, peer: from, detail });
+        }
         loop {
             match self.rx.recv_timeout(self.timeout) {
                 Ok(msg) => {
-                    let (key, payload) = self.accept_inbound(msg);
+                    let Some((key, payload)) = self.accept_inbound(msg) else {
+                        // A death notice. Fail fast if it was the peer we
+                        // are waiting on; other deaths are recorded for
+                        // their own waiters.
+                        if let Some(detail) = self.peer_down[from].clone() {
+                            return Err(TransportError::PeerDown {
+                                rank: self.rank,
+                                peer: from,
+                                detail,
+                            });
+                        }
+                        continue;
+                    };
                     if key == (from, tag) {
                         return Ok(payload);
                     }
@@ -368,13 +498,47 @@ impl<E: Elem> UdsTransport<E> {
         }
     }
 
-    /// Drain everything already decoded into the stash (non-blocking).
+    /// Drain everything already decoded into the stash (non-blocking);
+    /// death notices update the health bitmap as a side effect.
     fn drain_inbox(&mut self) {
         while let Ok(msg) = self.rx.try_recv() {
-            let (key, payload) = self.accept_inbound(msg);
-            self.stash.insert(key, payload);
+            if let Some((key, payload)) = self.accept_inbound(msg) {
+                self.stash.insert(key, payload);
+            }
         }
     }
+}
+
+/// Write one frame (header + ≤ 2 payload segments) to a stream, retrying
+/// transient errors (`WouldBlock`) with doubling backoff **from the byte
+/// offset reached** — never from the frame start, so a retry can never
+/// duplicate wire bytes. `Interrupted` writes wrote nothing and are
+/// retried unconditionally. Returns a human-readable failure detail.
+fn write_frame(
+    w: &mut UnixStream,
+    hdr: &[u8],
+    head: &[u8],
+    tail: &[u8],
+    attempts: usize,
+    base_ms: u64,
+) -> Result<(), String> {
+    let mut attempt = 0usize;
+    for seg in [hdr, head, tail] {
+        let mut off = 0usize;
+        while off < seg.len() {
+            match w.write(&seg[off..]) {
+                Ok(0) => return Err("write returned 0 bytes (socket closed)".to_string()),
+                Ok(n) => off += n,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock && attempt < attempts => {
+                    attempt += 1;
+                    std::thread::sleep(Duration::from_millis(base_ms << (attempt - 1).min(6)));
+                }
+                Err(e) => return Err(format!("write failed: {e}")),
+            }
+        }
+    }
+    Ok(())
 }
 
 impl<E: Elem> Transport<E> for UdsTransport<E> {
@@ -492,6 +656,14 @@ impl<E: Elem> Transport<E> for UdsTransport<E> {
         &mut self.counters
     }
 
+    fn peer_status(&self) -> Vec<bool> {
+        self.peer_down.iter().map(|d| d.is_none()).collect()
+    }
+
+    fn peer_down(&self, peer: usize) -> Option<String> {
+        self.peer_down[peer].clone()
+    }
+
     fn timeout(&self) -> Duration {
         self.timeout
     }
@@ -505,6 +677,11 @@ impl<E: Elem> Transport<E> for UdsTransport<E> {
     }
 
     fn set_rendezvous_min_elems(&mut self, _min: usize) {}
+
+    fn set_retry(&mut self, attempts: usize, base_ms: u64) {
+        self.retry_attempts = attempts;
+        self.retry_base_ms = base_ms;
+    }
 }
 
 impl<E: Elem> Drop for UdsTransport<E> {
@@ -719,6 +896,62 @@ mod tests {
             }
         });
         assert!(out[0], "rank 0 should have timed out");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn dropped_peer_is_detected_as_peer_down_not_timeout() {
+        // Rank 1 sends one frame then drops its transport entirely (the
+        // "process died" analogue in-process). Rank 0 must (a) still be
+        // able to consume the pre-death frame, (b) fail a later receive
+        // with PeerDown — positively and immediately, with a timeout far
+        // longer than the test budget — and (c) see the death in the
+        // health bitmap and get a typed error (not a panic) from a send.
+        let dir = scratch_dir("peerdown");
+        let out = run_mesh::<i64, _, _>(2, &dir, |rank, t| {
+            if rank == 1 {
+                let data = [42i64; 3];
+                let send = SendSlices { to: 0, head: &data, tail: &[], rendezvous: false };
+                t.sendrecv_slices_tagged(Some(send), None, Tag::new(1, 0)).unwrap();
+                true // drop on return: closes the sockets
+            } else {
+                t.set_timeout(Duration::from_secs(300)); // a hang would be loud
+                let pre = Transport::recv_payload(t, 1, Tag::new(1, 0)).unwrap();
+                assert_eq!(pre.len(), 3, "pre-death frame must be consumable");
+                t.complete_tagged(1, Tag::new(1, 0), pre);
+                let start = Instant::now();
+                let err = Transport::recv_payload(t, 1, Tag::new(1, 1)).unwrap_err();
+                assert!(
+                    matches!(err, TransportError::PeerDown { peer: 1, .. }),
+                    "want PeerDown, got {err}"
+                );
+                assert!(
+                    start.elapsed() < Duration::from_secs(30),
+                    "PeerDown must beat the liveness timeout"
+                );
+                assert_eq!(t.peer_status(), vec![true, false], "health bitmap");
+                assert!(Transport::peer_down(t, 1).is_some());
+                // Writes to the dead peer: typed error, no panic. (The
+                // first write may land in the socket buffer before the
+                // kernel reports the hang-up, so allow one success.)
+                let data = [7i64; 2];
+                let mut saw_err = false;
+                for round in 0..32 {
+                    let send =
+                        SendSlices { to: 1, head: &data, tail: &[], rendezvous: false };
+                    match t.sendrecv_slices_tagged(Some(send), None, Tag::new(2, round)) {
+                        Ok(_) => std::thread::sleep(Duration::from_millis(5)),
+                        Err(TransportError::PeerDown { peer: 1, .. }) => {
+                            saw_err = true;
+                            break;
+                        }
+                        Err(e) => panic!("want PeerDown from a dead-peer send, got {e}"),
+                    }
+                }
+                saw_err
+            }
+        });
+        assert!(out[0], "sends to the dead peer never surfaced PeerDown");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -1,0 +1,522 @@
+//! Failure-path integration tests: seeded fault plans (drop / delay /
+//! kill) over the thread and UDS backends, the engine's RankDown
+//! fast-fail taxonomy, survivor bit-identity, leak-freedom across long
+//! runs of consecutive failures, the backpressure diagnostic, and a
+//! real 4-process kill-one-rank run of the `ccoll` binary.
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use circulant_collectives::collectives::CollectiveError;
+use circulant_collectives::datatypes::{elem, Elem};
+use circulant_collectives::engine::{CollectiveEngine, EngineConfig, EngineError, OpRequest};
+use circulant_collectives::ops::SumOp;
+use circulant_collectives::transport::fault::{
+    FaultAction, FaultPlan, FaultRule, FaultTransport,
+};
+use circulant_collectives::transport::uds::uds_network_typed;
+use circulant_collectives::transport::{network_typed, Endpoint, TransportError};
+use circulant_collectives::util::rng::SplitMix64;
+
+type FaultNet = FaultTransport<i64, Endpoint<i64>>;
+
+/// Integer-valued inputs + exact scalar sum oracle.
+fn sum_case(p: usize, m: usize, seed: u64) -> (Vec<Vec<i64>>, Vec<i64>) {
+    let (lo, hi) = elem::test_value_bounds(<i64 as Elem>::DTYPE);
+    let mut rng = SplitMix64::new(seed);
+    let inputs: Vec<Vec<i64>> = (0..p).map(|_| elem::int_vec(&mut rng, m, lo, hi)).collect();
+    let mut want = vec![0i64; m];
+    for v in &inputs {
+        SumOp.combine(&mut want, v);
+    }
+    (inputs, want)
+}
+
+fn fault_engine(
+    p: usize,
+    plan: &FaultPlan,
+    cfg: EngineConfig,
+) -> CollectiveEngine<i64, FaultNet> {
+    let transports: Vec<FaultNet> = network_typed::<i64>(p)
+        .into_iter()
+        .map(|ep| FaultTransport::new(ep, plan.clone()))
+        .collect();
+    CollectiveEngine::with_transports(cfg, transports)
+}
+
+fn scratch(tag: &str, p: usize) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "ccoll-faults-{tag}-{p}-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("create scratch dir");
+    dir
+}
+
+fn assert_rank_down(err: &EngineError, want_peer: usize, ctx: &str) {
+    match err {
+        EngineError::Collective {
+            source: CollectiveError::RankDown { peer, .. },
+            ..
+        } => assert_eq!(
+            *peer, want_peer,
+            "{ctx}: RankDown names peer {peer}, want the killed rank {want_peer}"
+        ),
+        other => panic!("{ctx}: want CollectiveError::RankDown, got: {other}"),
+    }
+}
+
+/// A fault-injected kill fails subsequent ops with the `RankDown`
+/// taxonomy (positive death detection), never a bare liveness timeout —
+/// and everything that completed before the kill is bit-exact.
+#[test]
+fn kill_fails_ops_with_rank_down_not_timeout_thread() {
+    for p in [2usize, 5, 8] {
+        let killed = p - 1;
+        let plan = FaultPlan::new(0xBAD5_EED0).kill_rank(killed, 3);
+        let mut engine = fault_engine(
+            p,
+            &plan,
+            EngineConfig::new(p).op_timeout(Duration::from_millis(400)),
+        );
+        // Ops 1 and 2 predate the kill epoch: they complete bit-exact.
+        for i in 0..2u64 {
+            let (inputs, want) = sum_case(p, 64, 100 + i);
+            let out = engine
+                .submit(OpRequest::allreduce(inputs, "sum"))
+                .unwrap()
+                .wait()
+                .unwrap_or_else(|e| panic!("p={p}: pre-kill op {} must survive: {e}", i + 1));
+            for (r, buf) in out.iter().enumerate() {
+                assert_eq!(buf[..], want[..], "p={p} rank {r}: pre-kill result diverges");
+            }
+        }
+        // From op 3 on, rank p-1 is dead: RankDown, bounded by 2× the
+        // op timeout per wait (the hang bound).
+        for i in 0..3u64 {
+            let (inputs, _) = sum_case(p, 64, 200 + i);
+            let handle = engine.submit(OpRequest::allreduce(inputs, "sum")).unwrap();
+            let t0 = Instant::now();
+            let err = handle.wait().expect_err("op past the kill epoch must fail");
+            let waited = t0.elapsed();
+            assert!(
+                waited < Duration::from_millis(800),
+                "p={p}: failed wait took {waited:?}, over the 2×op-timeout hang bound"
+            );
+            assert_rank_down(&err, killed, &format!("p={p} post-kill op {}", i + 3));
+        }
+        engine.shutdown();
+    }
+}
+
+/// Seeded sub-timeout delays are survivable chaos: every op completes
+/// and stays bit-exact (the schedule tolerates slow links, only dead
+/// ones fail it).
+#[test]
+fn seeded_delays_preserve_results_thread() {
+    let p = 5;
+    let plan = FaultPlan::new(0xDE1A_4)
+        .rule(FaultRule::new(FaultAction::Delay(Duration::from_millis(2))).with_probability(0.4));
+    let mut engine = fault_engine(
+        p,
+        &plan,
+        EngineConfig::new(p).op_timeout(Duration::from_secs(5)),
+    );
+    for i in 0..30u64 {
+        let (inputs, want) = sum_case(p, 48, 300 + i);
+        let out = engine
+            .submit(OpRequest::allreduce(inputs, "sum"))
+            .unwrap()
+            .wait()
+            .unwrap_or_else(|e| panic!("delayed op {i} must still complete: {e}"));
+        for (r, buf) in out.iter().enumerate() {
+            assert_eq!(buf[..], want[..], "op {i} rank {r}: delay changed the result");
+        }
+    }
+    engine.shutdown();
+}
+
+/// A dropped message (sender alive, frame black-holed) is a *silent*
+/// stall: the taxonomy is the liveness `Timeout`, NOT `RankDown` — and
+/// the engine recovers for the next op.
+#[test]
+fn dropped_message_times_out_and_engine_recovers() {
+    let p = 2;
+    // Drop every frame rank 1 sends for op epoch 1.
+    let plan =
+        FaultPlan::new(0xD0_D0).rule(FaultRule::new(FaultAction::Drop).on_rank(1).at_op(1));
+    let mut engine = fault_engine(
+        p,
+        &plan,
+        EngineConfig::new(p).op_timeout(Duration::from_millis(300)),
+    );
+    let (inputs, _) = sum_case(p, 32, 400);
+    let err = engine
+        .submit(OpRequest::allreduce(inputs, "sum"))
+        .unwrap()
+        .wait()
+        .expect_err("op 1 is wedged by the drop rule");
+    match &err {
+        EngineError::Collective {
+            source:
+                CollectiveError::Transport(
+                    TransportError::Timeout { .. } | TransportError::AckTimeout { .. },
+                ),
+            ..
+        } => {}
+        other => panic!("a drop must surface as a liveness Timeout, got: {other}"),
+    }
+    // Op 2 is untouched by the rule: the engine cleaned up and recovered.
+    let (inputs, want) = sum_case(p, 32, 401);
+    let out = engine
+        .submit(OpRequest::allreduce(inputs, "sum"))
+        .unwrap()
+        .wait()
+        .expect("op 2 must complete after the wedged op was failed + cleaned");
+    for (r, buf) in out.iter().enumerate() {
+        assert_eq!(buf[..], want[..], "rank {r}: post-recovery result diverges");
+    }
+    engine.shutdown();
+}
+
+/// ≥ 50 consecutive failed ops leak nothing: every failure releases its
+/// queue slot (a leak would wedge submission into BackpressureTimeout
+/// with queue_depth 2 long before 60 failures) and in-flight accounting
+/// drains to zero.
+#[test]
+fn sixty_consecutive_failed_ops_leak_no_slots() {
+    let p = 2;
+    let killed = 1;
+    let plan = FaultPlan::new(0x1EAC).kill_rank(killed, 1); // dead from the first op
+    let mut engine = fault_engine(
+        p,
+        &plan,
+        EngineConfig::new(p)
+            .queue_depth(2)
+            .op_timeout(Duration::from_millis(400))
+            .backpressure_timeout(Duration::from_secs(5)),
+    );
+    for i in 0..60u64 {
+        let (inputs, _) = sum_case(p, 16, 500 + i);
+        let err = engine
+            .submit(OpRequest::allreduce(inputs, "sum"))
+            .unwrap_or_else(|e| panic!("submit {i} wedged — a failed op leaked its slot: {e}"))
+            .wait()
+            .expect_err("every op needs the dead rank");
+        assert_rank_down(&err, killed, &format!("failure #{i}"));
+    }
+    let deadline = Instant::now() + Duration::from_secs(2);
+    while engine.in_flight() > 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_micros(200));
+    }
+    assert_eq!(
+        engine.in_flight(),
+        0,
+        "in-flight slots never drained after 60 consecutive failures"
+    );
+    engine.shutdown();
+}
+
+/// The same kill taxonomy holds over the UDS backend: a fault-wrapped
+/// socket mesh in one process, p ∈ {2, 5, 8}.
+#[test]
+fn uds_fault_kill_rank_down_taxonomy() {
+    for p in [2usize, 5, 8] {
+        let killed = p - 1;
+        let dir = scratch("kill", p);
+        let nets = uds_network_typed::<i64>(p, &dir).expect("uds bootstrap");
+        let plan = FaultPlan::new(0x0D5).kill_rank(killed, 2);
+        let transports: Vec<_> =
+            nets.into_iter().map(|t| FaultTransport::new(t, plan.clone())).collect();
+        let mut engine = CollectiveEngine::<i64, _>::with_transports(
+            EngineConfig::new(p).op_timeout(Duration::from_millis(500)),
+            transports,
+        );
+        // Op 1 predates the kill: bit-exact over the wire.
+        let (inputs, want) = sum_case(p, 32, 600);
+        let out = engine
+            .submit(OpRequest::allreduce(inputs, "sum"))
+            .unwrap()
+            .wait()
+            .unwrap_or_else(|e| panic!("uds p={p}: pre-kill op must survive: {e}"));
+        for (r, buf) in out.iter().enumerate() {
+            assert_eq!(buf[..], want[..], "uds p={p} rank {r}: pre-kill result diverges");
+        }
+        // Ops 2 and 3: RankDown naming the killed rank.
+        for i in 0..2u64 {
+            let (inputs, _) = sum_case(p, 32, 601 + i);
+            let err = engine
+                .submit(OpRequest::allreduce(inputs, "sum"))
+                .unwrap()
+                .wait()
+                .expect_err("op past the kill epoch must fail");
+            assert_rank_down(&err, killed, &format!("uds p={p} post-kill op {}", i + 2));
+        }
+        engine.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// A drop over UDS frames surfaces as the liveness Timeout taxonomy
+/// (sender alive, wire silent) — the backend distinction the RankDown
+/// error exists to draw.
+#[test]
+fn uds_dropped_frame_times_out() {
+    let p = 2;
+    let dir = scratch("drop", p);
+    let nets = uds_network_typed::<i64>(p, &dir).expect("uds bootstrap");
+    let plan =
+        FaultPlan::new(0xD2_0F).rule(FaultRule::new(FaultAction::Drop).on_rank(0).at_op(1));
+    let transports: Vec<_> =
+        nets.into_iter().map(|t| FaultTransport::new(t, plan.clone())).collect();
+    let mut engine = CollectiveEngine::<i64, _>::with_transports(
+        EngineConfig::new(p).op_timeout(Duration::from_millis(300)),
+        transports,
+    );
+    let (inputs, _) = sum_case(p, 24, 700);
+    let err = engine
+        .submit(OpRequest::allreduce(inputs, "sum"))
+        .unwrap()
+        .wait()
+        .expect_err("op 1 is wedged by the drop rule");
+    match &err {
+        EngineError::Collective {
+            source:
+                CollectiveError::Transport(
+                    TransportError::Timeout { .. } | TransportError::AckTimeout { .. },
+                ),
+            ..
+        } => {}
+        other => panic!("uds drop must surface as a liveness Timeout, got: {other}"),
+    }
+    engine.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The backpressure diagnostic names the wedged op: queue_depth 1, op 1
+/// stalled by a drop rule, op 2's submit must fail with
+/// `BackpressureTimeout` carrying `stuck_tags == [1]`.
+#[test]
+fn backpressure_timeout_names_stuck_tags() {
+    let p = 2;
+    let plan =
+        FaultPlan::new(0xB4_C4).rule(FaultRule::new(FaultAction::Drop).on_rank(1).at_op(1));
+    let mut engine = fault_engine(
+        p,
+        &plan,
+        EngineConfig::new(p)
+            .queue_depth(1)
+            .op_timeout(Duration::from_secs(3))
+            .backpressure_timeout(Duration::from_secs(1)),
+    );
+    let (inputs, _) = sum_case(p, 16, 800);
+    let wedged = engine.submit(OpRequest::allreduce(inputs, "sum")).unwrap();
+    let (inputs, _) = sum_case(p, 16, 801);
+    match engine.submit(OpRequest::allreduce(inputs, "sum")) {
+        Err(EngineError::BackpressureTimeout { stuck_tags, in_flight, .. }) => {
+            assert_eq!(stuck_tags, vec![1], "the diagnostic must name the wedged op tag");
+            assert_eq!(in_flight, 1);
+        }
+        Ok(_) => panic!("submit must park then fail: queue_depth 1 and op 1 is wedged"),
+        Err(other) => panic!("want BackpressureTimeout, got: {other}"),
+    }
+    // The wedged op eventually fails on its liveness watchdog and the
+    // engine tears down cleanly.
+    let err = wedged.wait().expect_err("the wedged op can never complete");
+    assert!(
+        matches!(
+            err,
+            EngineError::Collective {
+                source: CollectiveError::Transport(
+                    TransportError::Timeout { .. } | TransportError::AckTimeout { .. }
+                ),
+                ..
+            }
+        ),
+        "want a liveness timeout for the wedged op, got: {err}"
+    );
+    engine.shutdown();
+}
+
+/// Fused-batch members get failed too: with fusion on and a rank killed
+/// from the first epoch, every submitted member op must settle with an
+/// error (RankDown directly, or the FusedBatch wrapper naming the
+/// batch) — none may hang.
+#[test]
+fn fused_members_fail_under_kill() {
+    let p = 2;
+    let plan = FaultPlan::new(0xF0_5E).kill_rank(1, 1);
+    let mut engine = fault_engine(
+        p,
+        &plan,
+        EngineConfig::new(p)
+            .fusion(true)
+            .fusion_window(4)
+            .op_timeout(Duration::from_millis(400)),
+    );
+    let mut handles = Vec::new();
+    for i in 0..6u64 {
+        let (inputs, _) = sum_case(p, 8, 900 + i);
+        handles.push(engine.submit(OpRequest::allreduce(inputs, "sum")).unwrap());
+    }
+    for (i, h) in handles.into_iter().enumerate() {
+        let t0 = Instant::now();
+        let err = h.wait().expect_err("every member needs the dead rank");
+        assert!(
+            t0.elapsed() < Duration::from_millis(800),
+            "member {i}: wait exceeded the 2×op-timeout hang bound"
+        );
+        let ok = matches!(
+            &err,
+            EngineError::Collective {
+                source: CollectiveError::RankDown { .. } | CollectiveError::FusedBatch { .. },
+                ..
+            }
+        );
+        assert!(ok, "member {i}: want RankDown or FusedBatch taxonomy, got: {err}");
+    }
+    engine.shutdown();
+}
+
+/// Distinct seeds produce distinct drop patterns, same seed reproduces
+/// exactly — the chaos soak is replayable from its seed alone.
+#[test]
+fn fault_plan_soak_is_reproducible_from_seed() {
+    let run = |seed: u64| -> Vec<bool> {
+        let p = 3;
+        let plan = FaultPlan::new(seed)
+            .rule(FaultRule::new(FaultAction::Drop).with_probability(0.05));
+        let mut engine = fault_engine(
+            p,
+            &plan,
+            EngineConfig::new(p).op_timeout(Duration::from_millis(200)),
+        );
+        let mut outcomes = Vec::new();
+        for i in 0..12u64 {
+            let (inputs, want) = sum_case(p, 16, 1000 + i);
+            let done = match engine.submit(OpRequest::allreduce(inputs, "sum")).unwrap().wait() {
+                Ok(out) => {
+                    for buf in &out {
+                        assert_eq!(buf[..], want[..], "survivor must stay bit-exact");
+                    }
+                    true
+                }
+                Err(_) => false,
+            };
+            outcomes.push(done);
+        }
+        engine.shutdown();
+        outcomes
+    };
+    let a = run(21);
+    assert_eq!(a, run(21), "same seed must reproduce the exact outcome vector");
+    assert!(a.iter().any(|&ok| ok), "p=0.15 drops should leave some survivors");
+}
+
+/// THE acceptance test: 4 real `ccoll launch` processes over UDS,
+/// SIGKILL one mid-soak — every survivor must detect the death (reader
+/// EOF → PeerDown → nonzero exit) within a tight budget. No hang, no
+/// zero exit.
+#[test]
+fn four_process_kill_one_rank_survivors_exit_nonzero() {
+    use std::process::{Command, Stdio};
+    let bin = env!("CARGO_BIN_EXE_ccoll");
+    let dir = scratch("proc", 4);
+    let dir_s = dir.to_str().unwrap().to_string();
+    let mut children: Vec<_> = (0..4)
+        .map(|r| {
+            Command::new(bin)
+                .args([
+                    "launch",
+                    "--backend",
+                    "uds",
+                    "--rank",
+                    &r.to_string(),
+                    "--world",
+                    "4",
+                    "--dir",
+                    &dir_s,
+                    "--launch.m",
+                    "4096",
+                    "--launch.iters",
+                    "1000000",
+                    "--launch.verify",
+                    "0",
+                ])
+                .stdout(Stdio::null())
+                .stderr(Stdio::null())
+                .spawn()
+                .expect("spawn ccoll launch")
+        })
+        .collect();
+    // Let the mesh bootstrap and the iteration soak begin, then kill
+    // rank 3 outright (SIGKILL — no graceful shutdown path runs).
+    std::thread::sleep(Duration::from_millis(1500));
+    children[3].kill().expect("kill rank 3");
+    let _ = children[3].wait();
+
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let mut statuses: Vec<Option<std::process::ExitStatus>> = vec![None; 3];
+    while Instant::now() < deadline && statuses.iter().any(Option::is_none) {
+        for (r, slot) in statuses.iter_mut().enumerate() {
+            if slot.is_none() {
+                *slot = children[r].try_wait().expect("try_wait");
+            }
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    // Reap anything still running before asserting, so a failure can't
+    // strand processes.
+    for c in children.iter_mut() {
+        let _ = c.kill();
+        let _ = c.wait();
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+    for (r, slot) in statuses.iter().enumerate() {
+        let Some(status) = slot else {
+            panic!("rank {r} did not exit within 30s of rank 3's kill — death undetected (hang)")
+        };
+        assert!(
+            !status.success(),
+            "rank {r} exited 0 after its peer was killed — the failure went undetected"
+        );
+    }
+}
+
+/// Drain-mode shutdown under chaos: the in-flight failure settles (it
+/// does not hang the drain), new submissions are refused, and no slot
+/// is left in flight.
+#[test]
+fn drain_shutdown_after_kill_refuses_new_work() {
+    let p = 2;
+    let plan = FaultPlan::new(0xD4_A1).kill_rank(1, 2);
+    let mut engine = fault_engine(
+        p,
+        &plan,
+        EngineConfig::new(p).op_timeout(Duration::from_millis(300)),
+    );
+    // Op 1 completes before the kill epoch is ever observed.
+    let (inputs, want) = sum_case(p, 16, 1100);
+    let out = engine
+        .submit(OpRequest::allreduce(inputs, "sum"))
+        .unwrap()
+        .wait()
+        .expect("op 1 predates the kill epoch");
+    for buf in &out {
+        assert_eq!(buf[..], want[..], "pre-kill op must stay bit-exact");
+    }
+    // Op 2 trips the kill and is in flight when the drain starts.
+    let (inputs, _) = sum_case(p, 16, 1101);
+    let doomed = engine.submit(OpRequest::allreduce(inputs, "sum")).unwrap();
+    engine.drain_shutdown();
+    let (inputs, _) = sum_case(p, 16, 1102);
+    match engine.submit(OpRequest::allreduce(inputs, "sum")) {
+        Err(EngineError::ShutDown) => {}
+        Ok(_) => panic!("submit after drain_shutdown must be refused"),
+        Err(other) => panic!("want ShutDown after drain, got: {other}"),
+    }
+    assert_rank_down(&doomed.wait().expect_err("op 2 hits the kill"), 1, "drained kill victim");
+    // Every op settled ⇒ nothing left in flight.
+    assert_eq!(engine.in_flight(), 0);
+}
