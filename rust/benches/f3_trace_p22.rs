@@ -7,7 +7,8 @@
 //! 22 contributions exactly once in the same rank-relative order.
 
 use circulant_collectives::bench_harness::bench_header;
-use circulant_collectives::collectives::{reduce_scatter_schedule, symbolic};
+use circulant_collectives::analysis as symbolic;
+use circulant_collectives::collectives::reduce_scatter_schedule;
 use circulant_collectives::topology::skips::SkipScheme;
 use circulant_collectives::topology::Circulant;
 

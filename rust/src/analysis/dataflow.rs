@@ -1,17 +1,21 @@
-//! Symbolic execution of schedules — the bracketing verifier.
+//! Exactly-once dataflow: symbolic execution of schedules at block
+//! granularity.
 //!
-//! Runs a schedule at *block granularity* with a symbolic ⊕ that records
-//! the exact combine tree. This is how we reproduce the paper's §2.1
-//! worked example (p = 22, processor 21) term for term, and how property
-//! tests verify that (a) every rank's result contains each contributor
-//! exactly once, and (b) all ranks apply reductions in the same
-//! rank-relative order — the paper's observation that commutativity is
-//! required, but uniformly so.
+//! Runs a schedule with a symbolic ⊕ that records the exact combine tree
+//! per `(rank, global block)` cell. This is how we reproduce the paper's
+//! §2.1 worked example (p = 22, processor 21) term for term, and how the
+//! verifier proves that every result block is the full p-way reduction
+//! with **no duplicate and no lost contribution** — the abstract
+//! interpretation behind [`check_dataflow`]. The same run also answers
+//! the §2.1 commutativity question: ⊕ needs to commute exactly when some
+//! result's leaves are not a contiguous circular run of ranks.
 
 use std::fmt;
 use std::rc::Rc;
 
 use crate::schedule::{RecvAction, Schedule};
+
+use super::{AnalysisError, Semantics};
 
 /// A symbolic partial result: either one processor's input block, or a
 /// combine of two partials (bracketing preserved).
@@ -74,6 +78,10 @@ impl fmt::Display for Expr {
 /// Returns the final state. For a reduce-scatter schedule, `state[r][r]`
 /// is the full reduction tree for destination r written over contributor
 /// indices *relative to nothing* — leaves are absolute rank ids.
+///
+/// Precondition: the schedule passes [`Schedule::validate`] (every recv
+/// has its matching send). [`check_dataflow`] enforces this; direct
+/// callers on hand-built schedules should validate first.
 pub fn run_symbolic(schedule: &Schedule) -> Vec<Vec<Rc<Expr>>> {
     let p = schedule.p;
     let mut state: Vec<Vec<Rc<Expr>>> =
@@ -111,40 +119,135 @@ pub fn run_symbolic(schedule: &Schedule) -> Vec<Vec<Rc<Expr>>> {
     state
 }
 
-/// Verify that a reduce-scatter schedule is symbolically correct: for every
-/// rank `r`, the final partial for block `r` contains every rank exactly
-/// once. Returns the per-rank combine-tree depth maxima.
-pub fn verify_reduce_scatter(schedule: &Schedule) -> Result<usize, String> {
+/// What the verifier proved about a schedule's dataflow.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct DataflowReport {
+    /// Max combine-tree depth over all checked result cells.
+    pub max_depth: usize,
+    /// Whether ⊕ must commute for this schedule to be correct: `false`
+    /// iff every checked reduction accumulates its contributions in
+    /// consecutive circular rank order (a rotation of `0..p`), which
+    /// associativity alone absorbs (§2.1's fully-connected observation).
+    pub commutativity_required: bool,
+    /// Result cells actually checked (p for reduce-scatter, p² for
+    /// allreduce/allgather, …).
+    pub cells_checked: usize,
+}
+
+/// The expected contribution multiset for one checked result cell.
+enum Want {
+    /// Each of `0..p` exactly once — a full p-way reduction.
+    Full,
+    /// Exactly the single input of this rank — pure data movement.
+    One(usize),
+}
+
+/// The exactly-once dataflow pass: abstract-interpret the schedule (via
+/// [`run_symbolic`]) and prove that every result cell the semantics
+/// constrains holds exactly the right multiset of input contributions —
+/// no duplicate, no lost, no foreign contribution.
+pub fn check_dataflow(
+    schedule: &Schedule,
+    sem: Semantics,
+) -> Result<DataflowReport, AnalysisError> {
+    // The symbolic runner (like the real executor) requires a
+    // structurally matched schedule; surface violations as typed errors
+    // instead of letting it panic.
+    schedule.validate()?;
     let p = schedule.p;
     let state = run_symbolic(schedule);
-    let mut max_depth = 0;
-    for (r, row) in state.iter().enumerate() {
-        let mut leaves = row[r].leaves();
-        leaves.sort_unstable();
-        let want: Vec<usize> = (0..p).collect();
-        if leaves != want {
-            return Err(format!("rank {r}: leaves {leaves:?} != 0..{p}"));
+    // (rank, block, expected multiset) for every constrained cell.
+    let cells: Vec<(usize, usize, Want)> = match sem {
+        Semantics::ReduceScatter => (0..p).map(|r| (r, r, Want::Full)).collect(),
+        Semantics::Allreduce => {
+            (0..p).flat_map(|r| (0..p).map(move |g| (r, g, Want::Full))).collect()
         }
-        max_depth = max_depth.max(row[r].depth());
+        Semantics::Allgather => {
+            (0..p).flat_map(|r| (0..p).map(move |g| (r, g, Want::One(g)))).collect()
+        }
+        // Out-of-range roots cannot have produced a schedule; treat as
+        // unconstrained rather than indexing out of bounds.
+        Semantics::ReduceToRoot { root } if root < p => {
+            (0..p).map(|g| (root, g, Want::Full)).collect()
+        }
+        Semantics::BcastFromRoot { root } if root < p => {
+            (0..p).flat_map(|r| (0..p).map(move |g| (r, g, Want::One(root)))).collect()
+        }
+        Semantics::ReduceToRoot { .. } | Semantics::BcastFromRoot { .. } => Vec::new(),
+        Semantics::Unknown => Vec::new(),
+    };
+    let mut report = DataflowReport { cells_checked: cells.len(), ..Default::default() };
+    for (r, g, want) in cells {
+        let expr = &state[r][g];
+        let leaves = expr.leaves();
+        let mut count = vec![0usize; p];
+        for &leaf in &leaves {
+            count[leaf] += 1;
+        }
+        let expected = |i: usize| match want {
+            Want::Full => 1usize,
+            Want::One(w) => usize::from(i == w),
+        };
+        // Duplicates first, then foreign contributions, then losses —
+        // a fixed order so each corruption class maps to one diagnostic.
+        for i in 0..p {
+            if expected(i) > 0 && count[i] > expected(i) {
+                return Err(AnalysisError::DuplicateContribution {
+                    name: schedule.name.clone(),
+                    rank: r,
+                    block: g,
+                    source: i,
+                    got: count[i],
+                });
+            }
+        }
+        for i in 0..p {
+            if expected(i) == 0 && count[i] > 0 {
+                return Err(AnalysisError::WrongContribution {
+                    name: schedule.name.clone(),
+                    rank: r,
+                    block: g,
+                    source: i,
+                });
+            }
+        }
+        for i in 0..p {
+            if count[i] < expected(i) {
+                return Err(AnalysisError::LostContribution {
+                    name: schedule.name.clone(),
+                    rank: r,
+                    block: g,
+                    source: i,
+                });
+            }
+        }
+        report.max_depth = report.max_depth.max(expr.depth());
+        // A multi-leaf reduction needs ⊕ to commute unless its leaves are
+        // a contiguous circular run (leaves[j] = leaves[0] + j mod p).
+        if leaves.len() > 1 {
+            let canonical = leaves
+                .iter()
+                .enumerate()
+                .all(|(j, &leaf)| leaf == (leaves[0] + j) % p);
+            if !canonical {
+                report.commutativity_required = true;
+            }
+        }
     }
-    Ok(max_depth)
+    Ok(report)
+}
+
+/// Verify that a reduce-scatter schedule is symbolically correct: for every
+/// rank `r`, the final partial for block `r` contains every rank exactly
+/// once. Returns the max combine-tree depth over ranks.
+pub fn verify_reduce_scatter(schedule: &Schedule) -> Result<usize, AnalysisError> {
+    check_dataflow(schedule, Semantics::ReduceScatter).map(|rep| rep.max_depth)
 }
 
 /// Verify an allreduce schedule: every rank's every block must contain all
 /// contributors exactly once.
-pub fn verify_allreduce(schedule: &Schedule) -> Result<(), String> {
-    let p = schedule.p;
-    let state = run_symbolic(schedule);
-    for (r, row) in state.iter().enumerate() {
-        for (g, expr) in row.iter().enumerate() {
-            let mut leaves = expr.leaves();
-            leaves.sort_unstable();
-            if leaves != (0..p).collect::<Vec<_>>() {
-                return Err(format!("rank {r} block {g}: leaves {leaves:?}"));
-            }
-        }
-    }
-    Ok(())
+pub fn verify_allreduce(schedule: &Schedule) -> Result<(), AnalysisError> {
+    check_dataflow(schedule, Semantics::Allreduce).map(|_| ())
 }
 
 /// The paper's §2.1 example: the round-by-round bracketing of `W` at
@@ -280,7 +383,8 @@ mod tests {
         // skips p−1, p−2, …, 1, every received partial is a single leaf
         // and W accumulates them in consecutive (mod p) rank order
         // starting at r — a rotation of the canonical order, which [11]'s
-        // bookkeeping absorbs. Verify the order symbolically.
+        // bookkeeping absorbs. Verify the order symbolically, and that
+        // the pass reports commutativity as NOT required.
         for p in [3usize, 8, 13] {
             let skips = SkipScheme::FullyConnected.skips(p).unwrap();
             let sched = reduce_scatter_schedule(p, &skips);
@@ -292,6 +396,8 @@ mod tests {
                 // and the bracketing is a pure left fold (depth = p−1):
                 assert_eq!(state[r][r].depth(), p - 1);
             }
+            let rep = check_dataflow(&sched, Semantics::ReduceScatter).unwrap();
+            assert!(!rep.commutativity_required, "p={p}");
         }
         // Halving-up does NOT have this property (the paper's point that
         // commutativity is genuinely required there).
@@ -300,6 +406,8 @@ mod tests {
         let state = run_symbolic(&sched);
         let leaves = state[0][0].leaves();
         assert_ne!(leaves, (0..8).collect::<Vec<_>>(), "halving-up is not rank-ordered");
+        let rep = check_dataflow(&sched, Semantics::ReduceScatter).unwrap();
+        assert!(rep.commutativity_required);
     }
 
     #[test]
@@ -308,5 +416,35 @@ mod tests {
         for p in [2usize, 5, 9, 16] {
             verify_reduce_scatter(&ring_reduce_scatter_schedule(p)).unwrap();
         }
+    }
+
+    #[test]
+    fn dataflow_names_the_defect() {
+        // Lost contribution: drop one transfer pair from a valid schedule.
+        let p = 8;
+        let skips = SkipScheme::HalvingUp.skips(p).unwrap();
+        let mut sched = reduce_scatter_schedule(p, &skips);
+        let peer = sched.rounds[0].steps[0].send.unwrap().peer;
+        sched.rounds[0].steps[0].send = None;
+        sched.rounds[0].steps[peer].recv = None;
+        let e = check_dataflow(&sched, Semantics::ReduceScatter).unwrap_err();
+        assert_eq!(e.code(), "lost-contribution");
+
+        // Duplicate contribution: flip an allgather Store into a Combine.
+        let mut ar = allreduce_schedule(p, &skips);
+        let q = ar.rounds.len();
+        for step in ar.rounds[q - 1].steps.iter_mut() {
+            if let Some(recv) = step.recv.as_mut() {
+                recv.action = RecvAction::Combine;
+            }
+        }
+        let e = check_dataflow(&ar, Semantics::Allreduce).unwrap_err();
+        assert_eq!(e.code(), "duplicate-contribution");
+
+        // Structure errors surface as typed diagnostics, not panics.
+        let mut broken = reduce_scatter_schedule(p, &skips);
+        broken.rounds[0].steps[0].recv = None;
+        let e = check_dataflow(&broken, Semantics::ReduceScatter).unwrap_err();
+        assert_eq!(e.code(), "unmatched-send");
     }
 }

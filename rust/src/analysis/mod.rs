@@ -1,0 +1,587 @@
+//! Static schedule & protocol verifier — the single verification entry
+//! point for every `(Schedule, BlockPartition, p)` this library builds.
+//!
+//! Four passes, every one with typed diagnostics ([`AnalysisError`], each
+//! variant carrying a stable [`AnalysisError::code`]):
+//!
+//! 1. **Structure / round matching** — [`Schedule::validate`]: every send
+//!    has the unique recv that accepts it over the same global blocks and
+//!    vice versa, so the synchronous round execution cannot deadlock.
+//! 2. **Exactly-once dataflow** — [`dataflow::check_dataflow`]: abstract
+//!    interpretation tracking, per `(rank, block)` cell, the multiset of
+//!    contributing input vectors through every round; proves each result
+//!    block is the full p-way reduction (or exact copy, for data-movement
+//!    collectives) with no duplicate, lost or foreign contribution, and
+//!    reports whether ⊕ must commute.
+//! 3. **Paper-optimality envelope** — [`check_optimality`]: per-rank
+//!    send/recv/combine block counts are *exactly* `p−1` and the round
+//!    count exactly `⌈log₂ p⌉` for the circulant generators (Theorems 1
+//!    and 2; baselines get their own expected envelopes from
+//!    [`expectation`]).
+//! 4. **Aliasing** — [`check_aliasing`]: statically prove the send/recv
+//!    working-vector views carved in `collectives::exec` are disjoint per
+//!    step (block level *and* element level under the actual partition),
+//!    emitting a per-step [`TierMap`] the executor consults for its
+//!    zero-copy rendezvous verdict instead of recomputing overlap tests.
+//!
+//! [`audit_algorithm`] runs all four for a shipped [`Algorithm`];
+//! [`audit_plan`] is the `PlanCache` build-time hook (on in debug builds,
+//! opt-in via `CCOLL_AUDIT_PLANS` in release); `ccoll audit` sweeps
+//! algorithms × p × partition shapes and exercises the [`mutate`] harness
+//! to prove the verifier actually bites.
+
+pub mod dataflow;
+pub mod mutate;
+
+pub use dataflow::{
+    check_dataflow, paper_example_terms, run_symbolic, verify_allreduce, verify_reduce_scatter,
+    DataflowReport, Expr,
+};
+
+use crate::collectives::Algorithm;
+use crate::datatypes::BlockPartition;
+use crate::schedule::{Schedule, ScheduleError};
+use crate::util::ceil_log2;
+
+/// A typed verifier diagnostic. `Display` renders the human message; the
+/// stable machine name comes from [`AnalysisError::code`] (what `ccoll
+/// audit --audit.json` reports and the mutation-catch tests assert on).
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum AnalysisError {
+    /// Round matching / structural validity (pass 1).
+    #[error(transparent)]
+    Structure(#[from] ScheduleError),
+    #[error("{name}: {got} rounds, expected exactly {want} (p={p})")]
+    RoundCount { name: String, p: usize, got: usize, want: usize },
+    #[error("{name}: rank {rank} {counter} = {got}, expected exactly {want} (p={p})")]
+    BlockCount { name: String, p: usize, rank: usize, counter: &'static str, got: usize, want: usize },
+    #[error(
+        "{name}: rank {rank} block {block}: contribution of rank {source} \
+         appears {got} times — duplicate contribution"
+    )]
+    DuplicateContribution { name: String, rank: usize, block: usize, source: usize, got: usize },
+    #[error("{name}: rank {rank} block {block}: contribution of rank {source} never arrives — lost contribution")]
+    LostContribution { name: String, rank: usize, block: usize, source: usize },
+    #[error("{name}: rank {rank} block {block}: holds contribution of rank {source}, which does not belong here")]
+    WrongContribution { name: String, rank: usize, block: usize, source: usize },
+    #[error(
+        "{name}: rank {rank} round {round}: send/recv block ranges are \
+         disjoint but their element views overlap — aliasing contract broken"
+    )]
+    AliasViolation { name: String, rank: usize, round: usize },
+    #[error(
+        "{name}: rank {rank} round {round}: send and recv block ranges \
+         overlap — rendezvous-unsafe step in a schedule class the paper \
+         guarantees fully zero-copy eligible"
+    )]
+    RendezvousRegression { name: String, rank: usize, round: usize },
+}
+
+impl AnalysisError {
+    /// Stable machine-readable diagnostic code.
+    pub fn code(&self) -> &'static str {
+        match self {
+            AnalysisError::Structure(e) => e.code(),
+            AnalysisError::RoundCount { .. } => "round-count",
+            AnalysisError::BlockCount { .. } => "block-count",
+            AnalysisError::DuplicateContribution { .. } => "duplicate-contribution",
+            AnalysisError::LostContribution { .. } => "lost-contribution",
+            AnalysisError::WrongContribution { .. } => "wrong-contribution",
+            AnalysisError::AliasViolation { .. } => "alias-violation",
+            AnalysisError::RendezvousRegression { .. } => "rendezvous-regression",
+        }
+    }
+}
+
+/// What the final state of a correct schedule must look like — drives the
+/// exactly-once dataflow pass.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Semantics {
+    /// `state[r][r]` is the full p-way reduction for every rank r.
+    ReduceScatter,
+    /// Every cell of every rank is the full p-way reduction.
+    Allreduce,
+    /// Precondition: rank r holds finished block r. Postcondition: every
+    /// cell `(r, g)` holds exactly block-owner g's input.
+    Allgather,
+    /// Every cell at `root` is the full p-way reduction (other ranks
+    /// unconstrained).
+    ReduceToRoot { root: usize },
+    /// Every cell of every rank holds exactly `root`'s input.
+    BcastFromRoot { root: usize },
+    /// Semantics not derivable from the algorithm name — run only the
+    /// structure, envelope and aliasing passes.
+    Unknown,
+}
+
+/// Expected resource envelope for one `(algorithm, p)` pair. `None`
+/// fields are unconstrained (rooted trees have per-rank-varying counts;
+/// fold-based baselines have data-dependent round structure).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Envelope {
+    /// Exact round count (`⌈log₂ p⌉` for the circulant generators).
+    pub rounds: Option<usize>,
+    /// Exact per-rank blocks sent (Theorem 1/2: `p−1` resp. `2(p−1)`).
+    pub blocks_sent: Option<usize>,
+    pub blocks_recv: Option<usize>,
+    /// Exact per-rank ⊕ applications in blocks (`p−1`).
+    pub blocks_combined: Option<usize>,
+    /// Every step must be zero-copy (rendezvous) eligible — true for all
+    /// circulant schedules (§3's in-place condition σ_{k−1} ≤ 2σ_k makes
+    /// each round's send and recv ranges disjoint).
+    pub rendezvous_all: bool,
+}
+
+/// The paper-stated (or baseline-expected) envelope and result semantics
+/// for a shipped algorithm at a given `p`.
+pub fn expectation(alg: &Algorithm, p: usize) -> (Semantics, Envelope) {
+    let pm1 = p.saturating_sub(1);
+    let logp = ceil_log2(p.max(1)) as usize;
+    let circulant_rounds = |s: &crate::topology::skips::SkipScheme| {
+        s.skips(p).map(|v| v.len()).ok()
+    };
+    match alg {
+        Algorithm::CirculantReduceScatter(s) => (
+            Semantics::ReduceScatter,
+            Envelope {
+                rounds: circulant_rounds(s),
+                blocks_sent: Some(pm1),
+                blocks_recv: Some(pm1),
+                blocks_combined: Some(pm1),
+                rendezvous_all: true,
+            },
+        ),
+        Algorithm::CirculantAllreduce(s) => (
+            Semantics::Allreduce,
+            Envelope {
+                rounds: circulant_rounds(s).map(|q| 2 * q),
+                blocks_sent: Some(2 * pm1),
+                blocks_recv: Some(2 * pm1),
+                blocks_combined: Some(pm1),
+                rendezvous_all: true,
+            },
+        ),
+        Algorithm::CirculantAllgather(s) => (
+            Semantics::Allgather,
+            Envelope {
+                rounds: circulant_rounds(s),
+                blocks_sent: Some(pm1),
+                blocks_recv: Some(pm1),
+                blocks_combined: Some(0),
+                rendezvous_all: true,
+            },
+        ),
+        Algorithm::RingReduceScatter => (
+            Semantics::ReduceScatter,
+            Envelope {
+                rounds: Some(pm1),
+                blocks_sent: Some(pm1),
+                blocks_recv: Some(pm1),
+                blocks_combined: Some(pm1),
+                ..Default::default()
+            },
+        ),
+        Algorithm::RingAllreduce => (
+            Semantics::Allreduce,
+            Envelope {
+                rounds: Some(2 * pm1),
+                blocks_sent: Some(2 * pm1),
+                blocks_recv: Some(2 * pm1),
+                blocks_combined: Some(pm1),
+                ..Default::default()
+            },
+        ),
+        Algorithm::RingAllgather => (
+            Semantics::Allgather,
+            Envelope {
+                rounds: Some(pm1),
+                blocks_sent: Some(pm1),
+                blocks_recv: Some(pm1),
+                blocks_combined: Some(0),
+                ..Default::default()
+            },
+        ),
+        // Power-of-two only: log₂ p rounds, volume-optimal like Alg. 1.
+        Algorithm::RecursiveHalvingReduceScatter => (
+            Semantics::ReduceScatter,
+            Envelope {
+                rounds: Some(logp),
+                blocks_sent: Some(pm1),
+                blocks_recv: Some(pm1),
+                blocks_combined: Some(pm1),
+                ..Default::default()
+            },
+        ),
+        // Fold rounds (non-power-of-two p) give these per-rank-varying
+        // counts and full-vector exchanges — semantics + matching +
+        // aliasing only.
+        Algorithm::RecursiveDoublingAllreduce => (Semantics::Allreduce, Envelope::default()),
+        Algorithm::RabenseifnerAllreduce => (Semantics::Allreduce, Envelope::default()),
+        Algorithm::BinomialReduce { root } => {
+            (Semantics::ReduceToRoot { root: *root }, Envelope { rounds: Some(logp), ..Default::default() })
+        }
+        Algorithm::BinomialBcast { root } => {
+            (Semantics::BcastFromRoot { root: *root }, Envelope { rounds: Some(logp), ..Default::default() })
+        }
+        Algorithm::BinomialAllreduce => (
+            Semantics::Allreduce,
+            Envelope { rounds: Some(2 * logp), ..Default::default() },
+        ),
+        Algorithm::BruckAllgather => (
+            Semantics::Allgather,
+            Envelope {
+                rounds: Some(logp),
+                blocks_sent: Some(pm1),
+                blocks_recv: Some(pm1),
+                blocks_combined: Some(0),
+                ..Default::default()
+            },
+        ),
+    }
+}
+
+/// Pass 3: check the schedule's round count and per-rank block counters
+/// against an [`Envelope`]. Block counts are partition-independent, so
+/// this derives them under a synthetic uniform partition.
+pub fn check_optimality(schedule: &Schedule, env: &Envelope) -> Result<(), AnalysisError> {
+    let p = schedule.p;
+    if let Some(want) = env.rounds {
+        if schedule.num_rounds() != want {
+            return Err(AnalysisError::RoundCount {
+                name: schedule.name.clone(),
+                p,
+                got: schedule.num_rounds(),
+                want,
+            });
+        }
+    }
+    if env.blocks_sent.is_none() && env.blocks_recv.is_none() && env.blocks_combined.is_none() {
+        return Ok(());
+    }
+    let part = BlockPartition::uniform(p, 1);
+    for (rank, c) in schedule.counters(&part).iter().enumerate() {
+        for (counter, got, want) in [
+            ("blocks_sent", c.blocks_sent, env.blocks_sent),
+            ("blocks_recv", c.blocks_recv, env.blocks_recv),
+            ("blocks_combined", c.blocks_combined, env.blocks_combined),
+        ] {
+            if let Some(want) = want {
+                if got != want {
+                    return Err(AnalysisError::BlockCount {
+                        name: schedule.name.clone(),
+                        p,
+                        rank,
+                        counter,
+                        got,
+                        want,
+                    });
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Per-(round, rank) zero-copy eligibility, statically proven by the
+/// aliasing pass at plan-build time. The executor's rendezvous verdict
+/// consults this instead of recomputing the block-overlap test per step;
+/// by construction each entry equals `RankStep::rendezvous_safe` (the
+/// executor debug-asserts the agreement).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TierMap {
+    safe: Vec<Vec<bool>>,
+}
+
+impl TierMap {
+    /// Whether `(round, rank)` may use the zero-copy rendezvous tier.
+    /// Out-of-range queries are trivially safe (idle/absent steps).
+    pub fn rendezvous_ok(&self, round: usize, rank: usize) -> bool {
+        self.safe.get(round).and_then(|r| r.get(rank)).copied().unwrap_or(true)
+    }
+
+    pub fn all_safe(&self) -> bool {
+        self.safe.iter().all(|r| r.iter().all(|&b| b))
+    }
+
+    /// `(rendezvous-eligible steps, total steps)` over the whole map.
+    pub fn safe_counts(&self) -> (usize, usize) {
+        let total = self.safe.iter().map(|r| r.len()).sum();
+        let safe = self.safe.iter().map(|r| r.iter().filter(|&&b| b).count()).sum();
+        (safe, total)
+    }
+}
+
+/// Compute the per-step tier eligibility map (block-level — exactly the
+/// predicate the executor would recompute per step).
+pub fn tier_map(schedule: &Schedule) -> TierMap {
+    TierMap {
+        safe: schedule
+            .rounds
+            .iter()
+            .map(|round| round.steps.iter().map(|s| s.rendezvous_safe(schedule.p)).collect())
+            .collect(),
+    }
+}
+
+/// Pass 4: aliasing. Statically prove that whenever a step's send and
+/// recv block ranges are disjoint (the rendezvous precondition), the
+/// *element* views `exec.rs` carves from the working vector under `part`
+/// are disjoint too — i.e. the block-level predicate the unsafe
+/// zero-copy tier trusts is sound for this partition. Returns the
+/// [`TierMap`] of per-step verdicts.
+pub fn check_aliasing(
+    schedule: &Schedule,
+    part: &BlockPartition,
+) -> Result<TierMap, AnalysisError> {
+    let p = schedule.p;
+    let map = tier_map(schedule);
+    let ranges_overlap = |a: &std::ops::Range<usize>, b: &std::ops::Range<usize>| {
+        a.start < b.end && b.start < a.end
+    };
+    for (k, round) in schedule.rounds.iter().enumerate() {
+        for (r, step) in round.steps.iter().enumerate() {
+            let (Some(send), Some(recv)) = (&step.send, &step.recv) else { continue };
+            if !map.rendezvous_ok(k, r) {
+                continue; // pooled tier: views never alias by copy
+            }
+            let sb = send.blocks.normalized(p);
+            let rb = recv.blocks.normalized(p);
+            let (s1, s2) = part.circular_ranges(sb.start, sb.len);
+            let (r1, r2) = part.circular_ranges(rb.start, rb.len);
+            let send_views = [Some(s1), s2];
+            let recv_views = [Some(r1), r2];
+            for sv in send_views.iter().flatten() {
+                for rv in recv_views.iter().flatten() {
+                    if ranges_overlap(sv, rv) {
+                        return Err(AnalysisError::AliasViolation {
+                            name: schedule.name.clone(),
+                            rank: r,
+                            round: k,
+                        });
+                    }
+                }
+            }
+        }
+    }
+    Ok(map)
+}
+
+/// What a full audit proved about one `(algorithm, p)` pair.
+#[derive(Debug, Clone)]
+pub struct AuditReport {
+    pub name: String,
+    pub p: usize,
+    pub rounds: usize,
+    pub dataflow: DataflowReport,
+    /// `(rendezvous-eligible steps, total steps)` from the aliasing pass.
+    pub tier_counts: (usize, usize),
+    pub partitions_checked: usize,
+}
+
+/// Run every pass over one schedule: structure, exactly-once dataflow
+/// (once — it is partition-independent), then optimality and aliasing
+/// under each supplied partition. Every partition must have `part.p() ==
+/// schedule.p`.
+pub fn audit_schedule(
+    schedule: &Schedule,
+    sem: Semantics,
+    env: &Envelope,
+    parts: &[&BlockPartition],
+) -> Result<AuditReport, AnalysisError> {
+    schedule.validate()?;
+    let dataflow = check_dataflow(schedule, sem)?;
+    check_optimality(schedule, env)?;
+    let mut tier_counts = (0, 0);
+    for part in parts {
+        let map = check_aliasing(schedule, part)?;
+        if env.rendezvous_all {
+            for (k, round) in schedule.rounds.iter().enumerate() {
+                for (r, _) in round.steps.iter().enumerate() {
+                    if !map.rendezvous_ok(k, r) {
+                        return Err(AnalysisError::RendezvousRegression {
+                            name: schedule.name.clone(),
+                            rank: r,
+                            round: k,
+                        });
+                    }
+                }
+            }
+        }
+        tier_counts = map.safe_counts();
+    }
+    if parts.is_empty() {
+        tier_counts = tier_map(schedule).safe_counts();
+    }
+    Ok(AuditReport {
+        name: schedule.name.clone(),
+        p: schedule.p,
+        rounds: schedule.num_rounds(),
+        dataflow,
+        tier_counts,
+        partitions_checked: parts.len(),
+    })
+}
+
+/// Audit a shipped [`Algorithm`] at `p` under the given partitions, with
+/// its semantics and envelope derived from [`expectation`].
+pub fn audit_algorithm(
+    alg: &Algorithm,
+    p: usize,
+    parts: &[&BlockPartition],
+) -> Result<AuditReport, AnalysisError> {
+    let schedule = alg.schedule(p);
+    let (sem, env) = expectation(alg, p);
+    audit_schedule(&schedule, sem, &env, parts)
+}
+
+/// Every shipped algorithm auditable at `p` — what `ccoll audit` and the
+/// property sweep iterate. `p = 1` restricts to the circulant generators
+/// (the baselines assume `p ≥ 2`); recursive halving is power-of-two
+/// only.
+pub fn shipped_roster(p: usize) -> Vec<Algorithm> {
+    use crate::topology::skips::SkipScheme as S;
+    let mut v = Vec::new();
+    for s in [S::HalvingUp, S::PowerOfTwo, S::Sqrt, S::FullyConnected] {
+        v.push(Algorithm::CirculantReduceScatter(s.clone()));
+        v.push(Algorithm::CirculantAllreduce(s.clone()));
+        v.push(Algorithm::CirculantAllgather(s));
+    }
+    if p >= 2 {
+        v.extend([
+            Algorithm::RingReduceScatter,
+            Algorithm::RingAllreduce,
+            Algorithm::RingAllgather,
+            Algorithm::RecursiveDoublingAllreduce,
+            Algorithm::RabenseifnerAllreduce,
+            Algorithm::BinomialAllreduce,
+            Algorithm::BruckAllgather,
+            Algorithm::BinomialReduce { root: 0 },
+            Algorithm::BinomialBcast { root: p / 2 },
+        ]);
+        if p.is_power_of_two() {
+            v.push(Algorithm::RecursiveHalvingReduceScatter);
+        }
+    }
+    v
+}
+
+/// Whether plan-build-time auditing is on: always in debug builds,
+/// opt-in via `CCOLL_AUDIT_PLANS=1` in release.
+pub fn audit_plans_enabled() -> bool {
+    cfg!(debug_assertions) || crate::env_knobs::knobs().audit_plans
+}
+
+/// The `PlanCache` build-time hook: verify a just-built plan. The plan
+/// key's algorithm name recovers semantics + envelope when it parses as
+/// a shipped [`Algorithm`]; otherwise (derived/auxiliary schedules) the
+/// structure and aliasing passes still run.
+pub fn audit_plan(
+    algorithm: &str,
+    schedule: &Schedule,
+    part: &BlockPartition,
+) -> Result<(), AnalysisError> {
+    let (sem, env) = match Algorithm::parse(algorithm) {
+        Some(alg) => expectation(&alg, schedule.p),
+        None => (Semantics::Unknown, Envelope::default()),
+    };
+    audit_schedule(schedule, sem, &env, &[part]).map(|_| ())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::skips::SkipScheme;
+
+    #[test]
+    fn audit_passes_on_shipped_circulant_algorithms() {
+        for p in [1usize, 2, 7, 22] {
+            let part = BlockPartition::regular(p, 3 * p + 1);
+            for alg in [
+                Algorithm::CirculantReduceScatter(SkipScheme::HalvingUp),
+                Algorithm::CirculantAllreduce(SkipScheme::PowerOfTwo),
+                Algorithm::CirculantAllgather(SkipScheme::Sqrt),
+            ] {
+                let rep = audit_algorithm(&alg, p, &[&part])
+                    .unwrap_or_else(|e| panic!("{} p={p}: {e}", alg.name()));
+                assert_eq!(rep.p, p);
+                // The paper's schedules are fully zero-copy eligible.
+                assert_eq!(rep.tier_counts.0, rep.tier_counts.1, "p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn audit_plan_accepts_cache_vocabulary_names() {
+        let p = 6;
+        let part = BlockPartition::regular(p, 30);
+        let skips = SkipScheme::HalvingUp.skips(p).unwrap();
+        let sched = crate::collectives::allreduce_schedule(p, &skips);
+        audit_plan("allreduce:halving-up", &sched, &part).unwrap();
+        audit_plan("ar", &sched, &part).unwrap();
+        // Unknown vocabulary still gets structure + aliasing.
+        audit_plan("custom-thing", &sched, &part).unwrap();
+    }
+
+    #[test]
+    fn round_count_regression_is_named() {
+        let p = 8;
+        let skips = SkipScheme::HalvingUp.skips(p).unwrap();
+        let mut sched = crate::collectives::reduce_scatter_schedule(p, &skips);
+        sched.rounds.push(crate::schedule::Round::idle(p));
+        let (sem, env) = expectation(
+            &Algorithm::CirculantReduceScatter(SkipScheme::HalvingUp),
+            p,
+        );
+        let part = BlockPartition::regular(p, 16);
+        let e = audit_schedule(&sched, sem, &env, &[&part]).unwrap_err();
+        assert_eq!(e.code(), "round-count");
+    }
+
+    #[test]
+    fn rendezvous_regression_is_named() {
+        // Force a full-vector overlap round into a circulant schedule.
+        use crate::schedule::{BlockRange, RankStep, Recv, RecvAction, Round, Transfer};
+        let p = 2;
+        let all = BlockRange::new(0, 2);
+        let mut sched = crate::collectives::reduce_scatter_schedule(p, &[1]);
+        sched.rounds.push(Round {
+            steps: vec![
+                RankStep {
+                    send: Some(Transfer { peer: 1, blocks: all }),
+                    recv: Some(Recv { peer: 1, blocks: all, action: RecvAction::Store }),
+                },
+                RankStep {
+                    send: Some(Transfer { peer: 0, blocks: all }),
+                    recv: Some(Recv { peer: 0, blocks: all, action: RecvAction::Store }),
+                },
+            ],
+        });
+        let env = Envelope { rendezvous_all: true, ..Default::default() };
+        let part = BlockPartition::regular(p, 8);
+        let e = audit_schedule(&sched, Semantics::Unknown, &env, &[&part]).unwrap_err();
+        assert_eq!(e.code(), "rendezvous-regression");
+    }
+
+    #[test]
+    fn tier_map_matches_executor_predicate() {
+        for (alg, p) in [
+            (Algorithm::CirculantAllreduce(SkipScheme::HalvingUp), 22usize),
+            (Algorithm::RecursiveDoublingAllreduce, 6),
+            (Algorithm::BinomialAllreduce, 5),
+        ] {
+            let sched = alg.schedule(p);
+            let map = tier_map(&sched);
+            for (k, round) in sched.rounds.iter().enumerate() {
+                for (r, step) in round.steps.iter().enumerate() {
+                    assert_eq!(
+                        map.rendezvous_ok(k, r),
+                        step.rendezvous_safe(p),
+                        "{} p={p} round {k} rank {r}",
+                        alg.name()
+                    );
+                }
+            }
+            assert_eq!(map.all_safe(), sched.rendezvous_safe());
+        }
+    }
+}

@@ -1,0 +1,294 @@
+//! Seeded schedule corruption — proof that the verifier bites.
+//!
+//! Each [`Mutation`] injects one semantically distinct corruption class
+//! into a valid schedule; the audit passes must catch every one with a
+//! diagnostic from [`Mutation::expected_codes`]. `ccoll audit` and the
+//! `analysis_verifier` test suite both run this harness and hard-fail on
+//! any silent corruption.
+
+use crate::schedule::{RecvAction, Schedule};
+use crate::util::rng::SplitMix64;
+
+/// One injectable corruption class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mutation {
+    /// Remove one send together with its matching recv: a contribution
+    /// silently never arrives.
+    DropTransfer,
+    /// Re-point one recv at a different origin rank: the round's
+    /// matching is broken.
+    RetargetRecv,
+    /// Swap the block ranges of two transfers in the same round (both
+    /// sides, so the round still matches): the right data flows to the
+    /// wrong blocks.
+    SwapBlockRanges,
+    /// Flip a `Store` recv into a `Combine`: a contribution is applied
+    /// twice.
+    DuplicateContribution,
+    /// Append a replay of an existing combine round: every one of its
+    /// contributions arrives again.
+    ReplayRound,
+}
+
+impl Mutation {
+    pub const ALL: [Mutation; 5] = [
+        Mutation::DropTransfer,
+        Mutation::RetargetRecv,
+        Mutation::SwapBlockRanges,
+        Mutation::DuplicateContribution,
+        Mutation::ReplayRound,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Mutation::DropTransfer => "drop-transfer",
+            Mutation::RetargetRecv => "retarget-recv",
+            Mutation::SwapBlockRanges => "swap-block-ranges",
+            Mutation::DuplicateContribution => "duplicate-contribution",
+            Mutation::ReplayRound => "replay-round",
+        }
+    }
+
+    /// The diagnostic codes ([`super::AnalysisError::code`]) an audit may
+    /// legitimately report for this corruption — anything else (or no
+    /// error at all) is a verifier hole.
+    pub fn expected_codes(&self) -> &'static [&'static str] {
+        match self {
+            // Dataflow runs before the count envelope, so a dropped
+            // transfer surfaces as the contribution it loses (or, for
+            // data-movement cells, the stale one it leaves behind).
+            Mutation::DropTransfer => &["lost-contribution", "wrong-contribution"],
+            Mutation::RetargetRecv => &[
+                "recv-peer-mismatch",
+                "send-peer-mismatch",
+                "unmatched-send",
+                "unmatched-recv",
+            ],
+            Mutation::SwapBlockRanges => {
+                &["duplicate-contribution", "lost-contribution", "wrong-contribution"]
+            }
+            Mutation::DuplicateContribution => &["duplicate-contribution"],
+            Mutation::ReplayRound => &["duplicate-contribution", "round-count"],
+        }
+    }
+}
+
+/// Apply `m` to `sched`, picking the corruption site from `seed`.
+/// Returns `false` when the schedule offers no target for this class
+/// (e.g. no `Store` recv to flip in a pure reduce-scatter) — the
+/// schedule is then unchanged.
+pub fn apply(sched: &mut Schedule, m: Mutation, seed: u64) -> bool {
+    let mut rng = SplitMix64::new(seed);
+    let p = sched.p;
+    match m {
+        Mutation::DropTransfer => {
+            let sites = send_sites(sched);
+            if sites.is_empty() {
+                return false;
+            }
+            let (k, r) = sites[rng.next_below(sites.len())];
+            let peer = sched.rounds[k].steps[r].send.unwrap().peer;
+            sched.rounds[k].steps[r].send = None;
+            sched.rounds[k].steps[peer].recv = None;
+            true
+        }
+        Mutation::RetargetRecv => {
+            if p < 3 {
+                return false; // no third rank to mis-name
+            }
+            let sites: Vec<(usize, usize)> = sched
+                .rounds
+                .iter()
+                .enumerate()
+                .flat_map(|(k, round)| {
+                    round
+                        .steps
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, s)| s.recv.is_some())
+                        .map(move |(r, _)| (k, r))
+                })
+                .collect();
+            if sites.is_empty() {
+                return false;
+            }
+            let (k, r) = sites[rng.next_below(sites.len())];
+            let recv = sched.rounds[k].steps[r].recv.as_mut().unwrap();
+            let mut wrong = (recv.peer + 1) % p;
+            if wrong == r {
+                wrong = (wrong + 1) % p;
+            }
+            recv.peer = wrong;
+            true
+        }
+        Mutation::SwapBlockRanges => {
+            // Need one round with two transfers carrying different ranges.
+            let mut rounds: Vec<usize> = (0..sched.rounds.len()).collect();
+            shuffle(&mut rounds, &mut rng);
+            for k in rounds {
+                let senders: Vec<usize> = sched.rounds[k]
+                    .steps
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, s)| s.send.is_some())
+                    .map(|(r, _)| r)
+                    .collect();
+                if senders.len() < 2 {
+                    continue;
+                }
+                let ia = rng.next_below(senders.len());
+                let a = senders[ia];
+                let b = senders[(ia + 1) % senders.len()];
+                let sa = sched.rounds[k].steps[a].send.unwrap();
+                let sb = sched.rounds[k].steps[b].send.unwrap();
+                if sa.blocks == sb.blocks {
+                    continue;
+                }
+                // Swap both sides so the round still matches structurally.
+                sched.rounds[k].steps[a].send.as_mut().unwrap().blocks = sb.blocks;
+                sched.rounds[k].steps[b].send.as_mut().unwrap().blocks = sa.blocks;
+                sched.rounds[k].steps[sa.peer].recv.as_mut().unwrap().blocks = sb.blocks;
+                sched.rounds[k].steps[sb.peer].recv.as_mut().unwrap().blocks = sa.blocks;
+                return true;
+            }
+            false
+        }
+        Mutation::DuplicateContribution => {
+            let sites: Vec<(usize, usize)> = sched
+                .rounds
+                .iter()
+                .enumerate()
+                .flat_map(|(k, round)| {
+                    round
+                        .steps
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, s)| {
+                            s.recv.is_some_and(|rv| rv.action == RecvAction::Store)
+                        })
+                        .map(move |(r, _)| (k, r))
+                })
+                .collect();
+            if sites.is_empty() {
+                return false;
+            }
+            let (k, r) = sites[rng.next_below(sites.len())];
+            sched.rounds[k].steps[r].recv.as_mut().unwrap().action = RecvAction::Combine;
+            true
+        }
+        Mutation::ReplayRound => {
+            let combine_rounds: Vec<usize> = sched
+                .rounds
+                .iter()
+                .enumerate()
+                .filter(|(_, round)| {
+                    round.steps.iter().any(|s| {
+                        s.recv.is_some_and(|rv| rv.action == RecvAction::Combine)
+                    })
+                })
+                .map(|(k, _)| k)
+                .collect();
+            if combine_rounds.is_empty() {
+                return false;
+            }
+            let k = combine_rounds[rng.next_below(combine_rounds.len())];
+            let replay = sched.rounds[k].clone();
+            sched.rounds.push(replay);
+            true
+        }
+    }
+}
+
+fn send_sites(sched: &Schedule) -> Vec<(usize, usize)> {
+    sched
+        .rounds
+        .iter()
+        .enumerate()
+        .flat_map(|(k, round)| {
+            round
+                .steps
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| s.send.is_some())
+                .map(move |(r, _)| (k, r))
+        })
+        .collect()
+}
+
+fn shuffle(v: &mut [usize], rng: &mut SplitMix64) {
+    for i in (1..v.len()).rev() {
+        v.swap(i, rng.next_below(i + 1));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::{audit_schedule, expectation, Semantics};
+    use crate::collectives::Algorithm;
+    use crate::datatypes::BlockPartition;
+    use crate::topology::skips::SkipScheme;
+
+    /// Every corruption class, over several seeds and both circulant
+    /// collectives, must be caught with one of its named diagnostics.
+    #[test]
+    fn every_mutation_class_is_caught_and_named() {
+        let p = 22;
+        let part = BlockPartition::regular(p, 2 * p);
+        for alg in [
+            Algorithm::CirculantReduceScatter(SkipScheme::HalvingUp),
+            Algorithm::CirculantAllreduce(SkipScheme::HalvingUp),
+        ] {
+            let (sem, env) = expectation(&alg, p);
+            for m in Mutation::ALL {
+                let mut applied = 0;
+                for seed in 0..8u64 {
+                    let mut sched = alg.schedule(p);
+                    if !apply(&mut sched, m, seed) {
+                        continue;
+                    }
+                    applied += 1;
+                    let err = audit_schedule(&sched, sem, &env, &[&part]).expect_err(
+                        &format!("{}: mutation {} seed {seed} not caught", alg.name(), m.name()),
+                    );
+                    assert!(
+                        m.expected_codes().contains(&err.code()),
+                        "{}: mutation {} seed {seed} caught as {:?}, expected one of {:?}",
+                        alg.name(),
+                        m.name(),
+                        err.code(),
+                        m.expected_codes()
+                    );
+                }
+                // duplicate-contribution needs a Store recv, which only
+                // the allreduce's allgather phase has.
+                if alg == Algorithm::CirculantAllreduce(SkipScheme::HalvingUp)
+                    || m != Mutation::DuplicateContribution
+                {
+                    assert!(applied > 0, "{}: mutation {} never applied", alg.name(), m.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mutations_are_deterministic_per_seed() {
+        let alg = Algorithm::CirculantAllreduce(SkipScheme::HalvingUp);
+        let mut a = alg.schedule(13);
+        let mut b = alg.schedule(13);
+        assert!(apply(&mut a, Mutation::DropTransfer, 42));
+        assert!(apply(&mut b, Mutation::DropTransfer, 42));
+        assert_eq!(a.rounds, b.rounds);
+    }
+
+    #[test]
+    fn unmutated_schedule_still_audits_clean() {
+        let alg = Algorithm::CirculantAllreduce(SkipScheme::HalvingUp);
+        let (sem, env) = expectation(&alg, 13);
+        let part = BlockPartition::regular(13, 26);
+        // An inapplicable mutation must leave the schedule untouched.
+        let mut sched = Algorithm::CirculantReduceScatter(SkipScheme::HalvingUp).schedule(13);
+        assert!(!apply(&mut sched, Mutation::DuplicateContribution, 7));
+        audit_schedule(&alg.schedule(13), sem, &env, &[&part]).unwrap();
+    }
+}

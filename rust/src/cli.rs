@@ -23,6 +23,11 @@
 //!              RankDown error taxonomy, survivor bit-exactness, the
 //!              2×op-timeout hang bound, spawn-once, and drain-mode
 //!              shutdown — the robustness acceptance driver
+//!   audit      static verification sweep (`crate::analysis`): every
+//!              shipped algorithm × p ∈ 1..=audit.max_p × four partition
+//!              shapes through all four verifier passes, then the seeded
+//!              mutation harness — hard-fails unless every corruption
+//!              class is caught with its named diagnostic
 //!
 //! Global flags: `--config FILE` and `--key value` overrides (see
 //! `crate::config`). Unknown `run.op` / `run.algorithm` / `run.dtype`
@@ -32,7 +37,8 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::collectives::{symbolic, Algorithm};
+use crate::analysis;
+use crate::collectives::Algorithm;
 use crate::config::Config;
 use crate::coordinator::{train, Launcher, OpBackend, RunMetrics, TrainConfig};
 use crate::datatypes::{elem, BlockPartition, DType, Elem};
@@ -75,6 +81,12 @@ commands:
                            run.dtype transport.backend; thread backend runs
                            every rank in this one process; launch.iters
                            repeats the collective back-to-back)
+  audit                    static schedule verification: sweep every shipped
+                           algorithm × p × partition shapes through the
+                           structure/dataflow/optimality/aliasing passes,
+                           then prove the verifier bites via the seeded
+                           mutation harness (keys: audit.max_p audit.seeds
+                           audit.mutation_p audit.seed audit.json FILE)
   chaos                    fault-injection soak: one persistent engine over
                            fault-wrapped transports, kill a rank mid-run,
                            assert RankDown taxonomy + survivor bit-exactness
@@ -115,6 +127,7 @@ pub fn main_with_args(args: Vec<String>) -> Result<()> {
         "train" => cmd_train(&cfg),
         "launch" => cmd_launch(&cfg),
         "chaos" => cmd_chaos(&cfg),
+        "audit" => cmd_audit(&cfg),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
             Ok(())
@@ -252,6 +265,11 @@ fn cmd_info(cfg: &Config) -> Result<()> {
         "CCOLL_ENGINE_BACKPRESSURE_TIMEOUT".into(),
         format!("{}s", k.engine_backpressure_timeout_secs),
         "max wait for a queue slot before submit fails loudly".into(),
+    ]);
+    kt.row(&[
+        "CCOLL_AUDIT_PLANS".into(),
+        if k.audit_plans { "1".into() } else { "0".into() },
+        "audit every built plan in release too (debug always audits)".into(),
     ]);
     kt.print();
     let n: usize = cfg.entries().count();
@@ -776,13 +794,13 @@ fn cmd_trace(cfg: &Config) -> Result<()> {
     println!("p={p}, rank={r}, scheme={}, skips={skips:?} (⌈log2 {p}⌉={} rounds)", scheme.name(), skips.len());
     let sched = crate::collectives::reduce_scatter_schedule(p, &skips);
     println!("from-processors of rank {r}: {:?}", skips.iter().map(|s| (r + p - s) % p).collect::<Vec<_>>());
-    let terms = symbolic::paper_example_terms(&sched, r);
+    let terms = analysis::paper_example_terms(&sched, r);
     println!("\nW at rank {r} accumulates (x_i = input block of processor i for {r}):");
     println!("  W = {}", terms[0]);
     for (k, t) in terms[1..].iter().enumerate() {
         println!("    + {t}   (round {})", k + 1);
     }
-    let depth = symbolic::verify_reduce_scatter(&sched).map_err(|e| anyhow!("{e}"))?;
+    let depth = analysis::verify_reduce_scatter(&sched).map_err(|e| anyhow!("{e}"))?;
     println!("\nsymbolic check: every contributor exactly once at every rank ✓ (max tree depth {depth})");
     Ok(())
 }
@@ -806,7 +824,7 @@ fn cmd_validate(cfg: &Config) -> Result<()> {
                         bad += 1;
                     }
                 }
-                if symbolic::verify_reduce_scatter(&rs).is_err() {
+                if analysis::verify_reduce_scatter(&rs).is_err() {
                     eprintln!("FAIL p={p} {}: symbolic", scheme.name());
                     bad += 1;
                 }
@@ -1093,6 +1111,155 @@ fn cmd_launch_typed<T: Elem>(cfg: &Config) -> Result<()> {
             );
         }
     }
+    Ok(())
+}
+
+/// The static-verification acceptance driver: run every shipped algorithm
+/// × p ∈ 1..=audit.max_p × four partition shapes (regular, random, zipf,
+/// single-block) through all four `crate::analysis` passes, then run the
+/// seeded mutation harness and hard-fail unless 100% of the injected
+/// corruption classes are caught with one of their named diagnostics.
+fn cmd_audit(cfg: &Config) -> Result<()> {
+    use crate::analysis::mutate::{self, Mutation};
+    use std::collections::BTreeMap;
+
+    let max_p = cfg.get_usize("audit.max_p", 64)?;
+    if max_p == 0 {
+        bail!("audit.max_p must be ≥ 1");
+    }
+    let mut_p = cfg.get_usize("audit.mutation_p", 22)?;
+    if mut_p < 3 {
+        bail!("audit.mutation_p must be ≥ 3 (recv retargeting needs a third rank)");
+    }
+    let mut_seeds = cfg.get_usize("audit.seeds", 8)?.max(1) as u64;
+    let part_seed = cfg.get_usize("audit.seed", 1)? as u64;
+
+    // Phase 1: the clean sweep — every (algorithm, p, partition-shape)
+    // must pass structure, exactly-once dataflow, the paper-optimality
+    // envelope, and aliasing.
+    let mut pairs = 0usize;
+    let mut failures: Vec<String> = Vec::new();
+    let mut commut: BTreeMap<String, bool> = BTreeMap::new();
+    for p in 1..=max_p {
+        let m = 3 * p + 1; // deliberately not divisible by p
+        let parts = [
+            BlockPartition::regular(p, m),
+            BlockPartition::random(p, m, part_seed ^ p as u64),
+            BlockPartition::zipf(p, m, 1.2, part_seed.wrapping_add(p as u64)),
+            BlockPartition::single_block(p, m, 0),
+        ];
+        let refs: Vec<&BlockPartition> = parts.iter().collect();
+        for alg in analysis::shipped_roster(p) {
+            match analysis::audit_algorithm(&alg, p, &refs) {
+                Ok(rep) => {
+                    pairs += 1;
+                    let e = commut.entry(alg.name()).or_insert(false);
+                    *e |= rep.dataflow.commutativity_required;
+                }
+                Err(e) => {
+                    failures.push(format!("{} p={p}: [{}] {e}", alg.name(), e.code()));
+                }
+            }
+        }
+    }
+
+    // Phase 2: the mutation harness — prove the verifier bites. Every
+    // injected corruption must surface as one of its class's named codes.
+    let mut injected = 0usize;
+    let mut caught = 0usize;
+    let mut_part = BlockPartition::regular(mut_p, 2 * mut_p);
+    for alg in [
+        Algorithm::CirculantReduceScatter(SkipScheme::HalvingUp),
+        Algorithm::CirculantAllreduce(SkipScheme::HalvingUp),
+    ] {
+        let (sem, env) = analysis::expectation(&alg, mut_p);
+        for m in Mutation::ALL {
+            for seed in 0..mut_seeds {
+                let mut sched = alg.schedule(mut_p);
+                if !mutate::apply(&mut sched, m, seed) {
+                    continue;
+                }
+                injected += 1;
+                match analysis::audit_schedule(&sched, sem, &env, &[&mut_part]) {
+                    Err(e) if m.expected_codes().contains(&e.code()) => caught += 1,
+                    Err(e) => failures.push(format!(
+                        "mutation {} seed {seed} on {}: caught as [{}], expected one of {:?}",
+                        m.name(),
+                        alg.name(),
+                        e.code(),
+                        m.expected_codes()
+                    )),
+                    Ok(_) => failures.push(format!(
+                        "mutation {} seed {seed} on {}: NOT caught — verifier hole",
+                        m.name(),
+                        alg.name()
+                    )),
+                }
+            }
+        }
+    }
+
+    let needs_commut: Vec<String> =
+        commut.iter().filter(|(_, &b)| b).map(|(k, _)| k.clone()).collect();
+    let mut t = Table::new(
+        "static audit",
+        &["(alg,p) pairs", "partitions/pair", "mutations injected", "caught", "failures"],
+    );
+    t.row(&[
+        pairs.to_string(),
+        "4".to_string(),
+        injected.to_string(),
+        caught.to_string(),
+        failures.len().to_string(),
+    ]);
+    t.print();
+    println!(
+        "⊕-commutativity required by: {}",
+        if needs_commut.is_empty() { "none".to_string() } else { needs_commut.join(", ") }
+    );
+
+    if let Some(path) = cfg.get("audit.json") {
+        use crate::util::json::Json;
+        let mut mut_obj = BTreeMap::new();
+        mut_obj.insert("classes".to_string(), Json::Num(Mutation::ALL.len() as f64));
+        mut_obj.insert("injected".to_string(), Json::Num(injected as f64));
+        mut_obj.insert("caught".to_string(), Json::Num(caught as f64));
+        mut_obj.insert("seeds".to_string(), Json::Num(mut_seeds as f64));
+        mut_obj.insert("p".to_string(), Json::Num(mut_p as f64));
+        let mut obj = BTreeMap::new();
+        obj.insert("schema".to_string(), Json::Num(1.0));
+        obj.insert("kind".to_string(), Json::Str("audit".to_string()));
+        obj.insert("max_p".to_string(), Json::Num(max_p as f64));
+        obj.insert("pairs_checked".to_string(), Json::Num(pairs as f64));
+        obj.insert("partitions_per_pair".to_string(), Json::Num(4.0));
+        obj.insert(
+            "commutativity_required".to_string(),
+            Json::Arr(needs_commut.iter().map(|s| Json::Str(s.clone())).collect()),
+        );
+        obj.insert(
+            "failures".to_string(),
+            Json::Arr(failures.iter().map(|s| Json::Str(s.clone())).collect()),
+        );
+        obj.insert("mutation".to_string(), Json::Obj(mut_obj));
+        std::fs::write(path, Json::Obj(obj).render() + "\n")
+            .map_err(|e| anyhow!("cannot write audit.json {path}: {e}"))?;
+        println!("audit: wrote {path}");
+    }
+
+    // The gates that make this a verifier, not a report.
+    if !failures.is_empty() {
+        for f in failures.iter().take(10) {
+            eprintln!("audit FAIL: {f}");
+        }
+        bail!("audit: {} failure(s) across {pairs} clean pairs + {injected} mutations", failures.len());
+    }
+    if injected == 0 || caught != injected {
+        bail!("audit: mutation harness caught {caught}/{injected} — must be 100% of a non-empty set");
+    }
+    println!(
+        "audit: OK — {pairs} (algorithm, p) pairs × 4 partition shapes verified \
+         (p ≤ {max_p}), {caught}/{injected} injected corruptions caught with named diagnostics"
+    );
     Ok(())
 }
 

@@ -131,7 +131,8 @@ pub fn alltoall_rank<T: Elem>(
 ) -> Result<Vec<T>, CollectiveError> {
     let p = part.p();
     let r = ep.rank;
-    validate(p, skips).expect("invalid skip sequence");
+    validate(p, skips)
+        .map_err(|e| CollectiveError::InvalidSchedule { rank: r, source: e.into() })?;
     if input.len() != part.total() {
         return Err(CollectiveError::BadBuffer { rank: r, got: input.len(), want: part.total() });
     }
@@ -220,7 +221,8 @@ pub fn alltoallv_rank<T: Elem>(
         return Err(CollectiveError::BadBuffer { rank: r, got: send_counts.len(), want: p });
     }
     let send_part = BlockPartition::from_counts(send_counts);
-    validate(p, skips).expect("invalid skip sequence");
+    validate(p, skips)
+        .map_err(|e| CollectiveError::InvalidSchedule { rank: r, source: e.into() })?;
     if input.len() != send_part.total() {
         return Err(CollectiveError::BadBuffer {
             rank: r,

@@ -128,6 +128,14 @@ pub enum CollectiveError {
     RankDown { rank: usize, peer: usize, detail: String },
     #[error("fused batch (epoch {fused_op}, {members} member ops): {detail}")]
     FusedBatch { fused_op: u64, members: usize, detail: String },
+    /// The schedule (or the skip sequence it would be generated from)
+    /// failed static validation — nothing was sent.
+    #[error("rank {rank}: invalid schedule: {source}")]
+    InvalidSchedule {
+        rank: usize,
+        #[source]
+        source: crate::schedule::ScheduleError,
+    },
 }
 
 /// Whether a driver made it to the end of its schedule.
@@ -297,6 +305,25 @@ impl OpCursor {
         buf: &mut [T],
         blocking: bool,
     ) -> Result<Progress, CollectiveError> {
+        self.step_with_tiers(ep, schedule, part, op, buf, blocking, None)
+    }
+
+    /// [`step`](Self::step), consulting a statically verified
+    /// [`crate::analysis::TierMap`] for the per-(round, rank) rendezvous
+    /// verdict instead of recomputing `rendezvous_safe` every round. Plans
+    /// built by the [`crate::schedule::PlanCache`] carry their tier map;
+    /// ad-hoc callers pass `None` and fall back to the online predicate.
+    #[allow(clippy::too_many_arguments)]
+    pub fn step_with_tiers<T: Elem, C: Transport<T>>(
+        &mut self,
+        ep: &mut C,
+        schedule: &Schedule,
+        part: &BlockPartition,
+        op: &dyn ReduceOp<T>,
+        buf: &mut [T],
+        blocking: bool,
+        tiers: Option<&crate::analysis::TierMap>,
+    ) -> Result<Progress, CollectiveError> {
         let p = schedule.p;
         let r = ep.rank();
         if buf.len() != part.total() {
@@ -341,8 +368,20 @@ impl OpCursor {
                     // validator). Backends that fail either test fall
                     // back rendezvous → pooled → framed copy on their own
                     // send path.
-                    let rendezvous =
-                        step.rendezvous_safe(p) && ep.caps().supports_rendezvous;
+                    let block_safe = match tiers {
+                        Some(t) => {
+                            let safe = t.rendezvous_ok(self.round, r);
+                            debug_assert_eq!(
+                                safe,
+                                step.rendezvous_safe(p),
+                                "tier map disagrees with rendezvous_safe (round {}, rank {r})",
+                                self.round
+                            );
+                            safe
+                        }
+                        None => step.rendezvous_safe(p),
+                    };
+                    let rendezvous = block_safe && ep.caps().supports_rendezvous;
 
                     // Borrow-pack the outgoing payload: hand the transport
                     // the ≤2 slices of the circular range; it publishes

@@ -11,16 +11,26 @@
 //! σ_{k−1})` — to `(r+σ_k) mod p`, and folds the same-id blocks received
 //! from `(r−σ_k) mod p` into its own partials.
 
-use crate::schedule::{BlockRange, RankStep, Recv, RecvAction, Round, Schedule, Transfer};
+use crate::schedule::{
+    BlockRange, RankStep, Recv, RecvAction, Round, Schedule, ScheduleError, Transfer,
+};
 use crate::topology::skips::validate;
 
 /// Algorithm 1: the `⌈log2 p⌉`-round (for halving-up skips) reduce-scatter
-/// (partitioned all-reduce) schedule.
+/// (partitioned all-reduce) schedule. Panics on an invalid skip sequence;
+/// library callers should prefer [`try_reduce_scatter_schedule`].
 pub fn reduce_scatter_schedule(p: usize, skips: &[usize]) -> Schedule {
-    validate(p, skips).expect("invalid skip sequence");
+    try_reduce_scatter_schedule(p, skips)
+        .unwrap_or_else(|e| panic!("invalid skip sequence: {e}"))
+}
+
+/// Fallible variant of [`reduce_scatter_schedule`]: a bad skip sequence
+/// comes back as a typed [`ScheduleError`] instead of a panic.
+pub fn try_reduce_scatter_schedule(p: usize, skips: &[usize]) -> Result<Schedule, ScheduleError> {
+    validate(p, skips)?;
     let mut sched = Schedule::new(p, format!("circulant-rs[{skips:?}]"));
     if p == 1 {
-        return sched;
+        return Ok(sched);
     }
     let mut prev = p;
     for &s in skips {
@@ -41,18 +51,24 @@ pub fn reduce_scatter_schedule(p: usize, skips: &[usize]) -> Schedule {
         sched.rounds.push(round);
         prev = s;
     }
-    sched
+    Ok(sched)
 }
 
 /// Algorithm 2, phase 2: allgather along the same circulant graph with the
 /// skip sequence replayed in reverse (the paper's stack), `Store` actions.
 /// Precondition: rank `r` holds finished block `r` (e.g. after
-/// [`reduce_scatter_schedule`]).
+/// [`reduce_scatter_schedule`]). Panics on an invalid skip sequence;
+/// library callers should prefer [`try_allgather_schedule`].
 pub fn allgather_schedule(p: usize, skips: &[usize]) -> Schedule {
-    validate(p, skips).expect("invalid skip sequence");
+    try_allgather_schedule(p, skips).unwrap_or_else(|e| panic!("invalid skip sequence: {e}"))
+}
+
+/// Fallible variant of [`allgather_schedule`].
+pub fn try_allgather_schedule(p: usize, skips: &[usize]) -> Result<Schedule, ScheduleError> {
+    validate(p, skips)?;
     let mut sched = Schedule::new(p, format!("circulant-ag[{skips:?}]"));
     if p == 1 {
-        return sched;
+        return Ok(sched);
     }
     for k in (0..skips.len()).rev() {
         let s = skips[k];
@@ -73,19 +89,25 @@ pub fn allgather_schedule(p: usize, skips: &[usize]) -> Schedule {
         }
         sched.rounds.push(round);
     }
-    sched
+    Ok(sched)
 }
 
 /// Algorithm 2: allreduce = reduce-scatter followed by the mirrored
 /// allgather. `2·len(skips)` rounds; with halving-up skips that is
 /// `2⌈log2 p⌉`, with `2(p−1)` blocks sent/received and `p−1` ⊕-applications
-/// per processor (Theorem 2).
+/// per processor (Theorem 2). Panics on an invalid skip sequence; library
+/// callers should prefer [`try_allreduce_schedule`].
 pub fn allreduce_schedule(p: usize, skips: &[usize]) -> Schedule {
-    let mut rs = reduce_scatter_schedule(p, skips);
-    let ag = allgather_schedule(p, skips);
+    try_allreduce_schedule(p, skips).unwrap_or_else(|e| panic!("invalid skip sequence: {e}"))
+}
+
+/// Fallible variant of [`allreduce_schedule`].
+pub fn try_allreduce_schedule(p: usize, skips: &[usize]) -> Result<Schedule, ScheduleError> {
+    let mut rs = try_reduce_scatter_schedule(p, skips)?;
+    let ag = try_allgather_schedule(p, skips)?;
     rs.name = format!("circulant-allreduce[{skips:?}]");
     rs.rounds.extend(ag.rounds);
-    rs
+    Ok(rs)
 }
 
 #[cfg(test)]
@@ -187,6 +209,16 @@ mod tests {
             assert_eq!(rsr.send.unwrap().blocks.len, agr.send.unwrap().blocks.len);
             assert_eq!(rsr.send.unwrap().peer, agr.recv.unwrap().peer);
         }
+    }
+
+    #[test]
+    fn try_variants_reject_bad_skips_with_typed_error() {
+        // [3, 1] violates the in-place condition σ_{k−1} ≤ 2σ_k.
+        let e = try_reduce_scatter_schedule(8, &[3, 1]).unwrap_err();
+        assert_eq!(e.code(), "bad-skips");
+        assert!(try_allgather_schedule(8, &[3, 1]).is_err());
+        assert!(try_allreduce_schedule(8, &[3, 1]).is_err());
+        assert!(try_allreduce_schedule(8, &[4, 2, 1]).is_ok());
     }
 
     #[test]

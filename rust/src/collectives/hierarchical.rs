@@ -161,7 +161,7 @@ pub fn hierarchical_allreduce_schedule(
 mod tests {
     use super::*;
     use crate::collectives::exec::run_schedule_threads;
-    use crate::collectives::symbolic;
+    use crate::analysis as symbolic;
     use crate::datatypes::BlockPartition;
     use crate::ops::SumOp;
     use crate::util::rng::SplitMix64;

@@ -7,14 +7,16 @@ pub mod derived;
 pub mod exec;
 pub mod generators;
 pub mod hierarchical;
-pub mod symbolic;
 
 pub use exec::{
     execute_rank, run_schedule_threads, run_schedule_threads_tiered,
     run_schedule_threads_tiered_typed, run_schedule_threads_typed,
     run_schedule_threads_with_counters, CollectiveError, OpCursor, Progress,
 };
-pub use generators::{allgather_schedule, allreduce_schedule, reduce_scatter_schedule};
+pub use generators::{
+    allgather_schedule, allreduce_schedule, reduce_scatter_schedule, try_allgather_schedule,
+    try_allreduce_schedule, try_reduce_scatter_schedule,
+};
 
 use std::sync::Arc;
 

@@ -1011,13 +1011,14 @@ fn worker_loop<T: Elem, C: Transport<T>>(
                     return false;
                 }
             }
-            match a.cursor.step(
+            match a.cursor.step_with_tiers(
                 &mut ep,
                 &a.plan.schedule,
                 &a.plan.part,
                 a.op.as_ref(),
                 &mut a.buf,
                 false,
+                Some(&a.plan.tiers),
             ) {
                 Ok(Progress::Done) => {
                     made_progress = true;

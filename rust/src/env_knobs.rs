@@ -27,6 +27,7 @@
 //! | `CCOLL_RETRY_ATTEMPTS`       | usize  | `3`     | transient-send retry budget per frame (UDS writer; `engine.retry.attempts` overrides per run) |
 //! | `CCOLL_RETRY_BASE_MS`        | usize  | `10`    | base backoff between send retries, doubling per attempt (`engine.retry.base_ms` overrides per run) |
 //! | `CCOLL_ENGINE_BACKPRESSURE_TIMEOUT` | usize | `90` | seconds `submit` may park on a full engine queue before `BackpressureTimeout` (`engine.backpressure_timeout` overrides per run) |
+//! | `CCOLL_AUDIT_PLANS`          | bool   | `0`     | release-build opt-in for the plan-cache static audit (debug builds always audit) |
 //!
 //! Booleans accept `0|1|true|false|yes|no` (empty = unset = default).
 //! Integers accept decimal digits with optional `_` separators. Dtypes
@@ -104,6 +105,10 @@ pub struct EnvKnobs {
     /// `EngineConfig::backpressure_timeout` / config key
     /// `engine.backpressure_timeout`.
     pub engine_backpressure_timeout_secs: u64,
+    /// Run the static schedule audit ([`crate::analysis`]) on every
+    /// `PlanCache` miss even in release builds (`CCOLL_AUDIT_PLANS`).
+    /// Debug builds always audit regardless of this knob.
+    pub audit_plans: bool,
 }
 
 fn parse_bool(name: &str, raw: Option<&str>, default: bool) -> Result<bool, String> {
@@ -225,6 +230,7 @@ pub fn parse_from(get: impl Fn(&str) -> Option<String>) -> Result<EnvKnobs, Stri
             get("CCOLL_ENGINE_BACKPRESSURE_TIMEOUT").as_deref(),
             crate::engine::DEFAULT_BACKPRESSURE_TIMEOUT_SECS as usize,
         )? as u64,
+        audit_plans: parse_bool("CCOLL_AUDIT_PLANS", get("CCOLL_AUDIT_PLANS").as_deref(), false)?,
     })
 }
 
@@ -270,6 +276,15 @@ mod tests {
             k.engine_backpressure_timeout_secs,
             crate::engine::DEFAULT_BACKPRESSURE_TIMEOUT_SECS
         );
+        assert!(!k.audit_plans, "release-build plan audits are opt-in");
+    }
+
+    #[test]
+    fn audit_plans_knob_parses_and_rejects_loudly() {
+        assert!(with(&[("CCOLL_AUDIT_PLANS", "1")]).unwrap().audit_plans);
+        assert!(!with(&[("CCOLL_AUDIT_PLANS", "no")]).unwrap().audit_plans);
+        let err = with(&[("CCOLL_AUDIT_PLANS", "always")]).unwrap_err();
+        assert!(err.contains("CCOLL_AUDIT_PLANS") && err.contains("always"), "{err}");
     }
 
     #[test]

@@ -17,6 +17,7 @@
 // paper's bibliography, not intra-doc links.
 #![allow(rustdoc::broken_intra_doc_links)]
 
+pub mod analysis;
 pub mod bench_harness;
 pub mod cli;
 pub mod collectives;

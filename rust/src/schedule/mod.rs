@@ -133,6 +133,65 @@ pub struct Schedule {
     pub rounds: Vec<Round>,
 }
 
+/// Why a schedule (or the skip sequence it was built from) is structurally
+/// invalid. Library callers get these as `Result`s from
+/// [`Schedule::validate`] and the `try_*` generator variants; the CLI and
+/// [`Schedule::assert_valid`] still abort loudly by panicking with the
+/// rendered message.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum ScheduleError {
+    #[error("{name}: round {round} wrong arity: {got} steps for p={p}")]
+    WrongArity { name: String, round: usize, got: usize, p: usize },
+    #[error("{name}: r{rank} round {round} bad peer {peer} (p={p})")]
+    BadPeer { name: String, rank: usize, round: usize, peer: usize, p: usize },
+    #[error("{name}: r{rank} round {round} self-send")]
+    SelfSend { name: String, rank: usize, round: usize },
+    #[error("{name}: r{rank} round {round} bad send len {len} (p={p})")]
+    BadSendLen { name: String, rank: usize, round: usize, len: usize, p: usize },
+    #[error("{name}: r{rank} round {round} bad range start {start} (p={p})")]
+    BadRangeStart { name: String, rank: usize, round: usize, start: usize, p: usize },
+    #[error("{name}: r{rank} round {round} unmatched send to r{peer}")]
+    UnmatchedSend { name: String, rank: usize, round: usize, peer: usize },
+    #[error("{name}: round {round} recv peer mismatch at r{peer}: names r{got}, send came from r{rank}")]
+    RecvPeerMismatch { name: String, round: usize, rank: usize, peer: usize, got: usize },
+    #[error("{name}: round {round} {rank}\u{2192}{peer} block range mismatch (send {send:?}, recv {recv:?})")]
+    RangeMismatch {
+        name: String,
+        round: usize,
+        rank: usize,
+        peer: usize,
+        send: BlockRange,
+        recv: BlockRange,
+    },
+    #[error("{name}: r{rank} round {round} unmatched recv from r{peer}")]
+    UnmatchedRecv { name: String, rank: usize, round: usize, peer: usize },
+    #[error("{name}: round {round} send peer mismatch at r{peer}: sends to r{got}, recv expects r{rank}")]
+    SendPeerMismatch { name: String, round: usize, rank: usize, peer: usize, got: usize },
+    /// The skip sequence a generator was handed is itself invalid.
+    #[error(transparent)]
+    Skips(#[from] crate::topology::skips::SkipError),
+}
+
+impl ScheduleError {
+    /// Stable machine-readable diagnostic code (used by `ccoll audit`
+    /// reports and the mutation-catch tests).
+    pub fn code(&self) -> &'static str {
+        match self {
+            ScheduleError::WrongArity { .. } => "wrong-arity",
+            ScheduleError::BadPeer { .. } => "bad-peer",
+            ScheduleError::SelfSend { .. } => "self-send",
+            ScheduleError::BadSendLen { .. } => "bad-send-len",
+            ScheduleError::BadRangeStart { .. } => "bad-range-start",
+            ScheduleError::UnmatchedSend { .. } => "unmatched-send",
+            ScheduleError::RecvPeerMismatch { .. } => "recv-peer-mismatch",
+            ScheduleError::RangeMismatch { .. } => "block-range-mismatch",
+            ScheduleError::UnmatchedRecv { .. } => "unmatched-recv",
+            ScheduleError::SendPeerMismatch { .. } => "send-peer-mismatch",
+            ScheduleError::Skips(_) => "bad-skips",
+        }
+    }
+}
+
 /// Per-rank volume/round counters derived from a schedule — the quantities
 /// Theorems 1 and 2 bound.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
@@ -162,38 +221,124 @@ impl Schedule {
     ///  * one-ported: ≤1 send and ≤1 recv per rank per round (by type);
     ///  * matching: every send `(r → t, B)` has at `t` a recv
     ///    `(from r, B)` over the *same global blocks*, and vice versa.
-    pub fn assert_valid(&self) {
+    ///
+    /// Because every send must name the unique recv that accepts it (and
+    /// vice versa), a `Ok(())` here is also a deadlock-freedom proof for
+    /// the synchronous per-round execution model: no round can block on a
+    /// message nobody sends.
+    pub fn validate(&self) -> Result<(), ScheduleError> {
+        let name = &self.name;
         for (k, round) in self.rounds.iter().enumerate() {
-            assert_eq!(round.steps.len(), self.p, "{}: round {k} wrong arity", self.name);
+            if round.steps.len() != self.p {
+                return Err(ScheduleError::WrongArity {
+                    name: name.clone(),
+                    round: k,
+                    got: round.steps.len(),
+                    p: self.p,
+                });
+            }
             for (r, step) in round.steps.iter().enumerate() {
                 if let Some(send) = &step.send {
-                    assert!(send.peer < self.p, "{}: r{r} round {k} bad peer", self.name);
-                    assert!(send.peer != r, "{}: r{r} round {k} self-send", self.name);
-                    assert!(
-                        send.blocks.len >= 1 && send.blocks.len <= self.p,
-                        "{}: r{r} round {k} bad send len",
-                        self.name
-                    );
-                    assert!(send.blocks.start < self.p);
+                    if send.peer >= self.p {
+                        return Err(ScheduleError::BadPeer {
+                            name: name.clone(),
+                            rank: r,
+                            round: k,
+                            peer: send.peer,
+                            p: self.p,
+                        });
+                    }
+                    if send.peer == r {
+                        return Err(ScheduleError::SelfSend { name: name.clone(), rank: r, round: k });
+                    }
+                    if send.blocks.len < 1 || send.blocks.len > self.p {
+                        return Err(ScheduleError::BadSendLen {
+                            name: name.clone(),
+                            rank: r,
+                            round: k,
+                            len: send.blocks.len,
+                            p: self.p,
+                        });
+                    }
+                    if send.blocks.start >= self.p {
+                        return Err(ScheduleError::BadRangeStart {
+                            name: name.clone(),
+                            rank: r,
+                            round: k,
+                            start: send.blocks.start,
+                            p: self.p,
+                        });
+                    }
                     // matching recv at the peer
-                    let peer_recv = round.steps[send.peer]
-                        .recv
-                        .unwrap_or_else(|| panic!("{}: r{r} round {k} unmatched send", self.name));
-                    assert_eq!(peer_recv.peer, r, "{}: round {k} recv peer mismatch", self.name);
-                    assert_eq!(
-                        peer_recv.blocks, send.blocks,
-                        "{}: round {k} {r}→{} block range mismatch",
-                        self.name, send.peer
-                    );
+                    let peer_recv = round.steps[send.peer].recv.ok_or_else(|| {
+                        ScheduleError::UnmatchedSend {
+                            name: name.clone(),
+                            rank: r,
+                            round: k,
+                            peer: send.peer,
+                        }
+                    })?;
+                    if peer_recv.peer != r {
+                        return Err(ScheduleError::RecvPeerMismatch {
+                            name: name.clone(),
+                            round: k,
+                            rank: r,
+                            peer: send.peer,
+                            got: peer_recv.peer,
+                        });
+                    }
+                    if peer_recv.blocks != send.blocks {
+                        return Err(ScheduleError::RangeMismatch {
+                            name: name.clone(),
+                            round: k,
+                            rank: r,
+                            peer: send.peer,
+                            send: send.blocks,
+                            recv: peer_recv.blocks,
+                        });
+                    }
                 }
                 if let Some(recv) = &step.recv {
-                    assert!(recv.peer < self.p && recv.peer != r);
-                    let peer_send = round.steps[recv.peer]
-                        .send
-                        .unwrap_or_else(|| panic!("{}: r{r} round {k} unmatched recv", self.name));
-                    assert_eq!(peer_send.peer, r);
+                    if recv.peer >= self.p {
+                        return Err(ScheduleError::BadPeer {
+                            name: name.clone(),
+                            rank: r,
+                            round: k,
+                            peer: recv.peer,
+                            p: self.p,
+                        });
+                    }
+                    if recv.peer == r {
+                        return Err(ScheduleError::SelfSend { name: name.clone(), rank: r, round: k });
+                    }
+                    let peer_send = round.steps[recv.peer].send.ok_or_else(|| {
+                        ScheduleError::UnmatchedRecv {
+                            name: name.clone(),
+                            rank: r,
+                            round: k,
+                            peer: recv.peer,
+                        }
+                    })?;
+                    if peer_send.peer != r {
+                        return Err(ScheduleError::SendPeerMismatch {
+                            name: name.clone(),
+                            round: k,
+                            rank: r,
+                            peer: recv.peer,
+                            got: peer_send.peer,
+                        });
+                    }
                 }
             }
+        }
+        Ok(())
+    }
+
+    /// Panicking wrapper over [`Schedule::validate`] — tests and the CLI
+    /// abort loudly; library callers should prefer `validate()`.
+    pub fn assert_valid(&self) {
+        if let Err(e) = self.validate() {
+            panic!("{e}");
         }
     }
 
@@ -292,6 +437,29 @@ mod tests {
         let mut s = tiny_valid();
         s.rounds[0].steps[1].recv.as_mut().unwrap().blocks = BlockRange::new(0, 2);
         s.assert_valid();
+    }
+
+    #[test]
+    fn validate_returns_typed_errors() {
+        assert!(tiny_valid().validate().is_ok());
+
+        let mut s = tiny_valid();
+        s.rounds[0].steps[1].recv = None;
+        let e = s.validate().unwrap_err();
+        assert_eq!(e.code(), "unmatched-send");
+        assert!(e.to_string().contains("unmatched send"));
+
+        let mut s = tiny_valid();
+        s.rounds[0].steps[1].recv.as_mut().unwrap().blocks = BlockRange::new(0, 2);
+        let e = s.validate().unwrap_err();
+        assert_eq!(e.code(), "block-range-mismatch");
+        assert!(e.to_string().contains("block range mismatch"));
+
+        // Rank 0's send reaches rank 1 first, whose recv now names the
+        // wrong origin — the send-side matching check fires.
+        let mut s = tiny_valid();
+        s.rounds[0].steps[1].recv.as_mut().unwrap().peer = 1;
+        assert_eq!(s.validate().unwrap_err().code(), "recv-peer-mismatch");
     }
 
     #[test]

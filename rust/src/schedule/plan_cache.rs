@@ -36,6 +36,17 @@ use crate::schedule::Schedule;
 pub struct Plan {
     pub schedule: Schedule,
     pub part: BlockPartition,
+    /// Per-(round, rank) zero-copy eligibility, proven once here by the
+    /// analysis aliasing pass; executors consult it instead of
+    /// recomputing the block-overlap test on every step.
+    pub tiers: crate::analysis::TierMap,
+}
+
+impl Plan {
+    pub fn new(schedule: Schedule, part: BlockPartition) -> Self {
+        let tiers = crate::analysis::tier_map(&schedule);
+        Self { schedule, part, tiers }
+    }
 }
 
 /// Cache key — what a schedule is a pure function of, plus the dtype (the
@@ -181,7 +192,15 @@ impl PlanCache {
             }
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
-        let plan = Arc::new(Plan { schedule: build(), part: part.clone() });
+        let plan = Arc::new(Plan::new(build(), part.clone()));
+        // Verified-by-construction: every plan that can enter the cache
+        // passes the full static verifier while auditing is on (debug
+        // builds always; release behind CCOLL_AUDIT_PLANS).
+        if crate::analysis::audit_plans_enabled() {
+            if let Err(e) = crate::analysis::audit_plan(&key.algorithm, &plan.schedule, part) {
+                panic!("plan audit failed [{}]: {e}", e.code());
+            }
+        }
         if collision {
             // Never cached: the slot is owned by the other layout.
             return (plan, false);

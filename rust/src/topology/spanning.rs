@@ -246,7 +246,7 @@ mod tests {
         assert_eq!(sizes[0], 22);
         // The root's round-k received partial has the size of subtree σ_k.
         // Round 1 (σ=11): the paper's example shows 2 contributions (x10=x_{21-11} carries x_{21-11-?}.. )
-        // — exact values checked via symbolic execution in collectives::symbolic.
+        // — exact values checked via symbolic execution in crate::analysis.
         assert!(sizes[11] >= 1);
     }
 }

@@ -8,8 +8,9 @@
 //!   * the implication chain: in-place condition ⇒ distinct-sum
 //!     completeness ⇒ symbolic correctness ⇒ counter optimality.
 
+use circulant_collectives::analysis;
 use circulant_collectives::collectives::{
-    allreduce_schedule, reduce_scatter_schedule, symbolic, Algorithm,
+    allreduce_schedule, reduce_scatter_schedule, Algorithm,
 };
 use circulant_collectives::datatypes::BlockPartition;
 use circulant_collectives::schedule::Schedule;
@@ -74,10 +75,10 @@ fn random_schedules_symbolically_correct() {
         let p = 2 + rng.next_below(48);
         let skips = random_valid_skips(p, &mut rng);
         let rs = reduce_scatter_schedule(p, &skips);
-        symbolic::verify_reduce_scatter(&rs)
+        analysis::verify_reduce_scatter(&rs)
             .unwrap_or_else(|e| panic!("p={p} {skips:?}: {e}"));
         let ar = allreduce_schedule(p, &skips);
-        symbolic::verify_allreduce(&ar).unwrap_or_else(|e| panic!("p={p} {skips:?}: {e}"));
+        analysis::verify_allreduce(&ar).unwrap_or_else(|e| panic!("p={p} {skips:?}: {e}"));
     }
 }
 
