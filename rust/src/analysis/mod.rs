@@ -465,6 +465,39 @@ pub fn shipped_roster(p: usize) -> Vec<Algorithm> {
     v
 }
 
+/// Audit a *pipelined* (chunked) execution of `alg`: an `m`-element
+/// vector split into `chunk_elems`-element chunk epochs, each running the
+/// algorithm's schedule over its own regular partition.
+///
+/// Chunk epochs share nothing beyond the `Tag{op, round}` wire
+/// discipline — each chunk owns a disjoint sub-slice of the working
+/// vector, its own round-offset tag space, and its own rendezvous
+/// publishes/acks — so the whole-op proof composes from per-chunk
+/// proofs: exactly-once contribution holds per chunk iff it holds for
+/// the chunk's schedule over the chunk's partition, and aliasing safety
+/// likewise. The remainder folds into the last chunk, so at most two
+/// distinct chunk partitions arise; this audits each distinct one once
+/// and returns a report per distinct chunk length.
+pub fn audit_pipelined(
+    alg: &Algorithm,
+    p: usize,
+    m: usize,
+    chunk_elems: usize,
+) -> Result<Vec<AuditReport>, AnalysisError> {
+    let sizes = crate::collectives::pipeline_chunk_sizes(m, chunk_elems);
+    let mut reports = Vec::new();
+    let mut audited: Vec<usize> = Vec::new();
+    for len in sizes {
+        if audited.contains(&len) {
+            continue;
+        }
+        audited.push(len);
+        let part = BlockPartition::regular(p, len);
+        reports.push(audit_algorithm(alg, p, &[&part])?);
+    }
+    Ok(reports)
+}
+
 /// Whether plan-build-time auditing is on: always in debug builds,
 /// opt-in via `CCOLL_AUDIT_PLANS=1` in release.
 pub fn audit_plans_enabled() -> bool {
@@ -508,6 +541,24 @@ mod tests {
                 assert_eq!(rep.tier_counts.0, rep.tier_counts.1, "p={p}");
             }
         }
+    }
+
+    #[test]
+    fn pipelined_audit_covers_each_distinct_chunk_partition() {
+        let alg = Algorithm::CirculantAllreduce(SkipScheme::HalvingUp);
+        // m=100, chunk=32 → chunks [32, 32, 36]: two distinct lengths.
+        let reports = audit_pipelined(&alg, 5, 100, 32).unwrap();
+        assert_eq!(reports.len(), 2);
+        for rep in &reports {
+            assert_eq!(rep.partitions_checked, 1);
+            assert_eq!(rep.tier_counts.0, rep.tier_counts.1, "chunk epochs stay zero-copy");
+        }
+        // Degenerate geometry (chunk ≥ m/2) is a single plain partition.
+        let reports = audit_pipelined(&alg, 5, 100, 64).unwrap();
+        assert_eq!(reports.len(), 1);
+        // Divisible case: one distinct length even with many chunks.
+        let reports = audit_pipelined(&alg, 5, 128, 32).unwrap();
+        assert_eq!(reports.len(), 1);
     }
 
     #[test]

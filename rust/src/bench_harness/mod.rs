@@ -129,6 +129,17 @@ pub fn time_adaptive<F: FnMut()>(min_batch_seconds: f64, reps: usize, mut f: F) 
     Summary::of(&samples)
 }
 
+/// Achieved bandwidth in GiB/s for `bytes` moved in `secs` — the
+/// machine-readable headline number the large-message tier is judged by
+/// (recorded by T1/T2/T10 alongside latency). Zero when `secs` is not
+/// positive, so a degenerate timing can never report infinite bandwidth.
+pub fn gib_per_sec(bytes: usize, secs: f64) -> f64 {
+    if secs <= 0.0 {
+        return 0.0;
+    }
+    bytes as f64 / secs / (1024.0 * 1024.0 * 1024.0)
+}
+
 /// Standard bench header so outputs are self-describing in the logs.
 pub fn bench_header(id: &str, what: &str) {
     println!("\n=== {id}: {what} ===");
@@ -166,6 +177,14 @@ mod tests {
     fn adaptive_reports_sane_times() {
         let s = time_adaptive(0.001, 3, || { std::hint::black_box(1 + 1); });
         assert!(s.median > 0.0 && s.median < 1e-3);
+    }
+
+    #[test]
+    fn gib_per_sec_is_exact_and_degenerate_safe() {
+        assert_eq!(gib_per_sec(1 << 30, 1.0), 1.0);
+        assert_eq!(gib_per_sec(1 << 31, 0.5), 4.0);
+        assert_eq!(gib_per_sec(1 << 30, 0.0), 0.0);
+        assert_eq!(gib_per_sec(0, 1.0), 0.0);
     }
 
     #[test]

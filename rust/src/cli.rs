@@ -64,7 +64,9 @@ commands:
                            serve.verify serve.trace|--trace FILE
                            serve.fuse|--fuse serve.json FILE run.dtype
                            run.op engine.queue_depth engine.park
-                           engine.fusion.max_bytes engine.fusion.window)
+                           engine.fusion.max_bytes engine.fusion.window
+                           engine.pipeline.min_bytes
+                           engine.pipeline.chunk_bytes)
   simulate                 cost-model sweep (keys: sim.p sim.m cost.alpha
                            cost.beta cost.gamma)
   trace                    symbolic trace (keys: trace.p trace.rank)
@@ -84,6 +86,8 @@ commands:
   audit                    static schedule verification: sweep every shipped
                            algorithm × p × partition shapes through the
                            structure/dataflow/optimality/aliasing passes,
+                           plus the pipelined tier's chunked plans (each
+                           distinct chunk partition, remainder folding),
                            then prove the verifier bites via the seeded
                            mutation harness (keys: audit.max_p audit.seeds
                            audit.mutation_p audit.seed audit.json FILE)
@@ -242,6 +246,16 @@ fn cmd_info(cfg: &Config) -> Result<()> {
         "CCOLL_FUSION_WINDOW".into(),
         k.fusion_window.to_string(),
         "fusion flush window in completed engine steps (0 = off)".into(),
+    ]);
+    kt.row(&[
+        "CCOLL_PIPELINE_MIN_BYTES".into(),
+        k.pipeline_min_bytes.to_string(),
+        "min allreduce payload for the pipelined tier (0 = off)".into(),
+    ]);
+    kt.row(&[
+        "CCOLL_PIPELINE_CHUNK_BYTES".into(),
+        k.pipeline_chunk_bytes.to_string(),
+        "chunk-epoch size of the pipelined tier (0 = off)".into(),
     ]);
     kt.row(&[
         "CCOLL_TRANSPORT".into(),
@@ -503,6 +517,10 @@ fn cmd_serve_typed<T: Elem>(cfg: &Config) -> Result<()> {
              (window 0 disables fusion)"
         );
     }
+    let pipeline_min_bytes =
+        cfg.get_usize("engine.pipeline.min_bytes", knobs.pipeline_min_bytes)?;
+    let pipeline_chunk_bytes =
+        cfg.get_usize("engine.pipeline.chunk_bytes", knobs.pipeline_chunk_bytes)?;
     let retry_attempts = cfg.get_usize("engine.retry.attempts", knobs.retry_attempts)?;
     let retry_base_ms = cfg.get_usize("engine.retry.base_ms", knobs.retry_base_ms as usize)? as u64;
     let backpressure_secs = cfg.get_usize(
@@ -545,6 +563,8 @@ fn cmd_serve_typed<T: Elem>(cfg: &Config) -> Result<()> {
             .fusion(fuse)
             .fusion_max_bytes(fusion_max_bytes)
             .fusion_window(fusion_window)
+            .pipeline_min_bytes(pipeline_min_bytes)
+            .pipeline_chunk_bytes(pipeline_chunk_bytes)
             .retry(retry_attempts, retry_base_ms)
             .backpressure_timeout(std::time::Duration::from_secs(backpressure_secs)),
     );
@@ -663,6 +683,13 @@ fn cmd_serve_typed<T: Elem>(cfg: &Config) -> Result<()> {
             fstats.plan_misses,
         );
     }
+    if fstats.pipelined_ops > 0 {
+        println!(
+            "pipeline: {} ops over {pipeline_min_bytes} B dispatched chunked \
+             ({pipeline_chunk_bytes} B chunks)",
+            fstats.pipelined_ops,
+        );
+    }
     if verify && verified_ops == 0 {
         println!(
             "serve: note — verification is on but the mix contained no sum ops, \
@@ -693,6 +720,7 @@ fn cmd_serve_typed<T: Elem>(cfg: &Config) -> Result<()> {
             Json::Num(fstats.flush_incompatible as f64),
         );
         fusion.insert("flush_forced".to_string(), Json::Num(fstats.flush_forced as f64));
+        fusion.insert("pipelined_ops".to_string(), Json::Num(fstats.pipelined_ops as f64));
         let mut obj = BTreeMap::new();
         obj.insert("schema".to_string(), Json::Num(1.0));
         obj.insert("kind".to_string(), Json::Str("serve".to_string()));
@@ -1163,6 +1191,31 @@ fn cmd_audit(cfg: &Config) -> Result<()> {
         }
     }
 
+    // Phase 1b: the pipelined (chunked-plan) sweep — the engine's
+    // large-message tier runs each chunk as its own epoch over a regular
+    // partition of the chunk length, so every distinct chunk partition a
+    // pipelined allreduce can produce must pass the same four passes.
+    // Geometry chosen so the remainder-folding path is always exercised
+    // (two distinct chunk lengths per (scheme, p)).
+    let mut pipelined_reports = 0usize;
+    for p in 1..=max_p {
+        let m = 8 * p + 3;
+        let chunk_elems = 3 * p;
+        for scheme in
+            [SkipScheme::HalvingUp, SkipScheme::PowerOfTwo, SkipScheme::Sqrt, SkipScheme::FullyConnected]
+        {
+            let alg = Algorithm::CirculantAllreduce(scheme);
+            match analysis::audit_pipelined(&alg, p, m, chunk_elems) {
+                Ok(reps) => pipelined_reports += reps.len(),
+                Err(e) => failures.push(format!(
+                    "pipelined {} p={p} m={m} chunk={chunk_elems}: [{}] {e}",
+                    alg.name(),
+                    e.code()
+                )),
+            }
+        }
+    }
+
     // Phase 2: the mutation harness — prove the verifier bites. Every
     // injected corruption must surface as one of its class's named codes.
     let mut injected = 0usize;
@@ -1203,11 +1256,15 @@ fn cmd_audit(cfg: &Config) -> Result<()> {
         commut.iter().filter(|(_, &b)| b).map(|(k, _)| k.clone()).collect();
     let mut t = Table::new(
         "static audit",
-        &["(alg,p) pairs", "partitions/pair", "mutations injected", "caught", "failures"],
+        &[
+            "(alg,p) pairs", "partitions/pair", "chunk plans", "mutations injected", "caught",
+            "failures",
+        ],
     );
     t.row(&[
         pairs.to_string(),
         "4".to_string(),
+        pipelined_reports.to_string(),
         injected.to_string(),
         caught.to_string(),
         failures.len().to_string(),
@@ -1232,6 +1289,7 @@ fn cmd_audit(cfg: &Config) -> Result<()> {
         obj.insert("max_p".to_string(), Json::Num(max_p as f64));
         obj.insert("pairs_checked".to_string(), Json::Num(pairs as f64));
         obj.insert("partitions_per_pair".to_string(), Json::Num(4.0));
+        obj.insert("pipelined_chunk_plans".to_string(), Json::Num(pipelined_reports as f64));
         obj.insert(
             "commutativity_required".to_string(),
             Json::Arr(needs_commut.iter().map(|s| Json::Str(s.clone())).collect()),
@@ -1251,14 +1309,22 @@ fn cmd_audit(cfg: &Config) -> Result<()> {
         for f in failures.iter().take(10) {
             eprintln!("audit FAIL: {f}");
         }
-        bail!("audit: {} failure(s) across {pairs} clean pairs + {injected} mutations", failures.len());
+        bail!(
+            "audit: {} failure(s) across {pairs} clean pairs + {pipelined_reports} chunk plans \
+             + {injected} mutations",
+            failures.len()
+        );
+    }
+    if pipelined_reports == 0 {
+        bail!("audit: the pipelined chunked-plan sweep audited nothing — hard gate");
     }
     if injected == 0 || caught != injected {
         bail!("audit: mutation harness caught {caught}/{injected} — must be 100% of a non-empty set");
     }
     println!(
-        "audit: OK — {pairs} (algorithm, p) pairs × 4 partition shapes verified \
-         (p ≤ {max_p}), {caught}/{injected} injected corruptions caught with named diagnostics"
+        "audit: OK — {pairs} (algorithm, p) pairs × 4 partition shapes + {pipelined_reports} \
+         pipelined chunk plans verified (p ≤ {max_p}), {caught}/{injected} injected corruptions \
+         caught with named diagnostics"
     );
     Ok(())
 }

@@ -76,10 +76,11 @@
 //! for every schedule generator in `rust/tests/dtype_oracles.rs`).
 
 use std::ops::Range;
+use std::sync::Arc;
 
 use crate::datatypes::{BlockPartition, Elem};
 use crate::ops::ReduceOp;
-use crate::schedule::{RecvAction, Schedule};
+use crate::schedule::{Plan, RecvAction, Schedule};
 use crate::transport::{Counters, Payload, SendSlices, Tag, Transport, TransportError};
 
 /// Read-only view of `base[r]`.
@@ -340,9 +341,13 @@ impl OpCursor {
         // over the whole slice) is aliasing UB even if the bytes written
         // are disjoint. Raw-derived disjoint subslices make this rank's
         // accesses per-element non-overlapping with the peer's reads,
-        // which is sound. The engine's interleaved cursors each own a
+        // which is sound. The engine's interleaved *ops* each own a
         // distinct working-vector allocation, so one op's writes can
-        // never alias another op's published region either.
+        // never alias another op's published region; within a single
+        // pipelined op the per-chunk views are themselves raw-derived
+        // disjoint subslices of the one allocation (see
+        // [`PipelinedCursor`]), so chunk epochs cannot alias each other
+        // either.
         let base = buf.as_mut_ptr();
         loop {
             if self.round >= schedule.rounds.len() {
@@ -520,6 +525,228 @@ impl OpCursor {
                     self.wait = Wait::Send;
                 }
             }
+        }
+    }
+}
+
+/// Default bound on how many chunk epochs a [`PipelinedCursor`] advances
+/// concurrently. One suffices for correctness; two is the minimum that
+/// overlaps chunk k+1's sends with chunk k's combines; a little headroom
+/// beyond that rides out per-chunk jitter without flooding the transport
+/// with outstanding publishes.
+pub const DEFAULT_PIPELINE_WINDOW: usize = 4;
+
+/// Chunk geometry of the pipelined execution tier: split `m` elements
+/// into chunks of `chunk_elems`, folding any remainder into the final
+/// chunk (so at most **two** distinct chunk lengths — and thus at most
+/// two distinct chunk partitions/plans — ever exist). Degenerate
+/// requests (`chunk_elems == 0`, or `m < 2·chunk_elems` so no second
+/// chunk would fit) return the single-chunk geometry `[m]`, which the
+/// dispatcher treats as "run plain".
+pub fn pipeline_chunk_sizes(m: usize, chunk_elems: usize) -> Vec<usize> {
+    if chunk_elems == 0 || m < 2 * chunk_elems {
+        return vec![m];
+    }
+    let n = m / chunk_elems;
+    let mut sizes = vec![chunk_elems; n];
+    sizes[n - 1] += m % chunk_elems;
+    sizes
+}
+
+/// One chunk's slot in a [`PipelinedCursor`]: its schedule driver, the
+/// element offset of its working slice within the op buffer, and the
+/// (cache-built, statically audited) plan for its chunk partition.
+#[derive(Debug, Clone)]
+struct ChunkCursor {
+    cursor: OpCursor,
+    offset: usize,
+    plan: Arc<Plan>,
+    done: bool,
+}
+
+/// Pipelined (chunked) driver for one large-message collective — the
+/// bandwidth end of the engine's size-adaptive dispatch (fuse small,
+/// plain medium, pipeline large).
+///
+/// The working vector is split by [`pipeline_chunk_sizes`]; every chunk
+/// runs the *same* circulant schedule as its own wire epoch within the
+/// op's single `op_tag`: chunk `k` tags its rounds
+/// `Tag { op: op_tag, round: k·R + j }` (R = rounds per chunk), so chunk
+/// epochs never cross-match on the wire yet `finish_op`/`forget_op`/
+/// `op_has_pending_publish` — everything the engine's abort and cleanup
+/// paths key on — quiesce the whole op at once. Chunk cursors are
+/// advanced non-blockingly over a sliding in-flight window, so chunk
+/// k+1's sends overlap chunk k's combines; per chunk round the usual
+/// rendezvous verdict applies, so backends without rendezvous caps
+/// simply run every chunk on the pooled copy tier.
+///
+/// Engine-facing surface mirrors [`OpCursor`]: a monotone aggregate
+/// [`progress`](Self::progress) stamp (sum of chunk stamps) for the
+/// liveness watchdog, [`first_needed_down_peer`](Self::first_needed_down_peer)
+/// over the unfinished chunks for PeerDown fast-fail,
+/// [`timeout_error`](Self::timeout_error) from the oldest unfinished
+/// chunk, and a single-epoch [`abort`](Self::abort).
+///
+/// # Safety contract
+///
+/// Same buffer contract as [`OpCursor`] (same allocation across steps
+/// while any publish may be outstanding), over the *whole* op buffer:
+/// chunk working slices are carved from the buffer's raw base pointer as
+/// disjoint subslices, never by re-borrowing the full slice, so one
+/// chunk's writes cannot alias another chunk's published region.
+#[derive(Debug, Clone)]
+pub struct PipelinedCursor {
+    op_tag: u64,
+    chunks: Vec<ChunkCursor>,
+    /// Sliding in-flight bound: only chunks `[oldest, oldest+window)`
+    /// advance per step pass. Deadlock-free for any `window ≥ 1`: the
+    /// globally oldest unfinished chunk is, at every rank, either
+    /// finished (all its sends/acks already issued) or within that
+    /// rank's window, so it can always advance.
+    window: usize,
+    /// Index of the first unfinished chunk.
+    oldest: usize,
+    /// Total elements across all chunks (the op buffer length).
+    total: usize,
+}
+
+impl PipelinedCursor {
+    /// A pipelined driver for one op epoch. `chunks` is the geometry:
+    /// `(element offset, chunk plan)` per chunk, contiguous and in
+    /// order, with every plan sharing one schedule shape (chunk plans
+    /// differ only in partition). `window` bounds in-flight chunks
+    /// ([`DEFAULT_PIPELINE_WINDOW`]).
+    pub fn new(op_tag: u64, chunks: Vec<(usize, Arc<Plan>)>, window: usize) -> Self {
+        assert!(!chunks.is_empty(), "pipelined op needs at least one chunk");
+        let rounds_per_chunk = chunks[0].1.schedule.rounds.len();
+        let mut total = 0usize;
+        let chunks: Vec<ChunkCursor> = chunks
+            .into_iter()
+            .enumerate()
+            .map(|(k, (offset, plan))| {
+                debug_assert_eq!(offset, total, "chunk {k} offset not contiguous");
+                debug_assert_eq!(
+                    plan.schedule.rounds.len(),
+                    rounds_per_chunk,
+                    "chunk {k} schedule shape diverges"
+                );
+                total += plan.part.total();
+                ChunkCursor {
+                    cursor: OpCursor::new(op_tag, (k * rounds_per_chunk) as u64),
+                    offset,
+                    plan,
+                    done: false,
+                }
+            })
+            .collect();
+        Self { op_tag, chunks, window: window.max(1), oldest: 0, total }
+    }
+
+    /// The operation epoch every chunk tags its traffic with.
+    pub fn op_tag(&self) -> u64 {
+        self.op_tag
+    }
+
+    /// Number of chunk epochs this op runs.
+    pub fn num_chunks(&self) -> usize {
+        self.chunks.len()
+    }
+
+    /// Aggregate monotone progress stamp — the sum of the chunk cursors'
+    /// stamps, so any chunk advancing registers with the engine watchdog.
+    pub fn progress(&self) -> u64 {
+        self.chunks.iter().map(|c| c.cursor.progress()).sum()
+    }
+
+    /// [`OpCursor::first_needed_down_peer`] over every unfinished chunk.
+    pub fn first_needed_down_peer(&self, rank: usize, up: &[bool]) -> Option<usize> {
+        self.chunks.iter().skip(self.oldest).filter(|c| !c.done).find_map(|c| {
+            c.cursor.first_needed_down_peer(&c.plan.schedule, rank, up)
+        })
+    }
+
+    /// The watchdog error for a stalled pipelined op — reported from the
+    /// oldest unfinished chunk (the one whose wait gates the pipeline).
+    pub fn timeout_error(&self, rank: usize) -> CollectiveError {
+        let c = self
+            .chunks
+            .iter()
+            .find(|c| !c.done)
+            .unwrap_or_else(|| self.chunks.last().expect("pipelined op has at least one chunk"));
+        c.cursor.timeout_error(&c.plan.schedule, rank)
+    }
+
+    /// Quiesce every chunk's outstanding publishes (one epoch, one call).
+    pub fn abort<T: Elem, C: Transport<T>>(&mut self, ep: &mut C) {
+        let _ = ep.finish_op(self.op_tag);
+    }
+
+    /// Advance the pipeline as far as possible. Non-blocking mode
+    /// interleaves the in-flight window's chunk cursors and returns
+    /// [`Progress::Pending`] once none of them can complete; blocking
+    /// mode runs the chunks to completion in order (no overlap — the
+    /// engine's non-blocking worker loop is where pipelining pays).
+    pub fn step<T: Elem, C: Transport<T>>(
+        &mut self,
+        ep: &mut C,
+        op: &dyn ReduceOp<T>,
+        buf: &mut [T],
+        blocking: bool,
+    ) -> Result<Progress, CollectiveError> {
+        let r = ep.rank();
+        if buf.len() != self.total {
+            return Err(CollectiveError::BadBuffer { rank: r, got: buf.len(), want: self.total });
+        }
+        // Chunk views are carved from the raw base pointer (see the
+        // aliasing note in `step_with_tiers`): re-borrowing `buf` per
+        // chunk would transiently form a `&mut` spanning regions other
+        // chunks may have published to rendezvous peers.
+        let base = buf.as_mut_ptr();
+        loop {
+            while self.oldest < self.chunks.len() && self.chunks[self.oldest].done {
+                self.oldest += 1;
+            }
+            if self.oldest == self.chunks.len() {
+                return Ok(Progress::Done);
+            }
+            let horizon = if blocking {
+                self.chunks.len()
+            } else {
+                (self.oldest + self.window).min(self.chunks.len())
+            };
+            let mut completed = false;
+            for k in self.oldest..horizon {
+                let c = &mut self.chunks[k];
+                if c.done {
+                    continue;
+                }
+                let range = c.offset..c.offset + c.plan.part.total();
+                // SAFETY: chunk ranges are contiguous, disjoint and in
+                // bounds of `buf` (checked against `total` above); no
+                // other chunk's view overlaps this range, and the inner
+                // step upholds the per-chunk publish discipline.
+                let chunk_buf = unsafe { view_mut(base, &range) };
+                match c.cursor.step_with_tiers(
+                    ep,
+                    &c.plan.schedule,
+                    &c.plan.part,
+                    op,
+                    chunk_buf,
+                    blocking,
+                    Some(&c.plan.tiers),
+                )? {
+                    Progress::Done => {
+                        c.done = true;
+                        completed = true;
+                    }
+                    Progress::Pending => {}
+                }
+            }
+            if !completed {
+                return Ok(Progress::Pending);
+            }
+            // A chunk finished, so the window slides: poll the newly
+            // admitted chunks before yielding back to the caller.
         }
     }
 }
@@ -760,6 +987,79 @@ mod tests {
             assert_eq!(buf, &vec![3.0f32; 8]);
         }
         assert!(cursors[0].progress() > 0 && cursors[0].op_tag() == 7);
+    }
+
+    /// Build the `(offset, plan)` chunk specs for a pipelined op over a
+    /// shared schedule, partitioning each chunk regularly.
+    fn chunk_specs(sched: &Schedule, m: usize, chunk: usize) -> Vec<(usize, Arc<Plan>)> {
+        let mut offset = 0usize;
+        pipeline_chunk_sizes(m, chunk)
+            .into_iter()
+            .map(|len| {
+                let spec = (
+                    offset,
+                    Arc::new(Plan::new(
+                        sched.clone(),
+                        BlockPartition::regular(sched.p, len),
+                    )),
+                );
+                offset += len;
+                spec
+            })
+            .collect()
+    }
+
+    #[test]
+    fn pipelined_cursor_interleaves_chunks_on_one_thread() {
+        // The pipelined analogue of the cursor interleave test: drive
+        // both ranks of a chunked p=2 allreduce from one thread with
+        // non-blocking pipelined cursors. With window 2, chunk k+1's
+        // sends must interleave with chunk k's combines and the whole
+        // pipeline must converge without any call parking.
+        let p = 2;
+        let m = 35; // not divisible by the chunk: remainder folds into the last chunk
+        let chunk = 8;
+        let skips = SkipScheme::HalvingUp.skips(p).unwrap();
+        let sched = allreduce_schedule(p, &skips);
+        assert_eq!(pipeline_chunk_sizes(m, chunk), vec![8, 8, 8, 11]);
+        let specs = chunk_specs(&sched, m, chunk);
+        let mut eps = crate::transport::network(p);
+        let mut bufs = [vec![1.0f32; m], vec![2.0f32; m]];
+        let mut cursors = [
+            PipelinedCursor::new(9, specs.clone(), 2),
+            PipelinedCursor::new(9, specs, 2),
+        ];
+        assert_eq!(cursors[0].num_chunks(), 4);
+        let mut done = [false, false];
+        let mut polls = 0;
+        while !(done[0] && done[1]) {
+            for r in 0..p {
+                if done[r] {
+                    continue;
+                }
+                match cursors[r].step(&mut eps[r], &SumOp, &mut bufs[r], false).unwrap() {
+                    Progress::Done => done[r] = true,
+                    Progress::Pending => {}
+                }
+            }
+            polls += 1;
+            assert!(polls < 100_000, "pipelined cursors stopped making progress");
+        }
+        for buf in &bufs {
+            assert_eq!(buf, &vec![3.0f32; m]);
+        }
+        assert!(cursors[0].progress() > 0 && cursors[0].op_tag() == 9);
+    }
+
+    #[test]
+    fn pipeline_chunk_geometry() {
+        assert_eq!(pipeline_chunk_sizes(32, 8), vec![8, 8, 8, 8]);
+        assert_eq!(pipeline_chunk_sizes(35, 8), vec![8, 8, 8, 11], "remainder folds into last");
+        assert_eq!(pipeline_chunk_sizes(15, 8), vec![15], "no second chunk fits: plain");
+        assert_eq!(pipeline_chunk_sizes(8, 8), vec![8], "chunk == m: plain");
+        assert_eq!(pipeline_chunk_sizes(4, 8), vec![4], "chunk > m: plain");
+        assert_eq!(pipeline_chunk_sizes(0, 8), vec![0], "zero-length op: plain");
+        assert_eq!(pipeline_chunk_sizes(64, 0), vec![64], "chunking disabled: plain");
     }
 
     #[test]

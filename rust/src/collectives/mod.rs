@@ -9,9 +9,10 @@ pub mod generators;
 pub mod hierarchical;
 
 pub use exec::{
-    execute_rank, run_schedule_threads, run_schedule_threads_tiered,
+    execute_rank, pipeline_chunk_sizes, run_schedule_threads, run_schedule_threads_tiered,
     run_schedule_threads_tiered_typed, run_schedule_threads_typed,
-    run_schedule_threads_with_counters, CollectiveError, OpCursor, Progress,
+    run_schedule_threads_with_counters, CollectiveError, OpCursor, PipelinedCursor, Progress,
+    DEFAULT_PIPELINE_WINDOW,
 };
 pub use generators::{
     allgather_schedule, allreduce_schedule, reduce_scatter_schedule, try_allgather_schedule,

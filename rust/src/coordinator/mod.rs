@@ -8,5 +8,5 @@ pub mod train;
 
 pub use communicator::{Communicator, Launcher, OpBackend};
 pub use metrics::RunMetrics;
-pub use selector::select_allreduce;
+pub use selector::{select_allreduce, select_execution_mode, ExecMode};
 pub use train::{train, TrainConfig, TrainReport};

@@ -89,8 +89,8 @@ use crate::ops::ReduceOp;
 use crate::schedule::{Plan, PlanCache, PlanKey};
 
 use super::{
-    CollectiveKind, DoneRx, DoneTx, EngineError, InflightCounter, InflightTags, OpShared, RankOp,
-    StepCounter, WorkerCmd,
+    CollectiveKind, DoneRx, DoneTx, EngineError, InflightCounter, InflightTags, OpShared,
+    PipelinedRankOp, RankOp, StepCounter, WorkerCmd,
 };
 
 /// Default fusion byte budget: 64 KiB of member payload per batch. Small
@@ -103,6 +103,21 @@ pub const DEFAULT_FUSION_MAX_BYTES: usize = 64 * 1024;
 /// completed engine steps for more members. Override with
 /// `CCOLL_FUSION_WINDOW` / `engine.fusion.window`; 0 disables fusion.
 pub const DEFAULT_FUSION_WINDOW: u64 = 8;
+
+/// Default pipelining threshold: allreduces of at least 1 MiB payload run
+/// through the chunked large-message tier. Below it the per-chunk round
+/// latency `α·(n_c − 1)` is not paid back by the hidden combine time (see
+/// [`crate::sim::closed_form::pipelined_circulant_allreduce`]). Override
+/// with `CCOLL_PIPELINE_MIN_BYTES` / `engine.pipeline.min_bytes`; 0
+/// disables the tier.
+pub const DEFAULT_PIPELINE_MIN_BYTES: usize = 1 << 20;
+
+/// Default pipelined chunk size: 256 KiB per chunk epoch. Large enough
+/// that each chunk's wire time dominates its round latency, small enough
+/// that several chunks are in flight for any payload over the 1 MiB
+/// threshold. Override with `CCOLL_PIPELINE_CHUNK_BYTES` /
+/// `engine.pipeline.chunk_bytes`; 0 disables the tier.
+pub const DEFAULT_PIPELINE_CHUNK_BYTES: usize = 1 << 18;
 
 /// Why a pending batch was flushed (each maps to a [`FusionStats`]
 /// counter).
@@ -147,6 +162,8 @@ pub struct FusionStats {
     pub flush_incompatible: u64,
     /// Forced flushes (handle wait, backpressure, shutdown).
     pub flush_forced: u64,
+    /// Allreduces dispatched through the pipelined large-message tier.
+    pub pipelined_ops: u64,
 }
 
 impl FusionStats {
@@ -261,6 +278,11 @@ pub(crate) struct Fuser<T: Elem, C = crate::transport::Endpoint<T>> {
     enabled: bool,
     max_bytes: usize,
     window: u64,
+    /// Allreduce payloads of at least this many bytes dispatch through
+    /// the pipelined tier (0 disables it).
+    pipeline_min_bytes: usize,
+    /// Chunk-epoch size for the pipelined tier, in bytes (0 disables it).
+    pipeline_chunk_bytes: usize,
     pending: Option<PendingBatch<T>>,
     stats: FusionStats,
     pub(super) shut_down: bool,
@@ -279,6 +301,8 @@ impl<T: Elem, C> Fuser<T, C> {
         enabled: bool,
         max_bytes: usize,
         window: u64,
+        pipeline_min_bytes: usize,
+        pipeline_chunk_bytes: usize,
     ) -> Self {
         Self {
             p,
@@ -294,6 +318,8 @@ impl<T: Elem, C> Fuser<T, C> {
             enabled: enabled && window > 0,
             max_bytes,
             window,
+            pipeline_min_bytes,
+            pipeline_chunk_bytes,
             pending: None,
             stats: FusionStats::default(),
             shut_down: false,
@@ -368,6 +394,24 @@ impl<T: Elem, C> Fuser<T, C> {
                 return Ok((op_id, rx));
             }
         };
+        // Size-adaptive dispatch, largest tier first: allreduces over the
+        // pipeline threshold run chunked (the bandwidth end of the size
+        // story), and only payloads below it fall through to the fusion /
+        // plain decision. Reduce-scatters never pipeline: their output
+        // layout is defined by the caller's partition, which a chunked
+        // run would scatter.
+        if allreduce && self.pipeline_min_bytes > 0 && bytes >= self.pipeline_min_bytes {
+            let chunk_elems = self.pipeline_chunk_bytes / std::mem::size_of::<T>();
+            // m < 2 chunks degenerates to a plain run — fall through.
+            if chunk_elems > 0 && m / chunk_elems >= 2 {
+                // A pending batch cannot hold this op; flush it so it is
+                // never starved behind large traffic.
+                self.flush(FlushReason::Budget);
+                self.stats.pipelined_ops += 1;
+                self.dispatch_pipelined(op_id, op, inputs, m, chunk_elems, tx, shared)?;
+                return Ok((op_id, rx));
+            }
+        }
         if !self.enabled || bytes > self.max_bytes {
             if self.enabled {
                 // An over-budget same-kind arrival is a budget-driven
@@ -521,6 +565,61 @@ impl<T: Elem, C> Fuser<T, C> {
                 return;
             }
         }
+    }
+
+    /// The pipelined fan-out: split the working vector into chunk epochs
+    /// ([`crate::collectives::pipeline_chunk_sizes`]), build one plan per
+    /// *distinct* chunk length — at most two, since the remainder folds
+    /// into the last chunk — and hand every worker a
+    /// [`PipelinedRankOp`] under one op epoch. Dead-worker rollback
+    /// mirrors [`Fuser::dispatch_single`].
+    fn dispatch_pipelined(
+        &mut self,
+        op_tag: u64,
+        op: Arc<dyn ReduceOp<T>>,
+        inputs: Vec<Vec<T>>,
+        m: usize,
+        chunk_elems: usize,
+        done: DoneTx<T>,
+        shared: Arc<OpShared>,
+    ) -> Result<(), EngineError> {
+        let p = self.p;
+        let sizes = crate::collectives::pipeline_chunk_sizes(m, chunk_elems);
+        let mut chunks: Vec<(usize, Arc<Plan>)> = Vec::with_capacity(sizes.len());
+        let mut offset = 0usize;
+        let mut last: Option<(usize, Arc<Plan>)> = None;
+        for len in sizes {
+            let plan = match &last {
+                Some((l, plan)) if *l == len => plan.clone(),
+                _ => {
+                    let part = BlockPartition::regular(p, len);
+                    let (plan, _hit) = self.plan_for(self.vocab.allreduce.clone(), &part, true);
+                    last = Some((len, plan.clone()));
+                    plan
+                }
+            };
+            chunks.push((offset, plan));
+            offset += len;
+        }
+        debug_assert_eq!(offset, m);
+        for (rank, buf) in inputs.into_iter().enumerate() {
+            let cmd = WorkerCmd::Pipelined(PipelinedRankOp {
+                op_tag,
+                chunks: chunks.clone(),
+                op: op.clone(),
+                buf,
+                done: done.clone(),
+                shared: shared.clone(),
+            });
+            if self.txs[rank].send(cmd).is_err() {
+                for r in rank..p {
+                    let _ = done.send((r, Err(CollectiveError::WorkerLost { rank: r })));
+                    shared.note_rank_done();
+                }
+                return Err(EngineError::WorkerGone { rank });
+            }
+        }
+        Ok(())
     }
 
     /// The unfused fan-out (what `CollectiveEngine::submit` always did):

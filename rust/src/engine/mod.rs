@@ -47,7 +47,7 @@
 //! ground, `sleep` for minimum idle CPU. Idle workers (no in-flight op)
 //! always block on the submission channel regardless of policy.
 //!
-//! # The fusion tier
+//! # Size-adaptive dispatch: the fusion and pipelined tiers
 //!
 //! For small repeated collectives the per-round latency dominates; the
 //! engine can coalesce compatible in-flight operations into **one** fused
@@ -55,6 +55,17 @@
 //! flush policy (byte budget + a window of *completed engine steps*),
 //! the block-major pack/scatter layout and the failure semantics live in
 //! [`fusion`] — see that module's docs.
+//!
+//! At the other end of the size axis, large allreduces dispatch to the
+//! **pipelined** tier ([`EngineConfig::pipeline_min_bytes`] /
+//! [`EngineConfig::pipeline_chunk_bytes`]): the working vector is split
+//! into chunks ([`crate::collectives::pipeline_chunk_sizes`]) and each
+//! chunk runs the circulant schedule as its own wire epoch inside the
+//! op's tag space, driven by a [`PipelinedCursor`] that overlaps chunk
+//! k+1's sends with chunk k's combines. The thresholds are grounded in
+//! the closed-form break-even analysis
+//! (`crate::sim::closed_form::pipelined_circulant_allreduce`); mid-sized
+//! ops run the plain one-epoch schedule.
 //!
 //! # When to prefer the engine vs the launcher
 //!
@@ -68,7 +79,10 @@
 
 pub mod fusion;
 
-pub use fusion::{FusionStats, DEFAULT_FUSION_MAX_BYTES, DEFAULT_FUSION_WINDOW};
+pub use fusion::{
+    FusionStats, DEFAULT_FUSION_MAX_BYTES, DEFAULT_FUSION_WINDOW, DEFAULT_PIPELINE_CHUNK_BYTES,
+    DEFAULT_PIPELINE_MIN_BYTES,
+};
 
 use std::any::Any;
 use std::collections::BTreeSet;
@@ -78,7 +92,9 @@ use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
-use crate::collectives::exec::{CollectiveError, OpCursor, Progress};
+use crate::collectives::exec::{
+    CollectiveError, OpCursor, PipelinedCursor, Progress, DEFAULT_PIPELINE_WINDOW,
+};
 use crate::collectives::CirculantPlans;
 use crate::coordinator::OpBackend;
 use crate::datatypes::Elem;
@@ -190,6 +206,15 @@ pub struct EngineConfig {
     /// Default from `CCOLL_RETRY_BASE_MS`; config key
     /// `engine.retry.base_ms`.
     pub retry_base_ms: u64,
+    /// Payload byte size at which an allreduce dispatches to the
+    /// pipelined (chunked) tier; 0 disables pipelining. Default from
+    /// `CCOLL_PIPELINE_MIN_BYTES`; config key
+    /// `engine.pipeline.min_bytes`.
+    pub pipeline_min_bytes: usize,
+    /// Chunk byte size of the pipelined tier; 0 disables pipelining.
+    /// Default from `CCOLL_PIPELINE_CHUNK_BYTES`; config key
+    /// `engine.pipeline.chunk_bytes`.
+    pub pipeline_chunk_bytes: usize,
 }
 
 impl EngineConfig {
@@ -210,6 +235,8 @@ impl EngineConfig {
             backpressure_timeout: Duration::from_secs(knobs.engine_backpressure_timeout_secs),
             retry_attempts: knobs.retry_attempts,
             retry_base_ms: knobs.retry_base_ms,
+            pipeline_min_bytes: knobs.pipeline_min_bytes,
+            pipeline_chunk_bytes: knobs.pipeline_chunk_bytes,
         }
     }
 
@@ -271,6 +298,16 @@ impl EngineConfig {
     pub fn retry(mut self, attempts: usize, base_ms: u64) -> Self {
         self.retry_attempts = attempts;
         self.retry_base_ms = base_ms;
+        self
+    }
+
+    pub fn pipeline_min_bytes(mut self, bytes: usize) -> Self {
+        self.pipeline_min_bytes = bytes;
+        self
+    }
+
+    pub fn pipeline_chunk_bytes(mut self, bytes: usize) -> Self {
+        self.pipeline_chunk_bytes = bytes;
         self
     }
 }
@@ -424,6 +461,19 @@ pub(crate) struct RankOp<T: Elem> {
     pub(crate) shared: Arc<OpShared>,
 }
 
+/// One rank's share of a pipelined (chunked large-message) operation:
+/// the chunk geometry travels as `(element offset, chunk plan)` pairs —
+/// at most two distinct plans (full chunk + fold-in remainder), both
+/// from the engine's [`PlanCache`] and therefore statically audited.
+pub(crate) struct PipelinedRankOp<T: Elem> {
+    pub(crate) op_tag: u64,
+    pub(crate) chunks: Vec<(usize, Arc<Plan>)>,
+    pub(crate) op: Arc<dyn ReduceOp<T>>,
+    pub(crate) buf: Vec<T>,
+    pub(crate) done: DoneTx<T>,
+    pub(crate) shared: Arc<OpShared>,
+}
+
 /// Type-erased one-shot closure a worker runs inline on its transport —
 /// the substrate [`crate::coordinator::Launcher`] is built on. A job may
 /// consume the transport (the launcher's communicator closures do), so
@@ -438,6 +488,7 @@ pub(crate) struct Job<C> {
 
 pub(crate) enum WorkerCmd<T: Elem, C = Endpoint<T>> {
     Op(RankOp<T>),
+    Pipelined(PipelinedRankOp<T>),
     Fused(FusedRankOp<T>),
     Job(Job<C>),
     Shutdown,
@@ -510,12 +561,82 @@ enum ActiveKind<T: Elem> {
     Fused { allreduce: bool, layout: Arc<FusedLayout>, shares: Vec<FusedShare<T>> },
 }
 
+/// The schedule driver of one in-flight op: a single [`OpCursor`] over
+/// one plan (single and fused ops), or a [`PipelinedCursor`] over the
+/// chunk plans of a pipelined large-message op. Both expose the same
+/// engine-facing surface — monotone progress stamp, down-peer scan,
+/// watchdog error, single-epoch abort — so the worker loop is
+/// tier-agnostic.
+enum Driver {
+    Plain { cursor: OpCursor, plan: Arc<Plan> },
+    Pipelined(PipelinedCursor),
+}
+
+impl Driver {
+    fn op_tag(&self) -> u64 {
+        match self {
+            Driver::Plain { cursor, .. } => cursor.op_tag(),
+            Driver::Pipelined(c) => c.op_tag(),
+        }
+    }
+
+    fn progress(&self) -> u64 {
+        match self {
+            Driver::Plain { cursor, .. } => cursor.progress(),
+            Driver::Pipelined(c) => c.progress(),
+        }
+    }
+
+    fn first_needed_down_peer(&self, rank: usize, up: &[bool]) -> Option<usize> {
+        match self {
+            Driver::Plain { cursor, plan } => {
+                cursor.first_needed_down_peer(&plan.schedule, rank, up)
+            }
+            Driver::Pipelined(c) => c.first_needed_down_peer(rank, up),
+        }
+    }
+
+    fn timeout_error(&self, rank: usize) -> CollectiveError {
+        match self {
+            Driver::Plain { cursor, plan } => cursor.timeout_error(&plan.schedule, rank),
+            Driver::Pipelined(c) => c.timeout_error(rank),
+        }
+    }
+
+    fn abort<T: Elem, C: Transport<T>>(&mut self, ep: &mut C) {
+        match self {
+            Driver::Plain { cursor, .. } => cursor.abort(ep),
+            Driver::Pipelined(c) => c.abort(ep),
+        }
+    }
+
+    /// One non-blocking poll pass of this op's schedule driver.
+    fn step<T: Elem, C: Transport<T>>(
+        &mut self,
+        ep: &mut C,
+        op: &dyn ReduceOp<T>,
+        buf: &mut [T],
+    ) -> Result<Progress, CollectiveError> {
+        match self {
+            Driver::Plain { cursor, plan } => cursor.step_with_tiers(
+                ep,
+                &plan.schedule,
+                &plan.part,
+                op,
+                buf,
+                false,
+                Some(&plan.tiers),
+            ),
+            Driver::Pipelined(c) => c.step(ep, op, buf, false),
+        }
+    }
+}
+
 /// One in-flight operation in a worker's table (`buf` is the working
 /// vector: the member's own for a single op, the packed segment buffer
 /// for a fused run).
 struct ActiveOp<T: Elem> {
-    cursor: OpCursor,
-    plan: Arc<Plan>,
+    driver: Driver,
     op: Arc<dyn ReduceOp<T>>,
     buf: Vec<T>,
     kind: ActiveKind<T>,
@@ -558,7 +679,7 @@ impl<T: Elem> ActiveOp<T> {
     /// error with the fusion tag (batch epoch + member count) in its
     /// diagnostic — per-op error isolation with a traceable cause.
     fn finish_err(&mut self, rank: usize, err: CollectiveError) {
-        let fused_op = self.cursor.op_tag();
+        let fused_op = self.driver.op_tag();
         match &mut self.kind {
             ActiveKind::Single { done, shared } => {
                 let _ = done.send((rank, Err(err)));
@@ -685,6 +806,8 @@ impl<T: Elem, C> CollectiveEngine<T, C> {
             cfg.fusion,
             cfg.fusion_max_bytes,
             cfg.fusion_window,
+            cfg.pipeline_min_bytes,
+            cfg.pipeline_chunk_bytes,
         )));
         Self {
             p: cfg.p,
@@ -998,28 +1121,18 @@ fn worker_loop<T: Elem, C: Transport<T>>(
         let any_down = status.iter().any(|&up| !up);
         active.retain_mut(|a| {
             if any_down {
-                if let Some(peer) =
-                    a.cursor.first_needed_down_peer(&a.plan.schedule, rank, &status)
-                {
+                if let Some(peer) = a.driver.first_needed_down_peer(rank, &status) {
                     let detail = ep
                         .peer_down(peer)
                         .unwrap_or_else(|| "peer reported down".to_string());
-                    a.cursor.abort(&mut ep);
-                    cleanup_failed_op(&mut ep, &mut a.buf, a.cursor.op_tag());
+                    a.driver.abort(&mut ep);
+                    cleanup_failed_op(&mut ep, &mut a.buf, a.driver.op_tag());
                     a.finish_err(rank, CollectiveError::RankDown { rank, peer, detail });
                     made_progress = true;
                     return false;
                 }
             }
-            match a.cursor.step_with_tiers(
-                &mut ep,
-                &a.plan.schedule,
-                &a.plan.part,
-                a.op.as_ref(),
-                &mut a.buf,
-                false,
-                Some(&a.plan.tiers),
-            ) {
+            match a.driver.step(&mut ep, a.op.as_ref(), &mut a.buf) {
                 Ok(Progress::Done) => {
                     made_progress = true;
                     if let Some(segment) = a.finish_ok(rank) {
@@ -1028,7 +1141,7 @@ fn worker_loop<T: Elem, C: Transport<T>>(
                     false
                 }
                 Ok(Progress::Pending) => {
-                    let progress = a.cursor.progress();
+                    let progress = a.driver.progress();
                     if progress != a.last_progress {
                         a.last_progress = progress;
                         a.deadline = now + timeout;
@@ -1037,9 +1150,9 @@ fn worker_loop<T: Elem, C: Transport<T>>(
                     } else if now >= a.deadline {
                         // Liveness watchdog: the blocking executor's
                         // recv/ack timeouts, ported to the polled world.
-                        let err = a.cursor.timeout_error(&a.plan.schedule, rank);
-                        a.cursor.abort(&mut ep);
-                        cleanup_failed_op(&mut ep, &mut a.buf, a.cursor.op_tag());
+                        let err = a.driver.timeout_error(rank);
+                        a.driver.abort(&mut ep);
+                        cleanup_failed_op(&mut ep, &mut a.buf, a.driver.op_tag());
                         a.finish_err(rank, err);
                         made_progress = true;
                         false
@@ -1051,7 +1164,7 @@ fn worker_loop<T: Elem, C: Transport<T>>(
                     // step() already quiesced this op's publishes
                     // (bounded by ep.timeout); if that quiesce itself
                     // timed out the buffer is not safe to free.
-                    cleanup_failed_op(&mut ep, &mut a.buf, a.cursor.op_tag());
+                    cleanup_failed_op(&mut ep, &mut a.buf, a.driver.op_tag());
                     made_progress = true;
                     // A send/recv that hit a positively-dead peer is the
                     // same failure class as the bitmap fast-fail above —
@@ -1110,11 +1223,30 @@ fn admit<T: Elem, C: Transport<T>>(
         WorkerCmd::Op(op) => {
             let deadline = Instant::now() + ep.timeout();
             active.push(ActiveOp {
-                cursor: OpCursor::new(op.op_tag, 0),
-                plan: op.plan,
+                driver: Driver::Plain { cursor: OpCursor::new(op.op_tag, 0), plan: op.plan },
                 op: op.op,
                 buf: op.buf,
                 kind: ActiveKind::Single { done: op.done, shared: op.shared },
+                last_progress: 0,
+                deadline,
+            });
+        }
+        WorkerCmd::Pipelined(pl) => {
+            // Large-message tier: one op epoch, the working vector split
+            // into chunks that each run the circulant schedule on their
+            // own round-offset Tags. The sliding window inside
+            // `PipelinedCursor` keeps later chunks' sends overlapping
+            // earlier chunks' combines.
+            let deadline = Instant::now() + ep.timeout();
+            active.push(ActiveOp {
+                driver: Driver::Pipelined(PipelinedCursor::new(
+                    pl.op_tag,
+                    pl.chunks,
+                    DEFAULT_PIPELINE_WINDOW,
+                )),
+                op: pl.op,
+                buf: pl.buf,
+                kind: ActiveKind::Single { done: pl.done, shared: pl.shared },
                 last_progress: 0,
                 deadline,
             });
@@ -1130,8 +1262,7 @@ fn admit<T: Elem, C: Transport<T>>(
             }
             let deadline = Instant::now() + ep.timeout();
             active.push(ActiveOp {
-                cursor: OpCursor::new(f.op_tag, 0),
-                plan: f.plan,
+                driver: Driver::Plain { cursor: OpCursor::new(f.op_tag, 0), plan: f.plan },
                 op: f.op,
                 buf,
                 kind: ActiveKind::Fused {
@@ -1184,6 +1315,34 @@ mod tests {
         for (r, buf) in out.iter().enumerate() {
             assert_eq!(buf, &want, "rank {r}");
         }
+        engine.shutdown();
+    }
+
+    #[test]
+    fn pipelined_dispatch_matches_plain() {
+        // 4096 i64 = 32 KiB with an 8 KiB chunk budget → 4 chunks; the
+        // 1 KiB min-bytes threshold forces the pipelined tier while the
+        // fusion budget (64 KiB default) would otherwise have claimed it,
+        // so this also checks pipeline-vs-fusion precedence.
+        let p = 4;
+        let m = 4096;
+        let inputs = int_inputs(p, m, 21);
+        let want = oracle_sum(&inputs);
+        let mut engine = CollectiveEngine::<i64>::new(
+            EngineConfig::new(p).pipeline_min_bytes(1024).pipeline_chunk_bytes(8192),
+        );
+        let out = engine.submit(OpRequest::allreduce(inputs, "sum")).unwrap().wait().unwrap();
+        for (r, buf) in out.iter().enumerate() {
+            assert_eq!(buf, &want, "rank {r}");
+        }
+        assert_eq!(engine.fusion_stats().pipelined_ops, 1);
+        // Below the min-bytes threshold the same engine falls back to the
+        // small/medium tiers — the pipelined counter must not move.
+        let small = int_inputs(p, 16, 22);
+        let want_small = oracle_sum(&small);
+        let out = engine.submit(OpRequest::allreduce(small, "sum")).unwrap().wait().unwrap();
+        assert_eq!(out[0], want_small);
+        assert_eq!(engine.fusion_stats().pipelined_ops, 1);
         engine.shutdown();
     }
 

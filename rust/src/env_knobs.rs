@@ -28,6 +28,8 @@
 //! | `CCOLL_RETRY_BASE_MS`        | usize  | `10`    | base backoff between send retries, doubling per attempt (`engine.retry.base_ms` overrides per run) |
 //! | `CCOLL_ENGINE_BACKPRESSURE_TIMEOUT` | usize | `90` | seconds `submit` may park on a full engine queue before `BackpressureTimeout` (`engine.backpressure_timeout` overrides per run) |
 //! | `CCOLL_AUDIT_PLANS`          | bool   | `0`     | release-build opt-in for the plan-cache static audit (debug builds always audit) |
+//! | `CCOLL_PIPELINE_MIN_BYTES`   | usize  | 1048576 | payload size at which the engine switches to the pipelined tier (0 disables pipelining; `engine.pipeline.min_bytes` overrides per run) |
+//! | `CCOLL_PIPELINE_CHUNK_BYTES` | usize  | 262144  | chunk size for the pipelined tier (0 disables pipelining; `engine.pipeline.chunk_bytes` overrides per run) |
 //!
 //! Booleans accept `0|1|true|false|yes|no` (empty = unset = default).
 //! Integers accept decimal digits with optional `_` separators. Dtypes
@@ -109,6 +111,20 @@ pub struct EnvKnobs {
     /// `PlanCache` miss even in release builds (`CCOLL_AUDIT_PLANS`).
     /// Debug builds always audit regardless of this knob.
     pub audit_plans: bool,
+    /// Default payload byte size at which the engine dispatches an op to
+    /// the pipelined (chunked) execution tier instead of the plain
+    /// schedule (`CCOLL_PIPELINE_MIN_BYTES`; 0 disables pipelining).
+    /// The default is grounded in the closed-form break-even analysis
+    /// ([`crate::sim::closed_form::pipelined_circulant_allreduce`]).
+    /// Per-engine override: `EngineConfig::pipeline_min_bytes` / config
+    /// key `engine.pipeline.min_bytes`.
+    pub pipeline_min_bytes: usize,
+    /// Default chunk byte size for the pipelined tier
+    /// (`CCOLL_PIPELINE_CHUNK_BYTES`; 0 disables pipelining). Each chunk
+    /// runs the circulant schedule as its own wire epoch inside one op.
+    /// Per-engine override: `EngineConfig::pipeline_chunk_bytes` /
+    /// config key `engine.pipeline.chunk_bytes`.
+    pub pipeline_chunk_bytes: usize,
 }
 
 fn parse_bool(name: &str, raw: Option<&str>, default: bool) -> Result<bool, String> {
@@ -231,6 +247,16 @@ pub fn parse_from(get: impl Fn(&str) -> Option<String>) -> Result<EnvKnobs, Stri
             crate::engine::DEFAULT_BACKPRESSURE_TIMEOUT_SECS as usize,
         )? as u64,
         audit_plans: parse_bool("CCOLL_AUDIT_PLANS", get("CCOLL_AUDIT_PLANS").as_deref(), false)?,
+        pipeline_min_bytes: parse_usize(
+            "CCOLL_PIPELINE_MIN_BYTES",
+            get("CCOLL_PIPELINE_MIN_BYTES").as_deref(),
+            crate::engine::DEFAULT_PIPELINE_MIN_BYTES,
+        )?,
+        pipeline_chunk_bytes: parse_usize(
+            "CCOLL_PIPELINE_CHUNK_BYTES",
+            get("CCOLL_PIPELINE_CHUNK_BYTES").as_deref(),
+            crate::engine::DEFAULT_PIPELINE_CHUNK_BYTES,
+        )?,
     })
 }
 
@@ -277,6 +303,27 @@ mod tests {
             crate::engine::DEFAULT_BACKPRESSURE_TIMEOUT_SECS
         );
         assert!(!k.audit_plans, "release-build plan audits are opt-in");
+        assert_eq!(k.pipeline_min_bytes, crate::engine::DEFAULT_PIPELINE_MIN_BYTES);
+        assert_eq!(k.pipeline_chunk_bytes, crate::engine::DEFAULT_PIPELINE_CHUNK_BYTES);
+    }
+
+    #[test]
+    fn pipeline_knobs_parse_and_reject_loudly() {
+        let k = with(&[
+            ("CCOLL_PIPELINE_MIN_BYTES", "4_194_304"),
+            ("CCOLL_PIPELINE_CHUNK_BYTES", "65536"),
+        ])
+        .unwrap();
+        assert_eq!(k.pipeline_min_bytes, 4_194_304);
+        assert_eq!(k.pipeline_chunk_bytes, 65_536);
+        let k = with(&[("CCOLL_PIPELINE_MIN_BYTES", "0")]).unwrap();
+        assert_eq!(k.pipeline_min_bytes, 0, "0 must parse (it disables pipelining)");
+        let k = with(&[("CCOLL_PIPELINE_CHUNK_BYTES", "0")]).unwrap();
+        assert_eq!(k.pipeline_chunk_bytes, 0, "0 must parse (it disables pipelining)");
+        let err = with(&[("CCOLL_PIPELINE_MIN_BYTES", "huge")]).unwrap_err();
+        assert!(err.contains("CCOLL_PIPELINE_MIN_BYTES") && err.contains("huge"), "{err}");
+        let err = with(&[("CCOLL_PIPELINE_CHUNK_BYTES", "-7")]).unwrap_err();
+        assert!(err.contains("CCOLL_PIPELINE_CHUNK_BYTES") && err.contains("non-negative"), "{err}");
     }
 
     #[test]

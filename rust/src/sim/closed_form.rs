@@ -125,6 +125,63 @@ pub fn pipelined_binary_tree_allreduce(c: &CostModel, p: usize, m: usize) -> f64
     best
 }
 
+/// Number of chunk epochs the engine's pipelined tier would use for an
+/// `m`-element vector with `chunk_elems`-element chunks — mirrors
+/// `pipeline_chunk_sizes` in `collectives::exec` (the remainder folds
+/// into the last chunk; fewer than two whole chunks degenerates to one
+/// plain run).
+pub fn pipeline_num_chunks(m: usize, chunk_elems: usize) -> usize {
+    if chunk_elems == 0 || m < 2 * chunk_elems {
+        1
+    } else {
+        m / chunk_elems
+    }
+}
+
+/// The engine's pipelined circulant allreduce: `n_c` chunks, each running
+/// Algorithm 2 as its own wire epoch, with chunk `k+1`'s sends overlapped
+/// against chunk `k`'s combines under the sliding window:
+///
+/// `T = α(2⌈log₂p⌉ + n_c − 1) + 2β·(p−1)/p·m + γ·(p−1)/p·m/n_c`.
+///
+/// The wire is busy end to end (full 2β volume term, fill latency of
+/// `2q + n_c − 1` rounds), while all but one chunk's combine time hides
+/// under the next chunk's transfers — pipelining saves
+/// `γ·(p−1)/p·m·(1 − 1/n_c)` of [`alg2_allreduce`]'s γ term at a cost of
+/// `α(n_c − 1)` extra round latencies. `n_c = 1` reduces exactly to
+/// [`alg2_allreduce`]; large `n_c` is the pessimization regime where the
+/// α term dominates.
+pub fn pipelined_circulant_allreduce(c: &CostModel, p: usize, m: usize, chunk_elems: usize) -> f64 {
+    if p == 1 {
+        return 0.0;
+    }
+    let nc = pipeline_num_chunks(m, chunk_elems) as f64;
+    let frac = (p - 1) as f64 / p as f64 * m as f64;
+    c.alpha * (2.0 * ceil_log2(p) as f64 + nc - 1.0)
+        + 2.0 * c.beta * frac
+        + c.gamma * frac / nc
+}
+
+/// Smallest vector length (elements) at which the pipelined tier beats
+/// the plain Algorithm 2 run for this cost model, found by doubling
+/// search over `m`. Returns `None` when no length up to `2^40` wins —
+/// e.g. γ = 0 (free reduction: nothing to hide) or `chunk_elems = 0`
+/// (tier disabled). `selector` uses this to ground
+/// `CCOLL_PIPELINE_MIN_BYTES` in the model.
+pub fn pipeline_break_even_elems(c: &CostModel, p: usize, chunk_elems: usize) -> Option<usize> {
+    if p == 1 || chunk_elems == 0 {
+        return None;
+    }
+    let mut m = 2 * chunk_elems; // smallest pipelined (≥ 2 chunk) length
+    while m <= 1 << 40 {
+        if pipelined_circulant_allreduce(c, p, m, chunk_elems) < alg2_allreduce(c, p, m) {
+            return Some(m);
+        }
+        m *= 2;
+    }
+    None
+}
+
 /// Two-tree allreduce estimate [17]: full-bandwidth pipelined trees.
 pub fn two_tree_allreduce(c: &CostModel, p: usize, m: usize) -> f64 {
     if p == 1 {
@@ -214,6 +271,51 @@ mod tests {
         ] {
             assert_eq!(f(&C, 1, 100), 0.0);
         }
+    }
+
+    #[test]
+    fn pipelined_circulant_reduces_to_alg2_at_one_chunk() {
+        for (p, m) in [(2usize, 100usize), (8, 4096), (64, 1 << 16)] {
+            // chunk ≥ m/2 → a single chunk → exactly the plain formula
+            let a = pipelined_circulant_allreduce(&C, p, m, m);
+            let b = alg2_allreduce(&C, p, m);
+            assert!((a - b).abs() < 1e-9, "p={p} m={m}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn pipelined_circulant_wins_for_large_m_and_loses_for_small() {
+        let p = 8;
+        let chunk = 1 << 15; // 32 Ki elements
+        let large = 1 << 22;
+        assert!(
+            pipelined_circulant_allreduce(&C, p, large, chunk) < alg2_allreduce(&C, p, large),
+            "large-m pipelining must hide the combine time"
+        );
+        // Just over two chunks of a small vector: the α(n_c−1) surcharge
+        // exceeds the tiny hidden γ term.
+        let small_chunk = 4;
+        let small = 8;
+        assert!(
+            pipelined_circulant_allreduce(&C, p, small, small_chunk)
+                > alg2_allreduce(&C, p, small),
+            "small-m pipelining must be a pessimization"
+        );
+    }
+
+    #[test]
+    fn break_even_is_consistent_with_the_formula() {
+        let p = 8;
+        let chunk = 1 << 15;
+        let be = pipeline_break_even_elems(&C, p, chunk).expect("γ > 0 must break even");
+        assert!(
+            pipelined_circulant_allreduce(&C, p, be, chunk) < alg2_allreduce(&C, p, be),
+            "break-even point must actually win"
+        );
+        // Free reduction: nothing to hide, pipelining can never pay.
+        let free = CostModel { alpha: 1.0, beta: 0.01, gamma: 0.0 };
+        assert_eq!(pipeline_break_even_elems(&free, p, chunk), None);
+        assert_eq!(pipeline_break_even_elems(&C, p, 0), None);
     }
 
     #[test]

@@ -1,0 +1,295 @@
+//! Pipelined large-message tier: end-to-end equivalence and failure
+//! semantics.
+//!
+//! The tier's one correctness claim is that chunked execution is
+//! *invisible* except in time: a pipelined allreduce must be bit-identical
+//! to the plain one-epoch schedule (and the scalar oracle) in the wrapping
+//! integer dtypes, over both the thread and UDS backends, across regular
+//! and zipf chunk partitions, at every chunk-geometry edge (m not
+//! divisible by the chunk, chunk ≥ m degenerating to plain, zero-length
+//! vectors) — and a killed rank must still surface as the bounded
+//! `RankDown` fast-fail, not a hang, when the dying op is chunked.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use circulant_collectives::collectives::{
+    allreduce_schedule, pipeline_chunk_sizes, CollectiveError, PipelinedCursor, Progress,
+};
+use circulant_collectives::datatypes::{elem, BlockPartition, Elem};
+use circulant_collectives::engine::{CollectiveEngine, EngineConfig, EngineError, OpRequest};
+use circulant_collectives::ops::SumOp;
+use circulant_collectives::schedule::Plan;
+use circulant_collectives::transport::fault::{FaultPlan, FaultTransport};
+use circulant_collectives::transport::uds::uds_network_typed;
+use circulant_collectives::transport::{
+    network_typed, run_ranks_inputs_typed, Endpoint, Transport,
+};
+use circulant_collectives::util::rng::SplitMix64;
+
+/// Integer-valued inputs + exact scalar sum oracle (wrapping ⊕, hence
+/// exactly associative: any execution order is bit-identical).
+fn sum_case<T: Elem>(p: usize, m: usize, seed: u64) -> (Vec<Vec<T>>, Vec<T>) {
+    let (lo, hi) = elem::test_value_bounds(T::DTYPE);
+    let mut rng = SplitMix64::new(seed);
+    let inputs: Vec<Vec<T>> = (0..p).map(|_| elem::int_vec(&mut rng, m, lo, hi)).collect();
+    let mut want = vec![T::zero(); m];
+    for v in &inputs {
+        SumOp.combine(&mut want, v);
+    }
+    (inputs, want)
+}
+
+/// One allreduce through `engine`, asserted bit-exact on every rank.
+fn run_one<T: Elem>(
+    engine: &mut CollectiveEngine<T>,
+    inputs: &[Vec<T>],
+    want: &[T],
+    ctx: &str,
+) {
+    let out = engine
+        .submit(OpRequest::allreduce(inputs.to_vec(), "sum"))
+        .unwrap()
+        .wait()
+        .unwrap_or_else(|e| panic!("{ctx}: op failed: {e}"));
+    for (r, buf) in out.iter().enumerate() {
+        assert!(buf[..] == want[..], "{ctx} rank {r}: result is not bit-identical");
+    }
+}
+
+fn scratch(tag: &str, p: usize) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("ccoll-pipeline-{tag}-{p}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("create scratch dir");
+    dir
+}
+
+/// Pipelined ≡ plain ≡ oracle over the thread backend (the copy tiers +
+/// rendezvous path), i64, p ∈ {2, 5, 8}, m deliberately not divisible by
+/// the chunk so the remainder folds into the last chunk.
+#[test]
+fn pipelined_matches_plain_and_oracle_thread_i64() {
+    for p in [2usize, 5, 8] {
+        let m = 1031; // prime: never divisible by the 64-element chunk
+        let chunk_bytes = 64 * std::mem::size_of::<i64>();
+        assert!(pipeline_chunk_sizes(m, 64).len() > 1, "geometry must actually chunk");
+        let (inputs, want) = sum_case::<i64>(p, m, 0x91_0000 + p as u64);
+
+        let mut plain: CollectiveEngine<i64> =
+            CollectiveEngine::new(EngineConfig::new(p).pipeline_min_bytes(0));
+        for i in 0..3 {
+            run_one(&mut plain, &inputs, &want, &format!("plain p={p} op {i}"));
+        }
+        assert_eq!(plain.fusion_stats().pipelined_ops, 0, "p={p}: disabled tier chunked an op");
+        plain.shutdown();
+
+        let mut piped: CollectiveEngine<i64> = CollectiveEngine::new(
+            EngineConfig::new(p).pipeline_min_bytes(1).pipeline_chunk_bytes(chunk_bytes),
+        );
+        for i in 0..3 {
+            run_one(&mut piped, &inputs, &want, &format!("pipelined p={p} op {i}"));
+        }
+        assert_eq!(piped.fusion_stats().pipelined_ops, 3, "p={p}: ops were not pipelined");
+        piped.shutdown();
+    }
+}
+
+/// Same equivalence in the second wrapping integer dtype (u64), with a
+/// bit pattern (rank in the high word) that would expose any chunk
+/// misrouting immediately.
+#[test]
+fn pipelined_matches_plain_and_oracle_thread_u64() {
+    for p in [2usize, 5, 8] {
+        let m = 777;
+        let inputs: Vec<Vec<u64>> =
+            (0..p).map(|r| (0..m).map(|j| (r as u64) << 32 | j as u64).collect()).collect();
+        let mut want = vec![0u64; m];
+        for v in &inputs {
+            for (a, x) in want.iter_mut().zip(v) {
+                *a = a.wrapping_add(*x);
+            }
+        }
+        let mut piped: CollectiveEngine<u64> = CollectiveEngine::new(
+            EngineConfig::new(p)
+                .pipeline_min_bytes(1)
+                .pipeline_chunk_bytes(100 * std::mem::size_of::<u64>()),
+        );
+        run_one(&mut piped, &inputs, &want, &format!("pipelined u64 p={p}"));
+        assert_eq!(piped.fusion_stats().pipelined_ops, 1);
+        piped.shutdown();
+    }
+}
+
+/// The pooled degrade: UDS endpoints advertise no rendezvous caps, so
+/// every chunk epoch runs on the pooled copy tier — same bits, p ∈
+/// {2, 5, 8}, engine wired over real sockets.
+#[test]
+fn uds_pipelined_runs_pooled_bit_identical() {
+    for p in [2usize, 5, 8] {
+        let dir = scratch("pooled", p);
+        let nets = uds_network_typed::<i64>(p, &dir).expect("uds bootstrap");
+        let mut engine = CollectiveEngine::<i64, _>::with_transports(
+            EngineConfig::new(p)
+                .pipeline_min_bytes(1)
+                .pipeline_chunk_bytes(32 * std::mem::size_of::<i64>()),
+            nets,
+        );
+        for i in 0..2u64 {
+            let (inputs, want) = sum_case::<i64>(p, 257, 0x0D5_100 + i);
+            let out = engine
+                .submit(OpRequest::allreduce(inputs, "sum"))
+                .unwrap()
+                .wait()
+                .unwrap_or_else(|e| panic!("uds p={p} op {i}: {e}"));
+            for (r, buf) in out.iter().enumerate() {
+                assert!(buf[..] == want[..], "uds p={p} rank {r}: pooled chunking diverged");
+            }
+        }
+        assert_eq!(engine.fusion_stats().pipelined_ops, 2, "uds p={p}: ops were not pipelined");
+        engine.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// Chunk partitions need not be regular: drive a [`PipelinedCursor`]
+/// directly whose chunks carry *zipf* block partitions (what the engine
+/// never emits, but the cursor contract allows — any partition per chunk,
+/// one schedule shape). Non-blocking polling on every rank, so the
+/// sliding window actually interleaves chunk epochs.
+#[test]
+fn zipf_chunk_partitions_through_the_raw_cursor() {
+    for p in [2usize, 5, 8] {
+        let skips = circulant_collectives::topology::skips::SkipScheme::HalvingUp
+            .skips(p)
+            .unwrap();
+        let sched = allreduce_schedule(p, &skips);
+        let chunk_lens = [37usize, 41, 29];
+        let m: usize = chunk_lens.iter().sum();
+        let mut chunks: Vec<(usize, Arc<Plan>)> = Vec::new();
+        let mut offset = 0usize;
+        for (k, &len) in chunk_lens.iter().enumerate() {
+            let part = BlockPartition::zipf(p, len, 1.2, 0x21F + k as u64);
+            assert_eq!(part.total(), len);
+            chunks.push((offset, Arc::new(Plan::new(sched.clone(), part))));
+            offset += len;
+        }
+        let (inputs, want) = sum_case::<i64>(p, m, 0x21F0 + p as u64);
+        let chunks2 = chunks.clone();
+        let outs = run_ranks_inputs_typed::<i64, _, _, _>(inputs, move |_rank, ep, mut buf| {
+            let mut cur = PipelinedCursor::new(7, chunks2.clone(), 2);
+            assert_eq!(cur.num_chunks(), 3);
+            loop {
+                match cur.step(ep, &SumOp, &mut buf, false).unwrap() {
+                    Progress::Done => break,
+                    Progress::Pending => std::thread::yield_now(),
+                }
+            }
+            let _ = ep.finish_op(7);
+            buf
+        });
+        for (r, buf) in outs.iter().enumerate() {
+            assert!(buf[..] == want[..], "p={p} rank {r}: zipf-chunked result diverged");
+        }
+    }
+}
+
+/// Geometry edges through the engine: a chunk as large as the payload
+/// (or larger, or zero-sized in elements) must fall back to the plain
+/// path — correct result, pipelined-op counter untouched.
+#[test]
+fn chunk_edges_degrade_to_plain() {
+    let p = 4;
+    // chunk ≥ m: one chunk is no pipeline.
+    let (inputs, want) = sum_case::<i64>(p, 64, 0xED6E_1);
+    let mut engine: CollectiveEngine<i64> = CollectiveEngine::new(
+        EngineConfig::new(p)
+            .pipeline_min_bytes(1)
+            .pipeline_chunk_bytes(64 * std::mem::size_of::<i64>()),
+    );
+    run_one(&mut engine, &inputs, &want, "chunk == m");
+    // chunk_bytes below one element: chunk_elems == 0 disables chunking.
+    let mut tiny: CollectiveEngine<i64> = CollectiveEngine::new(
+        EngineConfig::new(p).pipeline_min_bytes(1).pipeline_chunk_bytes(4),
+    );
+    run_one(&mut tiny, &inputs, &want, "chunk < one element");
+    assert_eq!(engine.fusion_stats().pipelined_ops, 0, "chunk == m must run plain");
+    assert_eq!(tiny.fusion_stats().pipelined_ops, 0, "sub-element chunk must run plain");
+    engine.shutdown();
+    tiny.shutdown();
+
+    // Zero-length working vector: below every threshold, still correct.
+    let mut empty: CollectiveEngine<i64> = CollectiveEngine::new(
+        EngineConfig::new(p).pipeline_min_bytes(1).pipeline_chunk_bytes(64),
+    );
+    let inputs: Vec<Vec<i64>> = (0..p).map(|_| Vec::new()).collect();
+    let out = empty.submit(OpRequest::allreduce(inputs, "sum")).unwrap().wait().unwrap();
+    assert!(out.iter().all(|b| b.is_empty()), "zero-length allreduce must return empty");
+    assert_eq!(empty.fusion_stats().pipelined_ops, 0);
+    empty.shutdown();
+
+    // And the geometry helper itself at the edges.
+    assert_eq!(pipeline_chunk_sizes(64, 64), vec![64]);
+    assert_eq!(pipeline_chunk_sizes(64, 0), vec![64]);
+    assert_eq!(pipeline_chunk_sizes(127, 64), vec![127], "m < 2·chunk folds to plain");
+    assert_eq!(pipeline_chunk_sizes(130, 64), vec![64, 66], "remainder folds into the last");
+}
+
+fn assert_rank_down(err: &EngineError, want_peer: usize, ctx: &str) {
+    match err {
+        EngineError::Collective { source: CollectiveError::RankDown { peer, .. }, .. } => {
+            assert_eq!(
+                *peer, want_peer,
+                "{ctx}: RankDown names peer {peer}, want the killed rank {want_peer}"
+            )
+        }
+        other => panic!("{ctx}: want CollectiveError::RankDown, got: {other}"),
+    }
+}
+
+/// Chaos over the chunked path: kill one rank mid-soak with the tier
+/// forced on (8-element chunk epochs, 8 chunks per op, window in play).
+/// Pre-kill pipelined ops stay bit-exact; from the kill epoch on, every
+/// wait fails `RankDown` naming the dead rank inside the 2×op-timeout
+/// fast-fail bound — the pipelined driver's aggregate progress stamp and
+/// down-peer scan must be as live as the plain cursor's.
+#[test]
+fn kill_one_rank_pipelined_rank_down_fast_fail() {
+    for p in [2usize, 5, 8] {
+        let killed = p - 1;
+        let m = 64;
+        let plan = FaultPlan::new(0xBAD5_EED9).kill_rank(killed, 3);
+        let transports: Vec<FaultTransport<i64, Endpoint<i64>>> = network_typed::<i64>(p)
+            .into_iter()
+            .map(|ep| FaultTransport::new(ep, plan.clone()))
+            .collect();
+        let mut engine = CollectiveEngine::with_transports(
+            EngineConfig::new(p)
+                .pipeline_min_bytes(1)
+                .pipeline_chunk_bytes(8 * std::mem::size_of::<i64>())
+                .op_timeout(Duration::from_millis(400)),
+            transports,
+        );
+        // Ops 1 and 2 predate the kill epoch: chunked and bit-exact.
+        for i in 0..2u64 {
+            let (inputs, want) = sum_case::<i64>(p, m, 0xC4_0 + i);
+            run_one(&mut engine, &inputs, &want, &format!("p={p} pre-kill op {}", i + 1));
+        }
+        assert_eq!(engine.fusion_stats().pipelined_ops, 2, "p={p}: soak ops must be chunked");
+        // From op 3 on, rank p−1 is dead: RankDown, bounded.
+        for i in 0..2u64 {
+            let (inputs, _) = sum_case::<i64>(p, m, 0xC4_8 + i);
+            let handle = engine.submit(OpRequest::allreduce(inputs, "sum")).unwrap();
+            let t0 = Instant::now();
+            let err = handle.wait().expect_err("chunked op past the kill epoch must fail");
+            let waited = t0.elapsed();
+            assert!(
+                waited < Duration::from_millis(800),
+                "p={p}: chunked fast-fail took {waited:?}, over the 2×op-timeout bound"
+            );
+            assert_rank_down(&err, killed, &format!("p={p} post-kill chunked op {}", i + 3));
+        }
+        engine.shutdown();
+    }
+}
