@@ -82,7 +82,13 @@ commands:
                            --dir SOCKDIR launch.m launch.seed launch.verify
                            run.dtype transport.backend; thread backend runs
                            every rank in this one process; launch.iters
-                           repeats the collective back-to-back)
+                           repeats the collective back-to-back; launch.gen
+                           joins a generation-namespaced mesh;
+                           launch.recover re-forms over the survivors at
+                           generation+1 after a peer death and runs
+                           launch.recover_iters more verified iterations;
+                           launch.timeout_ms tightens the socket recv
+                           deadline — the indirect-death detection bound)
   audit                    static schedule verification: sweep every shipped
                            algorithm × p × partition shapes through the
                            structure/dataflow/optimality/aliasing passes,
@@ -99,7 +105,11 @@ commands:
                            chaos.timeout_ms chaos.drop_prob chaos.json FILE
                            --kill-rank R --at-op N run.dtype
                            engine.retry.attempts engine.retry.base_ms
-                           engine.backpressure_timeout)
+                           engine.backpressure_timeout; --chaos.recover
+                           reconfigures over the survivors after the kill
+                           and resumes the soak at p−1; chaos.flap_rank R
+                           chaos.flap_from_op N chaos.flap_down_ops K
+                           injects a transient kill-then-revive instead)
 ";
 
 /// Entry point: parse args, dispatch. Returns the process exit code.
@@ -274,6 +284,29 @@ fn cmd_info(cfg: &Config) -> Result<()> {
         "CCOLL_RETRY_BASE_MS".into(),
         k.retry_base_ms.to_string(),
         "base backoff between send retries (doubles per attempt)".into(),
+    ]);
+    kt.row(&[
+        "CCOLL_HEARTBEAT_MS".into(),
+        if k.heartbeat_ms == 0 {
+            "0 (heartbeats off)".into()
+        } else {
+            k.heartbeat_ms.to_string()
+        },
+        "UDS liveness probe interval; 4× silence declares the peer dead".into(),
+    ]);
+    kt.row(&[
+        "CCOLL_RECONNECT_ATTEMPTS".into(),
+        if k.reconnect_attempts == 0 {
+            "0 (reconnect off)".into()
+        } else {
+            k.reconnect_attempts.to_string()
+        },
+        "UDS reconnects before a lost peer is declared dead (not flapping)".into(),
+    ]);
+    kt.row(&[
+        "CCOLL_RECONNECT_BASE_MS".into(),
+        k.reconnect_base_ms.to_string(),
+        "base backoff between reconnect attempts (doubles per attempt)".into(),
     ]);
     kt.row(&[
         "CCOLL_ENGINE_BACKPRESSURE_TIMEOUT".into(),
@@ -634,7 +667,14 @@ fn cmd_serve_typed<T: Elem>(cfg: &Config) -> Result<()> {
     let wall = t0.elapsed().as_secs_f64();
     let stats = engine.plan_stats();
     let fstats = engine.fusion_stats();
+    // Recovery-state surface: a plain serve never reconfigures, so these
+    // report generation 0 / all-up — the point is that CI can diff them
+    // and a chaos-recovered engine reports the same fields truthfully.
+    let generation = engine.generation();
+    let recovered_ops = engine.recovered_ops();
+    let peer_health = engine.peer_health();
     engine.shutdown();
+    let stale_frames_dropped = engine.stale_frames_dropped();
 
     // Spawn-once assertion: the whole replay must have created exactly the
     // p engine workers — any per-op thread spawn is a serving regression.
@@ -739,6 +779,16 @@ fn cmd_serve_typed<T: Elem>(cfg: &Config) -> Result<()> {
         obj.insert("plan_misses".to_string(), Json::Num(stats.misses as f64));
         obj.insert("verified_ops".to_string(), Json::Num(verified_ops as f64));
         obj.insert("rank_threads_spawned".to_string(), Json::Num(spawned as f64));
+        obj.insert("generations".to_string(), Json::Num(generation as f64));
+        obj.insert("recovered_ops".to_string(), Json::Num(recovered_ops as f64));
+        obj.insert(
+            "stale_frames_dropped".to_string(),
+            Json::Num(stale_frames_dropped as f64),
+        );
+        obj.insert(
+            "peer_health".to_string(),
+            Json::Arr(peer_health.iter().map(|&up| Json::Bool(up)).collect()),
+        );
         obj.insert("fusion".to_string(), Json::Obj(fusion));
         std::fs::write(path, Json::Obj(obj).render() + "\n")
             .map_err(|e| anyhow!("cannot write serve.json {path}: {e}"))?;
@@ -1029,6 +1079,21 @@ fn cmd_launch_typed<T: Elem>(cfg: &Config) -> Result<()> {
     // large iteration count to keep survivors on the wire long enough
     // for the kill to land mid-collective.
     let iters = cfg.get_usize("launch.iters", 1)?.max(1);
+    // `launch.gen` joins a generation-namespaced socket mesh (a revived
+    // rank rejoining a reconfigured directory must speak the current
+    // generation, not gen 0's leftover sockets). `launch.recover` turns a
+    // peer death into a reconfiguration instead of an exit: survivors
+    // re-form over world−1 at generation+1 and run `launch.recover_iters`
+    // more verified collectives.
+    let gen = cfg.get_usize("launch.gen", 0)? as u64;
+    let recover = cfg.get_bool("launch.recover", false)?;
+    let recover_iters = cfg.get_usize("launch.recover_iters", 50)?.max(1);
+    // Receive/ack deadline for the socket mesh (0 keeps the transport
+    // default). Recovery runs want this tight: a survivor that observes a
+    // death only indirectly — parked on a fellow survivor that already
+    // broke out — pays one full recv timeout before it consults the
+    // health bitmap.
+    let timeout_ms = cfg.get_usize("launch.timeout_ms", 0)?;
 
     // Deterministic inputs for ALL ranks from the seed — every process
     // computes the same vectors, its own rank's share, the scalar oracle
@@ -1087,21 +1152,178 @@ fn cmd_launch_typed<T: Elem>(cfg: &Config) -> Result<()> {
                 .map_err(|e| anyhow!("cannot create --dir {dir}: {e}"))?;
             // Stale-socket hygiene: remove leftovers from a crashed run,
             // refuse loudly if another live process already serves this
-            // rank in this directory.
-            UdsTransport::<T>::preflight_socket(Path::new(dir), rank)
-                .map_err(|e| anyhow!("uds preflight failed (rank {rank} in {dir}): {e}"))?;
+            // rank in this directory. Generation-aware: a revived rank
+            // rejoining a reconfigured mesh preflights (and binds) inside
+            // the current generation's namespace, never gen 0's leftovers.
+            UdsTransport::<T>::preflight_socket_gen(Path::new(dir), rank, gen)
+                .map_err(|e| {
+                    anyhow!("uds preflight failed (rank {rank} gen {gen} in {dir}): {e}")
+                })?;
             let t0 = std::time::Instant::now();
-            let mut transport = UdsTransport::<T>::connect(rank, world, Path::new(dir))
-                .map_err(|e| anyhow!("uds bootstrap failed (rank {rank}/{world} in {dir}): {e}"))?;
+            let mut transport = UdsTransport::<T>::connect_gen(
+                rank,
+                world,
+                Path::new(dir),
+                gen,
+                std::time::Duration::from_secs(30),
+            )
+            .map_err(|e| {
+                anyhow!("uds bootstrap failed (rank {rank}/{world} gen {gen} in {dir}): {e}")
+            })?;
             let bootstrap = t0.elapsed().as_secs_f64();
+            if timeout_ms > 0 {
+                transport.set_timeout(std::time::Duration::from_millis(timeout_ms as u64));
+            }
             let mut buf = inputs[rank].clone();
             let t1 = std::time::Instant::now();
             let mut round_base = 0u64;
+            // With `launch.recover` a peer death breaks the loop into the
+            // reconfiguration path below instead of exiting nonzero. The
+            // death may surface directly (PeerDown naming the peer) or
+            // indirectly — parked on a fellow survivor that already broke
+            // out of the iteration, this rank sees a liveness Timeout —
+            // so the authoritative census is the transport's health
+            // bitmap: the reader threads record every EOF they observe no
+            // matter which recv the main thread is blocked in, and the
+            // survivors keep their own sockets open (below), so the only
+            // down marks anyone can hold name actually-dead ranks.
+            let mut dead: Vec<usize> = Vec::new();
             for _ in 0..iters {
                 buf.copy_from_slice(&inputs[rank]);
-                round_base =
-                    execute_rank(&mut transport, &sched, &part, &SumOp, &mut buf, round_base)
-                        .map_err(|e| anyhow!("rank {rank}: {e}"))?;
+                match execute_rank(&mut transport, &sched, &part, &SumOp, &mut buf, round_base) {
+                    Ok(next) => round_base = next,
+                    Err(e) if recover => {
+                        use crate::collectives::CollectiveError;
+                        use crate::transport::TransportError;
+                        let mut down: Vec<usize> = transport
+                            .peer_status()
+                            .into_iter()
+                            .enumerate()
+                            .filter(|&(r, up)| !up && r != rank)
+                            .map(|(r, _)| r)
+                            .collect();
+                        if let CollectiveError::Transport(TransportError::PeerDown {
+                            peer, ..
+                        })
+                        | CollectiveError::RankDown { peer, .. } = &e
+                        {
+                            if !down.contains(peer) {
+                                down.push(*peer);
+                            }
+                        }
+                        down.sort_unstable();
+                        if down.is_empty() {
+                            // Not a death (bad buffer, black-holed frame,
+                            // …): nothing to reconfigure around.
+                            return Err(anyhow!("rank {rank}: {e}"));
+                        }
+                        dead = down;
+                        break;
+                    }
+                    Err(e) => return Err(anyhow!("rank {rank}: {e}")),
+                }
+            }
+            if !dead.is_empty() {
+                // Keep the old generation's mesh OPEN until the new one is
+                // formed: closing our sockets now would hand every
+                // slower survivor an EOF indistinguishable from a real
+                // death, and the survivor sets would diverge. With the
+                // old mesh held open, the only dead sockets anyone can
+                // observe during detection are the killed rank's own.
+                let survivors: Vec<usize> = (0..world).filter(|r| !dead.contains(r)).collect();
+                let p2 = survivors.len();
+                if p2 < 2 {
+                    bail!(
+                        "launch: rank(s) {dead:?} died and only {p2} rank(s) survive — \
+                         not enough for a collective"
+                    );
+                }
+                let new_rank = survivors
+                    .iter()
+                    .position(|&r| r == rank)
+                    .expect("a survivor is by definition in the survivor set");
+                let gen2 = gen + 1;
+                // Re-form: same directory, next generation's socket
+                // namespace — every survivor independently computes the
+                // same dense remap from the same PeerDown observation.
+                UdsTransport::<T>::preflight_socket_gen(Path::new(dir), new_rank, gen2)
+                    .map_err(|e| {
+                        anyhow!("recovery preflight failed (rank {new_rank} gen {gen2}): {e}")
+                    })?;
+                let t_rec = std::time::Instant::now();
+                let mut transport2 = UdsTransport::<T>::connect_gen(
+                    new_rank,
+                    p2,
+                    Path::new(dir),
+                    gen2,
+                    std::time::Duration::from_secs(30),
+                )
+                .map_err(|e| {
+                    anyhow!(
+                        "recovery bootstrap failed (rank {rank} re-forming as \
+                         {new_rank}/{p2} gen {gen2} in {dir}): {e}"
+                    )
+                })?;
+                if timeout_ms > 0 {
+                    transport2.set_timeout(std::time::Duration::from_millis(timeout_ms as u64));
+                }
+                // Every survivor is in the generation-namespaced mesh now;
+                // the old generation's sockets can close without being
+                // mistaken for deaths.
+                drop(transport);
+                let mut transport = transport2;
+                let inputs2: Vec<Vec<T>> =
+                    survivors.iter().map(|&r| inputs[r].clone()).collect();
+                let mut oracle2 = vec![T::zero(); m];
+                for v in &inputs2 {
+                    SumOp.combine(&mut oracle2, v);
+                }
+                let part2 = BlockPartition::regular(p2, m);
+                let skips2 =
+                    SkipScheme::HalvingUp.skips(p2).map_err(|e| anyhow!("{e}"))?;
+                let sched2 = allreduce_schedule(p2, &skips2);
+                sched2.assert_valid();
+                let mut buf2 = inputs2[new_rank].clone();
+                let mut rb2 = 0u64;
+                for i in 0..recover_iters {
+                    buf2.copy_from_slice(&inputs2[new_rank]);
+                    rb2 = execute_rank(&mut transport, &sched2, &part2, &SumOp, &mut buf2, rb2)
+                        .map_err(|e| {
+                            anyhow!("rank {rank} (recovered as {new_rank}/{p2}): {e}")
+                        })?;
+                    if verify && buf2[..] != oracle2[..] {
+                        bail!(
+                            "launch VERIFY FAILED: recovered rank {new_rank}/{p2} \
+                             iteration {i} diverges from the survivor sum oracle"
+                        );
+                    }
+                }
+                if verify {
+                    let thread_out = run_schedule_threads_typed::<T>(
+                        &sched2,
+                        &part2,
+                        Arc::new(SumOp),
+                        inputs2,
+                    );
+                    if thread_out[new_rank][..] != buf2[..] {
+                        bail!(
+                            "launch VERIFY FAILED: recovered rank {new_rank}/{p2} is not \
+                             bit-identical to the thread backend"
+                        );
+                    }
+                }
+                println!(
+                    "launch: RECOVERED — rank {rank} re-formed as {new_rank}/{p2} at \
+                     generation {gen2} after rank(s) {dead:?} died; {recover_iters} iterations \
+                     in {:.3}s{}",
+                    t_rec.elapsed().as_secs_f64(),
+                    if verify {
+                        " (exact survivor oracle + thread-backend bit-identity)"
+                    } else {
+                        ""
+                    },
+                );
+                return Ok(());
             }
             let wall = t1.elapsed().as_secs_f64();
             if verify {
@@ -1333,6 +1555,71 @@ fn cmd_audit(cfg: &Config) -> Result<()> {
 /// seeded fault plan layered on every rank's endpoint.
 type ChaosNet<T> = crate::transport::fault::FaultTransport<T, crate::transport::Endpoint<T>>;
 
+/// Chaos-soak outcome accounting, shared by the window drain and the
+/// recovery trigger (a plain function instead of a capturing closure so
+/// the submit loop can read the running counts mid-soak).
+#[derive(Default)]
+struct SoakStats {
+    completed: usize,
+    failed_rank_down: usize,
+    failed_timeout: usize,
+    failed_other: Vec<String>,
+    max_wait: std::time::Duration,
+}
+
+/// Pop the oldest in-flight chaos op: enforce the 2×op-timeout hang
+/// bound, verify a surviving op bit-exact against its oracle, and
+/// classify failures into the RankDown / liveness-Timeout taxonomy.
+fn chaos_drain_one<T: Elem>(
+    pending: &mut std::collections::VecDeque<(
+        std::time::Instant,
+        crate::engine::OpHandle<T, ChaosNet<T>>,
+        Vec<T>,
+    )>,
+    latencies: &mut Vec<f64>,
+    stats: &mut SoakStats,
+    hang_bound: std::time::Duration,
+) -> Result<()> {
+    use crate::collectives::CollectiveError;
+    use crate::engine::EngineError;
+    use crate::transport::TransportError;
+    let (t_submit, handle, oracle) = pending.pop_front().expect("nonempty window");
+    let t_wait = std::time::Instant::now();
+    let outcome = handle.wait();
+    let waited = t_wait.elapsed();
+    stats.max_wait = stats.max_wait.max(waited);
+    if waited > hang_bound {
+        bail!(
+            "chaos HANG: a wait blocked {:.3}s, over the 2×op-timeout bound of {:.3}s",
+            waited.as_secs_f64(),
+            hang_bound.as_secs_f64()
+        );
+    }
+    latencies.push(t_submit.elapsed().as_secs_f64());
+    match outcome {
+        Ok(out) => {
+            for (r, buf) in out.iter().enumerate() {
+                if buf[..] != oracle[..] {
+                    bail!("chaos VERIFY FAILED: surviving op diverges from oracle at rank {r}");
+                }
+            }
+            stats.completed += 1;
+        }
+        Err(EngineError::Collective { source: CollectiveError::RankDown { .. }, .. }) => {
+            stats.failed_rank_down += 1
+        }
+        Err(EngineError::Collective {
+            source:
+                CollectiveError::Transport(
+                    TransportError::Timeout { .. } | TransportError::AckTimeout { .. },
+                ),
+            ..
+        }) => stats.failed_timeout += 1,
+        Err(other) => stats.failed_other.push(other.to_string()),
+    }
+    Ok(())
+}
+
 fn cmd_chaos(cfg: &Config) -> Result<()> {
     match cfg.dtype()? {
         DType::F32 => cmd_chaos_typed::<f32>(cfg),
@@ -1358,11 +1645,22 @@ fn cmd_chaos(cfg: &Config) -> Result<()> {
 ///     killed half of the soak failed);
 ///   - drain-mode shutdown completes in-flight work and rejects new
 ///     submissions.
+///
+/// With `--chaos.recover` the soak becomes the self-healing acceptance
+/// gate: after the kill is positively detected, the window is settled,
+/// [`CollectiveEngine::recover`](crate::engine::CollectiveEngine::recover)
+/// re-forms the engine over the `p−1` survivors within the 2×op-timeout
+/// bound, and the soak resumes at `p′` — post-recovery ops verified
+/// bit-exact against the survivor oracle, the generation bump, stale-frame
+/// accounting, and the `p + p′` thread total all asserted from the same
+/// machine-readable report. With `chaos.flap_rank` the plan injects a
+/// transient kill-then-revive instead: ops inside the outage window fail
+/// RankDown, ops after the revival complete, and the generation must stay
+/// 0 (reconnection is not reconfiguration).
 fn cmd_chaos_typed<T: Elem>(cfg: &Config) -> Result<()> {
-    use crate::collectives::CollectiveError;
     use crate::engine::{CollectiveEngine, EngineConfig, EngineError, OpHandle, OpRequest};
     use crate::transport::fault::{FaultAction, FaultPlan, FaultRule, FaultTransport};
-    use crate::transport::{network_typed, TransportError};
+    use crate::transport::network_typed;
     use std::collections::VecDeque;
     use std::time::{Duration, Instant};
 
@@ -1382,9 +1680,43 @@ fn cmd_chaos_typed<T: Elem>(cfg: &Config) -> Result<()> {
     if !(0.0..=1.0).contains(&drop_prob) {
         bail!("chaos.drop_prob must be in [0, 1], got {drop_prob}");
     }
+    // Transient kill-then-revive injection (the flap case): the rank goes
+    // down at `chaos.flap_from_op` for `chaos.flap_down_ops` op epochs,
+    // then revives — the engine must fail ops inside the window and
+    // complete ops after it with NO generation bump.
+    let flap_rank = match cfg.get("chaos.flap_rank") {
+        Some(v) => Some(
+            v.parse::<usize>()
+                .map_err(|_| anyhow!("bad chaos.flap_rank {v:?} (want 0..{p})"))?,
+        ),
+        None => None,
+    };
+    if let Some(fr) = flap_rank {
+        if fr >= p {
+            bail!("chaos.flap_rank {fr} out of range for chaos.p {p}");
+        }
+    }
+    let flap_from_op = cfg.get_usize("chaos.flap_from_op", (n_ops / 3).max(1))? as u64;
+    let flap_down_ops = cfg.get_usize("chaos.flap_down_ops", 2)?.max(1) as u64;
     // The kill is on by default (this is the acceptance driver for the
-    // failure path); `--chaos.kill 0` runs a fault-plan soak without it.
-    let kill_enabled = cfg.get_bool("chaos.kill", true)?;
+    // failure path); `--chaos.kill 0` runs a fault-plan soak without it,
+    // and a flap soak replaces the permanent kill unless asked for both.
+    let kill_enabled = cfg.get_bool("chaos.kill", flap_rank.is_none())?;
+    // `--chaos.recover`: reconfigure over the survivors after the kill
+    // and resume the soak at p−1 (the self-healing acceptance gate).
+    let recover_enabled = cfg.get_bool("chaos.recover", false)?;
+    if recover_enabled && !kill_enabled {
+        bail!("--chaos.recover needs the kill enabled (it recovers from the injected death)");
+    }
+    if recover_enabled && flap_rank.is_some() {
+        bail!(
+            "--chaos.recover and chaos.flap_rank are mutually exclusive — a flap revives \
+             on its own, a recovery re-forms the world"
+        );
+    }
+    if recover_enabled && p < 3 {
+        bail!("--chaos.recover needs chaos.p ≥ 3 (the p−1 survivors must still form a collective)");
+    }
     let kill_rank = match cfg.get("chaos.kill_rank").or_else(|| cfg.get("kill-rank")) {
         Some(v) => v
             .parse::<usize>()
@@ -1416,14 +1748,22 @@ fn cmd_chaos_typed<T: Elem>(cfg: &Config) -> Result<()> {
     if kill_enabled {
         plan = plan.kill_rank(kill_rank, at_op);
     }
+    if let Some(fr) = flap_rank {
+        plan = plan.flap_rank(fr, flap_from_op, flap_down_ops);
+    }
     if drop_prob > 0.0 {
         plan = plan.rule(FaultRule::new(FaultAction::Drop).with_probability(drop_prob));
     }
     println!(
         "chaos: p={p}, {n_ops} ops of {m} {} elems, window={inflight}, seed={seed}, \
-         op_timeout={timeout_ms}ms, kill={}, drop_prob={drop_prob}",
+         op_timeout={timeout_ms}ms, kill={}, flap={}, recover={}, drop_prob={drop_prob}",
         T::DTYPE.name(),
         if kill_enabled { format!("rank {kill_rank} at op {at_op}") } else { "off".into() },
+        flap_rank.map_or_else(
+            || "off".to_string(),
+            |fr| format!("rank {fr} down ops {flap_from_op}..{}", flap_from_op + flap_down_ops),
+        ),
+        if recover_enabled { "on" } else { "off" },
     );
 
     let spawned_before = crate::transport::rank_threads_spawned();
@@ -1443,58 +1783,23 @@ fn cmd_chaos_typed<T: Elem>(cfg: &Config) -> Result<()> {
     let hang_bound = Duration::from_millis(2 * timeout_ms);
     let (lo, hi) = elem::test_value_bounds(T::DTYPE);
     let mut rng = SplitMix64::new(seed ^ 0xc4a0);
-    let mut completed = 0usize;
-    let mut failed_rank_down = 0usize;
-    let mut failed_timeout = 0usize;
-    let mut failed_other: Vec<String> = Vec::new();
-    let mut max_wait = Duration::ZERO;
+    let mut stats = SoakStats::default();
     let mut latencies: Vec<f64> = Vec::with_capacity(n_ops);
     // (submit time, handle, oracle) in submission order.
     let mut pending: VecDeque<(Instant, OpHandle<T, ChaosNet<T>>, Vec<T>)> =
         VecDeque::with_capacity(inflight);
-    let mut drain_one = |pending: &mut VecDeque<(Instant, OpHandle<T, ChaosNet<T>>, Vec<T>)>,
-                         latencies: &mut Vec<f64>|
-     -> Result<()> {
-        let (t_submit, handle, oracle) = pending.pop_front().expect("nonempty window");
-        let t_wait = Instant::now();
-        let outcome = handle.wait();
-        let waited = t_wait.elapsed();
-        max_wait = max_wait.max(waited);
-        if waited > hang_bound {
-            bail!(
-                "chaos HANG: a wait blocked {:.3}s, over the 2×op-timeout bound of {:.3}s",
-                waited.as_secs_f64(),
-                hang_bound.as_secs_f64()
-            );
-        }
-        latencies.push(t_submit.elapsed().as_secs_f64());
-        match outcome {
-            Ok(out) => {
-                for (r, buf) in out.iter().enumerate() {
-                    if buf[..] != oracle[..] {
-                        bail!("chaos VERIFY FAILED: surviving op diverges from oracle at rank {r}");
-                    }
-                }
-                completed += 1;
-            }
-            Err(EngineError::Collective {
-                source: CollectiveError::RankDown { .. }, ..
-            }) => failed_rank_down += 1,
-            Err(EngineError::Collective {
-                source:
-                    CollectiveError::Transport(
-                        TransportError::Timeout { .. } | TransportError::AckTimeout { .. },
-                    ),
-                ..
-            }) => failed_timeout += 1,
-            Err(other) => failed_other.push(other.to_string()),
-        }
-        Ok(())
-    };
 
     let t0 = Instant::now();
-    for _ in 0..n_ops {
-        let inputs: Vec<Vec<T>> = (0..p).map(|_| elem::int_vec(&mut rng, m, lo, hi)).collect();
+    // The soak is recovery-aware: after a reconfiguration `cur_p` shrinks
+    // to the survivor count, so inputs and oracles are sized for the
+    // world the engine actually has.
+    let mut cur_p = p;
+    let mut submitted = 0usize;
+    let mut recover_seconds = 0.0f64;
+    let mut completed_at_first_down: Option<usize> = None;
+    while submitted < n_ops {
+        let inputs: Vec<Vec<T>> =
+            (0..cur_p).map(|_| elem::int_vec(&mut rng, m, lo, hi)).collect();
         let mut oracle = vec![T::zero(); m];
         for v in &inputs {
             SumOp.combine(&mut oracle, v);
@@ -1502,15 +1807,49 @@ fn cmd_chaos_typed<T: Elem>(cfg: &Config) -> Result<()> {
         let handle = engine
             .submit(OpRequest::allreduce(inputs, "sum"))
             .map_err(|e| anyhow!("chaos submit failed: {e}"))?;
+        submitted += 1;
         pending.push_back((Instant::now(), handle, oracle));
         if pending.len() >= inflight {
-            drain_one(&mut pending, &mut latencies)?;
+            chaos_drain_one(&mut pending, &mut latencies, &mut stats, hang_bound)?;
+        }
+        if completed_at_first_down.is_none() && stats.failed_rank_down > 0 {
+            completed_at_first_down = Some(stats.completed);
+        }
+        // First positively-detected death in recover mode: settle the
+        // whole window (the remaining in-flight ops fail RankDown too),
+        // reconfigure over the survivors, and resume the soak at p′.
+        if recover_enabled && engine.recoveries() == 0 && stats.failed_rank_down > 0 {
+            while !pending.is_empty() {
+                chaos_drain_one(&mut pending, &mut latencies, &mut stats, hang_bound)?;
+            }
+            let t_rec = Instant::now();
+            let report =
+                engine.recover().map_err(|e| anyhow!("chaos: recovery failed: {e}"))?;
+            recover_seconds = t_rec.elapsed().as_secs_f64();
+            if recover_seconds > hang_bound.as_secs_f64() {
+                bail!(
+                    "chaos: reconfiguration took {recover_seconds:.3}s, over the {:.3}s \
+                     2×op-timeout bound",
+                    hang_bound.as_secs_f64()
+                );
+            }
+            cur_p = report.p;
+            println!(
+                "chaos: recovered — p {p}→{cur_p}, generation {}, failed rank(s) {:?}, \
+                 {recover_seconds:.3}s",
+                report.generation, report.failed,
+            );
         }
     }
     while !pending.is_empty() {
-        drain_one(&mut pending, &mut latencies)?;
+        chaos_drain_one(&mut pending, &mut latencies, &mut stats, hang_bound)?;
+        if completed_at_first_down.is_none() && stats.failed_rank_down > 0 {
+            completed_at_first_down = Some(stats.completed);
+        }
     }
     let wall = t0.elapsed().as_secs_f64();
+    let SoakStats { completed, failed_rank_down, failed_timeout, failed_other, max_wait } =
+        stats;
 
     // In-flight accounting must drain to zero: every failed op released
     // its queue slot (the leak check — a lost slot would accumulate and
@@ -1526,7 +1865,7 @@ fn cmd_chaos_typed<T: Elem>(cfg: &Config) -> Result<()> {
     // Drain-mode shutdown: completes in-flight work (none left) and
     // rejects new submissions with the shut-down error.
     engine.drain_shutdown();
-    let post_inputs: Vec<Vec<T>> = (0..p).map(|_| vec![T::zero(); 4]).collect();
+    let post_inputs: Vec<Vec<T>> = (0..cur_p).map(|_| vec![T::zero(); 4]).collect();
     match engine.submit(OpRequest::allreduce(post_inputs, "sum")) {
         Err(EngineError::ShutDown) => {}
         Ok(_) => bail!("chaos: submit after drain_shutdown unexpectedly succeeded"),
@@ -1534,18 +1873,29 @@ fn cmd_chaos_typed<T: Elem>(cfg: &Config) -> Result<()> {
             "chaos: submit after drain_shutdown failed with {other:?} (want the shut-down error)"
         ),
     }
+    // Read after shutdown: the stale-frame snapshot is finalized when the
+    // workers surrender their endpoints.
+    let generations = engine.generation();
+    let recoveries = engine.recoveries();
+    let recovered_ops = engine.recovered_ops();
+    let stale_frames_dropped = engine.stale_frames_dropped();
 
     let spawned = crate::transport::rank_threads_spawned() - spawned_before;
     let lat = crate::util::stats::Summary::of(&latencies);
     let mut t = Table::new(
         "chaos soak",
-        &["ops", "completed", "rank-down", "timeout", "wall s", "lat p99", "max wait", "threads"],
+        &[
+            "ops", "completed", "rank-down", "timeout", "gen", "stale", "wall s", "lat p99",
+            "max wait", "threads",
+        ],
     );
     t.row(&[
         n_ops.to_string(),
         completed.to_string(),
         failed_rank_down.to_string(),
         failed_timeout.to_string(),
+        generations.to_string(),
+        stale_frames_dropped.to_string(),
         format!("{wall:.3}"),
         format!("{}s", fmt_si(lat.p99)),
         format!("{}s", fmt_si(max_wait.as_secs_f64())),
@@ -1568,6 +1918,27 @@ fn cmd_chaos_typed<T: Elem>(cfg: &Config) -> Result<()> {
         obj.insert("kill_rank".to_string(), Json::Num(kill_rank as f64));
         obj.insert("at_op".to_string(), Json::Num(at_op as f64));
         obj.insert("drop_prob".to_string(), Json::Num(drop_prob));
+        obj.insert("recover".to_string(), Json::Bool(recover_enabled));
+        obj.insert("recoveries".to_string(), Json::Num(recoveries as f64));
+        obj.insert("generations".to_string(), Json::Num(generations as f64));
+        obj.insert("recovered_ops".to_string(), Json::Num(recovered_ops as f64));
+        obj.insert(
+            "stale_frames_dropped".to_string(),
+            Json::Num(stale_frames_dropped as f64),
+        );
+        // −1 marks "no reconfiguration ran" (0 would read as a 0-second
+        // recovery).
+        obj.insert(
+            "recover_seconds".to_string(),
+            Json::Num(if recoveries > 0 { recover_seconds } else { -1.0 }),
+        );
+        obj.insert("p_after".to_string(), Json::Num(cur_p as f64));
+        obj.insert(
+            "flap_rank".to_string(),
+            Json::Num(flap_rank.map_or(-1.0, |fr| fr as f64)),
+        );
+        obj.insert("flap_from_op".to_string(), Json::Num(flap_from_op as f64));
+        obj.insert("flap_down_ops".to_string(), Json::Num(flap_down_ops as f64));
         obj.insert("op_timeout_ms".to_string(), Json::Num(timeout_ms as f64));
         obj.insert("completed".to_string(), Json::Num(completed as f64));
         obj.insert("failed_rank_down".to_string(), Json::Num(failed_rank_down as f64));
@@ -1612,10 +1983,14 @@ fn cmd_chaos_typed<T: Elem>(cfg: &Config) -> Result<()> {
              + {failed_timeout} timeout ≠ {n_ops} submitted"
         );
     }
-    if spawned != p as u64 {
+    // Spawn accounting: exactly p workers at construction, plus exactly
+    // p′ respawned by a reconfiguration — anything else is a per-op
+    // spawn leak or a half-finished recovery.
+    let expected_threads = p as u64 + if recoveries > 0 { cur_p as u64 } else { 0 };
+    if spawned != expected_threads {
         bail!(
-            "chaos: engine spawned {spawned} rank threads over {n_ops} ops (want exactly {p}: \
-             spawn-once violated under faults)"
+            "chaos: engine spawned {spawned} rank threads over {n_ops} ops (want exactly \
+             {expected_threads}: spawn-once violated under faults)"
         );
     }
     if in_flight_end != 0 {
@@ -1624,11 +1999,55 @@ fn cmd_chaos_typed<T: Elem>(cfg: &Config) -> Result<()> {
              leaked its queue slot"
         );
     }
+    if recover_enabled {
+        if recoveries == 0 {
+            bail!(
+                "chaos: --chaos.recover was set but no reconfiguration ran — the kill at op \
+                 {at_op} never produced a RankDown to recover from"
+            );
+        }
+        if recovered_ops == 0 {
+            bail!(
+                "chaos: the engine reconfigured to p′={cur_p} but completed zero ops \
+                 afterwards — recovery produced a dead engine"
+            );
+        }
+    }
+    if let Some(fr) = flap_rank {
+        if flap_from_op as usize <= n_ops && failed_rank_down == 0 {
+            bail!(
+                "chaos: rank {fr} flapped down at op {flap_from_op} but no op failed with \
+                 RankDown — the outage window never engaged"
+            );
+        }
+        if generations != 0 {
+            bail!(
+                "chaos: a transient flap bumped the generation to {generations} — \
+                 reconnection must not be reconfiguration"
+            );
+        }
+        if let Some(c0) = completed_at_first_down {
+            if completed <= c0 {
+                bail!(
+                    "chaos: no op completed after rank {fr}'s outage window — the engine \
+                     never resumed after the revival"
+                );
+            }
+        }
+    }
     println!(
         "chaos: OK — {completed} ops completed bit-exact, {failed_rank_down} failed fast with \
-         RankDown{}, max wait {:.3}s ≤ {:.3}s hang bound, spawn-once + drain-shutdown verified",
+         RankDown{}{}, max wait {:.3}s ≤ {:.3}s hang bound, spawn-once + drain-shutdown verified",
         if failed_timeout > 0 {
             format!(", {failed_timeout} timed out under drops")
+        } else {
+            String::new()
+        },
+        if recoveries > 0 {
+            format!(
+                ", reconfigured p {p}→{cur_p} in {recover_seconds:.3}s (gen {generations}, \
+                 {recovered_ops} post-recovery ops, {stale_frames_dropped} stale frames dropped)"
+            )
         } else {
             String::new()
         },

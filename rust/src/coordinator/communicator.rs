@@ -605,15 +605,17 @@ impl Launcher {
         let mut engine = self.engine_typed::<E>();
         let plans = engine.plan_cache();
         let out = engine.run_closure(move |_rank, ep| {
-            // The worker lends us &mut Endpoint; move a Communicator
-            // around an owned endpoint instead (the engine is shut down
-            // right after, so the worker never touches the placeholder).
+            // The worker lends us &mut (remapped) Endpoint; move a
+            // Communicator around an owned endpoint instead (the engine
+            // is shut down right after, so the worker never touches the
+            // placeholder).
             let owned = std::mem::replace(
                 ep,
                 // placeholder endpoint; never used after the swap
-                crate::transport::network_typed::<E>(1).pop().unwrap(),
+                crate::transport::Remap::new(crate::transport::network_typed::<E>(1).pop().unwrap()),
             );
-            let mut comm = Communicator::<E>::new(owned, scheme.clone(), backend.clone());
+            let mut comm =
+                Communicator::<E>::new(owned.into_inner(), scheme.clone(), backend.clone());
             comm.set_plan_cache(plans.clone());
             comm.set_rendezvous(rendezvous);
             f(comm)

@@ -275,6 +275,13 @@ pub(crate) struct Fuser<T: Elem, C = crate::transport::Endpoint<T>> {
     /// wire space). Single ops run under their own id; each fused run
     /// takes one fresh epoch for the whole batch.
     next_op: u64,
+    /// Generation epoch composed into every allocated op id
+    /// ([`crate::transport::compose_op`]). 0 before any recovery — the
+    /// composed id is then the bare sequence number, bit-identical to the
+    /// pre-recovery wire format. The engine's reconfiguration round bumps
+    /// it so post-recovery traffic can never cross-match pre-failure
+    /// frames.
+    generation: u64,
     enabled: bool,
     max_bytes: usize,
     window: u64,
@@ -313,6 +320,7 @@ impl<T: Elem, C> Fuser<T, C> {
             completed,
             inflight_tags,
             next_op: 1,
+            generation: 0,
             // window == 0 means "flush on every submit": batching never
             // coalesces anything, so treat it as fusion-off outright.
             enabled: enabled && window > 0,
@@ -330,10 +338,17 @@ impl<T: Elem, C> Fuser<T, C> {
         self.stats
     }
 
+    /// Stamp this fuser's op ids with a generation epoch (the sequence
+    /// counter restarts: a fresh fuser is built per reconfiguration, so
+    /// `(generation, seq)` pairs never repeat).
+    pub(super) fn set_generation(&mut self, generation: u64) {
+        self.generation = generation;
+    }
+
     fn alloc_op(&mut self) -> u64 {
         let id = self.next_op;
         self.next_op += 1;
-        id
+        crate::transport::compose_op(self.generation, id)
     }
 
     /// Whether `op_id` is sitting in the pending batch (so its handle

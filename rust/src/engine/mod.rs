@@ -95,13 +95,14 @@ use std::time::{Duration, Instant};
 use crate::collectives::exec::{
     CollectiveError, OpCursor, PipelinedCursor, Progress, DEFAULT_PIPELINE_WINDOW,
 };
+use crate::collectives::generators::allreduce_schedule;
 use crate::collectives::CirculantPlans;
 use crate::coordinator::OpBackend;
-use crate::datatypes::Elem;
+use crate::datatypes::{BlockPartition, Elem};
 use crate::ops::{kernels, ReduceOp};
 use crate::schedule::{Plan, PlanCache, PlanCacheStats};
 use crate::topology::skips::SkipScheme;
-use crate::transport::{network_typed, Endpoint, Transport, TransportError};
+use crate::transport::{network_typed, Endpoint, Remap, Transport, TransportError};
 
 use fusion::{FlushReason, FusedLayout, FusedRankOp, FusedShare, Fuser};
 
@@ -396,6 +397,8 @@ pub enum EngineError {
     WorkerGone { rank: usize },
     #[error("engine: already shut down")]
     ShutDown,
+    #[error("engine: recovery failed — {detail}")]
+    RecoveryFailed { detail: String },
     #[error("engine: operation results lost (a worker exited early)")]
     ResultsLost,
     #[error("rank {rank}: {source}")]
@@ -486,12 +489,28 @@ pub(crate) struct Job<C> {
     done: Sender<(usize, Box<dyn Any + Send>)>,
 }
 
+/// A worker's parting gift on [`WorkerCmd::Surrender`]: its endpoint
+/// (alive, pools warm) plus the counters only the owning thread could
+/// read. The engine's reconfiguration round collects one per worker,
+/// remaps the survivors, and respawns.
+pub(crate) struct Surrendered<C> {
+    ep: C,
+    /// Cumulative stale-generation frames this endpoint dropped.
+    stale_frames: u64,
+}
+
 pub(crate) enum WorkerCmd<T: Elem, C = Endpoint<T>> {
     Op(RankOp<T>),
     Pipelined(PipelinedRankOp<T>),
     Fused(FusedRankOp<T>),
     Job(Job<C>),
     Shutdown,
+    /// Like [`WorkerCmd::Shutdown`] — the worker settles its in-flight
+    /// operations first — but instead of dropping its endpoint on exit
+    /// it hands it back through the enclosed channel, keeping the
+    /// transport (connections, buffer pools, health bitmap) alive for a
+    /// reconfiguration round or for shutdown-time counter aggregation.
+    Surrender(Sender<Surrendered<C>>),
 }
 
 /// Future for one submitted operation.
@@ -500,8 +519,11 @@ pub struct OpHandle<T: Elem = f32, C = Endpoint<T>> {
     p: usize,
     rx: DoneRx<T>,
     /// The engine's batching stage: waiting on a still-batched member
-    /// must force its batch out, or the wait could never return.
-    fuser: Arc<Mutex<Fuser<T, C>>>,
+    /// must force its batch out, or the wait could never return. Shared
+    /// with the engine, which swaps the fuser *in place* on recovery —
+    /// so a handle taken before a reconfiguration still reaches the
+    /// current batching stage.
+    fuser: Arc<Mutex<Fuser<T, Remap<T, C>>>>,
 }
 
 impl<T: Elem, C> OpHandle<T, C> {
@@ -711,21 +733,53 @@ impl<T: Elem> ActiveOp<T> {
 /// ([`CollectiveEngine::new`]), or any other [`Transport`] via
 /// [`CollectiveEngine::with_transports`].
 pub struct CollectiveEngine<T: Elem = f32, C = Endpoint<T>> {
+    /// Current world size — `p′` after reconfigurations, the
+    /// construction `p` before any.
     p: usize,
+    /// World size at construction (physical rank space).
+    p0: usize,
     scheme: SkipScheme,
     backend: OpBackend,
     queue_depth: usize,
     backpressure_timeout: Duration,
+    /// Worker/fuser knobs retained for post-recovery rebuilds.
+    park: ParkPolicy,
+    fusion: bool,
+    fusion_max_bytes: usize,
+    fusion_window: u64,
+    pipeline_min_bytes: usize,
+    pipeline_chunk_bytes: usize,
     inflight: InflightCounter,
     inflight_tags: InflightTags,
+    completed: StepCounter,
     plans: Arc<PlanCache>,
     /// The batching stage + submission fan-out ([`fusion`]): holds the
     /// plan vocabulary, the epoch allocator and the pending batch.
     /// Shared with every [`OpHandle`] so a waited member can force its
-    /// batch out; workers never touch it.
-    fuser: Arc<Mutex<Fuser<T, C>>>,
-    txs: Vec<Sender<WorkerCmd<T, C>>>,
+    /// batch out; workers never touch it. Every transport is wrapped in
+    /// a [`Remap`] so a reconfiguration can renumber survivors densely
+    /// without the backend's cooperation.
+    fuser: Arc<Mutex<Fuser<T, Remap<T, C>>>>,
+    txs: Vec<Sender<WorkerCmd<T, Remap<T, C>>>>,
     workers: Vec<thread::JoinHandle<()>>,
+    /// `live[dense] = physical` construction rank of each current rank.
+    live: Vec<usize>,
+    /// Current generation epoch — 0 until the first reconfiguration,
+    /// bumped by every [`CollectiveEngine::recover`] and composed into
+    /// each op's wire tag so pre-failure traffic can never cross-match
+    /// post-recovery operations.
+    generation: u64,
+    /// Completed reconfiguration rounds.
+    recoveries: u64,
+    /// Completed-op clock reading at the last reconfiguration.
+    completed_at_recovery: u64,
+    /// Stale-generation frames dropped across all endpoints, as
+    /// snapshotted at the last reconfiguration or shutdown (workers own
+    /// their endpoints in between, so there is no live counter to read).
+    stale_frames_seen: u64,
+    /// Final stale counts of endpoints already dropped (dead ranks at
+    /// past reconfigurations) — folded into every later snapshot.
+    retired_stale: u64,
 }
 
 impl<T: Elem> CollectiveEngine<T> {
@@ -768,9 +822,12 @@ impl<T: Elem, C> CollectiveEngine<T, C> {
         // front: every submission reuses both, and a bad scheme should
         // fail at construction — not on the Nth submit.
         let vocab = CirculantPlans::new(&cfg.scheme, cfg.p);
-        let mut txs = Vec::with_capacity(cfg.p);
-        let mut workers = Vec::with_capacity(cfg.p);
-        for (rank, mut ep) in transports.into_iter().enumerate() {
+        let mut eps: Vec<Remap<T, C>> = Vec::with_capacity(cfg.p);
+        for t in transports {
+            // Wrap every backend in a dense-rank remapper (identity map
+            // until a reconfiguration shrinks the world). Config knobs
+            // pass straight through to the real transport.
+            let mut ep = Remap::new(t);
             ep.set_rendezvous(cfg.rendezvous && crate::transport::rendezvous_env_enabled());
             if let Some(min) = cfg.rendezvous_min_elems {
                 ep.set_rendezvous_min_elems(min);
@@ -779,18 +836,9 @@ impl<T: Elem, C> CollectiveEngine<T, C> {
                 ep.set_timeout(timeout);
             }
             ep.set_retry(cfg.retry_attempts, cfg.retry_base_ms);
-            let (tx, rx) = channel::<WorkerCmd<T, C>>();
-            txs.push(tx);
-            let park = cfg.park;
-            crate::transport::note_rank_thread_spawn();
-            workers.push(
-                thread::Builder::new()
-                    .name(format!("engine-rank-{rank}"))
-                    .stack_size(8 << 20)
-                    .spawn(move || worker_loop(rank, ep, rx, park))
-                    .expect("spawn engine worker"),
-            );
+            eps.push(ep);
         }
+        let (txs, workers) = spawn_workers(eps, cfg.park);
         let inflight: InflightCounter = Arc::new(AtomicUsize::new(0));
         let inflight_tags: InflightTags = Arc::new(Mutex::new(BTreeSet::new()));
         let completed: StepCounter = Arc::new(AtomicU64::new(0));
@@ -801,7 +849,7 @@ impl<T: Elem, C> CollectiveEngine<T, C> {
             txs.clone(),
             plans.clone(),
             inflight.clone(),
-            completed,
+            completed.clone(),
             inflight_tags.clone(),
             cfg.fusion,
             cfg.fusion_max_bytes,
@@ -811,16 +859,30 @@ impl<T: Elem, C> CollectiveEngine<T, C> {
         )));
         Self {
             p: cfg.p,
+            p0: cfg.p,
             scheme: cfg.scheme,
             backend: cfg.backend,
             queue_depth: cfg.queue_depth,
             backpressure_timeout: cfg.backpressure_timeout,
+            park: cfg.park,
+            fusion: cfg.fusion,
+            fusion_max_bytes: cfg.fusion_max_bytes,
+            fusion_window: cfg.fusion_window,
+            pipeline_min_bytes: cfg.pipeline_min_bytes,
+            pipeline_chunk_bytes: cfg.pipeline_chunk_bytes,
             inflight,
             inflight_tags,
+            completed,
             plans,
             fuser,
             txs,
             workers,
+            live: (0..cfg.p).collect(),
+            generation: 0,
+            recoveries: 0,
+            completed_at_recovery: 0,
+            stale_frames_seen: 0,
+            retired_stale: 0,
         }
     }
 
@@ -836,6 +898,51 @@ impl<T: Elem, C> CollectiveEngine<T, C> {
     /// Operations submitted but not yet finished on every rank.
     pub fn in_flight(&self) -> usize {
         self.inflight.load(Ordering::Acquire)
+    }
+
+    /// The engine's current generation epoch: 0 until the first
+    /// reconfiguration, bumped by every [`CollectiveEngine::recover`].
+    /// Composed into each op's wire tag (`crate::transport::compose_op`).
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Completed reconfiguration rounds.
+    pub fn recoveries(&self) -> u64 {
+        self.recoveries
+    }
+
+    /// Operations fully completed since the last reconfiguration (0
+    /// when the engine has never reconfigured).
+    pub fn recovered_ops(&self) -> u64 {
+        if self.recoveries == 0 {
+            0
+        } else {
+            self.completed.load(Ordering::Acquire) - self.completed_at_recovery
+        }
+    }
+
+    /// Stale-generation frames dropped across all rank endpoints, as of
+    /// the last reconfiguration or shutdown. Workers own their
+    /// endpoints between those events, so this is a snapshot, not a
+    /// live counter.
+    pub fn stale_frames_dropped(&self) -> u64 {
+        self.stale_frames_seen
+    }
+
+    /// Health of the **original** construction ranks: `up[physical]` is
+    /// `true` while that rank is part of the current live set.
+    pub fn peer_health(&self) -> Vec<bool> {
+        let mut up = vec![false; self.p0];
+        for &physical in &self.live {
+            up[physical] = true;
+        }
+        up
+    }
+
+    /// Physical (construction-index) rank of each current dense rank.
+    pub fn live_ranks(&self) -> &[usize] {
+        &self.live
     }
 
     /// The shared plan cache (hand it to communicators that should reuse
@@ -941,7 +1048,7 @@ impl<T: Elem, C> CollectiveEngine<T, C> {
     pub(crate) fn run_closure<R, F>(&mut self, f: F) -> Vec<R>
     where
         R: Send + 'static,
-        F: Fn(usize, &mut C) -> R + Send + Sync + 'static,
+        F: Fn(usize, &mut Remap<T, C>) -> R + Send + Sync + 'static,
     {
         // Jobs run inline on otherwise-idle workers; a batched op left
         // pending would be stranded behind them, so dispatch it first.
@@ -950,7 +1057,7 @@ impl<T: Elem, C> CollectiveEngine<T, C> {
         let (tx, rx) = channel::<(usize, Box<dyn Any + Send>)>();
         for rank in 0..self.p {
             let f = f.clone();
-            let run: JobFn<C> =
+            let run: JobFn<Remap<T, C>> =
                 Box::new(move |rank, ep| Box::new(f(rank, ep)) as Box<dyn Any + Send>);
             if self.txs[rank].send(WorkerCmd::Job(Job { run, done: tx.clone() })).is_err() {
                 self.join_workers_propagating();
@@ -1003,7 +1110,9 @@ impl<T: Elem, C> CollectiveEngine<T, C> {
     /// Ask every worker to finish its in-flight operations and exit, then
     /// join them. A pending fused batch is dispatched first so its
     /// members complete rather than strand. Propagates worker panics.
-    /// Idempotent.
+    /// Idempotent. Endpoints are surrendered (not dropped in place) so
+    /// their stale-frame counters fold into the engine's final
+    /// [`CollectiveEngine::stale_frames_dropped`] snapshot.
     pub fn shutdown(&mut self) {
         if self.workers.is_empty() {
             return;
@@ -1013,10 +1122,30 @@ impl<T: Elem, C> CollectiveEngine<T, C> {
             fuser.flush(FlushReason::Forced);
             fuser.shut_down = true;
         }
+        for s in self.collect_endpoints() {
+            self.retired_stale += s.stale_frames;
+        }
+        self.stale_frames_seen = self.retired_stale;
+    }
+
+    /// Hand every worker a surrender ticket, collect the endpoints back
+    /// (each worker settles its in-flight ops first — shutdown
+    /// semantics), and join the worker threads. Tolerates workers that
+    /// already exited: they simply do not report.
+    fn collect_endpoints(&mut self) -> Vec<Surrendered<Remap<T, C>>> {
+        let (give, take) = channel::<Surrendered<Remap<T, C>>>();
         for tx in &self.txs {
-            let _ = tx.send(WorkerCmd::Shutdown);
+            let _ = tx.send(WorkerCmd::Surrender(give.clone()));
+        }
+        drop(give);
+        // Blocks until every worker either surrendered or exited (each
+        // send-half drops with its worker, closing the channel).
+        let mut eps = Vec::with_capacity(self.txs.len());
+        while let Ok(s) = take.recv() {
+            eps.push(s);
         }
         self.join_workers_propagating();
+        eps
     }
 
     fn join_workers_propagating(&mut self) {
@@ -1030,6 +1159,161 @@ impl<T: Elem, C> CollectiveEngine<T, C> {
             }
         }
     }
+
+    /// The reconfiguration round: re-form the engine over the surviving
+    /// ranks after a failure (detect → fail → **reconfigure** → resume).
+    ///
+    /// In-flight operations needing a dead rank have already failed with
+    /// [`CollectiveError::RankDown`] via the per-worker health bitmap
+    /// fast-fail; this call then
+    ///
+    ///  1. quiesces submissions and collects every worker's endpoint
+    ///     (workers settle their remaining ops first, so no in-flight
+    ///     slot leaks across the round);
+    ///  2. runs survivor consensus over the dense health bitmaps — a
+    ///     rank is dead if **any** endpoint positively observed it down
+    ///     (every backend keeps its own slot up by contract, so a dead
+    ///     rank can neither veto itself back in nor vote others out);
+    ///  3. bumps the generation epoch — even when nobody died, because
+    ///     each round restarts the op-sequence allocator and
+    ///     `(generation, seq)` wire tags must never repeat — and stamps
+    ///     it into every surviving endpoint, which from then on drop
+    ///     (and count) frames from older generations;
+    ///  4. rebuilds the circulant plan vocabulary for `p′` survivors and
+    ///     proves the rebuilt schedule with the static `analysis` audit
+    ///     **before** any worker respawns — a recovery that cannot
+    ///     produce a verified schedule fails loudly instead of resuming
+    ///     on an unproven plan (all future survivor-set plan builds are
+    ///     force-audited too, via [`PlanCache::set_force_audit`]);
+    ///  5. remaps survivors onto dense ranks `0..p′`, respawns workers,
+    ///     and swaps a fresh fuser in place so existing [`OpHandle`]s
+    ///     stay valid.
+    ///
+    /// Not a replay mechanism: operations that failed stay failed — the
+    /// caller resubmits if desired. Survivors' partial contributions
+    /// from failed ops are discarded, never merged.
+    pub fn recover(&mut self) -> Result<RecoveryReport, EngineError>
+    where
+        C: Transport<T> + Send + 'static,
+    {
+        if self.workers.is_empty() {
+            return Err(EngineError::ShutDown);
+        }
+        {
+            let mut fuser = self.fuser.lock().unwrap();
+            fuser.flush(FlushReason::Forced);
+            fuser.shut_down = true; // reopened by the fuser swap below
+        }
+        let mut eps = self.collect_endpoints();
+        if eps.len() != self.p {
+            return Err(EngineError::RecoveryFailed {
+                detail: format!(
+                    "only {}/{} workers surrendered their endpoints (worker crashed?)",
+                    eps.len(),
+                    self.p
+                ),
+            });
+        }
+        eps.sort_by_key(|s| s.ep.rank());
+        let mut up = vec![true; self.p];
+        for s in &eps {
+            for (r, ok) in s.ep.peer_status().into_iter().enumerate() {
+                if !ok {
+                    up[r] = false;
+                }
+            }
+        }
+        let p_new = up.iter().filter(|&&ok| ok).count();
+        if p_new < 2 {
+            return Err(EngineError::RecoveryFailed {
+                detail: format!(
+                    "{p_new} of {} ranks survive — not enough for a collective",
+                    self.p
+                ),
+            });
+        }
+        // Stale accounting: live endpoints report cumulative counters
+        // (re-read fresh at every snapshot); endpoints retired at past
+        // rounds contribute their final counts permanently.
+        let live_total: u64 = eps.iter().map(|s| s.stale_frames).sum();
+        self.stale_frames_seen = self.retired_stale + live_total;
+        let failed: Vec<usize> =
+            (0..self.p).filter(|&r| !up[r]).map(|r| self.live[r]).collect();
+        let new_map: Vec<usize> =
+            (0..self.p).filter(|&r| up[r]).map(|r| self.live[r]).collect();
+        self.generation += 1;
+        // Rebuild + prove the survivor-set plans before any worker
+        // respawns; `CirculantPlans` itself asserts scheme validity.
+        let vocab = CirculantPlans::new(&self.scheme, p_new);
+        self.plans.set_force_audit(true);
+        let schedule = allreduce_schedule(p_new, &vocab.skips);
+        let probe = BlockPartition::regular(p_new, p_new);
+        if let Err(e) = crate::analysis::audit_plan(&vocab.allreduce, &schedule, &probe) {
+            return Err(EngineError::RecoveryFailed {
+                detail: format!(
+                    "rebuilt p={p_new} allreduce schedule failed the static audit [{}]: {e}",
+                    e.code()
+                ),
+            });
+        }
+        let mut new_eps: Vec<Remap<T, C>> = Vec::with_capacity(p_new);
+        for (r, s) in eps.into_iter().enumerate() {
+            if !up[r] {
+                // Dead rank: retire its endpoint — and its counters —
+                // for good.
+                self.retired_stale += s.stale_frames;
+                continue;
+            }
+            let mut ep = s.ep;
+            ep.set_map(new_map.clone());
+            ep.set_generation(self.generation);
+            new_eps.push(ep);
+        }
+        let (txs, workers) = spawn_workers(new_eps, self.park);
+        self.txs = txs;
+        self.workers = workers;
+        let mut fuser = Fuser::new(
+            p_new,
+            vocab,
+            self.txs.clone(),
+            self.plans.clone(),
+            self.inflight.clone(),
+            self.completed.clone(),
+            self.inflight_tags.clone(),
+            self.fusion,
+            self.fusion_max_bytes,
+            self.fusion_window,
+            self.pipeline_min_bytes,
+            self.pipeline_chunk_bytes,
+        );
+        fuser.set_generation(self.generation);
+        // Swap in place: existing OpHandles hold this Arc.
+        *self.fuser.lock().unwrap() = fuser;
+        self.p = p_new;
+        self.live = new_map;
+        self.recoveries += 1;
+        self.completed_at_recovery = self.completed.load(Ordering::Acquire);
+        Ok(RecoveryReport {
+            generation: self.generation,
+            p: p_new,
+            failed,
+            stale_frames_dropped: self.stale_frames_seen,
+        })
+    }
+}
+
+/// What one [`CollectiveEngine::recover`] round did.
+#[derive(Debug, Clone)]
+pub struct RecoveryReport {
+    /// Generation epoch in force after this round (monotone, starts at 1).
+    pub generation: u64,
+    /// Surviving world size `p′`.
+    pub p: usize,
+    /// Physical (construction-index) ranks removed this round.
+    pub failed: Vec<usize>,
+    /// Cumulative stale-generation frames dropped, as observed at this
+    /// round's snapshot.
+    pub stale_frames_dropped: u64,
 }
 
 impl<T: Elem, C> Drop for CollectiveEngine<T, C> {
@@ -1062,6 +1346,31 @@ fn recycle_segment<T: Elem>(pool: &mut Vec<Vec<T>>, buf: Vec<T>) {
     }
 }
 
+/// Spawn one `engine-rank-{r}` worker thread per endpoint (the engine's
+/// only thread spawns — construction and every reconfiguration round go
+/// through here, each spawn counted by
+/// [`crate::transport::note_rank_thread_spawn`]).
+fn spawn_workers<T: Elem, C: Transport<T> + Send + 'static>(
+    eps: Vec<Remap<T, C>>,
+    park: ParkPolicy,
+) -> (Vec<Sender<WorkerCmd<T, Remap<T, C>>>>, Vec<thread::JoinHandle<()>>) {
+    let mut txs = Vec::with_capacity(eps.len());
+    let mut workers = Vec::with_capacity(eps.len());
+    for (rank, ep) in eps.into_iter().enumerate() {
+        let (tx, rx) = channel::<WorkerCmd<T, Remap<T, C>>>();
+        txs.push(tx);
+        crate::transport::note_rank_thread_spawn();
+        workers.push(
+            thread::Builder::new()
+                .name(format!("engine-rank-{rank}"))
+                .stack_size(8 << 20)
+                .spawn(move || worker_loop(rank, ep, rx, park))
+                .expect("spawn engine worker"),
+        );
+    }
+    (txs, workers)
+}
+
 /// The worker body: admit commands, round-robin poll the in-flight
 /// cursors with non-blocking steps, park per policy when nothing moved.
 /// Fused runs pack into (and recycle) worker-local pooled segment
@@ -1075,6 +1384,7 @@ fn worker_loop<T: Elem, C: Transport<T>>(
     let mut active: Vec<ActiveOp<T>> = Vec::new();
     let mut seg_pool: Vec<Vec<T>> = Vec::new();
     let mut shutting_down = false;
+    let mut surrender: Option<Sender<Surrendered<C>>> = None;
     loop {
         // Admit work. With nothing in flight, block on the queue (no
         // busy-wait while idle); otherwise drain whatever is ready.
@@ -1083,17 +1393,29 @@ fn worker_loop<T: Elem, C: Transport<T>>(
                 break;
             }
             match rx.recv() {
-                Ok(cmd) => {
-                    admit(cmd, &mut active, &mut seg_pool, &mut ep, rank, &mut shutting_down)
-                }
+                Ok(cmd) => admit(
+                    cmd,
+                    &mut active,
+                    &mut seg_pool,
+                    &mut ep,
+                    rank,
+                    &mut shutting_down,
+                    &mut surrender,
+                ),
                 Err(_) => break, // engine dropped the sender: exit
             }
         }
         loop {
             match rx.try_recv() {
-                Ok(cmd) => {
-                    admit(cmd, &mut active, &mut seg_pool, &mut ep, rank, &mut shutting_down)
-                }
+                Ok(cmd) => admit(
+                    cmd,
+                    &mut active,
+                    &mut seg_pool,
+                    &mut ep,
+                    rank,
+                    &mut shutting_down,
+                    &mut surrender,
+                ),
                 Err(TryRecvError::Empty) => break,
                 Err(TryRecvError::Disconnected) => {
                     shutting_down = true;
@@ -1186,6 +1508,13 @@ fn worker_loop<T: Elem, C: Transport<T>>(
             park.park();
         }
     }
+    // A surrendering worker hands its endpoint — and the counters only
+    // the owning thread could read — back to the engine for the
+    // reconfiguration round / shutdown-time aggregation.
+    if let Some(give) = surrender {
+        let stale_frames = ep.stale_frames_dropped();
+        let _ = give.send(Surrendered { ep, stale_frames });
+    }
 }
 
 /// Failure-path teardown for one op on one endpoint, in two steps.
@@ -1218,6 +1547,7 @@ fn admit<T: Elem, C: Transport<T>>(
     ep: &mut C,
     rank: usize,
     shutting_down: &mut bool,
+    surrender: &mut Option<Sender<Surrendered<C>>>,
 ) {
     match cmd {
         WorkerCmd::Op(op) => {
@@ -1282,6 +1612,13 @@ fn admit<T: Elem, C: Transport<T>>(
             let _ = job.done.send((rank, out));
         }
         WorkerCmd::Shutdown => *shutting_down = true,
+        WorkerCmd::Surrender(give) => {
+            // Shutdown semantics first — settle the in-flight ops — then
+            // the worker's epilogue hands the endpoint back instead of
+            // dropping it.
+            *shutting_down = true;
+            *surrender = Some(give);
+        }
     }
 }
 
@@ -1433,5 +1770,92 @@ mod tests {
         let err = engine.submit(OpRequest::allreduce(vec![vec![0.0f32; 4]; 2], "sum")).unwrap_err();
         assert!(matches!(err, EngineError::ShutDown), "{err}");
         drop(engine); // Drop after shutdown must be a no-op
+    }
+
+    #[test]
+    fn recover_reforms_over_survivors_and_bumps_generation() {
+        use crate::transport::fault::{FaultPlan, FaultTransport};
+        let p = 4;
+        let plan = FaultPlan::new(11).kill_rank(3, 3);
+        let transports: Vec<_> = network_typed::<i64>(p)
+            .into_iter()
+            .map(|ep| FaultTransport::new(ep, plan.clone()))
+            .collect();
+        let mut engine = CollectiveEngine::<i64, _>::with_transports(
+            EngineConfig::new(p).op_timeout(Duration::from_millis(500)),
+            transports,
+        );
+        // Op epochs 1 and 2 flow; epoch 3 trips the kill.
+        for seed in [1u64, 2] {
+            let inputs = int_inputs(p, 16, seed);
+            let want = oracle_sum(&inputs);
+            let out =
+                engine.submit(OpRequest::allreduce(inputs, "sum")).unwrap().wait().unwrap();
+            assert_eq!(out[0], want);
+        }
+        let err = engine
+            .submit(OpRequest::allreduce(int_inputs(p, 16, 3), "sum"))
+            .unwrap()
+            .wait()
+            .unwrap_err();
+        assert!(
+            matches!(
+                err,
+                EngineError::Collective { source: CollectiveError::RankDown { .. }, .. }
+            ),
+            "{err}"
+        );
+        let report = engine.recover().unwrap();
+        assert_eq!((report.p, report.generation), (3, 1));
+        assert_eq!(report.failed, vec![3]);
+        assert_eq!(engine.p(), 3);
+        assert_eq!(engine.generation(), 1);
+        assert_eq!(engine.recoveries(), 1);
+        assert_eq!(engine.peer_health(), vec![true, true, true, false]);
+        assert_eq!(engine.live_ranks().to_vec(), vec![0, 1, 2]);
+        // Post-recovery ops run over p′ = 3 and must be bit-exact
+        // against a fresh 3-rank oracle.
+        for seed in [5u64, 6, 7] {
+            let inputs = int_inputs(3, 16, seed);
+            let want = oracle_sum(&inputs);
+            let out =
+                engine.submit(OpRequest::allreduce(inputs, "sum")).unwrap().wait().unwrap();
+            for (r, buf) in out.iter().enumerate() {
+                assert_eq!(buf, &want, "rank {r}");
+            }
+        }
+        assert_eq!(engine.in_flight(), 0, "no in-flight slot leaked across recovery");
+        assert_eq!(engine.recovered_ops(), 3);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn spurious_recover_keeps_the_world_and_bumps_generation() {
+        let p = 3;
+        let mut engine = CollectiveEngine::<i64>::new(EngineConfig::new(p));
+        let inputs = int_inputs(p, 8, 1);
+        let want = oracle_sum(&inputs);
+        let out = engine.submit(OpRequest::allreduce(inputs, "sum")).unwrap().wait().unwrap();
+        assert_eq!(out[0], want);
+        // Nobody died: the world survives intact, but the generation
+        // still bumps — the op-sequence allocator restarted, and
+        // (generation, seq) wire tags must never repeat.
+        let report = engine.recover().unwrap();
+        assert_eq!((report.p, report.generation), (p, 1));
+        assert!(report.failed.is_empty());
+        assert_eq!(engine.peer_health(), vec![true; p]);
+        let inputs = int_inputs(p, 8, 2);
+        let want = oracle_sum(&inputs);
+        let out = engine.submit(OpRequest::allreduce(inputs, "sum")).unwrap().wait().unwrap();
+        assert_eq!(out[0], want);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn recover_after_shutdown_is_refused() {
+        let mut engine = CollectiveEngine::<i64>::new(EngineConfig::new(2));
+        engine.shutdown();
+        let err = engine.recover().unwrap_err();
+        assert!(matches!(err, EngineError::ShutDown), "{err}");
     }
 }

@@ -30,6 +30,9 @@
 //! | `CCOLL_AUDIT_PLANS`          | bool   | `0`     | release-build opt-in for the plan-cache static audit (debug builds always audit) |
 //! | `CCOLL_PIPELINE_MIN_BYTES`   | usize  | 1048576 | payload size at which the engine switches to the pipelined tier (0 disables pipelining; `engine.pipeline.min_bytes` overrides per run) |
 //! | `CCOLL_PIPELINE_CHUNK_BYTES` | usize  | 262144  | chunk size for the pipelined tier (0 disables pipelining; `engine.pipeline.chunk_bytes` overrides per run) |
+//! | `CCOLL_HEARTBEAT_MS`         | usize  | `0`     | UDS liveness-probe interval in ms (0 disables heartbeats) |
+//! | `CCOLL_RECONNECT_ATTEMPTS`   | usize  | `0`     | UDS reconnect budget for a dropped peer stream (0 = fail-fast, no reconnection) |
+//! | `CCOLL_RECONNECT_BASE_MS`    | usize  | `50`    | base backoff between UDS reconnect attempts, doubling per attempt |
 //!
 //! Booleans accept `0|1|true|false|yes|no` (empty = unset = default).
 //! Integers accept decimal digits with optional `_` separators. Dtypes
@@ -125,6 +128,22 @@ pub struct EnvKnobs {
     /// Per-engine override: `EngineConfig::pipeline_chunk_bytes` /
     /// config key `engine.pipeline.chunk_bytes`.
     pub pipeline_chunk_bytes: usize,
+    /// UDS liveness-probe interval in milliseconds (`CCOLL_HEARTBEAT_MS`;
+    /// 0 disables heartbeats — peers are only declared down when a read
+    /// or write on their stream actually fails). A peer that has sent at
+    /// least one probe and then goes silent for 4× this interval is
+    /// reported down by `peer_status`/`peer_down`.
+    pub heartbeat_ms: u64,
+    /// UDS reconnect budget for a peer whose stream dropped
+    /// (`CCOLL_RECONNECT_ATTEMPTS`; 0 = fail-fast, the historical
+    /// behaviour — a broken stream immediately surfaces `PeerDown`).
+    /// With a budget, a write failure triggers bounded re-dial of the
+    /// peer's socket at the current generation before giving up.
+    pub reconnect_attempts: usize,
+    /// Base backoff in milliseconds between UDS reconnect attempts
+    /// (`CCOLL_RECONNECT_BASE_MS`); attempt `k` sleeps `base << (k-1)`
+    /// with the shift capped at 6.
+    pub reconnect_base_ms: u64,
 }
 
 fn parse_bool(name: &str, raw: Option<&str>, default: bool) -> Result<bool, String> {
@@ -257,6 +276,21 @@ pub fn parse_from(get: impl Fn(&str) -> Option<String>) -> Result<EnvKnobs, Stri
             get("CCOLL_PIPELINE_CHUNK_BYTES").as_deref(),
             crate::engine::DEFAULT_PIPELINE_CHUNK_BYTES,
         )?,
+        heartbeat_ms: parse_usize(
+            "CCOLL_HEARTBEAT_MS",
+            get("CCOLL_HEARTBEAT_MS").as_deref(),
+            crate::transport::DEFAULT_HEARTBEAT_MS as usize,
+        )? as u64,
+        reconnect_attempts: parse_usize(
+            "CCOLL_RECONNECT_ATTEMPTS",
+            get("CCOLL_RECONNECT_ATTEMPTS").as_deref(),
+            crate::transport::DEFAULT_RECONNECT_ATTEMPTS,
+        )?,
+        reconnect_base_ms: parse_usize(
+            "CCOLL_RECONNECT_BASE_MS",
+            get("CCOLL_RECONNECT_BASE_MS").as_deref(),
+            crate::transport::DEFAULT_RECONNECT_BASE_MS as usize,
+        )? as u64,
     })
 }
 
@@ -305,6 +339,32 @@ mod tests {
         assert!(!k.audit_plans, "release-build plan audits are opt-in");
         assert_eq!(k.pipeline_min_bytes, crate::engine::DEFAULT_PIPELINE_MIN_BYTES);
         assert_eq!(k.pipeline_chunk_bytes, crate::engine::DEFAULT_PIPELINE_CHUNK_BYTES);
+        assert_eq!(k.heartbeat_ms, crate::transport::DEFAULT_HEARTBEAT_MS);
+        assert_eq!(k.reconnect_attempts, crate::transport::DEFAULT_RECONNECT_ATTEMPTS);
+        assert_eq!(k.reconnect_base_ms, crate::transport::DEFAULT_RECONNECT_BASE_MS);
+    }
+
+    #[test]
+    fn recovery_knobs_parse_and_reject_loudly() {
+        let k = with(&[
+            ("CCOLL_HEARTBEAT_MS", "20"),
+            ("CCOLL_RECONNECT_ATTEMPTS", "4"),
+            ("CCOLL_RECONNECT_BASE_MS", "10"),
+        ])
+        .unwrap();
+        assert_eq!(k.heartbeat_ms, 20);
+        assert_eq!(k.reconnect_attempts, 4);
+        assert_eq!(k.reconnect_base_ms, 10);
+        let k = with(&[("CCOLL_HEARTBEAT_MS", "0")]).unwrap();
+        assert_eq!(k.heartbeat_ms, 0, "0 must parse (it disables heartbeats)");
+        let k = with(&[("CCOLL_RECONNECT_ATTEMPTS", "0")]).unwrap();
+        assert_eq!(k.reconnect_attempts, 0, "0 must parse (it disables reconnection)");
+        let err = with(&[("CCOLL_HEARTBEAT_MS", "fast")]).unwrap_err();
+        assert!(err.contains("CCOLL_HEARTBEAT_MS") && err.contains("fast"), "{err}");
+        let err = with(&[("CCOLL_RECONNECT_ATTEMPTS", "many")]).unwrap_err();
+        assert!(err.contains("CCOLL_RECONNECT_ATTEMPTS") && err.contains("many"), "{err}");
+        let err = with(&[("CCOLL_RECONNECT_BASE_MS", "-1")]).unwrap_err();
+        assert!(err.contains("CCOLL_RECONNECT_BASE_MS") && err.contains("non-negative"), "{err}");
     }
 
     #[test]

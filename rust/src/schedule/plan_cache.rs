@@ -23,7 +23,7 @@
 //! [`crate::coordinator::RunMetrics`]).
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::datatypes::{BlockPartition, DType};
@@ -138,6 +138,10 @@ pub struct PlanCache {
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
+    /// Audit every built plan regardless of build profile / knob — set by
+    /// the engine's recovery path so survivor-set schedules are proved by
+    /// the static verifier before their first post-reconfiguration use.
+    force_audit: AtomicBool,
 }
 
 impl Default for PlanCache {
@@ -159,7 +163,16 @@ impl PlanCache {
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
+            force_audit: AtomicBool::new(false),
         }
+    }
+
+    /// Audit every subsequently-built plan even when the build profile /
+    /// `CCOLL_AUDIT_PLANS` would skip it. One-way in practice: recovery
+    /// turns it on and leaves it on, so every survivor-set plan is proved
+    /// before first use.
+    pub fn set_force_audit(&self, on: bool) {
+        self.force_audit.store(on, Ordering::Relaxed);
     }
 
     /// Look up `key`, building (and caching) the schedule on a miss.
@@ -196,7 +209,7 @@ impl PlanCache {
         // Verified-by-construction: every plan that can enter the cache
         // passes the full static verifier while auditing is on (debug
         // builds always; release behind CCOLL_AUDIT_PLANS).
-        if crate::analysis::audit_plans_enabled() {
+        if crate::analysis::audit_plans_enabled() || self.force_audit.load(Ordering::Relaxed) {
             if let Err(e) = crate::analysis::audit_plan(&key.algorithm, &plan.schedule, part) {
                 panic!("plan audit failed [{}]: {e}", e.code());
             }

@@ -19,7 +19,12 @@
 //!   [`TransportError::PeerDown`], and every *other* rank's wrapper
 //!   reports it down through [`Transport::peer_status`] — the same
 //!   signal a real process death produces on the UDS backend, so the
-//!   engine's fast-fail path is exercised identically in-process.
+//!   engine's fast-fail path is exercised identically in-process;
+//! * **flap** — a kill with a bounded window: the rank is dead for
+//!   epochs `[from_op, from_op + down_ops)` and then *revives* — the
+//!   deterministic model of a transient disconnect that reconnects
+//!   within the recovery deadline, so no-generation-bump recovery is
+//!   testable with the same seeded discipline.
 //!
 //! Rules are keyed by `(rank, op, round)` — any field wildcardable — or
 //! fire probabilistically under a [`SplitMix64`] stream seeded per rank
@@ -125,6 +130,24 @@ pub struct KillRule {
     pub from_op: u64,
 }
 
+/// A transient rank death ("flap"): `rank` behaves exactly like a
+/// [`KillRule`] kill while the epoch watermark is in
+/// `[from_op, from_op + down_ops)`, then **revives** — sends/receives
+/// succeed again and [`Transport::peer_status`] reports it back up.
+/// Same epoch-watermark trigger discipline as `KillRule`, so a flap is
+/// bit-reproducible from the plan alone: this is the deterministic
+/// model of a peer that disconnects and reconnects within the recovery
+/// deadline (no generation bump, no reconfiguration).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FlapRule {
+    pub rank: usize,
+    /// First epoch at which the rank is down.
+    pub from_op: u64,
+    /// Width of the outage window in epochs; the rank is back up once
+    /// the watermark reaches `from_op + down_ops`.
+    pub down_ops: u64,
+}
+
 /// The full declarative fault schedule one chaos run executes. Clone it
 /// into every rank's [`FaultTransport`]; determinism comes from the
 /// seed, not from shared state.
@@ -133,11 +156,12 @@ pub struct FaultPlan {
     pub seed: u64,
     pub rules: Vec<FaultRule>,
     pub kills: Vec<KillRule>,
+    pub flaps: Vec<FlapRule>,
 }
 
 impl FaultPlan {
     pub fn new(seed: u64) -> Self {
-        Self { seed, rules: Vec::new(), kills: Vec::new() }
+        Self { seed, rules: Vec::new(), kills: Vec::new(), flaps: Vec::new() }
     }
 
     /// Add a message rule.
@@ -152,6 +176,13 @@ impl FaultPlan {
         self
     }
 
+    /// Take `rank` down for epochs `[from_op, from_op + down_ops)`, then
+    /// revive it (deterministic kill-then-revive).
+    pub fn flap_rank(mut self, rank: usize, from_op: u64, down_ops: u64) -> Self {
+        self.flaps.push(FlapRule { rank, from_op, down_ops });
+        self
+    }
+
     /// Shorthand: drop rank `rank`'s round-`round` send of epoch `op`.
     pub fn drop_at(self, rank: usize, op: u64, round: u64) -> Self {
         self.rule(FaultRule::new(FaultAction::Drop).on_rank(rank).at_op(op).at_round(round))
@@ -162,10 +193,10 @@ impl FaultPlan {
         self.rule(FaultRule::new(FaultAction::Delay(by)).on_rank(rank).at_op(op).at_round(round))
     }
 
-    /// Whether any rule or kill exists at all (an empty plan is a
+    /// Whether any rule, kill or flap exists at all (an empty plan is a
     /// transparent wrapper).
     pub fn is_empty(&self) -> bool {
-        self.rules.is_empty() && self.kills.is_empty()
+        self.rules.is_empty() && self.kills.is_empty() && self.flaps.is_empty()
     }
 }
 
@@ -231,14 +262,31 @@ impl<E: Elem, T: Transport<E>> FaultTransport<E, T> {
         }
     }
 
-    /// Kill detail for `rank` if a kill rule has engaged at the current
-    /// epoch watermark.
+    /// Kill detail for `rank` if a kill rule — or a flap rule still
+    /// inside its outage window — has engaged at the current epoch
+    /// watermark. A flap whose window the watermark has passed no longer
+    /// matches: the rank has revived.
     fn killed(&self, rank: usize) -> Option<String> {
+        if let Some(k) = self.plan.kills.iter().find(|k| k.rank == rank && self.max_op_seen >= k.from_op)
+        {
+            return Some(format!("fault-injected kill of rank {} from op {}", k.rank, k.from_op));
+        }
         self.plan
-            .kills
+            .flaps
             .iter()
-            .find(|k| k.rank == rank && self.max_op_seen >= k.from_op)
-            .map(|k| format!("fault-injected kill of rank {} from op {}", k.rank, k.from_op))
+            .find(|f| {
+                f.rank == rank
+                    && self.max_op_seen >= f.from_op
+                    && self.max_op_seen < f.from_op.saturating_add(f.down_ops)
+            })
+            .map(|f| {
+                format!(
+                    "fault-injected flap of rank {}: down for ops [{}, {})",
+                    f.rank,
+                    f.from_op,
+                    f.from_op.saturating_add(f.down_ops)
+                )
+            })
     }
 
     fn self_dead(&self) -> Option<TransportError> {
@@ -454,6 +502,18 @@ impl<E: Elem, T: Transport<E>> Transport<E> for FaultTransport<E, T> {
     fn set_retry(&mut self, attempts: usize, base_ms: u64) {
         self.inner.set_retry(attempts, base_ms)
     }
+
+    fn generation(&self) -> u64 {
+        self.inner.generation()
+    }
+
+    fn set_generation(&mut self, gen: u64) {
+        self.inner.set_generation(gen)
+    }
+
+    fn stale_frames_dropped(&self) -> u64 {
+        self.inner.stale_frames_dropped()
+    }
 }
 
 #[cfg(test)]
@@ -542,6 +602,34 @@ mod tests {
         let err = b.recv_payload(0, Tag::new(5, 0)).unwrap_err();
         assert!(matches!(err, TransportError::PeerDown { .. }), "{err}");
         assert!(b.peer_status()[1], "own slot stays up by contract");
+    }
+
+    #[test]
+    fn flap_kills_then_revives_at_the_window_edge() {
+        let mut eps = pair().into_iter();
+        let plan = FaultPlan::new(9).flap_rank(1, 5, 3); // down for ops 5..8
+        let mut a = FaultTransport::new(eps.next().unwrap(), plan.clone());
+        let mut b = FaultTransport::new(eps.next().unwrap(), plan);
+        let data = [2i64; 2];
+        let send = |to: usize| SendSlices { to, head: &data, tail: &[], rendezvous: false };
+        // Before the window: up.
+        a.sendrecv_slices_tagged(Some(send(1)), None, Tag::new(4, 0)).unwrap();
+        assert_eq!(b.recv_payload(0, Tag::new(4, 0)).unwrap().len(), 2);
+        assert!(a.peer_status()[1]);
+        // Inside the window: down, exactly like a kill.
+        let err = a.sendrecv_slices_tagged(Some(send(1)), None, Tag::new(6, 0)).unwrap_err();
+        assert!(matches!(err, TransportError::PeerDown { peer: 1, .. }), "{err}");
+        assert!(!a.peer_status()[1], "flap window must read as down");
+        assert!(a.peer_down(1).is_some());
+        // Past the window: revived — sends flow and the bitmap is clean
+        // again, with no generation bump anywhere (transport-level
+        // recovery, not a reconfiguration).
+        a.sendrecv_slices_tagged(Some(send(1)), None, Tag::new(8, 0)).unwrap();
+        assert_eq!(b.recv_payload(0, Tag::new(8, 0)).unwrap().len(), 2);
+        assert!(a.peer_status()[1], "rank must revive after the window");
+        assert!(a.peer_down(1).is_none());
+        assert_eq!(a.generation(), 0);
+        assert_eq!(a.stats().dead_refusals, 1);
     }
 
     #[test]

@@ -191,6 +191,33 @@ impl Tag {
     }
 }
 
+/// Bits of [`Tag::op`] reserved for the recovery **generation epoch**:
+/// the high 16 bits carry the generation, the low 48 the per-generation
+/// sequence number. Generation 0 composed with sequence `s` is exactly
+/// `s`, so pre-recovery engines (and every epoch-0 legacy tag) are
+/// bit-identical to the pre-generation wire format — no frame layout
+/// change, no compatibility break.
+pub const GEN_SHIFT: u32 = 48;
+
+/// Compose an operation epoch from a generation and a per-generation
+/// sequence number. 48 bits of sequence is ~280 trillion operations per
+/// generation; 16 bits of generation is 65k reconfigurations.
+pub fn compose_op(gen: u64, seq: u64) -> u64 {
+    debug_assert!(gen < (1 << 16), "generation {gen} overflows 16 bits");
+    debug_assert!(seq < (1u64 << GEN_SHIFT), "sequence {seq} overflows 48 bits");
+    (gen << GEN_SHIFT) | seq
+}
+
+/// The generation epoch carried in an operation tag.
+pub fn generation_of(op: u64) -> u64 {
+    op >> GEN_SHIFT
+}
+
+/// The per-generation sequence number carried in an operation tag.
+pub fn sequence_of(op: u64) -> u64 {
+    op & ((1u64 << GEN_SHIFT) - 1)
+}
+
 /// Process-wide count of rank worker threads ever spawned (by
 /// [`run_ranks`]-family drivers and the [`crate::engine`] workers). The
 /// `ccoll serve` soak and the engine tests read this to prove the
@@ -437,6 +464,24 @@ pub const DEFAULT_RETRY_ATTEMPTS: usize = 3;
 /// `CCOLL_RETRY_BASE_MS` / `EngineConfig::retry_base_ms`.
 pub const DEFAULT_RETRY_BASE_MS: u64 = 10;
 
+/// Default heartbeat probe interval for the UDS backend, in milliseconds.
+/// `0` disables liveness probes entirely (the PR-7 fail-fast behaviour):
+/// a peer is only declared down when a read or write on its stream
+/// actually fails. Override with `CCOLL_HEARTBEAT_MS`.
+pub const DEFAULT_HEARTBEAT_MS: u64 = 0;
+
+/// Default reconnect budget for a UDS peer whose stream dropped: how many
+/// bounded, backed-off dial attempts `UdsTransport` makes before giving the
+/// peer up as dead. `0` disables reconnection (fail-fast, the historical
+/// behaviour — a broken stream is immediately a dead peer). Override with
+/// `CCOLL_RECONNECT_ATTEMPTS`.
+pub const DEFAULT_RECONNECT_ATTEMPTS: usize = 0;
+
+/// Default base backoff (milliseconds) between UDS reconnect attempts;
+/// attempt `k` sleeps `base << (k-1)` (shift capped at 6). Override with
+/// `CCOLL_RECONNECT_BASE_MS`.
+pub const DEFAULT_RECONNECT_BASE_MS: u64 = 50;
+
 /// One rank's communication handle for payloads of element type `E`
 /// (default `f32`, so pre-dtype code compiles unchanged).
 pub struct Endpoint<E: Elem = f32> {
@@ -471,6 +516,14 @@ pub struct Endpoint<E: Elem = f32> {
     pub rendezvous_min_elems: usize,
     /// Receive timeout — deadlock detection in tests; generous default.
     pub timeout: Duration,
+    /// Recovery generation this endpoint accepts frames for: arrivals
+    /// tagged with an *older* generation are counted into
+    /// [`Endpoint::stale_frames`] and dropped at the stash boundary, so
+    /// pre-recovery traffic can never cross-match a post-recovery
+    /// operation. 0 = never reconfigured (all traffic current).
+    generation: u64,
+    /// Frames dropped for carrying a stale generation.
+    stale_frames: u64,
 }
 
 /// Build a fully-connected network of `p` f32 endpoints (one per rank) —
@@ -519,6 +572,8 @@ pub fn network_typed<E: Elem>(p: usize) -> Vec<Endpoint<E>> {
             rendezvous: false,
             rendezvous_min_elems: crate::env_knobs::knobs().rendezvous_min_elems,
             timeout: Duration::from_secs(30),
+            generation: 0,
+            stale_frames: 0,
         })
         .collect()
 }
@@ -615,6 +670,26 @@ impl<E: Elem> Endpoint<E> {
         }
     }
 
+    /// Stash an unsolicited arrival — unless it carries a **stale
+    /// generation**. Every frame that was not the one a receive was
+    /// blocking on enters the stash through here, so this is the single
+    /// choke point where pre-recovery traffic is counted and dropped:
+    /// after a reconfiguration bumps [`Transport::set_generation`], a
+    /// frame whose epoch belongs to an older generation can never be
+    /// delivered into a post-recovery operation. Epoch-0 (legacy
+    /// untagged) frames and frames from a *newer* generation — a peer
+    /// that finished reconfiguring before us — pass through untouched.
+    /// Dropped payloads are completed (pool return / rendezvous ack),
+    /// not leaked, so a straggling old-generation sender is unstranded.
+    fn stash_arrival(&mut self, from: usize, tag: Tag, payload: Payload<E>) {
+        if tag.op != 0 && generation_of(tag.op) < self.generation {
+            self.stale_frames += 1;
+            self.complete_tagged(from, tag, payload);
+            return;
+        }
+        self.stash.insert((from, tag), payload);
+    }
+
     /// Drop the ack for `tag` from the pending set if present.
     fn remove_pending(&mut self, tag: Tag) {
         if let Some(i) = self.pending_acks.iter().position(|&t| t == tag) {
@@ -703,7 +778,7 @@ impl<E: Elem> Endpoint<E> {
     /// steady-state growth.
     pub fn forget_op(&mut self, op: u64) -> usize {
         while let Ok(msg) = self.rx.try_recv() {
-            self.stash.insert((msg.from, msg.tag), msg.payload);
+            self.stash_arrival(msg.from, msg.tag, msg.payload);
         }
         let keys: Vec<(usize, Tag)> =
             self.stash.keys().filter(|(_, t)| t.op == op).copied().collect();
@@ -858,7 +933,7 @@ impl<E: Elem> Endpoint<E> {
     /// several in-flight operations without parking on any single one.
     pub fn try_recv_payload(&mut self, from: usize, tag: Tag) -> Option<Payload<E>> {
         while let Ok(msg) = self.rx.try_recv() {
-            self.stash.insert((msg.from, msg.tag), msg.payload);
+            self.stash_arrival(msg.from, msg.tag, msg.payload);
         }
         let payload = self.stash.remove(&(from, tag))?;
         self.counters.msgs_recv += 1;
@@ -878,7 +953,7 @@ impl<E: Elem> Endpoint<E> {
                     if msg.from == from && msg.tag == tag {
                         return Ok(msg.payload);
                     }
-                    self.stash.insert((msg.from, msg.tag), msg.payload);
+                    self.stash_arrival(msg.from, msg.tag, msg.payload);
                 }
                 Err(RecvTimeoutError::Timeout) => {
                     return Err(TransportError::Timeout { rank: self.rank, from, round: tag.round })
@@ -1101,6 +1176,25 @@ pub trait Transport<E: Elem> {
     /// `CCOLL_RETRY_BASE_MS`; the engine applies its `engine.retry.*`
     /// config through this.
     fn set_retry(&mut self, _attempts: usize, _base_ms: u64) {}
+
+    /// Recovery generation this endpoint currently accepts frames for
+    /// (see [`compose_op`]). Backends without generation awareness are
+    /// permanently at 0 — exactly the pre-recovery wire behavior.
+    fn generation(&self) -> u64 {
+        0
+    }
+
+    /// Move this endpoint to generation `gen`: from now on an arrival
+    /// tagged with any *older* generation is counted and dropped at the
+    /// stash boundary instead of ever being delivered. Arrivals from a
+    /// *newer* generation (a peer that reconfigured first) are kept.
+    /// No-op on backends with no generation state.
+    fn set_generation(&mut self, _gen: u64) {}
+
+    /// Frames dropped so far for carrying a stale generation.
+    fn stale_frames_dropped(&self) -> u64 {
+        0
+    }
 }
 
 /// The default in-process backend: [`Endpoint`] under its trait name. All
@@ -1193,6 +1287,203 @@ impl<E: Elem> Transport<E> for Endpoint<E> {
 
     fn set_rendezvous_min_elems(&mut self, min: usize) {
         self.rendezvous_min_elems = min;
+    }
+
+    fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    fn set_generation(&mut self, gen: u64) {
+        self.generation = gen;
+    }
+
+    fn stale_frames_dropped(&self) -> u64 {
+        self.stale_frames
+    }
+}
+
+/// A dense-rank remapping decorator: presents a contiguous `0..p'` rank
+/// space over a backend whose peers live in a (possibly sparser)
+/// *physical* rank space. Constructed as the identity over the full
+/// network, it is transparent; after a recovery reconfiguration the
+/// engine shrinks its map to the survivor set, and every schedule-facing
+/// surface — `rank()`, `p()`, peer indices on sends/receives,
+/// `peer_status()` — speaks dense survivor ranks while the wrapped
+/// backend keeps addressing its original sockets/channels. This is what
+/// lets the rebuilt p′ circulant plans run unchanged over the survivors:
+/// the plans are pure functions of the dense world size.
+pub struct Remap<E: Elem, T> {
+    inner: T,
+    /// `map[dense] = physical` — strictly increasing after a recovery
+    /// (survivors keep their relative order), identity at construction.
+    map: Vec<usize>,
+    /// Cached dense rank (position of `inner.rank()` in `map`).
+    rank: usize,
+    _elem: std::marker::PhantomData<E>,
+}
+
+impl<E: Elem, T: Transport<E>> Remap<E, T> {
+    /// Identity wrapper over the backend's full rank space.
+    pub fn new(inner: T) -> Self {
+        let map: Vec<usize> = (0..inner.p()).collect();
+        let rank = inner.rank();
+        Self { inner, map, rank, _elem: std::marker::PhantomData }
+    }
+
+    /// Install a new dense→physical map (the survivor set, in physical
+    /// order). Panics if the map excludes this endpoint's own physical
+    /// rank — a survivor cannot remap itself out of the world.
+    pub fn set_map(&mut self, map: Vec<usize>) {
+        let physical = self.inner.rank();
+        self.rank = map
+            .iter()
+            .position(|&ph| ph == physical)
+            .unwrap_or_else(|| panic!("remap {map:?} excludes own physical rank {physical}"));
+        self.map = map;
+    }
+
+    /// The dense→physical map currently in force.
+    pub fn map(&self) -> &[usize] {
+        &self.map
+    }
+
+    /// The wrapped backend's own (physical) rank, independent of any
+    /// remapping.
+    pub fn physical_rank(&self) -> usize {
+        self.inner.rank()
+    }
+
+    pub fn inner(&self) -> &T {
+        &self.inner
+    }
+
+    pub fn inner_mut(&mut self) -> &mut T {
+        &mut self.inner
+    }
+
+    pub fn into_inner(self) -> T {
+        self.inner
+    }
+
+    fn phys(&self, dense: usize) -> usize {
+        self.map[dense]
+    }
+}
+
+impl<E: Elem, T: Transport<E>> Transport<E> for Remap<E, T> {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn p(&self) -> usize {
+        self.map.len()
+    }
+
+    fn caps(&self) -> TransportCaps {
+        self.inner.caps()
+    }
+
+    fn sendrecv_slices_tagged(
+        &mut self,
+        send: Option<SendSlices<'_, E>>,
+        recv_from: Option<usize>,
+        tag: Tag,
+    ) -> Result<Option<Payload<E>>, TransportError> {
+        let send = send.map(|s| SendSlices { to: self.phys(s.to), ..s });
+        let recv_from = recv_from.map(|f| self.phys(f));
+        self.inner.sendrecv_slices_tagged(send, recv_from, tag)
+    }
+
+    fn recv_payload(&mut self, from: usize, tag: Tag) -> Result<Payload<E>, TransportError> {
+        self.inner.recv_payload(self.phys(from), tag)
+    }
+
+    fn try_recv_payload(&mut self, from: usize, tag: Tag) -> Option<Payload<E>> {
+        self.inner.try_recv_payload(self.phys(from), tag)
+    }
+
+    fn complete_tagged(&mut self, from: usize, tag: Tag, payload: Payload<E>) {
+        let from = self.phys(from);
+        self.inner.complete_tagged(from, tag, payload)
+    }
+
+    fn acquire(&mut self, to: usize, need: usize) -> Vec<E> {
+        let to = self.phys(to);
+        self.inner.acquire(to, need)
+    }
+
+    fn release(&mut self, from: usize, payload: Vec<E>) {
+        let from = self.phys(from);
+        self.inner.release(from, payload)
+    }
+
+    fn finish_round(&mut self) -> Result<(), TransportError> {
+        self.inner.finish_round()
+    }
+
+    fn finish_op(&mut self, op: u64) -> Result<(), TransportError> {
+        self.inner.finish_op(op)
+    }
+
+    fn try_finish(&mut self, tag: Tag) -> bool {
+        self.inner.try_finish(tag)
+    }
+
+    fn op_has_pending_publish(&mut self, op: u64) -> bool {
+        self.inner.op_has_pending_publish(op)
+    }
+
+    fn forget_op(&mut self, op: u64) -> usize {
+        self.inner.forget_op(op)
+    }
+
+    fn counters(&self) -> &Counters {
+        self.inner.counters()
+    }
+
+    fn counters_mut(&mut self) -> &mut Counters {
+        self.inner.counters_mut()
+    }
+
+    fn peer_status(&self) -> Vec<bool> {
+        let inner = self.inner.peer_status();
+        self.map.iter().map(|&ph| inner[ph]).collect()
+    }
+
+    fn peer_down(&self, peer: usize) -> Option<String> {
+        self.inner.peer_down(self.phys(peer))
+    }
+
+    fn timeout(&self) -> Duration {
+        self.inner.timeout()
+    }
+
+    fn set_timeout(&mut self, timeout: Duration) {
+        self.inner.set_timeout(timeout)
+    }
+
+    fn set_rendezvous(&mut self, on: bool) {
+        self.inner.set_rendezvous(on)
+    }
+
+    fn set_rendezvous_min_elems(&mut self, min: usize) {
+        self.inner.set_rendezvous_min_elems(min)
+    }
+
+    fn set_retry(&mut self, attempts: usize, base_ms: u64) {
+        self.inner.set_retry(attempts, base_ms)
+    }
+
+    fn generation(&self) -> u64 {
+        self.inner.generation()
+    }
+
+    fn set_generation(&mut self, gen: u64) {
+        self.inner.set_generation(gen)
+    }
+
+    fn stale_frames_dropped(&self) -> u64 {
+        self.inner.stale_frames_dropped()
     }
 }
 

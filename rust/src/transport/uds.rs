@@ -34,12 +34,44 @@
 //!
 //! # Bootstrap (deadlock-free mesh)
 //!
-//! Every rank **binds** its listener socket `<dir>/rank-<r>.sock` first,
-//! then **connects** to all lower ranks (retrying until their listeners
-//! appear), then **accepts** from all higher ranks; each connector sends
-//! its rank as a 4-byte handshake. Because binds strictly precede
-//! connects and connects retry, any interleaving of process start-up
-//! converges. [`uds_network_typed`] wraps this for same-process tests.
+//! Every rank **binds** its listener socket first, then **connects** to
+//! all lower ranks (retrying until their listeners appear), then
+//! **accepts** from all higher ranks; each connector identifies itself
+//! with an 8-byte `[rank: u32 LE][generation: u32 LE]` handshake, and a
+//! generation mismatch is refused loudly — a revived process can never
+//! splice itself into a mesh from a different recovery generation.
+//! Because binds strictly precede connects and connects retry, any
+//! interleaving of process start-up converges. Socket names are
+//! **generation-namespaced**: generation 0 (a cold start) uses
+//! `<dir>/rank-<r>.sock` — byte-identical to the pre-recovery layout —
+//! while generation g > 0 uses `<dir>/gen-<g>/rank-<r>.sock`, so a
+//! post-recovery re-bootstrap can never collide with stale gen-0 socket
+//! files (see [`socket_path_gen`]). [`uds_network_typed`] wraps the
+//! gen-0 bootstrap for same-process tests.
+//!
+//! # Liveness and recovery hooks
+//!
+//! * **Stale-generation drop.** After [`Transport::set_generation`]
+//!   moves the endpoint to a new recovery generation, any frame whose
+//!   [`Tag::op`] carries an older generation is counted
+//!   ([`Transport::stale_frames_dropped`]) and dropped at the stash
+//!   boundary — pre-failure traffic can never be delivered into a
+//!   post-recovery operation.
+//! * **Heartbeats** (`CCOLL_HEARTBEAT_MS`, default 0 = off). When on,
+//!   the owner thread piggy-backs an empty probe frame (`op ==
+//!   u64::MAX`) to every live peer at most once per interval on its
+//!   normal send/receive path, and tracks the last probe *seen* from
+//!   each peer; a peer silent for `4×` the interval reads as down in
+//!   [`Transport::peer_status`] even though its socket never EOF'd —
+//!   distinguishing a *hung* peer from a merely idle one.
+//! * **Reconnect-with-backoff** (`CCOLL_RECONNECT_ATTEMPTS`, default 0
+//!   = off). When on, a send that finds the peer's connection dead
+//!   attempts a bounded reconnect to the peer's generation-namespaced
+//!   listener path before surfacing [`TransportError::PeerDown`] — the
+//!   transient-disconnect path for a peer that re-bound its listener
+//!   within the deadline (no generation bump). A peer that is truly
+//!   gone has no listener, so every attempt fails fast and the send
+//!   degrades to today's PeerDown behavior.
 //!
 //! Reader threads are I/O plumbing, not rank workers: they do **not**
 //! count toward [`super::rank_threads_spawned`], so the engine's
@@ -94,9 +126,29 @@ fn as_bytes<E: Elem>(s: &[E]) -> &[u8] {
     unsafe { std::slice::from_raw_parts(s.as_ptr() as *const u8, std::mem::size_of_val(s)) }
 }
 
-/// Socket path of `rank`'s listener inside the rendezvous directory.
+/// Operation epoch reserved for heartbeat probe frames. Never allocated
+/// by the engine (generations are 16 bits, sequences 48 — the composed
+/// epoch cannot be all-ones), so a probe can never collide with a
+/// collective's traffic.
+pub const HEARTBEAT_OP: u64 = u64::MAX;
+
+/// Socket path of `rank`'s listener inside the rendezvous directory
+/// (generation 0 — the cold-start layout).
 pub fn socket_path(dir: &Path, rank: usize) -> PathBuf {
-    dir.join(format!("rank-{rank}.sock"))
+    socket_path_gen(dir, rank, 0)
+}
+
+/// Generation-namespaced socket path: generation 0 keeps the flat
+/// `rank-<r>.sock` layout (cold starts are byte-identical to the
+/// pre-recovery scheme); generation g > 0 lives under a `gen-<g>/`
+/// subdirectory so a recovery re-bootstrap can never collide with stale
+/// gen-0 socket files left by the failed mesh.
+pub fn socket_path_gen(dir: &Path, rank: usize, gen: u64) -> PathBuf {
+    if gen == 0 {
+        dir.join(format!("rank-{rank}.sock"))
+    } else {
+        dir.join(format!("gen-{gen}")).join(format!("rank-{rank}.sock"))
+    }
 }
 
 fn io_disconnected(rank: usize, to: usize) -> TransportError {
@@ -212,6 +264,29 @@ pub struct UdsTransport<E: Elem> {
     /// its `engine.retry.*` config through [`Transport::set_retry`].
     retry_attempts: usize,
     retry_base_ms: u64,
+    /// Rendezvous directory this mesh bootstrapped in — the reconnect
+    /// path re-derives peers' generation-namespaced listener paths from
+    /// it.
+    dir: PathBuf,
+    /// Recovery generation this endpoint accepts frames for; arrivals
+    /// tagged with an older generation are counted and dropped.
+    generation: u64,
+    /// Frames dropped for carrying a stale generation.
+    stale_frames: u64,
+    /// Kept alive so reconnect-spawned readers can feed the same inbox.
+    inbox_tx: Sender<Inbound<E>>,
+    /// Heartbeat interval (`CCOLL_HEARTBEAT_MS`; 0 = probes off).
+    heartbeat_ms: u64,
+    /// When this endpoint last broadcast a probe.
+    last_hb_sent: Instant,
+    /// Last probe *seen* from each peer (`None` until its first one) —
+    /// the silent-hang detector consulted by `peer_status`.
+    last_seen: Vec<Option<Instant>>,
+    /// Bounded reconnect policy for dead connections
+    /// (`CCOLL_RECONNECT_ATTEMPTS` / `CCOLL_RECONNECT_BASE_MS`; 0
+    /// attempts = today's fail-fast PeerDown behavior).
+    reconnect_attempts: usize,
+    reconnect_base_ms: u64,
 }
 
 impl<E: Elem> UdsTransport<E> {
@@ -230,21 +305,41 @@ impl<E: Elem> UdsTransport<E> {
         dir: &Path,
         bootstrap: Duration,
     ) -> std::io::Result<Self> {
+        Self::connect_gen(rank, p, dir, 0, bootstrap)
+    }
+
+    /// Join (or re-form) the mesh of recovery generation `gen` in `dir`:
+    /// socket names are generation-namespaced and the handshake carries
+    /// the generation, so a survivor set re-bootstrapping after a rank
+    /// death can never cross-wire with the failed generation's sockets
+    /// or with a stale process still speaking an older generation.
+    pub fn connect_gen(
+        rank: usize,
+        p: usize,
+        dir: &Path,
+        gen: u64,
+        bootstrap: Duration,
+    ) -> std::io::Result<Self> {
         assert!(p >= 1 && rank < p, "rank {rank} out of range for world {p}");
+        assert!(gen < (1 << 16), "generation {gen} overflows the 16-bit tag field");
         let deadline = Instant::now() + bootstrap;
         // 1. Bind our own listener FIRST — lower ranks' connects retry
         //    until it exists, so bind-before-connect makes the mesh
         //    convergent under any process start order.
-        let own = socket_path(dir, rank);
+        let own = socket_path_gen(dir, rank, gen);
+        if let Some(parent) = own.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
         let _ = std::fs::remove_file(&own); // stale socket from a dead run
         let listener = UnixListener::bind(&own)?;
         listener.set_nonblocking(true)?;
 
         let mut streams: Vec<Option<UnixStream>> = (0..p).map(|_| None).collect();
         // 2. Connect to every lower rank, retrying until its listener
-        //    appears; identify ourselves with a 4-byte rank handshake.
+        //    appears; identify ourselves with an 8-byte rank+generation
+        //    handshake.
         for peer in 0..rank {
-            let path = socket_path(dir, peer);
+            let path = socket_path_gen(dir, peer, gen);
             let stream = loop {
                 match UnixStream::connect(&path) {
                     Ok(s) => break s,
@@ -265,19 +360,33 @@ impl<E: Elem> UdsTransport<E> {
                 }
             };
             let mut s = stream;
-            s.write_all(&(rank as u32).to_le_bytes())?;
+            let mut hs = [0u8; 8];
+            hs[0..4].copy_from_slice(&(rank as u32).to_le_bytes());
+            hs[4..8].copy_from_slice(&(gen as u32).to_le_bytes());
+            s.write_all(&hs)?;
             streams[peer] = Some(s);
         }
         // 3. Accept one connection from every higher rank; the handshake
-        //    says which.
+        //    says which — and which generation it believes it is joining.
         let mut accepted = 0usize;
         while accepted < p - 1 - rank {
             match listener.accept() {
                 Ok((mut s, _)) => {
                     s.set_nonblocking(false)?;
-                    let mut hs = [0u8; 4];
+                    let mut hs = [0u8; 8];
                     s.read_exact(&mut hs)?;
-                    let peer = u32::from_le_bytes(hs) as usize;
+                    let peer = u32::from_le_bytes(hs[0..4].try_into().unwrap()) as usize;
+                    let peer_gen = u32::from_le_bytes(hs[4..8].try_into().unwrap()) as u64;
+                    if peer_gen != gen {
+                        return Err(std::io::Error::new(
+                            std::io::ErrorKind::InvalidData,
+                            format!(
+                                "rank {rank}: handshake from rank {peer} carries generation \
+                                 {peer_gen}, this mesh is generation {gen} — a stale process \
+                                 is trying to join a reconfigured mesh"
+                            ),
+                        ));
+                    }
                     if peer <= rank || peer >= p || streams[peer].is_some() {
                         return Err(std::io::Error::new(
                             std::io::ErrorKind::InvalidData,
@@ -348,6 +457,15 @@ impl<E: Elem> UdsTransport<E> {
             peer_down: (0..p).map(|_| None).collect(),
             retry_attempts: knobs.retry_attempts,
             retry_base_ms: knobs.retry_base_ms,
+            dir: dir.to_path_buf(),
+            generation: gen,
+            stale_frames: 0,
+            inbox_tx,
+            heartbeat_ms: knobs.heartbeat_ms,
+            last_hb_sent: Instant::now(),
+            last_seen: (0..p).map(|_| None).collect(),
+            reconnect_attempts: knobs.reconnect_attempts,
+            reconnect_base_ms: knobs.reconnect_base_ms,
         })
     }
 
@@ -357,7 +475,17 @@ impl<E: Elem> UdsTransport<E> {
     /// listener means another process is already serving that rank in
     /// this directory — refuse loudly rather than corrupt its mesh.
     pub fn preflight_socket(dir: &Path, rank: usize) -> std::io::Result<()> {
-        let path = socket_path(dir, rank);
+        Self::preflight_socket_gen(dir, rank, 0)
+    }
+
+    /// Generation-aware preflight: checks the socket path of the
+    /// generation actually being joined, so a revived rank
+    /// re-bootstrapping into generation g is never refused because of a
+    /// *different* generation's leftover listener (the old preflight
+    /// assumed a cold start and only ever looked at the gen-0 path —
+    /// which a recovered mesh legitimately leaves behind).
+    pub fn preflight_socket_gen(dir: &Path, rank: usize, gen: u64) -> std::io::Result<()> {
+        let path = socket_path_gen(dir, rank, gen);
         if !path.exists() {
             return Ok(());
         }
@@ -366,7 +494,8 @@ impl<E: Elem> UdsTransport<E> {
                 std::io::ErrorKind::AddrInUse,
                 format!(
                     "rank {rank}: {} already has a live listener — another process is \
-                     serving this rank in this directory (pick a fresh --dir, or stop it)",
+                     serving this rank at generation {gen} in this directory (pick a \
+                     fresh --dir, or stop it)",
                     path.display()
                 ),
             )),
@@ -400,7 +529,12 @@ impl<E: Elem> UdsTransport<E> {
         debug_assert!(to < self.p && to != self.rank, "bad send target {to}");
         let rank = self.rank;
         if let Some(detail) = self.peer_down[to].clone() {
-            return Err(TransportError::PeerDown { rank, peer: to, detail });
+            // Transient-disconnect path: a bounded reconnect may clear
+            // the down mark before we refuse (no-op unless the knob is
+            // set and the peer re-bound its listener).
+            if !self.try_reconnect(to) {
+                return Err(TransportError::PeerDown { rank, peer: to, detail });
+            }
         }
         let len = head.len() + tail.len();
         let mut hdr = [0u8; HEADER_BYTES];
@@ -409,10 +543,25 @@ impl<E: Elem> UdsTransport<E> {
         hdr[12..20].copy_from_slice(&tag.round.to_le_bytes());
         hdr[20..28].copy_from_slice(&(len as u64).to_le_bytes());
         let (attempts, base_ms) = (self.retry_attempts, self.retry_base_ms);
-        let outcome = match self.writers[to].as_mut() {
+        let mut outcome = match self.writers[to].as_mut() {
             None => Err("no connection to this peer (bootstrap never linked it)".to_string()),
             Some(w) => write_frame(w, &hdr, as_bytes(head), as_bytes(tail), attempts, base_ms),
         };
+        if outcome.is_err() {
+            // The write found a dead connection mid-frame. A reconnect
+            // gets a *fresh* stream, so resending the whole frame cannot
+            // duplicate bytes the peer already consumed on the old one
+            // (the old connection is gone with whatever it had).
+            self.peer_down[to] = outcome.clone().err();
+            if self.try_reconnect(to) {
+                outcome = match self.writers[to].as_mut() {
+                    None => outcome,
+                    Some(w) => {
+                        write_frame(w, &hdr, as_bytes(head), as_bytes(tail), attempts, base_ms)
+                    }
+                };
+            }
+        }
         if let Err(detail) = outcome {
             self.peer_down[to] = Some(detail.clone());
             return Err(TransportError::PeerDown { rank, peer: to, detail });
@@ -423,12 +572,146 @@ impl<E: Elem> UdsTransport<E> {
         Ok(())
     }
 
+    /// Override the reconnect policy (tests; production reads
+    /// `CCOLL_RECONNECT_*`). 0 attempts = fail-fast, today's behavior.
+    pub fn set_reconnect(&mut self, attempts: usize, base_ms: u64) {
+        self.reconnect_attempts = attempts;
+        self.reconnect_base_ms = base_ms;
+    }
+
+    /// Override the heartbeat interval (tests; production reads
+    /// `CCOLL_HEARTBEAT_MS`). 0 = probes off.
+    pub fn set_heartbeat_ms(&mut self, ms: u64) {
+        self.heartbeat_ms = ms;
+    }
+
+    /// Bounded reconnect-with-backoff to `peer`'s generation-namespaced
+    /// listener path: the *transiently disconnected* arm of the failure
+    /// model. Succeeds only if the peer re-bound its listener (a process
+    /// that is actually dead has none, so every attempt fails fast and
+    /// the caller degrades to the PeerDown path). On success the dead
+    /// writer is replaced, a fresh reader thread feeds the same inbox,
+    /// and the peer's health bit is cleared — with **no** generation
+    /// bump: the mesh was never reconfigured. Off by default
+    /// (`CCOLL_RECONNECT_ATTEMPTS=0` preserves fail-fast semantics).
+    fn try_reconnect(&mut self, peer: usize) -> bool {
+        if self.reconnect_attempts == 0 || peer == self.rank {
+            return false;
+        }
+        let path = socket_path_gen(&self.dir, peer, self.generation);
+        for attempt in 1..=self.reconnect_attempts {
+            match UnixStream::connect(&path) {
+                Ok(mut s) => {
+                    let mut hs = [0u8; 8];
+                    hs[0..4].copy_from_slice(&(self.rank as u32).to_le_bytes());
+                    hs[4..8].copy_from_slice(&(self.generation as u32).to_le_bytes());
+                    if s.write_all(&hs).is_err() {
+                        continue;
+                    }
+                    let reader = match s.try_clone() {
+                        Ok(r) => r,
+                        Err(_) => continue,
+                    };
+                    let (ftx, frx) = channel::<Vec<E>>();
+                    let tx = self.inbox_tx.clone();
+                    let (rank, p) = (self.rank, peer);
+                    self.readers.push(
+                        std::thread::Builder::new()
+                            .name(format!("uds-reader-{rank}-{p}-r"))
+                            .spawn(move || reader_loop::<E>(rank, p, reader, tx, frx))
+                            .expect("spawn uds reconnect reader thread"),
+                    );
+                    self.writers[peer] = Some(s);
+                    self.free_txs[peer] = Some(ftx);
+                    self.peer_down[peer] = None;
+                    self.last_seen[peer] = Some(Instant::now());
+                    return true;
+                }
+                Err(_) => {
+                    if attempt < self.reconnect_attempts {
+                        std::thread::sleep(Duration::from_millis(
+                            self.reconnect_base_ms << (attempt - 1).min(6),
+                        ));
+                    }
+                }
+            }
+        }
+        false
+    }
+
+    /// Piggy-backed liveness probe: at most once per heartbeat interval,
+    /// broadcast an empty `HEARTBEAT_OP` frame to every currently-live
+    /// peer. Runs on the owner thread's normal send/receive path — no
+    /// extra sender thread, so probe bytes can never interleave inside a
+    /// data frame. No-op while the knob is off.
+    fn maybe_heartbeat(&mut self) {
+        if self.heartbeat_ms == 0 {
+            return;
+        }
+        if self.last_hb_sent.elapsed() < Duration::from_millis(self.heartbeat_ms) {
+            return;
+        }
+        self.last_hb_sent = Instant::now();
+        let mut hdr = [0u8; HEADER_BYTES];
+        hdr[0..4].copy_from_slice(&(self.rank as u32).to_le_bytes());
+        hdr[4..12].copy_from_slice(&HEARTBEAT_OP.to_le_bytes());
+        hdr[12..20].copy_from_slice(&0u64.to_le_bytes());
+        hdr[20..28].copy_from_slice(&0u64.to_le_bytes());
+        for peer in 0..self.p {
+            if peer == self.rank || self.peer_down[peer].is_some() {
+                continue;
+            }
+            if let Some(w) = self.writers[peer].as_mut() {
+                // Best-effort: a failed probe write is the link dying,
+                // which the next data send or the reader will surface.
+                let _ = write_frame(w, &hdr, &[], &[], 0, 0);
+            }
+        }
+    }
+
+    /// Whether the silent-hang detector considers `peer` down: probes
+    /// are on, we have heard at least one probe from it, and then
+    /// nothing for 4× the interval. Requiring one observed probe first
+    /// keeps a peer with probes *off* from reading as dead.
+    fn heartbeat_lapsed(&self, peer: usize) -> bool {
+        if self.heartbeat_ms == 0 || peer == self.rank {
+            return false;
+        }
+        match self.last_seen[peer] {
+            Some(seen) => seen.elapsed() > Duration::from_millis(self.heartbeat_ms * 4),
+            None => false,
+        }
+    }
+
+    /// Stash an arrival unless it carries a **stale generation** — the
+    /// UDS twin of the thread backend's filter: after
+    /// [`Transport::set_generation`], a frame tagged with an older
+    /// generation is counted and dropped (its buffer recycled to the
+    /// reader's free-list), never delivered. Epoch-0 frames and frames
+    /// from a newer generation pass through.
+    fn stash_arrival(&mut self, key: (usize, Tag), payload: Payload<E>) {
+        if key.1.op != 0 && key.1.op != HEARTBEAT_OP && super::generation_of(key.1.op) < self.generation
+        {
+            self.stale_frames += 1;
+            Transport::complete_tagged(self, key.0, key.1, payload);
+            return;
+        }
+        self.stash.insert(key, payload);
+    }
+
     /// Account one consumed inbound event. A decoded frame becomes a
     /// stash-keyed payload; a [`Inbound::PeerGone`] notice flips the
     /// peer's health bit and yields nothing.
     fn accept_inbound(&mut self, msg: Inbound<E>) -> Option<((usize, Tag), Payload<E>)> {
         match msg {
             Inbound::Msg { from, tag, buf, reused } => {
+                if tag.op == HEARTBEAT_OP {
+                    // Liveness probe: stamp the sender alive, never
+                    // deliver. (Probe frames are empty; the buffer is
+                    // dropped, not worth recycling.)
+                    self.last_seen[from] = Some(Instant::now());
+                    return None;
+                }
                 if reused {
                     self.counters.pool_hits += 1;
                 } else {
@@ -481,7 +764,7 @@ impl<E: Elem> UdsTransport<E> {
                     if key == (from, tag) {
                         return Ok(payload);
                     }
-                    self.stash.insert(key, payload);
+                    self.stash_arrival(key, payload);
                 }
                 Err(RecvTimeoutError::Timeout) => {
                     return Err(TransportError::Timeout {
@@ -503,7 +786,7 @@ impl<E: Elem> UdsTransport<E> {
     fn drain_inbox(&mut self) {
         while let Ok(msg) = self.rx.try_recv() {
             if let Some((key, payload)) = self.accept_inbound(msg) {
-                self.stash.insert(key, payload);
+                self.stash_arrival(key, payload);
             }
         }
     }
@@ -561,6 +844,7 @@ impl<E: Elem> Transport<E> for UdsTransport<E> {
         tag: Tag,
     ) -> Result<Option<Payload<E>>, TransportError> {
         self.counters.sendrecv_rounds += 1;
+        self.maybe_heartbeat();
         if let Some(s) = send {
             // Rendezvous is unsupported on this backend: whatever the
             // caller's safety verdict, the payload travels the framed
@@ -582,6 +866,7 @@ impl<E: Elem> Transport<E> for UdsTransport<E> {
     }
 
     fn try_recv_payload(&mut self, from: usize, tag: Tag) -> Option<Payload<E>> {
+        self.maybe_heartbeat();
         self.drain_inbox();
         let payload = self.stash.remove(&(from, tag))?;
         self.counters.msgs_recv += 1;
@@ -657,11 +942,23 @@ impl<E: Elem> Transport<E> for UdsTransport<E> {
     }
 
     fn peer_status(&self) -> Vec<bool> {
-        self.peer_down.iter().map(|d| d.is_none()).collect()
+        (0..self.p)
+            .map(|r| self.peer_down[r].is_none() && !self.heartbeat_lapsed(r))
+            .collect()
     }
 
     fn peer_down(&self, peer: usize) -> Option<String> {
-        self.peer_down[peer].clone()
+        if let Some(d) = self.peer_down[peer].clone() {
+            return Some(d);
+        }
+        if self.heartbeat_lapsed(peer) {
+            return Some(format!(
+                "no heartbeat from rank {peer} for over {} ms (interval {} ms) — peer hung",
+                self.heartbeat_ms * 4,
+                self.heartbeat_ms
+            ));
+        }
+        None
     }
 
     fn timeout(&self) -> Duration {
@@ -681,6 +978,18 @@ impl<E: Elem> Transport<E> for UdsTransport<E> {
     fn set_retry(&mut self, attempts: usize, base_ms: u64) {
         self.retry_attempts = attempts;
         self.retry_base_ms = base_ms;
+    }
+
+    fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    fn set_generation(&mut self, gen: u64) {
+        self.generation = gen;
+    }
+
+    fn stale_frames_dropped(&self) -> u64 {
+        self.stale_frames
     }
 }
 
@@ -952,6 +1261,84 @@ mod tests {
             }
         });
         assert!(out[0], "sends to the dead peer never surfaced PeerDown");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn socket_paths_are_generation_namespaced() {
+        let dir = PathBuf::from("/tmp/x");
+        assert_eq!(socket_path_gen(&dir, 3, 0), dir.join("rank-3.sock"));
+        assert_eq!(socket_path(&dir, 3), socket_path_gen(&dir, 3, 0), "gen 0 = legacy layout");
+        assert_eq!(socket_path_gen(&dir, 3, 2), dir.join("gen-2").join("rank-3.sock"));
+    }
+
+    #[test]
+    fn gen1_mesh_bootstraps_in_its_own_namespace() {
+        // A generation-1 re-bootstrap must converge even with stale gen-0
+        // socket files sitting in the directory (the failed mesh's
+        // leftovers) — the whole point of the namespace.
+        let dir = scratch_dir("gen1");
+        std::fs::write(socket_path(&dir, 0), b"stale").unwrap();
+        std::fs::write(socket_path(&dir, 1), b"stale").unwrap();
+        let p = 2usize;
+        let handles: Vec<_> = (0..p)
+            .map(|rank| {
+                let dir = dir.clone();
+                std::thread::spawn(move || {
+                    UdsTransport::<i64>::connect_gen(rank, p, &dir, 1, Duration::from_secs(10))
+                })
+            })
+            .collect();
+        let mut mesh: Vec<UdsTransport<i64>> =
+            handles.into_iter().map(|h| h.join().unwrap().expect("gen-1 bootstrap")).collect();
+        assert!(mesh.iter().all(|t| t.generation() == 1));
+        // And the gen-1 mesh carries traffic.
+        let data = [11i64; 2];
+        let tag = Tag::new(super::super::compose_op(1, 1), 0);
+        let (a, b) = {
+            let (l, r) = mesh.split_at_mut(1);
+            (&mut l[0], &mut r[0])
+        };
+        a.sendrecv_slices_tagged(
+            Some(SendSlices { to: 1, head: &data, tail: &[], rendezvous: false }),
+            None,
+            tag,
+        )
+        .unwrap();
+        assert_eq!(Transport::recv_payload(b, 0, tag).unwrap().len(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stale_generation_frames_are_dropped_and_counted() {
+        let dir = scratch_dir("stalegen");
+        let out = run_mesh::<i64, _, _>(2, &dir, |rank, t| {
+            if rank == 1 {
+                // One frame from "generation 0" (plain epoch 5), one from
+                // generation 1.
+                for op in [5u64, super::super::compose_op(1, 5)] {
+                    let data = [3i64; 2];
+                    let send = SendSlices { to: 0, head: &data, tail: &[], rendezvous: false };
+                    t.sendrecv_slices_tagged(Some(send), None, Tag::new(op, 0)).unwrap();
+                }
+                (0, 0)
+            } else {
+                // Receiver has moved on to generation 1: the gen-0 frame
+                // must be counted and dropped, the gen-1 frame delivered.
+                t.set_generation(1);
+                let tag = Tag::new(super::super::compose_op(1, 5), 0);
+                let payload = Transport::recv_payload(t, 1, tag).unwrap();
+                assert_eq!(payload.len(), 2);
+                t.complete_tagged(1, tag, payload);
+                // The stale frame arrived before or with the gen-1 frame
+                // (same sender, ordered stream), so it has been drained.
+                let stale = t.stale_frames_dropped();
+                let delivered =
+                    t.try_recv_payload(1, Tag::new(5, 0)).map(|p| p.len()).unwrap_or(0);
+                (stale, delivered)
+            }
+        });
+        assert_eq!(out[0], (1, 0), "stale frame must be counted once and never delivered");
         let _ = std::fs::remove_dir_all(&dir);
     }
 
